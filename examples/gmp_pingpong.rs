@@ -1,0 +1,61 @@
+//! GMP over real UDP: ping-pong latency and the paper's §4 claim that a
+//! connectionless protocol beats TCP for small control messages.
+//!
+//! ```bash
+//! cargo run --release --example gmp_pingpong [iters]
+//! ```
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use oct::gmp::rpc::Handler;
+use oct::gmp::{GmpConfig, GmpEndpoint, RpcClient, RpcServer};
+use oct::transport::control_message_latency;
+use oct::util::stats;
+
+fn main() {
+    let iters: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2000);
+
+    // Real loopback RPC over GMP.
+    let ep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+    let addr = ep.local_addr();
+    let mut handlers: HashMap<String, Handler> = HashMap::new();
+    handlers.insert("ping".into(), Box::new(|b: &[u8]| b.to_vec()));
+    let _srv = RpcServer::start(ep, handlers);
+    let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+
+    // Warmup.
+    for _ in 0..100 {
+        client.call(addr, "ping", b"x", Duration::from_secs(1)).unwrap();
+    }
+    let mut lat_us = Vec::with_capacity(iters);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let t = Instant::now();
+        client.call(addr, "ping", b"ping-payload-32-bytes-of-control", Duration::from_secs(1)).unwrap();
+        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("GMP RPC over real UDP loopback ({iters} round trips):");
+    println!("  mean {:.1} µs   p50 {:.1} µs   p99 {:.1} µs   {:.0} rpc/s",
+        stats::mean(&lat_us), stats::percentile(&lat_us, 50.0),
+        stats::percentile(&lat_us, 99.0), iters as f64 / wall);
+
+    // The §4 model: GMP (connectionless) vs TCP (handshake first) for one
+    // small control message across the testbed's real RTTs.
+    println!("\nmodeled one-shot control-message delivery (paper §4):");
+    println!("{:>22} {:>10} {:>10} {:>8}", "path", "GMP", "TCP", "saving");
+    for (name, rtt) in [
+        ("same rack", 100e-6),
+        ("Chicago–Chicago", 1e-3),
+        ("Chicago–Baltimore", 22e-3),
+        ("Chicago–San Diego", 58e-3),
+        ("Baltimore–San Diego", 75e-3),
+    ] {
+        let gmp = control_message_latency(rtt, true);
+        let tcp = control_message_latency(rtt, false);
+        println!("{name:>22} {:>9.2}ms {:>9.2}ms {:>7.1}×", gmp * 1e3, tcp * 1e3, tcp / gmp);
+    }
+    println!("\nGMP sends data immediately on the shared UDP port; TCP pays the");
+    println!("1.5-RTT handshake per connection — a 4× latency gap at any RTT.");
+}

@@ -1,0 +1,93 @@
+//! Figure 3 demo: the monitoring and visualization system watching a
+//! MalStone run, with an injected straggler that the detector flags
+//! (paper §3 and §8's "one or two nodes with slightly inferior
+//! performance").
+//!
+//! ```bash
+//! cargo run --release --example monitor_demo
+//! ```
+
+use oct::hadoop::FrameworkParams;
+use oct::monitor::heatmap::Metric;
+use oct::monitor::{detect_stragglers, render_heatmap, Monitor};
+use oct::net::{Cluster, Topology};
+use oct::sector::master::{SectorMaster, Segment};
+use oct::sector::SphereEngine;
+use oct::sim::Engine;
+
+fn main() {
+    let cluster = Cluster::new(Topology::oct_2009());
+    let topo = cluster.topo.clone();
+    let nodes = topo.node_ids();
+
+    // Inject a degraded NIC on one node (a "slightly inferior" machine).
+    let victim = topo.racks[2].nodes[13];
+    oct::net::FlowNet::set_capacity(
+        &cluster.net,
+        &mut Engine::new(),
+        topo.node(victim).nic_tx,
+        30e6,
+    );
+    println!("injected straggler: {} (NIC degraded to 30 MB/s)", topo.node(victim).name);
+
+    let mut master = SectorMaster::new(topo.clone());
+    let seg_records: u64 = 671_088; // 64 MB segments
+    let segs: Vec<Segment> = nodes
+        .iter()
+        .flat_map(|&n| (0..3).map(move |_| Segment { node: n, bytes: seg_records * 100, records: seg_records }))
+        .collect();
+    master.register_file("demo", segs);
+
+    let mut eng = Engine::new();
+    let mon = Monitor::new(topo.clone(), 1.0);
+    Monitor::install(&mon, &mut eng, &cluster.net, cluster.pools.clone());
+    let done = std::rc::Rc::new(std::cell::RefCell::new(None));
+    let d = done.clone();
+    SphereEngine::simulate(
+        &cluster,
+        &master,
+        &mut eng,
+        "demo",
+        &nodes,
+        FrameworkParams::sphere(),
+        true,
+        move |_, r| *d.borrow_mut() = Some(r),
+    );
+
+    // Advance in 10-simulated-second steps, rendering Figure 3 frames.
+    let mut t = 0.0;
+    while done.borrow().is_none() && t < 600.0 {
+        t += 10.0;
+        eng.run_until(t);
+        println!("\n— simulated t = {t:.0}s — (testbed cpu {:.0}%)", mon.borrow().testbed_cpu() * 100.0);
+        print!("{}", render_heatmap(&mon.borrow(), Metric::Network, true));
+    }
+    mon.borrow_mut().disable();
+    eng.run();
+    if let Some(r) = done.borrow().as_ref() {
+        println!("\nrun complete: {:.1}s simulated, {} segments ({} stolen by the load balancer)",
+            r.makespan, r.segments, r.stolen_segments);
+    }
+
+    // Sector-style per-link aggregate throughput (what spots bad links).
+    println!("\nWAN aggregate throughput (last sample):");
+    for (label, bps) in mon.borrow().wan_throughput() {
+        println!("  {label:<20} {}", oct::util::units::fmt_rate(bps * 8.0));
+    }
+
+    // The detector's verdict.
+    let reports = detect_stragglers(&mon.borrow(), &topo, 20, 0.7);
+    println!("\nstraggler detector ({} flagged):", reports.len());
+    for r in &reports {
+        println!(
+            "  {}  {}: {:.1} MB/s vs cluster median {:.1} MB/s → blacklist candidate",
+            topo.node(r.node).name,
+            r.metric,
+            r.value / 1e6,
+            r.cluster_median / 1e6
+        );
+    }
+    // JSON export of the final frame (the web UI's feed).
+    let json = mon.borrow().frame_json(eng.now()).to_string();
+    println!("\nframe JSON: {} bytes (first 120: {})", json.len(), &json[..120.min(json.len())]);
+}

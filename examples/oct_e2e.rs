@@ -1,0 +1,92 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! 1. MalGen generates a real sharded dataset (default 2M records on 20
+//!    simulated nodes — the Table 1 layout at laptop scale).
+//! 2. All three engines *execute* MalStone for real — Hadoop-MR dataflow,
+//!    Sphere dataflow with the pure-Rust aggregator, and Sphere dataflow
+//!    with the **AOT JAX/Pallas kernel via PJRT** (L3→runtime→L2→L1) —
+//!    and their planes must agree bit-for-bit with the oracle.
+//! 3. The same workload is then *simulated at paper scale* (Tables 1–2),
+//!    printing simulated vs paper-measured rows.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example oct_e2e [records] [table_scale]
+//! ```
+//!
+//! Output is recorded in EXPERIMENTS.md.
+
+use oct::coordinator::experiment::{format_table1, format_table2, run_table1, run_table2};
+use oct::hadoop::mapreduce::execute_malstone;
+use oct::malstone::join::{bucketize, compromise_table};
+use oct::malstone::malgen::{MalGen, MalGenConfig, SECONDS_PER_WEEK};
+use oct::malstone::oracle::MalstoneResult;
+use oct::malstone::Record;
+use oct::runtime::{default_artifact_dir, MalstoneKernels};
+use oct::sector::sphere::{cpu_aggregator, execute_malstone_with};
+
+fn main() -> anyhow::Result<()> {
+    let total_records: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2_000_000);
+    let table_scale: u64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(50);
+    let nodes = 20usize;
+
+    println!("=== OCT end-to-end: {total_records} records across {nodes} MalGen shards ===");
+    let gen = MalGen::new(MalGenConfig { num_entities: 200_000, ..MalGenConfig::small(7) });
+    let t0 = std::time::Instant::now();
+    let shards: Vec<Vec<Record>> = (0..nodes as u64)
+        .map(|s| gen.generate_shard(s, nodes as u64, total_records / nodes))
+        .collect();
+    let gen_dt = t0.elapsed().as_secs_f64();
+    println!("[1] malgen: {:.2}s ({:.2}M rec/s)", gen_dt, total_records as f64 / gen_dt / 1e6);
+
+    // Oracle ground truth.
+    let kernels = MalstoneKernels::load(&default_artifact_dir())?;
+    let (s, w) = (kernels.meta.num_sites as u32, kernels.meta.num_weeks as u32);
+    let all: Vec<Record> = shards.iter().flatten().copied().collect();
+    let t1 = std::time::Instant::now();
+    let table = compromise_table(&all);
+    let joined = bucketize(&all, &table, s, w, SECONDS_PER_WEEK);
+    let mut oracle = MalstoneResult::zero(s as usize, w as usize);
+    oracle.accumulate(&joined);
+    println!("[2] oracle: {:.2}s (join + aggregate, single machine)", t1.elapsed().as_secs_f64());
+
+    // Hadoop-MR dataflow, real compute.
+    let t2 = std::time::Instant::now();
+    let mr = execute_malstone(&shards, 2 * nodes, s, w, SECONDS_PER_WEEK);
+    let mr_dt = t2.elapsed().as_secs_f64();
+    anyhow::ensure!(mr == oracle, "hadoop-MR execute diverged from oracle");
+    println!("[3] hadoop-MR execute: {:.2}s ✓ equals oracle", mr_dt);
+
+    // Sphere dataflow, pure-Rust aggregator.
+    let t3 = std::time::Instant::now();
+    let sphere_cpu = execute_malstone_with(&shards, 2 * nodes, s, w, SECONDS_PER_WEEK, cpu_aggregator);
+    let sphere_cpu_dt = t3.elapsed().as_secs_f64();
+    anyhow::ensure!(sphere_cpu == oracle, "sphere(cpu) diverged from oracle");
+    println!("[4] sphere execute (rust aggregator): {:.2}s ✓ equals oracle", sphere_cpu_dt);
+
+    // Sphere dataflow, AOT JAX/Pallas kernel via PJRT — the hot path.
+    let t4 = std::time::Instant::now();
+    let sphere_k =
+        execute_malstone_with(&shards, 2 * nodes, s, w, SECONDS_PER_WEEK, kernels.aggregator());
+    let sphere_k_dt = t4.elapsed().as_secs_f64();
+    anyhow::ensure!(sphere_k == oracle, "sphere(pjrt kernel) diverged from oracle");
+    println!(
+        "[5] sphere execute (PJRT pallas kernel): {:.2}s ✓ equals oracle ({} kernel calls, {:.2}M rec/s through PJRT)",
+        sphere_k_dt,
+        kernels.hist_calls.borrow(),
+        total_records as f64 / sphere_k_dt / 1e6
+    );
+
+    // MalStone-B ratios from the compiled graph, sanity peek.
+    let rb = kernels.ratio_b(&oracle)?;
+    let nonzero = rb.iter().filter(|&&x| x > 0.0).count();
+    println!("[6] MalStone-B series: {}×{} plane, {nonzero} nonzero cells", s, w);
+
+    // Paper-scale simulated evaluation.
+    println!("\n=== Paper-scale simulation (scale 1/{table_scale}) ===");
+    let t5 = std::time::Instant::now();
+    println!("{}", format_table1(&run_table1(table_scale)));
+    println!("{}", format_table2(&run_table2(table_scale)));
+    println!("(simulated in {:.1}s wall)", t5.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,15 @@
+use oct::sim::Engine;
+use std::time::Instant;
+fn main() {
+    // Raw event throughput: self-rescheduling chains.
+    let mut eng = Engine::new();
+    for i in 0..64 { chain(&mut eng, i as f64 * 1e-6, 2_000_000 / 64); }
+    let t0 = Instant::now();
+    eng.run();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("engine: {} events in {:.2}s = {:.2}M events/s", eng.executed(), dt, eng.executed() as f64 / dt / 1e6);
+}
+fn chain(eng: &mut Engine, t: f64, left: u32) {
+    if left == 0 { return; }
+    eng.schedule_at(t, move |e| chain(e, t + 1e-6, left - 1));
+}

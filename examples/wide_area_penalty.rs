@@ -1,0 +1,30 @@
+//! Table 2 driver: the wide-area penalty experiment, plus an RTT ablation
+//! showing *why* Hadoop pays and Sector doesn't (the §6 mechanism).
+//!
+//! ```bash
+//! cargo run --release --example wide_area_penalty [scale]
+//! ```
+
+use oct::coordinator::experiment::{format_table2, run_table2};
+use oct::transport::Protocol;
+
+fn main() {
+    let scale: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(50);
+    println!("=== Table 2: 28 local nodes vs 7×4 distributed (scale 1/{scale}) ===");
+    let rows = run_table2(scale);
+    print!("{}", format_table2(&rows));
+
+    println!("\n=== Mechanism: per-flow transport caps vs RTT (NIC bottleneck 117.5 MB/s) ===");
+    let tcp = Protocol::tcp();
+    let udt = Protocol::udt();
+    println!("{:>8} {:>14} {:>14} {:>8}", "RTT", "TCP cap", "UDT cap", "UDT/TCP");
+    for rtt_ms in [0.1, 1.0, 10.0, 22.0, 58.0, 75.0, 100.0] {
+        let rtt = rtt_ms / 1e3;
+        let t = tcp.rate_cap(rtt, 117.5e6);
+        let u = udt.rate_cap(rtt, 117.5e6);
+        println!("{:>6.1}ms {:>11.1} MB/s {:>11.1} MB/s {:>7.1}×", rtt_ms, t / 1e6, u / 1e6, u / t);
+    }
+    println!("\nHadoop moves its shuffle and replica pipeline over TCP; Sector moves");
+    println!("buckets over UDT. Above ~10 ms the TCP cap collapses, so only the");
+    println!("distributed Hadoop runs slow down — Table 2's penalty gap.");
+}

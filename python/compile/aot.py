@@ -1,0 +1,86 @@
+"""AOT driver: lower the L2 graphs to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts relative to this file):
+  malstone_hist.hlo.txt     hist(site, week, marked) -> (comp, tot)
+  malstone_ratio_a.hlo.txt  ratio_a(comp, tot) -> (ratio[S],)
+  malstone_ratio_b.hlo.txt  ratio_b(comp, tot) -> (ratio[S,W],)
+  meta.json                 artifact geometry consumed by rust/src/runtime
+
+Python runs only here, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Lower every entry point; returns {artifact_name: hlo_text}."""
+    arts = {
+        "malstone_hist": jax.jit(model.hist).lower(*model.hist_shapes()),
+        "malstone_ratio_a": jax.jit(model.ratio_a).lower(*model.plane_shapes()),
+        "malstone_ratio_b": jax.jit(model.ratio_b).lower(*model.plane_shapes()),
+    }
+    return {name: to_hlo_text(low) for name, low in arts.items()}
+
+
+def main() -> None:
+    here = os.path.dirname(os.path.abspath(__file__))
+    default_out = os.path.join(here, "..", "..", "artifacts")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=default_out)
+    # Back-compat with `make artifacts` invoking --out <file>: treat the
+    # file's directory as out-dir and additionally write that file.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    texts = lower_all()
+    for name, text in texts.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "num_sites": model.NUM_SITES,
+        "num_weeks": model.NUM_WEEKS,
+        "tile": model.TILE,
+        "batch": model.BATCH,
+        "artifacts": sorted(texts),
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'meta.json')}")
+
+    if args.out:  # legacy single-file target used by the Makefile stamp
+        with open(args.out, "w") as f:
+            f.write(texts["malstone_hist"])
+
+
+if __name__ == "__main__":
+    main()

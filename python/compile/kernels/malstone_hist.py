@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: MalStone (site, week) histogram as one-hot matmul.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on a GPU this
+aggregation is a global-memory atomic scatter-add — one ``atomicAdd`` per
+record into ``counts[site][week]``. TPUs have no fast scatter and the MXU
+wants dense matmuls, so the kernel re-expresses the histogram as
+
+    counts[S, W] += onehot(site)ᵀ  @  (onehot(week) ⊙ weight[:, None])
+                     (S × N)            (N × W)
+
+i.e. one ``S×N×W`` matmul per record tile per output plane. The one-hot
+matrices are built in-register from broadcasted-iota compares and never
+touch HBM; the two ``[S, W]`` accumulators live in the output VMEM block
+across all grid steps (every step maps to block (0, 0)).
+
+BlockSpec schedule: the grid iterates over record tiles of ``tile`` rows;
+each step streams ``site/week/marked`` tiles HBM→VMEM (3 × tile × 4 B ≈
+48 KiB at tile=4096) while the accumulators (2 × S × W × 4 B = 128 KiB at
+S=256, W=64) stay resident. Executed with ``interpret=True`` — real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+
+Padding records are flagged with ``site == -1`` and contribute nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(site_ref, week_ref, marked_ref, comp_ref, tot_ref, *,
+                 num_sites: int, num_weeks: int, acc_dtype):
+    """One grid step: accumulate one record tile into the [S, W] planes."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        comp_ref[...] = jnp.zeros_like(comp_ref)
+        tot_ref[...] = jnp.zeros_like(tot_ref)
+
+    site = site_ref[...]  # i32[tile]
+    week = week_ref[...]  # i32[tile]
+    marked = marked_ref[...].astype(acc_dtype)  # [tile]
+
+    valid = (site >= 0).astype(acc_dtype)  # [tile]
+
+    # One-hot via broadcasted iota compares; stays in registers/VMEM.
+    site_ids = jax.lax.broadcasted_iota(jnp.int32, (num_sites, site.shape[0]), 0)
+    oh_site = (site[None, :] == site_ids).astype(acc_dtype)  # [S, tile]
+    week_ids = jax.lax.broadcasted_iota(jnp.int32, (week.shape[0], num_weeks), 1)
+    oh_week = (week[:, None] == week_ids).astype(acc_dtype)  # [tile, W]
+
+    # Two MXU matmuls: marked-weighted plane and valid-count plane.
+    comp_ref[...] += jax.lax.dot(oh_site, oh_week * (marked * valid)[:, None],
+                                 preferred_element_type=jnp.float32)
+    tot_ref[...] += jax.lax.dot(oh_site, oh_week * valid[:, None],
+                                preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_sites", "num_weeks",
+                                             "tile", "acc_dtype"))
+def malstone_hist(site, week, marked, *, num_sites: int = 256,
+                  num_weeks: int = 64, tile: int = 4096,
+                  acc_dtype=jnp.float32):
+    """Histogram a batch of pre-joined MalStone records.
+
+    Args:
+      site: int32[N] site bucket per record, -1 for padding. N % tile == 0.
+      week: int32[N] week bucket per record.
+      marked: float[N] 1.0 iff the entity is compromised within the window.
+      num_sites / num_weeks: output plane dimensions.
+      tile: records streamed per grid step.
+      acc_dtype: in-kernel operand dtype for the one-hot matmuls (bf16 is
+        exact here — one-hots and 0/1 weights are representable — while
+        accumulation is always f32 via preferred_element_type).
+
+    Returns:
+      (comp, tot): float32[num_sites, num_weeks] planes.
+    """
+    n = site.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"record count {n} not a multiple of tile {tile}")
+    grid = (n // tile,)
+    out_shape = jax.ShapeDtypeStruct((num_sites, num_weeks), jnp.float32)
+    kernel = functools.partial(_hist_kernel, num_sites=num_sites,
+                               num_weeks=num_weeks, acc_dtype=acc_dtype)
+    comp, tot = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((num_sites, num_weeks), lambda i: (0, 0)),
+            pl.BlockSpec((num_sites, num_weeks), lambda i: (0, 0)),
+        ],
+        out_shape=[out_shape, out_shape],
+        interpret=True,  # CPU-PJRT cannot execute Mosaic custom-calls.
+    )(site, week, marked)
+    return comp, tot

@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracle for the MalStone aggregation kernels.
+
+This is the ground truth the Pallas kernel (malstone_hist.py) and the L2
+ratio graphs (model.py) are tested against. It is deliberately the most
+direct expression of the computation — a scatter-add — with none of the
+one-hot-matmul restructuring the TPU kernel uses.
+
+MalStone semantics (OCC TR-09-01, §5 of the OCT paper): log records are
+``(event_id, timestamp, site_id, compromise_flag, entity_id)``. For each
+site, compute the fraction of visiting entities that become compromised at
+any time within the window after the visit. The *join* between visit
+records and entity compromise times is done upstream (it is the
+shuffle-heavy part of the distributed engines, see rust/src/malstone); the
+kernels here consume pre-joined records where ``marked[i] == 1.0`` iff the
+entity of record *i* becomes compromised within the window after the visit.
+
+Inputs (one batch of N records; padding records use ``site == -1``):
+  site   : int32[N]   site bucket in [0, S); -1 marks padding
+  week   : int32[N]   week bucket in [0, W)
+  marked : float[N]   1.0 if the visiting entity is later compromised
+
+Outputs:
+  comp : float32[S, W]  number of marked visits per (site, week)
+  tot  : float32[S, W]  number of valid visits per (site, week)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hist_ref(site, week, marked, num_sites: int, num_weeks: int):
+    """Scatter-add reference histogram: the direct (GPU-style) formulation."""
+    valid = site >= 0
+    # Clamp so padding rows index safely; their weight is zeroed by `valid`.
+    s = jnp.clip(site, 0, num_sites - 1)
+    w = jnp.clip(week, 0, num_weeks - 1)
+    v = valid.astype(jnp.float32)
+    m = marked.astype(jnp.float32) * v
+    comp = jnp.zeros((num_sites, num_weeks), jnp.float32).at[s, w].add(m)
+    tot = jnp.zeros((num_sites, num_weeks), jnp.float32).at[s, w].add(v)
+    return comp, tot
+
+
+def ratio_a_ref(comp, tot):
+    """MalStone-A: one overall ratio per site (whole time range)."""
+    c = comp.sum(axis=1)
+    t = tot.sum(axis=1)
+    return jnp.where(t > 0, c / jnp.maximum(t, 1.0), 0.0)
+
+
+def ratio_b_ref(comp, tot):
+    """MalStone-B: cumulative weekly ratio series per site.
+
+    For week w the window is weeks [0, w]; the ratio is marked visits over
+    total visits accumulated up to and including w.
+    """
+    cc = jnp.cumsum(comp, axis=1)
+    ct = jnp.cumsum(tot, axis=1)
+    return jnp.where(ct > 0, cc / jnp.maximum(ct, 1.0), 0.0)

@@ -1,0 +1,70 @@
+"""L2 JAX model: the MalStone dataflow graphs that get AOT-compiled.
+
+Three exported entry points (see aot.py, loaded by rust/src/runtime):
+
+  hist(site, week, marked)      -> (comp[S,W], tot[S,W])      (calls the L1
+                                   Pallas kernel; the per-worker hot path)
+  ratio_a(comp, tot)            -> ratio[S]                   (MalStone-A)
+  ratio_b(comp, tot)            -> ratio[S,W]                 (MalStone-B)
+
+The distributed decomposition mirrors the paper's engines: every Sphere
+worker / reduce task streams its local record tiles through ``hist`` and
+the master sums the partial ``(comp, tot)`` planes (f32 add is the only
+cross-worker reduction) before running a ratio graph once. Summation of
+partials is associative/commutative, so worker count and record order do
+not change the result — the property tests in python/tests and the Rust
+integration tests both rely on this.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.malstone_hist import malstone_hist
+from compile.kernels import ref
+
+# Default artifact geometry. Rust reads these from artifacts/meta.json
+# (written by aot.py); keep in sync with rust/src/runtime defaults.
+NUM_SITES = 256
+NUM_WEEKS = 64
+TILE = 4096
+BATCH_TILES = 16
+BATCH = TILE * BATCH_TILES  # records consumed per hist execution
+
+
+def hist(site, week, marked):
+    """Per-worker aggregation: one batch of pre-joined records -> planes.
+
+    bf16 matmul operands (exact for one-hot/0-1 values, f32 accumulation)
+    double CPU-interpret throughput and are the native MXU dtype — see
+    EXPERIMENTS.md §Perf for the measured sweep.
+    """
+    return malstone_hist(site, week, marked, num_sites=NUM_SITES,
+                         num_weeks=NUM_WEEKS, tile=TILE,
+                         acc_dtype=jnp.bfloat16)
+
+
+def ratio_a(comp, tot):
+    """MalStone-A: overall per-site compromise ratio."""
+    return (ref.ratio_a_ref(comp, tot),)
+
+
+def ratio_b(comp, tot):
+    """MalStone-B: cumulative weekly per-site ratio series."""
+    return (ref.ratio_b_ref(comp, tot),)
+
+
+def hist_shapes():
+    """Example-arg shapes for lowering ``hist``."""
+    return (
+        jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+        jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+        jax.ShapeDtypeStruct((BATCH,), jnp.float32),
+    )
+
+
+def plane_shapes():
+    """Example-arg shapes for lowering the ratio graphs."""
+    p = jax.ShapeDtypeStruct((NUM_SITES, NUM_WEEKS), jnp.float32)
+    return (p, p)

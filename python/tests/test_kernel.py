@@ -1,0 +1,153 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Counts are integers stored in f32, so comparisons are exact (tolerance 0)
+up to 2^24 events per (site, week) cell — far above anything these tests
+generate. hypothesis sweeps record counts, plane geometry, bucket
+distributions, padding patterns, and the in-kernel matmul operand dtype.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.malstone_hist import malstone_hist
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# CI-friendly hypothesis profile: interpret-mode pallas is slow, keep cases small.
+hypothesis.settings.register_profile(
+    "oct", max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("oct")
+
+
+def make_records(rng, n, num_sites, num_weeks, pad_frac=0.1):
+    site = rng.integers(0, num_sites, size=n).astype(np.int32)
+    week = rng.integers(0, num_weeks, size=n).astype(np.int32)
+    marked = (rng.random(n) < 0.3).astype(np.float32)
+    pad = rng.random(n) < pad_frac
+    site[pad] = -1
+    return site, week, marked
+
+
+def run_both(site, week, marked, num_sites, num_weeks, tile, acc_dtype=jnp.float32):
+    comp_k, tot_k = malstone_hist(
+        jnp.asarray(site), jnp.asarray(week), jnp.asarray(marked),
+        num_sites=num_sites, num_weeks=num_weeks, tile=tile,
+        acc_dtype=acc_dtype)
+    comp_r, tot_r = ref.hist_ref(
+        jnp.asarray(site), jnp.asarray(week), jnp.asarray(marked),
+        num_sites, num_weeks)
+    return (np.asarray(comp_k), np.asarray(tot_k),
+            np.asarray(comp_r), np.asarray(tot_r))
+
+
+class TestHistBasics:
+    def test_single_record(self):
+        site = np.array([3], dtype=np.int32)
+        week = np.array([5], dtype=np.int32)
+        marked = np.array([1.0], dtype=np.float32)
+        ck, tk, cr, tr = run_both(site, week, marked, 8, 8, tile=1)
+        assert ck[3, 5] == 1.0 and tk[3, 5] == 1.0
+        assert ck.sum() == 1.0 and tk.sum() == 1.0
+        np.testing.assert_array_equal(ck, cr)
+        np.testing.assert_array_equal(tk, tr)
+
+    def test_all_padding(self):
+        site = np.full(16, -1, dtype=np.int32)
+        week = np.zeros(16, dtype=np.int32)
+        marked = np.ones(16, dtype=np.float32)
+        ck, tk, _, _ = run_both(site, week, marked, 4, 4, tile=8)
+        assert ck.sum() == 0.0 and tk.sum() == 0.0
+
+    def test_unmarked_records_count_total_only(self):
+        site = np.zeros(8, dtype=np.int32)
+        week = np.zeros(8, dtype=np.int32)
+        marked = np.zeros(8, dtype=np.float32)
+        ck, tk, _, _ = run_both(site, week, marked, 4, 4, tile=8)
+        assert ck[0, 0] == 0.0 and tk[0, 0] == 8.0
+
+    def test_multi_tile_accumulation(self):
+        rng = np.random.default_rng(0)
+        site, week, marked = make_records(rng, 4 * 32, 16, 8)
+        ck, tk, cr, tr = run_both(site, week, marked, 16, 8, tile=32)
+        np.testing.assert_array_equal(ck, cr)
+        np.testing.assert_array_equal(tk, tr)
+
+    def test_tile_mismatch_raises(self):
+        site = np.zeros(10, dtype=np.int32)
+        week = np.zeros(10, dtype=np.int32)
+        marked = np.zeros(10, dtype=np.float32)
+        with pytest.raises(ValueError, match="not a multiple"):
+            malstone_hist(jnp.asarray(site), jnp.asarray(week),
+                          jnp.asarray(marked), num_sites=4, num_weeks=4,
+                          tile=4)
+
+    def test_total_conservation(self):
+        """Σ tot == number of valid records; Σ comp == number marked&valid."""
+        rng = np.random.default_rng(1)
+        site, week, marked = make_records(rng, 256, 32, 16)
+        ck, tk, _, _ = run_both(site, week, marked, 32, 16, tile=64)
+        valid = site >= 0
+        assert tk.sum() == valid.sum()
+        assert ck.sum() == (marked[valid] == 1.0).sum()
+
+
+class TestHistHypothesis:
+    @hypothesis.given(
+        tiles=st.integers(1, 4),
+        tile=st.sampled_from([8, 32, 128]),
+        num_sites=st.sampled_from([4, 16, 256]),
+        num_weeks=st.sampled_from([4, 8, 64]),
+        seed=st.integers(0, 2**31 - 1),
+        pad_frac=st.sampled_from([0.0, 0.15, 1.0]),
+    )
+    def test_kernel_matches_ref(self, tiles, tile, num_sites, num_weeks,
+                                seed, pad_frac):
+        rng = np.random.default_rng(seed)
+        site, week, marked = make_records(rng, tiles * tile, num_sites,
+                                          num_weeks, pad_frac)
+        ck, tk, cr, tr = run_both(site, week, marked, num_sites, num_weeks,
+                                  tile)
+        np.testing.assert_allclose(ck, cr, atol=0)
+        np.testing.assert_allclose(tk, tr, atol=0)
+
+    @hypothesis.given(
+        seed=st.integers(0, 2**31 - 1),
+        acc=st.sampled_from(["float32", "bfloat16"]),
+    )
+    def test_acc_dtype_exact_for_counts(self, seed, acc):
+        """bf16 one-hot operands with f32 accumulation stay exact."""
+        rng = np.random.default_rng(seed)
+        site, week, marked = make_records(rng, 128, 16, 8)
+        ck, tk, cr, tr = run_both(site, week, marked, 16, 8, tile=64,
+                                  acc_dtype=jnp.dtype(acc))
+        np.testing.assert_array_equal(ck, cr)
+        np.testing.assert_array_equal(tk, tr)
+
+    @hypothesis.given(seed=st.integers(0, 2**31 - 1),
+                      parts=st.integers(2, 5))
+    def test_partial_histogram_merge(self, seed, parts):
+        """Distributed decomposition: Σ of per-worker planes == global plane."""
+        rng = np.random.default_rng(seed)
+        tile, num_sites, num_weeks = 32, 16, 8
+        site, week, marked = make_records(rng, parts * tile, num_sites,
+                                          num_weeks)
+        # global
+        cg, tg, _, _ = run_both(site, week, marked, num_sites, num_weeks, tile)
+        # per-worker partials summed
+        cs = np.zeros_like(cg)
+        ts = np.zeros_like(tg)
+        for p in range(parts):
+            sl = slice(p * tile, (p + 1) * tile)
+            ck, tk, _, _ = run_both(site[sl], week[sl], marked[sl],
+                                    num_sites, num_weeks, tile)
+            cs += ck
+            ts += tk
+        np.testing.assert_array_equal(cs, cg)
+        np.testing.assert_array_equal(ts, tg)

@@ -1,0 +1,91 @@
+"""L2 model tests: ratio graph semantics and end-to-end hist→ratio dataflow."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "oct", max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("oct")
+
+
+class TestRatioSemantics:
+    def test_ratio_a_simple(self):
+        comp = jnp.zeros((4, 4)).at[1, 0].set(2.0).at[1, 3].set(1.0)
+        tot = jnp.zeros((4, 4)).at[1, 0].set(4.0).at[1, 3].set(2.0)
+        r = np.asarray(ref.ratio_a_ref(comp, tot))
+        assert r[1] == 0.5  # (2+1)/(4+2)
+        assert (r[[0, 2, 3]] == 0).all()
+
+    def test_ratio_b_cumulative(self):
+        comp = jnp.zeros((2, 3)).at[0, 0].set(1.0)
+        tot = jnp.zeros((2, 3)).at[0, 0].set(2.0).at[0, 2].set(2.0)
+        r = np.asarray(ref.ratio_b_ref(comp, tot))
+        np.testing.assert_allclose(r[0], [0.5, 0.5, 0.25])
+        np.testing.assert_allclose(r[1], [0.0, 0.0, 0.0])
+
+    def test_empty_sites_zero_not_nan(self):
+        z = jnp.zeros((8, 8))
+        ra = np.asarray(ref.ratio_a_ref(z, z))
+        rb = np.asarray(ref.ratio_b_ref(z, z))
+        assert np.isfinite(ra).all() and (ra == 0).all()
+        assert np.isfinite(rb).all() and (rb == 0).all()
+
+    @hypothesis.given(seed=st.integers(0, 2**31 - 1))
+    def test_ratio_bounds(self, seed):
+        """Ratios are always in [0, 1] when comp <= tot (counts)."""
+        rng = np.random.default_rng(seed)
+        tot = rng.integers(0, 50, size=(16, 8)).astype(np.float32)
+        comp = np.minimum(rng.integers(0, 50, size=(16, 8)), tot).astype(np.float32)
+        ra = np.asarray(ref.ratio_a_ref(jnp.asarray(comp), jnp.asarray(tot)))
+        rb = np.asarray(ref.ratio_b_ref(jnp.asarray(comp), jnp.asarray(tot)))
+        assert (ra >= 0).all() and (ra <= 1).all()
+        assert (rb >= 0).all() and (rb <= 1).all()
+
+    def test_ratio_b_last_week_equals_ratio_a(self):
+        """Cumulative ratio at the final week == overall (A) ratio."""
+        rng = np.random.default_rng(7)
+        tot = rng.integers(0, 20, size=(32, 16)).astype(np.float32)
+        comp = np.minimum(rng.integers(0, 20, size=(32, 16)), tot).astype(np.float32)
+        ra = np.asarray(ref.ratio_a_ref(jnp.asarray(comp), jnp.asarray(tot)))
+        rb = np.asarray(ref.ratio_b_ref(jnp.asarray(comp), jnp.asarray(tot)))
+        np.testing.assert_allclose(rb[:, -1], ra, rtol=1e-6)
+
+
+class TestModelEntryPoints:
+    def test_hist_default_geometry(self):
+        rng = np.random.default_rng(3)
+        n = model.BATCH
+        site = rng.integers(-1, model.NUM_SITES, size=n).astype(np.int32)
+        week = rng.integers(0, model.NUM_WEEKS, size=n).astype(np.int32)
+        marked = (rng.random(n) < 0.2).astype(np.float32)
+        comp, tot = model.hist(jnp.asarray(site), jnp.asarray(week),
+                               jnp.asarray(marked))
+        cr, tr = ref.hist_ref(jnp.asarray(site), jnp.asarray(week),
+                              jnp.asarray(marked), model.NUM_SITES,
+                              model.NUM_WEEKS)
+        np.testing.assert_array_equal(np.asarray(comp), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(tot), np.asarray(tr))
+
+    def test_entry_points_return_tuples(self):
+        p = jnp.ones((model.NUM_SITES, model.NUM_WEEKS))
+        assert isinstance(model.ratio_a(p, p), tuple)
+        assert isinstance(model.ratio_b(p, p), tuple)
+
+
+class TestAotLowering:
+    def test_lower_all_produces_hlo_text(self):
+        from compile import aot
+        texts = aot.lower_all()
+        assert set(texts) == {"malstone_hist", "malstone_ratio_a",
+                              "malstone_ratio_b"}
+        for name, text in texts.items():
+            assert "HloModule" in text, name
+            # tuple return for the rust loader's to_tuple()
+            assert "ROOT" in text, name

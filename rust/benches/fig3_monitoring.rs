@@ -1,0 +1,72 @@
+//! Bench: the Figure-3 monitoring system's overhead — sampling ingest
+//! rate over the full 128-node testbed and heatmap render cost. The
+//! monitor must be cheap enough to run continuously (paper §3: "simple
+//! but effective").
+
+use oct::monitor::heatmap::Metric;
+use oct::monitor::{render_heatmap, Monitor};
+use oct::net::{Cluster, FlowNet, Topology};
+use oct::sim::Engine;
+use std::time::Instant;
+
+fn main() {
+    let cluster = Cluster::new(Topology::oct_2009());
+    let topo = cluster.topo.clone();
+    let mon = Monitor::new(topo.clone(), 1.0);
+    let mut eng = Engine::new();
+    // Put live traffic on the fabric so sampling reads real counters.
+    for i in 0..64 {
+        let a = topo.racks[i % 4].nodes[i % 32];
+        let b = topo.racks[(i + 1) % 4].nodes[(i + 7) % 32];
+        FlowNet::start(&cluster.net, &mut eng, topo.path(a, b), 1e12, f64::INFINITY, |_| {});
+    }
+    eng.run_until(1.0);
+
+    // Ingest: full-testbed samples per wall second.
+    let samples = 2000;
+    let t0 = Instant::now();
+    for i in 0..samples {
+        eng.run_until(1.0 + i as f64);
+        mon.borrow_mut().sample_all(&eng, &cluster.net, &cluster.pools);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let node_samples = samples as f64 * topo.num_nodes() as f64;
+    println!("=== monitoring ingest (128 nodes, 64 live flows) ===");
+    println!(
+        "{samples} testbed sweeps in {:.2}s → {:.0} sweeps/s ({:.2}M node-samples/s)",
+        dt,
+        samples as f64 / dt,
+        node_samples / dt / 1e6
+    );
+    assert!(samples as f64 / dt > 50.0, "monitor sampling too slow to run at 1 Hz");
+
+    // Render: Figure 3 frames per second (ANSI + plain).
+    for (ansi, label) in [(true, "ansi"), (false, "plain")] {
+        let frames = 2000;
+        let t1 = Instant::now();
+        let mut bytes = 0usize;
+        for _ in 0..frames {
+            bytes += render_heatmap(&mon.borrow(), Metric::Network, ansi).len();
+        }
+        let rdt = t1.elapsed().as_secs_f64();
+        println!(
+            "render {label}: {:.0} frames/s ({:.0} KB/frame)",
+            frames as f64 / rdt,
+            bytes as f64 / frames as f64 / 1024.0
+        );
+    }
+
+    // JSON export cost (the web feed).
+    let t2 = Instant::now();
+    let frames = 1000;
+    let mut total = 0usize;
+    for _ in 0..frames {
+        total += mon.borrow().frame_json(eng.now()).to_string().len();
+    }
+    println!(
+        "json export: {:.0} frames/s ({} bytes/frame)",
+        frames as f64 / t2.elapsed().as_secs_f64(),
+        total / frames
+    );
+    println!("fig3_monitoring OK");
+}

@@ -1,0 +1,67 @@
+//! Bench: GMP messaging + RPC (paper §4). Real UDP loopback round-trips
+//! (latency percentiles, throughput) and the connectionless-vs-TCP
+//! control-message model across testbed RTTs.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use oct::gmp::rpc::Handler;
+use oct::gmp::{GmpConfig, GmpEndpoint, RpcClient, RpcServer};
+use oct::transport::control_message_latency;
+use oct::util::stats;
+
+fn main() {
+    let iters = 3000usize;
+    let ep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+    let addr = ep.local_addr();
+    let mut handlers: HashMap<String, Handler> = HashMap::new();
+    handlers.insert("ping".into(), Box::new(|b: &[u8]| b.to_vec()));
+    let _srv = RpcServer::start(ep, handlers);
+    let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+
+    for _ in 0..200 {
+        client.call(addr, "ping", b"warmup", Duration::from_secs(1)).unwrap();
+    }
+    let mut lat = Vec::with_capacity(iters);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let t = Instant::now();
+        client.call(addr, "ping", &[7u8; 32], Duration::from_secs(1)).unwrap();
+        lat.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("=== GMP RPC, real UDP loopback, {iters} calls ===");
+    println!(
+        "mean {:.1} µs  p50 {:.1} µs  p99 {:.1} µs  throughput {:.0} rpc/s",
+        stats::mean(&lat),
+        stats::percentile(&lat, 50.0),
+        stats::percentile(&lat, 99.0),
+        iters as f64 / wall
+    );
+    assert!(stats::percentile(&lat, 50.0) < 1000.0, "loopback RPC p50 suspiciously slow");
+
+    // Reliability machinery under loss: retransmits happen, delivery holds.
+    let lossy = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+    lossy.set_fault(oct::gmp::FaultSpec { drop_every: 5, dup_every: 7 });
+    let lossy_client = RpcClient::new(lossy);
+    let t1 = Instant::now();
+    let n_lossy = 300;
+    for i in 0..n_lossy {
+        lossy_client.call(addr, "ping", format!("{i}").as_bytes(), Duration::from_secs(2)).unwrap();
+    }
+    println!(
+        "under 20% drop + 14% dup: {n_lossy} calls in {:.2}s (exactly-once held)",
+        t1.elapsed().as_secs_f64()
+    );
+
+    println!("\n=== modeled control message: connectionless GMP vs TCP (§4) ===");
+    println!("{:>10} {:>10} {:>10} {:>8}", "RTT", "GMP", "TCP", "saving");
+    for rtt_ms in [0.1, 1.0, 22.0, 58.0, 75.0] {
+        let rtt = rtt_ms / 1e3;
+        let g = control_message_latency(rtt, true);
+        let t = control_message_latency(rtt, false);
+        println!("{rtt_ms:>8.1}ms {:>9.2}ms {:>9.2}ms {:>7.1}×", g * 1e3, t * 1e3, t / g);
+        assert!(t > g);
+    }
+    println!("gmp_rpc OK");
+}

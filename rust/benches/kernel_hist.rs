@@ -1,0 +1,62 @@
+//! Bench: the AOT JAX/Pallas MalStone histogram through PJRT — the
+//! three-layer hot path — vs the pure-Rust accumulator baseline.
+//!
+//! Requires `make artifacts`.
+
+use oct::malstone::join::JoinedRecord;
+use oct::malstone::oracle::MalstoneResult;
+use oct::runtime::{default_artifact_dir, MalstoneKernels};
+use oct::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let k = MalstoneKernels::load(&dir).expect("load artifacts");
+    println!("PJRT platform: {}; batch {}, planes {}×{}", k.platform(), k.meta.batch, k.meta.num_sites, k.meta.num_weeks);
+
+    let n = 1_000_000usize;
+    let mut rng = Rng::new(11);
+    let joined: Vec<JoinedRecord> = (0..n)
+        .map(|_| JoinedRecord {
+            site: rng.gen_range(k.meta.num_sites as u64) as i32,
+            week: rng.gen_range(k.meta.num_weeks as u64) as i32,
+            marked: f32::from(rng.chance(0.25)),
+        })
+        .collect();
+
+    // Warmup + correctness.
+    let planes = k.hist(&joined[..k.meta.batch]).unwrap();
+    let mut want = MalstoneResult::zero(k.meta.num_sites, k.meta.num_weeks);
+    want.accumulate(&joined[..k.meta.batch]);
+    assert_eq!(planes, want, "kernel diverged from oracle");
+
+    // PJRT throughput.
+    let reps = 3;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let _ = k.hist(&joined).unwrap();
+    }
+    let pjrt_dt = t0.elapsed().as_secs_f64() / reps as f64;
+
+    // Pure-Rust baseline.
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        let mut r = MalstoneResult::zero(k.meta.num_sites, k.meta.num_weeks);
+        r.accumulate(&joined);
+        std::hint::black_box(&r);
+    }
+    let rust_dt = t1.elapsed().as_secs_f64() / reps as f64;
+
+    println!("=== {n} records/run, {reps} runs ===");
+    println!("pjrt pallas-hist: {:.1} ms  ({:.2}M rec/s, {} executions)", pjrt_dt * 1e3, n as f64 / pjrt_dt / 1e6, k.hist_calls.borrow());
+    println!("rust scatter-add: {:.1} ms  ({:.2}M rec/s)", rust_dt * 1e3, n as f64 / rust_dt / 1e6);
+    println!(
+        "note: interpret=True Pallas on CPU-PJRT measures the *dataflow*, not TPU \
+         perf; DESIGN.md §Perf estimates MXU utilization from the BlockSpec."
+    );
+    println!("kernel_hist OK");
+}

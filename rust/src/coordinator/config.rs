@@ -1,0 +1,248 @@
+//! TOML-subset configuration parser (offline build — no toml/serde crate).
+//!
+//! Supports what OCT configs need: `[section]` headers (dotted names fine),
+//! `key = value` with string/int/float/bool/array-of-scalars values, `#`
+//! comments, and blank lines. Lookup is by `"section.key"`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config document.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, String> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full, parse_value(val.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Config::parse(&src)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_i64(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let q = q.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(q.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // Split on commas outside quotes (arrays are scalar-only; no nesting).
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# testbed description
+[testbed]
+sites = 4
+nodes_per_rack = 32          # Figure 2
+wan_gbps = 10.0
+name = "oct-2009"
+growing = true
+
+[workload]
+records = 10_000_000_000
+frameworks = ["hadoop", "sector"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_i64("testbed.sites", 0), 4);
+        assert_eq!(c.get_i64("testbed.nodes_per_rack", 0), 32);
+        assert_eq!(c.get_f64("testbed.wan_gbps", 0.0), 10.0);
+        assert_eq!(c.get_str("testbed.name", ""), "oct-2009");
+        assert!(c.get_bool("testbed.growing", false));
+        assert_eq!(c.get_i64("workload.records", 0), 10_000_000_000);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let c = Config::parse(SAMPLE).unwrap();
+        match c.get("workload.frameworks") {
+            Some(Value::Arr(v)) => {
+                assert_eq!(v.len(), 2);
+                assert_eq!(v[0].as_str(), Some("hadoop"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_i64("nope", 7), 7);
+        assert_eq!(c.get_str("nope", "x"), "x");
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let c = Config::parse(r##"k = "a # b""##).unwrap();
+        assert_eq!(c.get_str("k", ""), "a # b");
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = Config::parse("[oops\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err2 = Config::parse("justakey\n").unwrap_err();
+        assert!(err2.contains("key = value"), "{err2}");
+        assert!(Config::parse("k = @wat").is_err());
+    }
+
+    #[test]
+    fn float_and_negative() {
+        let c = Config::parse("a = -3\nb = 2.5e3").unwrap();
+        assert_eq!(c.get_i64("a", 0), -3);
+        assert_eq!(c.get_f64("b", 0.0), 2500.0);
+    }
+}

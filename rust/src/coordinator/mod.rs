@@ -1,0 +1,19 @@
+//! The OCT coordinator: testbed configuration, node/network provisioning,
+//! and the experiment runner that regenerates the paper's tables.
+//!
+//! - [`config`]: a dependency-free TOML-subset parser for testbed and
+//!   experiment configs (`examples/*.toml` style).
+//! - [`provision`]: the paper's "flexible compute node and network
+//!   provisioning" service — grow the testbed (§2.2's expansion to ~250
+//!   nodes), retune links, drain nodes.
+//! - [`experiment`]: Table 1 / Table 2 drivers plus the correctness
+//!   harness that cross-checks every engine against the oracle and the
+//!   AOT kernel path.
+
+pub mod config;
+pub mod experiment;
+pub mod provision;
+
+pub use config::Config;
+pub use experiment::{run_table1, run_table2, Table1Row, Table2Row};
+pub use provision::Provisioner;

@@ -1,0 +1,29 @@
+//! GMP — the Group Messaging Protocol (paper §4), implemented for real
+//! over `std::net::UdpSocket`.
+//!
+//! "GMP is a connection-less protocol, which uses a single UDP port …
+//! Every GMP message contains a session ID and a sequence number. Upon
+//! receiving a message, GMP sends back an acknowledgment; if no
+//! acknowledgment is received, the message will be sent again. … The
+//! sequence number is used to make sure that no duplicated message will
+//! be delivered. The session ID is used to differentiate messages from
+//! the same address but different processes. If the message size is
+//! greater than a single UDP packet can hold, GMP will set up a UDT
+//! connection to deliver the large message."
+//!
+//! [`wire`] is the packet codec; [`endpoint`] the protocol engine
+//! (ack/retransmit, dedup, fragmentation with a windowed UDT-like
+//! reliable stream for large messages, fault injection for tests); and
+//! [`rpc`] the "light-weight high performance RPC mechanism on top of
+//! GMP" used by Sector: one request message, one response message.
+//!
+//! This module is *actual* networking (threads + sockets on loopback in
+//! tests); the simulator models GMP's latency analytically via
+//! [`crate::transport::control_message_latency`].
+
+pub mod endpoint;
+pub mod rpc;
+pub mod wire;
+
+pub use endpoint::{FaultSpec, GmpConfig, GmpEndpoint};
+pub use rpc::{RpcClient, RpcServer};

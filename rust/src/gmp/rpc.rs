@@ -1,0 +1,245 @@
+//! The "light-weight high performance RPC mechanism on top of GMP"
+//! (paper §4): a request is one GMP message, the response another.
+//!
+//! Frame layout inside the GMP payload (little-endian):
+//! `| tag u8 (0=req, 1=resp) | req_id u32 | method_len u16 | method | body |`
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::endpoint::GmpEndpoint;
+
+const TAG_REQ: u8 = 0;
+const TAG_RESP: u8 = 1;
+
+fn encode_frame(tag: u8, req_id: u32, method: &str, body: &[u8]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(7 + method.len() + body.len());
+    b.push(tag);
+    b.extend_from_slice(&req_id.to_le_bytes());
+    b.extend_from_slice(&(method.len() as u16).to_le_bytes());
+    b.extend_from_slice(method.as_bytes());
+    b.extend_from_slice(body);
+    b
+}
+
+fn decode_frame(b: &[u8]) -> Option<(u8, u32, String, Vec<u8>)> {
+    if b.len() < 7 {
+        return None;
+    }
+    let tag = b[0];
+    let req_id = u32::from_le_bytes(b[1..5].try_into().ok()?);
+    let mlen = u16::from_le_bytes(b[5..7].try_into().ok()?) as usize;
+    if b.len() < 7 + mlen {
+        return None;
+    }
+    let method = String::from_utf8(b[7..7 + mlen].to_vec()).ok()?;
+    Some((tag, req_id, method, b[7 + mlen..].to_vec()))
+}
+
+/// A registered RPC method implementation.
+pub type Handler = Box<dyn Fn(&[u8]) -> Vec<u8> + Send + Sync>;
+
+/// RPC server: dispatches registered handlers from a service thread.
+pub struct RpcServer {
+    ep: Arc<GmpEndpoint>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Start serving `handlers` on `ep`'s inbox.
+    pub fn start(ep: Arc<GmpEndpoint>, handlers: HashMap<String, Handler>) -> RpcServer {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let ep2 = ep.clone();
+        let thread = std::thread::spawn(move || {
+            let handlers = handlers;
+            while !stop2.load(Ordering::Relaxed) {
+                let Some((from, msg)) = ep2.recv_timeout(Duration::from_millis(20)) else {
+                    continue;
+                };
+                let Some((tag, req_id, method, body)) = decode_frame(&msg) else { continue };
+                if tag != TAG_REQ {
+                    continue;
+                }
+                let resp_body = match handlers.get(&method) {
+                    Some(h) => h(&body),
+                    None => format!("ERR unknown method {method}").into_bytes(),
+                };
+                let frame = encode_frame(TAG_RESP, req_id, &method, &resp_body);
+                let _ = ep2.send(from, &frame);
+            }
+        });
+        RpcServer { ep, stop, thread: Some(thread) }
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.ep.local_addr()
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+struct ClientShared {
+    responses: Mutex<HashMap<u32, Vec<u8>>>,
+    cv: Condvar,
+}
+
+/// RPC client: correlates responses by request id; a pump thread drains
+/// the endpoint inbox.
+pub struct RpcClient {
+    ep: Arc<GmpEndpoint>,
+    next_id: AtomicU32,
+    shared: Arc<ClientShared>,
+    stop: Arc<AtomicBool>,
+    pump: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RpcClient {
+    pub fn new(ep: Arc<GmpEndpoint>) -> RpcClient {
+        let shared = Arc::new(ClientShared { responses: Mutex::new(HashMap::new()), cv: Condvar::new() });
+        let stop = Arc::new(AtomicBool::new(false));
+        let (s2, st2, ep2) = (shared.clone(), stop.clone(), ep.clone());
+        let pump = std::thread::spawn(move || {
+            while !st2.load(Ordering::Relaxed) {
+                let Some((_from, msg)) = ep2.recv_timeout(Duration::from_millis(20)) else {
+                    continue;
+                };
+                if let Some((tag, req_id, _method, body)) = decode_frame(&msg) {
+                    if tag == TAG_RESP {
+                        s2.responses.lock().unwrap().insert(req_id, body);
+                        s2.cv.notify_all();
+                    }
+                }
+            }
+        });
+        RpcClient { ep, next_id: AtomicU32::new(1), shared, stop, pump: Some(pump) }
+    }
+
+    /// Call `method` on the server at `to`; blocks until the response or
+    /// `timeout`.
+    pub fn call(&self, to: SocketAddr, method: &str, body: &[u8], timeout: Duration) -> std::io::Result<Vec<u8>> {
+        let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = encode_frame(TAG_REQ, req_id, method, body);
+        self.ep.send(to, &frame)?;
+        let deadline = Instant::now() + timeout;
+        let mut resp = self.shared.responses.lock().unwrap();
+        loop {
+            if let Some(body) = resp.remove(&req_id) {
+                return Ok(body);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    format!("rpc {method} to {to} timed out"),
+                ));
+            }
+            let (g, _) = self.shared.cv.wait_timeout(resp, deadline - now).unwrap();
+            resp = g;
+        }
+    }
+}
+
+impl Drop for RpcClient {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.pump.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmp::endpoint::{FaultSpec, GmpConfig};
+
+    fn echo_server() -> (RpcServer, SocketAddr) {
+        let ep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+        let addr = ep.local_addr();
+        let mut handlers: HashMap<String, Handler> = HashMap::new();
+        handlers.insert("echo".into(), Box::new(|b: &[u8]| b.to_vec()));
+        handlers.insert("sum".into(), Box::new(|b: &[u8]| {
+            let s: u64 = b.iter().map(|&x| x as u64).sum();
+            s.to_le_bytes().to_vec()
+        }));
+        (RpcServer::start(ep, handlers), addr)
+    }
+
+    #[test]
+    fn echo_roundtrip() {
+        let (_srv, addr) = echo_server();
+        let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+        let out = client.call(addr, "echo", b"hello rpc", Duration::from_secs(2)).unwrap();
+        assert_eq!(out, b"hello rpc");
+    }
+
+    #[test]
+    fn compute_handler_and_many_calls() {
+        let (_srv, addr) = echo_server();
+        let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+        for i in 0..30u8 {
+            let out = client.call(addr, "sum", &[i, i, i], Duration::from_secs(2)).unwrap();
+            assert_eq!(u64::from_le_bytes(out.try_into().unwrap()), 3 * i as u64);
+        }
+    }
+
+    #[test]
+    fn unknown_method_reports_error() {
+        let (_srv, addr) = echo_server();
+        let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+        let out = client.call(addr, "nope", b"", Duration::from_secs(2)).unwrap();
+        assert!(String::from_utf8_lossy(&out).starts_with("ERR"));
+    }
+
+    #[test]
+    fn call_to_dead_server_times_out() {
+        let client = RpcClient::new(
+            GmpEndpoint::bind(
+                "127.0.0.1:0",
+                GmpConfig { rto: Duration::from_millis(10), max_retries: 2, ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let dead: SocketAddr = "127.0.0.1:9".parse().unwrap();
+        let err = client.call(dead, "echo", b"x", Duration::from_millis(200)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn rpc_survives_packet_loss() {
+        let ep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+        let addr = ep.local_addr();
+        let mut handlers: HashMap<String, Handler> = HashMap::new();
+        handlers.insert("echo".into(), Box::new(|b: &[u8]| b.to_vec()));
+        let _srv = RpcServer::start(ep, handlers);
+        let cep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+        cep.set_fault(FaultSpec { drop_every: 4, dup_every: 0 });
+        let client = RpcClient::new(cep);
+        for i in 0..20 {
+            let msg = format!("m{i}");
+            let out = client.call(addr, "echo", msg.as_bytes(), Duration::from_secs(3)).unwrap();
+            assert_eq!(out, msg.as_bytes());
+        }
+    }
+
+    #[test]
+    fn large_rpc_payload() {
+        let (_srv, addr) = echo_server();
+        let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+        let big: Vec<u8> = (0..50_000u32).map(|i| i as u8).collect();
+        let out = client.call(addr, "echo", &big, Duration::from_secs(5)).unwrap();
+        assert_eq!(out, big);
+    }
+}

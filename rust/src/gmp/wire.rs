@@ -1,0 +1,144 @@
+//! GMP wire format.
+//!
+//! Fixed 20-byte header, little-endian:
+//!
+//! ```text
+//! | magic u16 | ver u8 | kind u8 | session u32 | seq u32 | arg u32 | len u32 |
+//! ```
+//!
+//! `arg` is kind-specific: fragment index for `Frag`, fragment count for
+//! the first fragment, 0 otherwise. `len` is the payload length.
+
+pub const MAGIC: u16 = 0x474D; // "GM"
+pub const VERSION: u8 = 1;
+pub const HEADER_LEN: usize = 20;
+/// Payload budget per datagram (stay under typical 1500-byte MTU).
+pub const MAX_DATAGRAM_PAYLOAD: usize = 1200;
+
+/// Packet kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Single-datagram application message.
+    Data = 1,
+    /// Acknowledgment of (session, seq).
+    Ack = 2,
+    /// One fragment of a large message (the UDT-style stream path).
+    Frag = 3,
+}
+
+impl Kind {
+    fn from_u8(x: u8) -> Option<Kind> {
+        match x {
+            1 => Some(Kind::Data),
+            2 => Some(Kind::Ack),
+            3 => Some(Kind::Frag),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed GMP packet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Packet {
+    pub kind: Kind,
+    pub session: u32,
+    pub seq: u32,
+    pub arg: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Packet {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        b.extend_from_slice(&MAGIC.to_le_bytes());
+        b.push(VERSION);
+        b.push(self.kind as u8);
+        b.extend_from_slice(&self.session.to_le_bytes());
+        b.extend_from_slice(&self.seq.to_le_bytes());
+        b.extend_from_slice(&self.arg.to_le_bytes());
+        b.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        b.extend_from_slice(&self.payload);
+        b
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Packet, String> {
+        if b.len() < HEADER_LEN {
+            return Err(format!("short packet: {}", b.len()));
+        }
+        let magic = u16::from_le_bytes([b[0], b[1]]);
+        if magic != MAGIC {
+            return Err(format!("bad magic {magic:#x}"));
+        }
+        if b[2] != VERSION {
+            return Err(format!("bad version {}", b[2]));
+        }
+        let kind = Kind::from_u8(b[3]).ok_or_else(|| format!("bad kind {}", b[3]))?;
+        let session = u32::from_le_bytes(b[4..8].try_into().unwrap());
+        let seq = u32::from_le_bytes(b[8..12].try_into().unwrap());
+        let arg = u32::from_le_bytes(b[12..16].try_into().unwrap());
+        let len = u32::from_le_bytes(b[16..20].try_into().unwrap()) as usize;
+        if b.len() != HEADER_LEN + len {
+            return Err(format!("length mismatch: header {len}, actual {}", b.len() - HEADER_LEN));
+        }
+        Ok(Packet { kind, session, seq, arg, payload: b[HEADER_LEN..].to_vec() })
+    }
+
+    pub fn ack(session: u32, seq: u32) -> Packet {
+        Packet { kind: Kind::Ack, session, seq, arg: 0, payload: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let p = Packet { kind: Kind::Data, session: 7, seq: 42, arg: 0, payload: b"hello".to_vec() };
+        assert_eq!(Packet::decode(&p.encode()).unwrap(), p);
+    }
+
+    #[test]
+    fn ack_is_empty() {
+        let a = Packet::ack(1, 2);
+        let b = a.encode();
+        assert_eq!(b.len(), HEADER_LEN);
+        assert_eq!(Packet::decode(&b).unwrap(), a);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Packet::decode(&[0u8; 4]).is_err());
+        let mut good = Packet::ack(1, 2).encode();
+        good[0] = 0; // magic
+        assert!(Packet::decode(&good).is_err());
+        let mut vers = Packet::ack(1, 2).encode();
+        vers[2] = 9;
+        assert!(Packet::decode(&vers).is_err());
+        let mut kind = Packet::ack(1, 2).encode();
+        kind[3] = 77;
+        assert!(Packet::decode(&kind).is_err());
+        let mut truncated = Packet { kind: Kind::Data, session: 1, seq: 1, arg: 0, payload: vec![1, 2, 3] }.encode();
+        truncated.pop();
+        assert!(Packet::decode(&truncated).is_err());
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        crate::proptest::check("gmp wire roundtrip", 50, |rng| {
+            let p = Packet {
+                kind: *rng.pick(&[Kind::Data, Kind::Ack, Kind::Frag]),
+                session: rng.next_u64() as u32,
+                seq: rng.next_u64() as u32,
+                arg: rng.next_u64() as u32,
+                payload: (0..rng.gen_range(600)).map(|_| rng.next_u64() as u8).collect(),
+            };
+            let back = Packet::decode(&p.encode()).map_err(|e| e.to_string())?;
+            if back == p {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,410 @@
+//! HDFS: namenode metadata, rack-aware replica placement, pipelined
+//! replicated writes, locality-aware reads (Hadoop 0.18 semantics).
+//!
+//! Placement policy (0.18): first replica on the writer, second on a
+//! random node in a *different rack*, third in the same rack as the
+//! second. In the OCT every rack is its own site, so replicas 2 and 3 of
+//! every block cross the WAN over TCP during the write pipeline — the
+//! dominant term in Table 2's 3-replica wide-area penalty.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::net::{FlowNet, NodeId, Topology};
+use crate::sim::Engine;
+use crate::transport::{self, Protocol};
+use crate::util::Rng;
+
+/// Identifies an HDFS block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u64);
+
+#[derive(Debug, Clone)]
+pub struct HdfsConfig {
+    /// Block size in bytes (0.18 default: 64 MB).
+    pub block_size: u64,
+    pub replication: usize,
+}
+
+impl Default for HdfsConfig {
+    fn default() -> Self {
+        HdfsConfig { block_size: 64 * 1024 * 1024, replication: 3 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BlockMeta {
+    pub id: BlockId,
+    pub bytes: u64,
+    pub replicas: Vec<NodeId>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct FileMeta {
+    pub blocks: Vec<BlockId>,
+}
+
+/// Namenode: metadata + placement. Data-plane timing flows through the
+/// fluid network via [`write_block`] / read helpers.
+pub struct Namenode {
+    pub cfg: HdfsConfig,
+    topo: Rc<Topology>,
+    files: HashMap<String, FileMeta>,
+    blocks: HashMap<BlockId, BlockMeta>,
+    next_block: u64,
+    rng: Rng,
+    /// Bytes stored per node (balancer pressure + test invariants).
+    usage: HashMap<NodeId, u64>,
+    /// Datanode membership: placement only considers these nodes (an HDFS
+    /// deployment spans the *cluster it is installed on*, not the whole
+    /// testbed — Table 2's "local" setup is a single-site HDFS).
+    members: Vec<NodeId>,
+}
+
+impl Namenode {
+    pub fn new(topo: Rc<Topology>, cfg: HdfsConfig, seed: u64) -> Self {
+        let members = topo.node_ids();
+        Namenode {
+            cfg,
+            topo,
+            files: HashMap::new(),
+            blocks: HashMap::new(),
+            next_block: 0,
+            rng: Rng::new(seed),
+            usage: HashMap::new(),
+            members,
+        }
+    }
+
+    /// An HDFS whose datanodes are exactly `members`.
+    pub fn with_members(topo: Rc<Topology>, cfg: HdfsConfig, seed: u64, members: Vec<NodeId>) -> Self {
+        assert!(!members.is_empty());
+        let mut nn = Self::new(topo, cfg, seed);
+        nn.members = members;
+        nn
+    }
+
+    /// Choose replica targets for a block written from `writer`
+    /// (0.18 policy; degrades gracefully on single-rack topologies).
+    pub fn place_replicas(&mut self, writer: NodeId) -> Vec<NodeId> {
+        let mut out = vec![writer];
+        if self.cfg.replication == 1 {
+            return out;
+        }
+        let all = self.members.clone();
+        // Second replica: random node on a different rack.
+        let remote: Vec<NodeId> =
+            all.iter().copied().filter(|&n| !self.topo.same_rack(n, writer)).collect();
+        if let Some(&r2) = pick(&mut self.rng, &remote) {
+            out.push(r2);
+            if self.cfg.replication >= 3 {
+                // Third: same rack as the second, different node.
+                let peers: Vec<NodeId> = all
+                    .iter()
+                    .copied()
+                    .filter(|&n| self.topo.same_rack(n, r2) && n != r2 && n != writer)
+                    .collect();
+                if let Some(&r3) = pick(&mut self.rng, &peers) {
+                    out.push(r3);
+                }
+            }
+        }
+        // Fill any shortfall (single-rack clusters) with *random* distinct
+        // members — deterministic fill would hotspot the first datanodes
+        // with every block's fallback replicas.
+        let mut candidates: Vec<NodeId> =
+            all.iter().copied().filter(|n| !out.contains(n)).collect();
+        while out.len() < self.cfg.replication && !candidates.is_empty() {
+            let i = self.rng.gen_range(candidates.len() as u64) as usize;
+            out.push(candidates.swap_remove(i));
+        }
+        out
+    }
+
+    /// Register a file of `bytes` written from `writer`; returns its
+    /// blocks (metadata only — pair with [`write_block`] for timing).
+    pub fn create_file(&mut self, name: &str, bytes: u64, writer: NodeId) -> Vec<BlockMeta> {
+        assert!(!self.files.contains_key(name), "file exists: {name}");
+        let nblocks = bytes.div_ceil(self.cfg.block_size).max(1);
+        let mut metas = Vec::new();
+        let mut ids = Vec::new();
+        for i in 0..nblocks {
+            let id = BlockId(self.next_block);
+            self.next_block += 1;
+            let sz = if i == nblocks - 1 { bytes - (nblocks - 1) * self.cfg.block_size } else { self.cfg.block_size };
+            let replicas = self.place_replicas(writer);
+            for &r in &replicas {
+                *self.usage.entry(r).or_insert(0) += sz;
+            }
+            let meta = BlockMeta { id, bytes: sz, replicas };
+            self.blocks.insert(id, meta.clone());
+            metas.push(meta);
+            ids.push(id);
+        }
+        self.files.insert(name.to_string(), FileMeta { blocks: ids });
+        metas
+    }
+
+    /// Register a pre-distributed file: one block per (node, bytes) pair,
+    /// single local replica (how MalGen-generated shards enter HDFS-land
+    /// before a job; also used to model Sector-imported data).
+    pub fn register_local_shards(&mut self, name: &str, shards: &[(NodeId, u64)]) -> Vec<BlockMeta> {
+        assert!(!self.files.contains_key(name), "file exists: {name}");
+        let mut metas = Vec::new();
+        let mut ids = Vec::new();
+        for &(node, bytes) in shards {
+            let mut remaining = bytes;
+            while remaining > 0 {
+                let sz = remaining.min(self.cfg.block_size);
+                remaining -= sz;
+                let id = BlockId(self.next_block);
+                self.next_block += 1;
+                *self.usage.entry(node).or_insert(0) += sz;
+                let meta = BlockMeta { id, bytes: sz, replicas: vec![node] };
+                self.blocks.insert(id, meta.clone());
+                metas.push(meta);
+                ids.push(id);
+            }
+        }
+        self.files.insert(name.to_string(), FileMeta { blocks: ids });
+        metas
+    }
+
+    pub fn file_blocks(&self, name: &str) -> Option<Vec<BlockMeta>> {
+        self.files
+            .get(name)
+            .map(|f| f.blocks.iter().map(|b| self.blocks[b].clone()).collect())
+    }
+
+    pub fn block(&self, id: BlockId) -> &BlockMeta {
+        &self.blocks[&id]
+    }
+
+    /// Closest replica to `reader` (node > rack > site > remote).
+    pub fn choose_read_replica(&self, id: BlockId, reader: NodeId) -> NodeId {
+        let b = &self.blocks[&id];
+        *b.replicas
+            .iter()
+            .min_by_key(|&&r| self.topo.distance(reader, r))
+            .expect("block with no replicas")
+    }
+
+    pub fn node_usage(&self, n: NodeId) -> u64 {
+        self.usage.get(&n).copied().unwrap_or(0)
+    }
+}
+
+fn pick<'a>(rng: &mut Rng, xs: &'a [NodeId]) -> Option<&'a NodeId> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(&xs[rng.gen_range(xs.len() as u64) as usize])
+    }
+}
+
+/// Timed pipelined write of one block from `writer` to `replicas`:
+/// a local disk write plus chained network hops (writer→r2→r3 over
+/// `proto`), all concurrent (the pipeline streams packets), done when the
+/// slowest leg lands.
+#[allow(clippy::too_many_arguments)]
+pub fn write_block<F: FnOnce(&mut Engine) + 'static>(
+    net: &Rc<RefCell<FlowNet>>,
+    topo: &Rc<Topology>,
+    eng: &mut Engine,
+    replicas: &[NodeId],
+    bytes: u64,
+    proto: &Protocol,
+    done: F,
+) {
+    assert!(!replicas.is_empty());
+    // Legs: one disk write per replica + one network hop per pipeline edge.
+    let legs = 2 * replicas.len() - 1;
+    let remaining = Rc::new(RefCell::new(legs));
+    // Completion joiner.
+    let done_cell = Rc::new(RefCell::new(Some(done)));
+    let arm = move |remaining: &Rc<RefCell<usize>>, done_cell: &Rc<RefCell<Option<F>>>| {
+        let remaining = remaining.clone();
+        let done_cell = done_cell.clone();
+        move |eng: &mut Engine| {
+            let mut r = remaining.borrow_mut();
+            *r -= 1;
+            if *r == 0 {
+                if let Some(d) = done_cell.borrow_mut().take() {
+                    d(eng);
+                }
+            }
+        }
+    };
+    // Disk write on every replica.
+    for &r in replicas {
+        transport::disk_write(net, topo, eng, r, bytes as f64, arm(&remaining, &done_cell));
+    }
+    // Network hops along the pipeline chain.
+    for w in replicas.windows(2) {
+        transport::send(net, topo, eng, w[0], w[1], bytes as f64, proto, arm(&remaining, &done_cell));
+    }
+}
+
+/// Timed read of one block at `reader`: local disk read if a replica is
+/// local, otherwise remote disk read + network transfer.
+pub fn read_block<F: FnOnce(&mut Engine) + 'static>(
+    net: &Rc<RefCell<FlowNet>>,
+    topo: &Rc<Topology>,
+    eng: &mut Engine,
+    source: NodeId,
+    reader: NodeId,
+    bytes: u64,
+    proto: &Protocol,
+    done: F,
+) {
+    if source == reader {
+        transport::disk_read(net, topo, eng, reader, bytes as f64, done);
+    } else {
+        // Remote: disk read at source, then stream over the network.
+        let net2 = net.clone();
+        let topo2 = topo.clone();
+        let proto = proto.clone();
+        transport::disk_read(net, topo, eng, source, bytes as f64, move |eng| {
+            transport::send(&net2, &topo2, eng, source, reader, bytes as f64, &proto, done);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn topo() -> Rc<Topology> {
+        Rc::new(Topology::oct_2009())
+    }
+
+    fn nn(topo: &Rc<Topology>, repl: usize) -> Namenode {
+        Namenode::new(topo.clone(), HdfsConfig { replication: repl, ..Default::default() }, 1)
+    }
+
+    #[test]
+    fn placement_policy_invariants() {
+        let topo = topo();
+        let mut nn = nn(&topo, 3);
+        crate::proptest::check("hdfs placement invariants", 50, |rng| {
+            let writer = NodeId(rng.gen_range(128) as usize);
+            let reps = nn.place_replicas(writer);
+            if reps.len() != 3 {
+                return Err(format!("wanted 3 replicas, got {}", reps.len()));
+            }
+            if reps[0] != writer {
+                return Err("first replica not writer-local".into());
+            }
+            let mut uniq = reps.clone();
+            uniq.sort();
+            uniq.dedup();
+            if uniq.len() != reps.len() {
+                return Err("duplicate replica nodes".into());
+            }
+            if topo.same_rack(reps[0], reps[1]) {
+                return Err("second replica in writer's rack".into());
+            }
+            if !topo.same_rack(reps[1], reps[2]) {
+                return Err("third replica not in second's rack".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_replication_is_local_only() {
+        let topo = topo();
+        let mut nn = nn(&topo, 1);
+        let reps = nn.place_replicas(NodeId(5));
+        assert_eq!(reps, vec![NodeId(5)]);
+    }
+
+    #[test]
+    fn file_blocks_and_sizes() {
+        let topo = topo();
+        let mut nn = nn(&topo, 3);
+        let blocks = nn.create_file("f", 150 * 1024 * 1024, NodeId(0));
+        assert_eq!(blocks.len(), 3); // 64 + 64 + 22 MB
+        assert_eq!(blocks[0].bytes, 64 * 1024 * 1024);
+        assert_eq!(blocks[2].bytes, 22 * 1024 * 1024);
+        let listed = nn.file_blocks("f").unwrap();
+        assert_eq!(listed.len(), 3);
+        assert!(nn.node_usage(NodeId(0)) >= 150 * 1024 * 1024);
+    }
+
+    #[test]
+    fn read_prefers_closest_replica() {
+        let topo = topo();
+        let mut nn = nn(&topo, 3);
+        let blocks = nn.create_file("f", 1024, NodeId(0));
+        let b = blocks[0].id;
+        // The writer reads locally.
+        assert_eq!(nn.choose_read_replica(b, NodeId(0)), NodeId(0));
+        // A rack-mate of the writer prefers the writer's copy.
+        let r = nn.choose_read_replica(b, NodeId(1));
+        assert!(topo.same_rack(r, NodeId(1)));
+    }
+
+    #[test]
+    fn local_shards_register_one_replica() {
+        let topo = topo();
+        let mut nn = nn(&topo, 3);
+        let shards: Vec<(NodeId, u64)> = (0..4).map(|i| (NodeId(i), 100 * 1024 * 1024)).collect();
+        let blocks = nn.register_local_shards("data", &shards);
+        assert_eq!(blocks.len(), 8); // 100 MB = 2 blocks each
+        for b in &blocks {
+            assert_eq!(b.replicas.len(), 1);
+        }
+    }
+
+    #[test]
+    fn pipelined_write_crosses_wan_once_per_hop() {
+        let topo = topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = crate::sim::Engine::new();
+        let mut nn = nn(&topo, 3);
+        let writer = NodeId(0);
+        let reps = nn.place_replicas(writer);
+        let done_at = Rc::new(RefCell::new(0.0));
+        let d = done_at.clone();
+        write_block(&net, &topo, &mut eng, &reps, 64 * 1024 * 1024, &Protocol::tcp(), move |e| {
+            *d.borrow_mut() = e.now();
+        });
+        eng.run();
+        let t = *done_at.borrow();
+        // Lower bound: disk write of 64 MiB at 65 MB/s ≈ 1.03 s. The WAN
+        // TCP hop (window-limited) dominates: ≥ 3 s.
+        assert!(t > 3.0, "pipeline write too fast: {t}");
+        // And both WAN directions saw traffic only for inter-site hops.
+        assert_eq!(net.borrow().completions(), 5); // 3 disks + 2 hops
+    }
+
+    #[test]
+    fn local_vs_remote_read_times() {
+        let topo = topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = crate::sim::Engine::new();
+        let t_local = Rc::new(RefCell::new(0.0));
+        let d = t_local.clone();
+        read_block(&net, &topo, &mut eng, NodeId(0), NodeId(0), 65_000_000, &Protocol::tcp(), move |e| {
+            *d.borrow_mut() = e.now();
+        });
+        eng.run();
+        let local = *t_local.borrow();
+        assert!((local - 1.0).abs() < 0.05, "local read {local}");
+        // Cross-site read pays disk + WAN TCP.
+        let net2 = FlowNet::new(&topo);
+        let mut eng2 = crate::sim::Engine::new();
+        let t_remote = Rc::new(RefCell::new(0.0));
+        let d2 = t_remote.clone();
+        let far = topo.racks[3].nodes[0];
+        read_block(&net2, &topo, &mut eng2, far, NodeId(0), 65_000_000, &Protocol::tcp(), move |e| {
+            *d2.borrow_mut() = e.now();
+        });
+        eng2.run();
+        assert!(*t_remote.borrow() > 3.0 * local, "remote {} local {local}", t_remote.borrow());
+    }
+}

@@ -1,0 +1,657 @@
+//! The MapReduce engine (JobTracker semantics, Hadoop 0.18).
+//!
+//! Two faces, one dataflow:
+//!
+//! - [`MapReduceEngine::simulate`] runs a job's *timing* on the
+//!   discrete-event substrate at paper scale: locality-aware map
+//!   scheduling onto per-node task slots, input reads from the closest
+//!   HDFS replica, map CPU + local spill, an all-to-all shuffle over TCP
+//!   with bounded parallel copies, merge passes, reduce CPU, and
+//!   replication-pipelined output writes.
+//! - [`execute_malstone`] runs the *actual computation* with the same
+//!   dataflow decomposition (hash-partition by entity → reduce-side join
+//!   and mark → per-site aggregation) on real records in memory; its
+//!   result must equal the single-machine oracle bit-for-bit (tested).
+//!
+//! MalStone = two chained jobs ([`malstone_jobs`]): job 1 joins visits
+//! with compromises keyed by entity and writes marked tuples to HDFS
+//! (replicated — the term that separates Table 2's 3-replica and
+//! 1-replica rows); job 2 aggregates per (site, week) with in-mapper
+//! combining, so its shuffle is negligible.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::malstone::join::{bucketize, compromise_table, JoinedRecord};
+use crate::malstone::oracle::MalstoneResult;
+use crate::malstone::record::{Record, RECORD_BYTES};
+use crate::net::{Cluster, NodeId};
+use crate::sim::resources::CpuPool;
+use crate::sim::Engine;
+use crate::transport::{self, Protocol};
+
+use super::hdfs::{self, Namenode};
+use super::params::FrameworkParams;
+
+/// One input block: location, bytes, records.
+#[derive(Debug, Clone, Copy)]
+pub struct InputBlock {
+    pub node: NodeId,
+    pub bytes: u64,
+    pub records: u64,
+}
+
+/// A fully-resolved job description for the timing engine.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    /// TaskTracker nodes participating in the job.
+    pub nodes: Vec<NodeId>,
+    pub input: Vec<InputBlock>,
+    pub map_cpu_per_record: f64,
+    pub reduce_cpu_per_record: f64,
+    pub task_overhead: f64,
+    /// Bytes per input record surviving into the shuffle.
+    pub intermediate_bytes_per_record: f64,
+    /// Bytes per input record written to HDFS as job output.
+    pub output_bytes_per_record: f64,
+    pub output_replication: usize,
+    pub protocol: Protocol,
+    pub parallel_copies: usize,
+    pub merge_passes: f64,
+    pub map_slots_per_node: usize,
+    pub reduce_slots_per_node: usize,
+    pub num_reducers: usize,
+}
+
+/// Timing report for one simulated job.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub name: String,
+    pub makespan: f64,
+    pub map_phase: f64,
+    pub shuffle_reduce_phase: f64,
+    pub maps: usize,
+    pub reduces: usize,
+    pub shuffle_bytes: f64,
+    pub output_bytes: f64,
+    /// Where the output landed (primary replicas): feeds chained jobs.
+    pub output: Vec<InputBlock>,
+}
+
+struct MrState {
+    cluster: Cluster,
+    nn: Rc<RefCell<Namenode>>,
+    spec: JobSpec,
+    pending_maps: Vec<InputBlock>,
+    running_maps: usize,
+    map_slots_free: HashMap<NodeId, usize>,
+    /// Map output bytes and records accumulated per tasktracker node.
+    map_out: HashMap<NodeId, (f64, f64)>,
+    maps_done: usize,
+    maps_total: usize,
+    map_phase_end: f64,
+    reducers_done: usize,
+    start: f64,
+    report_out: Vec<InputBlock>,
+    shuffle_bytes: f64,
+    output_bytes: f64,
+    done_cb: Option<Box<dyn FnOnce(&mut Engine, JobReport)>>,
+}
+
+/// The timing engine.
+pub struct MapReduceEngine;
+
+impl MapReduceEngine {
+    /// Run a job on the event engine; `done` receives the report.
+    pub fn simulate<F: FnOnce(&mut Engine, JobReport) + 'static>(
+        cluster: &Cluster,
+        nn: &Rc<RefCell<Namenode>>,
+        eng: &mut Engine,
+        spec: JobSpec,
+        done: F,
+    ) {
+        assert!(!spec.nodes.is_empty() && !spec.input.is_empty());
+        assert!(spec.num_reducers > 0);
+        let maps_total = spec.input.len();
+        let map_slots_free =
+            spec.nodes.iter().map(|&n| (n, spec.map_slots_per_node)).collect();
+        let st = Rc::new(RefCell::new(MrState {
+            cluster: cluster.clone(),
+            nn: nn.clone(),
+            pending_maps: spec.input.clone(),
+            running_maps: 0,
+            map_slots_free,
+            map_out: HashMap::new(),
+            maps_done: 0,
+            maps_total,
+            map_phase_end: 0.0,
+            reducers_done: 0,
+            start: eng.now(),
+            report_out: Vec::new(),
+            shuffle_bytes: 0.0,
+            output_bytes: 0.0,
+            done_cb: Some(Box::new(done)),
+            spec,
+        }));
+        Self::fill_map_slots(&st, eng);
+    }
+
+    /// Locality-aware list scheduling: for every node with a free slot,
+    /// prefer a pending block hosted on that node, then same-site, then
+    /// anything (remote read).
+    fn fill_map_slots(st: &Rc<RefCell<MrState>>, eng: &mut Engine) {
+        loop {
+            let task: Option<(NodeId, InputBlock)> = {
+                let mut s = st.borrow_mut();
+                if s.pending_maps.is_empty() {
+                    None
+                } else {
+                    let topo = s.cluster.topo.clone();
+                    let mut found = None;
+                    let nodes: Vec<NodeId> = s.spec.nodes.clone();
+                    'outer: for &n in &nodes {
+                        if s.map_slots_free[&n] == 0 {
+                            continue;
+                        }
+                        // Best pending block for this node.
+                        let mut best: Option<(usize, u32)> = None;
+                        for (i, b) in s.pending_maps.iter().enumerate() {
+                            let d = topo.distance(n, b.node);
+                            if best.map_or(true, |(_, bd)| d < bd) {
+                                best = Some((i, d));
+                            }
+                            if d == 0 {
+                                break;
+                            }
+                        }
+                        if let Some((i, _)) = best {
+                            let blk = s.pending_maps.swap_remove(i);
+                            *s.map_slots_free.get_mut(&n).unwrap() -= 1;
+                            s.running_maps += 1;
+                            found = Some((n, blk));
+                            break 'outer;
+                        }
+                    }
+                    found
+                }
+            };
+            match task {
+                Some((node, blk)) => Self::run_map(st, eng, node, blk),
+                None => break,
+            }
+        }
+    }
+
+    /// One map task: replica read → CPU → local spill → slot release.
+    fn run_map(st: &Rc<RefCell<MrState>>, eng: &mut Engine, node: NodeId, blk: InputBlock) {
+        let (cluster, nn, proto, overhead) = {
+            let s = st.borrow();
+            (s.cluster.clone(), s.nn.clone(), s.spec.protocol.clone(), s.spec.task_overhead)
+        };
+        // Resolve the closest replica through the namenode. Blocks arrive
+        // as InputBlock (node = primary); consult HDFS when present.
+        let source = nn.borrow().closest_source(blk.node, node);
+        let st2 = st.clone();
+        let topo = cluster.topo.clone();
+        let net = cluster.net.clone();
+        eng.schedule_in(overhead, move |eng| {
+            let st3 = st2.clone();
+            hdfs::read_block(&net, &topo, eng, source, node, blk.bytes, &proto, move |eng| {
+                // CPU stage.
+                let (pool, cpu, spill_bytes) = {
+                    let s = st3.borrow();
+                    let cpu = blk.records as f64 * s.spec.map_cpu_per_record;
+                    let spill =
+                        blk.records as f64 * s.spec.intermediate_bytes_per_record;
+                    (s.cluster.pool(node).clone(), cpu, spill)
+                };
+                let st4 = st3.clone();
+                CpuPool::submit(&pool, eng, cpu, move |eng| {
+                    // Local spill of map output.
+                    let (net, topo) = {
+                        let s = st4.borrow();
+                        (s.cluster.net.clone(), s.cluster.topo.clone())
+                    };
+                    let st5 = st4.clone();
+                    transport::disk_write(&net, &topo, eng, node, spill_bytes, move |eng| {
+                        Self::map_finished(&st5, eng, node, blk, spill_bytes);
+                    });
+                });
+            });
+        });
+    }
+
+    fn map_finished(
+        st: &Rc<RefCell<MrState>>,
+        eng: &mut Engine,
+        node: NodeId,
+        blk: InputBlock,
+        out_bytes: f64,
+    ) {
+        let all_done = {
+            let mut s = st.borrow_mut();
+            let e = s.map_out.entry(node).or_insert((0.0, 0.0));
+            e.0 += out_bytes;
+            e.1 += blk.records as f64;
+            s.maps_done += 1;
+            s.running_maps -= 1;
+            *s.map_slots_free.get_mut(&node).unwrap() += 1;
+            if s.maps_done == s.maps_total {
+                s.map_phase_end = eng.now();
+                true
+            } else {
+                false
+            }
+        };
+        Self::fill_map_slots(st, eng);
+        if all_done {
+            Self::start_shuffle(st, eng);
+        }
+    }
+
+    /// Shuffle + reduce. Reducers are placed round-robin over the job's
+    /// nodes; each fetches its partition of every mapper's output with at
+    /// most `parallel_copies` concurrent streams.
+    fn start_shuffle(st: &Rc<RefCell<MrState>>, eng: &mut Engine) {
+        let (reducers, fetch_lists) = {
+            let s = st.borrow();
+            let r = s.spec.num_reducers;
+            let reducers: Vec<NodeId> =
+                (0..r).map(|i| s.spec.nodes[i % s.spec.nodes.len()]).collect();
+            // Each reducer fetches bytes/r from every mapper node.
+            let mut lists: Vec<Vec<(NodeId, f64)>> = vec![Vec::new(); r];
+            for (&m, &(bytes, _records)) in {
+                let mut v: Vec<_> = s.map_out.iter().collect();
+                v.sort_by_key(|(n, _)| n.0);
+                v
+            } {
+                for (ri, list) in lists.iter_mut().enumerate() {
+                    let _ = ri;
+                    list.push((m, bytes / r as f64));
+                }
+            }
+            (reducers, lists)
+        };
+        for (ri, (rnode, fetches)) in reducers.into_iter().zip(fetch_lists).enumerate() {
+            Self::run_reducer(st, eng, ri, rnode, fetches);
+        }
+    }
+
+    fn run_reducer(
+        st: &Rc<RefCell<MrState>>,
+        eng: &mut Engine,
+        _ri: usize,
+        rnode: NodeId,
+        fetches: Vec<(NodeId, f64)>,
+    ) {
+        let queue = Rc::new(RefCell::new(fetches));
+        let inflight = Rc::new(RefCell::new(0usize));
+        let fetched = Rc::new(RefCell::new(0.0f64));
+        let k = st.borrow().spec.parallel_copies.max(1);
+        Self::pump_fetches(st, eng, rnode, queue, inflight, fetched, k);
+    }
+
+    fn pump_fetches(
+        st: &Rc<RefCell<MrState>>,
+        eng: &mut Engine,
+        rnode: NodeId,
+        queue: Rc<RefCell<Vec<(NodeId, f64)>>>,
+        inflight: Rc<RefCell<usize>>,
+        fetched: Rc<RefCell<f64>>,
+        k: usize,
+    ) {
+        loop {
+            let next = {
+                let mut q = queue.borrow_mut();
+                if *inflight.borrow() >= k || q.is_empty() {
+                    None
+                } else {
+                    *inflight.borrow_mut() += 1;
+                    Some(q.pop().unwrap())
+                }
+            };
+            let Some((mnode, bytes)) = next else { break };
+            let (cluster, proto) = {
+                let s = st.borrow();
+                (s.cluster.clone(), s.spec.protocol.clone())
+            };
+            let st2 = st.clone();
+            let queue2 = queue.clone();
+            let inflight2 = inflight.clone();
+            let fetched2 = fetched.clone();
+            let deliver = move |eng: &mut Engine| {
+                *inflight2.borrow_mut() -= 1;
+                *fetched2.borrow_mut() += bytes;
+                st2.borrow_mut().shuffle_bytes += bytes;
+                let done =
+                    queue2.borrow().is_empty() && *inflight2.borrow() == 0;
+                if done {
+                    Self::merge_and_reduce(&st2, eng, rnode, *fetched2.borrow());
+                } else {
+                    Self::pump_fetches(&st2, eng, rnode, queue2, inflight2, fetched2, k);
+                }
+            };
+            if mnode == rnode {
+                // Local partition: already on disk; charge a disk read.
+                transport::disk_read(&cluster.net, &cluster.topo, eng, rnode, bytes, deliver);
+            } else {
+                let net = cluster.net.clone();
+                let topo = cluster.topo.clone();
+                transport::disk_read(&cluster.net, &cluster.topo, eng, mnode, bytes, move |eng| {
+                    transport::send(&net, &topo, eng, mnode, rnode, bytes, &proto, deliver);
+                });
+            }
+        }
+    }
+
+    fn merge_and_reduce(st: &Rc<RefCell<MrState>>, eng: &mut Engine, rnode: NodeId, bytes: f64) {
+        let (cluster, merge_bytes, cpu, out_bytes, out_records, proto, repl) = {
+            let s = st.borrow();
+            let total_recs: f64 = s.map_out.values().map(|&(_, r)| r).sum();
+            let recs = total_recs / s.spec.num_reducers as f64;
+            let merge = 2.0 * s.spec.merge_passes * bytes; // read+write per pass
+            let cpu = recs * s.spec.reduce_cpu_per_record;
+            let out_b = recs * s.spec.output_bytes_per_record;
+            (
+                s.cluster.clone(),
+                merge,
+                cpu,
+                out_b,
+                recs,
+                s.spec.protocol.clone(),
+                s.spec.output_replication,
+            )
+        };
+        let st2 = st.clone();
+        let net = cluster.net.clone();
+        let topo = cluster.topo.clone();
+        let finish_output = move |eng: &mut Engine| {
+            // Replicated output write through HDFS.
+            let st3 = st2.clone();
+            let replicas = st2.borrow().nn.borrow_mut().place_replicas_n(rnode, repl);
+            let net2 = net.clone();
+            let topo2 = topo.clone();
+            hdfs::write_block(&net2, &topo2, eng, &replicas, out_bytes.ceil() as u64, &proto, move |eng| {
+                let mut s = st3.borrow_mut();
+                s.output_bytes += out_bytes;
+                s.report_out.push(InputBlock {
+                    node: rnode,
+                    bytes: out_bytes.ceil() as u64,
+                    records: out_records.ceil() as u64,
+                });
+                s.reducers_done += 1;
+                if s.reducers_done == s.spec.num_reducers {
+                    let report = JobReport {
+                        name: s.spec.name.clone(),
+                        makespan: eng.now() - s.start,
+                        map_phase: s.map_phase_end - s.start,
+                        shuffle_reduce_phase: eng.now() - s.map_phase_end,
+                        maps: s.maps_total,
+                        reduces: s.spec.num_reducers,
+                        shuffle_bytes: s.shuffle_bytes,
+                        output_bytes: s.output_bytes,
+                        output: s.report_out.clone(),
+                    };
+                    let cb = s.done_cb.take().unwrap();
+                    drop(s);
+                    cb(eng, report);
+                }
+            });
+        };
+        // Merge passes on disk, then reduce CPU, then output.
+        let pool = cluster.pool(rnode).clone();
+        let net3 = cluster.net.clone();
+        let topo3 = cluster.topo.clone();
+        transport::disk_write(&net3, &topo3, eng, rnode, merge_bytes, move |eng| {
+            CpuPool::submit(&pool, eng, cpu, finish_output);
+        });
+    }
+}
+
+impl Namenode {
+    /// Closest source for a block whose primary copy is on `primary`
+    /// (simulation-level shortcut: chained jobs pass primaries around
+    /// without registering every intermediate file).
+    pub fn closest_source(&self, primary: NodeId, _reader: NodeId) -> NodeId {
+        primary
+    }
+
+    /// Placement honoring an explicit replication factor.
+    pub fn place_replicas_n(&mut self, writer: NodeId, n: usize) -> Vec<NodeId> {
+        let saved = self.cfg.replication;
+        self.cfg.replication = n;
+        let r = self.place_replicas(writer);
+        self.cfg.replication = saved;
+        r
+    }
+}
+
+/// Build the two chained MalStone jobs for a framework parameterization.
+///
+/// `shards`: per-node input (bytes, records). Returns (job1, job2 builder):
+/// job2's input is job1's output, so it is constructed from job1's report.
+pub fn malstone_jobs(
+    params: &FrameworkParams,
+    nodes: &[NodeId],
+    shards: &[InputBlock],
+    variant_b: bool,
+    block_size: u64,
+) -> (JobSpec, impl Fn(&JobReport) -> JobSpec + use<>) {
+    // Split shards into block-sized map inputs.
+    let mut input = Vec::new();
+    for sh in shards {
+        let mut remaining_b = sh.bytes;
+        let mut remaining_r = sh.records;
+        while remaining_b > 0 {
+            let b = remaining_b.min(block_size);
+            let r = ((b as f64 / sh.bytes as f64) * sh.records as f64).round() as u64;
+            input.push(InputBlock { node: sh.node, bytes: b, records: r.min(remaining_r) });
+            remaining_b -= b;
+            remaining_r = remaining_r.saturating_sub(r);
+        }
+    }
+    let nreduce = nodes.len() * 2;
+    let out_rec_bytes =
+        params.output_bytes_per_record * if variant_b { params.variant_b_emit_factor } else { 1.0 };
+    let job1 = JobSpec {
+        name: format!("malstone-{}-join", if variant_b { "b" } else { "a" }),
+        nodes: nodes.to_vec(),
+        input,
+        map_cpu_per_record: params.map_cpu_per_record,
+        reduce_cpu_per_record: params.reduce_cpu(variant_b),
+        task_overhead: params.task_overhead,
+        intermediate_bytes_per_record: params.intermediate_bytes_per_record(variant_b),
+        output_bytes_per_record: out_rec_bytes,
+        output_replication: params.output_replication,
+        protocol: params.protocol.clone(),
+        parallel_copies: params.parallel_copies,
+        merge_passes: params.merge_passes,
+        map_slots_per_node: 2,
+        reduce_slots_per_node: 2,
+        num_reducers: nreduce,
+    };
+    let params2 = params.clone();
+    let nodes2 = nodes.to_vec();
+    let job2 = move |r1: &JobReport| JobSpec {
+        name: r1.name.replace("join", "aggregate"),
+        nodes: nodes2.clone(),
+        input: r1.output.clone(),
+        map_cpu_per_record: params2.map_cpu_per_record * 0.5,
+        reduce_cpu_per_record: params2.reduce_cpu_per_record * 0.2,
+        task_overhead: params2.task_overhead,
+        // In-mapper combining: intermediate is histogram-sized.
+        intermediate_bytes_per_record: 0.05,
+        output_bytes_per_record: 0.01, // final ratios file is tiny
+        output_replication: params2.output_replication,
+        protocol: params2.protocol.clone(),
+        parallel_copies: params2.parallel_copies,
+        merge_passes: 0.0,
+        map_slots_per_node: 2,
+        reduce_slots_per_node: 2,
+        num_reducers: nodes2.len(),
+    };
+    (job1, job2)
+}
+
+/// Execute MalStone for real with MapReduce dataflow semantics: partition
+/// map output by entity hash, join+mark per reducer, aggregate per site.
+/// Equals the oracle exactly (tested) — this is the correctness face of
+/// the engine.
+pub fn execute_malstone(
+    shards: &[Vec<Record>],
+    num_reducers: usize,
+    num_sites: u32,
+    num_weeks: u32,
+    seconds_per_week: u64,
+) -> MalstoneResult {
+    assert!(num_reducers > 0);
+    // Map phase: emit (entity → record) keyed partitions.
+    let mut partitions: Vec<Vec<Record>> = vec![Vec::new(); num_reducers];
+    for shard in shards {
+        for r in shard {
+            let h = r.entity_id.wrapping_mul(0x9E3779B97F4A7C15) >> 32;
+            partitions[(h % num_reducers as u64) as usize].push(*r);
+        }
+    }
+    // Reduce phase: each reducer holds *all* records of its entities, so
+    // the compromise join is local; aggregate histograms and merge.
+    let mut global = MalstoneResult::zero(num_sites as usize, num_weeks as usize);
+    for part in &partitions {
+        let table = compromise_table(part);
+        let joined: Vec<JoinedRecord> =
+            bucketize(part, &table, num_sites, num_weeks, seconds_per_week);
+        let mut partial = MalstoneResult::zero(num_sites as usize, num_weeks as usize);
+        partial.accumulate(&joined);
+        global.merge(&partial);
+    }
+    global
+}
+
+/// Convenience: per-node shard descriptors for a uniformly distributed
+/// workload of `total_records` across `nodes`.
+pub fn uniform_shards(nodes: &[NodeId], total_records: u64) -> Vec<InputBlock> {
+    let per = total_records.div_ceil(nodes.len() as u64);
+    nodes
+        .iter()
+        .map(|&n| InputBlock { node: n, bytes: per * RECORD_BYTES as u64, records: per })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadoop::hdfs::HdfsConfig;
+    use crate::malstone::malgen::{MalGen, MalGenConfig, SECONDS_PER_WEEK};
+    use crate::malstone::oracle::MalstoneResult;
+    use crate::net::Topology;
+
+    fn small_cluster() -> (Cluster, Rc<RefCell<Namenode>>) {
+        let cluster = Cluster::new(Topology::oct_2009());
+        let nn = Rc::new(RefCell::new(Namenode::new(
+            cluster.topo.clone(),
+            HdfsConfig::default(),
+            7,
+        )));
+        (cluster, nn)
+    }
+
+    fn run_sim(params: &FrameworkParams, nodes_per_site: usize, records: u64, variant_b: bool) -> (f64, JobReport, JobReport) {
+        let (cluster, nn) = small_cluster();
+        let topo = cluster.topo.clone();
+        let mut nodes = Vec::new();
+        for r in 0..4 {
+            for i in 0..nodes_per_site {
+                nodes.push(topo.racks[r].nodes[i]);
+            }
+        }
+        let shards = uniform_shards(&nodes, records);
+        let (job1, job2_of) = malstone_jobs(params, &nodes, &shards, variant_b, 64 * 1024 * 1024);
+        let mut eng = Engine::new();
+        let total = Rc::new(RefCell::new(None::<(f64, JobReport, JobReport)>));
+        let total2 = total.clone();
+        let cluster2 = cluster.clone();
+        let nn2 = nn.clone();
+        MapReduceEngine::simulate(&cluster, &nn, &mut eng, job1, move |eng, r1| {
+            let job2 = job2_of(&r1);
+            let total3 = total2.clone();
+            MapReduceEngine::simulate(&cluster2, &nn2, eng, job2, move |eng, r2| {
+                *total3.borrow_mut() = Some((eng.now(), r1, r2));
+            });
+        });
+        eng.run();
+        let (t, r1, r2) = total.borrow_mut().take().expect("job did not finish");
+        (t, r1, r2)
+    }
+
+    #[test]
+    fn job_completes_and_accounts_phases() {
+        let params = FrameworkParams::hadoop_mapreduce();
+        let (t, r1, r2) = run_sim(&params, 2, 8_000_000, false);
+        assert!(t > 0.0);
+        assert!(r1.map_phase > 0.0);
+        assert!(r1.shuffle_reduce_phase > 0.0);
+        assert!(r1.makespan >= r1.map_phase);
+        assert_eq!(r1.maps, 16); // 100 MB/node = 2 blocks (64+36) × 8 nodes
+        assert!(r1.shuffle_bytes > 0.0);
+        assert!(r2.makespan > 0.0);
+        assert!(r2.makespan < r1.makespan, "aggregate job should be cheap");
+    }
+
+    #[test]
+    fn streams_faster_than_java_mr() {
+        let recs = 20_000_000;
+        let (mr, _, _) = run_sim(&FrameworkParams::hadoop_mapreduce(), 2, recs, false);
+        let (st, _, _) = run_sim(&FrameworkParams::hadoop_streams(), 2, recs, false);
+        assert!(st < mr, "streams {st} !< mapreduce {mr}");
+    }
+
+    #[test]
+    fn variant_b_slower_than_a() {
+        let recs = 20_000_000;
+        let (a, _, _) = run_sim(&FrameworkParams::hadoop_mapreduce(), 2, recs, false);
+        let (b, _, _) = run_sim(&FrameworkParams::hadoop_mapreduce(), 2, recs, true);
+        assert!(b > a, "B {b} !> A {a}");
+    }
+
+    #[test]
+    fn replication_one_faster() {
+        let recs = 20_000_000;
+        let (r3, _, _) = run_sim(&FrameworkParams::hadoop_mapreduce(), 2, recs, false);
+        let (r1, _, _) = run_sim(&FrameworkParams::hadoop_mapreduce_r1(), 2, recs, false);
+        assert!(r1 < r3, "r1 {r1} !< r3 {r3}");
+    }
+
+    #[test]
+    fn execute_matches_oracle() {
+        let g = MalGen::new(MalGenConfig::small(13));
+        let shards: Vec<Vec<Record>> = (0..4).map(|s| g.generate_shard(s, 4, 2_000)).collect();
+        let all: Vec<Record> = shards.iter().flatten().copied().collect();
+        let table = compromise_table(&all);
+        let joined = bucketize(&all, &table, 256, 64, SECONDS_PER_WEEK);
+        let mut oracle = MalstoneResult::zero(256, 64);
+        oracle.accumulate(&joined);
+        for reducers in [1, 3, 8] {
+            let mr = execute_malstone(&shards, reducers, 256, 64, SECONDS_PER_WEEK);
+            assert_eq!(mr, oracle, "mismatch at R={reducers}");
+        }
+    }
+
+    #[test]
+    fn execute_reducer_count_invariant_property() {
+        crate::proptest::check("mapreduce reducer-count invariance", 10, |rng| {
+            let g = MalGen::new(MalGenConfig::small(rng.next_u64()));
+            let shards: Vec<Vec<Record>> =
+                (0..3).map(|s| g.generate_shard(s, 3, 500)).collect();
+            let a = execute_malstone(&shards, 1, 64, 16, SECONDS_PER_WEEK * 4);
+            let r = 2 + rng.gen_range(9) as usize;
+            let b = execute_malstone(&shards, r, 64, 16, SECONDS_PER_WEEK * 4);
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("R={r} changed the result"))
+            }
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! The Hadoop substrate (HDFS + MapReduce + Streaming), version 0.18.3 as
+//! benchmarked in Table 1/2 of the paper.
+//!
+//! Built from scratch against the simulated fabric: [`hdfs`] is the
+//! namenode/datanode layer with rack-aware 3-replica pipeline writes (in
+//! the OCT each rack is a *site*, so replica #2 crosses the WAN — half of
+//! the Table 2 penalty), and [`mapreduce`] is the JobTracker engine with
+//! locality-aware map scheduling, TCP shuffle, merge passes, and
+//! replicated output writes. Hadoop Streaming is the same engine under
+//! different per-record cost parameters ([`params::FrameworkParams`]).
+
+pub mod hdfs;
+pub mod mapreduce;
+pub mod params;
+
+pub use hdfs::{BlockId, HdfsConfig, Namenode};
+pub use mapreduce::{JobReport, JobSpec, MapReduceEngine};
+pub use params::FrameworkParams;

@@ -1,0 +1,163 @@
+//! Framework cost parameters (calibration constants; DESIGN.md §4).
+//!
+//! Everything the simulator charges a framework for is listed here and
+//! overridable, so the Table 1/2 benches can print their parameterization
+//! and ablations can vary one knob at a time. Defaults are calibrated so
+//! the simulated Table 1/2 land in the paper's measured band; the *shape*
+//! (ordering, ratios) is robust to reasonable perturbations — that is
+//! asserted by the benches, not the absolute seconds.
+
+use crate::transport::Protocol;
+
+/// Per-framework cost model for a MalStone-style run.
+#[derive(Debug, Clone)]
+pub struct FrameworkParams {
+    pub name: &'static str,
+    /// CPU seconds charged per input record in the map/UDF stage.
+    pub map_cpu_per_record: f64,
+    /// CPU seconds per intermediate record in the reduce/aggregate stage.
+    pub reduce_cpu_per_record: f64,
+    /// Fixed per-task overhead (JVM start, task setup), seconds.
+    pub task_overhead: f64,
+    /// Intermediate record bytes (entity/site/week/mark tuple on the wire).
+    pub intermediate_record_bytes: f64,
+    /// Fraction of input records that survive into the shuffle.
+    pub shuffle_selectivity: f64,
+    /// Extra disk passes over intermediate data (spill + merge factor).
+    pub merge_passes: f64,
+    /// Bytes per input record written to HDFS/SDFS as job output (the
+    /// naive Java MalStone writes per-visit marked tuples; the streaming
+    /// and Sphere implementations aggregate in the reducer/bucket and
+    /// emit only histogram-sized output).
+    pub output_bytes_per_record: f64,
+    /// Transport used for bulk data movement.
+    pub protocol: Protocol,
+    /// Replication factor for job output files.
+    pub output_replication: usize,
+    /// Concurrent shuffle fetches per reducer (Hadoop's
+    /// `mapred.reduce.parallel.copies`, default 5).
+    pub parallel_copies: usize,
+    /// MalStone-B emits one intermediate tuple per (visit, window) rather
+    /// than per visit; this multiplies intermediate volume and reduce CPU.
+    pub variant_b_emit_factor: f64,
+}
+
+impl FrameworkParams {
+    /// Hadoop 0.18.3 MapReduce with the MalStone job coded in Java.
+    /// Dominated by per-record ser/de + object churn in the 2009 runtime.
+    pub fn hadoop_mapreduce() -> Self {
+        FrameworkParams {
+            name: "hadoop-mapreduce",
+            map_cpu_per_record: 13.0e-6,
+            reduce_cpu_per_record: 9.0e-6,
+            task_overhead: 6.0,
+            intermediate_record_bytes: 110.0, // Writable-serialized tuple
+            shuffle_selectivity: 1.0,         // every visit is joined
+            merge_passes: 1.25,               // spill + multi-pass merge
+            output_bytes_per_record: 20.0,    // per-visit marked tuples
+            protocol: Protocol::tcp(),
+            output_replication: 3,
+            parallel_copies: 5,
+            variant_b_emit_factor: 1.85,
+        }
+    }
+
+    /// Hadoop Streaming with MalStone in Python: line-oriented text
+    /// processing through pipes is *cheaper per record* than the Java
+    /// implementation's Writable churn (the paper's Table 1 shows Streams
+    /// ~5× faster than the Java job), but it still pays HDFS + TCP.
+    pub fn hadoop_streams() -> Self {
+        FrameworkParams {
+            name: "hadoop-streams",
+            map_cpu_per_record: 1.4e-6,
+            reduce_cpu_per_record: 1.2e-6,
+            task_overhead: 4.0,
+            intermediate_record_bytes: 36.0, // tab-separated text line
+            shuffle_selectivity: 1.0,
+            merge_passes: 0.25,
+            output_bytes_per_record: 0.02,   // in-reducer aggregation
+            protocol: Protocol::tcp(),
+            output_replication: 3,
+            parallel_copies: 5,
+            variant_b_emit_factor: 1.7,
+        }
+    }
+
+    /// Hadoop MapReduce with dfs.replication = 1 (Table 2 middle row).
+    pub fn hadoop_mapreduce_r1() -> Self {
+        FrameworkParams {
+            name: "hadoop-mapreduce-r1",
+            output_replication: 1,
+            ..Self::hadoop_mapreduce()
+        }
+    }
+
+    /// Sector/Sphere: native C++ UDFs, UDT transport, single replica,
+    /// stream-overlapped stages. (Consumed by `sector::sphere`, kept here
+    /// so every engine's constants sit side by side.)
+    pub fn sphere() -> Self {
+        FrameworkParams {
+            name: "sector-sphere",
+            map_cpu_per_record: 1.5e-6,
+            reduce_cpu_per_record: 1.2e-6,
+            task_overhead: 0.5,
+            intermediate_record_bytes: 24.0, // packed binary tuple
+            shuffle_selectivity: 1.0,
+            merge_passes: 0.0, // in-memory bucket aggregation
+            output_bytes_per_record: 0.02, // bucket-local histograms
+            protocol: Protocol::udt(),
+            output_replication: 1,
+            parallel_copies: 8,
+            variant_b_emit_factor: 1.3,
+        }
+    }
+
+    /// Intermediate bytes per input record for a MalStone variant.
+    pub fn intermediate_bytes_per_record(&self, variant_b: bool) -> f64 {
+        let f = if variant_b { self.variant_b_emit_factor } else { 1.0 };
+        self.shuffle_selectivity * self.intermediate_record_bytes * f
+    }
+
+    /// CPU seconds per input record in reduce for a variant.
+    pub fn reduce_cpu(&self, variant_b: bool) -> f64 {
+        let f = if variant_b { self.variant_b_emit_factor } else { 1.0 };
+        self.reduce_cpu_per_record * self.shuffle_selectivity * f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_record_cost_ordering_matches_table1() {
+        let mr = FrameworkParams::hadoop_mapreduce();
+        let st = FrameworkParams::hadoop_streams();
+        let sp = FrameworkParams::sphere();
+        // The Java job is by far the most expensive per record; the
+        // python-streaming and native-Sphere costs are comparable (Sphere
+        // wins on transport/replication/overlap, not raw per-record CPU).
+        assert!(mr.map_cpu_per_record > 5.0 * st.map_cpu_per_record);
+        assert!(mr.map_cpu_per_record > 5.0 * sp.map_cpu_per_record);
+    }
+
+    #[test]
+    fn variant_b_increases_volume() {
+        let p = FrameworkParams::hadoop_mapreduce();
+        assert!(p.intermediate_bytes_per_record(true) > p.intermediate_bytes_per_record(false));
+        assert!(p.reduce_cpu(true) > p.reduce_cpu(false));
+    }
+
+    #[test]
+    fn replication_variants() {
+        assert_eq!(FrameworkParams::hadoop_mapreduce().output_replication, 3);
+        assert_eq!(FrameworkParams::hadoop_mapreduce_r1().output_replication, 1);
+        assert_eq!(FrameworkParams::sphere().output_replication, 1);
+    }
+
+    #[test]
+    fn protocols_match_paper() {
+        assert_eq!(FrameworkParams::hadoop_mapreduce().protocol.name(), "tcp");
+        assert_eq!(FrameworkParams::sphere().protocol.name(), "udt");
+    }
+}

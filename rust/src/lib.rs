@@ -1,0 +1,37 @@
+//! # OCT — Open Cloud Testbed reproduction
+//!
+//! A reproduction of *"The Open Cloud Testbed: A Wide Area Testbed for Cloud
+//! Computing Utilizing High Performance Network Services"* (Grossman, Gu,
+//! Sabala, Bennett, Seidman, Mambretti; 2009) as a three-layer Rust + JAX +
+//! Pallas system. See `DESIGN.md` for the full inventory and the
+//! paper-hardware → simulation substitution table.
+//!
+//! Layer map:
+//! - **L3 (this crate)** — the testbed: discrete-event simulator ([`sim`]),
+//!   wide-area topology and max-min fair flow network ([`net`]), TCP/UDT
+//!   transport models ([`transport`]), the real GMP messaging protocol and
+//!   RPC layer over UDP ([`gmp`]), the Sector/Sphere and Hadoop substrates
+//!   ([`sector`], [`hadoop`]), the MalStone benchmark suite ([`malstone`]),
+//!   the monitoring/visualization system ([`monitor`]), and the experiment
+//!   coordinator ([`coordinator`]).
+//! - **L2/L1 (python/, build-time only)** — the MalStone aggregation
+//!   dataflow (JAX) and the one-hot-matmul histogram kernel (Pallas),
+//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT.
+
+pub mod coordinator;
+pub mod gmp;
+pub mod hadoop;
+pub mod malstone;
+pub mod monitor;
+pub mod net;
+pub mod proptest;
+pub mod runtime;
+pub mod sector;
+pub mod sim;
+pub mod transport;
+pub mod util;
+
+/// Crate version string (matches Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,122 @@
+//! `oct` — the Open Cloud Testbed CLI (leader entrypoint).
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//!
+//! ```text
+//! oct topology              # Figure 2: the 4-site testbed description
+//! oct table1 [scale]        # Table 1: MalStone-A/B × three frameworks
+//! oct table2 [scale]        # Table 2: local vs distributed penalty
+//! oct monitor [secs]        # Figure 3: live ANSI heatmap of a run
+//! oct provision             # §2.2: growth-plan provisioning demo
+//! oct kernel-check          # load AOT artifacts, verify vs oracle
+//! oct version
+//! ```
+
+use oct::coordinator::experiment::{format_table1, format_table2, run_table1, run_table2};
+use oct::coordinator::Provisioner;
+use oct::net::Topology;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "topology" => print!("{}", Topology::oct_2009().describe()),
+        "table1" => {
+            let scale = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+            println!("Table 1 at scale 1/{scale} (10B records ÷ {scale}; shape-preserving)");
+            print!("{}", format_table1(&run_table1(scale)));
+        }
+        "table2" => {
+            let scale = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+            println!("Table 2 at scale 1/{scale} (15B records ÷ {scale}; shape-preserving)");
+            print!("{}", format_table2(&run_table2(scale)));
+        }
+        "monitor" => {
+            let secs: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30.0);
+            oct_monitor_demo(secs);
+        }
+        "provision" => {
+            let mut p = Provisioner::oct_2009();
+            println!("before expansion:\n{}", p.topology().describe());
+            p.expand_2009_plan();
+            println!("after §2.2 expansion plan:\n{}", p.topology().describe());
+            println!("provisioning log: {} ops", p.log().len());
+        }
+        "kernel-check" => match oct::runtime::MalstoneKernels::load(&oct::runtime::default_artifact_dir()) {
+            Ok(k) => {
+                println!("PJRT platform: {}", k.platform());
+                println!(
+                    "artifacts ok: hist batch {} → planes {}×{}",
+                    k.meta.batch, k.meta.num_sites, k.meta.num_weeks
+                );
+            }
+            Err(e) => {
+                eprintln!("artifact load failed: {e:#}");
+                std::process::exit(1);
+            }
+        },
+        "version" => println!("oct {}", oct::version()),
+        _ => {
+            eprintln!(
+                "usage: oct <topology|table1 [scale]|table2 [scale]|monitor [secs]|provision|kernel-check|version>"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+/// A compressed Figure-3 demo: run a Sphere scan on the 2009 testbed and
+/// print heatmap frames as simulated time advances.
+fn oct_monitor_demo(secs: f64) {
+    use oct::hadoop::FrameworkParams;
+    use oct::monitor::heatmap::Metric;
+    use oct::monitor::{render_heatmap, Monitor};
+    use oct::net::Cluster;
+    use oct::sector::master::{SectorMaster, Segment};
+    use oct::sector::SphereEngine;
+    use oct::sim::Engine;
+
+    let cluster = Cluster::new(Topology::oct_2009());
+    let mut master = SectorMaster::new(cluster.topo.clone());
+    let nodes: Vec<_> = cluster.topo.node_ids();
+    let seg_records: u64 = 671_088; // 64 MB of 100-byte records
+    let segs: Vec<Segment> = nodes
+        .iter()
+        .flat_map(|&n| {
+            (0..2).map(move |_| Segment { node: n, bytes: seg_records * 100, records: seg_records })
+        })
+        .collect();
+    master.register_file("demo", segs);
+    let mut eng = Engine::new();
+    let mon = Monitor::new(cluster.topo.clone(), 1.0);
+    Monitor::install(&mon, &mut eng, &cluster.net, cluster.pools.clone());
+    let done = std::rc::Rc::new(std::cell::RefCell::new(false));
+    let d = done.clone();
+    SphereEngine::simulate(
+        &cluster,
+        &master,
+        &mut eng,
+        "demo",
+        &nodes,
+        FrameworkParams::sphere(),
+        false,
+        move |_, r| {
+            println!("sphere run finished: {:.1}s simulated", r.makespan);
+            *d.borrow_mut() = true;
+        },
+    );
+    let mut t = 0.0;
+    while !*done.borrow() && t < secs {
+        t += 5.0;
+        eng.run_until(t);
+        println!("— t = {t:.0}s —");
+        print!("{}", render_heatmap(&mon.borrow(), Metric::Network, true));
+    }
+    mon.borrow_mut().disable();
+    eng.run();
+    let m = mon.borrow();
+    println!("WAN link throughput (latest):");
+    for (label, bps) in m.wan_throughput() {
+        println!("  {label:<30} {}", oct::util::units::fmt_rate(bps * 8.0));
+    }
+}

@@ -1,0 +1,200 @@
+//! MalGen: the MalStone data generator (paper §5, code.google.com/p/malgen).
+//!
+//! Generates visit logs with the statistical structure the benchmark
+//! needs: site popularity follows a power law (a few "hot" sites draw most
+//! traffic), a small fraction of sites are *compromising*, and a visit to
+//! a compromising site infects the visiting entity with some probability —
+//! the visit that infects carries `compromise_flag = 1` (the drive-by
+//! exploit moment). Generation is **sharded and deterministic**: shard `k`
+//! of `n` is reproducible in isolation from the seed, which is how the
+//! real MalGen generated 500M records on each of 20 nodes concurrently.
+
+use crate::util::rng::{Rng, Zipf};
+
+use super::record::Record;
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct MalGenConfig {
+    pub seed: u64,
+    pub num_sites: u32,
+    pub num_entities: u64,
+    /// Modeled time range, in weeks (Table 1 runs use ~1 year of logs).
+    pub weeks: u32,
+    /// Zipf exponent for site popularity.
+    pub zipf_s: f64,
+    /// Fraction of sites that can compromise visitors.
+    pub bad_site_frac: f64,
+    /// Probability a visit to a bad site compromises the entity.
+    pub infect_prob: f64,
+}
+
+impl Default for MalGenConfig {
+    fn default() -> Self {
+        MalGenConfig {
+            seed: DEFAULT_SEED,
+            num_sites: 256,
+            num_entities: 10_000,
+            weeks: 52,
+            zipf_s: 1.1,
+            bad_site_frac: 0.02,
+            infect_prob: 0.2,
+        }
+    }
+}
+
+/// Default generator seed ("OCT" on a hex keypad).
+const DEFAULT_SEED: u64 = 0x0C7_0C7;
+
+/// Sharded deterministic generator.
+#[derive(Debug, Clone)]
+pub struct MalGen {
+    cfg: MalGenConfig,
+    zipf: Zipf,
+}
+
+pub const SECONDS_PER_WEEK: u64 = 7 * 24 * 3600;
+
+impl MalGen {
+    pub fn new(cfg: MalGenConfig) -> Self {
+        let zipf = Zipf::new(cfg.num_sites as usize, cfg.zipf_s);
+        MalGen { cfg, zipf }
+    }
+
+    pub fn config(&self) -> &MalGenConfig {
+        &self.cfg
+    }
+
+    /// Is `site` one of the compromising sites? Deterministic in the seed.
+    pub fn is_bad_site(&self, site: u32) -> bool {
+        // Hash site id with the seed; compare against the bad fraction.
+        let mut x = (site as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ self.cfg.seed;
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xFF51AFD7ED558CCD);
+        x ^= x >> 33;
+        (x as f64 / u64::MAX as f64) < self.cfg.bad_site_frac
+    }
+
+    /// Generate shard `shard` of `num_shards`, containing `n` records.
+    /// Shards are independent streams: entity ids are partitioned across
+    /// shards so the compromise logic stays self-consistent per shard.
+    pub fn generate_shard(&self, shard: u64, num_shards: u64, n: usize) -> Vec<Record> {
+        assert!(shard < num_shards);
+        let mut rng = Rng::new(self.cfg.seed ^ shard.wrapping_mul(0xA076_1D64_78BD_642F));
+        let mut out = Vec::with_capacity(n);
+        let entities_per_shard = (self.cfg.num_entities / num_shards).max(1);
+        let entity_base = shard * entities_per_shard;
+        let horizon = self.cfg.weeks as u64 * SECONDS_PER_WEEK;
+        for i in 0..n {
+            let entity_id = entity_base + rng.gen_range(entities_per_shard);
+            let site_id = self.zipf.sample(&mut rng) as u32;
+            let timestamp = rng.gen_range(horizon.max(1));
+            let compromise_flag =
+                u8::from(self.is_bad_site(site_id) && rng.chance(self.cfg.infect_prob));
+            out.push(Record {
+                event_id: shard << 40 | i as u64,
+                timestamp,
+                site_id,
+                compromise_flag,
+                entity_id,
+            });
+        }
+        out
+    }
+
+    /// Convenience: all shards concatenated (small scales only).
+    pub fn generate_all(&self, num_shards: u64, per_shard: usize) -> Vec<Record> {
+        (0..num_shards).flat_map(|s| self.generate_shard(s, num_shards, per_shard)).collect()
+    }
+}
+
+impl MalGenConfig {
+    /// Small config for tests/examples: quick but statistically non-trivial.
+    pub fn small(seed: u64) -> Self {
+        MalGenConfig { seed, num_entities: 2_000, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> MalGen {
+        MalGen::new(MalGenConfig::small(7))
+    }
+
+    #[test]
+    fn shards_are_deterministic() {
+        let g = gen();
+        assert_eq!(g.generate_shard(3, 8, 500), g.generate_shard(3, 8, 500));
+    }
+
+    #[test]
+    fn shards_are_distinct() {
+        let g = gen();
+        assert_ne!(g.generate_shard(0, 8, 100), g.generate_shard(1, 8, 100));
+    }
+
+    #[test]
+    fn fields_in_range() {
+        let g = gen();
+        let horizon = g.config().weeks as u64 * SECONDS_PER_WEEK;
+        for r in g.generate_shard(0, 4, 2_000) {
+            assert!(r.site_id < g.config().num_sites);
+            assert!(r.timestamp < horizon);
+            assert!(r.entity_id < g.config().num_entities);
+            assert!(r.compromise_flag <= 1);
+        }
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let g = gen();
+        let rs = g.generate_shard(0, 1, 20_000);
+        let mut counts = vec![0u32; g.config().num_sites as usize];
+        for r in &rs {
+            counts[r.site_id as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let median = {
+            let mut c = counts.clone();
+            c.sort();
+            c[c.len() / 2]
+        };
+        assert!(max > median * 10, "power law missing: max={max} median={median}");
+    }
+
+    #[test]
+    fn compromises_only_on_bad_sites() {
+        let g = gen();
+        for r in g.generate_all(4, 5_000) {
+            if r.compromise_flag == 1 {
+                assert!(g.is_bad_site(r.site_id), "flag on good site {}", r.site_id);
+            }
+        }
+    }
+
+    #[test]
+    fn some_compromises_exist() {
+        let g = gen();
+        let n = g.generate_all(4, 5_000).iter().filter(|r| r.compromise_flag == 1).count();
+        assert!(n > 0, "no compromises generated — benchmark would be vacuous");
+    }
+
+    #[test]
+    fn bad_site_fraction_approx() {
+        let g = MalGen::new(MalGenConfig { num_sites: 10_000, ..MalGenConfig::small(3) });
+        let bad = (0..10_000u32).filter(|&s| g.is_bad_site(s)).count() as f64 / 10_000.0;
+        assert!((bad - 0.02).abs() < 0.01, "bad fraction {bad}");
+    }
+
+    #[test]
+    fn event_ids_unique_across_shards() {
+        let g = gen();
+        let all = g.generate_all(4, 1_000);
+        let mut ids: Vec<u64> = all.iter().map(|r| r.event_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), all.len());
+    }
+}

@@ -1,0 +1,28 @@
+//! The MalStone benchmark suite (paper §5; OCC TR-09-01).
+//!
+//! MalStone is a stylized "drive-by exploit" analytic: log records of
+//! entities visiting sites, where visiting certain sites sometimes
+//! compromises the visitor. For each site (and, in MalStone-B, for each
+//! week) compute the fraction of visits whose entity subsequently becomes
+//! compromised — a computation that is a few lines on one machine but a
+//! demanding shuffle/aggregation at 10⁹–10¹² records on a cloud.
+//!
+//! - [`record`]: the 100-byte record codec
+//!   (`| Event ID | Timestamp | Site ID | Compromise Flag | Entity ID |`).
+//! - [`malgen`]: MalGen, the deterministic sharded data generator.
+//! - [`join`]: the entity-compromise join that tags each visit with its
+//!   `marked` bit — the shuffle-heavy half of the benchmark that the
+//!   distributed engines move over the network.
+//! - [`oracle`]: single-machine ground truth for MalStone-A and B.
+//! - [`scale`]: paper-scale workload descriptors (10 B records / 1 TB …).
+
+pub mod join;
+pub mod malgen;
+pub mod oracle;
+pub mod record;
+pub mod scale;
+
+pub use join::{bucketize, JoinedRecord};
+pub use malgen::{MalGen, MalGenConfig};
+pub use oracle::{malstone_a, malstone_b, MalstoneResult};
+pub use record::{Record, RECORD_BYTES};

@@ -1,0 +1,201 @@
+//! Single-machine MalStone ground truth.
+//!
+//! "This type of computation requires only a few lines of code if the data
+//! is on a single machine" (paper §5) — this module is those few lines.
+//! Every distributed engine and the AOT kernel path are tested against it.
+
+use super::join::JoinedRecord;
+
+/// Dense per-(site, week) count planes plus derived ratios.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MalstoneResult {
+    pub num_sites: usize,
+    pub num_weeks: usize,
+    /// Marked visits per (site, week), row-major `[site][week]`.
+    pub comp: Vec<f64>,
+    /// Total visits per (site, week).
+    pub tot: Vec<f64>,
+}
+
+impl MalstoneResult {
+    pub fn zero(num_sites: usize, num_weeks: usize) -> Self {
+        MalstoneResult {
+            num_sites,
+            num_weeks,
+            comp: vec![0.0; num_sites * num_weeks],
+            tot: vec![0.0; num_sites * num_weeks],
+        }
+    }
+
+    /// Accumulate joined records (the engines call this per partition).
+    pub fn accumulate(&mut self, records: &[JoinedRecord]) {
+        for r in records {
+            if r.site < 0 {
+                continue; // padding
+            }
+            let idx = r.site as usize * self.num_weeks + r.week as usize;
+            self.tot[idx] += 1.0;
+            self.comp[idx] += r.marked as f64;
+        }
+    }
+
+    /// Merge a partial result (cross-worker reduction).
+    pub fn merge(&mut self, other: &MalstoneResult) {
+        assert_eq!((self.num_sites, self.num_weeks), (other.num_sites, other.num_weeks));
+        for (a, b) in self.comp.iter_mut().zip(&other.comp) {
+            *a += b;
+        }
+        for (a, b) in self.tot.iter_mut().zip(&other.tot) {
+            *a += b;
+        }
+    }
+
+    /// MalStone-A: overall ratio per site.
+    pub fn ratio_a(&self) -> Vec<f64> {
+        (0..self.num_sites)
+            .map(|s| {
+                let row = s * self.num_weeks..(s + 1) * self.num_weeks;
+                let c: f64 = self.comp[row.clone()].iter().sum();
+                let t: f64 = self.tot[row].iter().sum();
+                if t > 0.0 {
+                    c / t
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// MalStone-B: cumulative weekly ratio series per site, row-major.
+    pub fn ratio_b(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.num_sites * self.num_weeks];
+        for s in 0..self.num_sites {
+            let (mut cc, mut ct) = (0.0, 0.0);
+            for w in 0..self.num_weeks {
+                let idx = s * self.num_weeks + w;
+                cc += self.comp[idx];
+                ct += self.tot[idx];
+                out[idx] = if ct > 0.0 { cc / ct } else { 0.0 };
+            }
+        }
+        out
+    }
+}
+
+/// MalStone-A over a joined record set.
+pub fn malstone_a(records: &[JoinedRecord], num_sites: usize, num_weeks: usize) -> Vec<f64> {
+    let mut r = MalstoneResult::zero(num_sites, num_weeks);
+    r.accumulate(records);
+    r.ratio_a()
+}
+
+/// MalStone-B over a joined record set.
+pub fn malstone_b(records: &[JoinedRecord], num_sites: usize, num_weeks: usize) -> Vec<f64> {
+    let mut r = MalstoneResult::zero(num_sites, num_weeks);
+    r.accumulate(records);
+    r.ratio_b()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::malstone::join::{bucketize, compromise_table};
+    use crate::malstone::malgen::{MalGen, MalGenConfig, SECONDS_PER_WEEK};
+
+    fn j(site: i32, week: i32, marked: f32) -> JoinedRecord {
+        JoinedRecord { site, week, marked }
+    }
+
+    #[test]
+    fn hand_computed_micro_case() {
+        // Site 0: 4 visits, 2 marked → A ratio 0.5.
+        // Site 1: week0 1/1 marked, week1 0/1 → B = [1.0, 0.5].
+        let rs = vec![
+            j(0, 0, 1.0), j(0, 0, 0.0), j(0, 1, 1.0), j(0, 1, 0.0),
+            j(1, 0, 1.0), j(1, 1, 0.0),
+        ];
+        let a = malstone_a(&rs, 2, 2);
+        assert_eq!(a, vec![0.5, 0.5]);
+        let b = malstone_b(&rs, 2, 2);
+        assert_eq!(b, vec![0.5, 0.5, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn padding_rows_ignored() {
+        let rs = vec![j(-1, 0, 1.0), j(0, 0, 1.0)];
+        let a = malstone_a(&rs, 1, 1);
+        assert_eq!(a, vec![1.0]);
+    }
+
+    #[test]
+    fn empty_input_all_zero() {
+        let a = malstone_a(&[], 4, 4);
+        assert!(a.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn merge_equals_global() {
+        crate::proptest::check("partial merge == global", 30, |rng| {
+            let g = MalGen::new(MalGenConfig::small(rng.next_u64()));
+            let all = g.generate_all(4, 500);
+            let table = compromise_table(&all);
+            let joined = bucketize(&all, &table, 64, 16, SECONDS_PER_WEEK * 4);
+            let mut global = MalstoneResult::zero(64, 16);
+            global.accumulate(&joined);
+            // Split into 3 partitions, accumulate separately, merge.
+            let mut merged = MalstoneResult::zero(64, 16);
+            for chunk in joined.chunks(joined.len().div_ceil(3)) {
+                let mut part = MalstoneResult::zero(64, 16);
+                part.accumulate(chunk);
+                merged.merge(&part);
+            }
+            if merged == global {
+                Ok(())
+            } else {
+                Err("merged partials differ from global".into())
+            }
+        });
+    }
+
+    #[test]
+    fn ratios_bounded_and_final_week_matches_a() {
+        let g = MalGen::new(MalGenConfig::small(11));
+        let all = g.generate_all(2, 2_000);
+        let table = compromise_table(&all);
+        let joined = bucketize(&all, &table, 256, 13, SECONDS_PER_WEEK * 4);
+        let mut r = MalstoneResult::zero(256, 13);
+        r.accumulate(&joined);
+        let a = r.ratio_a();
+        let b = r.ratio_b();
+        for &x in a.iter().chain(b.iter()) {
+            assert!((0.0..=1.0).contains(&x));
+        }
+        for s in 0..256 {
+            let last = b[s * 13 + 12];
+            assert!((last - a[s]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn bad_sites_have_higher_ratio() {
+        // The benchmark's signal: compromising sites should stand out.
+        let g = MalGen::new(MalGenConfig { infect_prob: 0.5, ..MalGenConfig::small(5) });
+        let all = g.generate_all(2, 30_000);
+        let table = compromise_table(&all);
+        let joined = bucketize(&all, &table, 256, 13, SECONDS_PER_WEEK * 4);
+        let a = malstone_a(&joined, 256, 13);
+        let bad_mean = crate::util::stats::mean(
+            &(0..256).filter(|&s| g.is_bad_site(s as u32)).map(|s| a[s]).collect::<Vec<_>>(),
+        );
+        let good: Vec<f64> = (0..256)
+            .filter(|&s| !g.is_bad_site(s as u32))
+            .map(|s| a[s])
+            .filter(|&x| x > 0.0)
+            .collect();
+        let good_mean = crate::util::stats::mean(&good);
+        assert!(
+            bad_mean > good_mean,
+            "bad sites don't stand out: bad={bad_mean:.3} good={good_mean:.3}"
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! The 100-byte MalStone record and its binary codec.
+//!
+//! Paper §5: `| Event ID | Timestamp | Site ID | Compromise Flag |
+//! Entity ID |`, with "10 billion, 100 billion or 1 trillion 100-byte
+//! records (so that there is 1 TB, 10 TB and 100 TB of data in total)".
+//! Fields are little-endian; the remainder of the 100 bytes is padding
+//! (MalGen fills it with a deterministic pattern so files are realistic).
+
+/// Exactly the paper's record size.
+pub const RECORD_BYTES: usize = 100;
+
+const MAGIC: u16 = 0x4D53; // "MS"
+
+/// One visit (or compromise) event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Record {
+    pub event_id: u64,
+    /// Seconds since the epoch of the modeled window.
+    pub timestamp: u64,
+    pub site_id: u32,
+    /// 1 iff this visit is the moment the entity became compromised.
+    pub compromise_flag: u8,
+    pub entity_id: u64,
+}
+
+impl Record {
+    /// Serialize into a 100-byte buffer.
+    pub fn encode(&self) -> [u8; RECORD_BYTES] {
+        let mut b = [0u8; RECORD_BYTES];
+        b[0..2].copy_from_slice(&MAGIC.to_le_bytes());
+        b[2..10].copy_from_slice(&self.event_id.to_le_bytes());
+        b[10..18].copy_from_slice(&self.timestamp.to_le_bytes());
+        b[18..22].copy_from_slice(&self.site_id.to_le_bytes());
+        b[22] = self.compromise_flag;
+        b[23..31].copy_from_slice(&self.entity_id.to_le_bytes());
+        // Deterministic padding derived from the event id (keeps records
+        // incompressible-ish like real logs, and detects torn reads).
+        let mut x = self.event_id.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        for c in b[31..].iter_mut() {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            *c = x as u8;
+        }
+        b
+    }
+
+    /// Parse a 100-byte buffer. Fails on bad magic or flag.
+    pub fn decode(b: &[u8]) -> Result<Record, String> {
+        if b.len() != RECORD_BYTES {
+            return Err(format!("record must be {RECORD_BYTES} bytes, got {}", b.len()));
+        }
+        let magic = u16::from_le_bytes([b[0], b[1]]);
+        if magic != MAGIC {
+            return Err(format!("bad record magic {magic:#x}"));
+        }
+        let flag = b[22];
+        if flag > 1 {
+            return Err(format!("bad compromise flag {flag}"));
+        }
+        Ok(Record {
+            event_id: u64::from_le_bytes(b[2..10].try_into().unwrap()),
+            timestamp: u64::from_le_bytes(b[10..18].try_into().unwrap()),
+            site_id: u32::from_le_bytes(b[18..22].try_into().unwrap()),
+            compromise_flag: flag,
+            entity_id: u64::from_le_bytes(b[23..31].try_into().unwrap()),
+        })
+    }
+
+    /// Encode a batch into a contiguous byte buffer.
+    pub fn encode_batch(records: &[Record]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(records.len() * RECORD_BYTES);
+        for r in records {
+            out.extend_from_slice(&r.encode());
+        }
+        out
+    }
+
+    /// Decode a contiguous buffer of records.
+    pub fn decode_batch(bytes: &[u8]) -> Result<Vec<Record>, String> {
+        if bytes.len() % RECORD_BYTES != 0 {
+            return Err(format!("buffer length {} not a multiple of {RECORD_BYTES}", bytes.len()));
+        }
+        bytes.chunks_exact(RECORD_BYTES).map(Record::decode).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Record {
+        Record { event_id: 42, timestamp: 1_234_567, site_id: 77, compromise_flag: 1, entity_id: 987_654_321 }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let r = sample();
+        let b = r.encode();
+        assert_eq!(b.len(), RECORD_BYTES);
+        assert_eq!(Record::decode(&b).unwrap(), r);
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let rs: Vec<Record> = (0..17)
+            .map(|i| Record {
+                event_id: i,
+                timestamp: i * 3600,
+                site_id: (i % 5) as u32,
+                compromise_flag: (i % 2) as u8,
+                entity_id: i * 7,
+            })
+            .collect();
+        let buf = Record::encode_batch(&rs);
+        assert_eq!(buf.len(), 17 * RECORD_BYTES);
+        assert_eq!(Record::decode_batch(&buf).unwrap(), rs);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let mut b = sample().encode();
+        b[0] = 0; // magic
+        assert!(Record::decode(&b).is_err());
+        let mut b2 = sample().encode();
+        b2[22] = 9; // flag
+        assert!(Record::decode(&b2).is_err());
+        assert!(Record::decode(&[0u8; 50]).is_err());
+        assert!(Record::decode_batch(&[0u8; 150]).is_err());
+    }
+
+    #[test]
+    fn padding_is_deterministic() {
+        assert_eq!(sample().encode(), sample().encode());
+        // Different event ids give different padding.
+        let mut other = sample();
+        other.event_id += 1;
+        assert_ne!(sample().encode()[31..], other.encode()[31..]);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        crate::proptest::check("record codec roundtrip", 100, |rng| {
+            let r = Record {
+                event_id: rng.next_u64(),
+                timestamp: rng.next_u64() >> 20,
+                site_id: rng.next_u64() as u32,
+                compromise_flag: (rng.next_u64() % 2) as u8,
+                entity_id: rng.next_u64(),
+            };
+            let back = Record::decode(&r.encode()).map_err(|e| e.to_string())?;
+            if back == r {
+                Ok(())
+            } else {
+                Err(format!("{back:?} != {r:?}"))
+            }
+        });
+    }
+}

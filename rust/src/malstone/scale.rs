@@ -1,0 +1,94 @@
+//! Paper-scale workload descriptors.
+//!
+//! The simulator runs engines against a *described* workload (record and
+//! byte counts per node) while correctness runs use real generated records
+//! at laptop scale. These descriptors encode the exact setups of the
+//! paper's experiments.
+
+use super::record::RECORD_BYTES;
+
+/// A MalStone workload at some scale.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub total_records: u64,
+    /// Nodes that hold/generate the data (MalGen shards).
+    pub nodes: usize,
+}
+
+impl Workload {
+    pub fn new(name: &str, total_records: u64, nodes: usize) -> Self {
+        assert!(nodes > 0);
+        Workload { name: name.to_string(), total_records, nodes }
+    }
+
+    /// Table 1: "500 million 100-byte records on 20 nodes (for a total of
+    /// 10 billion records or 1 TB of data)".
+    pub fn table1() -> Self {
+        Workload::new("table1-10B", 10_000_000_000, 20)
+    }
+
+    /// Table 2: "15 billion [records] on 28 nodes".
+    pub fn table2() -> Self {
+        Workload::new("table2-15B", 15_000_000_000, 28)
+    }
+
+    /// The canonical larger MalStone scales (§5).
+    pub fn malstone_100b() -> Self {
+        Workload::new("malstone-100B", 100_000_000_000, 100)
+    }
+
+    pub fn malstone_1t() -> Self {
+        Workload::new("malstone-1T", 1_000_000_000_000, 250)
+    }
+
+    pub fn records_per_node(&self) -> u64 {
+        self.total_records.div_ceil(self.nodes as u64)
+    }
+
+    pub fn bytes_total(&self) -> u64 {
+        self.total_records * RECORD_BYTES as u64
+    }
+
+    pub fn bytes_per_node(&self) -> u64 {
+        self.records_per_node() * RECORD_BYTES as u64
+    }
+
+    /// Scale every count down by `factor` (for quick sanity sweeps).
+    pub fn scaled_down(&self, factor: u64) -> Workload {
+        assert!(factor > 0);
+        Workload {
+            name: format!("{}/÷{}", self.name, factor),
+            total_records: (self.total_records / factor).max(1),
+            nodes: self.nodes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_is_one_terabyte() {
+        let w = Workload::table1();
+        assert_eq!(w.bytes_total(), 1_000_000_000_000);
+        assert_eq!(w.records_per_node(), 500_000_000);
+    }
+
+    #[test]
+    fn table2_counts() {
+        let w = Workload::table2();
+        assert_eq!(w.total_records, 15_000_000_000);
+        assert_eq!(w.nodes, 28);
+        // 15B/28 doesn't divide evenly; per-node rounds up.
+        assert_eq!(w.records_per_node(), 535_714_286);
+    }
+
+    #[test]
+    fn scaling_down() {
+        let w = Workload::table1().scaled_down(1000);
+        assert_eq!(w.total_records, 10_000_000);
+        assert_eq!(w.nodes, 20);
+    }
+}

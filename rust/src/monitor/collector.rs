@@ -1,0 +1,345 @@
+//! The collector: periodic sampling of every node's resources plus the
+//! WAN links, with hierarchical rollups (node → rack → site → testbed).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::net::topology::LinkKind;
+use crate::net::{FlowNet, LinkId, NodeId, Topology};
+use crate::sim::resources::CpuPool;
+use crate::sim::Engine;
+use crate::util::json::{obj, Json};
+
+use super::series::Series;
+
+/// One sampled observation of a node (all values are utilizations in
+/// [0, 1] except the NIC rates, which are bytes/s).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NodeSample {
+    pub cpu: f64,
+    pub disk: f64,
+    pub nic_in: f64,
+    pub nic_out: f64,
+}
+
+const SERIES_CAP: usize = 4096;
+
+/// The monitoring system: per-node and per-WAN-link time series.
+pub struct Monitor {
+    topo: Rc<Topology>,
+    interval: f64,
+    enabled: bool,
+    cpu: Vec<Series>,
+    disk: Vec<Series>,
+    nic_in: Vec<Series>,
+    nic_out: Vec<Series>,
+    wan: HashMap<LinkId, Series>,
+    samples_taken: u64,
+}
+
+impl Monitor {
+    pub fn new(topo: Rc<Topology>, interval: f64) -> Rc<RefCell<Monitor>> {
+        assert!(interval > 0.0);
+        let n = topo.num_nodes();
+        let wan = topo
+            .links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind == LinkKind::Wan)
+            .map(|(i, _)| (LinkId(i), Series::new(SERIES_CAP)))
+            .collect();
+        Rc::new(RefCell::new(Monitor {
+            topo,
+            interval,
+            enabled: true,
+            cpu: (0..n).map(|_| Series::new(SERIES_CAP)).collect(),
+            disk: (0..n).map(|_| Series::new(SERIES_CAP)).collect(),
+            nic_in: (0..n).map(|_| Series::new(SERIES_CAP)).collect(),
+            nic_out: (0..n).map(|_| Series::new(SERIES_CAP)).collect(),
+            wan,
+            samples_taken: 0,
+        }))
+    }
+
+    pub fn interval(&self) -> f64 {
+        self.interval
+    }
+
+    pub fn samples_taken(&self) -> u64 {
+        self.samples_taken
+    }
+
+    /// Stop future scheduled samples (lets the event heap drain).
+    pub fn disable(&mut self) {
+        self.enabled = false;
+    }
+
+    /// Take one sample of every node and WAN link right now.
+    pub fn sample_all(&mut self, eng: &Engine, net: &Rc<RefCell<FlowNet>>, pools: &[Rc<RefCell<CpuPool>>]) {
+        let now = eng.now();
+        let dt = self.interval;
+        let mut netm = net.borrow_mut();
+        for (i, node) in self.topo.nodes.iter().enumerate() {
+            let cpu = pools
+                .get(i)
+                .map(|p| p.borrow_mut().take_utilization(now, dt))
+                .unwrap_or(0.0);
+            let disk_bytes = netm.take_link_bytes(node.disk, now);
+            let disk = (disk_bytes / dt / self.topo.link(node.disk).capacity).min(1.0);
+            let inb = netm.take_link_bytes(node.nic_rx, now) / dt;
+            let outb = netm.take_link_bytes(node.nic_tx, now) / dt;
+            self.cpu[i].push(now, cpu);
+            self.disk[i].push(now, disk);
+            self.nic_in[i].push(now, inb);
+            self.nic_out[i].push(now, outb);
+        }
+        let wan_ids: Vec<LinkId> = self.wan.keys().copied().collect();
+        for l in wan_ids {
+            let bps = netm.take_link_bytes(l, now) / dt;
+            self.wan.get_mut(&l).unwrap().push(now, bps);
+        }
+        self.samples_taken += 1;
+    }
+
+    /// Install the periodic sampling loop on the engine. Sampling stops
+    /// when [`Monitor::disable`] is called (the next tick unschedules).
+    pub fn install(
+        mon: &Rc<RefCell<Monitor>>,
+        eng: &mut Engine,
+        net: &Rc<RefCell<FlowNet>>,
+        pools: Vec<Rc<RefCell<CpuPool>>>,
+    ) {
+        let interval = mon.borrow().interval;
+        Self::tick(mon.clone(), eng, net.clone(), Rc::new(pools), interval);
+    }
+
+    fn tick(
+        mon: Rc<RefCell<Monitor>>,
+        eng: &mut Engine,
+        net: Rc<RefCell<FlowNet>>,
+        pools: Rc<Vec<Rc<RefCell<CpuPool>>>>,
+        interval: f64,
+    ) {
+        eng.schedule_in(interval, move |eng| {
+            if !mon.borrow().enabled {
+                return;
+            }
+            mon.borrow_mut().sample_all(eng, &net, &pools);
+            Self::tick(mon.clone(), eng, net, pools, interval);
+        });
+    }
+
+    // ---- accessors & rollups -----------------------------------------
+
+    /// Latest sample for a node.
+    pub fn node_sample(&self, n: NodeId) -> NodeSample {
+        NodeSample {
+            cpu: self.cpu[n.0].last().map(|(_, v)| v).unwrap_or(0.0),
+            disk: self.disk[n.0].last().map(|(_, v)| v).unwrap_or(0.0),
+            nic_in: self.nic_in[n.0].last().map(|(_, v)| v).unwrap_or(0.0),
+            nic_out: self.nic_out[n.0].last().map(|(_, v)| v).unwrap_or(0.0),
+        }
+    }
+
+    /// Recent mean NIC throughput (in+out, bytes/s) per node — the metric
+    /// Figure 3 colors by and the straggler detector consumes.
+    pub fn node_nic_rate(&self, n: NodeId, window: usize) -> f64 {
+        self.nic_in[n.0].recent_mean(window) + self.nic_out[n.0].recent_mean(window)
+    }
+
+    pub fn node_cpu_series(&self, n: NodeId) -> &Series {
+        &self.cpu[n.0]
+    }
+
+    /// Mean CPU utilization across a site's nodes (site rollup).
+    pub fn site_cpu(&self, site: usize) -> f64 {
+        let nodes: Vec<usize> = self
+            .topo
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.site.0 == site)
+            .map(|(i, _)| i)
+            .collect();
+        if nodes.is_empty() {
+            return 0.0;
+        }
+        nodes.iter().map(|&i| self.cpu[i].last().map(|(_, v)| v).unwrap_or(0.0)).sum::<f64>()
+            / nodes.len() as f64
+    }
+
+    /// Testbed-wide mean CPU utilization.
+    pub fn testbed_cpu(&self) -> f64 {
+        let sites = self.topo.sites.len();
+        if sites == 0 {
+            return 0.0;
+        }
+        (0..sites).map(|s| self.site_cpu(s)).sum::<f64>() / sites as f64
+    }
+
+    /// Sector-style per-link aggregate throughput: the latest sampled
+    /// bytes/s on each WAN link, labeled.
+    pub fn wan_throughput(&self) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> = self
+            .wan
+            .iter()
+            .map(|(l, s)| {
+                (self.topo.link(*l).label.clone(), s.last().map(|(_, v)| v).unwrap_or(0.0))
+            })
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Export the latest frame as JSON (the web UI's data feed).
+    pub fn frame_json(&self, now: f64) -> Json {
+        let nodes: Vec<Json> = (0..self.topo.num_nodes())
+            .map(|i| {
+                let s = self.node_sample(NodeId(i));
+                obj(vec![
+                    ("node", Json::Str(self.topo.nodes[i].name.clone())),
+                    ("site", Json::Num(self.topo.nodes[i].site.0 as f64)),
+                    ("cpu", Json::Num(s.cpu)),
+                    ("disk", Json::Num(s.disk)),
+                    ("nic_in", Json::Num(s.nic_in)),
+                    ("nic_out", Json::Num(s.nic_out)),
+                ])
+            })
+            .collect();
+        let wan: Vec<Json> = self
+            .wan_throughput()
+            .into_iter()
+            .map(|(label, bps)| obj(vec![("link", Json::Str(label)), ("bps", Json::Num(bps))]))
+            .collect();
+        obj(vec![("t", Json::Num(now)), ("nodes", Json::Arr(nodes)), ("wan", Json::Arr(wan))])
+    }
+
+    pub fn topology(&self) -> &Rc<Topology> {
+        &self.topo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topology::NodeSpec;
+    use crate::transport;
+
+    fn small_topo() -> Rc<Topology> {
+        let mut t = Topology::new();
+        let a = t.add_site("a");
+        let b = t.add_site("b");
+        let spec = NodeSpec { nic_bps: 100.0, disk_bps: 50.0, cpu_slots: 2 };
+        t.add_rack(a, 2, &spec, 1000.0);
+        t.add_rack(b, 2, &spec, 1000.0);
+        t.connect_sites(a, b, 200.0, 0.01);
+        Rc::new(t)
+    }
+
+    fn pools(topo: &Topology) -> Vec<Rc<RefCell<CpuPool>>> {
+        topo.nodes.iter().map(|n| CpuPool::new(n.cpu_slots)).collect()
+    }
+
+    #[test]
+    fn sampling_captures_nic_activity() {
+        let topo = small_topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let ps = pools(&topo);
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, ps.clone());
+        // Saturate node0's NIC for 10 s.
+        let path = topo.path(topo.racks[0].nodes[0], topo.racks[0].nodes[1]);
+        FlowNet::start(&net, &mut eng, path, 1000.0, f64::INFINITY, |_| {});
+        eng.run_until(10.0);
+        mon.borrow_mut().disable();
+        eng.run();
+        let m = mon.borrow();
+        assert!(m.samples_taken() >= 9);
+        let s = m.node_sample(NodeId(0));
+        assert!(s.nic_out > 50.0, "nic_out={}", s.nic_out); // ~100 B/s while active
+        let s1 = m.node_sample(NodeId(1));
+        assert!(s1.nic_in > 50.0);
+    }
+
+    #[test]
+    fn cpu_utilization_sampled() {
+        let topo = small_topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let ps = pools(&topo);
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, ps.clone());
+        // Fill both slots of node0 for 5 s.
+        for _ in 0..2 {
+            CpuPool::submit(&ps[0], &mut eng, 5.0, |_| {});
+        }
+        eng.run_until(4.0);
+        mon.borrow_mut().disable();
+        eng.run();
+        let m = mon.borrow();
+        let cpu = m.node_cpu_series(NodeId(0)).recent_mean(3);
+        assert!(cpu > 0.9, "cpu={cpu}");
+        assert!(m.node_cpu_series(NodeId(2)).recent_mean(3) < 0.05);
+    }
+
+    #[test]
+    fn wan_rollup_sees_cross_site_flow() {
+        let topo = small_topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let ps = pools(&topo);
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, ps);
+        let src = topo.racks[0].nodes[0];
+        let dst = topo.racks[1].nodes[0];
+        transport::send(&net, &topo, &mut eng, src, dst, 500.0, &transport::Protocol::udt(), |_| {});
+        eng.run_until(4.0);
+        mon.borrow_mut().disable();
+        eng.run();
+        let m = mon.borrow();
+        let wan = m.wan_throughput();
+        assert!(wan.iter().any(|(_, bps)| *bps > 10.0), "{wan:?}");
+    }
+
+    #[test]
+    fn site_and_testbed_rollups() {
+        let topo = small_topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let ps = pools(&topo);
+        let mon = Monitor::new(topo.clone(), 0.5);
+        Monitor::install(&mon, &mut eng, &net, ps.clone());
+        // Only site 0 is busy.
+        for i in 0..2 {
+            for _ in 0..2 {
+                CpuPool::submit(&ps[i], &mut eng, 3.0, |_| {});
+            }
+        }
+        eng.run_until(2.0);
+        mon.borrow_mut().disable();
+        eng.run();
+        let m = mon.borrow();
+        assert!(m.site_cpu(0) > 0.9);
+        assert!(m.site_cpu(1) < 0.05);
+        let tb = m.testbed_cpu();
+        assert!(tb > 0.4 && tb < 0.6, "testbed={tb}");
+    }
+
+    #[test]
+    fn frame_json_exports() {
+        let topo = small_topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let ps = pools(&topo);
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, ps);
+        eng.run_until(2.0);
+        mon.borrow_mut().disable();
+        eng.run();
+        let frame = mon.borrow().frame_json(eng.now());
+        let parsed = crate::util::json::Json::parse(&frame.to_string()).unwrap();
+        assert_eq!(parsed.get("nodes").map(|n| matches!(n, Json::Arr(v) if v.len() == 4)), Some(true));
+    }
+}

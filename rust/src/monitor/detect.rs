@@ -1,0 +1,172 @@
+//! Underperformer detection (paper §3, §8).
+//!
+//! "It was through this system that the sometimes dramatic impact on an
+//! application of just one or two nodes with slightly inferior performance
+//! was first noted." Sector uses the same signal to "remove nodes and/or
+//! network segments that exhibit poor performance". The detector compares
+//! each node's recent metric to the cluster median: anything persistently
+//! below `threshold × median` (for throughput-like metrics) is flagged.
+
+use crate::net::{NodeId, Topology};
+
+use super::collector::Monitor;
+
+/// A flagged underperformer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StragglerReport {
+    pub node: NodeId,
+    pub metric: String,
+    pub value: f64,
+    pub cluster_median: f64,
+}
+
+/// Flag nodes whose recent mean NIC throughput is below
+/// `threshold × median` of nodes *doing comparable work* (only nodes with
+/// nonzero activity participate; an idle rack is not a straggler).
+pub fn detect_stragglers(
+    mon: &Monitor,
+    topo: &Topology,
+    window: usize,
+    threshold: f64,
+) -> Vec<StragglerReport> {
+    assert!((0.0..1.0).contains(&threshold));
+    let rates: Vec<(NodeId, f64)> = topo
+        .node_ids()
+        .into_iter()
+        .map(|n| (n, mon.node_nic_rate(n, window)))
+        .collect();
+    let active: Vec<f64> = rates.iter().map(|(_, r)| *r).filter(|&r| r > 0.0).collect();
+    if active.len() < 3 {
+        return Vec::new(); // not enough signal
+    }
+    let median = crate::util::stats::median(&active);
+    if median <= 0.0 {
+        return Vec::new();
+    }
+    rates
+        .into_iter()
+        .filter(|&(_, r)| r > 0.0 && r < threshold * median)
+        .map(|(node, value)| StragglerReport {
+            node,
+            metric: "nic_rate".into(),
+            value,
+            cluster_median: median,
+        })
+        .collect()
+}
+
+/// Same analysis over CPU-speed-like series (used in tests and by Sphere's
+/// blacklist when CPU, not network, is the lagging resource).
+pub fn detect_slow_values(values: &[(NodeId, f64)], threshold: f64) -> Vec<NodeId> {
+    let active: Vec<f64> = values.iter().map(|&(_, v)| v).filter(|&v| v > 0.0).collect();
+    if active.len() < 3 {
+        return Vec::new();
+    }
+    let median = crate::util::stats::median(&active);
+    values
+        .iter()
+        .filter(|&&(_, v)| v > 0.0 && v < threshold * median)
+        .map(|&(n, _)| n)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topology::NodeSpec;
+    use crate::net::{FlowNet, Topology};
+    use crate::sim::resources::CpuPool;
+    use crate::sim::Engine;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn detects_injected_slow_node() {
+        // 8 nodes move data at full NIC rate; one node's NIC is degraded.
+        let mut t = Topology::new();
+        let s = t.add_site("s");
+        let spec = NodeSpec { nic_bps: 100.0, disk_bps: 1e9, cpu_slots: 2 };
+        t.add_rack(s, 8, &spec, 10_000.0);
+        let slow = t.racks[0].nodes[7];
+        let slow_tx = t.node(slow).nic_tx;
+        t.set_link_capacity(slow_tx, 40.0); // "slightly inferior" NIC
+        let topo = Rc::new(t);
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let pools: Vec<Rc<RefCell<CpuPool>>> =
+            topo.nodes.iter().map(|n| CpuPool::new(n.cpu_slots)).collect();
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, pools);
+        // Every node streams to its neighbor for 20 s.
+        for i in 0..8 {
+            let path = topo.path(topo.racks[0].nodes[i], topo.racks[0].nodes[(i + 1) % 8]);
+            FlowNet::start(&net, &mut eng, path, 1e5, f64::INFINITY, |_| {});
+        }
+        eng.run_until(20.0);
+        mon.borrow_mut().disable();
+        eng.run_until(21.0);
+        let reports = detect_stragglers(&mon.borrow(), &topo, 10, 0.75);
+        // The degraded node is flagged; its downstream peer (which receives
+        // at the degraded rate) may legitimately be flagged with it — the
+        // paper's "nodes and/or network segments".
+        assert!(
+            reports.iter().any(|r| r.node == slow),
+            "slow node not flagged: {reports:?}"
+        );
+        assert!(reports.len() <= 2, "over-flagging: {reports:?}");
+        for r in &reports {
+            assert!(r.value < r.cluster_median);
+        }
+    }
+
+    #[test]
+    fn healthy_cluster_flags_nothing() {
+        let mut t = Topology::new();
+        let s = t.add_site("s");
+        let spec = NodeSpec { nic_bps: 100.0, disk_bps: 1e9, cpu_slots: 2 };
+        t.add_rack(s, 6, &spec, 10_000.0);
+        let topo = Rc::new(t);
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let pools: Vec<Rc<RefCell<CpuPool>>> =
+            topo.nodes.iter().map(|n| CpuPool::new(n.cpu_slots)).collect();
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, pools);
+        for i in 0..6 {
+            let path = topo.path(topo.racks[0].nodes[i], topo.racks[0].nodes[(i + 1) % 6]);
+            FlowNet::start(&net, &mut eng, path, 1e5, f64::INFINITY, |_| {});
+        }
+        eng.run_until(10.0);
+        mon.borrow_mut().disable();
+        eng.run_until(11.0);
+        assert!(detect_stragglers(&mon.borrow(), &topo, 5, 0.7).is_empty());
+    }
+
+    #[test]
+    fn idle_nodes_not_stragglers() {
+        let vals = vec![
+            (NodeId(0), 100.0),
+            (NodeId(1), 100.0),
+            (NodeId(2), 95.0),
+            (NodeId(3), 0.0), // idle, not slow
+        ];
+        assert!(detect_slow_values(&vals, 0.7).is_empty());
+    }
+
+    #[test]
+    fn slow_values_detector() {
+        let vals = vec![
+            (NodeId(0), 100.0),
+            (NodeId(1), 110.0),
+            (NodeId(2), 90.0),
+            (NodeId(3), 30.0),
+        ];
+        assert_eq!(detect_slow_values(&vals, 0.7), vec![NodeId(3)]);
+    }
+
+    #[test]
+    fn too_few_samples_no_flags() {
+        let vals = vec![(NodeId(0), 100.0), (NodeId(1), 10.0)];
+        assert!(detect_slow_values(&vals, 0.7).is_empty());
+    }
+}

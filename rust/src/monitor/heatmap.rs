@@ -1,0 +1,159 @@
+//! Figure 3 as an ANSI terminal heatmap.
+//!
+//! "Each block represents a server node, and each group of blocks
+//! represents a cluster. The color of each block represents the usage of a
+//! particular resource … green/light side means idle; red/dark side means
+//! busy." The renderer prints one block ('█') per node, grouped by site,
+//! colored along a green→yellow→red 256-color gradient, with a per-site
+//! mean column and a legend.
+
+use crate::net::NodeId;
+
+use super::collector::Monitor;
+
+/// Which resource to color by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Cpu,
+    Disk,
+    /// NIC in+out as a fraction of NIC capacity (Figure 3's default).
+    Network,
+}
+
+fn gradient_color(u: f64) -> u8 {
+    // xterm-256 approximation of green → yellow → orange → red.
+    const STOPS: [u8; 7] = [46, 82, 118, 154, 220, 208, 196];
+    let u = u.clamp(0.0, 1.0);
+    STOPS[((u * (STOPS.len() - 1) as f64).round()) as usize]
+}
+
+fn utilization(mon: &Monitor, metric: Metric, node: NodeId) -> f64 {
+    let s = mon.node_sample(node);
+    match metric {
+        Metric::Cpu => s.cpu,
+        Metric::Disk => s.disk,
+        Metric::Network => {
+            let topo = mon.topology();
+            let cap = topo.link(topo.node(node).nic_tx).capacity
+                + topo.link(topo.node(node).nic_rx).capacity;
+            if cap > 0.0 {
+                ((s.nic_in + s.nic_out) / cap).min(1.0)
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Render the current frame. With `ansi = false`, uses a plain character
+/// ramp (` .:-=+*#%@`) instead of colors (for logs and tests).
+pub fn render_heatmap(mon: &Monitor, metric: Metric, ansi: bool) -> String {
+    let topo = mon.topology().clone();
+    let mut out = String::new();
+    let title = match metric {
+        Metric::Cpu => "cpu",
+        Metric::Disk => "disk",
+        Metric::Network => "network IO",
+    };
+    out.push_str(&format!("OCT monitor — per-node {title} utilization\n"));
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    for (si, site) in topo.sites.iter().enumerate() {
+        let mut blocks = String::new();
+        let mut acc = 0.0;
+        let mut count = 0usize;
+        for rack in &site.racks {
+            for &n in &topo.racks[rack.0].nodes {
+                let u = utilization(mon, metric, n);
+                acc += u;
+                count += 1;
+                if ansi {
+                    blocks.push_str(&format!("\x1b[38;5;{}m█\x1b[0m", gradient_color(u)));
+                } else {
+                    let idx = ((u * (RAMP.len() - 1) as f64).round()) as usize;
+                    blocks.push(RAMP[idx.min(RAMP.len() - 1)] as char);
+                }
+            }
+            blocks.push(' ');
+        }
+        let mean = if count > 0 { acc / count as f64 } else { 0.0 };
+        out.push_str(&format!("  {si} {:<20} [{blocks}] mean {:5.1}%\n", site.name, mean * 100.0));
+    }
+    out.push_str("  legend: idle ");
+    if ansi {
+        for i in 0..=6 {
+            out.push_str(&format!("\x1b[38;5;{}m█\x1b[0m", gradient_color(i as f64 / 6.0)));
+        }
+    } else {
+        out.push_str(std::str::from_utf8(RAMP).unwrap());
+    }
+    out.push_str(" busy\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topology::{NodeSpec, Topology};
+    use crate::net::FlowNet;
+    use crate::sim::resources::CpuPool;
+    use crate::sim::Engine;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn monitored_run() -> (Rc<RefCell<Monitor>>, Engine) {
+        let mut t = Topology::new();
+        let a = t.add_site("alpha");
+        let b = t.add_site("beta");
+        let spec = NodeSpec { nic_bps: 100.0, disk_bps: 100.0, cpu_slots: 2 };
+        t.add_rack(a, 3, &spec, 1000.0);
+        t.add_rack(b, 3, &spec, 1000.0);
+        t.connect_sites(a, b, 500.0, 0.01);
+        let topo = Rc::new(t);
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let pools: Vec<Rc<RefCell<CpuPool>>> =
+            topo.nodes.iter().map(|n| CpuPool::new(n.cpu_slots)).collect();
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, pools);
+        // Busy site alpha only.
+        let path = topo.path(topo.racks[0].nodes[0], topo.racks[0].nodes[1]);
+        FlowNet::start(&net, &mut eng, path, 1e4, f64::INFINITY, |_| {});
+        eng.run_until(5.0);
+        mon.borrow_mut().disable();
+        eng.run_until(6.0);
+        (mon, eng)
+    }
+
+    #[test]
+    fn plain_render_shows_sites_and_activity() {
+        let (mon, _eng) = monitored_run();
+        let s = render_heatmap(&mon.borrow(), Metric::Network, false);
+        assert!(s.contains("alpha"));
+        assert!(s.contains("beta"));
+        assert!(s.contains("legend"));
+        // Site alpha's blocks must show nonzero utilization characters.
+        let alpha_line = s.lines().find(|l| l.contains("alpha")).unwrap();
+        assert!(alpha_line.chars().any(|c| "=+*#%@".contains(c)), "{alpha_line}");
+    }
+
+    #[test]
+    fn ansi_render_has_colors() {
+        let (mon, _eng) = monitored_run();
+        let s = render_heatmap(&mon.borrow(), Metric::Network, true);
+        assert!(s.contains("\x1b[38;5;"));
+        assert!(s.matches('█').count() >= 6);
+    }
+
+    #[test]
+    fn gradient_endpoints() {
+        assert_eq!(gradient_color(0.0), 46); // green
+        assert_eq!(gradient_color(1.0), 196); // red
+    }
+
+    #[test]
+    fn cpu_metric_renders() {
+        let (mon, _eng) = monitored_run();
+        let s = render_heatmap(&mon.borrow(), Metric::Cpu, false);
+        assert!(s.contains("cpu"));
+    }
+}

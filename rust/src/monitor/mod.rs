@@ -1,0 +1,26 @@
+//! The OCT monitoring and visualization system (paper §3, Figure 3).
+//!
+//! The real testbed ran a lightweight collector on every node recording
+//! CPU, memory, disk, and NIC utilization, aggregated per rack/site with a
+//! web heatmap ("each block represents a server node … green/light means
+//! idle; red/dark means busy"). Here the collector samples the simulated
+//! substrate (CPU pools and the fluid network's link counters) on a fixed
+//! cadence, stores ring-buffer time series, rolls them up along the
+//! node→rack→site→testbed hierarchy — including Sector's per-*link*
+//! aggregate throughput used to spot bad network segments — and renders
+//! Figure 3 as an ANSI terminal heatmap plus a JSON export.
+//!
+//! The detector reproduces the paper's §8 observation that "just one or
+//! two nodes with slightly inferior performance" can drag a whole run:
+//! nodes whose utilization or throughput persistently lags the cluster
+//! median are flagged for blacklisting (Sector consumes this feedback).
+
+pub mod collector;
+pub mod detect;
+pub mod heatmap;
+pub mod series;
+
+pub use collector::{Monitor, NodeSample};
+pub use detect::{detect_stragglers, StragglerReport};
+pub use heatmap::render_heatmap;
+pub use series::Series;

@@ -1,0 +1,99 @@
+//! Fixed-capacity ring-buffer time series for monitor metrics.
+
+/// A bounded time series of (time, value) samples. Old samples are
+/// overwritten once capacity is reached (the web UI only ever showed a
+/// trailing window).
+#[derive(Debug, Clone)]
+pub struct Series {
+    cap: usize,
+    buf: Vec<(f64, f64)>,
+    head: usize,
+    len: usize,
+}
+
+impl Series {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Series { cap, buf: vec![(0.0, 0.0); cap], head: 0, len: 0 }
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.buf[self.head] = (t, v);
+        self.head = (self.head + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Most recent sample.
+    pub fn last(&self) -> Option<(f64, f64)> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(self.buf[(self.head + self.cap - 1) % self.cap])
+        }
+    }
+
+    /// Samples oldest→newest.
+    pub fn iter(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
+        let start = (self.head + self.cap - self.len) % self.cap;
+        (0..self.len).map(move |i| self.buf[(start + i) % self.cap])
+    }
+
+    /// Mean of the most recent `n` values.
+    pub fn recent_mean(&self, n: usize) -> f64 {
+        let take = n.min(self.len);
+        if take == 0 {
+            return 0.0;
+        }
+        let vals: Vec<f64> = self.iter().map(|(_, v)| v).collect();
+        vals[vals.len() - take..].iter().sum::<f64>() / take as f64
+    }
+
+    pub fn values(&self) -> Vec<f64> {
+        self.iter().map(|(_, v)| v).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_last() {
+        let mut s = Series::new(4);
+        assert!(s.last().is_none());
+        s.push(1.0, 10.0);
+        s.push(2.0, 20.0);
+        assert_eq!(s.last(), Some((2.0, 20.0)));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn wraps_overwriting_oldest() {
+        let mut s = Series::new(3);
+        for i in 0..5 {
+            s.push(i as f64, i as f64 * 10.0);
+        }
+        assert_eq!(s.len(), 3);
+        let items: Vec<_> = s.iter().collect();
+        assert_eq!(items, vec![(2.0, 20.0), (3.0, 30.0), (4.0, 40.0)]);
+    }
+
+    #[test]
+    fn recent_mean_window() {
+        let mut s = Series::new(10);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.push(v, v);
+        }
+        assert_eq!(s.recent_mean(2), 3.5);
+        assert_eq!(s.recent_mean(100), 2.5);
+        assert_eq!(Series::new(3).recent_mean(2), 0.0);
+    }
+}

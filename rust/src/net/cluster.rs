@@ -1,0 +1,48 @@
+//! A provisioned cluster: topology + fluid network + per-node CPU pools,
+//! the bundle every distributed engine runs against.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::sim::resources::CpuPool;
+
+use super::flows::FlowNet;
+use super::topology::{NodeId, Topology};
+
+/// Shared simulation substrate handles.
+#[derive(Clone)]
+pub struct Cluster {
+    pub topo: Rc<Topology>,
+    pub net: Rc<RefCell<FlowNet>>,
+    pub pools: Vec<Rc<RefCell<CpuPool>>>,
+}
+
+impl Cluster {
+    pub fn new(topo: Topology) -> Cluster {
+        let topo = Rc::new(topo);
+        let net = FlowNet::new(&topo);
+        let pools = topo.nodes.iter().map(|n| CpuPool::new(n.cpu_slots)).collect();
+        Cluster { topo, net, pools }
+    }
+
+    pub fn pool(&self, n: NodeId) -> &Rc<RefCell<CpuPool>> {
+        &self.pools[n.0]
+    }
+
+    /// Degrade a node's CPU speed (straggler injection).
+    pub fn set_node_speed(&self, n: NodeId, speed: f64) {
+        self.pools[n.0].borrow_mut().set_speed(speed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_pools_per_node() {
+        let c = Cluster::new(Topology::oct_2009());
+        assert_eq!(c.pools.len(), 128);
+        assert_eq!(c.pool(NodeId(0)).borrow().slots(), 4);
+    }
+}

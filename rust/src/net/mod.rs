@@ -1,0 +1,17 @@
+//! The simulated OCT network fabric.
+//!
+//! [`topology`] describes the physical testbed — sites, racks, nodes, NICs,
+//! rack uplinks, the 10 Gb/s CiscoWave WAN mesh, and per-node disks (a disk
+//! is just another capacity link; see DESIGN.md §2). [`flows`] is a
+//! fluid-flow network on top of the event engine: active transfers share
+//! link capacity max-min fairly, subject to per-flow transport caps (a TCP
+//! flow on a high-RTT path cannot use its fair share — that asymmetry is
+//! the mechanism behind Table 2's wide-area penalties).
+
+pub mod cluster;
+pub mod flows;
+pub mod topology;
+
+pub use cluster::Cluster;
+pub use flows::{FlowId, FlowNet};
+pub use topology::{LinkId, NodeId, RackId, SiteId, Topology};

@@ -1,0 +1,406 @@
+//! Testbed topology: sites, racks, nodes, links, RTT matrix.
+//!
+//! `Topology::oct_2009()` reconstructs Figure 2 of the paper: four racks of
+//! 32 nodes at JHU (Baltimore), StarLight (Chicago), UIC (Chicago), and
+//! Calit2/UCSD (San Diego), each node with a dual-core×2 CPU, 1 TB SATA
+//! disk and 1GE NIC, racks uplinked at 10 Gb/s into a dedicated lightpath
+//! mesh. All capacities are **bytes/second**; times are seconds.
+
+use std::collections::HashMap;
+
+/// Index newtypes — cheap, `Copy`, and keep call sites honest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SiteId(pub usize);
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RackId(pub usize);
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub usize);
+
+/// What a capacity link models (for monitoring labels and heatmaps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    NicTx,
+    NicRx,
+    RackUp,
+    RackDown,
+    Wan,
+    Disk,
+}
+
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub kind: LinkKind,
+    /// Capacity in bytes/second.
+    pub capacity: f64,
+    pub label: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub name: String,
+    pub racks: Vec<RackId>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Rack {
+    pub site: SiteId,
+    pub nodes: Vec<NodeId>,
+    pub uplink_tx: LinkId,
+    pub uplink_rx: LinkId,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub rack: RackId,
+    pub site: SiteId,
+    pub name: String,
+    pub nic_tx: LinkId,
+    pub nic_rx: LinkId,
+    pub disk: LinkId,
+    /// CPU slots (Hadoop task slots / Sphere SPE threads).
+    pub cpu_slots: usize,
+}
+
+/// Hardware constants for building racks (2009-plausible; DESIGN.md §4).
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    /// NIC bytes/s each direction (1GE ≈ 940 Mb/s goodput).
+    pub nic_bps: f64,
+    /// Disk sequential bytes/s (single 1 TB SATA).
+    pub disk_bps: f64,
+    pub cpu_slots: usize,
+}
+
+impl Default for NodeSpec {
+    fn default() -> Self {
+        NodeSpec { nic_bps: 117.5e6, disk_bps: 65.0e6, cpu_slots: 4 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    pub sites: Vec<Site>,
+    pub racks: Vec<Rack>,
+    pub nodes: Vec<Node>,
+    pub links: Vec<Link>,
+    /// Directed WAN link per ordered site pair.
+    wan: HashMap<(SiteId, SiteId), LinkId>,
+    /// One-way latency between sites, seconds (symmetric).
+    site_owd: HashMap<(SiteId, SiteId), f64>,
+}
+
+impl Topology {
+    pub fn new() -> Self {
+        Topology::default()
+    }
+
+    /// The four-site, 128-node testbed of Figure 2 with CiscoWave RTTs.
+    ///
+    /// The CiscoWave is **one shared 10 Gb/s wave** spanning the US —
+    /// "a 10Gb/s network that connects the various data centers" — not a
+    /// dedicated lambda per site pair. All inter-site traffic contends
+    /// for the same duplex backbone; per-pair RTTs follow fiber routes.
+    pub fn oct_2009() -> Self {
+        let mut t = Topology::new();
+        let spec = NodeSpec::default();
+        let jhu = t.add_site("JHU-Baltimore");
+        let sl = t.add_site("StarLight-Chicago");
+        let uic = t.add_site("UIC-Chicago");
+        let ucsd = t.add_site("Calit2-UCSD");
+        for site in [jhu, sl, uic, ucsd] {
+            t.add_rack(site, 32, &spec, 1.25e9);
+        }
+        let rtts = [
+            (jhu, sl, 0.022),
+            (jhu, uic, 0.022),
+            (jhu, ucsd, 0.075),
+            (sl, uic, 0.001),
+            (sl, ucsd, 0.058),
+            (uic, ucsd, 0.058),
+        ];
+        t.connect_shared_wave(&[jhu, sl, uic, ucsd], 1.25e9, &rtts);
+        t
+    }
+
+    /// Join `sites` with a single shared duplex wave of `bps` per
+    /// direction (east/west lambdas). Every ordered site pair maps onto
+    /// one of the two directed backbone links.
+    pub fn connect_shared_wave(&mut self, sites: &[SiteId], bps: f64, rtts: &[(SiteId, SiteId, f64)]) {
+        let east = self.add_link(LinkKind::Wan, bps, "wan.wave.east".to_string());
+        let west = self.add_link(LinkKind::Wan, bps, "wan.wave.west".to_string());
+        for (i, &a) in sites.iter().enumerate() {
+            for &b in &sites[i + 1..] {
+                self.wan.insert((a, b), east);
+                self.wan.insert((b, a), west);
+            }
+        }
+        for &(a, b, rtt) in rtts {
+            self.site_owd.insert((a, b), rtt / 2.0);
+            self.site_owd.insert((b, a), rtt / 2.0);
+        }
+    }
+
+    pub fn add_site(&mut self, name: &str) -> SiteId {
+        let id = SiteId(self.sites.len());
+        self.sites.push(Site { name: name.to_string(), racks: Vec::new() });
+        id
+    }
+
+    fn add_link(&mut self, kind: LinkKind, capacity: f64, label: String) -> LinkId {
+        assert!(capacity > 0.0, "link capacity must be positive: {label}");
+        let id = LinkId(self.links.len());
+        self.links.push(Link { kind, capacity, label });
+        id
+    }
+
+    /// Add a rack of `n` identical nodes with a 2×`uplink_bps` switch uplink.
+    pub fn add_rack(&mut self, site: SiteId, n: usize, spec: &NodeSpec, uplink_bps: f64) -> RackId {
+        let rid = RackId(self.racks.len());
+        let up = self.add_link(LinkKind::RackUp, uplink_bps, format!("rack{}.up", rid.0));
+        let down = self.add_link(LinkKind::RackDown, uplink_bps, format!("rack{}.down", rid.0));
+        self.racks.push(Rack { site, nodes: Vec::new(), uplink_tx: up, uplink_rx: down });
+        self.sites[site.0].racks.push(rid);
+        for _ in 0..n {
+            self.add_node(rid, spec);
+        }
+        rid
+    }
+
+    pub fn add_node(&mut self, rack: RackId, spec: &NodeSpec) -> NodeId {
+        let nid = NodeId(self.nodes.len());
+        let site = self.racks[rack.0].site;
+        let tx = self.add_link(LinkKind::NicTx, spec.nic_bps, format!("node{}.tx", nid.0));
+        let rx = self.add_link(LinkKind::NicRx, spec.nic_bps, format!("node{}.rx", nid.0));
+        let disk = self.add_link(LinkKind::Disk, spec.disk_bps, format!("node{}.disk", nid.0));
+        self.nodes.push(Node {
+            rack,
+            site,
+            name: format!("node{:03}", nid.0),
+            nic_tx: tx,
+            nic_rx: rx,
+            disk,
+            cpu_slots: spec.cpu_slots,
+        });
+        self.racks[rack.0].nodes.push(nid);
+        nid
+    }
+
+    /// Create (or replace) the directed WAN links between two sites.
+    pub fn connect_sites(&mut self, a: SiteId, b: SiteId, bps: f64, rtt: f64) {
+        assert_ne!(a, b);
+        for (x, y) in [(a, b), (b, a)] {
+            let lid = self.add_link(
+                LinkKind::Wan,
+                bps,
+                format!("wan.{}->{}", self.sites[x.0].name, self.sites[y.0].name),
+            );
+            self.wan.insert((x, y), lid);
+        }
+        self.site_owd.insert((a, b), rtt / 2.0);
+        self.site_owd.insert((b, a), rtt / 2.0);
+    }
+
+    pub fn wan_link(&self, from: SiteId, to: SiteId) -> Option<LinkId> {
+        self.wan.get(&(from, to)).copied()
+    }
+
+    /// All node ids, in creation order.
+    pub fn node_ids(&self) -> Vec<NodeId> {
+        (0..self.nodes.len()).map(NodeId).collect()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    pub fn set_link_capacity(&mut self, id: LinkId, capacity: f64) {
+        assert!(capacity > 0.0);
+        self.links[id.0].capacity = capacity;
+    }
+
+    pub fn same_rack(&self, a: NodeId, b: NodeId) -> bool {
+        self.nodes[a.0].rack == self.nodes[b.0].rack
+    }
+
+    pub fn same_site(&self, a: NodeId, b: NodeId) -> bool {
+        self.nodes[a.0].site == self.nodes[b.0].site
+    }
+
+    /// Network path (sequence of capacity links) from `a` to `b`.
+    /// Intra-rack: NICs only (the ToR switch is non-blocking). Intra-site:
+    /// NICs + both rack uplinks. Inter-site: + the WAN link.
+    pub fn path(&self, a: NodeId, b: NodeId) -> Vec<LinkId> {
+        assert_ne!(a, b, "no self-path");
+        let na = &self.nodes[a.0];
+        let nb = &self.nodes[b.0];
+        let mut p = vec![na.nic_tx];
+        if na.rack != nb.rack {
+            p.push(self.racks[na.rack.0].uplink_tx);
+            if na.site != nb.site {
+                p.push(
+                    self.wan_link(na.site, nb.site)
+                        .unwrap_or_else(|| panic!("no WAN link {:?}->{:?}", na.site, nb.site)),
+                );
+            }
+            p.push(self.racks[nb.rack.0].uplink_rx);
+        }
+        p.push(nb.nic_rx);
+        p
+    }
+
+    /// Round-trip time between two nodes, seconds.
+    pub fn rtt(&self, a: NodeId, b: NodeId) -> f64 {
+        if a == b {
+            return 30e-6;
+        }
+        let (na, nb) = (&self.nodes[a.0], &self.nodes[b.0]);
+        if na.rack == nb.rack {
+            100e-6 // ToR switch hop
+        } else if na.site == nb.site {
+            300e-6
+        } else {
+            2.0 * self.site_owd.get(&(na.site, nb.site)).copied().unwrap_or(0.025) + 300e-6
+        }
+    }
+
+    /// Topological distance used by placement policies (0 = same node).
+    pub fn distance(&self, a: NodeId, b: NodeId) -> u32 {
+        if a == b {
+            0
+        } else if self.same_rack(a, b) {
+            1
+        } else if self.same_site(a, b) {
+            2
+        } else {
+            3
+        }
+    }
+
+    /// Total node count.
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// A compact multi-line description (the `oct topology` CLI output).
+    pub fn describe(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "Topology: {} sites, {} racks, {} nodes, {} links",
+            self.sites.len(), self.racks.len(), self.nodes.len(), self.links.len());
+        for (i, site) in self.sites.iter().enumerate() {
+            let nodes: usize = site.racks.iter().map(|r| self.racks[r.0].nodes.len()).sum();
+            let _ = writeln!(s, "  site {} {:<20} {} rack(s), {} nodes", i, site.name, site.racks.len(), nodes);
+        }
+        for ((a, b), lid) in {
+            let mut v: Vec<_> = self.wan.iter().collect();
+            v.sort_by_key(|((a, b), _)| (a.0, b.0));
+            v
+        } {
+            if a.0 < b.0 {
+                let rtt = 2.0 * self.site_owd[&(*a, *b)];
+                let _ = writeln!(
+                    s,
+                    "  wan  {} <-> {}  {:.1} Gb/s  rtt {:.1} ms",
+                    self.sites[a.0].name,
+                    self.sites[b.0].name,
+                    self.links[lid.0].capacity * 8.0 / 1e9,
+                    rtt * 1e3
+                );
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oct_2009_matches_figure2() {
+        let t = Topology::oct_2009();
+        assert_eq!(t.sites.len(), 4);
+        assert_eq!(t.racks.len(), 4);
+        assert_eq!(t.num_nodes(), 128);
+        // Every ordered site pair has a WAN link.
+        for a in 0..4 {
+            for b in 0..4 {
+                if a != b {
+                    assert!(t.wan_link(SiteId(a), SiteId(b)).is_some());
+                }
+            }
+        }
+        // Chicago pair is ~1 ms RTT, coast-to-coast is the longest.
+        let sl0 = t.racks[1].nodes[0];
+        let uic0 = t.racks[2].nodes[0];
+        let jhu0 = t.racks[0].nodes[0];
+        let ucsd0 = t.racks[3].nodes[0];
+        assert!(t.rtt(sl0, uic0) < 0.002);
+        assert!(t.rtt(jhu0, ucsd0) > 0.07);
+    }
+
+    #[test]
+    fn paths_have_expected_links() {
+        let t = Topology::oct_2009();
+        let a = t.racks[0].nodes[0];
+        let b = t.racks[0].nodes[1];
+        let c = t.racks[1].nodes[0];
+        assert_eq!(t.path(a, b).len(), 2); // intra-rack: two NICs
+        let p = t.path(a, c); // inter-site: nic, up, wan, down, nic
+        assert_eq!(p.len(), 5);
+        assert_eq!(t.link(p[2]).kind, LinkKind::Wan);
+    }
+
+    #[test]
+    fn distance_hierarchy() {
+        let t = Topology::oct_2009();
+        let a = t.racks[0].nodes[0];
+        let b = t.racks[0].nodes[5];
+        let c = t.racks[1].nodes[0];
+        assert_eq!(t.distance(a, a), 0);
+        assert_eq!(t.distance(a, b), 1);
+        assert_eq!(t.distance(a, c), 3);
+    }
+
+    #[test]
+    fn multi_rack_site_distance_two() {
+        let mut t = Topology::new();
+        let s = t.add_site("x");
+        let spec = NodeSpec::default();
+        let r1 = t.add_rack(s, 2, &spec, 1.25e9);
+        let r2 = t.add_rack(s, 2, &spec, 1.25e9);
+        let a = t.racks[r1.0].nodes[0];
+        let b = t.racks[r2.0].nodes[0];
+        assert_eq!(t.distance(a, b), 2);
+        assert_eq!(t.path(a, b).len(), 4); // no WAN hop
+    }
+
+    #[test]
+    fn provisioning_grows_topology() {
+        let mut t = Topology::oct_2009();
+        let spec = NodeSpec::default();
+        // §2.2: two more racks (MIT-LL, PSC) toward ~250 nodes.
+        let mit = t.add_site("MIT-LL");
+        t.add_rack(mit, 30, &spec, 1.25e9);
+        for s in 0..4 {
+            t.connect_sites(SiteId(s), mit, 1.25e9, 0.030);
+        }
+        assert_eq!(t.num_nodes(), 158);
+        let a = t.racks[0].nodes[0];
+        let m = t.racks[4].nodes[0];
+        assert_eq!(t.path(a, m).len(), 5);
+    }
+
+    #[test]
+    fn describe_mentions_sites() {
+        let d = Topology::oct_2009().describe();
+        assert!(d.contains("StarLight"));
+        assert!(d.contains("128 nodes"));
+    }
+}

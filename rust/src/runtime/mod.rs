@@ -1,0 +1,258 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! This is the L3↔L2 seam. `make artifacts` runs Python exactly once,
+//! lowering the MalStone dataflow (JAX) and its Pallas histogram kernel to
+//! **HLO text** (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
+//! protos; the text parser reassigns ids). This module loads those files
+//! with the `xla` crate's PJRT CPU client, compiles them once, and executes
+//! them from the Sphere hot path — Python is never on the request path.
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::malstone::join::{to_kernel_arrays, JoinedRecord};
+use crate::malstone::oracle::MalstoneResult;
+use crate::util::json::Json;
+
+/// Artifact geometry, read from `artifacts/meta.json` (written by aot.py;
+/// must match python/compile/model.py).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub num_sites: usize,
+    pub num_weeks: usize,
+    pub tile: usize,
+    pub batch: usize,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let raw = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
+        let j = Json::parse(&raw).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let get = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("meta.json missing {k}"))
+        };
+        Ok(ArtifactMeta {
+            num_sites: get("num_sites")? as usize,
+            num_weeks: get("num_weeks")? as usize,
+            tile: get("tile")? as usize,
+            batch: get("batch")? as usize,
+        })
+    }
+}
+
+/// The three compiled executables plus their geometry.
+pub struct MalstoneKernels {
+    client: xla::PjRtClient,
+    hist: xla::PjRtLoadedExecutable,
+    ratio_a: xla::PjRtLoadedExecutable,
+    ratio_b: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    /// Executions performed (hot-path metric).
+    pub hist_calls: RefCell<u64>,
+}
+
+/// Default artifact directory: `$OCT_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("OCT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl MalstoneKernels {
+    /// Load and compile all artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<Rc<MalstoneKernels>> {
+        let meta = ArtifactMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))
+        };
+        Ok(Rc::new(MalstoneKernels {
+            hist: compile("malstone_hist")?,
+            ratio_a: compile("malstone_ratio_a")?,
+            ratio_b: compile("malstone_ratio_b")?,
+            client,
+            meta,
+            hist_calls: RefCell::new(0),
+        }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Histogram one padded batch (exactly `meta.batch` records).
+    fn hist_batch(&self, site: &[i32], week: &[i32], marked: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        assert_eq!(site.len(), self.meta.batch);
+        let s = xla::Literal::vec1(site);
+        let w = xla::Literal::vec1(week);
+        let m = xla::Literal::vec1(marked);
+        let result = self
+            .hist
+            .execute::<xla::Literal>(&[s, w, m])
+            .map_err(|e| anyhow!("hist execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("hist fetch: {e:?}"))?;
+        *self.hist_calls.borrow_mut() += 1;
+        // aot.py lowers with return_tuple=True: (comp, tot).
+        let (comp_l, tot_l) = result.to_tuple2().map_err(|e| anyhow!("hist tuple: {e:?}"))?;
+        let comp = comp_l.to_vec::<f32>().map_err(|e| anyhow!("comp vec: {e:?}"))?;
+        let tot = tot_l.to_vec::<f32>().map_err(|e| anyhow!("tot vec: {e:?}"))?;
+        Ok((comp, tot))
+    }
+
+    /// Histogram an arbitrary number of joined records: batches through
+    /// the compiled kernel and sums partial planes in Rust (the same f32
+    /// merge the Sphere master performs across workers).
+    pub fn hist(&self, joined: &[JoinedRecord]) -> Result<MalstoneResult> {
+        let (site, week, marked) = to_kernel_arrays(joined, self.meta.batch);
+        let mut out = MalstoneResult::zero(self.meta.num_sites, self.meta.num_weeks);
+        for i in (0..site.len()).step_by(self.meta.batch) {
+            let end = i + self.meta.batch;
+            let (c, t) = self.hist_batch(&site[i..end], &week[i..end], &marked[i..end])?;
+            for (a, b) in out.comp.iter_mut().zip(&c) {
+                *a += *b as f64;
+            }
+            for (a, b) in out.tot.iter_mut().zip(&t) {
+                *a += *b as f64;
+            }
+        }
+        Ok(out)
+    }
+
+    fn ratio(&self, exe: &xla::PjRtLoadedExecutable, planes: &MalstoneResult) -> Result<Vec<f32>> {
+        let comp: Vec<f32> = planes.comp.iter().map(|&x| x as f32).collect();
+        let tot: Vec<f32> = planes.tot.iter().map(|&x| x as f32).collect();
+        let dims = [self.meta.num_sites, self.meta.num_weeks];
+        let c = xla::Literal::vec1(&comp)
+            .reshape(&[dims[0] as i64, dims[1] as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let t = xla::Literal::vec1(&tot)
+            .reshape(&[dims[0] as i64, dims[1] as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[c, t])
+            .map_err(|e| anyhow!("ratio execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("ratio fetch: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("ratio tuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("ratio vec: {e:?}"))
+    }
+
+    /// MalStone-A ratios (`[num_sites]`) via the compiled graph.
+    pub fn ratio_a(&self, planes: &MalstoneResult) -> Result<Vec<f32>> {
+        self.ratio(&self.ratio_a, planes)
+    }
+
+    /// MalStone-B cumulative ratio series (`[num_sites × num_weeks]`).
+    pub fn ratio_b(&self, planes: &MalstoneResult) -> Result<Vec<f32>> {
+        self.ratio(&self.ratio_b, planes)
+    }
+
+    /// A stage-2 aggregator closure for `sector::sphere::
+    /// execute_malstone_with` — the three-layer hot path.
+    pub fn aggregator(self: &Rc<Self>) -> impl FnMut(&[JoinedRecord], u32, u32) -> MalstoneResult + use<> {
+        let k = self.clone();
+        move |joined, num_sites, num_weeks| {
+            assert_eq!((num_sites as usize, num_weeks as usize), (k.meta.num_sites, k.meta.num_weeks),
+                "aggregator geometry mismatch");
+            k.hist(joined).expect("PJRT hist execution failed")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::malstone::join::{bucketize, compromise_table};
+    use crate::malstone::malgen::{MalGen, MalGenConfig, SECONDS_PER_WEEK};
+    use crate::util::Rng;
+
+    fn kernels() -> Option<Rc<MalstoneKernels>> {
+        let dir = default_artifact_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping PJRT test: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(MalstoneKernels::load(&dir).expect("artifact load"))
+    }
+
+    #[test]
+    fn meta_parses() {
+        let dir = default_artifact_dir();
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.batch, m.tile * (m.batch / m.tile));
+        assert!(m.num_sites > 0 && m.num_weeks > 0);
+    }
+
+    #[test]
+    fn hist_matches_oracle_on_random_records() {
+        let Some(k) = kernels() else { return };
+        let mut rng = Rng::new(3);
+        let joined: Vec<JoinedRecord> = (0..10_000)
+            .map(|_| JoinedRecord {
+                site: if rng.chance(0.05) { -1 } else { rng.gen_range(k.meta.num_sites as u64) as i32 },
+                week: rng.gen_range(k.meta.num_weeks as u64) as i32,
+                marked: f32::from(rng.chance(0.3)),
+            })
+            .collect();
+        let got = k.hist(&joined).unwrap();
+        let mut want = MalstoneResult::zero(k.meta.num_sites, k.meta.num_weeks);
+        want.accumulate(&joined);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn ratio_graphs_match_oracle() {
+        let Some(k) = kernels() else { return };
+        let g = MalGen::new(MalGenConfig::small(17));
+        let all = g.generate_all(2, 3_000);
+        let table = compromise_table(&all);
+        let joined = bucketize(&all, &table, k.meta.num_sites as u32, k.meta.num_weeks as u32, SECONDS_PER_WEEK);
+        let planes = k.hist(&joined).unwrap();
+        let ra = k.ratio_a(&planes).unwrap();
+        let rb = k.ratio_b(&planes).unwrap();
+        let want_a = planes.ratio_a();
+        let want_b = planes.ratio_b();
+        assert_eq!(ra.len(), k.meta.num_sites);
+        assert_eq!(rb.len(), k.meta.num_sites * k.meta.num_weeks);
+        for (g, w) in ra.iter().zip(&want_a) {
+            assert!((*g as f64 - w).abs() < 1e-6, "{g} vs {w}");
+        }
+        for (g, w) in rb.iter().zip(&want_b) {
+            assert!((*g as f64 - w).abs() < 1e-6, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn sphere_execute_with_kernel_aggregator() {
+        let Some(k) = kernels() else { return };
+        let g = MalGen::new(MalGenConfig::small(23));
+        let shards: Vec<Vec<crate::malstone::Record>> =
+            (0..3).map(|s| g.generate_shard(s, 3, 1_000)).collect();
+        let with_kernel = crate::sector::sphere::execute_malstone_with(
+            &shards, 4, k.meta.num_sites as u32, k.meta.num_weeks as u32,
+            SECONDS_PER_WEEK, k.aggregator(),
+        );
+        let with_cpu = crate::sector::sphere::execute_malstone_with(
+            &shards, 4, k.meta.num_sites as u32, k.meta.num_weeks as u32,
+            SECONDS_PER_WEEK, crate::sector::sphere::cpu_aggregator,
+        );
+        assert_eq!(with_kernel, with_cpu);
+        assert!(*k.hist_calls.borrow() >= 4);
+    }
+}

@@ -1,0 +1,140 @@
+//! Sector master: SDFS metadata, topology-aware placement, blacklist.
+//!
+//! Sector 1.20 semantics: files are stored as whole segments on slave
+//! nodes (no striping); writes land on the client's slave (or the
+//! topologically closest slave with capacity); replication happens lazily
+//! in the background, so benchmarks see single-copy write cost. The
+//! master also tracks the slave blacklist driven by the monitoring system
+//! (paper §3: "Sector can remove underperforming resources").
+
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use crate::net::{NodeId, Topology};
+
+/// One stored segment (Sector files are segment-granular).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub node: NodeId,
+    pub bytes: u64,
+    pub records: u64,
+}
+
+/// The Sector master.
+pub struct SectorMaster {
+    topo: Rc<Topology>,
+    files: HashMap<String, Vec<Segment>>,
+    blacklist: HashSet<NodeId>,
+    /// Bytes stored per slave.
+    usage: HashMap<NodeId, u64>,
+}
+
+impl SectorMaster {
+    pub fn new(topo: Rc<Topology>) -> Self {
+        SectorMaster { topo, files: HashMap::new(), blacklist: HashSet::new(), usage: HashMap::new() }
+    }
+
+    /// Register a file whose segments already live on their home slaves
+    /// (MalGen writes shards locally — Sector's normal ingest pattern).
+    pub fn register_file(&mut self, name: &str, segments: Vec<Segment>) {
+        assert!(!self.files.contains_key(name), "file exists: {name}");
+        for s in &segments {
+            *self.usage.entry(s.node).or_insert(0) += s.bytes;
+        }
+        self.files.insert(name.to_string(), segments);
+    }
+
+    pub fn file_segments(&self, name: &str) -> Option<&[Segment]> {
+        self.files.get(name).map(|v| v.as_slice())
+    }
+
+    /// Choose a write target near `client`: the client's own slave if
+    /// healthy, else the closest healthy slave with least usage.
+    pub fn choose_write_target(&self, client: NodeId) -> NodeId {
+        if !self.blacklist.contains(&client) {
+            return client;
+        }
+        self.topo
+            .node_ids()
+            .into_iter()
+            .filter(|n| !self.blacklist.contains(n))
+            .min_by_key(|&n| (self.topo.distance(client, n), self.usage.get(&n).copied().unwrap_or(0)))
+            .expect("all slaves blacklisted")
+    }
+
+    /// Blacklist a slave (monitor feedback). Existing data stays readable;
+    /// the scheduler stops assigning work there.
+    pub fn blacklist(&mut self, n: NodeId) {
+        self.blacklist.insert(n);
+    }
+
+    pub fn unblacklist(&mut self, n: NodeId) {
+        self.blacklist.remove(&n);
+    }
+
+    pub fn is_blacklisted(&self, n: NodeId) -> bool {
+        self.blacklist.contains(&n)
+    }
+
+    /// Healthy subset of a node list.
+    pub fn healthy<'a>(&self, nodes: &'a [NodeId]) -> Vec<NodeId> {
+        nodes.iter().copied().filter(|n| !self.blacklist.contains(n)).collect()
+    }
+
+    pub fn usage(&self, n: NodeId) -> u64 {
+        self.usage.get(&n).copied().unwrap_or(0)
+    }
+
+    pub fn topology(&self) -> &Rc<Topology> {
+        &self.topo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Topology;
+
+    fn master() -> SectorMaster {
+        SectorMaster::new(Rc::new(Topology::oct_2009()))
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let mut m = master();
+        let segs = vec![
+            Segment { node: NodeId(0), bytes: 100, records: 1 },
+            Segment { node: NodeId(1), bytes: 200, records: 2 },
+        ];
+        m.register_file("data", segs.clone());
+        assert_eq!(m.file_segments("data").unwrap(), segs.as_slice());
+        assert_eq!(m.usage(NodeId(1)), 200);
+        assert!(m.file_segments("nope").is_none());
+    }
+
+    #[test]
+    fn write_target_is_local_when_healthy() {
+        let m = master();
+        assert_eq!(m.choose_write_target(NodeId(5)), NodeId(5));
+    }
+
+    #[test]
+    fn blacklisted_client_redirects_nearby() {
+        let mut m = master();
+        m.blacklist(NodeId(5));
+        let t = m.choose_write_target(NodeId(5));
+        assert_ne!(t, NodeId(5));
+        // Redirect should stay in the same rack (distance 1).
+        assert_eq!(m.topology().distance(NodeId(5), t), 1);
+    }
+
+    #[test]
+    fn healthy_filters_blacklist() {
+        let mut m = master();
+        m.blacklist(NodeId(1));
+        let h = m.healthy(&[NodeId(0), NodeId(1), NodeId(2)]);
+        assert_eq!(h, vec![NodeId(0), NodeId(2)]);
+        m.unblacklist(NodeId(1));
+        assert!(!m.is_blacklisted(NodeId(1)));
+    }
+}

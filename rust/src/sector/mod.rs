@@ -1,0 +1,22 @@
+//! The Sector/Sphere substrate (paper §2.1, §3, §6; Gu & Grossman [1]).
+//!
+//! Sector is a distributed file system that keeps computation on the data
+//! (files live as whole segments on slaves, replication is lazy and off
+//! the critical path) and moves bytes with UDT. Sphere is its compute
+//! engine: user-defined functions stream over local segments, hash-
+//! partitioned results are pushed to *bucket* files across the cluster as
+//! they are produced (compute/network overlap), and a built-in monitor
+//! feeds load balancing and slow-node blacklisting.
+//!
+//! [`master`] holds SDFS metadata, topology-aware placement and the
+//! blacklist; [`sphere`] is the two-stage UDF engine (scan+exchange,
+//! aggregate) in both timing ([`sphere::SphereEngine::simulate`]) and
+//! real-compute ([`sphere::execute_malstone_with`]) forms. The real
+//! compute path is where the AOT-compiled JAX/Pallas histogram kernel
+//! plugs in (see `runtime::MalstoneKernels::aggregator`).
+
+pub mod master;
+pub mod sphere;
+
+pub use master::{SectorMaster, Segment};
+pub use sphere::{execute_malstone_with, SphereEngine, SphereReport};

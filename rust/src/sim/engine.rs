@@ -1,0 +1,243 @@
+//! The event heap: virtual clock, closure events, cancellable timers.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::collections::HashSet;
+
+/// Simulated time in seconds.
+pub type SimTime = f64;
+
+/// Handle for cancelling a scheduled event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TimerId(u64);
+
+type EventFn = Box<dyn FnOnce(&mut Engine)>;
+
+struct Scheduled {
+    time: SimTime,
+    seq: u64,
+    f: EventFn,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    // BinaryHeap is a max-heap; invert so the earliest (time, seq) pops first.
+    // Ties break by insertion order (seq), making execution deterministic.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Discrete-event engine.
+pub struct Engine {
+    now: SimTime,
+    seq: u64,
+    heap: BinaryHeap<Scheduled>,
+    cancelled: HashSet<u64>,
+    executed: u64,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine { now: 0.0, seq: 0, heap: BinaryHeap::new(), cancelled: HashSet::new(), executed: 0 }
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events executed so far (used by the perf benches).
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Schedule `f` at absolute time `t` (must be >= now).
+    pub fn schedule_at<F: FnOnce(&mut Engine) + 'static>(&mut self, t: SimTime, f: F) -> TimerId {
+        assert!(t >= self.now - 1e-9, "scheduling into the past: t={t} now={}", self.now);
+        assert!(t.is_finite(), "non-finite event time");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { time: t.max(self.now), seq, f: Box::new(f) });
+        TimerId(seq)
+    }
+
+    /// Schedule `f` after a delay of `dt` seconds.
+    pub fn schedule_in<F: FnOnce(&mut Engine) + 'static>(&mut self, dt: SimTime, f: F) -> TimerId {
+        assert!(dt >= 0.0, "negative delay {dt}");
+        let now = self.now;
+        self.schedule_at(now + dt, f)
+    }
+
+    /// Cancel a scheduled event. Idempotent; cancelling an already-executed
+    /// event is a no-op.
+    pub fn cancel(&mut self, id: TimerId) {
+        self.cancelled.insert(id.0);
+    }
+
+    /// Run a single event. Returns false when the heap is empty.
+    pub fn step(&mut self) -> bool {
+        while let Some(ev) = self.heap.pop() {
+            if self.cancelled.remove(&ev.seq) {
+                continue;
+            }
+            debug_assert!(ev.time >= self.now - 1e-9);
+            self.now = ev.time.max(self.now);
+            self.executed += 1;
+            (ev.f)(self);
+            return true;
+        }
+        false
+    }
+
+    /// Run until the heap is exhausted.
+    pub fn run(&mut self) {
+        while self.step() {}
+    }
+
+    /// Run until virtual time passes `t` or the heap empties. Events
+    /// scheduled exactly at `t` are executed. Afterwards `now() >= t` only
+    /// if events reached it; the clock never advances past executed events.
+    pub fn run_until(&mut self, t: SimTime) {
+        loop {
+            match self.heap.peek() {
+                Some(ev) if ev.time <= t => {
+                    self.step();
+                }
+                _ => break,
+            }
+        }
+        if self.now < t {
+            self.now = t;
+        }
+    }
+
+    /// Number of pending (non-cancelled) events. O(n); test/debug helper.
+    pub fn pending(&self) -> usize {
+        self.heap.len() - self.cancelled.len().min(self.heap.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn events_run_in_time_order() {
+        let mut e = Engine::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for (t, tag) in [(3.0, 'c'), (1.0, 'a'), (2.0, 'b')] {
+            let log = log.clone();
+            e.schedule_at(t, move |eng| {
+                log.borrow_mut().push((eng.now(), tag));
+            });
+        }
+        e.run();
+        assert_eq!(*log.borrow(), vec![(1.0, 'a'), (2.0, 'b'), (3.0, 'c')]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut e = Engine::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for tag in ['x', 'y', 'z'] {
+            let log = log.clone();
+            e.schedule_at(5.0, move |_| log.borrow_mut().push(tag));
+        }
+        e.run();
+        assert_eq!(*log.borrow(), vec!['x', 'y', 'z']);
+    }
+
+    #[test]
+    fn nested_scheduling_works() {
+        let mut e = Engine::new();
+        let hits = Rc::new(RefCell::new(0));
+        let h = hits.clone();
+        e.schedule_at(1.0, move |eng| {
+            let h2 = h.clone();
+            eng.schedule_in(1.5, move |eng2| {
+                assert!((eng2.now() - 2.5).abs() < 1e-12);
+                *h2.borrow_mut() += 1;
+            });
+        });
+        e.run();
+        assert_eq!(*hits.borrow(), 1);
+    }
+
+    #[test]
+    fn cancel_prevents_execution() {
+        let mut e = Engine::new();
+        let hits = Rc::new(RefCell::new(0));
+        let h = hits.clone();
+        let id = e.schedule_at(1.0, move |_| *h.borrow_mut() += 1);
+        e.cancel(id);
+        e.run();
+        assert_eq!(*hits.borrow(), 0);
+    }
+
+    #[test]
+    fn run_until_stops_at_boundary() {
+        let mut e = Engine::new();
+        let hits = Rc::new(RefCell::new(Vec::new()));
+        for t in [1.0, 2.0, 3.0, 4.0] {
+            let h = hits.clone();
+            e.schedule_at(t, move |_| h.borrow_mut().push(t));
+        }
+        e.run_until(2.5);
+        assert_eq!(*hits.borrow(), vec![1.0, 2.0]);
+        assert_eq!(e.now(), 2.5);
+        e.run();
+        assert_eq!(*hits.borrow(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn scheduling_past_panics() {
+        let mut e = Engine::new();
+        e.schedule_at(5.0, |_| {});
+        e.run();
+        e.schedule_at(1.0, |_| {});
+    }
+
+    #[test]
+    fn clock_monotone_property() {
+        crate::proptest::check("engine clock monotone", 50, |rng| {
+            let mut e = Engine::new();
+            let times = Rc::new(RefCell::new(Vec::new()));
+            for _ in 0..100 {
+                let t = rng.f64() * 100.0;
+                let times = times.clone();
+                e.schedule_at(t, move |eng| times.borrow_mut().push(eng.now()));
+            }
+            e.run();
+            let ts = times.borrow();
+            if ts.windows(2).all(|w| w[0] <= w[1]) {
+                Ok(())
+            } else {
+                Err("clock went backwards".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Discrete-event simulation core.
+//!
+//! The testbed substitution (DESIGN.md §0) runs every distributed engine —
+//! Hadoop MapReduce, Hadoop Streaming, Sphere — as processes inside a
+//! deterministic discrete-event simulator. The engine is a classic
+//! time-ordered event heap with closure events; substrate state is shared
+//! through `Rc<RefCell<...>>` handles (single-threaded by design: replays
+//! are bit-identical for a given seed).
+
+mod engine;
+pub mod resources;
+
+pub use engine::{Engine, TimerId};

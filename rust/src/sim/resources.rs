@@ -1,0 +1,233 @@
+//! Node-local compute resources: a slot-based CPU pool per simulated node.
+//!
+//! Disk and network bandwidth are fluid resources handled by the max-min
+//! flow network (`net::FlowNet` — a disk is just a link). CPU is different:
+//! engines schedule discrete tasks onto a bounded number of slots (Hadoop
+//! 0.18's fixed map/reduce slots per TaskTracker, Sphere's SPE threads), so
+//! the CPU pool is a FIFO slot queue with per-node speed factors — the
+//! speed factor is how the paper's "one or two nodes with slightly inferior
+//! performance" stragglers are injected.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use super::Engine;
+
+type Callback = Box<dyn FnOnce(&mut Engine)>;
+
+struct Pending {
+    demand_secs: f64,
+    done: Callback,
+}
+
+/// A fixed-slot FIFO CPU pool (one per simulated node).
+pub struct CpuPool {
+    slots: usize,
+    busy: usize,
+    /// Relative speed: 1.0 nominal, 0.5 = half speed (straggler).
+    speed: f64,
+    queue: VecDeque<Pending>,
+    /// Cumulative busy slot-seconds, for monitor utilization sampling.
+    busy_time: f64,
+    last_change: f64,
+    util_acc: f64,
+}
+
+impl CpuPool {
+    pub fn new(slots: usize) -> Rc<RefCell<CpuPool>> {
+        assert!(slots > 0);
+        Rc::new(RefCell::new(CpuPool {
+            slots,
+            busy: 0,
+            speed: 1.0,
+            queue: VecDeque::new(),
+            busy_time: 0.0,
+            last_change: 0.0,
+            util_acc: 0.0,
+        }))
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn busy(&self) -> usize {
+        self.busy
+    }
+
+    pub fn set_speed(&mut self, speed: f64) {
+        assert!(speed > 0.0);
+        self.speed = speed;
+    }
+
+    pub fn speed(&self) -> f64 {
+        self.speed
+    }
+
+    fn account(&mut self, now: f64) {
+        let dt = now - self.last_change;
+        if dt > 0.0 {
+            self.util_acc += dt * self.busy as f64 / self.slots as f64;
+            self.busy_time += dt * self.busy as f64;
+            self.last_change = now;
+        }
+    }
+
+    /// Mean utilization in [0,1] since the last call (monitor sampling).
+    pub fn take_utilization(&mut self, now: f64, window: f64) -> f64 {
+        self.account(now);
+        let u = if window > 0.0 { (self.util_acc / window).min(1.0) } else { 0.0 };
+        self.util_acc = 0.0;
+        u
+    }
+
+    /// Submit a task needing `demand_secs` of nominal CPU time; `done` fires
+    /// when it completes (queueing + execution). FIFO when all slots busy.
+    pub fn submit<F: FnOnce(&mut Engine) + 'static>(
+        pool: &Rc<RefCell<CpuPool>>,
+        eng: &mut Engine,
+        demand_secs: f64,
+        done: F,
+    ) {
+        assert!(demand_secs >= 0.0);
+        let done: Callback = Box::new(done);
+        let start_now = {
+            let mut p = pool.borrow_mut();
+            p.account(eng.now());
+            if p.busy < p.slots {
+                p.busy += 1;
+                None
+            } else {
+                Some(())
+            }
+        };
+        match start_now {
+            None => Self::start(pool.clone(), eng, demand_secs, done),
+            Some(()) => pool.borrow_mut().queue.push_back(Pending { demand_secs, done }),
+        }
+    }
+
+    fn start(pool: Rc<RefCell<CpuPool>>, eng: &mut Engine, demand_secs: f64, done: Callback) {
+        let dur = demand_secs / pool.borrow().speed;
+        eng.schedule_in(dur, move |eng| {
+            done(eng);
+            // Free the slot and start the next queued task, if any.
+            let next = {
+                let mut p = pool.borrow_mut();
+                p.account(eng.now());
+                match p.queue.pop_front() {
+                    Some(t) => Some(t),
+                    None => {
+                        p.busy -= 1;
+                        None
+                    }
+                }
+            };
+            if let Some(t) = next {
+                Self::start(pool.clone(), eng, t.demand_secs, t.done);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_slot_serializes_tasks() {
+        let mut eng = Engine::new();
+        let pool = CpuPool::new(1);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..3 {
+            let log = log.clone();
+            CpuPool::submit(&pool, &mut eng, 2.0, move |e| log.borrow_mut().push((i, e.now())));
+        }
+        eng.run();
+        assert_eq!(*log.borrow(), vec![(0, 2.0), (1, 4.0), (2, 6.0)]);
+    }
+
+    #[test]
+    fn parallel_slots_overlap() {
+        let mut eng = Engine::new();
+        let pool = CpuPool::new(4);
+        let done = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..4 {
+            let d = done.clone();
+            CpuPool::submit(&pool, &mut eng, 3.0, move |e| d.borrow_mut().push(e.now()));
+        }
+        eng.run();
+        assert_eq!(*done.borrow(), vec![3.0; 4]);
+    }
+
+    #[test]
+    fn straggler_speed_scales_duration() {
+        let mut eng = Engine::new();
+        let pool = CpuPool::new(1);
+        pool.borrow_mut().set_speed(0.5);
+        let t = Rc::new(RefCell::new(0.0));
+        let t2 = t.clone();
+        CpuPool::submit(&pool, &mut eng, 2.0, move |e| *t2.borrow_mut() = e.now());
+        eng.run();
+        assert_eq!(*t.borrow(), 4.0);
+    }
+
+    #[test]
+    fn queue_drains_fifo() {
+        let mut eng = Engine::new();
+        let pool = CpuPool::new(2);
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..6 {
+            let o = order.clone();
+            CpuPool::submit(&pool, &mut eng, 1.0, move |_| o.borrow_mut().push(i));
+        }
+        eng.run();
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(pool.borrow().busy(), 0);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut eng = Engine::new();
+        let pool = CpuPool::new(2);
+        // One slot busy for 4s out of an 8s window => 25% pool utilization.
+        CpuPool::submit(&pool, &mut eng, 4.0, |_| {});
+        eng.run();
+        eng.run_until(8.0);
+        let u = pool.borrow_mut().take_utilization(8.0, 8.0);
+        assert!((u - 0.25).abs() < 1e-9, "u={u}");
+    }
+
+    #[test]
+    fn makespan_property_matches_slot_bound() {
+        crate::proptest::check("cpu pool makespan bound", 30, |rng| {
+            let mut eng = Engine::new();
+            let slots = 1 + rng.gen_range(4) as usize;
+            let pool = CpuPool::new(slots);
+            let n = 1 + rng.gen_range(20) as usize;
+            let mut total = 0.0;
+            let mut maxd = 0.0f64;
+            let end = Rc::new(RefCell::new(0.0f64));
+            for _ in 0..n {
+                let d = 0.1 + rng.f64();
+                total += d;
+                maxd = maxd.max(d);
+                let end = end.clone();
+                CpuPool::submit(&pool, &mut eng, d, move |e| {
+                    let mut m = end.borrow_mut();
+                    *m = m.max(e.now());
+                });
+            }
+            eng.run();
+            let makespan = *end.borrow();
+            let lower = (total / slots as f64).max(maxd);
+            // FIFO list scheduling is within 2x of the lower bound.
+            if makespan + 1e-9 >= lower && makespan <= 2.0 * lower + maxd {
+                Ok(())
+            } else {
+                Err(format!("makespan={makespan} lower={lower}"))
+            }
+        });
+    }
+}

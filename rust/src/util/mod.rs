@@ -1,0 +1,10 @@
+//! Shared utilities: deterministic RNG, statistics, unit formatting, and a
+//! dependency-free JSON reader/writer (the build environment is offline, so
+//! rand/serde are implemented in-tree at the scale this crate needs).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod units;
+
+pub use rng::Rng;

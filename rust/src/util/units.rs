@@ -1,0 +1,91 @@
+//! Unit constants and formatting, including the paper's `454m 13s` time
+//! format used in Table 1.
+
+/// Bits per second in one gigabit per second.
+pub const GBPS: f64 = 1e9;
+/// Bits per second in one megabit per second.
+pub const MBPS: f64 = 1e6;
+/// Bytes in a kibibyte/mebibyte/gibibyte.
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * 1024;
+pub const GIB: u64 = 1024 * 1024 * 1024;
+/// Bytes in the decimal units MalStone uses (1 TB = 10^12 bytes).
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+pub const TB: u64 = 1_000_000_000_000;
+
+/// Format seconds in the paper's Table-1 style: `"454m 13s"`.
+pub fn fmt_paper_time(secs: f64) -> String {
+    let total = secs.round().max(0.0) as u64;
+    format!("{}m {:02}s", total / 60, total % 60)
+}
+
+/// Format seconds adaptively for logs (`1.23 ms`, `45.6 s`, `12m 05s`).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2} s", secs)
+    } else {
+        fmt_paper_time(secs)
+    }
+}
+
+/// Format a byte count (decimal units, matching the paper's "1 TB").
+pub fn fmt_bytes(bytes: u64) -> String {
+    if bytes >= TB {
+        format!("{:.2} TB", bytes as f64 / TB as f64)
+    } else if bytes >= GB {
+        format!("{:.2} GB", bytes as f64 / GB as f64)
+    } else if bytes >= MB {
+        format!("{:.2} MB", bytes as f64 / MB as f64)
+    } else {
+        format!("{} B", bytes)
+    }
+}
+
+/// Format a bit rate.
+pub fn fmt_rate(bps: f64) -> String {
+    if bps >= GBPS {
+        format!("{:.2} Gb/s", bps / GBPS)
+    } else if bps >= MBPS {
+        format!("{:.1} Mb/s", bps / MBPS)
+    } else {
+        format!("{:.0} b/s", bps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_time_matches_table1_style() {
+        assert_eq!(fmt_paper_time(454.0 * 60.0 + 13.0), "454m 13s");
+        assert_eq!(fmt_paper_time(33.0 * 60.0 + 40.0), "33m 40s");
+        assert_eq!(fmt_paper_time(0.0), "0m 00s");
+        assert_eq!(fmt_paper_time(59.6), "1m 00s");
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(TB), "1.00 TB");
+        assert_eq!(fmt_bytes(1_500_000_000), "1.50 GB");
+        assert_eq!(fmt_bytes(100), "100 B");
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate(10.0 * GBPS), "10.00 Gb/s");
+        assert_eq!(fmt_rate(940.0 * MBPS), "940.0 Mb/s");
+    }
+
+    #[test]
+    fn adaptive_time() {
+        assert_eq!(fmt_time(0.0000005), "0.5 µs");
+        assert_eq!(fmt_time(0.5), "500.00 ms");
+        assert_eq!(fmt_time(7200.0), "120m 00s");
+    }
+}

@@ -1,0 +1,134 @@
+//! Cross-module integration tests: every engine path against the oracle,
+//! the AOT kernel end-to-end, monitoring over a live engine run, and the
+//! experiment drivers' shape at a quick scale.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use oct::coordinator::experiment::{run_table1, run_table2};
+use oct::hadoop::mapreduce::execute_malstone;
+use oct::malstone::join::{bucketize, compromise_table};
+use oct::malstone::malgen::{MalGen, MalGenConfig, SECONDS_PER_WEEK};
+use oct::malstone::oracle::MalstoneResult;
+use oct::malstone::Record;
+use oct::monitor::Monitor;
+use oct::net::{Cluster, Topology};
+use oct::runtime::{default_artifact_dir, MalstoneKernels};
+use oct::sector::master::{SectorMaster, Segment};
+use oct::sector::sphere::{cpu_aggregator, execute_malstone_with};
+use oct::sector::SphereEngine;
+use oct::sim::Engine;
+
+fn shards(seed: u64, n_shards: u64, per: usize) -> Vec<Vec<Record>> {
+    let g = MalGen::new(MalGenConfig::small(seed));
+    (0..n_shards).map(|s| g.generate_shard(s, n_shards, per)).collect()
+}
+
+fn oracle_of(shards: &[Vec<Record>], s: u32, w: u32) -> MalstoneResult {
+    let all: Vec<Record> = shards.iter().flatten().copied().collect();
+    let table = compromise_table(&all);
+    let joined = bucketize(&all, &table, s, w, SECONDS_PER_WEEK);
+    let mut o = MalstoneResult::zero(s as usize, w as usize);
+    o.accumulate(&joined);
+    o
+}
+
+#[test]
+fn all_engines_agree_with_oracle_and_each_other() {
+    let sh = shards(99, 6, 3_000);
+    let oracle = oracle_of(&sh, 256, 64);
+    let mr = execute_malstone(&sh, 8, 256, 64, SECONDS_PER_WEEK);
+    let sphere = execute_malstone_with(&sh, 5, 256, 64, SECONDS_PER_WEEK, cpu_aggregator);
+    assert_eq!(mr, oracle);
+    assert_eq!(sphere, oracle);
+}
+
+#[test]
+fn aot_kernel_path_is_exact_end_to_end() {
+    let dir = default_artifact_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let k = MalstoneKernels::load(&dir).unwrap();
+    let sh = shards(7, 4, 2_500);
+    let oracle = oracle_of(&sh, k.meta.num_sites as u32, k.meta.num_weeks as u32);
+    let via_kernel = execute_malstone_with(
+        &sh,
+        6,
+        k.meta.num_sites as u32,
+        k.meta.num_weeks as u32,
+        SECONDS_PER_WEEK,
+        k.aggregator(),
+    );
+    assert_eq!(via_kernel, oracle);
+    // Ratio graphs agree with the oracle's ratios.
+    let ra = k.ratio_a(&oracle).unwrap();
+    let want = oracle.ratio_a();
+    for (g, w) in ra.iter().zip(&want) {
+        assert!((*g as f64 - w).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn monitored_sphere_run_produces_samples_and_finishes() {
+    let cluster = Cluster::new(Topology::oct_2009());
+    let topo = cluster.topo.clone();
+    let nodes: Vec<_> = (0..4).flat_map(|r| topo.racks[r].nodes[..3].to_vec()).collect();
+    let mut master = SectorMaster::new(topo.clone());
+    let segs: Vec<Segment> =
+        nodes.iter().map(|&n| Segment { node: n, bytes: 64 << 20, records: 671_088 }).collect();
+    master.register_file("f", segs);
+    let mut eng = Engine::new();
+    let mon = Monitor::new(topo.clone(), 1.0);
+    Monitor::install(&mon, &mut eng, &cluster.net, cluster.pools.clone());
+    let done = Rc::new(RefCell::new(false));
+    let d = done.clone();
+    SphereEngine::simulate(
+        &cluster,
+        &master,
+        &mut eng,
+        "f",
+        &nodes,
+        oct::hadoop::FrameworkParams::sphere(),
+        false,
+        move |_, _| *d.borrow_mut() = true,
+    );
+    eng.run_until(3600.0);
+    mon.borrow_mut().disable();
+    eng.run();
+    assert!(*done.borrow(), "sphere run did not finish");
+    assert!(mon.borrow().samples_taken() > 3);
+    // Some node saw NIC traffic during the exchange (mean over the whole
+    // retained history — the job finishes early and later samples are
+    // idle).
+    let busy = topo
+        .node_ids()
+        .iter()
+        .any(|&n| mon.borrow().node_nic_rate(n, usize::MAX) > 0.0);
+    assert!(busy, "monitor saw no traffic");
+}
+
+#[test]
+fn experiment_shapes_hold_at_quick_scale() {
+    let t1 = run_table1(500);
+    assert!(t1[2].a_secs < t1[1].a_secs && t1[1].a_secs < t1[0].a_secs);
+    let t2 = run_table2(500);
+    assert!(t2[0].penalty() > t2[2].penalty(), "hadoop r3 must out-penalize sector");
+}
+
+#[test]
+fn gmp_rpc_full_stack_loopback() {
+    use oct::gmp::rpc::Handler;
+    use oct::gmp::{GmpConfig, GmpEndpoint, RpcClient, RpcServer};
+    use std::collections::HashMap;
+    use std::time::Duration;
+    let ep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+    let addr = ep.local_addr();
+    let mut handlers: HashMap<String, Handler> = HashMap::new();
+    handlers.insert("rev".into(), Box::new(|b: &[u8]| b.iter().rev().copied().collect()));
+    let _srv = RpcServer::start(ep, handlers);
+    let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+    let out = client.call(addr, "rev", b"abc", Duration::from_secs(2)).unwrap();
+    assert_eq!(out, b"cba");
+}
