@@ -1,6 +1,7 @@
 //! Quickstart: generate MalStone data with MalGen, compute MalStone-A/B
-//! through the AOT-compiled JAX/Pallas kernel via PJRT, and cross-check
-//! against the pure-Rust oracle.
+//! through the AOT-compiled JAX/Pallas kernel via PJRT (when artifacts
+//! and the `pjrt` feature are available — the pure-Rust oracle
+//! otherwise), and report the most-compromising sites.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -9,9 +10,9 @@
 use oct::malstone::join::{bucketize, compromise_table};
 use oct::malstone::malgen::{MalGen, MalGenConfig, SECONDS_PER_WEEK};
 use oct::malstone::oracle::MalstoneResult;
-use oct::runtime::{default_artifact_dir, MalstoneKernels};
+use oct::runtime::{default_artifact_dir, MalstoneKernels, DEFAULT_GEOMETRY};
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     // 1. Generate a small real workload (200k records on 4 "nodes").
     let gen = MalGen::new(MalGenConfig::small(42));
     let records = gen.generate_all(4, 50_000);
@@ -20,35 +21,48 @@ fn main() -> anyhow::Result<()> {
         records.iter().filter(|r| r.compromise_flag == 1).count());
 
     // 2. The entity join + (site, week) bucketing.
-    let kernels = MalstoneKernels::load(&default_artifact_dir())?;
-    let (s, w) = (kernels.meta.num_sites as u32, kernels.meta.num_weeks as u32);
+    let kernels = match MalstoneKernels::load(&default_artifact_dir()) {
+        Ok(k) => Some(k),
+        Err(e) => {
+            println!("PJRT kernels unavailable ({e}); using the pure-Rust oracle");
+            None
+        }
+    };
+    let (s, w) = kernels
+        .as_ref()
+        .map(|k| (k.meta.num_sites as u32, k.meta.num_weeks as u32))
+        .unwrap_or(DEFAULT_GEOMETRY);
     let table = compromise_table(&records);
     let joined = bucketize(&records, &table, s, w, SECONDS_PER_WEEK);
-
-    // 3. Aggregate through the compiled Pallas kernel (PJRT).
-    let t0 = std::time::Instant::now();
-    let planes = kernels.hist(&joined)?;
-    let dt = t0.elapsed().as_secs_f64();
-    println!("PJRT hist: {} records in {:.1} ms ({:.2}M rec/s, {} kernel calls)",
-        joined.len(), dt * 1e3, joined.len() as f64 / dt / 1e6, kernels.hist_calls.borrow());
-
-    // 4. Ratios via the compiled graphs; verify against the oracle.
-    let ratio_a = kernels.ratio_a(&planes)?;
     let mut oracle = MalstoneResult::zero(s as usize, w as usize);
     oracle.accumulate(&joined);
-    assert_eq!(planes, oracle, "kernel planes diverge from oracle");
-    let want = oracle.ratio_a();
-    for (g, w) in ratio_a.iter().zip(&want) {
-        assert!((*g as f64 - w).abs() < 1e-6);
-    }
-    println!("kernel == oracle ✓");
 
-    // 5. Report the most-compromising sites (the benchmark's question).
-    let mut sites: Vec<(usize, f32)> = ratio_a.iter().copied().enumerate().collect();
+    // 3. Aggregate + ratios: through the compiled Pallas kernel when we
+    //    have one, cross-checked against the oracle.
+    let ratio_a: Vec<f64> = match &kernels {
+        Some(k) => {
+            let t0 = std::time::Instant::now();
+            let planes = k.hist(&joined).expect("PJRT hist");
+            let dt = t0.elapsed().as_secs_f64();
+            println!("PJRT hist: {} records in {:.1} ms ({:.2}M rec/s, {} kernel calls)",
+                joined.len(), dt * 1e3, joined.len() as f64 / dt / 1e6, k.hist_calls.borrow());
+            assert_eq!(planes, oracle, "kernel planes diverge from oracle");
+            let ra = k.ratio_a(&planes).expect("PJRT ratio_a");
+            let want = oracle.ratio_a();
+            for (g, w) in ra.iter().zip(&want) {
+                assert!((*g as f64 - w).abs() < 1e-6);
+            }
+            println!("kernel == oracle ✓");
+            ra.iter().map(|&x| x as f64).collect()
+        }
+        None => oracle.ratio_a(),
+    };
+
+    // 4. Report the most-compromising sites (the benchmark's question).
+    let mut sites: Vec<(usize, f64)> = ratio_a.iter().copied().enumerate().collect();
     sites.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     println!("top compromising site buckets (MalStone-A):");
     for (site, ratio) in sites.iter().take(5) {
         println!("  site {site:>3}  ratio {:.3}  bad={}", ratio, gen.is_bad_site(*site as u32));
     }
-    Ok(())
 }

@@ -1,18 +1,21 @@
-//! Table 2 driver: the wide-area penalty experiment, plus an RTT ablation
-//! showing *why* Hadoop pays and Sector doesn't (the §6 mechanism).
+//! Table 2 through the scenario registry, plus an RTT ablation showing
+//! *why* Hadoop pays the wide-area penalty and Sector doesn't (the §6
+//! mechanism).
 //!
 //! ```bash
 //! cargo run --release --example wide_area_penalty [scale]
 //! ```
 
-use oct::coordinator::experiment::{format_table2, run_table2};
+use oct::coordinator::{find_set, format_checks, format_reports, ScenarioRunner};
 use oct::transport::Protocol;
 
 fn main() {
     let scale: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(50);
     println!("=== Table 2: 28 local nodes vs 7×4 distributed (scale 1/{scale}) ===");
-    let rows = run_table2(scale);
-    print!("{}", format_table2(&rows));
+    let set = find_set("table2").expect("table2 set registered").scaled_down(scale);
+    let reports = ScenarioRunner::new().run_all(&set.scenarios);
+    print!("{}", format_reports(&reports));
+    print!("{}", format_checks(&set.run_checks(&reports)));
 
     println!("\n=== Mechanism: per-flow transport caps vs RTT (NIC bottleneck 117.5 MB/s) ===");
     let tcp = Protocol::tcp();

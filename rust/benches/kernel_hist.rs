@@ -15,7 +15,13 @@ fn main() {
         eprintln!("artifacts missing — run `make artifacts` first");
         std::process::exit(1);
     }
-    let k = MalstoneKernels::load(&dir).expect("load artifacts");
+    let k = match MalstoneKernels::load(&dir) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("cannot execute kernels: {e}");
+            std::process::exit(1);
+        }
+    };
     println!("PJRT platform: {}; batch {}, planes {}×{}", k.platform(), k.meta.batch, k.meta.num_sites, k.meta.num_weeks);
 
     let n = 1_000_000usize;

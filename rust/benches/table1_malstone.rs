@@ -1,34 +1,44 @@
 //! Bench: regenerate **Table 1** — MalStone-A/B across Hadoop MapReduce,
-//! Hadoop Streaming, and Sector/Sphere on the 20-node OCT layout.
+//! Hadoop Streaming, and Sector/Sphere on the 20-node OCT layout — via
+//! the scenario registry and `ScenarioRunner`.
 //!
 //! `OCT_BENCH_SCALE` divides the 10B-record workload (default 20; use 1
 //! for full paper scale — the simulation is shape-preserving in scale).
-//! Asserts the paper's shape: ordering, Sector≫Hadoop factor, B > A.
+//! Asserts the set's shape checks: ordering, Sector≫Hadoop factor, B > A.
 
-use oct::coordinator::experiment::{format_table1, run_table1};
+use oct::coordinator::{find_set, format_checks, format_reports, ScenarioRunner};
 
 fn main() {
     let scale: u64 = std::env::var("OCT_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
+    let set = find_set("table1").expect("table1 set registered").scaled_down(scale);
     let t0 = std::time::Instant::now();
-    let rows = run_table1(scale);
+    let reports = ScenarioRunner::new().run_all(&set.scenarios);
     let wall = t0.elapsed().as_secs_f64();
     println!("=== Table 1: MalStone on 10B records / 20 nodes (scale 1/{scale}) ===");
-    print!("{}", format_table1(&rows));
+    print!("{}", format_reports(&reports));
     println!("simulated in {wall:.1}s wall");
 
-    // Shape assertions (the reproduction criteria from DESIGN.md §3).
-    let (mr, st, sp) = (&rows[0], &rows[1], &rows[2]);
-    assert!(sp.a_secs < st.a_secs && st.a_secs < mr.a_secs, "A ordering");
-    assert!(sp.b_secs < st.b_secs && st.b_secs < mr.b_secs, "B ordering");
-    let factor_a = mr.a_secs / sp.a_secs;
-    let factor_b = mr.b_secs / sp.b_secs;
+    // Shape assertions (the reproduction criteria from DESIGN.md §3),
+    // evaluated by the set's registered check.
+    let checks = set.run_checks(&reports);
+    print!("{}", format_checks(&checks));
+    // Look reports up by the fields they carry rather than by position,
+    // so registry reordering cannot silently skew the printed factors.
+    let sim = |fw: &str, variant: &str| {
+        reports
+            .iter()
+            .find(|r| r.framework == fw && r.variant == variant)
+            .unwrap_or_else(|| panic!("missing report {fw}/{variant}"))
+            .simulated_secs
+    };
+    let factor_a = sim("hadoop-mapreduce", "A") / sim("sector-sphere", "A");
+    let factor_b = sim("hadoop-mapreduce", "B") / sim("sector-sphere", "B");
     println!("sector vs hadoop-MR speedup: A {factor_a:.1}× (paper 13.5×), B {factor_b:.1}× (paper 19.2×)");
-    assert!(factor_a > 5.0 && factor_b > 5.0, "sector speedup shape lost");
-    for r in &rows {
-        assert!(r.b_secs > r.a_secs, "{}: MalStone-B must cost more than A", r.framework);
-        let rel = (r.a_secs - r.paper_a).abs() / r.paper_a;
-        println!("  {}: A within {:.0}% of paper, B within {:.0}%", r.framework,
-            rel * 100.0, (r.b_secs - r.paper_b).abs() / r.paper_b * 100.0);
+    for r in &reports {
+        if let Some(ratio) = r.paper_ratio() {
+            println!("  {}: within {:.0}% of paper", r.scenario, (ratio - 1.0).abs() * 100.0);
+        }
     }
+    assert!(checks.iter().all(|c| c.pass), "table1 shape lost:\n{}", format_checks(&checks));
     println!("table1 shape OK");
 }

@@ -1,32 +1,42 @@
 //! Bench: regenerate **Table 2** — the wide-area penalty: 28 nodes in one
-//! site vs 7×4 across the testbed, Hadoop (3 and 1 replicas) vs Sector.
+//! site vs 7×4 across the testbed, Hadoop (3 and 1 replicas) vs Sector —
+//! via the scenario registry and `ScenarioRunner`.
 //!
 //! `OCT_BENCH_SCALE` divides the 15B-record workload (default 20).
-//! Asserts the paper's shape: Hadoop pays a large penalty (3-replica
-//! worst), Sector's is negligible.
+//! Asserts the set's shape checks: Hadoop pays a large penalty
+//! (3-replica worst), Sector's is negligible.
 
-use oct::coordinator::experiment::{format_table2, run_table2};
+use oct::coordinator::{find_set, format_checks, format_reports, wide_area_penalty, ScenarioRunner};
 
 fn main() {
     let scale: u64 = std::env::var("OCT_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
+    let set = find_set("table2").expect("table2 set registered").scaled_down(scale);
     let t0 = std::time::Instant::now();
-    let rows = run_table2(scale);
+    let reports = ScenarioRunner::new().run_all(&set.scenarios);
     let wall = t0.elapsed().as_secs_f64();
     println!("=== Table 2: local vs distributed (scale 1/{scale}) ===");
-    print!("{}", format_table2(&rows));
+    print!("{}", format_reports(&reports));
     println!("simulated in {wall:.1}s wall");
 
-    let (r3, r1, sec) = (&rows[0], &rows[1], &rows[2]);
-    assert!(r3.penalty() > 0.15, "hadoop 3-replica penalty lost: {}", r3.penalty());
-    assert!(r1.penalty() > 0.04, "hadoop 1-replica penalty lost: {}", r1.penalty());
-    assert!(sec.penalty().abs() < 0.06, "sector penalty out of band: {}", sec.penalty());
-    assert!(r1.local_secs < r3.local_secs && r1.dist_secs < r3.dist_secs);
-    assert!(sec.dist_secs < r1.dist_secs, "sector must win outright");
+    let checks = set.run_checks(&reports);
+    print!("{}", format_checks(&checks));
+    // Pair reports by the fields they carry rather than by position, so
+    // registry reordering cannot silently mislabel the penalties.
+    let pen = |fw: &str| {
+        let find = |tag: &str| {
+            reports
+                .iter()
+                .find(|r| r.framework == fw && r.scenario.contains(tag))
+                .unwrap_or_else(|| panic!("missing report {fw}{tag}"))
+        };
+        wide_area_penalty(find("/local"), find("/dist")) * 100.0
+    };
     println!(
         "penalties — hadoop r3 {:+.1}% (paper +34.1%), r1 {:+.1}% (paper +31.5%), sector {:+.1}% (paper +4.8%)",
-        r3.penalty() * 100.0,
-        r1.penalty() * 100.0,
-        sec.penalty() * 100.0
+        pen("hadoop-mapreduce"),
+        pen("hadoop-mapreduce-r1"),
+        pen("sector-sphere"),
     );
+    assert!(checks.iter().all(|c| c.pass), "table2 shape lost:\n{}", format_checks(&checks));
     println!("table2 shape OK");
 }

@@ -1,22 +1,16 @@
-//! Experiment drivers: regenerate Table 1 and Table 2.
+//! Deprecated compatibility shims for the pre-0.2 experiment drivers.
 //!
-//! Acceptance is *shape*, not absolute seconds (DESIGN.md §3): ordering
-//! (Sector < Streams < Hadoop-MR), the Sector-vs-Hadoop ratio, and the
-//! wide-area penalty gap (Hadoop ≈ 30–35%, Sector < 6%). The drivers are
-//! shared by `cargo bench`, the examples, and integration tests.
+//! `run_table1` / `run_table2` used to hand-wire topologies, namenodes,
+//! and engines per call site; they are now thin adapters over the
+//! unified scenario API ([`crate::coordinator::scenario`],
+//! [`crate::coordinator::runner`], [`crate::coordinator::registry`]) and
+//! will be removed one release after 0.2. New code should run registry
+//! sets (or `Testbed::builder()` scenarios) through [`ScenarioRunner`]
+//! and consume [`RunReport`]s directly.
 
-use std::cell::RefCell;
-use std::rc::Rc;
-
-use crate::hadoop::hdfs::{HdfsConfig, Namenode};
-use crate::hadoop::mapreduce::{malstone_jobs, uniform_shards, MapReduceEngine};
-use crate::hadoop::FrameworkParams;
-use crate::malstone::record::RECORD_BYTES;
-use crate::malstone::scale::Workload;
-use crate::net::{Cluster, NodeId, Topology};
-use crate::sector::master::{SectorMaster, Segment};
-use crate::sector::sphere::SphereEngine;
-use crate::sim::Engine;
+use super::registry::find_set;
+use super::runner::{RunReport, ScenarioRunner};
+use super::scenario::Framework;
 
 /// One Table 1 row: a framework's MalStone-A and MalStone-B times.
 #[derive(Debug, Clone)]
@@ -49,170 +43,51 @@ impl Table2Row {
     }
 }
 
-/// Run one Hadoop MalStone (two chained MR jobs); returns simulated secs.
-pub fn run_hadoop(
-    topo_builder: impl Fn() -> Topology,
-    nodes_of: impl Fn(&Topology) -> Vec<NodeId>,
-    params: &FrameworkParams,
-    total_records: u64,
-    variant_b: bool,
-) -> f64 {
-    let cluster = Cluster::new(topo_builder());
-    let nodes = nodes_of(&cluster.topo);
-    let nn = Rc::new(RefCell::new(Namenode::with_members(
-        cluster.topo.clone(),
-        HdfsConfig { replication: params.output_replication, ..Default::default() },
-        42,
-        nodes.clone(),
-    )));
-    let shards = uniform_shards(&nodes, total_records);
-    let (job1, job2_of) = malstone_jobs(params, &nodes, &shards, variant_b, 64 * 1024 * 1024);
-    let mut eng = Engine::new();
-    let finished = Rc::new(RefCell::new(None));
-    let f2 = finished.clone();
-    let cluster2 = cluster.clone();
-    let nn2 = nn.clone();
-    MapReduceEngine::simulate(&cluster, &nn, &mut eng, job1, move |eng, r1| {
-        let job2 = job2_of(&r1);
-        let f3 = f2.clone();
-        MapReduceEngine::simulate(&cluster2, &nn2, eng, job2, move |eng, _r2| {
-            *f3.borrow_mut() = Some(eng.now());
-        });
-    });
-    eng.run();
-    let t = finished.borrow().expect("hadoop run did not complete");
-    t
-}
-
-/// Run one Sector/Sphere MalStone; returns simulated seconds.
-pub fn run_sphere_sim(
-    topo_builder: impl Fn() -> Topology,
-    nodes_of: impl Fn(&Topology) -> Vec<NodeId>,
-    total_records: u64,
-    variant_b: bool,
-) -> f64 {
-    let cluster = Cluster::new(topo_builder());
-    let nodes = nodes_of(&cluster.topo);
-    let mut master = SectorMaster::new(cluster.topo.clone());
-    let per = total_records.div_ceil(nodes.len() as u64);
-    // Sector stores shards as several segments so SPE slots stay busy
-    // and stealing has granularity (64 MB segments like the real SDFS).
-    let seg_bytes: u64 = 64 * 1024 * 1024;
-    let mut segments = Vec::new();
-    for &n in &nodes {
-        let mut remaining_b = per * RECORD_BYTES as u64;
-        let mut remaining_r = per;
-        while remaining_b > 0 {
-            let b = remaining_b.min(seg_bytes);
-            let r = ((b as f64 / (per * RECORD_BYTES as u64) as f64) * per as f64).round() as u64;
-            segments.push(Segment { node: n, bytes: b, records: r.min(remaining_r).max(1) });
-            remaining_b -= b;
-            remaining_r = remaining_r.saturating_sub(r);
-        }
-    }
-    master.register_file("malstone", segments);
-    let mut eng = Engine::new();
-    let finished = Rc::new(RefCell::new(None));
-    let f = finished.clone();
-    SphereEngine::simulate(
-        &cluster,
-        &master,
-        &mut eng,
-        "malstone",
-        &nodes,
-        FrameworkParams::sphere(),
-        variant_b,
-        move |eng, _r| *f.borrow_mut() = Some(eng.now()),
-    );
-    eng.run();
-    let t = finished.borrow().expect("sphere run did not complete");
-    t
-}
-
-fn first_n_per_site(topo: &Topology, per_site: usize) -> Vec<NodeId> {
-    let mut nodes = Vec::new();
-    for rack in 0..topo.racks.len() {
-        for i in 0..per_site.min(topo.racks[rack].nodes.len()) {
-            nodes.push(topo.racks[rack].nodes[i]);
-        }
-    }
-    nodes
-}
-
-fn first_n_one_site(topo: &Topology, n: usize) -> Vec<NodeId> {
-    topo.racks[0].nodes.iter().copied().take(n).collect()
-}
-
-/// Table 1: MalStone-A/B on 10B records over 20 OCT nodes (5 per site),
-/// three frameworks. `scale_div` divides the record count for quick runs
-/// (1 = paper scale; timing scales ~linearly so shape is preserved).
+/// Table 1 at `1/scale_div` of paper scale, as legacy rows.
+#[deprecated(
+    since = "0.2.0",
+    note = "run the `table1` registry set through coordinator::ScenarioRunner instead"
+)]
 pub fn run_table1(scale_div: u64) -> Vec<Table1Row> {
-    let w = Workload::table1().scaled_down(scale_div);
-    let records = w.total_records;
-    let nodes20 = |t: &Topology| first_n_per_site(t, 5);
-    let scale = scale_div as f64;
+    let set = find_set("table1").expect("table1 set registered").scaled_down(scale_div);
+    let reports = ScenarioRunner::new().run_all(&set.scenarios);
     let mut rows = Vec::new();
-    for (params, paper_a, paper_b) in [
-        (FrameworkParams::hadoop_mapreduce(), 454.0 * 60.0 + 13.0, 840.0 * 60.0 + 50.0),
-        (FrameworkParams::hadoop_streams(), 87.0 * 60.0 + 29.0, 142.0 * 60.0 + 32.0),
-    ] {
-        let a = run_hadoop(Topology::oct_2009, nodes20, &params, records, false);
-        let b = run_hadoop(Topology::oct_2009, nodes20, &params, records, true);
+    for (i, sc) in set.scenarios.iter().enumerate().step_by(2) {
+        let (a, b): (&RunReport, &RunReport) = (&reports[i], &reports[i + 1]);
         rows.push(Table1Row {
-            framework: params.name,
-            a_secs: a,
-            b_secs: b,
-            paper_a: paper_a / scale,
-            paper_b: paper_b / scale,
+            framework: sc.framework.name(),
+            a_secs: a.simulated_secs,
+            b_secs: b.simulated_secs,
+            paper_a: a.paper_secs.unwrap_or(0.0),
+            paper_b: b.paper_secs.unwrap_or(0.0),
         });
     }
-    let a = run_sphere_sim(Topology::oct_2009, nodes20, records, false);
-    let b = run_sphere_sim(Topology::oct_2009, nodes20, records, true);
-    rows.push(Table1Row {
-        framework: "sector-sphere",
-        a_secs: a,
-        b_secs: b,
-        paper_a: (33.0 * 60.0 + 40.0) / scale,
-        paper_b: (43.0 * 60.0 + 44.0) / scale,
-    });
     rows
 }
 
-/// Table 2: 15B records — 28 nodes in one site vs 7×4 distributed;
-/// Hadoop (3 and 1 replicas) and Sector. The paper calls the workload
-/// only "a computation"; its per-record rate matches the MalStone-A
-/// profile (Table 1's B-variant rate is ~4× slower than Table 2's rows
-/// imply), so the driver runs the A variant.
+/// Table 2 at `1/scale_div` of paper scale, as legacy rows.
+#[deprecated(
+    since = "0.2.0",
+    note = "run the `table2` registry set through coordinator::ScenarioRunner instead"
+)]
 pub fn run_table2(scale_div: u64) -> Vec<Table2Row> {
-    let w = Workload::table2().scaled_down(scale_div);
-    let records = w.total_records;
-    let scale = scale_div as f64;
-    let local = |t: &Topology| first_n_one_site(t, 28);
-    let dist = |t: &Topology| first_n_per_site(t, 7);
+    let set = find_set("table2").expect("table2 set registered").scaled_down(scale_div);
+    let reports = ScenarioRunner::new().run_all(&set.scenarios);
     let mut rows = Vec::new();
-    for (params, pl, pd) in [
-        (FrameworkParams::hadoop_mapreduce(), 8650.0, 11600.0),
-        (FrameworkParams::hadoop_mapreduce_r1(), 7300.0, 9600.0),
-    ] {
-        let l = run_hadoop(Topology::oct_2009, local, &params, records, false);
-        let d = run_hadoop(Topology::oct_2009, dist, &params, records, false);
+    for (i, sc) in set.scenarios.iter().enumerate().step_by(2) {
+        let (local, dist): (&RunReport, &RunReport) = (&reports[i], &reports[i + 1]);
         rows.push(Table2Row {
-            framework: if params.output_replication == 3 { "hadoop (3 replicas)" } else { "hadoop (1 replica)" },
-            local_secs: l,
-            dist_secs: d,
-            paper_local: pl / scale,
-            paper_dist: pd / scale,
+            framework: match sc.framework {
+                Framework::HadoopMr => "hadoop (3 replicas)",
+                Framework::HadoopMrR1 => "hadoop (1 replica)",
+                _ => "sector",
+            },
+            local_secs: local.simulated_secs,
+            dist_secs: dist.simulated_secs,
+            paper_local: local.paper_secs.unwrap_or(0.0),
+            paper_dist: dist.paper_secs.unwrap_or(0.0),
         });
     }
-    let l = run_sphere_sim(Topology::oct_2009, local, records, false);
-    let d = run_sphere_sim(Topology::oct_2009, dist, records, false);
-    rows.push(Table2Row {
-        framework: "sector",
-        local_secs: l,
-        dist_secs: d,
-        paper_local: 4200.0 / scale,
-        paper_dist: 4400.0 / scale,
-    });
     rows
 }
 
@@ -261,42 +136,21 @@ pub fn format_table2(rows: &[Table2Row]) -> String {
 mod tests {
     use super::*;
 
-    // Scaled-down runs keep the event count small while preserving shape.
-    const SCALE: u64 = 200; // 50M records table1, 75M table2
-
     #[test]
-    fn table1_shape_holds() {
-        let rows = run_table1(SCALE);
+    #[allow(deprecated)]
+    fn deprecated_shims_still_produce_rows() {
+        let rows = run_table1(2000); // 5M records: a quick smoke
         assert_eq!(rows.len(), 3);
-        let (mr, st, sp) = (&rows[0], &rows[1], &rows[2]);
-        // Ordering: Sector < Streams < Hadoop-MR, for both variants.
-        assert!(sp.a_secs < st.a_secs && st.a_secs < mr.a_secs,
-            "A ordering broken: {} {} {}", sp.a_secs, st.a_secs, mr.a_secs);
-        assert!(sp.b_secs < st.b_secs && st.b_secs < mr.b_secs,
-            "B ordering broken: {} {} {}", sp.b_secs, st.b_secs, mr.b_secs);
-        // Sector beats Hadoop-MR by a large factor (paper: 13×/19×).
-        assert!(mr.b_secs / sp.b_secs > 5.0, "ratio {}", mr.b_secs / sp.b_secs);
-        // B slower than A everywhere.
-        for r in &rows {
-            assert!(r.b_secs > r.a_secs, "{}: B !> A", r.framework);
-        }
-    }
+        assert_eq!(rows[0].framework, "hadoop-mapreduce");
+        assert_eq!(rows[2].framework, "sector-sphere");
+        assert!(rows.iter().all(|r| r.a_secs > 0.0 && r.b_secs > 0.0 && r.paper_a > 0.0));
 
-    #[test]
-    fn table2_shape_holds() {
-        let rows = run_table2(SCALE);
-        assert_eq!(rows.len(), 3);
-        let (r3, r1, sec) = (&rows[0], &rows[1], &rows[2]);
-        // Hadoop pays a large wide-area penalty; Sector a small one.
-        assert!(r3.penalty() > 0.15, "r3 penalty {}", r3.penalty());
-        assert!(r1.penalty() > 0.04, "r1 penalty {}", r1.penalty());
-        assert!(sec.penalty().abs() < 0.06, "sector penalty {}", sec.penalty());
-        assert!(sec.penalty() < r1.penalty() && sec.penalty() < r3.penalty());
-        // 1-replica Hadoop is faster than 3-replica in both settings.
-        assert!(r1.local_secs < r3.local_secs);
-        assert!(r1.dist_secs < r3.dist_secs);
-        // Sector fastest overall.
-        assert!(sec.dist_secs < r1.dist_secs);
+        let rows2 = run_table2(3000); // 5M records
+        assert_eq!(rows2.len(), 3);
+        assert_eq!(rows2[0].framework, "hadoop (3 replicas)");
+        assert_eq!(rows2[1].framework, "hadoop (1 replica)");
+        assert_eq!(rows2[2].framework, "sector");
+        assert!(rows2.iter().all(|r| r.penalty().is_finite()));
     }
 
     #[test]

@@ -1,19 +1,57 @@
 //! The OCT coordinator: testbed configuration, node/network provisioning,
-//! and the experiment runner that regenerates the paper's tables.
+//! and the unified scenario API every experiment runs through.
 //!
 //! - [`config`]: a dependency-free TOML-subset parser for testbed and
 //!   experiment configs (`examples/*.toml` style).
 //! - [`provision`]: the paper's "flexible compute node and network
 //!   provisioning" service — grow the testbed (§2.2's expansion to ~250
 //!   nodes), retune links, drain nodes.
-//! - [`experiment`]: Table 1 / Table 2 drivers plus the correctness
-//!   harness that cross-checks every engine against the oracle and the
-//!   AOT kernel path.
+//! - [`scenario`]: describe an experiment as data — [`Testbed::builder`]
+//!   yields a [`Scenario`] from a topology spec, a placement, a
+//!   framework, and a MalStone workload.
+//! - [`runner`]: [`ScenarioRunner`] executes any scenario on the
+//!   simulated substrate and returns a structured, JSON-serializable
+//!   [`RunReport`] (simulated seconds, per-site flow stats, monitor
+//!   summary, paper reference).
+//! - [`registry`]: named [`ScenarioSet`]s — `table1`/`table2` as
+//!   declarative cross-products plus new sweeps (scale ladder,
+//!   local-vs-wide-area, site dropout) with shape checks.
+//! - [`experiment`]: deprecated `run_table1`/`run_table2` shims kept for
+//!   one release.
+//!
+//! # The scenario API
+//!
+//! ```
+//! use oct::coordinator::{Framework, ScenarioRunner, Testbed, TopologySpec, WorkloadSpec};
+//!
+//! let scenario = Testbed::builder()
+//!     .topology(TopologySpec::Oct2009)
+//!     .framework(Framework::SectorSphere)
+//!     .workload(WorkloadSpec::malstone_a(2_000_000))
+//!     .name("doc-smoke")
+//!     .build();
+//! let report = ScenarioRunner::new().run(&scenario);
+//! assert!(report.simulated_secs > 0.0);
+//! assert_eq!(report.framework, "sector-sphere");
+//! ```
 
 pub mod config;
 pub mod experiment;
 pub mod provision;
+pub mod registry;
+pub mod runner;
+pub mod scenario;
 
 pub use config::Config;
-pub use experiment::{run_table1, run_table2, Table1Row, Table2Row};
+pub use experiment::{format_table1, format_table2, Table1Row, Table2Row};
+#[allow(deprecated)]
+pub use experiment::{run_table1, run_table2};
 pub use provision::Provisioner;
+pub use registry::{find_set, scenario_sets, ScenarioSet};
+pub use runner::{
+    all_pass, format_checks, format_reports, wide_area_penalty, MonitorSummary, RunReport,
+    ScenarioRunner, ShapeCheck, SiteFlow,
+};
+pub use scenario::{
+    Framework, Placement, Scenario, Testbed, TestbedBuilder, TopologySpec, Variant, WorkloadSpec,
+};

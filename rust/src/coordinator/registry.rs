@@ -1,0 +1,417 @@
+//! The scenario registry: named, declarative sets of scenarios.
+//!
+//! `table1` and `table2` are cross-products over frameworks (× variants,
+//! × placements) rather than hand-written drivers, and new sweeps — a
+//! scale ladder, a local-vs-wide-area pair, per-site dropout — are
+//! one-liner additions. Every set can carry a *shape check*: the paper's
+//! reproduction criteria (ordering, ratios, penalty bands) evaluated
+//! over the set's [`RunReport`]s.
+//!
+//! List with `oct scenarios`; run with `oct scenarios <set> [scale]`.
+
+use super::runner::{wide_area_penalty, RunReport, ShapeCheck};
+use super::scenario::{Framework, Placement, Scenario, Testbed, TopologySpec, Variant, WorkloadSpec};
+
+/// A named group of scenarios with an optional shape check.
+#[derive(Debug, Clone)]
+pub struct ScenarioSet {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub scenarios: Vec<Scenario>,
+    check: Option<fn(&[RunReport]) -> Vec<ShapeCheck>>,
+}
+
+impl ScenarioSet {
+    /// The set with every workload (and paper reference) divided by `div`.
+    pub fn scaled_down(&self, div: u64) -> ScenarioSet {
+        ScenarioSet {
+            name: self.name,
+            description: self.description,
+            scenarios: self.scenarios.iter().map(|s| s.scaled_down(div)).collect(),
+            check: self.check,
+        }
+    }
+
+    /// Evaluate the set's shape check over reports produced in scenario
+    /// order (empty when the set carries no check).
+    pub fn run_checks(&self, reports: &[RunReport]) -> Vec<ShapeCheck> {
+        match self.check {
+            Some(f) => f(reports),
+            None => Vec::new(),
+        }
+    }
+
+    pub fn has_checks(&self) -> bool {
+        self.check.is_some()
+    }
+}
+
+/// All registered scenario sets, at paper scale.
+pub fn scenario_sets() -> Vec<ScenarioSet> {
+    vec![table1_set(), table2_set(), scale_ladder_set(), local_vs_wan_set(), site_dropout_set()]
+}
+
+/// Look up one set by name.
+pub fn find_set(name: &str) -> Option<ScenarioSet> {
+    scenario_sets().into_iter().find(|s| s.name == name)
+}
+
+fn workload(variant: Variant, records: u64) -> WorkloadSpec {
+    match variant {
+        Variant::A => WorkloadSpec::malstone_a(records),
+        Variant::B => WorkloadSpec::malstone_b(records),
+    }
+}
+
+/// Table 1: MalStone-A/B × {Hadoop-MR, Hadoop Streams, Sector/Sphere} on
+/// 20 OCT nodes (5 per site), 10B records.
+fn table1_set() -> ScenarioSet {
+    let paper = [
+        (Framework::HadoopMr, 454.0 * 60.0 + 13.0, 840.0 * 60.0 + 50.0),
+        (Framework::HadoopStreams, 87.0 * 60.0 + 29.0, 142.0 * 60.0 + 32.0),
+        (Framework::SectorSphere, 33.0 * 60.0 + 40.0, 43.0 * 60.0 + 44.0),
+    ];
+    let mut scenarios = Vec::new();
+    for (fw, pa, pb) in paper {
+        for (variant, psecs) in [(Variant::A, pa), (Variant::B, pb)] {
+            scenarios.push(
+                Testbed::builder()
+                    .topology(TopologySpec::Oct2009)
+                    .placement(Placement::PerSite(5))
+                    .framework(fw)
+                    .workload(workload(variant, 10_000_000_000))
+                    .name(&format!("table1/{}/{}", fw.name(), variant.letter()))
+                    .paper_secs(psecs)
+                    .build(),
+            );
+        }
+    }
+    ScenarioSet {
+        name: "table1",
+        description: "Table 1: MalStone-A/B × three frameworks on 20 OCT nodes (10B records)",
+        scenarios,
+        check: Some(check_table1),
+    }
+}
+
+fn check_table1(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 6 {
+        return vec![ShapeCheck::new("table1 arity", false, format!("expected 6 reports, got {}", r.len()))];
+    }
+    let t = |i: usize| r[i].simulated_secs;
+    let (mr_a, mr_b, st_a, st_b, sp_a, sp_b) = (t(0), t(1), t(2), t(3), t(4), t(5));
+    let mut out = vec![
+        ShapeCheck::new(
+            "A ordering: sector < streams < hadoop-mr",
+            sp_a < st_a && st_a < mr_a,
+            format!("{sp_a:.0}s < {st_a:.0}s < {mr_a:.0}s"),
+        ),
+        ShapeCheck::new(
+            "B ordering: sector < streams < hadoop-mr",
+            sp_b < st_b && st_b < mr_b,
+            format!("{sp_b:.0}s < {st_b:.0}s < {mr_b:.0}s"),
+        ),
+        ShapeCheck::new(
+            "sector speedup over hadoop-mr (A)",
+            mr_a / sp_a > 5.0,
+            format!("{:.1}× (paper 13.5×)", mr_a / sp_a),
+        ),
+        ShapeCheck::new(
+            "sector speedup over hadoop-mr (B)",
+            mr_b / sp_b > 5.0,
+            format!("{:.1}× (paper 19.2×)", mr_b / sp_b),
+        ),
+    ];
+    for i in [0usize, 2, 4] {
+        out.push(ShapeCheck::new(
+            format!("{}: B > A", r[i].framework),
+            r[i + 1].simulated_secs > r[i].simulated_secs,
+            format!("B {:.0}s vs A {:.0}s", r[i + 1].simulated_secs, r[i].simulated_secs),
+        ));
+    }
+    out
+}
+
+/// Table 2: 15B records, 28 nodes in one site vs 7×4 across the testbed;
+/// Hadoop at 3 and 1 replicas, and Sector.
+fn table2_set() -> ScenarioSet {
+    let paper = [
+        (Framework::HadoopMr, 8650.0, 11600.0),
+        (Framework::HadoopMrR1, 7300.0, 9600.0),
+        (Framework::SectorSphere, 4200.0, 4400.0),
+    ];
+    let mut scenarios = Vec::new();
+    for (fw, p_local, p_dist) in paper {
+        for (tag, placement, psecs) in [
+            ("local", Placement::SingleSite { site: 0, nodes: 28 }, p_local),
+            ("dist", Placement::PerSite(7), p_dist),
+        ] {
+            scenarios.push(
+                Testbed::builder()
+                    .topology(TopologySpec::Oct2009)
+                    .placement(placement)
+                    .framework(fw)
+                    .workload(WorkloadSpec::malstone_a(15_000_000_000))
+                    .name(&format!("table2/{}/{}", fw.name(), tag))
+                    .paper_secs(psecs)
+                    .build(),
+            );
+        }
+    }
+    ScenarioSet {
+        name: "table2",
+        description: "Table 2: local vs distributed wide-area penalty (15B records, 28 nodes)",
+        scenarios,
+        check: Some(check_table2),
+    }
+}
+
+fn check_table2(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 6 {
+        return vec![ShapeCheck::new("table2 arity", false, format!("expected 6 reports, got {}", r.len()))];
+    }
+    let r3 = wide_area_penalty(&r[0], &r[1]);
+    let r1 = wide_area_penalty(&r[2], &r[3]);
+    let sec = wide_area_penalty(&r[4], &r[5]);
+    vec![
+        ShapeCheck::new(
+            "hadoop 3-replica penalty is large",
+            r3 > 0.15,
+            format!("{:+.1}% (paper +34.1%)", r3 * 100.0),
+        ),
+        ShapeCheck::new(
+            "hadoop 1-replica penalty is real",
+            r1 > 0.04,
+            format!("{:+.1}% (paper +31.5%)", r1 * 100.0),
+        ),
+        ShapeCheck::new(
+            "sector penalty is negligible",
+            sec.abs() < 0.06,
+            format!("{:+.1}% (paper +4.8%)", sec * 100.0),
+        ),
+        ShapeCheck::new(
+            "sector out-penalized by both hadoop rows",
+            sec < r1 && sec < r3,
+            format!("sector {:+.1}% vs r1 {:+.1}% / r3 {:+.1}%", sec * 100.0, r1 * 100.0, r3 * 100.0),
+        ),
+        ShapeCheck::new(
+            "1-replica hadoop faster than 3-replica",
+            r[2].simulated_secs < r[0].simulated_secs && r[3].simulated_secs < r[1].simulated_secs,
+            format!("local {:.0}s<{:.0}s dist {:.0}s<{:.0}s",
+                r[2].simulated_secs, r[0].simulated_secs, r[3].simulated_secs, r[1].simulated_secs),
+        ),
+        ShapeCheck::new(
+            "sector fastest distributed",
+            r[5].simulated_secs < r[3].simulated_secs,
+            format!("{:.0}s < {:.0}s", r[5].simulated_secs, r[3].simulated_secs),
+        ),
+        ShapeCheck::new(
+            "distributed runs cross the WAN, local runs do not",
+            r[1].wan_bytes > 0.0
+                && r[3].wan_bytes > 0.0
+                && r[5].wan_bytes > 0.0
+                && r[0].wan_bytes == 0.0
+                && r[2].wan_bytes == 0.0
+                && r[4].wan_bytes == 0.0,
+            format!("dist {:.2e}/{:.2e}/{:.2e}B, local {:.0}/{:.0}/{:.0}B",
+                r[1].wan_bytes, r[3].wan_bytes, r[5].wan_bytes,
+                r[0].wan_bytes, r[2].wan_bytes, r[4].wan_bytes),
+        ),
+    ]
+}
+
+/// A Sector/Sphere scale ladder on the Table-1 layout: 2.5B → 5B → 10B
+/// records. The simulator is shape-preserving in scale, so the ladder
+/// should be monotone and roughly linear.
+fn scale_ladder_set() -> ScenarioSet {
+    let scenarios = [2_500_000_000u64, 5_000_000_000, 10_000_000_000]
+        .into_iter()
+        .map(|records| {
+            Testbed::builder()
+                .topology(TopologySpec::Oct2009)
+                .placement(Placement::PerSite(5))
+                .framework(Framework::SectorSphere)
+                .workload(WorkloadSpec::malstone_a(records))
+                .name(&format!("scale-ladder/sector-sphere/{}M", records / 1_000_000))
+                .build()
+        })
+        .collect();
+    ScenarioSet {
+        name: "scale-ladder",
+        description: "Sector/Sphere MalStone-A at 2.5B/5B/10B records on 20 nodes (scaling sweep)",
+        scenarios,
+        check: Some(check_scale_ladder),
+    }
+}
+
+fn check_scale_ladder(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 3 {
+        return vec![ShapeCheck::new("ladder arity", false, format!("expected 3 reports, got {}", r.len()))];
+    }
+    let (t1, t2, t3) = (r[0].simulated_secs, r[1].simulated_secs, r[2].simulated_secs);
+    let ratio = t3 / t1;
+    vec![
+        ShapeCheck::new(
+            "time grows monotonically with scale",
+            t1 < t2 && t2 < t3,
+            format!("{t1:.0}s < {t2:.0}s < {t3:.0}s"),
+        ),
+        ShapeCheck::new(
+            "4× records cost roughly 4× time",
+            ratio > 2.0 && ratio < 8.0,
+            format!("{ratio:.1}× for 4× records"),
+        ),
+    ]
+}
+
+/// The wide-area pair Table 2 does not cover: Hadoop Streams local vs
+/// distributed. Streams moves its shuffle over TCP too, so it should pay
+/// a positive penalty.
+fn local_vs_wan_set() -> ScenarioSet {
+    let scenarios = [
+        ("local", Placement::SingleSite { site: 0, nodes: 28 }),
+        ("dist", Placement::PerSite(7)),
+    ]
+    .into_iter()
+    .map(|(tag, placement)| {
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(placement)
+            .framework(Framework::HadoopStreams)
+            .workload(WorkloadSpec::malstone_a(15_000_000_000))
+            .name(&format!("local-vs-wan/hadoop-streams/{tag}"))
+            .build()
+    })
+    .collect();
+    ScenarioSet {
+        name: "local-vs-wan",
+        description: "Hadoop Streams local-vs-wide-area pair (the row Table 2 leaves out)",
+        scenarios,
+        check: Some(check_local_vs_wan),
+    }
+}
+
+fn check_local_vs_wan(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 2 {
+        return vec![ShapeCheck::new("pair arity", false, format!("expected 2 reports, got {}", r.len()))];
+    }
+    let pen = wide_area_penalty(&r[0], &r[1]);
+    vec![
+        ShapeCheck::new(
+            "streams pays a positive wide-area penalty",
+            pen > 0.0,
+            format!("{:+.1}%", pen * 100.0),
+        ),
+        ShapeCheck::new(
+            "only the distributed run crosses the WAN",
+            r[1].wan_bytes > 0.0 && r[0].wan_bytes == 0.0,
+            format!("dist {:.2e}B, local {:.0}B", r[1].wan_bytes, r[0].wan_bytes),
+        ),
+    ]
+}
+
+/// Per-site dropout: the full 7×4 Sector layout vs the same sweep with
+/// the UCSD site dropped (21 nodes carrying the same data) — the
+/// provisioning question "what does losing a site cost?".
+fn site_dropout_set() -> ScenarioSet {
+    let scenarios = vec![
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(7))
+            .framework(Framework::SectorSphere)
+            .workload(WorkloadSpec::malstone_a(15_000_000_000))
+            .name("site-dropout/sector-sphere/full")
+            .build(),
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSiteExcept { per_site: 7, excluded_site: 3 })
+            .framework(Framework::SectorSphere)
+            .workload(WorkloadSpec::malstone_a(15_000_000_000))
+            .name("site-dropout/sector-sphere/drop-ucsd")
+            .build(),
+    ];
+    ScenarioSet {
+        name: "site-dropout",
+        description: "Sector/Sphere with one site dropped: the cost of losing Calit2-UCSD",
+        scenarios,
+        check: Some(check_site_dropout),
+    }
+}
+
+fn check_site_dropout(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 2 {
+        return vec![ShapeCheck::new("dropout arity", false, format!("expected 2 reports, got {}", r.len()))];
+    }
+    let ratio = r[1].simulated_secs / r[0].simulated_secs;
+    vec![ShapeCheck::new(
+        "dropping a site slows the run (more work per node)",
+        ratio > 1.05,
+        format!("{:.0}s on 21 nodes vs {:.0}s on 28 ({ratio:.2}×)", r[1].simulated_secs, r[0].simulated_secs),
+    )]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runner::{all_pass, ScenarioRunner};
+
+    // Scaled-down runs keep the event count small while preserving shape.
+    const SCALE: u64 = 200;
+
+    fn run_set(name: &str, div: u64) -> (ScenarioSet, Vec<RunReport>) {
+        let set = find_set(name).unwrap().scaled_down(div);
+        let reports = ScenarioRunner::new().run_all(&set.scenarios);
+        (set, reports)
+    }
+
+    fn assert_checks_pass(set: &ScenarioSet, reports: &[RunReport]) {
+        let checks = set.run_checks(reports);
+        assert!(!checks.is_empty());
+        for c in &checks {
+            assert!(c.pass, "{}: {}", c.name, c.detail);
+        }
+        assert!(all_pass(&checks));
+    }
+
+    #[test]
+    fn table1_shape_holds() {
+        let (set, reports) = run_set("table1", SCALE);
+        assert_eq!(reports.len(), 6);
+        assert_checks_pass(&set, &reports);
+    }
+
+    #[test]
+    fn table2_shape_holds() {
+        let (set, reports) = run_set("table2", SCALE);
+        assert_eq!(reports.len(), 6);
+        assert_checks_pass(&set, &reports);
+    }
+
+    #[test]
+    fn scale_ladder_is_monotone() {
+        let (set, reports) = run_set("scale-ladder", SCALE);
+        assert_checks_pass(&set, &reports);
+    }
+
+    #[test]
+    fn new_pair_sets_hold_shape() {
+        let (set, reports) = run_set("local-vs-wan", 500);
+        assert_checks_pass(&set, &reports);
+        let (set, reports) = run_set("site-dropout", 500);
+        assert_checks_pass(&set, &reports);
+    }
+
+    #[test]
+    fn registry_lists_expected_sets() {
+        let names: Vec<&str> = scenario_sets().iter().map(|s| s.name).collect();
+        for expect in ["table1", "table2", "scale-ladder", "local-vs-wan", "site-dropout"] {
+            assert!(names.contains(&expect), "missing set {expect}");
+        }
+        assert!(find_set("no-such-set").is_none());
+        // Scaling a set scales every scenario and its paper reference.
+        let t1 = find_set("table1").unwrap().scaled_down(100);
+        assert_eq!(t1.scenarios[0].workload.total_records, 100_000_000);
+        assert!(t1.scenarios[0].paper_secs.unwrap() < 300.0);
+        assert!(t1.has_checks());
+    }
+}

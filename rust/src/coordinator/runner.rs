@@ -1,0 +1,531 @@
+//! The single execution path for every scenario: [`ScenarioRunner`] turns
+//! a [`Scenario`] into a structured, JSON-serializable [`RunReport`].
+//!
+//! The runner owns all the substrate wiring the old free-function drivers
+//! duplicated — cluster construction, HDFS namenode setup, Sector segment
+//! registration, chained MapReduce jobs, optional monitoring — and
+//! augments the simulated makespan with per-site flow statistics read
+//! from [`crate::net::flows::FlowNet`]'s link counters, engine-specific
+//! metrics, and the paper reference carried by the scenario.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::hadoop::hdfs::{HdfsConfig, Namenode};
+use crate::hadoop::mapreduce::{malstone_jobs, uniform_shards, JobReport, MapReduceEngine};
+use crate::hadoop::FrameworkParams;
+use crate::malstone::record::RECORD_BYTES;
+use crate::monitor::Monitor;
+use crate::net::topology::LinkKind;
+use crate::net::{Cluster, LinkId, NodeId};
+use crate::sector::master::{SectorMaster, Segment};
+use crate::sector::sphere::SphereReport;
+use crate::sector::SphereEngine;
+use crate::sim::Engine;
+use crate::util::json::{obj, Json};
+
+use super::scenario::{Framework, Scenario, WorkloadSpec};
+
+/// Traffic through one site's rack uplinks over a run (bytes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteFlow {
+    pub site: String,
+    pub nodes_used: usize,
+    pub uplink_tx_bytes: f64,
+    pub uplink_rx_bytes: f64,
+}
+
+/// Summary of the monitoring series collected during a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorSummary {
+    pub samples: u64,
+    /// Nodes whose NIC series saw any traffic.
+    pub busy_nodes: usize,
+}
+
+/// The structured result of one scenario run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunReport {
+    pub scenario: String,
+    pub framework: String,
+    pub variant: String,
+    pub topology: String,
+    pub placement: String,
+    pub nodes: usize,
+    pub total_records: u64,
+    /// Simulated makespan, seconds.
+    pub simulated_secs: f64,
+    /// Paper-measured reference (already scaled with the workload).
+    pub paper_secs: Option<f64>,
+    /// Bytes that crossed WAN links.
+    pub wan_bytes: f64,
+    /// Per-site rack-uplink traffic.
+    pub site_flows: Vec<SiteFlow>,
+    /// Engine-specific metrics (sorted by key).
+    pub metrics: Vec<(String, f64)>,
+    pub monitor: Option<MonitorSummary>,
+}
+
+impl RunReport {
+    /// Simulated-over-paper ratio, when a reference exists.
+    pub fn paper_ratio(&self) -> Option<f64> {
+        self.paper_secs.map(|p| self.simulated_secs / p)
+    }
+
+    /// Serialize to the crate's dependency-free JSON value.
+    pub fn to_json(&self) -> Json {
+        let flows: Vec<Json> = self
+            .site_flows
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("site", Json::Str(f.site.clone())),
+                    ("nodes_used", Json::Num(f.nodes_used as f64)),
+                    ("uplink_tx_bytes", Json::Num(f.uplink_tx_bytes)),
+                    ("uplink_rx_bytes", Json::Num(f.uplink_rx_bytes)),
+                ])
+            })
+            .collect();
+        let metrics =
+            Json::Obj(self.metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect());
+        let monitor = match &self.monitor {
+            Some(m) => obj(vec![
+                ("samples", Json::Num(m.samples as f64)),
+                ("busy_nodes", Json::Num(m.busy_nodes as f64)),
+            ]),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("framework", Json::Str(self.framework.clone())),
+            ("variant", Json::Str(self.variant.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("placement", Json::Str(self.placement.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("total_records", Json::Num(self.total_records as f64)),
+            ("simulated_secs", Json::Num(self.simulated_secs)),
+            ("paper_secs", self.paper_secs.map(Json::Num).unwrap_or(Json::Null)),
+            ("wan_bytes", Json::Num(self.wan_bytes)),
+            ("site_flows", Json::Arr(flows)),
+            ("metrics", metrics),
+            ("monitor", monitor),
+        ])
+    }
+
+    /// Parse a report back from JSON (round-trips [`RunReport::to_json`]).
+    pub fn from_json(j: &Json) -> Result<RunReport, String> {
+        fn num(j: &Json, k: &str) -> Result<f64, String> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing number '{k}'"))
+        }
+        fn string(j: &Json, k: &str) -> Result<String, String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing string '{k}'"))
+        }
+        let site_flows = match j.get("site_flows") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .map(|x| {
+                    Ok(SiteFlow {
+                        site: string(x, "site")?,
+                        nodes_used: num(x, "nodes_used")? as usize,
+                        uplink_tx_bytes: num(x, "uplink_tx_bytes")?,
+                        uplink_rx_bytes: num(x, "uplink_rx_bytes")?,
+                    })
+                })
+                .collect::<Result<Vec<SiteFlow>, String>>()?,
+            _ => return Err("missing array 'site_flows'".to_string()),
+        };
+        let metrics = match j.get("metrics") {
+            Some(Json::Obj(m)) => m
+                .iter()
+                .map(|(k, v)| {
+                    v.as_f64().map(|x| (k.clone(), x)).ok_or_else(|| format!("bad metric '{k}'"))
+                })
+                .collect::<Result<Vec<(String, f64)>, String>>()?,
+            _ => return Err("missing object 'metrics'".to_string()),
+        };
+        let monitor = match j.get("monitor") {
+            None | Some(Json::Null) => None,
+            Some(m) => Some(MonitorSummary {
+                samples: num(m, "samples")? as u64,
+                busy_nodes: num(m, "busy_nodes")? as usize,
+            }),
+        };
+        let paper_secs = match j.get("paper_secs") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or("bad 'paper_secs'")?),
+        };
+        Ok(RunReport {
+            scenario: string(j, "scenario")?,
+            framework: string(j, "framework")?,
+            variant: string(j, "variant")?,
+            topology: string(j, "topology")?,
+            placement: string(j, "placement")?,
+            nodes: num(j, "nodes")? as usize,
+            total_records: num(j, "total_records")? as u64,
+            simulated_secs: num(j, "simulated_secs")?,
+            paper_secs,
+            wan_bytes: num(j, "wan_bytes")?,
+            site_flows,
+            metrics,
+            monitor,
+        })
+    }
+}
+
+/// One verdict from a scenario set's shape check.
+#[derive(Debug, Clone)]
+pub struct ShapeCheck {
+    pub name: String,
+    pub pass: bool,
+    pub detail: String,
+}
+
+impl ShapeCheck {
+    pub fn new(name: impl Into<String>, pass: bool, detail: impl Into<String>) -> ShapeCheck {
+        ShapeCheck { name: name.into(), pass, detail: detail.into() }
+    }
+}
+
+/// True when every check passed (vacuously true for checkless sets).
+pub fn all_pass(checks: &[ShapeCheck]) -> bool {
+    checks.iter().all(|c| c.pass)
+}
+
+/// The wide-area penalty of a local/distributed report pair — the
+/// single definition shared by shape checks, benches, and tests.
+pub fn wide_area_penalty(local: &RunReport, dist: &RunReport) -> f64 {
+    (dist.simulated_secs - local.simulated_secs) / local.simulated_secs
+}
+
+/// Render reports as an aligned table (the CLI / bench output).
+pub fn format_reports(reports: &[RunReport]) -> String {
+    use crate::util::units::{fmt_bytes, fmt_paper_time};
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<40} {:>10} {:>10} {:>9} {:>10}\n",
+        "scenario", "simulated", "paper", "sim/paper", "wan"
+    ));
+    for r in reports {
+        let paper = r.paper_secs.map(fmt_paper_time).unwrap_or_else(|| "-".to_string());
+        let ratio = r.paper_ratio().map(|x| format!("{x:.2}")).unwrap_or_else(|| "-".to_string());
+        s.push_str(&format!(
+            "{:<40} {:>10} {:>10} {:>9} {:>10}\n",
+            r.scenario,
+            fmt_paper_time(r.simulated_secs),
+            paper,
+            ratio,
+            fmt_bytes(r.wan_bytes as u64),
+        ));
+    }
+    s
+}
+
+/// Render shape-check verdicts, one per line.
+pub fn format_checks(checks: &[ShapeCheck]) -> String {
+    let mut s = String::new();
+    for c in checks {
+        s.push_str(&format!("{} {} — {}\n", if c.pass { "PASS" } else { "FAIL" }, c.name, c.detail));
+    }
+    s
+}
+
+enum Outcome {
+    Hadoop { finished_at: f64, job1: JobReport, job2: JobReport },
+    Sphere { finished_at: f64, report: SphereReport },
+}
+
+/// Executes scenarios on the discrete-event substrate.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioRunner {
+    monitor_interval: Option<f64>,
+}
+
+impl ScenarioRunner {
+    pub fn new() -> ScenarioRunner {
+        ScenarioRunner { monitor_interval: None }
+    }
+
+    /// Sample the monitoring system every `interval` simulated seconds
+    /// during runs; the report then carries a [`MonitorSummary`].
+    pub fn with_monitor(mut self, interval: f64) -> ScenarioRunner {
+        assert!(interval > 0.0);
+        self.monitor_interval = Some(interval);
+        self
+    }
+
+    /// Run one scenario to completion and assemble its report.
+    pub fn run(&self, sc: &Scenario) -> RunReport {
+        let cluster = Cluster::new(sc.topology.build());
+        let nodes = sc.placement.select(&cluster.topo);
+        assert!(!nodes.is_empty(), "scenario '{}' selected no nodes", sc.name);
+        let mut eng = Engine::new();
+        let mon = self.monitor_interval.map(|iv| {
+            let m = Monitor::new(cluster.topo.clone(), iv);
+            Monitor::install(&m, &mut eng, &cluster.net, cluster.pools.clone());
+            m
+        });
+        let outcome: Rc<RefCell<Option<Outcome>>> = Rc::new(RefCell::new(None));
+        match sc.framework {
+            Framework::SectorSphere => {
+                start_sphere(&cluster, &nodes, &sc.workload, &mut eng, outcome.clone())
+            }
+            _ => start_hadoop(
+                &cluster,
+                &nodes,
+                sc.framework.params(),
+                &sc.workload,
+                &mut eng,
+                outcome.clone(),
+            ),
+        }
+        match &mon {
+            Some(m) => {
+                // The sampling loop reschedules itself forever, so advance
+                // in chunks until the workload lands, then let it drain.
+                let chunk = (self.monitor_interval.unwrap_or(1.0) * 64.0).max(60.0);
+                let mut t = eng.now();
+                // Even unscaled paper runs finish within ~1e5 simulated
+                // seconds; 1e8 is far past any legitimate scenario.
+                while outcome.borrow().is_none() {
+                    t += chunk;
+                    eng.run_until(t);
+                    assert!(t < 1e8, "scenario '{}' did not converge by t={t:.0}s", sc.name);
+                }
+                m.borrow_mut().disable();
+                eng.run();
+            }
+            None => eng.run(),
+        }
+        let out = outcome
+            .borrow_mut()
+            .take()
+            .unwrap_or_else(|| panic!("scenario '{}' did not complete", sc.name));
+
+        let mut metrics: Vec<(String, f64)> = Vec::new();
+        let finished_at = match out {
+            Outcome::Hadoop { finished_at, job1, job2 } => {
+                metrics.push(("job1_makespan".to_string(), job1.makespan));
+                metrics.push(("job1_map_phase".to_string(), job1.map_phase));
+                metrics.push(("job1_shuffle_bytes".to_string(), job1.shuffle_bytes));
+                metrics.push(("job1_output_bytes".to_string(), job1.output_bytes));
+                metrics.push(("job2_makespan".to_string(), job2.makespan));
+                metrics.push(("maps".to_string(), job1.maps as f64));
+                metrics.push(("reduces".to_string(), job1.reduces as f64));
+                finished_at
+            }
+            Outcome::Sphere { finished_at, report } => {
+                metrics.push(("scan_phase".to_string(), report.scan_phase));
+                metrics.push(("aggregate_phase".to_string(), report.aggregate_phase));
+                metrics.push(("segments".to_string(), report.segments as f64));
+                metrics.push(("stolen_segments".to_string(), report.stolen_segments as f64));
+                metrics.push(("exchange_bytes".to_string(), report.exchange_bytes));
+                finished_at
+            }
+        };
+        metrics.sort_by(|a, b| a.0.cmp(&b.0));
+
+        let netb = cluster.net.borrow();
+        let site_flows: Vec<SiteFlow> = cluster
+            .topo
+            .sites
+            .iter()
+            .enumerate()
+            .map(|(i, site)| {
+                let mut tx = 0.0;
+                let mut rx = 0.0;
+                for rid in &site.racks {
+                    tx += netb.link_bytes(cluster.topo.racks[rid.0].uplink_tx);
+                    rx += netb.link_bytes(cluster.topo.racks[rid.0].uplink_rx);
+                }
+                SiteFlow {
+                    site: site.name.clone(),
+                    nodes_used: nodes.iter().filter(|&&n| cluster.topo.node(n).site.0 == i).count(),
+                    uplink_tx_bytes: tx,
+                    uplink_rx_bytes: rx,
+                }
+            })
+            .collect();
+        // The monitor drains WAN byte counters as it samples; add the
+        // observed series back to the residual for the run total.
+        let mut wan_bytes: f64 = cluster
+            .topo
+            .links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind == LinkKind::Wan)
+            .map(|(i, _)| netb.link_bytes(LinkId(i)))
+            .sum();
+        let monitor = mon.map(|m| {
+            let m = m.borrow();
+            wan_bytes += m.wan_bytes_observed();
+            let busy = cluster
+                .topo
+                .node_ids()
+                .iter()
+                .filter(|&&n| m.node_nic_rate(n, usize::MAX) > 0.0)
+                .count();
+            MonitorSummary { samples: m.samples_taken(), busy_nodes: busy }
+        });
+
+        RunReport {
+            scenario: sc.name.clone(),
+            framework: sc.framework.name().to_string(),
+            variant: sc.workload.variant.letter().to_string(),
+            topology: sc.topology.label(),
+            placement: sc.placement.label(),
+            nodes: nodes.len(),
+            total_records: sc.workload.total_records,
+            simulated_secs: finished_at,
+            paper_secs: sc.paper_secs,
+            wan_bytes,
+            site_flows,
+            metrics,
+            monitor,
+        }
+    }
+
+    /// Run a slice of scenarios in order.
+    pub fn run_all(&self, scenarios: &[Scenario]) -> Vec<RunReport> {
+        scenarios.iter().map(|sc| self.run(sc)).collect()
+    }
+}
+
+fn start_hadoop(
+    cluster: &Cluster,
+    nodes: &[NodeId],
+    params: FrameworkParams,
+    w: &WorkloadSpec,
+    eng: &mut Engine,
+    out: Rc<RefCell<Option<Outcome>>>,
+) {
+    let nn = Rc::new(RefCell::new(Namenode::with_members(
+        cluster.topo.clone(),
+        HdfsConfig { replication: params.output_replication, ..Default::default() },
+        42,
+        nodes.to_vec(),
+    )));
+    let shards = uniform_shards(nodes, w.total_records);
+    let (job1, job2_of) =
+        malstone_jobs(&params, nodes, &shards, w.variant.is_b(), 64 * 1024 * 1024);
+    let cluster2 = cluster.clone();
+    let nn2 = nn.clone();
+    MapReduceEngine::simulate(cluster, &nn, eng, job1, move |eng, r1| {
+        let job2 = job2_of(&r1);
+        let out2 = out.clone();
+        MapReduceEngine::simulate(&cluster2, &nn2, eng, job2, move |eng, r2| {
+            *out2.borrow_mut() =
+                Some(Outcome::Hadoop { finished_at: eng.now(), job1: r1, job2: r2 });
+        });
+    });
+}
+
+fn start_sphere(
+    cluster: &Cluster,
+    nodes: &[NodeId],
+    w: &WorkloadSpec,
+    eng: &mut Engine,
+    out: Rc<RefCell<Option<Outcome>>>,
+) {
+    let mut master = SectorMaster::new(cluster.topo.clone());
+    master.register_file("malstone", sector_segments(nodes, w.total_records));
+    SphereEngine::simulate(
+        cluster,
+        &master,
+        eng,
+        "malstone",
+        nodes,
+        FrameworkParams::sphere(),
+        w.variant.is_b(),
+        move |eng, r| {
+            *out.borrow_mut() = Some(Outcome::Sphere { finished_at: eng.now(), report: r });
+        },
+    );
+}
+
+/// Sector stores each node's shard as several 64 MB segments so SPE
+/// slots stay busy and stealing has granularity (like the real SDFS).
+fn sector_segments(nodes: &[NodeId], total_records: u64) -> Vec<Segment> {
+    let per = total_records.div_ceil(nodes.len() as u64);
+    let seg_bytes: u64 = 64 * 1024 * 1024;
+    let mut segments = Vec::new();
+    for &n in nodes {
+        let mut remaining_b = per * RECORD_BYTES as u64;
+        let mut remaining_r = per;
+        while remaining_b > 0 {
+            let b = remaining_b.min(seg_bytes);
+            let r = ((b as f64 / (per * RECORD_BYTES as u64) as f64) * per as f64).round() as u64;
+            segments.push(Segment { node: n, bytes: b, records: r.min(remaining_r).max(1) });
+            remaining_b -= b;
+            remaining_r = remaining_r.saturating_sub(r);
+        }
+    }
+    segments
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scenario::{Placement, Testbed, TopologySpec};
+
+    fn smoke(framework: Framework, records: u64) -> Scenario {
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .framework(framework)
+            .workload(WorkloadSpec::malstone_a(records))
+            .name("runner-smoke")
+            .build()
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let rep = ScenarioRunner::new().run(&smoke(Framework::SectorSphere, 2_000_000));
+        assert!(rep.simulated_secs > 0.0);
+        let text = rep.to_json().to_string();
+        let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn hadoop_run_reports_metrics_and_flows() {
+        let rep = ScenarioRunner::new().run(&smoke(Framework::HadoopStreams, 4_000_000));
+        assert!(rep.simulated_secs > 0.0);
+        assert_eq!(rep.site_flows.len(), 4);
+        assert!(rep.metrics.iter().any(|(k, _)| k == "job1_makespan"));
+        // Per-site placement shuffles across sites → WAN traffic.
+        assert!(rep.wan_bytes > 0.0, "wan_bytes = {}", rep.wan_bytes);
+        // Metrics are sorted (JSON round-trip relies on it).
+        let keys: Vec<&str> = rep.metrics.iter().map(|(k, _)| k.as_str()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn single_site_run_keeps_wan_quiet() {
+        let sc = Testbed::builder()
+            .framework(Framework::SectorSphere)
+            .placement(Placement::SingleSite { site: 0, nodes: 5 })
+            .workload(WorkloadSpec::malstone_a(2_000_000))
+            .name("local-smoke")
+            .build();
+        let rep = ScenarioRunner::new().run(&sc);
+        assert_eq!(rep.wan_bytes, 0.0);
+        assert_eq!(rep.site_flows[0].nodes_used, 5);
+        assert_eq!(rep.site_flows[1].nodes_used, 0);
+    }
+
+    #[test]
+    fn monitored_run_collects_samples() {
+        let rep =
+            ScenarioRunner::new().with_monitor(1.0).run(&smoke(Framework::SectorSphere, 20_000_000));
+        let m = rep.monitor.expect("monitor summary");
+        assert!(m.samples > 0, "no samples over {:.1}s", rep.simulated_secs);
+        assert!(m.busy_nodes > 0);
+        let text = rep.to_json().to_string();
+        let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rep);
+    }
+}

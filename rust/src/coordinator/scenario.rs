@@ -1,0 +1,412 @@
+//! The unified scenario API: describe *what* to run — topology, node
+//! placement, framework, workload — as plain data, then hand the
+//! [`Scenario`] to a [`crate::coordinator::runner::ScenarioRunner`].
+//!
+//! Every experiment in the repo (Tables 1–2, the benches, the examples,
+//! the integration tests, and the new registry sweeps) is a `Scenario`
+//! built through [`Testbed::builder`]; nothing hand-wires topology +
+//! framework + workload anymore.
+
+use std::fmt;
+use std::rc::Rc;
+
+use crate::hadoop::FrameworkParams;
+use crate::net::{NodeId, Topology};
+
+/// How to build the physical testbed for a run.
+#[derive(Clone)]
+pub enum TopologySpec {
+    /// Figure 2: the four-site, 128-node 2009 testbed on the CiscoWave.
+    Oct2009,
+    /// Builder sugar over the same physical testbed: defaults the
+    /// placement to 28 nodes on one site (the "local" half of a
+    /// wide-area-penalty pair). An explicit `.placement(..)` wins, so
+    /// the *placement* label — not this spec — records locality.
+    Local { site: usize },
+    /// Any topology: the builder closure runs once per scenario run.
+    Custom(Rc<dyn Fn() -> Topology>),
+}
+
+impl TopologySpec {
+    /// Materialize the topology.
+    pub fn build(&self) -> Topology {
+        match self {
+            TopologySpec::Oct2009 | TopologySpec::Local { .. } => Topology::oct_2009(),
+            TopologySpec::Custom(f) => f(),
+        }
+    }
+
+    /// Short label for reports. `Local` labels as the physical testbed
+    /// it builds — locality is a placement property, and labeling it
+    /// here would misdescribe runs whose placement was overridden.
+    pub fn label(&self) -> String {
+        match self {
+            TopologySpec::Oct2009 | TopologySpec::Local { .. } => "oct-2009".to_string(),
+            TopologySpec::Custom(_) => "custom".to_string(),
+        }
+    }
+}
+
+impl fmt::Debug for TopologySpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Which nodes of the topology host data and compute.
+#[derive(Clone)]
+pub enum Placement {
+    /// The first `n` nodes of every site (Table 1's 5×4, Table 2's 7×4).
+    PerSite(usize),
+    /// The first `nodes` nodes of one site (Table 2's 28-local runs).
+    SingleSite { site: usize, nodes: usize },
+    /// Per-site placement with one site dropped — the site-dropout sweep.
+    PerSiteExcept { per_site: usize, excluded_site: usize },
+    /// Any selection rule.
+    Custom(Rc<dyn Fn(&Topology) -> Vec<NodeId>>),
+}
+
+impl Placement {
+    /// Resolve the placement against a topology.
+    pub fn select(&self, topo: &Topology) -> Vec<NodeId> {
+        match self {
+            Placement::PerSite(n) => Self::per_site(topo, *n, None),
+            Placement::PerSiteExcept { per_site, excluded_site } => {
+                Self::per_site(topo, *per_site, Some(*excluded_site))
+            }
+            Placement::SingleSite { site, nodes } => {
+                assert!(*site < topo.sites.len(), "placement site {site} out of range");
+                let mut out = Vec::new();
+                for rid in &topo.sites[*site].racks {
+                    for &node in &topo.racks[rid.0].nodes {
+                        if out.len() == *nodes {
+                            return out;
+                        }
+                        out.push(node);
+                    }
+                }
+                out
+            }
+            Placement::Custom(f) => f(topo),
+        }
+    }
+
+    fn per_site(topo: &Topology, per_site: usize, excluded: Option<usize>) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        for (i, site) in topo.sites.iter().enumerate() {
+            if excluded == Some(i) {
+                continue;
+            }
+            let mut left = per_site;
+            for rid in &site.racks {
+                for &node in &topo.racks[rid.0].nodes {
+                    if left == 0 {
+                        break;
+                    }
+                    out.push(node);
+                    left -= 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            Placement::PerSite(n) => format!("per-site-{n}"),
+            Placement::SingleSite { site, nodes } => format!("site{site}-{nodes}"),
+            Placement::PerSiteExcept { per_site, excluded_site } => {
+                format!("per-site-{per_site}-minus-site{excluded_site}")
+            }
+            Placement::Custom(_) => "custom".to_string(),
+        }
+    }
+}
+
+impl fmt::Debug for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// The distributed data-processing framework under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framework {
+    HadoopMr,
+    /// Hadoop MapReduce with `dfs.replication = 1` (Table 2's middle row).
+    HadoopMrR1,
+    HadoopStreams,
+    SectorSphere,
+}
+
+impl Framework {
+    pub const ALL: [Framework; 4] =
+        [Framework::HadoopMr, Framework::HadoopMrR1, Framework::HadoopStreams, Framework::SectorSphere];
+
+    /// The calibrated cost model for this framework.
+    pub fn params(&self) -> FrameworkParams {
+        match self {
+            Framework::HadoopMr => FrameworkParams::hadoop_mapreduce(),
+            Framework::HadoopMrR1 => FrameworkParams::hadoop_mapreduce_r1(),
+            Framework::HadoopStreams => FrameworkParams::hadoop_streams(),
+            Framework::SectorSphere => FrameworkParams::sphere(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Framework::HadoopMr => "hadoop-mapreduce",
+            Framework::HadoopMrR1 => "hadoop-mapreduce-r1",
+            Framework::HadoopStreams => "hadoop-streams",
+            Framework::SectorSphere => "sector-sphere",
+        }
+    }
+}
+
+/// MalStone variant: A (point-in-time ratios) or B (cumulative windows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    A,
+    B,
+}
+
+impl Variant {
+    pub fn letter(&self) -> char {
+        match self {
+            Variant::A => 'A',
+            Variant::B => 'B',
+        }
+    }
+
+    pub fn is_b(&self) -> bool {
+        matches!(self, Variant::B)
+    }
+}
+
+/// A MalStone workload at some scale.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadSpec {
+    pub variant: Variant,
+    pub total_records: u64,
+}
+
+impl WorkloadSpec {
+    pub fn malstone_a(total_records: u64) -> Self {
+        assert!(total_records > 0);
+        WorkloadSpec { variant: Variant::A, total_records }
+    }
+
+    pub fn malstone_b(total_records: u64) -> Self {
+        assert!(total_records > 0);
+        WorkloadSpec { variant: Variant::B, total_records }
+    }
+
+    /// Divide the record count by `div` (shape-preserving quick runs).
+    pub fn scaled_down(&self, div: u64) -> WorkloadSpec {
+        assert!(div > 0);
+        WorkloadSpec { variant: self.variant, total_records: (self.total_records / div).max(1) }
+    }
+}
+
+/// A fully-described experiment, ready for the runner.
+#[derive(Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub topology: TopologySpec,
+    pub placement: Placement,
+    pub framework: Framework,
+    pub workload: WorkloadSpec,
+    /// Paper-measured reference time in seconds, when the scenario
+    /// reproduces a published row (scaled along with the workload).
+    pub paper_secs: Option<f64>,
+}
+
+impl Scenario {
+    /// The same scenario with the workload (and paper reference) divided
+    /// by `div` — timing is ~linear in scale, so shape is preserved. The
+    /// name records the divisor (names often embed record counts).
+    pub fn scaled_down(&self, div: u64) -> Scenario {
+        assert!(div > 0);
+        Scenario {
+            name: if div == 1 { self.name.clone() } else { format!("{}/÷{div}", self.name) },
+            topology: self.topology.clone(),
+            placement: self.placement.clone(),
+            framework: self.framework,
+            workload: self.workload.scaled_down(div),
+            paper_secs: self.paper_secs.map(|p| p / div as f64),
+        }
+    }
+
+    /// One-line human description.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: {} malstone-{} {} records on {} / {}",
+            self.name,
+            self.framework.name(),
+            self.workload.variant.letter(),
+            self.workload.total_records,
+            self.topology.label(),
+            self.placement.label(),
+        )
+    }
+}
+
+impl fmt::Debug for Scenario {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.describe())
+    }
+}
+
+/// Entry point of the builder chain: `Testbed::builder()…build()`.
+pub struct Testbed;
+
+impl Testbed {
+    pub fn builder() -> TestbedBuilder {
+        TestbedBuilder {
+            name: None,
+            topology: TopologySpec::Oct2009,
+            placement: None,
+            framework: Framework::SectorSphere,
+            workload: WorkloadSpec::malstone_a(2_000_000),
+            paper_secs: None,
+        }
+    }
+}
+
+/// Builder for [`Scenario`]. Defaults: the 2009 testbed, 5 nodes per
+/// site (Table 1's layout), Sector/Sphere, MalStone-A at a 2M-record
+/// smoke scale.
+#[derive(Clone)]
+pub struct TestbedBuilder {
+    name: Option<String>,
+    topology: TopologySpec,
+    placement: Option<Placement>,
+    framework: Framework,
+    workload: WorkloadSpec,
+    paper_secs: Option<f64>,
+}
+
+impl TestbedBuilder {
+    pub fn topology(mut self, t: TopologySpec) -> Self {
+        self.topology = t;
+        self
+    }
+
+    pub fn placement(mut self, p: Placement) -> Self {
+        self.placement = Some(p);
+        self
+    }
+
+    pub fn framework(mut self, f: Framework) -> Self {
+        self.framework = f;
+        self
+    }
+
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.workload = w;
+        self
+    }
+
+    pub fn name(mut self, name: &str) -> Self {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    pub fn paper_secs(mut self, secs: f64) -> Self {
+        self.paper_secs = Some(secs);
+        self
+    }
+
+    pub fn build(self) -> Scenario {
+        // `Local { site }` topologies default to the Table-2 local layout
+        // (28 nodes on that site); everything else to Table 1's 5×4.
+        let placement = self.placement.unwrap_or_else(|| match self.topology {
+            TopologySpec::Local { site } => Placement::SingleSite { site, nodes: 28 },
+            _ => Placement::PerSite(5),
+        });
+        let name = self.name.unwrap_or_else(|| {
+            format!(
+                "{}-malstone-{}-{}rec-{}",
+                self.framework.name(),
+                self.workload.variant.letter().to_ascii_lowercase(),
+                self.workload.total_records,
+                placement.label(),
+            )
+        });
+        Scenario {
+            name,
+            topology: self.topology,
+            placement,
+            framework: self.framework,
+            workload: self.workload,
+            paper_secs: self.paper_secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_site_placement_counts() {
+        let topo = Topology::oct_2009();
+        let nodes = Placement::PerSite(5).select(&topo);
+        assert_eq!(nodes.len(), 20);
+        // Five from each of the four sites.
+        for s in 0..4 {
+            assert_eq!(nodes.iter().filter(|&&n| topo.node(n).site.0 == s).count(), 5);
+        }
+    }
+
+    #[test]
+    fn single_site_placement_stays_local() {
+        let topo = Topology::oct_2009();
+        let nodes = Placement::SingleSite { site: 2, nodes: 28 }.select(&topo);
+        assert_eq!(nodes.len(), 28);
+        assert!(nodes.iter().all(|&n| topo.node(n).site.0 == 2));
+    }
+
+    #[test]
+    fn per_site_except_drops_one_site() {
+        let topo = Topology::oct_2009();
+        let nodes = Placement::PerSiteExcept { per_site: 7, excluded_site: 3 }.select(&topo);
+        assert_eq!(nodes.len(), 21);
+        assert!(nodes.iter().all(|&n| topo.node(n).site.0 != 3));
+    }
+
+    #[test]
+    fn custom_placement_and_topology() {
+        let spec = TopologySpec::Custom(Rc::new(Topology::oct_2009));
+        let topo = spec.build();
+        assert_eq!(topo.num_nodes(), 128);
+        let pl = Placement::Custom(Rc::new(|t: &Topology| t.racks[0].nodes[..2].to_vec()));
+        assert_eq!(pl.select(&topo).len(), 2);
+        assert_eq!(spec.label(), "custom");
+    }
+
+    #[test]
+    fn builder_defaults_and_naming() {
+        let sc = Testbed::builder().framework(Framework::HadoopStreams).build();
+        assert_eq!(sc.framework, Framework::HadoopStreams);
+        assert!(sc.name.contains("hadoop-streams"), "{}", sc.name);
+        assert!(matches!(sc.placement, Placement::PerSite(5)));
+        let local = Testbed::builder().topology(TopologySpec::Local { site: 1 }).build();
+        assert!(matches!(local.placement, Placement::SingleSite { site: 1, nodes: 28 }));
+    }
+
+    #[test]
+    fn workload_and_scenario_scaling() {
+        let w = WorkloadSpec::malstone_b(10_000_000_000);
+        let s = w.scaled_down(200);
+        assert_eq!(s.total_records, 50_000_000);
+        assert!(s.variant.is_b());
+        let sc = Testbed::builder().workload(w).paper_secs(1000.0).name("x").build();
+        let sc2 = sc.scaled_down(100);
+        assert_eq!(sc2.workload.total_records, 100_000_000);
+        assert_eq!(sc2.paper_secs, Some(10.0));
+        assert_eq!(sc2.name, "x/÷100");
+        assert_eq!(sc.scaled_down(1).name, "x");
+    }
+}

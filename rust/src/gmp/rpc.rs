@@ -2,7 +2,12 @@
 //! (paper §4): a request is one GMP message, the response another.
 //!
 //! Frame layout inside the GMP payload (little-endian):
-//! `| tag u8 (0=req, 1=resp) | req_id u32 | method_len u16 | method | body |`
+//! `| tag u8 (0=req, 1=resp, 2=err) | req_id u32 | method_len u16 | method | body |`
+//!
+//! The error tag keeps server-side failures (unknown method) out of the
+//! success-payload channel: an `err` frame surfaces as `Err` on the
+//! client, so a handler may legitimately return bytes that *look* like
+//! an error message.
 
 use std::collections::HashMap;
 use std::net::SocketAddr;
@@ -14,6 +19,7 @@ use super::endpoint::GmpEndpoint;
 
 const TAG_REQ: u8 = 0;
 const TAG_RESP: u8 = 1;
+const TAG_ERR: u8 = 2;
 
 fn encode_frame(tag: u8, req_id: u32, method: &str, body: &[u8]) -> Vec<u8> {
     let mut b = Vec::with_capacity(7 + method.len() + body.len());
@@ -65,11 +71,11 @@ impl RpcServer {
                 if tag != TAG_REQ {
                     continue;
                 }
-                let resp_body = match handlers.get(&method) {
-                    Some(h) => h(&body),
-                    None => format!("ERR unknown method {method}").into_bytes(),
+                let (resp_tag, resp_body) = match handlers.get(&method) {
+                    Some(h) => (TAG_RESP, h(&body)),
+                    None => (TAG_ERR, format!("unknown method {method}").into_bytes()),
                 };
-                let frame = encode_frame(TAG_RESP, req_id, &method, &resp_body);
+                let frame = encode_frame(resp_tag, req_id, &method, &resp_body);
                 let _ = ep2.send(from, &frame);
             }
         });
@@ -91,7 +97,8 @@ impl Drop for RpcServer {
 }
 
 struct ClientShared {
-    responses: Mutex<HashMap<u32, Vec<u8>>>,
+    /// Completed calls: request id → (response tag, body).
+    responses: Mutex<HashMap<u32, (u8, Vec<u8>)>>,
     cv: Condvar,
 }
 
@@ -116,8 +123,8 @@ impl RpcClient {
                     continue;
                 };
                 if let Some((tag, req_id, _method, body)) = decode_frame(&msg) {
-                    if tag == TAG_RESP {
-                        s2.responses.lock().unwrap().insert(req_id, body);
+                    if tag == TAG_RESP || tag == TAG_ERR {
+                        s2.responses.lock().unwrap().insert(req_id, (tag, body));
                         s2.cv.notify_all();
                     }
                 }
@@ -127,7 +134,8 @@ impl RpcClient {
     }
 
     /// Call `method` on the server at `to`; blocks until the response or
-    /// `timeout`.
+    /// `timeout`. A server-side error frame (unknown method) surfaces as
+    /// `Err` — never as a success payload.
     pub fn call(&self, to: SocketAddr, method: &str, body: &[u8], timeout: Duration) -> std::io::Result<Vec<u8>> {
         let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let frame = encode_frame(TAG_REQ, req_id, method, body);
@@ -135,7 +143,13 @@ impl RpcClient {
         let deadline = Instant::now() + timeout;
         let mut resp = self.shared.responses.lock().unwrap();
         loop {
-            if let Some(body) = resp.remove(&req_id) {
+            if let Some((tag, body)) = resp.remove(&req_id) {
+                if tag == TAG_ERR {
+                    return Err(std::io::Error::other(format!(
+                        "rpc {method} to {to} failed: {}",
+                        String::from_utf8_lossy(&body)
+                    )));
+                }
                 return Ok(body);
             }
             let now = Instant::now();
@@ -196,11 +210,31 @@ mod tests {
     }
 
     #[test]
-    fn unknown_method_reports_error() {
+    fn unknown_method_surfaces_as_err() {
         let (_srv, addr) = echo_server();
         let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
-        let out = client.call(addr, "nope", b"", Duration::from_secs(2)).unwrap();
-        assert!(String::from_utf8_lossy(&out).starts_with("ERR"));
+        let err = client.call(addr, "nope", b"", Duration::from_secs(2)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::Other);
+        assert!(err.to_string().contains("unknown method nope"), "{err}");
+    }
+
+    #[test]
+    fn error_frames_are_distinguishable_from_error_looking_payloads() {
+        // A handler may legitimately return bytes that look like an error
+        // message; only the TAG_ERR frame must surface as Err.
+        let ep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+        let addr = ep.local_addr();
+        let mut handlers: HashMap<String, Handler> = HashMap::new();
+        handlers.insert(
+            "looks-bad".into(),
+            Box::new(|_: &[u8]| b"ERR unknown method fake".to_vec()),
+        );
+        let _srv = RpcServer::start(ep, handlers);
+        let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+        let out = client.call(addr, "looks-bad", b"", Duration::from_secs(2)).unwrap();
+        assert_eq!(out, b"ERR unknown method fake");
+        let err = client.call(addr, "missing", b"", Duration::from_secs(2)).unwrap_err();
+        assert!(err.to_string().contains("unknown method missing"), "{err}");
     }
 
     #[test]

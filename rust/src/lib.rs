@@ -12,11 +12,18 @@
 //!   transport models ([`transport`]), the real GMP messaging protocol and
 //!   RPC layer over UDP ([`gmp`]), the Sector/Sphere and Hadoop substrates
 //!   ([`sector`], [`hadoop`]), the MalStone benchmark suite ([`malstone`]),
-//!   the monitoring/visualization system ([`monitor`]), and the experiment
-//!   coordinator ([`coordinator`]).
+//!   and the monitoring/visualization system ([`monitor`]).
+//! - **Experiment surface** — every experiment (CLI subcommands, benches,
+//!   examples, integration tests) is a [`coordinator::Scenario`] built
+//!   with [`coordinator::Testbed::builder`] or drawn from the named
+//!   [`coordinator::registry`] sets, executed by a single
+//!   [`coordinator::ScenarioRunner`] that returns a JSON-serializable
+//!   [`coordinator::RunReport`] with paper references and shape checks.
 //! - **L2/L1 (python/, build-time only)** — the MalStone aggregation
 //!   dataflow (JAX) and the one-hot-matmul histogram kernel (Pallas),
-//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT.
+//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT
+//!   (behind the `pjrt` cargo feature; a stub degrades gracefully when
+//!   the `xla` dependency is unavailable).
 
 pub mod coordinator;
 pub mod gmp;

@@ -1,35 +1,56 @@
 //! `oct` — the Open Cloud Testbed CLI (leader entrypoint).
 //!
-//! Subcommands map one-to-one onto the paper's artifacts:
+//! Subcommands map onto the paper's artifacts and the scenario registry:
 //!
 //! ```text
-//! oct topology              # Figure 2: the 4-site testbed description
-//! oct table1 [scale]        # Table 1: MalStone-A/B × three frameworks
-//! oct table2 [scale]        # Table 2: local vs distributed penalty
-//! oct monitor [secs]        # Figure 3: live ANSI heatmap of a run
-//! oct provision             # §2.2: growth-plan provisioning demo
-//! oct kernel-check          # load AOT artifacts, verify vs oracle
+//! oct topology                        # Figure 2: the 4-site testbed description
+//! oct table1 [scale]                  # Table 1 set through the ScenarioRunner
+//! oct table2 [scale]                  # Table 2 set through the ScenarioRunner
+//! oct scenarios                       # list the registered scenario sets
+//! oct scenarios <set> [scale] [--json]  # run one set; --json emits RunReport lines
+//! oct monitor [secs]                  # Figure 3: live ANSI heatmap of a run
+//! oct provision                       # §2.2: growth-plan provisioning demo
+//! oct kernel-check                    # load AOT artifacts, verify vs oracle
 //! oct version
 //! ```
+//!
+//! Unknown subcommands print usage to stderr and exit non-zero.
 
-use oct::coordinator::experiment::{format_table1, format_table2, run_table1, run_table2};
+use oct::coordinator::{find_set, format_checks, format_reports, scenario_sets, ScenarioRunner};
 use oct::coordinator::Provisioner;
 use oct::net::Topology;
+
+const USAGE: &str = "usage: oct <command>
+  topology                         Figure 2: the 4-site testbed description
+  table1 [scale]                   Table 1 scenario set (default scale 1/100)
+  table2 [scale]                   Table 2 scenario set (default scale 1/100)
+  scenarios                        list registered scenario sets
+  scenarios <set> [scale] [--json] run one set through the ScenarioRunner
+  monitor [secs]                   Figure 3: live ANSI heatmap of a run
+  provision                        §2.2 growth-plan provisioning demo
+  kernel-check                     load AOT artifacts, verify geometry
+  version                          print the crate version";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "topology" => print!("{}", Topology::oct_2009().describe()),
-        "table1" => {
+        "table1" | "table2" => {
             let scale = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
-            println!("Table 1 at scale 1/{scale} (10B records ÷ {scale}; shape-preserving)");
-            print!("{}", format_table1(&run_table1(scale)));
+            std::process::exit(run_set_cli(cmd, scale, false));
         }
-        "table2" => {
-            let scale = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
-            println!("Table 2 at scale 1/{scale} (15B records ÷ {scale}; shape-preserving)");
-            print!("{}", format_table2(&run_table2(scale)));
+        "scenarios" => {
+            let json = args.iter().any(|a| a.as_str() == "--json");
+            let rest: Vec<&String> =
+                args[1..].iter().filter(|a| a.as_str() != "--json").collect();
+            match rest.first() {
+                None => list_scenario_sets(),
+                Some(name) => {
+                    let scale = rest.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+                    std::process::exit(run_set_cli(name, scale, json));
+                }
+            }
         }
         "monitor" => {
             let secs: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30.0);
@@ -51,17 +72,76 @@ fn main() {
                 );
             }
             Err(e) => {
-                eprintln!("artifact load failed: {e:#}");
+                eprintln!("artifact load failed: {e}");
                 std::process::exit(1);
             }
         },
         "version" => println!("oct {}", oct::version()),
+        "help" | "--help" | "-h" => println!("{USAGE}"),
         _ => {
-            eprintln!(
-                "usage: oct <topology|table1 [scale]|table2 [scale]|monitor [secs]|provision|kernel-check|version>"
-            );
+            eprintln!("oct: unknown command '{cmd}'\n{USAGE}");
             std::process::exit(2);
         }
+    }
+}
+
+/// List the registry: one line per set.
+fn list_scenario_sets() {
+    println!("scenario sets (run with `oct scenarios <name> [scale] [--json]`):");
+    for set in scenario_sets() {
+        println!(
+            "  {:<14} {} scenario(s){}  {}",
+            set.name,
+            set.scenarios.len(),
+            if set.has_checks() { ", shape-checked" } else { "" },
+            set.description
+        );
+    }
+}
+
+/// Run one registry set; returns the process exit code (0 = all checks
+/// pass, 1 = a shape check failed, 2 = unknown set).
+fn run_set_cli(name: &str, scale: u64, json: bool) -> i32 {
+    let Some(set) = find_set(name) else {
+        eprintln!("oct: unknown scenario set '{name}'; try `oct scenarios`");
+        return 2;
+    };
+    let set = set.scaled_down(scale);
+    if !json {
+        println!("{}: {} (scale 1/{scale}; shape-preserving)", set.name, set.description);
+    }
+    let runner = ScenarioRunner::new();
+    let mut reports = Vec::new();
+    for sc in &set.scenarios {
+        let r = runner.run(sc);
+        if json {
+            println!("{}", r.to_json());
+        }
+        reports.push(r);
+    }
+    if !json {
+        print!("{}", format_reports(&reports));
+    }
+    let checks = set.run_checks(&reports);
+    if json {
+        // Shape checks ride along as JSON lines so scripted consumers
+        // can tell which check produced a non-zero exit.
+        use oct::util::json::{obj, Json};
+        for c in &checks {
+            let line = obj(vec![
+                ("check", Json::Str(c.name.clone())),
+                ("pass", Json::Bool(c.pass)),
+                ("detail", Json::Str(c.detail.clone())),
+            ]);
+            println!("{line}");
+        }
+    } else {
+        print!("{}", format_checks(&checks));
+    }
+    if checks.iter().any(|c| !c.pass) {
+        1
+    } else {
+        0
     }
 }
 

@@ -35,6 +35,9 @@ pub struct Monitor {
     nic_in: Vec<Series>,
     nic_out: Vec<Series>,
     wan: HashMap<LinkId, Series>,
+    /// Exact bytes drained from WAN link counters across all samples
+    /// (the ring-buffer series only retains the trailing window).
+    wan_bytes_drained: f64,
     samples_taken: u64,
 }
 
@@ -58,6 +61,7 @@ impl Monitor {
             nic_in: (0..n).map(|_| Series::new(SERIES_CAP)).collect(),
             nic_out: (0..n).map(|_| Series::new(SERIES_CAP)).collect(),
             wan,
+            wan_bytes_drained: 0.0,
             samples_taken: 0,
         }))
     }
@@ -96,8 +100,9 @@ impl Monitor {
         }
         let wan_ids: Vec<LinkId> = self.wan.keys().copied().collect();
         for l in wan_ids {
-            let bps = netm.take_link_bytes(l, now) / dt;
-            self.wan.get_mut(&l).unwrap().push(now, bps);
+            let bytes = netm.take_link_bytes(l, now);
+            self.wan_bytes_drained += bytes;
+            self.wan.get_mut(&l).unwrap().push(now, bytes / dt);
         }
         self.samples_taken += 1;
     }
@@ -190,6 +195,14 @@ impl Monitor {
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
+    }
+
+    /// Total bytes the sampler has drained from WAN link counters over
+    /// the whole run (exact — not limited to the series' retained
+    /// window). Run reports add this to the post-final-sample residue
+    /// to recover a run's WAN total.
+    pub fn wan_bytes_observed(&self) -> f64 {
+        self.wan_bytes_drained
     }
 
     /// Export the latest frame as JSON (the web UI's data feed).
@@ -301,6 +314,8 @@ mod tests {
         let m = mon.borrow();
         let wan = m.wan_throughput();
         assert!(wan.iter().any(|(_, bps)| *bps > 10.0), "{wan:?}");
+        // The observed-byte rollup sees (at least) the sampled transfer.
+        assert!(m.wan_bytes_observed() > 100.0, "{}", m.wan_bytes_observed());
     }
 
     #[test]

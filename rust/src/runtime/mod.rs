@@ -3,19 +3,42 @@
 //! This is the L3↔L2 seam. `make artifacts` runs Python exactly once,
 //! lowering the MalStone dataflow (JAX) and its Pallas histogram kernel to
 //! **HLO text** (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
-//! protos; the text parser reassigns ids). This module loads those files
-//! with the `xla` crate's PJRT CPU client, compiles them once, and executes
-//! them from the Sphere hot path — Python is never on the request path.
+//! protos; the text parser reassigns ids). With the `pjrt` cargo feature,
+//! this module loads those files with the `xla` crate's PJRT CPU client,
+//! compiles them once, and executes them from the Sphere hot path — Python
+//! is never on the request path. Without the feature (the offline build
+//! cannot fetch the `xla` crate), [`MalstoneKernels::load`] returns an
+//! error and every consumer degrades to the pure-Rust aggregation path.
 
-use std::cell::RefCell;
+use std::fmt;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::malstone::join::{to_kernel_arrays, JoinedRecord};
-use crate::malstone::oracle::MalstoneResult;
 use crate::util::json::Json;
+
+/// Runtime error (the offline build carries no `anyhow`).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    pub fn msg(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias used throughout the runtime seam.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
 
 /// Artifact geometry, read from `artifacts/meta.json` (written by aot.py;
 /// must match python/compile/model.py).
@@ -29,13 +52,12 @@ pub struct ArtifactMeta {
 
 impl ArtifactMeta {
     pub fn load(dir: &Path) -> Result<ArtifactMeta> {
-        let raw = std::fs::read_to_string(dir.join("meta.json"))
-            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
-        let j = Json::parse(&raw).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let path = dir.join("meta.json");
+        let raw = std::fs::read_to_string(&path)
+            .map_err(|e| err(format!("reading {} — run `make artifacts`: {e}", path.display())))?;
+        let j = Json::parse(&raw).map_err(|e| err(format!("meta.json: {e}")))?;
         let get = |k: &str| {
-            j.get(k)
-                .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("meta.json missing {k}"))
+            j.get(k).and_then(Json::as_u64).ok_or_else(|| err(format!("meta.json missing {k}")))
         };
         Ok(ArtifactMeta {
             num_sites: get("num_sites")? as usize,
@@ -46,16 +68,10 @@ impl ArtifactMeta {
     }
 }
 
-/// The three compiled executables plus their geometry.
-pub struct MalstoneKernels {
-    client: xla::PjRtClient,
-    hist: xla::PjRtLoadedExecutable,
-    ratio_a: xla::PjRtLoadedExecutable,
-    ratio_b: xla::PjRtLoadedExecutable,
-    pub meta: ArtifactMeta,
-    /// Executions performed (hot-path metric).
-    pub hist_calls: RefCell<u64>,
-}
+/// The `(num_sites, num_weeks)` geometry python/compile/model.py bakes
+/// into the artifacts — the fallback consumers use when no artifacts
+/// are available (keep in sync with `NUM_SITES`/`NUM_WEEKS` there).
+pub const DEFAULT_GEOMETRY: (u32, u32) = (256, 64);
 
 /// Default artifact directory: `$OCT_ARTIFACTS` or `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
@@ -64,129 +80,201 @@ pub fn default_artifact_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-impl MalstoneKernels {
-    /// Load and compile all artifacts from `dir`.
-    pub fn load(dir: &Path) -> Result<Rc<MalstoneKernels>> {
-        let meta = ArtifactMeta::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))
-        };
-        Ok(Rc::new(MalstoneKernels {
-            hist: compile("malstone_hist")?,
-            ratio_a: compile("malstone_ratio_a")?,
-            ratio_b: compile("malstone_ratio_b")?,
-            client,
-            meta,
-            hist_calls: RefCell::new(0),
-        }))
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::cell::RefCell;
+    use std::path::Path;
+    use std::rc::Rc;
+
+    use crate::malstone::join::{to_kernel_arrays, JoinedRecord};
+    use crate::malstone::oracle::MalstoneResult;
+
+    use super::{err, ArtifactMeta, Result};
+
+    /// The three compiled executables plus their geometry.
+    pub struct MalstoneKernels {
+        client: xla::PjRtClient,
+        hist: xla::PjRtLoadedExecutable,
+        ratio_a: xla::PjRtLoadedExecutable,
+        ratio_b: xla::PjRtLoadedExecutable,
+        pub meta: ArtifactMeta,
+        /// Executions performed (hot-path metric).
+        pub hist_calls: RefCell<u64>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Histogram one padded batch (exactly `meta.batch` records).
-    fn hist_batch(&self, site: &[i32], week: &[i32], marked: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        assert_eq!(site.len(), self.meta.batch);
-        let s = xla::Literal::vec1(site);
-        let w = xla::Literal::vec1(week);
-        let m = xla::Literal::vec1(marked);
-        let result = self
-            .hist
-            .execute::<xla::Literal>(&[s, w, m])
-            .map_err(|e| anyhow!("hist execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("hist fetch: {e:?}"))?;
-        *self.hist_calls.borrow_mut() += 1;
-        // aot.py lowers with return_tuple=True: (comp, tot).
-        let (comp_l, tot_l) = result.to_tuple2().map_err(|e| anyhow!("hist tuple: {e:?}"))?;
-        let comp = comp_l.to_vec::<f32>().map_err(|e| anyhow!("comp vec: {e:?}"))?;
-        let tot = tot_l.to_vec::<f32>().map_err(|e| anyhow!("tot vec: {e:?}"))?;
-        Ok((comp, tot))
-    }
-
-    /// Histogram an arbitrary number of joined records: batches through
-    /// the compiled kernel and sums partial planes in Rust (the same f32
-    /// merge the Sphere master performs across workers).
-    pub fn hist(&self, joined: &[JoinedRecord]) -> Result<MalstoneResult> {
-        let (site, week, marked) = to_kernel_arrays(joined, self.meta.batch);
-        let mut out = MalstoneResult::zero(self.meta.num_sites, self.meta.num_weeks);
-        for i in (0..site.len()).step_by(self.meta.batch) {
-            let end = i + self.meta.batch;
-            let (c, t) = self.hist_batch(&site[i..end], &week[i..end], &marked[i..end])?;
-            for (a, b) in out.comp.iter_mut().zip(&c) {
-                *a += *b as f64;
-            }
-            for (a, b) in out.tot.iter_mut().zip(&t) {
-                *a += *b as f64;
-            }
+    impl MalstoneKernels {
+        /// Load and compile all artifacts from `dir`.
+        pub fn load(dir: &Path) -> Result<Rc<MalstoneKernels>> {
+            let meta = ArtifactMeta::load(dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| err(format!("PJRT cpu client: {e:?}")))?;
+            let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| err("non-utf8 path"))?,
+                )
+                .map_err(|e| err(format!("loading {}: {e:?}", path.display())))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client.compile(&comp).map_err(|e| err(format!("compiling {name}: {e:?}")))
+            };
+            Ok(Rc::new(MalstoneKernels {
+                hist: compile("malstone_hist")?,
+                ratio_a: compile("malstone_ratio_a")?,
+                ratio_b: compile("malstone_ratio_b")?,
+                client,
+                meta,
+                hist_calls: RefCell::new(0),
+            }))
         }
-        Ok(out)
-    }
 
-    fn ratio(&self, exe: &xla::PjRtLoadedExecutable, planes: &MalstoneResult) -> Result<Vec<f32>> {
-        let comp: Vec<f32> = planes.comp.iter().map(|&x| x as f32).collect();
-        let tot: Vec<f32> = planes.tot.iter().map(|&x| x as f32).collect();
-        let dims = [self.meta.num_sites, self.meta.num_weeks];
-        let c = xla::Literal::vec1(&comp)
-            .reshape(&[dims[0] as i64, dims[1] as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let t = xla::Literal::vec1(&tot)
-            .reshape(&[dims[0] as i64, dims[1] as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let result = exe
-            .execute::<xla::Literal>(&[c, t])
-            .map_err(|e| anyhow!("ratio execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("ratio fetch: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow!("ratio tuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("ratio vec: {e:?}"))
-    }
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    /// MalStone-A ratios (`[num_sites]`) via the compiled graph.
-    pub fn ratio_a(&self, planes: &MalstoneResult) -> Result<Vec<f32>> {
-        self.ratio(&self.ratio_a, planes)
-    }
+        /// Histogram one padded batch (exactly `meta.batch` records).
+        fn hist_batch(&self, site: &[i32], week: &[i32], marked: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+            assert_eq!(site.len(), self.meta.batch);
+            let s = xla::Literal::vec1(site);
+            let w = xla::Literal::vec1(week);
+            let m = xla::Literal::vec1(marked);
+            let result = self
+                .hist
+                .execute::<xla::Literal>(&[s, w, m])
+                .map_err(|e| err(format!("hist execute: {e:?}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| err(format!("hist fetch: {e:?}")))?;
+            *self.hist_calls.borrow_mut() += 1;
+            // aot.py lowers with return_tuple=True: (comp, tot).
+            let (comp_l, tot_l) = result.to_tuple2().map_err(|e| err(format!("hist tuple: {e:?}")))?;
+            let comp = comp_l.to_vec::<f32>().map_err(|e| err(format!("comp vec: {e:?}")))?;
+            let tot = tot_l.to_vec::<f32>().map_err(|e| err(format!("tot vec: {e:?}")))?;
+            Ok((comp, tot))
+        }
 
-    /// MalStone-B cumulative ratio series (`[num_sites × num_weeks]`).
-    pub fn ratio_b(&self, planes: &MalstoneResult) -> Result<Vec<f32>> {
-        self.ratio(&self.ratio_b, planes)
-    }
+        /// Histogram an arbitrary number of joined records: batches through
+        /// the compiled kernel and sums partial planes in Rust (the same f32
+        /// merge the Sphere master performs across workers).
+        pub fn hist(&self, joined: &[JoinedRecord]) -> Result<MalstoneResult> {
+            let (site, week, marked) = to_kernel_arrays(joined, self.meta.batch);
+            let mut out = MalstoneResult::zero(self.meta.num_sites, self.meta.num_weeks);
+            for i in (0..site.len()).step_by(self.meta.batch) {
+                let end = i + self.meta.batch;
+                let (c, t) = self.hist_batch(&site[i..end], &week[i..end], &marked[i..end])?;
+                for (a, b) in out.comp.iter_mut().zip(&c) {
+                    *a += *b as f64;
+                }
+                for (a, b) in out.tot.iter_mut().zip(&t) {
+                    *a += *b as f64;
+                }
+            }
+            Ok(out)
+        }
 
-    /// A stage-2 aggregator closure for `sector::sphere::
-    /// execute_malstone_with` — the three-layer hot path.
-    pub fn aggregator(self: &Rc<Self>) -> impl FnMut(&[JoinedRecord], u32, u32) -> MalstoneResult + use<> {
-        let k = self.clone();
-        move |joined, num_sites, num_weeks| {
-            assert_eq!((num_sites as usize, num_weeks as usize), (k.meta.num_sites, k.meta.num_weeks),
-                "aggregator geometry mismatch");
-            k.hist(joined).expect("PJRT hist execution failed")
+        fn ratio(&self, exe: &xla::PjRtLoadedExecutable, planes: &MalstoneResult) -> Result<Vec<f32>> {
+            let comp: Vec<f32> = planes.comp.iter().map(|&x| x as f32).collect();
+            let tot: Vec<f32> = planes.tot.iter().map(|&x| x as f32).collect();
+            let dims = [self.meta.num_sites, self.meta.num_weeks];
+            let c = xla::Literal::vec1(&comp)
+                .reshape(&[dims[0] as i64, dims[1] as i64])
+                .map_err(|e| err(format!("reshape: {e:?}")))?;
+            let t = xla::Literal::vec1(&tot)
+                .reshape(&[dims[0] as i64, dims[1] as i64])
+                .map_err(|e| err(format!("reshape: {e:?}")))?;
+            let result = exe
+                .execute::<xla::Literal>(&[c, t])
+                .map_err(|e| err(format!("ratio execute: {e:?}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| err(format!("ratio fetch: {e:?}")))?;
+            let out = result.to_tuple1().map_err(|e| err(format!("ratio tuple: {e:?}")))?;
+            out.to_vec::<f32>().map_err(|e| err(format!("ratio vec: {e:?}")))
+        }
+
+        /// MalStone-A ratios (`[num_sites]`) via the compiled graph.
+        pub fn ratio_a(&self, planes: &MalstoneResult) -> Result<Vec<f32>> {
+            self.ratio(&self.ratio_a, planes)
+        }
+
+        /// MalStone-B cumulative ratio series (`[num_sites × num_weeks]`).
+        pub fn ratio_b(&self, planes: &MalstoneResult) -> Result<Vec<f32>> {
+            self.ratio(&self.ratio_b, planes)
+        }
+
+        /// A stage-2 aggregator closure for `sector::sphere::
+        /// execute_malstone_with` — the three-layer hot path.
+        pub fn aggregator(self: &Rc<Self>) -> impl FnMut(&[JoinedRecord], u32, u32) -> MalstoneResult + use<> {
+            let k = self.clone();
+            move |joined, num_sites, num_weeks| {
+                assert_eq!((num_sites as usize, num_weeks as usize), (k.meta.num_sites, k.meta.num_weeks),
+                    "aggregator geometry mismatch");
+                k.hist(joined).expect("PJRT hist execution failed")
+            }
         }
     }
 }
 
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::MalstoneKernels;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use std::cell::RefCell;
+    use std::path::Path;
+    use std::rc::Rc;
+
+    use crate::malstone::join::JoinedRecord;
+    use crate::malstone::oracle::MalstoneResult;
+
+    use super::{err, ArtifactMeta, Result};
+
+    const DISABLED: &str = "oct was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` (and add the `xla` dependency to rust/Cargo.toml) \
+         to execute AOT artifacts";
+
+    /// Stub kernels: same surface as the PJRT-backed type, but `load`
+    /// always fails so callers fall back to the pure-Rust path.
+    pub struct MalstoneKernels {
+        pub meta: ArtifactMeta,
+        /// Executions performed (always zero on the stub).
+        pub hist_calls: RefCell<u64>,
+    }
+
+    impl MalstoneKernels {
+        /// Validates the artifact metadata, then reports the missing
+        /// feature (artifact problems surface first for better errors).
+        pub fn load(dir: &Path) -> Result<Rc<MalstoneKernels>> {
+            ArtifactMeta::load(dir)?;
+            Err(err(DISABLED))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (pjrt feature disabled)".to_string()
+        }
+
+        pub fn hist(&self, _joined: &[JoinedRecord]) -> Result<MalstoneResult> {
+            Err(err(DISABLED))
+        }
+
+        pub fn ratio_a(&self, _planes: &MalstoneResult) -> Result<Vec<f32>> {
+            Err(err(DISABLED))
+        }
+
+        pub fn ratio_b(&self, _planes: &MalstoneResult) -> Result<Vec<f32>> {
+            Err(err(DISABLED))
+        }
+
+        /// Matches the PJRT signature; unreachable because `load` never
+        /// constructs a stub.
+        pub fn aggregator(self: &Rc<Self>) -> impl FnMut(&[JoinedRecord], u32, u32) -> MalstoneResult + use<> {
+            |_joined, _num_sites, _num_weeks| unreachable!("{}", DISABLED)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::MalstoneKernels;
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::malstone::join::{bucketize, compromise_table};
-    use crate::malstone::malgen::{MalGen, MalGenConfig, SECONDS_PER_WEEK};
-    use crate::util::Rng;
-
-    fn kernels() -> Option<Rc<MalstoneKernels>> {
-        let dir = default_artifact_dir();
-        if !dir.join("meta.json").exists() {
-            eprintln!("skipping PJRT test: artifacts not built (run `make artifacts`)");
-            return None;
-        }
-        Some(MalstoneKernels::load(&dir).expect("artifact load"))
-    }
 
     #[test]
     fn meta_parses() {
@@ -197,6 +285,44 @@ mod tests {
         let m = ArtifactMeta::load(&dir).unwrap();
         assert_eq!(m.batch, m.tile * (m.batch / m.tile));
         assert!(m.num_sites > 0 && m.num_weeks > 0);
+    }
+
+    #[test]
+    fn missing_artifacts_error_is_actionable() {
+        let e = ArtifactMeta::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(e.to_string().contains("make artifacts"), "{e}");
+        assert!(!e.msg().is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_reports_missing_feature_when_artifacts_exist() {
+        let dir = default_artifact_dir();
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let e = MalstoneKernels::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
+mod pjrt_tests {
+    use std::rc::Rc;
+
+    use super::*;
+    use crate::malstone::join::{bucketize, compromise_table, JoinedRecord};
+    use crate::malstone::malgen::{MalGen, MalGenConfig, SECONDS_PER_WEEK};
+    use crate::malstone::oracle::MalstoneResult;
+    use crate::util::Rng;
+
+    fn kernels() -> Option<Rc<MalstoneKernels>> {
+        let dir = default_artifact_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping PJRT test: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(MalstoneKernels::load(&dir).expect("artifact load"))
     }
 
     #[test]

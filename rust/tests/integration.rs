@@ -1,11 +1,15 @@
 //! Cross-module integration tests: every engine path against the oracle,
 //! the AOT kernel end-to-end, monitoring over a live engine run, and the
-//! experiment drivers' shape at a quick scale.
+//! scenario API (registry sets through `ScenarioRunner`, `RunReport`
+//! JSON round-trips) at a quick scale.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use oct::coordinator::experiment::{run_table1, run_table2};
+use oct::coordinator::{
+    find_set, wide_area_penalty, Framework, RunReport, ScenarioRunner, Testbed, TopologySpec,
+    WorkloadSpec,
+};
 use oct::hadoop::mapreduce::execute_malstone;
 use oct::malstone::join::{bucketize, compromise_table};
 use oct::malstone::malgen::{MalGen, MalGenConfig, SECONDS_PER_WEEK};
@@ -18,6 +22,7 @@ use oct::sector::master::{SectorMaster, Segment};
 use oct::sector::sphere::{cpu_aggregator, execute_malstone_with};
 use oct::sector::SphereEngine;
 use oct::sim::Engine;
+use oct::util::json::Json;
 
 fn shards(seed: u64, n_shards: u64, per: usize) -> Vec<Vec<Record>> {
     let g = MalGen::new(MalGenConfig::small(seed));
@@ -50,7 +55,16 @@ fn aot_kernel_path_is_exact_end_to_end() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let k = MalstoneKernels::load(&dir).unwrap();
+    let k = match MalstoneKernels::load(&dir) {
+        Ok(k) => k,
+        // Artifacts exist: with pjrt enabled a load failure is a real
+        // regression; without it the stub can only decline.
+        Err(e) if cfg!(feature = "pjrt") => panic!("artifact load failed: {e}"),
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
     let sh = shards(7, 4, 2_500);
     let oracle = oracle_of(&sh, k.meta.num_sites as u32, k.meta.num_weeks as u32);
     let via_kernel = execute_malstone_with(
@@ -110,11 +124,44 @@ fn monitored_sphere_run_produces_samples_and_finishes() {
 }
 
 #[test]
-fn experiment_shapes_hold_at_quick_scale() {
-    let t1 = run_table1(500);
-    assert!(t1[2].a_secs < t1[1].a_secs && t1[1].a_secs < t1[0].a_secs);
-    let t2 = run_table2(500);
-    assert!(t2[0].penalty() > t2[2].penalty(), "hadoop r3 must out-penalize sector");
+fn scenario_runner_preserves_table_shapes_at_quick_scale() {
+    let runner = ScenarioRunner::new();
+    let t1 = find_set("table1").expect("table1 registered").scaled_down(500);
+    let r1 = runner.run_all(&t1.scenarios);
+    // Sector < Streams < Hadoop-MR on MalStone-A (reports are ordered
+    // framework-major, variant-minor).
+    assert!(
+        r1[4].simulated_secs < r1[2].simulated_secs && r1[2].simulated_secs < r1[0].simulated_secs,
+        "A ordering broken: {} {} {}",
+        r1[4].simulated_secs,
+        r1[2].simulated_secs,
+        r1[0].simulated_secs
+    );
+    let t2 = find_set("table2").expect("table2 registered").scaled_down(500);
+    let r2 = runner.run_all(&t2.scenarios);
+    assert!(
+        wide_area_penalty(&r2[0], &r2[1]) > wide_area_penalty(&r2[4], &r2[5]),
+        "hadoop r3 must out-penalize sector"
+    );
+}
+
+#[test]
+fn run_report_json_roundtrips_through_runner() {
+    let sc = Testbed::builder()
+        .topology(TopologySpec::Oct2009)
+        .framework(Framework::SectorSphere)
+        .workload(WorkloadSpec::malstone_a(4_000_000))
+        .name("roundtrip-smoke")
+        .build();
+    let rep = ScenarioRunner::new().with_monitor(1.0).run(&sc);
+    assert!(rep.simulated_secs > 0.0);
+    assert!(rep.monitor.is_some(), "runner monitor hook produced no summary");
+    assert_eq!(rep.site_flows.len(), 4);
+    assert_eq!(rep.framework, "sector-sphere");
+    let text = rep.to_json().to_string();
+    let back = RunReport::from_json(&Json::parse(&text).expect("report JSON parses"))
+        .expect("report JSON deserializes");
+    assert_eq!(back, rep);
 }
 
 #[test]
@@ -131,4 +178,7 @@ fn gmp_rpc_full_stack_loopback() {
     let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
     let out = client.call(addr, "rev", b"abc", Duration::from_secs(2)).unwrap();
     assert_eq!(out, b"cba");
+    // Unknown methods surface as Err, not as an error-shaped payload.
+    let err = client.call(addr, "missing", b"", Duration::from_secs(2)).unwrap_err();
+    assert!(err.to_string().contains("unknown method"), "{err}");
 }
