@@ -1,0 +1,486 @@
+//! Bench: fluid-network churn — thousands of concurrent flows arriving
+//! and departing on the 120-node OCT topology (30 active nodes per site,
+//! shared CiscoWave), the load pattern of the Sector/Sphere companion
+//! experiments' segment transfers.
+//!
+//! Two measurements:
+//! 1. The reworked slab / per-link-index core at full churn scale
+//!    (default 24k transfers, 6k concurrent).
+//! 2. The same deterministic schedule, at a reduced scale both cores can
+//!    stomach, through [`baseline`] — a faithful copy of the pre-rework
+//!    `FlowNet` (per-call `HashMap` water-filling, generation-counter
+//!    stale events) — and through the reworked core. Prints the speedup,
+//!    asserts it is ≥ 3×, and asserts both cores produce the *same
+//!    simulated makespan* (the rework changes data layout and event
+//!    lifecycle, not allocation semantics).
+//!
+//! Env knobs: `OCT_CHURN_FLOWS`, `OCT_CHURN_CONCURRENCY`,
+//! `OCT_CHURN_BASELINE_FLOWS`, `OCT_CHURN_BASELINE_CONCURRENCY`,
+//! `OCT_CHURN_SKIP_BASELINE=1`.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::time::Instant;
+
+use oct::net::{FlowNet, LinkId, NodeId, Topology};
+use oct::sim::Engine;
+use oct::util::Rng;
+
+struct Job {
+    path: Vec<LinkId>,
+    bytes: f64,
+    cap: f64,
+}
+
+struct Stats {
+    wall: f64,
+    sim: f64,
+    events: u64,
+    completions: u64,
+}
+
+/// The two cores expose the same start/completions surface; the driver is
+/// generic so both run the identical schedule.
+trait ChurnNet: 'static {
+    fn start_flow(
+        net: &Rc<RefCell<Self>>,
+        eng: &mut Engine,
+        path: Vec<LinkId>,
+        bytes: f64,
+        cap: f64,
+        done: Box<dyn FnOnce(&mut Engine)>,
+    );
+    fn done_count(&self) -> u64;
+}
+
+impl ChurnNet for FlowNet {
+    fn start_flow(
+        net: &Rc<RefCell<Self>>,
+        eng: &mut Engine,
+        path: Vec<LinkId>,
+        bytes: f64,
+        cap: f64,
+        done: Box<dyn FnOnce(&mut Engine)>,
+    ) {
+        FlowNet::start(net, eng, path, bytes, cap, done);
+    }
+
+    fn done_count(&self) -> u64 {
+        self.completions()
+    }
+}
+
+impl ChurnNet for baseline::FlowNet {
+    fn start_flow(
+        net: &Rc<RefCell<Self>>,
+        eng: &mut Engine,
+        path: Vec<LinkId>,
+        bytes: f64,
+        cap: f64,
+        done: Box<dyn FnOnce(&mut Engine)>,
+    ) {
+        baseline::FlowNet::start(net, eng, path, bytes, cap, done);
+    }
+
+    fn done_count(&self) -> u64 {
+        self.completions()
+    }
+}
+
+/// Each completion spawns the chain's next transfer until the shared
+/// budget drains — steady-state churn at the initial concurrency.
+fn spawn<N: ChurnNet>(
+    net: &Rc<RefCell<N>>,
+    eng: &mut Engine,
+    jobs: &Rc<Vec<Job>>,
+    k: usize,
+    left: &Rc<Cell<usize>>,
+) {
+    if left.get() == 0 {
+        return;
+    }
+    left.set(left.get() - 1);
+    let job = &jobs[k % jobs.len()];
+    let (path, bytes, cap) = (job.path.clone(), job.bytes, job.cap);
+    let net2 = net.clone();
+    let jobs2 = jobs.clone();
+    let left2 = left.clone();
+    N::start_flow(
+        net,
+        eng,
+        path,
+        bytes,
+        cap,
+        Box::new(move |e: &mut Engine| {
+            spawn(&net2, e, &jobs2, k + 1, &left2);
+        }),
+    );
+}
+
+fn run_churn<N: ChurnNet>(
+    net: Rc<RefCell<N>>,
+    jobs: &Rc<Vec<Job>>,
+    total: usize,
+    conc: usize,
+) -> Stats {
+    let mut eng = Engine::new();
+    let left = Rc::new(Cell::new(total));
+    let t0 = Instant::now();
+    for c in 0..conc.min(total) {
+        // Stagger chain starting points through the job table so the
+        // concurrent mix is diverse but fully deterministic.
+        spawn(&net, &mut eng, jobs, c * 17 + 1, &left);
+    }
+    eng.run();
+    Stats {
+        wall: t0.elapsed().as_secs_f64(),
+        sim: eng.now(),
+        events: eng.executed(),
+        completions: net.borrow().done_count(),
+    }
+}
+
+fn make_jobs(topo: &Topology, nodes: &[NodeId], n: usize) -> Vec<Job> {
+    let mut rng = Rng::new(0xF10C);
+    // Transport caps take a handful of distinct values in reality (one per
+    // RTT class × protocol — see `transport::Protocol::rate_cap`), and the
+    // water-filling round count tracks the number of *distinct* freeze
+    // levels, so the bench mirrors that instead of smearing a continuum.
+    let caps = [1.4e6, 4.5e6, 18.0e6, 35.0e6, 6.0e7, 1.03e8, 1.09e8, f64::INFINITY];
+    (0..n)
+        .map(|_| {
+            let src = nodes[rng.gen_range(nodes.len() as u64) as usize];
+            let mut dst = src;
+            while dst == src {
+                dst = nodes[rng.gen_range(nodes.len() as u64) as usize];
+            }
+            // Segment-sized transfers (1–64 MB).
+            let bytes = (1.0 + rng.f64() * 63.0) * 1e6;
+            let cap = caps[rng.gen_range(caps.len() as u64) as usize];
+            Job { path: topo.path(src, dst), bytes, cap }
+        })
+        .collect()
+}
+
+fn env_or(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn report(tag: &str, s: &Stats, total: usize) {
+    println!(
+        "{tag:<28} {:>8.2}s wall  {:>9.0} flows/s  {:>8} events  {:.1}s simulated",
+        s.wall,
+        total as f64 / s.wall.max(1e-9),
+        s.events,
+        s.sim,
+    );
+}
+
+fn main() {
+    let total = env_or("OCT_CHURN_FLOWS", 24_000);
+    let conc = env_or("OCT_CHURN_CONCURRENCY", 6_000);
+    let base_total = env_or("OCT_CHURN_BASELINE_FLOWS", 1_000);
+    let base_conc = env_or("OCT_CHURN_BASELINE_CONCURRENCY", 500);
+    let skip_baseline = std::env::var("OCT_CHURN_SKIP_BASELINE").is_ok();
+
+    let topo = Topology::oct_2009();
+    // The paper's active footprint: 30 of each site's 32 nodes.
+    let nodes: Vec<NodeId> =
+        topo.racks.iter().flat_map(|r| r.nodes[..30].iter().copied()).collect();
+    assert_eq!(nodes.len(), 120);
+    let jobs = Rc::new(make_jobs(&topo, &nodes, 512));
+
+    println!("=== flow churn: {total} transfers, {conc} concurrent, {} nodes ===", nodes.len());
+    let s = run_churn(FlowNet::new(&topo), &jobs, total, conc);
+    report("reworked core", &s, total);
+    assert_eq!(s.completions as usize, total, "lost transfers");
+
+    if skip_baseline {
+        println!("baseline comparison skipped (OCT_CHURN_SKIP_BASELINE)");
+        return;
+    }
+    println!(
+        "--- baseline comparison: {base_total} transfers, {base_conc} concurrent (identical schedules) ---"
+    );
+    let s_new = run_churn(FlowNet::new(&topo), &jobs, base_total, base_conc);
+    report("reworked core", &s_new, base_total);
+    let s_old = run_churn(baseline::FlowNet::new(&topo), &jobs, base_total, base_conc);
+    report("pre-rework core", &s_old, base_total);
+    assert_eq!(s_new.completions, s_old.completions, "cores disagree on completions");
+    assert!(
+        (s_new.sim - s_old.sim).abs() <= 1e-6 * s_old.sim.max(1.0),
+        "allocation semantics drifted: {} vs {} simulated seconds",
+        s_new.sim,
+        s_old.sim,
+    );
+    let speedup = s_old.wall / s_new.wall.max(1e-9);
+    println!("speedup: {speedup:.1}× (same simulated makespan: {:.3}s)", s_new.sim);
+    assert!(speedup >= 3.0, "rework regressed: only {speedup:.2}× over the HashMap core");
+    println!("flow churn OK");
+}
+
+/// A faithful copy of the pre-rework fluid core, kept as the bench's
+/// measuring stick: `HashMap` flow storage, per-call allocation of the
+/// water-filling state, and the generation-counter "stale event" pattern
+/// that leaves one dead event in the engine heap per reallocation.
+mod baseline {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::rc::Rc;
+
+    use oct::net::{LinkId, Topology};
+    use oct::sim::Engine;
+
+    type Callback = Box<dyn FnOnce(&mut Engine)>;
+
+    struct FlowState {
+        path: Vec<LinkId>,
+        remaining: f64,
+        rate: f64,
+        cap: f64,
+        done: Option<Callback>,
+    }
+
+    pub struct FlowNet {
+        capacity: Vec<f64>,
+        link_rate: Vec<f64>,
+        link_bytes: Vec<f64>,
+        flows: HashMap<u64, FlowState>,
+        next_id: u64,
+        last_advance: f64,
+        generation: u64,
+        completions: u64,
+    }
+
+    impl FlowNet {
+        pub fn new(topo: &Topology) -> Rc<RefCell<FlowNet>> {
+            let capacity: Vec<f64> = topo.links.iter().map(|l| l.capacity).collect();
+            let n = capacity.len();
+            Rc::new(RefCell::new(FlowNet {
+                capacity,
+                link_rate: vec![0.0; n],
+                link_bytes: vec![0.0; n],
+                flows: HashMap::new(),
+                next_id: 0,
+                last_advance: 0.0,
+                generation: 0,
+                completions: 0,
+            }))
+        }
+
+        pub fn completions(&self) -> u64 {
+            self.completions
+        }
+
+        fn advance(&mut self, now: f64) {
+            let dt = now - self.last_advance;
+            if dt <= 0.0 {
+                return;
+            }
+            for f in self.flows.values_mut() {
+                if f.rate > 0.0 {
+                    f.remaining = (f.remaining - f.rate * dt).max(0.0);
+                }
+            }
+            for (l, rate) in self.link_rate.iter().enumerate() {
+                if *rate > 0.0 {
+                    self.link_bytes[l] += rate * dt;
+                }
+            }
+            self.last_advance = now;
+        }
+
+        fn reallocate(&mut self) {
+            for r in self.link_rate.iter_mut() {
+                *r = 0.0;
+            }
+            if self.flows.is_empty() {
+                return;
+            }
+            let mut remaining_cap = self.capacity.clone();
+            let mut ids: Vec<u64> = self.flows.keys().copied().collect();
+            ids.sort_unstable();
+            let mut rate: HashMap<u64, f64> = ids.iter().map(|&i| (i, 0.0)).collect();
+            let mut frozen: HashMap<u64, bool> = ids.iter().map(|&i| (i, false)).collect();
+            let mut users: Vec<u32> = vec![0; self.capacity.len()];
+
+            let link_eps = |cap: f64| cap * 1e-9 + 1e-9;
+            let max_iters = ids.len() + self.capacity.len() + 8;
+            let mut iters = 0usize;
+            loop {
+                iters += 1;
+                for u in users.iter_mut() {
+                    *u = 0;
+                }
+                let mut any = false;
+                for &id in &ids {
+                    if !frozen[&id] {
+                        any = true;
+                        for &LinkId(l) in &self.flows[&id].path {
+                            users[l] += 1;
+                        }
+                    }
+                }
+                if !any {
+                    break;
+                }
+                let mut inc = f64::INFINITY;
+                for (l, &u) in users.iter().enumerate() {
+                    if u > 0 {
+                        inc = inc.min(remaining_cap[l].max(0.0) / u as f64);
+                    }
+                }
+                for &id in &ids {
+                    if !frozen[&id] {
+                        inc = inc.min(self.flows[&id].cap - rate[&id]);
+                    }
+                }
+                if !inc.is_finite() {
+                    break;
+                }
+                let inc = inc.max(0.0);
+                for &id in &ids {
+                    if frozen[&id] {
+                        continue;
+                    }
+                    *rate.get_mut(&id).unwrap() += inc;
+                    for &LinkId(l) in &self.flows[&id].path {
+                        remaining_cap[l] -= inc;
+                    }
+                }
+                let mut froze_any = false;
+                for &id in &ids {
+                    if frozen[&id] {
+                        continue;
+                    }
+                    let f = &self.flows[&id];
+                    let cap_eps =
+                        if f.cap.is_finite() { f.cap * 1e-9 + 1e-9 } else { 0.0 };
+                    let hit_cap = f.cap.is_finite() && rate[&id] >= f.cap - cap_eps;
+                    let hit_link = f
+                        .path
+                        .iter()
+                        .any(|&LinkId(l)| remaining_cap[l] <= link_eps(self.capacity[l]));
+                    if hit_cap || hit_link {
+                        *frozen.get_mut(&id).unwrap() = true;
+                        froze_any = true;
+                    }
+                }
+                if !froze_any || iters >= max_iters {
+                    for &id in &ids {
+                        *frozen.get_mut(&id).unwrap() = true;
+                    }
+                    break;
+                }
+            }
+
+            for (&id, r) in &rate {
+                let f = self.flows.get_mut(&id).unwrap();
+                f.rate = *r;
+                for &LinkId(l) in &f.path {
+                    self.link_rate[l] += *r;
+                }
+            }
+        }
+
+        fn next_completion(&self) -> Option<f64> {
+            let mut best: Option<f64> = None;
+            for f in self.flows.values() {
+                if f.rate > 0.0 {
+                    let t = f.remaining / f.rate;
+                    best = Some(match best {
+                        Some(b) => b.min(t),
+                        None => t,
+                    });
+                }
+            }
+            best
+        }
+
+        pub fn start<F: FnOnce(&mut Engine) + 'static>(
+            net: &Rc<RefCell<FlowNet>>,
+            eng: &mut Engine,
+            path: Vec<LinkId>,
+            bytes: f64,
+            cap_bps: f64,
+            done: F,
+        ) {
+            assert!(bytes > 0.0 && cap_bps > 0.0);
+            assert!(!path.is_empty(), "flow with empty path");
+            {
+                let mut n = net.borrow_mut();
+                n.advance(eng.now());
+                let id = n.next_id;
+                n.next_id += 1;
+                n.flows.insert(
+                    id,
+                    FlowState {
+                        path,
+                        remaining: bytes,
+                        rate: 0.0,
+                        cap: cap_bps,
+                        done: Some(Box::new(done)),
+                    },
+                );
+                n.reallocate();
+            }
+            Self::reschedule(net, eng);
+        }
+
+        fn reschedule(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) {
+            let (gen, dt) = {
+                let mut n = net.borrow_mut();
+                n.generation += 1;
+                (n.generation, n.next_completion())
+            };
+            let Some(dt) = dt else { return };
+            let net = net.clone();
+            eng.schedule_in(dt.max(0.0), move |eng| {
+                if net.borrow().generation != gen {
+                    return; // superseded by a later reallocation
+                }
+                Self::on_completion(&net, eng);
+            });
+        }
+
+        fn on_completion(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) {
+            let callbacks = {
+                let mut n = net.borrow_mut();
+                n.advance(eng.now());
+                let mut finished: Vec<u64> = n
+                    .flows
+                    .iter()
+                    .filter(|(_, f)| f.remaining <= 1e-6 + f.rate * 1e-9)
+                    .map(|(&id, _)| id)
+                    .collect();
+                if finished.is_empty() {
+                    if let Some((&id, _)) =
+                        n.flows.iter().filter(|(_, f)| f.rate > 0.0).min_by(|a, b| {
+                            let ta = a.1.remaining / a.1.rate;
+                            let tb = b.1.remaining / b.1.rate;
+                            ta.partial_cmp(&tb).unwrap()
+                        })
+                    {
+                        finished.push(id);
+                    }
+                }
+                let mut cbs = Vec::new();
+                let mut ids = finished;
+                ids.sort_unstable();
+                for id in ids {
+                    let mut f = n.flows.remove(&id).unwrap();
+                    n.completions += 1;
+                    if let Some(cb) = f.done.take() {
+                        cbs.push(cb);
+                    }
+                }
+                n.reallocate();
+                cbs
+            };
+            for cb in callbacks {
+                cb(eng);
+            }
+            Self::reschedule(net, eng);
+        }
+    }
+}

@@ -49,8 +49,8 @@ pub use experiment::{run_table1, run_table2};
 pub use provision::Provisioner;
 pub use registry::{find_set, scenario_sets, ScenarioSet};
 pub use runner::{
-    all_pass, format_checks, format_reports, wide_area_penalty, MonitorSummary, RunReport,
-    ScenarioRunner, ShapeCheck, SiteFlow,
+    all_pass, flow_churn_concurrency, format_checks, format_reports, wide_area_penalty,
+    MonitorSummary, RunReport, ScenarioRunner, ShapeCheck, SiteFlow,
 };
 pub use scenario::{
     Framework, Placement, Scenario, Testbed, TestbedBuilder, TopologySpec, Variant, WorkloadSpec,

@@ -9,7 +9,7 @@
 //!
 //! List with `oct scenarios`; run with `oct scenarios <set> [scale]`.
 
-use super::runner::{wide_area_penalty, RunReport, ShapeCheck};
+use super::runner::{flow_churn_concurrency, wide_area_penalty, RunReport, ShapeCheck};
 use super::scenario::{Framework, Placement, Scenario, Testbed, TopologySpec, Variant, WorkloadSpec};
 
 /// A named group of scenarios with an optional shape check.
@@ -48,7 +48,14 @@ impl ScenarioSet {
 
 /// All registered scenario sets, at paper scale.
 pub fn scenario_sets() -> Vec<ScenarioSet> {
-    vec![table1_set(), table2_set(), scale_ladder_set(), local_vs_wan_set(), site_dropout_set()]
+    vec![
+        table1_set(),
+        table2_set(),
+        scale_ladder_set(),
+        local_vs_wan_set(),
+        site_dropout_set(),
+        flow_churn_set(),
+    ]
 }
 
 /// Look up one set by name.
@@ -350,6 +357,76 @@ fn check_site_dropout(r: &[RunReport]) -> Vec<ShapeCheck> {
     )]
 }
 
+/// Fluid-network churn stress: 24k segment/shuffle transfers over the
+/// 120-node testbed (30 per site — the paper's active node count), with
+/// [`flow_churn_concurrency`] of them in flight at once. At full scale
+/// that is 6000 concurrent flows contending for NICs, rack uplinks, and
+/// the shared CiscoWave — the load the slab/per-link-index `FlowNet` and
+/// the cancellable completion timer exist for. Not a paper table: a
+/// substrate scaling scenario (the Sector/Sphere companion experiments
+/// run thousands of concurrent segment transfers).
+fn flow_churn_set() -> ScenarioSet {
+    let scenarios = vec![
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(30))
+            .framework(Framework::FlowChurn)
+            // records = transfers for the churn driver.
+            .workload(WorkloadSpec::malstone_a(24_000))
+            .name("flow-churn/oct120/24k-transfers")
+            .build(),
+    ];
+    ScenarioSet {
+        name: "flow-churn",
+        description: "fluid-network churn: 24k transfers, thousands concurrent, on 120 nodes",
+        scenarios,
+        check: Some(check_flow_churn),
+    }
+}
+
+fn check_flow_churn(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 1 {
+        return vec![ShapeCheck::new("churn arity", false, format!("expected 1 report, got {}", r.len()))];
+    }
+    let r = &r[0];
+    let metric = |k: &str| {
+        r.metrics.iter().find(|(m, _)| m == k).map(|(_, v)| *v).unwrap_or(f64::NAN)
+    };
+    let total = r.total_records;
+    let target = flow_churn_concurrency(total) as f64;
+    vec![
+        ShapeCheck::new(
+            "every transfer completed",
+            metric("flows") == total as f64 && metric("net_completions") == total as f64,
+            format!("{:.0} of {total} transfers, {:.0} network completions", metric("flows"), metric("net_completions")),
+        ),
+        ShapeCheck::new(
+            // `peak_active` is FlowNet's own exact high-water mark (not
+            // the driver's launched−done bookkeeping), so this actually
+            // fails if the network serializes the load. Transport setup
+            // staggers entry; half the target is the conservative floor
+            // for genuinely concurrent flows.
+            "network-level concurrency reached the target band",
+            metric("peak_active") >= (target / 2.0).max(1.0),
+            format!(
+                "peak {:.0} flows active in-net (target {target:.0} in flight, observed peak {:.0})",
+                metric("peak_active"),
+                metric("peak_inflight"),
+            ),
+        ),
+        ShapeCheck::new(
+            "churn crossed the WAN",
+            r.wan_bytes > 0.0,
+            format!("{:.2e} WAN bytes", r.wan_bytes),
+        ),
+        ShapeCheck::new(
+            "simulated time advanced",
+            r.simulated_secs > 0.0,
+            format!("{:.1}s simulated", r.simulated_secs),
+        ),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -402,9 +479,19 @@ mod tests {
     }
 
     #[test]
+    fn flow_churn_shape_holds() {
+        // 1/100 scale: 240 transfers, 60 concurrent, on all 120 nodes.
+        let (set, reports) = run_set("flow-churn", 100);
+        assert_eq!(reports[0].nodes, 120);
+        assert_checks_pass(&set, &reports);
+    }
+
+    #[test]
     fn registry_lists_expected_sets() {
         let names: Vec<&str> = scenario_sets().iter().map(|s| s.name).collect();
-        for expect in ["table1", "table2", "scale-ladder", "local-vs-wan", "site-dropout"] {
+        for expect in
+            ["table1", "table2", "scale-ladder", "local-vs-wan", "site-dropout", "flow-churn"]
+        {
             assert!(names.contains(&expect), "missing set {expect}");
         }
         assert!(find_set("no-such-set").is_none());

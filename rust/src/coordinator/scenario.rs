@@ -138,11 +138,25 @@ pub enum Framework {
     HadoopMrR1,
     HadoopStreams,
     SectorSphere,
+    /// Not a data-processing framework but a substrate stress driver: a
+    /// synthetic storm of concurrent point-to-point transfers (Sector
+    /// segment shuttles / shuffle fetches) that exercises the fluid
+    /// network's arrival/departure churn path. The workload's record
+    /// count is reinterpreted as the number of transfers.
+    FlowChurn,
 }
 
 impl Framework {
-    pub const ALL: [Framework; 4] =
-        [Framework::HadoopMr, Framework::HadoopMrR1, Framework::HadoopStreams, Framework::SectorSphere];
+    /// The data-processing frameworks — the enumeration cross-product
+    /// sets sweep over. [`Framework::FlowChurn`] is deliberately absent:
+    /// it reinterprets the workload's record count as a transfer count,
+    /// so including it in a MalStone sweep would be nonsense.
+    pub const ALL: [Framework; 4] = [
+        Framework::HadoopMr,
+        Framework::HadoopMrR1,
+        Framework::HadoopStreams,
+        Framework::SectorSphere,
+    ];
 
     /// The calibrated cost model for this framework.
     pub fn params(&self) -> FrameworkParams {
@@ -150,7 +164,9 @@ impl Framework {
             Framework::HadoopMr => FrameworkParams::hadoop_mapreduce(),
             Framework::HadoopMrR1 => FrameworkParams::hadoop_mapreduce_r1(),
             Framework::HadoopStreams => FrameworkParams::hadoop_streams(),
-            Framework::SectorSphere => FrameworkParams::sphere(),
+            // Churn drives raw transfers; the cost model goes unused, but
+            // Sphere's (UDT transport) is the closest in spirit.
+            Framework::SectorSphere | Framework::FlowChurn => FrameworkParams::sphere(),
         }
     }
 
@@ -160,6 +176,7 @@ impl Framework {
             Framework::HadoopMrR1 => "hadoop-mapreduce-r1",
             Framework::HadoopStreams => "hadoop-streams",
             Framework::SectorSphere => "sector-sphere",
+            Framework::FlowChurn => "flow-churn",
         }
     }
 }

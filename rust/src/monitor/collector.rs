@@ -2,7 +2,6 @@
 //! WAN links, with hierarchical rollups (node → rack → site → testbed).
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::net::topology::LinkKind;
@@ -34,10 +33,16 @@ pub struct Monitor {
     disk: Vec<Series>,
     nic_in: Vec<Series>,
     nic_out: Vec<Series>,
-    wan: HashMap<LinkId, Series>,
+    /// WAN link series in link order (a plain sorted Vec: no per-sample
+    /// key collection or hashing).
+    wan: Vec<(LinkId, Series)>,
     /// Exact bytes drained from WAN link counters across all samples
     /// (the ring-buffer series only retains the trailing window).
     wan_bytes_drained: f64,
+    /// When the previous sample was taken — rates divide by the *actual*
+    /// elapsed time, so off-schedule samples (e.g. a final sample at run
+    /// end) don't overstate or understate throughput.
+    last_sample: f64,
     samples_taken: u64,
 }
 
@@ -45,7 +50,7 @@ impl Monitor {
     pub fn new(topo: Rc<Topology>, interval: f64) -> Rc<RefCell<Monitor>> {
         assert!(interval > 0.0);
         let n = topo.num_nodes();
-        let wan = topo
+        let wan: Vec<(LinkId, Series)> = topo
             .links
             .iter()
             .enumerate()
@@ -62,6 +67,7 @@ impl Monitor {
             nic_out: (0..n).map(|_| Series::new(SERIES_CAP)).collect(),
             wan,
             wan_bytes_drained: 0.0,
+            last_sample: 0.0,
             samples_taken: 0,
         }))
     }
@@ -79,10 +85,18 @@ impl Monitor {
         self.enabled = false;
     }
 
-    /// Take one sample of every node and WAN link right now.
+    /// Take one sample of every node and WAN link right now. Rates divide
+    /// drained byte counters by the time actually elapsed since the
+    /// previous sample — which equals the configured interval on schedule,
+    /// but stays correct for off-schedule samples too. A second sample at
+    /// the same instant is a no-op (no time has passed to measure).
     pub fn sample_all(&mut self, eng: &Engine, net: &Rc<RefCell<FlowNet>>, pools: &[Rc<RefCell<CpuPool>>]) {
         let now = eng.now();
-        let dt = self.interval;
+        let dt = now - self.last_sample;
+        if dt <= 0.0 {
+            return;
+        }
+        self.last_sample = now;
         let mut netm = net.borrow_mut();
         for (i, node) in self.topo.nodes.iter().enumerate() {
             let cpu = pools
@@ -98,11 +112,10 @@ impl Monitor {
             self.nic_in[i].push(now, inb);
             self.nic_out[i].push(now, outb);
         }
-        let wan_ids: Vec<LinkId> = self.wan.keys().copied().collect();
-        for l in wan_ids {
-            let bytes = netm.take_link_bytes(l, now);
+        for (l, series) in self.wan.iter_mut() {
+            let bytes = netm.take_link_bytes(*l, now);
             self.wan_bytes_drained += bytes;
-            self.wan.get_mut(&l).unwrap().push(now, bytes / dt);
+            series.push(now, bytes / dt);
         }
         self.samples_taken += 1;
     }
@@ -316,6 +329,42 @@ mod tests {
         assert!(wan.iter().any(|(_, bps)| *bps > 10.0), "{wan:?}");
         // The observed-byte rollup sees (at least) the sampled transfer.
         assert!(m.wan_bytes_observed() > 100.0, "{}", m.wan_bytes_observed());
+    }
+
+    #[test]
+    fn off_schedule_sample_uses_actual_elapsed_time() {
+        let topo = small_topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let ps = pools(&topo);
+        // The interval says 1 s, but the only sample is taken at t=2.5.
+        let mon = Monitor::new(topo.clone(), 1.0);
+        let path = topo.path(topo.racks[0].nodes[0], topo.racks[0].nodes[1]);
+        FlowNet::start(&net, &mut eng, path, 1000.0, f64::INFINITY, |_| {});
+        eng.run_until(2.5);
+        mon.borrow_mut().sample_all(&eng, &net, &ps);
+        let m = mon.borrow();
+        let s = m.node_sample(NodeId(0));
+        // 250 B drained over 2.5 s = 100 B/s — not 250 B/s (the old code
+        // divided by the nominal interval regardless of elapsed time).
+        assert!((s.nic_out - 100.0).abs() < 1e-6, "nic_out={}", s.nic_out);
+        assert_eq!(m.samples_taken(), 1);
+    }
+
+    #[test]
+    fn repeated_sample_at_same_instant_is_a_noop() {
+        let topo = small_topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let ps = pools(&topo);
+        let mon = Monitor::new(topo.clone(), 1.0);
+        eng.run_until(1.0);
+        mon.borrow_mut().sample_all(&eng, &net, &ps);
+        assert_eq!(mon.borrow().samples_taken(), 1);
+        // No time has elapsed: there is nothing to rate, so nothing is
+        // recorded (previously this pushed a bogus zero-rate sample).
+        mon.borrow_mut().sample_all(&eng, &net, &ps);
+        assert_eq!(mon.borrow().samples_taken(), 1);
     }
 
     #[test]

@@ -10,21 +10,55 @@
 //! [`crate::transport`]). The cap is what makes the wide-area penalty of
 //! Table 2 emerge from mechanism rather than from a hard-coded constant.
 //!
-//! Completions are scheduled on the event engine; any change to the flow
-//! set reallocates rates and reschedules (a generation counter invalidates
-//! stale completion events).
+//! Built for churn at 10k+ active flows: flows live in a slab (`Vec` plus
+//! free list) addressed by dense slot indices, every link keeps an index
+//! list of the active flows crossing it, and `reallocate()` water-fills
+//! over persistent scratch arrays — zero allocation per call in steady
+//! state. Completions are scheduled on the event engine as a *single
+//! cancellable timer*: any change to the flow set cancels and reschedules
+//! it, so the event heap holds at most one completion event per network
+//! instead of one stale event per reallocation.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::cmp::Ordering;
 use std::rc::Rc;
 
-use crate::sim::Engine;
+use crate::sim::{Engine, TimerId};
 
 use super::topology::{LinkId, Topology};
 
-/// Identifies an active flow.
+/// Identifies a flow. Real ids are `(slot, generation)` pairs, so a stale
+/// id can never alias a different flow after its slab slot is reused; the
+/// reserved [`FlowId::COMPLETED`] value denotes a transfer that finished
+/// before it ever occupied a slot (zero-byte flows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FlowId(u64);
+
+impl FlowId {
+    /// The id of a flow that completed immediately (zero bytes). Never
+    /// allocated to a live flow — `flow_rate` answers 0 for it forever,
+    /// no matter how many flows the network has started since.
+    pub const COMPLETED: FlowId = FlowId(u64::MAX);
+
+    /// True for ids of transfers that completed at start (zero bytes).
+    pub fn is_completed(self) -> bool {
+        self.0 == u64::MAX
+    }
+
+    fn new(slot: u32, gen: u32) -> FlowId {
+        let id = ((gen as u64) << 32) | slot as u64;
+        debug_assert_ne!(id, u64::MAX, "flow id collides with COMPLETED");
+        FlowId(id)
+    }
+
+    fn slot(self) -> u32 {
+        self.0 as u32
+    }
+
+    fn gen(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+}
 
 type Callback = Box<dyn FnOnce(&mut Engine)>;
 
@@ -33,7 +67,39 @@ struct FlowState {
     remaining: f64,
     rate: f64,
     cap: f64,
+    /// Monotone birth order: completion callbacks fire in this order, so
+    /// slab slot reuse cannot perturb deterministic replays.
+    birth: u64,
+    /// This flow's position in `FlowNet::active`, and in each path link's
+    /// `link_flows` list (parallel to `path`) — departures are O(path)
+    /// swap_removes instead of O(active flows) scans.
+    active_pos: u32,
+    link_pos: Vec<u32>,
     done: Option<Callback>,
+}
+
+/// One slab slot; `gen` survives reuse and stamps issued [`FlowId`]s.
+struct Slot {
+    gen: u32,
+    state: Option<FlowState>,
+}
+
+/// Persistent water-filling scratch. Per-link arrays are sized to the
+/// topology at construction; `frozen` grows with the slab. Nothing here
+/// is meaningful between `reallocate` calls — each call rewrites the
+/// entries it reads.
+#[derive(Default)]
+struct Scratch {
+    /// Remaining capacity per link (valid for this call's touched links).
+    remaining: Vec<f64>,
+    /// Unfrozen flows crossing each link (valid for touched links).
+    users: Vec<u32>,
+    /// Whether a touched link has saturated this call.
+    saturated: Vec<bool>,
+    /// Links with at least one active flow this call.
+    touched: Vec<u32>,
+    /// Per-slot frozen flag (valid for this call's active slots).
+    frozen: Vec<bool>,
 }
 
 /// The fluid network. Use through an `Rc<RefCell<_>>` handle.
@@ -43,11 +109,25 @@ pub struct FlowNet {
     link_rate: Vec<f64>,
     /// Cumulative bytes carried per link (monitor counters).
     link_bytes: Vec<f64>,
-    flows: HashMap<u64, FlowState>,
-    next_id: u64,
+    /// Flow slab: slot indices are dense and recycled through `free`.
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    /// Slots of currently-active flows (unordered).
+    active: Vec<u32>,
+    /// Active slots sorted by ascending `(cap, slot)`. Caps are immutable
+    /// per flow, so this is maintained incrementally (binary-search
+    /// insert/remove) instead of re-sorted inside `reallocate`.
+    by_cap: Vec<u32>,
+    /// Per-link index lists: active slots crossing each link.
+    link_flows: Vec<Vec<u32>>,
+    next_birth: u64,
     last_advance: f64,
-    generation: u64,
     completions: u64,
+    /// High-water mark of `active.len()` (concurrency metrics).
+    peak_active: usize,
+    /// The single pending completion event, if any.
+    timer: Option<TimerId>,
+    scratch: Scratch,
 }
 
 impl FlowNet {
@@ -58,11 +138,22 @@ impl FlowNet {
             capacity,
             link_rate: vec![0.0; n],
             link_bytes: vec![0.0; n],
-            flows: HashMap::new(),
-            next_id: 0,
+            slots: Vec::new(),
+            free: Vec::new(),
+            active: Vec::new(),
+            by_cap: Vec::new(),
+            link_flows: vec![Vec::new(); n],
+            next_birth: 0,
             last_advance: 0.0,
-            generation: 0,
             completions: 0,
+            peak_active: 0,
+            timer: None,
+            scratch: Scratch {
+                remaining: vec![0.0; n],
+                users: vec![0; n],
+                saturated: vec![false; n],
+                ..Scratch::default()
+            },
         }))
     }
 
@@ -73,7 +164,14 @@ impl FlowNet {
 
     /// Number of currently active flows.
     pub fn active(&self) -> usize {
-        self.flows.len()
+        self.active.len()
+    }
+
+    /// Most flows ever simultaneously active — exact (updated on every
+    /// arrival), so concurrency metrics don't depend on when a consumer
+    /// happens to sample.
+    pub fn peak_active(&self) -> usize {
+        self.peak_active
     }
 
     /// Current utilization of a link in [0, 1].
@@ -102,9 +200,104 @@ impl FlowNet {
         self.link_bytes[l.0]
     }
 
-    /// Current rate of a flow (0 if finished).
+    /// Current rate of a flow (0 if finished; stale ids of completed flows
+    /// stay 0 even after their slab slot is reused).
     pub fn flow_rate(&self, id: FlowId) -> f64 {
-        self.flows.get(&id.0).map(|f| f.rate).unwrap_or(0.0)
+        if id.is_completed() {
+            return 0.0;
+        }
+        match self.slots.get(id.slot() as usize) {
+            Some(slot) if slot.gen == id.gen() => {
+                slot.state.as_ref().map(|f| f.rate).unwrap_or(0.0)
+            }
+            _ => 0.0,
+        }
+    }
+
+    // ---- slab plumbing -----------------------------------------------
+
+    fn insert(&mut self, mut state: FlowState) -> FlowId {
+        // Record where this flow will sit in the index lists (links are
+        // distinct along a path, so each list's length is its position).
+        state.active_pos = self.active.len() as u32;
+        state.link_pos =
+            state.path.iter().map(|&LinkId(l)| self.link_flows[l].len() as u32).collect();
+        let s = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize].state = Some(state);
+                s
+            }
+            None => {
+                assert!(self.slots.len() < u32::MAX as usize, "flow slab full");
+                self.slots.push(Slot { gen: 0, state: Some(state) });
+                self.scratch.frozen.push(false);
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.active.push(s);
+        self.peak_active = self.peak_active.max(self.active.len());
+        let pos = self.by_cap_position(s).unwrap_or_else(|p| p);
+        self.by_cap.insert(pos, s);
+        let slot = &self.slots[s as usize];
+        for &LinkId(l) in &slot.state.as_ref().unwrap().path {
+            self.link_flows[l].push(s);
+        }
+        FlowId::new(s, slot.gen)
+    }
+
+    /// Binary-search `by_cap` for slot `s` (whose state must be present).
+    /// `Ok` is the slot's position, `Err` its insertion point — the
+    /// `(cap, slot)` key is unique, so a present slot is always `Ok`.
+    fn by_cap_position(&self, s: u32) -> Result<usize, usize> {
+        let cap = self.flow(s).cap;
+        self.by_cap.binary_search_by(|&x| {
+            let cx = self.flow(x).cap;
+            cx.partial_cmp(&cap).unwrap_or(Ordering::Equal).then(x.cmp(&s))
+        })
+    }
+
+    /// Remove a departing flow from the slab and every index list in
+    /// O(path length): stored positions make each removal a `swap_remove`,
+    /// with the displaced flow's position fixed up in place.
+    fn release(&mut self, s: u32) -> FlowState {
+        // Drop from the cap order while the slot still answers for its cap.
+        let pos = self.by_cap_position(s).expect("flow missing from cap order");
+        self.by_cap.remove(pos);
+        let state = self.slots[s as usize].state.take().expect("releasing empty slot");
+        // Bump the generation so stale ids stop resolving to this slot.
+        self.slots[s as usize].gen = self.slots[s as usize].gen.wrapping_add(1);
+        self.free.push(s);
+        let p = state.active_pos as usize;
+        debug_assert_eq!(self.active[p], s, "active index out of sync");
+        self.active.swap_remove(p);
+        if p < self.active.len() {
+            let moved = self.active[p];
+            self.slots[moved as usize].state.as_mut().expect("moved slot inactive").active_pos =
+                p as u32;
+        }
+        for (i, &LinkId(l)) in state.path.iter().enumerate() {
+            let lf = &mut self.link_flows[l];
+            let p = state.link_pos[i] as usize;
+            debug_assert_eq!(lf[p], s, "link index out of sync");
+            lf.swap_remove(p);
+            if p < lf.len() {
+                let moved = lf[p];
+                let old_last = lf.len() as u32; // index the moved entry vacated
+                debug_assert_ne!(moved, s, "path repeats a link");
+                let m = self.slots[moved as usize].state.as_mut().expect("moved slot inactive");
+                for (j, &pl) in m.path.iter().enumerate() {
+                    if pl == LinkId(l) && m.link_pos[j] == old_last {
+                        m.link_pos[j] = p as u32;
+                        break;
+                    }
+                }
+            }
+        }
+        state
+    }
+
+    fn flow(&self, s: u32) -> &FlowState {
+        self.slots[s as usize].state.as_ref().expect("inactive slot")
     }
 
     // ---- internal fluid mechanics ------------------------------------
@@ -115,7 +308,8 @@ impl FlowNet {
         if dt <= 0.0 {
             return;
         }
-        for f in self.flows.values_mut() {
+        for &s in &self.active {
+            let f = self.slots[s as usize].state.as_mut().expect("inactive slot in active list");
             if f.rate > 0.0 {
                 f.remaining = (f.remaining - f.rate * dt).max(0.0);
             }
@@ -129,114 +323,153 @@ impl FlowNet {
     }
 
     /// Max-min fair allocation via progressive water-filling, honoring
-    /// per-flow caps. O(iterations × (flows + links)); iterations ≤
-    /// #distinct bottlenecks.
+    /// per-flow caps. Dense-array rework of the classic loop: all unfrozen
+    /// flows ride one shared water level, links saturate in rounds and
+    /// freeze exactly the flows in their index lists, and cap freezes walk
+    /// the incrementally-maintained `by_cap` order. Every buffer is
+    /// persistent scratch — zero allocation per call in steady state.
+    /// Cost: O(active + links) setup plus O(rounds × (touched links +
+    /// freezes)); rounds ≤ #distinct freeze levels (saturated links +
+    /// distinct binding caps).
     fn reallocate(&mut self) {
         for r in self.link_rate.iter_mut() {
             *r = 0.0;
         }
-        if self.flows.is_empty() {
+        if self.active.is_empty() {
             return;
         }
-        let mut remaining_cap = self.capacity.clone();
-        // (flow id, frozen?) — deterministic iteration order for replays.
-        let mut ids: Vec<u64> = self.flows.keys().copied().collect();
-        ids.sort_unstable();
-        let mut rate: HashMap<u64, f64> = ids.iter().map(|&i| (i, 0.0)).collect();
-        let mut frozen: HashMap<u64, bool> = ids.iter().map(|&i| (i, false)).collect();
-        let mut users: Vec<u32> = vec![0; self.capacity.len()];
+
+        let sc = &mut self.scratch;
+        // Every active flow starts unfrozen, so each link's initial user
+        // count is just its index-list length.
+        sc.touched.clear();
+        for (l, lf) in self.link_flows.iter().enumerate() {
+            if !lf.is_empty() {
+                sc.touched.push(l as u32);
+                sc.users[l] = lf.len() as u32;
+                sc.remaining[l] = self.capacity[l];
+                sc.saturated[l] = false;
+            }
+        }
+        for &s in &self.active {
+            sc.frozen[s as usize] = false;
+        }
+        debug_assert_eq!(self.by_cap.len(), self.active.len(), "cap order out of sync");
 
         // Relative epsilons: with capacities ~1e8 B/s, one ulp of water-
         // filling residue (~1e-8) must count as "saturated", or the loop
         // spins shaving dust off the same link without freezing anything.
         let link_eps = |cap: f64| cap * 1e-9 + 1e-9;
-        let max_iters = ids.len() + self.capacity.len() + 8;
+        let cap_eps = |cap: f64| if cap.is_finite() { cap * 1e-9 + 1e-9 } else { 0.0 };
+
+        // The shared rate of every still-unfrozen flow (all receive the
+        // same uniform increments, so one scalar tracks them all).
+        let mut level = 0.0f64;
+        let mut unfrozen = self.active.len();
+        let mut cap_ptr = 0usize;
+        let max_iters = self.active.len() + sc.touched.len() + 8;
         let mut iters = 0usize;
-        loop {
+        while unfrozen > 0 {
             iters += 1;
-            // Count unfrozen users per link.
-            for u in users.iter_mut() {
-                *u = 0;
-            }
-            let mut any = false;
-            for &id in &ids {
-                if !frozen[&id] {
-                    any = true;
-                    for &LinkId(l) in &self.flows[&id].path {
-                        users[l] += 1;
-                    }
-                }
-            }
-            if !any {
-                break;
-            }
             // Smallest feasible uniform increment across unfrozen flows.
             let mut inc = f64::INFINITY;
-            for (l, &u) in users.iter().enumerate() {
-                if u > 0 {
-                    inc = inc.min(remaining_cap[l].max(0.0) / u as f64);
+            for &l in &sc.touched {
+                let l = l as usize;
+                if sc.users[l] > 0 {
+                    inc = inc.min(sc.remaining[l].max(0.0) / sc.users[l] as f64);
                 }
             }
-            for &id in &ids {
-                if !frozen[&id] {
-                    inc = inc.min(self.flows[&id].cap - rate[&id]);
-                }
+            while cap_ptr < self.by_cap.len() && sc.frozen[self.by_cap[cap_ptr] as usize] {
+                cap_ptr += 1;
+            }
+            if cap_ptr < self.by_cap.len() {
+                let cap = self.slots[self.by_cap[cap_ptr] as usize].state.as_ref().unwrap().cap;
+                inc = inc.min(cap - level);
             }
             if !inc.is_finite() {
                 break; // all paths uncapacitated? cannot happen with real links
             }
             let inc = inc.max(0.0);
-            // Apply the increment and freeze whatever bottomed out.
-            for &id in &ids {
-                if frozen[&id] {
-                    continue;
-                }
-                *rate.get_mut(&id).unwrap() += inc;
-                for &LinkId(l) in &self.flows[&id].path {
-                    remaining_cap[l] -= inc;
+            level += inc;
+            for &l in &sc.touched {
+                let l = l as usize;
+                if sc.users[l] > 0 {
+                    sc.remaining[l] -= inc * sc.users[l] as f64;
                 }
             }
             let mut froze_any = false;
-            for &id in &ids {
-                if frozen[&id] {
+            // (a) Cap freezes: the sorted prefix whose cap the level reached.
+            while cap_ptr < self.by_cap.len() {
+                let s = self.by_cap[cap_ptr] as usize;
+                if sc.frozen[s] {
+                    cap_ptr += 1;
                     continue;
                 }
-                let f = &self.flows[&id];
-                let cap_eps = if f.cap.is_finite() { f.cap * 1e-9 + 1e-9 } else { 0.0 };
-                let hit_cap = f.cap.is_finite() && rate[&id] >= f.cap - cap_eps;
-                let hit_link = f
-                    .path
-                    .iter()
-                    .any(|&LinkId(l)| remaining_cap[l] <= link_eps(self.capacity[l]));
-                if hit_cap || hit_link {
-                    *frozen.get_mut(&id).unwrap() = true;
+                let f = self.slots[s].state.as_mut().unwrap();
+                if f.cap.is_finite() && level >= f.cap - cap_eps(f.cap) {
+                    f.rate = level;
+                    for &LinkId(l) in &f.path {
+                        sc.users[l] -= 1;
+                    }
+                    sc.frozen[s] = true;
                     froze_any = true;
+                    unfrozen -= 1;
+                    cap_ptr += 1;
+                } else {
+                    break;
                 }
             }
-            if !froze_any || iters >= max_iters {
-                // Each productive iteration must freeze something; if
-                // nothing froze (fp dust) or we exhausted the bound,
-                // freeze everything at current rates — feasible by
-                // construction, off by at most one epsilon of fairness.
-                for &id in &ids {
-                    *frozen.get_mut(&id).unwrap() = true;
+            // (b) Link freezes: newly saturated links freeze every unfrozen
+            // flow in their index lists.
+            for &l in &sc.touched {
+                let l = l as usize;
+                if sc.saturated[l] || sc.remaining[l] > link_eps(self.capacity[l]) {
+                    continue;
                 }
+                sc.saturated[l] = true;
+                for &s in &self.link_flows[l] {
+                    let s = s as usize;
+                    if sc.frozen[s] {
+                        continue;
+                    }
+                    let f = self.slots[s].state.as_mut().unwrap();
+                    f.rate = level;
+                    for &LinkId(pl) in &f.path {
+                        sc.users[pl] -= 1;
+                    }
+                    sc.frozen[s] = true;
+                    froze_any = true;
+                    unfrozen -= 1;
+                }
+            }
+            if unfrozen > 0 && (!froze_any || iters >= max_iters) {
+                // Each productive round must freeze something; if nothing
+                // froze (fp dust) or the bound is exhausted, everyone left
+                // keeps the current level — feasible by construction, off
+                // by at most one epsilon of fairness.
                 break;
             }
         }
+        if unfrozen > 0 {
+            for &s in &self.active {
+                if !sc.frozen[s as usize] {
+                    self.slots[s as usize].state.as_mut().unwrap().rate = level;
+                }
+            }
+        }
 
-        for (&id, r) in &rate {
-            let f = self.flows.get_mut(&id).unwrap();
-            f.rate = *r;
+        for &s in &self.active {
+            let f = self.slots[s as usize].state.as_ref().unwrap();
             for &LinkId(l) in &f.path {
-                self.link_rate[l] += *r;
+                self.link_rate[l] += f.rate;
             }
         }
     }
 
     fn next_completion(&self) -> Option<f64> {
         let mut best: Option<f64> = None;
-        for f in self.flows.values() {
+        for &s in &self.active {
+            let f = self.flow(s);
             if f.rate > 0.0 {
                 let t = f.remaining / f.rate;
                 best = Some(match best {
@@ -253,7 +486,7 @@ impl FlowNet {
     /// Start a transfer of `bytes` along `path` with transport cap
     /// `cap_bps` (bytes/s; `f64::INFINITY` for uncapped). `done` fires on
     /// the engine when the last byte arrives. Zero-byte flows complete
-    /// immediately.
+    /// immediately and return [`FlowId::COMPLETED`].
     pub fn start<F: FnOnce(&mut Engine) + 'static>(
         net: &Rc<RefCell<FlowNet>>,
         eng: &mut Engine,
@@ -265,20 +498,26 @@ impl FlowNet {
         assert!(bytes >= 0.0 && cap_bps > 0.0);
         if bytes == 0.0 {
             eng.schedule_in(0.0, done);
-            return FlowId(u64::MAX);
+            return FlowId::COMPLETED;
         }
         assert!(!path.is_empty(), "flow with empty path");
         let id = {
             let mut n = net.borrow_mut();
             n.advance(eng.now());
-            let id = n.next_id;
-            n.next_id += 1;
-            n.flows.insert(
-                id,
-                FlowState { path, remaining: bytes, rate: 0.0, cap: cap_bps, done: Some(Box::new(done)) },
-            );
+            let birth = n.next_birth;
+            n.next_birth += 1;
+            let id = n.insert(FlowState {
+                path,
+                remaining: bytes,
+                rate: 0.0,
+                cap: cap_bps,
+                birth,
+                active_pos: 0,    // assigned by insert
+                link_pos: Vec::new(),
+                done: Some(Box::new(done)),
+            });
             n.reallocate();
-            FlowId(id)
+            id
         };
         Self::reschedule(net, eng);
         id
@@ -297,57 +536,69 @@ impl FlowNet {
         Self::reschedule(net, eng);
     }
 
+    /// (Re)arm the single completion timer: cancel the outstanding one and
+    /// schedule at the new earliest completion. The engine frees the old
+    /// callback immediately, so the heap carries at most one completion
+    /// event (plus transient markers) per network regardless of churn.
     fn reschedule(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) {
-        let (gen, dt) = {
+        let (old, dt) = {
             let mut n = net.borrow_mut();
-            n.generation += 1;
-            (n.generation, n.next_completion())
+            (n.timer.take(), n.next_completion())
         };
+        if let Some(t) = old {
+            eng.cancel(t);
+        }
         let Some(dt) = dt else { return };
-        let net = net.clone();
-        eng.schedule_in(dt.max(0.0), move |eng| {
-            if net.borrow().generation != gen {
-                return; // superseded by a later reallocation
-            }
-            Self::on_completion(&net, eng);
+        let net2 = net.clone();
+        let id = eng.schedule_in(dt.max(0.0), move |eng| {
+            Self::on_completion(&net2, eng);
         });
+        net.borrow_mut().timer = Some(id);
     }
 
     fn on_completion(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) {
         let callbacks = {
             let mut n = net.borrow_mut();
+            n.timer = None; // this event *is* the timer; it just fired
             n.advance(eng.now());
             // A flow is done when within an epsilon that is relative to
             // its rate (1 ns of transfer) — pure absolute epsilons leave
             // residues whose completion dt falls below the clock's ulp
             // and the event loop stops advancing time.
-            let mut finished: Vec<u64> = n
-                .flows
-                .iter()
-                .filter(|(_, f)| f.remaining <= 1e-6 + f.rate * 1e-9)
-                .map(|(&id, _)| id)
-                .collect();
+            let mut finished: Vec<u32> = Vec::new();
+            for &s in &n.active {
+                let f = n.flow(s);
+                if f.remaining <= 1e-6 + f.rate * 1e-9 {
+                    finished.push(s);
+                }
+            }
             if finished.is_empty() {
                 // This event fired because a completion was due; force
                 // progress by completing the nearest flow (fp dust).
-                if let Some((&id, _)) = n
-                    .flows
-                    .iter()
-                    .filter(|(_, f)| f.rate > 0.0)
-                    .min_by(|a, b| {
-                        let ta = a.1.remaining / a.1.rate;
-                        let tb = b.1.remaining / b.1.rate;
-                        ta.partial_cmp(&tb).unwrap()
-                    })
-                {
-                    finished.push(id);
+                let mut best: Option<(f64, u64, u32)> = None;
+                for &s in &n.active {
+                    let f = n.flow(s);
+                    if f.rate > 0.0 {
+                        let t = f.remaining / f.rate;
+                        let better = match best {
+                            None => true,
+                            Some((bt, bb, _)) => t < bt || (t == bt && f.birth < bb),
+                        };
+                        if better {
+                            best = Some((t, f.birth, s));
+                        }
+                    }
+                }
+                if let Some((_, _, s)) = best {
+                    finished.push(s);
                 }
             }
-            let mut cbs = Vec::new();
-            let mut ids = finished;
-            ids.sort_unstable(); // deterministic callback order
-            for id in ids {
-                let mut f = n.flows.remove(&id).unwrap();
+            // Deterministic callback order: flow birth (insertion) order,
+            // immune to slab slot recycling.
+            finished.sort_unstable_by_key(|&s| n.flow(s).birth);
+            let mut cbs = Vec::with_capacity(finished.len());
+            for s in finished {
+                let mut f = n.release(s);
                 n.completions += 1;
                 if let Some(cb) = f.done.take() {
                     cbs.push(cb);
@@ -368,7 +619,7 @@ impl FlowNet {
 mod tests {
     use super::*;
     use crate::net::topology::{NodeSpec, Topology};
-    use std::cell::RefCell;
+    use std::cell::{Cell, RefCell};
     use std::rc::Rc;
 
     fn two_site_topo() -> Topology {
@@ -438,6 +689,9 @@ mod tests {
         let d = done.borrow();
         assert!((d[0] - 5.0).abs() < 1e-6, "{d:?}");
         assert!((d[1] - 10.0).abs() < 1e-6, "{d:?}");
+        // Both flows overlapped; the high-water mark saw them together.
+        assert_eq!(net.borrow().peak_active(), 2);
+        assert_eq!(net.borrow().active(), 0);
     }
 
     #[test]
@@ -504,9 +758,46 @@ mod tests {
         let hit = Rc::new(RefCell::new(false));
         let h = hit.clone();
         let path = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
-        FlowNet::start(&net, &mut eng, path, 0.0, f64::INFINITY, move |_| *h.borrow_mut() = true);
+        let id =
+            FlowNet::start(&net, &mut eng, path, 0.0, f64::INFINITY, move |_| *h.borrow_mut() = true);
+        assert!(id.is_completed());
         eng.run();
         assert!(*hit.borrow());
+    }
+
+    #[test]
+    fn zero_byte_flow_id_never_aliases_real_flows() {
+        let t = two_site_topo();
+        let net = FlowNet::new(&t);
+        let mut eng = Engine::new();
+        let path = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
+        let z = FlowNet::start(&net, &mut eng, path.clone(), 0.0, f64::INFINITY, |_| {});
+        // Real flows never mint the reserved id, so `flow_rate` keeps
+        // answering 0 for the completed flow — not for someone else.
+        let real = FlowNet::start(&net, &mut eng, path, 1000.0, f64::INFINITY, |_| {});
+        assert!(z.is_completed() && !real.is_completed());
+        assert_ne!(z, real);
+        assert_eq!(net.borrow().flow_rate(z), 0.0);
+        assert!(net.borrow().flow_rate(real) > 0.0);
+        eng.run();
+    }
+
+    #[test]
+    fn stale_flow_ids_do_not_alias_reused_slots() {
+        let t = two_site_topo();
+        let net = FlowNet::new(&t);
+        let mut eng = Engine::new();
+        let path = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
+        let a = FlowNet::start(&net, &mut eng, path.clone(), 100.0, f64::INFINITY, |_| {});
+        eng.run(); // flow a completes; its slab slot is recycled
+        assert_eq!(net.borrow().active(), 0);
+        let b = FlowNet::start(&net, &mut eng, path, 1000.0, f64::INFINITY, |_| {});
+        // b reuses a's slot under a new generation: a's id must read 0
+        // while b reports a live rate.
+        assert_ne!(a, b);
+        assert_eq!(net.borrow().flow_rate(a), 0.0);
+        assert!((net.borrow().flow_rate(b) - 100.0).abs() < 1e-6);
+        eng.run();
     }
 
     #[test]
@@ -574,7 +865,8 @@ mod tests {
                     return Err(format!("link {l} over capacity: {rate} > {}", n.capacity[l]));
                 }
             }
-            for f in n.flows.values() {
+            for &s in &n.active {
+                let f = n.flow(s);
                 // (2) cap respected
                 if f.rate > f.cap + 1e-6 {
                     return Err(format!("flow over cap: {} > {}", f.rate, f.cap));
@@ -609,6 +901,85 @@ mod tests {
             } else {
                 Err(format!("bottleneck not saturated: {rate}"))
             }
+        });
+    }
+
+    /// Each completion spawns a successor until `left` drains — arrival/
+    /// departure churn with slab slot recycling on every hop.
+    fn spawn_chain(
+        net: &Rc<RefCell<FlowNet>>,
+        eng: &mut Engine,
+        paths: &Rc<Vec<Vec<LinkId>>>,
+        k: usize,
+        left: &Rc<Cell<usize>>,
+        bytes: f64,
+    ) {
+        if left.get() == 0 {
+            return;
+        }
+        left.set(left.get() - 1);
+        let net2 = net.clone();
+        let paths2 = paths.clone();
+        let left2 = left.clone();
+        let path = paths[k % paths.len()].clone();
+        FlowNet::start(net, eng, path, bytes, f64::INFINITY, move |e| {
+            spawn_chain(&net2, e, &paths2, k + 1, &left2, bytes);
+        });
+    }
+
+    #[test]
+    fn engine_heap_stays_small_under_flow_churn() {
+        // The single cancellable completion timer keeps the event heap
+        // O(active flows): one live completion event regardless of how
+        // many reallocations churn produces (the old generation-counter
+        // scheme left one stale event behind per reallocation).
+        crate::proptest::check("flow churn keeps heap O(active)", 10, |rng| {
+            let t = two_site_topo();
+            let net = FlowNet::new(&t);
+            let mut eng = Engine::new();
+            let mut paths = Vec::new();
+            for r in 0..2usize {
+                for i in 0..4usize {
+                    let src = t.racks[r].nodes[i];
+                    let dst = t.racks[1 - r].nodes[(i + 1) % 4];
+                    paths.push(t.path(src, dst));
+                }
+            }
+            let paths = Rc::new(paths);
+            let chains = 2 + rng.gen_range(6) as usize;
+            let total = 40 + rng.gen_range(80) as usize;
+            let left = Rc::new(Cell::new(total));
+            let bytes = 50.0 + rng.f64() * 500.0;
+            for c in 0..chains {
+                spawn_chain(&net, &mut eng, &paths, c, &left, bytes);
+            }
+            let active0 = net.borrow().active();
+            if eng.pending() > active0 + 2 {
+                return Err(format!("{} events for {active0} flows", eng.pending()));
+            }
+            while eng.step() {
+                let active = net.borrow().active();
+                if eng.pending() > active + 2 {
+                    return Err(format!("{} live events for {active} active flows", eng.pending()));
+                }
+                if eng.heap_len() > 2 * eng.pending() + 66 {
+                    return Err(format!(
+                        "heap {} for {} live events",
+                        eng.heap_len(),
+                        eng.pending()
+                    ));
+                }
+            }
+            // Every spawn consumes one unit of budget, so exactly `total`
+            // flows ever start — and each must complete exactly once.
+            if net.borrow().completions() != total as u64 {
+                return Err(format!(
+                    "{} completions for {} flows",
+                    net.borrow().completions(),
+                    total
+                ));
+            }
+            Ok(())
         });
     }
 }

@@ -1,8 +1,17 @@
 //! The event heap: virtual clock, closure events, cancellable timers.
+//!
+//! Cancellation is O(1) and *eager about memory*: the heap stores only
+//! `(time, seq)` markers while the callbacks live in a side table keyed by
+//! seq. `cancel` drops the callback immediately (no closure lingers until
+//! its scheduled time), a stale marker is purged when it reaches the top of
+//! the heap, and cancelling an already-executed or unknown id is a true
+//! no-op — nothing accumulates across a long run. When stale markers
+//! outnumber live events the heap is compacted, so heap size stays O(live
+//! events), not O(total cancellations).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
-use std::collections::HashSet;
+use std::collections::HashMap;
 
 /// Simulated time in seconds.
 pub type SimTime = f64;
@@ -13,10 +22,12 @@ pub struct TimerId(u64);
 
 type EventFn = Box<dyn FnOnce(&mut Engine)>;
 
+/// Heap marker: ordering key only. The callback lives in `Engine::events`
+/// so `cancel` can free it without touching the heap.
+#[derive(Debug, Clone, Copy)]
 struct Scheduled {
     time: SimTime,
     seq: u64,
-    f: EventFn,
 }
 
 impl PartialEq for Scheduled {
@@ -47,7 +58,8 @@ pub struct Engine {
     now: SimTime,
     seq: u64,
     heap: BinaryHeap<Scheduled>,
-    cancelled: HashSet<u64>,
+    /// Live (scheduled, not yet executed, not cancelled) callbacks by seq.
+    events: HashMap<u64, EventFn>,
     executed: u64,
 }
 
@@ -59,7 +71,7 @@ impl Default for Engine {
 
 impl Engine {
     pub fn new() -> Self {
-        Engine { now: 0.0, seq: 0, heap: BinaryHeap::new(), cancelled: HashSet::new(), executed: 0 }
+        Engine { now: 0.0, seq: 0, heap: BinaryHeap::new(), events: HashMap::new(), executed: 0 }
     }
 
     /// Current virtual time in seconds.
@@ -78,7 +90,8 @@ impl Engine {
         assert!(t.is_finite(), "non-finite event time");
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Scheduled { time: t.max(self.now), seq, f: Box::new(f) });
+        self.events.insert(seq, Box::new(f));
+        self.heap.push(Scheduled { time: t.max(self.now), seq });
         TimerId(seq)
     }
 
@@ -90,21 +103,35 @@ impl Engine {
     }
 
     /// Cancel a scheduled event. Idempotent; cancelling an already-executed
-    /// event is a no-op.
+    /// (or never-issued) id is a no-op. The callback is dropped immediately;
+    /// the heap marker is purged when it pops or at the next compaction.
     pub fn cancel(&mut self, id: TimerId) {
-        self.cancelled.insert(id.0);
+        if self.events.remove(&id.0).is_some() {
+            self.maybe_compact();
+        }
     }
 
-    /// Run a single event. Returns false when the heap is empty.
+    /// Rebuild the heap without stale (cancelled) markers once they
+    /// outnumber live events. Amortized O(1) per cancellation; keeps the
+    /// heap at most 2× the live event count (plus a small floor).
+    fn maybe_compact(&mut self) {
+        if self.heap.len() > 64 && self.heap.len() > 2 * self.events.len() {
+            let mut live = std::mem::take(&mut self.heap).into_vec();
+            live.retain(|ev| self.events.contains_key(&ev.seq));
+            self.heap = BinaryHeap::from(live);
+        }
+    }
+
+    /// Run a single event. Returns false when no live event remains.
     pub fn step(&mut self) -> bool {
         while let Some(ev) = self.heap.pop() {
-            if self.cancelled.remove(&ev.seq) {
-                continue;
-            }
+            let Some(f) = self.events.remove(&ev.seq) else {
+                continue; // stale marker of a cancelled event: purge
+            };
             debug_assert!(ev.time >= self.now - 1e-9);
             self.now = ev.time.max(self.now);
             self.executed += 1;
-            (ev.f)(self);
+            f(self);
             return true;
         }
         false
@@ -115,11 +142,20 @@ impl Engine {
         while self.step() {}
     }
 
-    /// Run until virtual time passes `t` or the heap empties. Events
-    /// scheduled exactly at `t` are executed. Afterwards `now() >= t` only
-    /// if events reached it; the clock never advances past executed events.
+    /// Run every live event scheduled at or before `t` (events exactly at
+    /// `t` included). Afterwards the clock rests at `t` even if the heap
+    /// drained earlier — or beyond `t` if it was already past it.
     pub fn run_until(&mut self, t: SimTime) {
         loop {
+            // Purge stale markers at the top so `peek` reflects the next
+            // event that will actually execute — otherwise a cancelled
+            // marker before `t` could let `step` run a live event past it.
+            while let Some(ev) = self.heap.peek() {
+                if self.events.contains_key(&ev.seq) {
+                    break;
+                }
+                self.heap.pop();
+            }
             match self.heap.peek() {
                 Some(ev) if ev.time <= t => {
                     self.step();
@@ -132,9 +168,15 @@ impl Engine {
         }
     }
 
-    /// Number of pending (non-cancelled) events. O(n); test/debug helper.
+    /// Number of pending (non-cancelled) events. Exact and O(1).
     pub fn pending(&self) -> usize {
-        self.heap.len() - self.cancelled.len().min(self.heap.len())
+        self.events.len()
+    }
+
+    /// Heap entries including not-yet-purged cancelled markers — a
+    /// test/debug observable for the O(live) heap-size invariant.
+    pub fn heap_len(&self) -> usize {
+        self.heap.len()
     }
 }
 
@@ -198,6 +240,54 @@ mod tests {
     }
 
     #[test]
+    fn stale_cancel_is_a_noop_and_pending_stays_exact() {
+        let mut e = Engine::new();
+        let id1 = e.schedule_at(1.0, |_| {});
+        e.schedule_at(2.0, |_| {});
+        assert_eq!(e.pending(), 2);
+        assert!(e.step()); // executes id1
+        // Cancelling the already-executed event must not undercount the
+        // remaining live event or retain any state.
+        e.cancel(id1);
+        e.cancel(id1); // doubly stale: still a no-op
+        assert_eq!(e.pending(), 1);
+        e.run();
+        assert_eq!(e.pending(), 0);
+        assert_eq!(e.heap_len(), 0);
+    }
+
+    #[test]
+    fn cancelled_markers_are_compacted() {
+        let mut e = Engine::new();
+        for _ in 0..1000 {
+            let id = e.schedule_at(1e6, |_| {});
+            e.cancel(id);
+            assert!(e.heap_len() <= 2 * e.pending() + 66, "heap {}", e.heap_len());
+        }
+        assert_eq!(e.pending(), 0);
+        assert!(e.heap_len() <= 66, "heap {}", e.heap_len());
+        e.run();
+        assert_eq!(e.executed(), 0);
+    }
+
+    #[test]
+    fn run_until_does_not_step_past_cancelled_head() {
+        let mut e = Engine::new();
+        let hits = Rc::new(RefCell::new(0));
+        let h = hits.clone();
+        let early = e.schedule_at(1.0, |_| {});
+        e.schedule_at(10.0, move |_| *h.borrow_mut() += 1);
+        e.cancel(early);
+        // The cancelled t=1 marker must not trick run_until(5) into
+        // executing the t=10 event.
+        e.run_until(5.0);
+        assert_eq!(*hits.borrow(), 0);
+        assert_eq!(e.now(), 5.0);
+        e.run();
+        assert_eq!(*hits.borrow(), 1);
+    }
+
+    #[test]
     fn run_until_stops_at_boundary() {
         let mut e = Engine::new();
         let hits = Rc::new(RefCell::new(Vec::new()));
@@ -238,6 +328,34 @@ mod tests {
             } else {
                 Err("clock went backwards".into())
             }
+        });
+    }
+
+    #[test]
+    fn heap_stays_linear_in_live_events_property() {
+        crate::proptest::check("engine heap O(live) under cancel churn", 20, |rng| {
+            let mut e = Engine::new();
+            let mut ids: Vec<TimerId> = Vec::new();
+            for _ in 0..2000 {
+                let t = e.now() + rng.f64() * 10.0;
+                ids.push(e.schedule_at(t, |_| {}));
+                if rng.chance(0.7) && !ids.is_empty() {
+                    // May hit executed ids too — stale cancels must stay no-ops.
+                    let k = rng.gen_range(ids.len() as u64) as usize;
+                    e.cancel(ids.swap_remove(k));
+                }
+                if rng.chance(0.2) {
+                    e.step();
+                }
+                if e.heap_len() > 2 * e.pending() + 66 {
+                    return Err(format!("heap {} for {} live", e.heap_len(), e.pending()));
+                }
+            }
+            e.run();
+            if e.pending() != 0 || e.heap_len() != 0 {
+                return Err("drain left residue".into());
+            }
+            Ok(())
         });
     }
 }

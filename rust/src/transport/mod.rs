@@ -198,7 +198,7 @@ pub fn disk_read<F: FnOnce(&mut Engine) + 'static>(
     bytes: f64,
     done: F,
 ) {
-    FlowNet::start(&net.clone(), eng, vec![topo.node(node).disk], bytes, f64::INFINITY, done);
+    FlowNet::start(net, eng, vec![topo.node(node).disk], bytes, f64::INFINITY, done);
 }
 
 /// Sequential disk write (same shared disk link; SATA is half-duplex-ish
