@@ -1,21 +1,17 @@
-//! Deprecated compatibility shims for the pre-0.2 experiment drivers.
+//! Paper-style table presentation over registry reports.
 //!
-//! `run_table1` / `run_table2` used to hand-wire topologies, namenodes,
-//! and engines per call site; they are now thin adapters over the
-//! unified scenario API ([`crate::coordinator::scenario`],
-//! [`crate::coordinator::runner`], [`crate::coordinator::registry`]) and
-//! will be removed one release after 0.2. New code should run registry
-//! sets (or `Testbed::builder()` scenarios) through [`ScenarioRunner`]
-//! and consume [`RunReport`]s directly.
+//! The pre-0.2 `run_table1` / `run_table2` drivers (and their deprecated
+//! shims) are gone: every experiment runs a registry set through
+//! [`ScenarioRunner`](super::runner::ScenarioRunner). What remains here
+//! is the *presentation* layer — folding a set's [`RunReport`]s into the
+//! paper's row shapes and printing them in its format.
 
-use super::registry::find_set;
-use super::runner::{RunReport, ScenarioRunner};
-use super::scenario::Framework;
+use super::runner::{wide_area_penalty, RunReport};
 
 /// One Table 1 row: a framework's MalStone-A and MalStone-B times.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
-    pub framework: &'static str,
+    pub framework: String,
     pub a_secs: f64,
     pub b_secs: f64,
     /// Paper-measured values for the side-by-side (seconds).
@@ -26,7 +22,7 @@ pub struct Table1Row {
 /// One Table 2 row: local vs distributed and the wide-area penalty.
 #[derive(Debug, Clone)]
 pub struct Table2Row {
-    pub framework: &'static str,
+    pub framework: String,
     pub local_secs: f64,
     pub dist_secs: f64,
     pub paper_local: f64,
@@ -43,52 +39,50 @@ impl Table2Row {
     }
 }
 
-/// Table 1 at `1/scale_div` of paper scale, as legacy rows.
-#[deprecated(
-    since = "0.2.0",
-    note = "run the `table1` registry set through coordinator::ScenarioRunner instead"
-)]
-pub fn run_table1(scale_div: u64) -> Vec<Table1Row> {
-    let set = find_set("table1").expect("table1 set registered").scaled_down(scale_div);
-    let reports = ScenarioRunner::new().run_all(&set.scenarios);
-    let mut rows = Vec::new();
-    for (i, sc) in set.scenarios.iter().enumerate().step_by(2) {
-        let (a, b): (&RunReport, &RunReport) = (&reports[i], &reports[i + 1]);
-        rows.push(Table1Row {
-            framework: sc.framework.name(),
-            a_secs: a.simulated_secs,
-            b_secs: b.simulated_secs,
-            paper_a: a.paper_secs.unwrap_or(0.0),
-            paper_b: b.paper_secs.unwrap_or(0.0),
-        });
-    }
-    rows
+/// Fold `table1` registry reports (scenario order: framework-major,
+/// variant-minor, so A/B pairs are adjacent) into paper-style rows.
+pub fn table1_rows(reports: &[RunReport]) -> Vec<Table1Row> {
+    assert!(reports.len() % 2 == 0, "table1 reports come in A/B pairs");
+    reports
+        .chunks(2)
+        .map(|pair| {
+            let (a, b) = (&pair[0], &pair[1]);
+            assert_eq!(a.framework, b.framework, "A/B pair spans frameworks");
+            Table1Row {
+                framework: a.framework.clone(),
+                a_secs: a.simulated_secs,
+                b_secs: b.simulated_secs,
+                paper_a: a.paper_secs.unwrap_or(0.0),
+                paper_b: b.paper_secs.unwrap_or(0.0),
+            }
+        })
+        .collect()
 }
 
-/// Table 2 at `1/scale_div` of paper scale, as legacy rows.
-#[deprecated(
-    since = "0.2.0",
-    note = "run the `table2` registry set through coordinator::ScenarioRunner instead"
-)]
-pub fn run_table2(scale_div: u64) -> Vec<Table2Row> {
-    let set = find_set("table2").expect("table2 set registered").scaled_down(scale_div);
-    let reports = ScenarioRunner::new().run_all(&set.scenarios);
-    let mut rows = Vec::new();
-    for (i, sc) in set.scenarios.iter().enumerate().step_by(2) {
-        let (local, dist): (&RunReport, &RunReport) = (&reports[i], &reports[i + 1]);
-        rows.push(Table2Row {
-            framework: match sc.framework {
-                Framework::HadoopMr => "hadoop (3 replicas)",
-                Framework::HadoopMrR1 => "hadoop (1 replica)",
-                _ => "sector",
-            },
-            local_secs: local.simulated_secs,
-            dist_secs: dist.simulated_secs,
-            paper_local: local.paper_secs.unwrap_or(0.0),
-            paper_dist: dist.paper_secs.unwrap_or(0.0),
-        });
-    }
-    rows
+/// Fold `table2` registry reports (scenario order: framework-major,
+/// local/dist-minor) into paper-style rows with display names.
+pub fn table2_rows(reports: &[RunReport]) -> Vec<Table2Row> {
+    assert!(reports.len() % 2 == 0, "table2 reports come in local/dist pairs");
+    reports
+        .chunks(2)
+        .map(|pair| {
+            let (local, dist) = (&pair[0], &pair[1]);
+            assert_eq!(local.framework, dist.framework, "local/dist pair spans frameworks");
+            let framework = match local.framework.as_str() {
+                "hadoop-mapreduce" => "hadoop (3 replicas)".to_string(),
+                "hadoop-mapreduce-r1" => "hadoop (1 replica)".to_string(),
+                "sector-sphere" => "sector".to_string(),
+                other => other.to_string(),
+            };
+            Table2Row {
+                framework,
+                local_secs: local.simulated_secs,
+                dist_secs: dist.simulated_secs,
+                paper_local: local.paper_secs.unwrap_or(0.0),
+                paper_dist: dist.paper_secs.unwrap_or(0.0),
+            }
+        })
+        .collect()
 }
 
 /// Pretty-print Table 1 in the paper's format.
@@ -132,31 +126,48 @@ pub fn format_table2(rows: &[Table2Row]) -> String {
     s
 }
 
+/// Sanity helper used by presentation tests: row penalties must agree
+/// with the shared [`wide_area_penalty`] definition.
+pub fn row_penalty_consistent(row: &Table2Row, local: &RunReport, dist: &RunReport) -> bool {
+    (row.penalty() - wide_area_penalty(local, dist)).abs() < 1e-12
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::registry::find_set;
+    use crate::coordinator::runner::ScenarioRunner;
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_produce_rows() {
-        let rows = run_table1(2000); // 5M records: a quick smoke
+    fn registry_reports_fold_into_table1_rows() {
+        let set = find_set("table1").expect("table1 registered").scaled_down(2000);
+        let reports = ScenarioRunner::new().run_all(&set.scenarios);
+        let rows = table1_rows(&reports);
         assert_eq!(rows.len(), 3);
         assert_eq!(rows[0].framework, "hadoop-mapreduce");
         assert_eq!(rows[2].framework, "sector-sphere");
         assert!(rows.iter().all(|r| r.a_secs > 0.0 && r.b_secs > 0.0 && r.paper_a > 0.0));
+    }
 
-        let rows2 = run_table2(3000); // 5M records
-        assert_eq!(rows2.len(), 3);
-        assert_eq!(rows2[0].framework, "hadoop (3 replicas)");
-        assert_eq!(rows2[1].framework, "hadoop (1 replica)");
-        assert_eq!(rows2[2].framework, "sector");
-        assert!(rows2.iter().all(|r| r.penalty().is_finite()));
+    #[test]
+    fn registry_reports_fold_into_table2_rows() {
+        let set = find_set("table2").expect("table2 registered").scaled_down(3000);
+        let reports = ScenarioRunner::new().run_all(&set.scenarios);
+        let rows = table2_rows(&reports);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].framework, "hadoop (3 replicas)");
+        assert_eq!(rows[1].framework, "hadoop (1 replica)");
+        assert_eq!(rows[2].framework, "sector");
+        assert!(rows.iter().all(|r| r.penalty().is_finite()));
+        for (i, row) in rows.iter().enumerate() {
+            assert!(row_penalty_consistent(row, &reports[2 * i], &reports[2 * i + 1]));
+        }
     }
 
     #[test]
     fn formatting_matches_paper_style() {
         let rows = vec![Table1Row {
-            framework: "hadoop-mapreduce",
+            framework: "hadoop-mapreduce".to_string(),
             a_secs: 454.0 * 60.0 + 13.0,
             b_secs: 840.0 * 60.0 + 50.0,
             paper_a: 1.0,
@@ -165,5 +176,13 @@ mod tests {
         let s = format_table1(&rows);
         assert!(s.contains("454m 13s"));
         assert!(s.contains("840m 50s"));
+        let s2 = format_table2(&[Table2Row {
+            framework: "sector".to_string(),
+            local_secs: 100.0,
+            dist_secs: 105.0,
+            paper_local: 4200.0,
+            paper_dist: 4400.0,
+        }]);
+        assert!(s2.contains("5.0%"), "{s2}");
     }
 }

@@ -14,10 +14,11 @@
 //!   [`RunReport`] (simulated seconds, per-site flow stats, monitor
 //!   summary, paper reference).
 //! - [`registry`]: named [`ScenarioSet`]s — `table1`/`table2` as
-//!   declarative cross-products plus new sweeps (scale ladder,
-//!   local-vs-wide-area, site dropout) with shape checks.
-//! - [`experiment`]: deprecated `run_table1`/`run_table2` shims kept for
-//!   one release.
+//!   declarative cross-products plus sweeps (the §7 `interop`
+//!   compositions, scale ladder, local-vs-wide-area, site dropout) with
+//!   shape checks.
+//! - [`experiment`]: paper-style table presentation over registry
+//!   reports ([`table1_rows`]/[`table2_rows`] + formatters).
 //!
 //! # The scenario API
 //!
@@ -43,10 +44,8 @@ pub mod runner;
 pub mod scenario;
 
 pub use config::Config;
-pub use experiment::{format_table1, format_table2, Table1Row, Table2Row};
-#[allow(deprecated)]
-pub use experiment::{run_table1, run_table2};
-pub use provision::Provisioner;
+pub use experiment::{format_table1, format_table2, table1_rows, table2_rows, Table1Row, Table2Row};
+pub use provision::{Op, Provisioner};
 pub use registry::{find_set, scenario_sets, ScenarioSet};
 pub use runner::{
     all_pass, flow_churn_concurrency, format_checks, format_reports, wide_area_penalty,

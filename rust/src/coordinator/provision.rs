@@ -87,6 +87,47 @@ impl Provisioner {
         self.topo.connect_sites(SiteId(a), SiteId(b), gbps * 1e9 / 8.0, rtt_ms / 1e3);
     }
 
+    /// Retune an existing WAN link pair (dynamic lightpath provisioning
+    /// [13]): both directions get the new capacity.
+    pub fn set_wan_capacity(&mut self, a: usize, b: usize, gbps: f64) {
+        self.log.push(Op::SetWanCapacity { a, b, gbps });
+        for (x, y) in [(a, b), (b, a)] {
+            let lid = self
+                .topo
+                .wan_link(SiteId(x), SiteId(y))
+                .unwrap_or_else(|| panic!("no WAN link {x}->{y} to retune"));
+            self.topo.set_link_capacity(lid, gbps * 1e9 / 8.0);
+        }
+    }
+
+    /// Apply one logged operation (the replay primitive). Every public
+    /// mutator routes through the same methods, so applying an op both
+    /// re-logs and re-executes it.
+    pub fn apply(&mut self, op: &Op) {
+        match op {
+            Op::AddSite { name } => {
+                self.add_site(name);
+            }
+            Op::AddRack { site, nodes } => self.add_rack(*site, *nodes),
+            Op::ConnectSites { a, b, gbps, rtt_ms } => self.connect_sites(*a, *b, *gbps, *rtt_ms),
+            Op::SetWanCapacity { a, b, gbps } => self.set_wan_capacity(*a, *b, *gbps),
+            Op::DrainNode { node } => self.drain_node(*node),
+        }
+    }
+
+    /// Rebuild a provisioner from a recorded op log — the "replayable
+    /// intent" promise: replaying a log captured from an empty start
+    /// reproduces the topology exactly. Logs recorded over a seeded base
+    /// (e.g. [`Provisioner::oct_2009`]) must be applied onto the same
+    /// base with [`Provisioner::apply`].
+    pub fn replay(ops: &[Op]) -> Provisioner {
+        let mut p = Provisioner::new();
+        for op in ops {
+            p.apply(op);
+        }
+        p
+    }
+
     /// Mark a node out of service (engines must skip drained nodes).
     pub fn drain_node(&mut self, node: usize) {
         self.log.push(Op::DrainNode { node });
@@ -182,5 +223,65 @@ mod tests {
     fn build_yields_cluster() {
         let c = Provisioner::oct_2009().build();
         assert_eq!(c.topo.num_nodes(), 128);
+    }
+
+    #[test]
+    fn replaying_the_op_log_reproduces_the_topology() {
+        // Build a non-trivial testbed through every op kind.
+        let mut p = Provisioner::new();
+        p.add_site("east");
+        p.add_site("west");
+        p.add_site("south");
+        p.add_rack(0, 6);
+        p.add_rack(1, 4);
+        p.add_rack(2, 5);
+        p.connect_sites(0, 1, 10.0, 40.0);
+        p.connect_sites(0, 2, 10.0, 25.0);
+        p.connect_sites(1, 2, 1.0, 60.0);
+        p.set_wan_capacity(0, 1, 2.5); // lightpath retune after the fact
+        p.drain_node(3);
+
+        let r = Provisioner::replay(p.log());
+        // Identical shape: site/node/link counts.
+        assert_eq!(r.topology().sites.len(), p.topology().sites.len());
+        assert_eq!(r.topology().num_nodes(), p.topology().num_nodes());
+        assert_eq!(r.topology().links.len(), p.topology().links.len());
+        // Identical WAN capacities in both directions of every pair,
+        // including the retuned one.
+        for a in 0..3 {
+            for b in 0..3 {
+                if a == b {
+                    continue;
+                }
+                let (la, lb) = (
+                    p.topology().wan_link(SiteId(a), SiteId(b)).unwrap(),
+                    r.topology().wan_link(SiteId(a), SiteId(b)).unwrap(),
+                );
+                assert_eq!(la, lb, "link ids diverge for {a}->{b}");
+                assert_eq!(
+                    p.topology().link(la).capacity,
+                    r.topology().link(lb).capacity,
+                    "capacity diverges for {a}->{b}"
+                );
+            }
+        }
+        let retuned = r.topology().wan_link(SiteId(0), SiteId(1)).unwrap();
+        assert!((r.topology().link(retuned).capacity - 2.5e9 / 8.0).abs() < 1.0);
+        // Drains and the log itself replay too.
+        assert_eq!(r.drained(), p.drained());
+        assert_eq!(r.log(), p.log());
+    }
+
+    #[test]
+    fn apply_replays_onto_a_seeded_base() {
+        let mut recorded = Provisioner::oct_2009();
+        recorded.expand_2009_plan();
+        let mut replayed = Provisioner::oct_2009();
+        for op in recorded.log().to_vec() {
+            replayed.apply(&op);
+        }
+        assert_eq!(replayed.topology().num_nodes(), recorded.topology().num_nodes());
+        assert_eq!(replayed.topology().sites.len(), recorded.topology().sites.len());
+        assert_eq!(replayed.log(), recorded.log());
     }
 }

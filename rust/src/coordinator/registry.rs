@@ -1,11 +1,11 @@
 //! The scenario registry: named, declarative sets of scenarios.
 //!
 //! `table1` and `table2` are cross-products over frameworks (× variants,
-//! × placements) rather than hand-written drivers, and new sweeps — a
-//! scale ladder, a local-vs-wide-area pair, per-site dropout — are
-//! one-liner additions. Every set can carry a *shape check*: the paper's
-//! reproduction criteria (ordering, ratios, penalty bands) evaluated
-//! over the set's [`RunReport`]s.
+//! × placements) rather than hand-written drivers, and new sweeps — the
+//! §7 `interop` compositions, a scale ladder, a local-vs-wide-area pair,
+//! per-site dropout — are one-liner additions. Every set can carry a
+//! *shape check*: the paper's reproduction criteria (ordering, ratios,
+//! penalty bands) evaluated over the set's [`RunReport`]s.
 //!
 //! List with `oct scenarios`; run with `oct scenarios <set> [scale]`.
 
@@ -51,6 +51,7 @@ pub fn scenario_sets() -> Vec<ScenarioSet> {
     vec![
         table1_set(),
         table2_set(),
+        interop_set(),
         scale_ladder_set(),
         local_vs_wan_set(),
         site_dropout_set(),
@@ -227,6 +228,96 @@ fn check_table2(r: &[RunReport]) -> Vec<ShapeCheck> {
     ]
 }
 
+/// The paper's §7 interoperability studies: cross-framework compositions
+/// of the shared framework runtime's storage × schedule × exchange
+/// layers, bracketed by the two stock stacks. `cloudstore-mr` swaps the
+/// storage layer only (Hadoop MapReduce over KFS chunk storage:
+/// chunk-lease writes, rack-oblivious placement); `hadoop-over-sector`
+/// swaps transport + replication only (MapReduce scheduling over Sector
+/// placement with a UDT exchange and single lazy-replicated output).
+fn interop_set() -> ScenarioSet {
+    let frameworks = [
+        Framework::HadoopMr,
+        Framework::CloudStoreMr,
+        Framework::HadoopOverSector,
+        Framework::SectorSphere,
+    ];
+    let scenarios = frameworks
+        .into_iter()
+        .map(|fw| {
+            Testbed::builder()
+                .topology(TopologySpec::Oct2009)
+                .placement(Placement::PerSite(5))
+                .framework(fw)
+                .workload(WorkloadSpec::malstone_a(10_000_000_000))
+                .name(&format!("interop/{}", fw.name()))
+                .build()
+        })
+        .collect();
+    ScenarioSet {
+        name: "interop",
+        description: "§7 interop: Hadoop over KFS chunks, MapReduce over Sector+UDT, vs the stock stacks",
+        scenarios,
+        check: Some(check_interop),
+    }
+}
+
+fn check_interop(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 4 {
+        return vec![ShapeCheck::new("interop arity", false, format!("expected 4 reports, got {}", r.len()))];
+    }
+    let (mr, kfs, hos, sphere) =
+        (r[0].simulated_secs, r[1].simulated_secs, r[2].simulated_secs, r[3].simulated_secs);
+    let metric = |rep: &RunReport, k: &str| rep.metric(k).unwrap_or(f64::NAN);
+    let storage_ratio = kfs / mr;
+    vec![
+        ShapeCheck::new(
+            "transport+replication swap wins: hadoop-over-sector < hadoop-mr",
+            hos < mr,
+            format!("{hos:.0}s < {mr:.0}s (UDT exchange + single lazy replica)"),
+        ),
+        ShapeCheck::new(
+            "storage swap is second-order: cloudstore-mr within 0.9-2.5x of hadoop-mr",
+            storage_ratio > 0.9 && storage_ratio < 2.5,
+            format!("{storage_ratio:.2}x (chunk leases + rack-oblivious placement)"),
+        ),
+        ShapeCheck::new(
+            "the exchange dominates the storage layer: hadoop-over-sector < cloudstore-mr",
+            hos < kfs,
+            format!("{hos:.0}s < {kfs:.0}s"),
+        ),
+        ShapeCheck::new(
+            "the native stack still wins: sector-sphere fastest",
+            sphere < hos && sphere < kfs && sphere < mr,
+            format!("{sphere:.0}s vs {hos:.0}/{kfs:.0}/{mr:.0}s"),
+        ),
+        ShapeCheck::new(
+            "per-layer metrics flow into every report",
+            r.iter().all(|rep| {
+                metric(rep, "storage_read_bytes") > 0.0
+                    && metric(rep, "exchange_bytes") > 0.0
+                    && metric(rep, "exchange_remote_bytes") <= metric(rep, "exchange_bytes")
+                    && metric(rep, "stolen_tasks") >= 0.0
+            }),
+            "storage_read / exchange (total ≥ remote) / stolen_tasks present".to_string(),
+        ),
+        ShapeCheck::new(
+            "replication shows up in storage writes: kfs(3 replicas) > hadoop-over-sector(1)",
+            metric(&r[1], "storage_write_bytes") > 2.0 * metric(&r[2], "storage_write_bytes"),
+            format!(
+                "{:.2e}B vs {:.2e}B",
+                metric(&r[1], "storage_write_bytes"),
+                metric(&r[2], "storage_write_bytes")
+            ),
+        ),
+        ShapeCheck::new(
+            "every interop run crossed the WAN",
+            r.iter().all(|rep| rep.wan_bytes > 0.0),
+            format!("{:.2e}/{:.2e}/{:.2e}/{:.2e}B", r[0].wan_bytes, r[1].wan_bytes, r[2].wan_bytes, r[3].wan_bytes),
+        ),
+    ]
+}
+
 /// A Sector/Sphere scale ladder on the Table-1 layout: 2.5B → 5B → 10B
 /// records. The simulator is shape-preserving in scale, so the ladder
 /// should be monotone and roughly linear.
@@ -389,9 +480,7 @@ fn check_flow_churn(r: &[RunReport]) -> Vec<ShapeCheck> {
         return vec![ShapeCheck::new("churn arity", false, format!("expected 1 report, got {}", r.len()))];
     }
     let r = &r[0];
-    let metric = |k: &str| {
-        r.metrics.iter().find(|(m, _)| m == k).map(|(_, v)| *v).unwrap_or(f64::NAN)
-    };
+    let metric = |k: &str| r.metric(k).unwrap_or(f64::NAN);
     let total = r.total_records;
     let target = flow_churn_concurrency(total) as f64;
     vec![
@@ -479,6 +568,15 @@ mod tests {
     }
 
     #[test]
+    fn interop_shape_holds() {
+        let (set, reports) = run_set("interop", SCALE);
+        assert_eq!(reports.len(), 4);
+        assert_eq!(reports[1].framework, "cloudstore-mr");
+        assert_eq!(reports[2].framework, "hadoop-over-sector");
+        assert_checks_pass(&set, &reports);
+    }
+
+    #[test]
     fn flow_churn_shape_holds() {
         // 1/100 scale: 240 transfers, 60 concurrent, on all 120 nodes.
         let (set, reports) = run_set("flow-churn", 100);
@@ -489,9 +587,15 @@ mod tests {
     #[test]
     fn registry_lists_expected_sets() {
         let names: Vec<&str> = scenario_sets().iter().map(|s| s.name).collect();
-        for expect in
-            ["table1", "table2", "scale-ladder", "local-vs-wan", "site-dropout", "flow-churn"]
-        {
+        for expect in [
+            "table1",
+            "table2",
+            "interop",
+            "scale-ladder",
+            "local-vs-wan",
+            "site-dropout",
+            "flow-churn",
+        ] {
             assert!(names.contains(&expect), "missing set {expect}");
         }
         assert!(find_set("no-such-set").is_none());

@@ -11,6 +11,7 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use crate::framework::{HdfsStorage, KfsStorage, SectorStorage, StorageModel};
 use crate::hadoop::hdfs::{HdfsConfig, Namenode};
 use crate::hadoop::mapreduce::{malstone_jobs, uniform_shards, JobReport, MapReduceEngine};
 use crate::hadoop::FrameworkParams;
@@ -72,6 +73,11 @@ impl RunReport {
     /// Simulated-over-paper ratio, when a reference exists.
     pub fn paper_ratio(&self) -> Option<f64> {
         self.paper_secs.map(|p| self.simulated_secs / p)
+    }
+
+    /// Look up an engine-specific metric by key.
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
     }
 
     /// Serialize to the crate's dependency-free JSON value.
@@ -278,14 +284,11 @@ impl ScenarioRunner {
             Framework::FlowChurn => {
                 start_flow_churn(&cluster, &nodes, &sc.workload, &mut eng, outcome.clone())
             }
-            _ => start_hadoop(
-                &cluster,
-                &nodes,
-                sc.framework.params(),
-                &sc.workload,
-                &mut eng,
-                outcome.clone(),
-            ),
+            _ => {
+                let params = sc.framework.params();
+                let storage = build_storage(sc.framework, &cluster, &nodes, &params);
+                start_mapreduce(&cluster, &nodes, params, storage, &sc.workload, &mut eng, outcome.clone())
+            }
         }
         match &mon {
             Some(m) => {
@@ -320,6 +323,27 @@ impl ScenarioRunner {
                 metrics.push(("job2_makespan".to_string(), job2.makespan));
                 metrics.push(("maps".to_string(), job1.maps as f64));
                 metrics.push(("reduces".to_string(), job1.reduces as f64));
+                // Per-layer accounting from the shared framework runtime.
+                metrics.push((
+                    "storage_read_bytes".to_string(),
+                    job1.storage_read_bytes + job2.storage_read_bytes,
+                ));
+                metrics.push((
+                    "storage_write_bytes".to_string(),
+                    job1.storage_write_bytes + job2.storage_write_bytes,
+                ));
+                metrics.push((
+                    "exchange_bytes".to_string(),
+                    job1.shuffle_bytes + job2.shuffle_bytes,
+                ));
+                metrics.push((
+                    "exchange_remote_bytes".to_string(),
+                    job1.shuffle_remote_bytes + job2.shuffle_remote_bytes,
+                ));
+                metrics.push((
+                    "stolen_tasks".to_string(),
+                    (job1.stolen_maps + job2.stolen_maps) as f64,
+                ));
                 finished_at
             }
             Outcome::Sphere { finished_at, report } => {
@@ -327,7 +351,15 @@ impl ScenarioRunner {
                 metrics.push(("aggregate_phase".to_string(), report.aggregate_phase));
                 metrics.push(("segments".to_string(), report.segments as f64));
                 metrics.push(("stolen_segments".to_string(), report.stolen_segments as f64));
-                metrics.push(("exchange_bytes".to_string(), report.exchange_bytes));
+                // Per-layer accounting from the shared framework runtime;
+                // `exchange_bytes`/`exchange_remote_bytes` mean the same
+                // thing for every framework (total incl. node-local /
+                // network-crossing subset).
+                metrics.push(("exchange_bytes".to_string(), report.exchange_total_bytes));
+                metrics.push(("exchange_remote_bytes".to_string(), report.exchange_bytes));
+                metrics.push(("storage_read_bytes".to_string(), report.storage_read_bytes));
+                metrics.push(("storage_write_bytes".to_string(), report.storage_write_bytes));
+                metrics.push(("stolen_tasks".to_string(), report.stolen_segments as f64));
                 finished_at
             }
             Outcome::FlowChurn { finished_at, flows, peak_inflight, peak_active } => {
@@ -409,29 +441,53 @@ impl ScenarioRunner {
     }
 }
 
-fn start_hadoop(
+/// The storage layer a framework's jobs write through — where the §7
+/// interop compositions diverge from the stock stacks.
+fn build_storage(
+    fw: Framework,
+    cluster: &Cluster,
+    nodes: &[NodeId],
+    params: &FrameworkParams,
+) -> Rc<RefCell<dyn StorageModel>> {
+    match fw {
+        Framework::CloudStoreMr => Rc::new(RefCell::new(KfsStorage::new(
+            cluster.topo.clone(),
+            nodes.to_vec(),
+            params.output_replication,
+            42,
+        ))),
+        Framework::HadoopOverSector => Rc::new(RefCell::new(SectorStorage::new())),
+        _ => {
+            let nn = Rc::new(RefCell::new(Namenode::with_members(
+                cluster.topo.clone(),
+                HdfsConfig { replication: params.output_replication, ..Default::default() },
+                42,
+                nodes.to_vec(),
+            )));
+            Rc::new(RefCell::new(HdfsStorage::new(nn, params.output_replication)))
+        }
+    }
+}
+
+/// Run the two chained MalStone MapReduce jobs over `storage`.
+fn start_mapreduce(
     cluster: &Cluster,
     nodes: &[NodeId],
     params: FrameworkParams,
+    storage: Rc<RefCell<dyn StorageModel>>,
     w: &WorkloadSpec,
     eng: &mut Engine,
     out: Rc<RefCell<Option<Outcome>>>,
 ) {
-    let nn = Rc::new(RefCell::new(Namenode::with_members(
-        cluster.topo.clone(),
-        HdfsConfig { replication: params.output_replication, ..Default::default() },
-        42,
-        nodes.to_vec(),
-    )));
     let shards = uniform_shards(nodes, w.total_records);
     let (job1, job2_of) =
         malstone_jobs(&params, nodes, &shards, w.variant.is_b(), 64 * 1024 * 1024);
     let cluster2 = cluster.clone();
-    let nn2 = nn.clone();
-    MapReduceEngine::simulate(cluster, &nn, eng, job1, move |eng, r1| {
+    let storage2 = storage.clone();
+    MapReduceEngine::simulate_on(cluster, storage, eng, job1, move |eng, r1| {
         let job2 = job2_of(&r1);
         let out2 = out.clone();
-        MapReduceEngine::simulate(&cluster2, &nn2, eng, job2, move |eng, r2| {
+        MapReduceEngine::simulate_on(&cluster2, storage2, eng, job2, move |eng, r2| {
             *out2.borrow_mut() =
                 Some(Outcome::Hadoop { finished_at: eng.now(), job1: r1, job2: r2 });
         });
@@ -643,6 +699,34 @@ mod tests {
     }
 
     #[test]
+    fn interop_runs_report_per_layer_metrics() {
+        let hos = ScenarioRunner::new().run(&smoke(Framework::HadoopOverSector, 4_000_000));
+        assert!(hos.simulated_secs > 0.0);
+        assert_eq!(hos.framework, "hadoop-over-sector");
+        let metric = |rep: &RunReport, k: &str| {
+            rep.metric(k).unwrap_or_else(|| panic!("missing metric {k}"))
+        };
+        assert!(metric(&hos, "storage_read_bytes") > 0.0);
+        assert!(metric(&hos, "storage_write_bytes") > 0.0);
+        assert!(metric(&hos, "exchange_bytes") > 0.0);
+        assert!(metric(&hos, "stolen_tasks") >= 0.0);
+        // KFS writes 3 synchronous replicas; Sector writes one: the
+        // storage layer shows up in the write accounting.
+        let kfs = ScenarioRunner::new().run(&smoke(Framework::CloudStoreMr, 4_000_000));
+        assert_eq!(kfs.framework, "cloudstore-mr");
+        assert!(
+            metric(&kfs, "storage_write_bytes") > 2.0 * metric(&hos, "storage_write_bytes"),
+            "kfs {} vs sector {}",
+            metric(&kfs, "storage_write_bytes"),
+            metric(&hos, "storage_write_bytes")
+        );
+        // Reports stay JSON-round-trippable with the new metrics.
+        let text = kfs.to_json().to_string();
+        let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, kfs);
+    }
+
+    #[test]
     fn flow_churn_run_reports_churn_metrics() {
         let sc = Testbed::builder()
             .topology(TopologySpec::Oct2009)
@@ -654,13 +738,8 @@ mod tests {
         let rep = ScenarioRunner::new().run(&sc);
         assert_eq!(rep.nodes, 120);
         assert!(rep.simulated_secs > 0.0);
-        let metric = |k: &str| {
-            rep.metrics
-                .iter()
-                .find(|(m, _)| m == k)
-                .unwrap_or_else(|| panic!("missing metric {k}"))
-                .1
-        };
+        let metric =
+            |k: &str| rep.metric(k).unwrap_or_else(|| panic!("missing metric {k}"));
         assert_eq!(metric("flows"), 200.0);
         assert_eq!(metric("net_completions"), 200.0);
         assert_eq!(metric("peak_inflight"), flow_churn_concurrency(200) as f64);

@@ -138,6 +138,13 @@ pub enum Framework {
     HadoopMrR1,
     HadoopStreams,
     SectorSphere,
+    /// §7 interop: Hadoop MapReduce scheduling + TCP shuffle over
+    /// CloudStore/KFS chunk storage (chunk-lease writes, rack-oblivious
+    /// placement) — see [`crate::framework::KfsStorage`].
+    CloudStoreMr,
+    /// §7 interop: MapReduce scheduling + shuffle semantics over Sector
+    /// placement with a UDT exchange and single lazy-replicated output.
+    HadoopOverSector,
     /// Not a data-processing framework but a substrate stress driver: a
     /// synthetic storm of concurrent point-to-point transfers (Sector
     /// segment shuttles / shuffle fetches) that exercises the fluid
@@ -147,10 +154,12 @@ pub enum Framework {
 }
 
 impl Framework {
-    /// The data-processing frameworks — the enumeration cross-product
-    /// sets sweep over. [`Framework::FlowChurn`] is deliberately absent:
-    /// it reinterprets the workload's record count as a transfer count,
-    /// so including it in a MalStone sweep would be nonsense.
+    /// The paper's headline data-processing frameworks — the enumeration
+    /// cross-product sets sweep over. [`Framework::FlowChurn`] is
+    /// deliberately absent (it reinterprets the workload's record count
+    /// as a transfer count, so including it in a MalStone sweep would be
+    /// nonsense); the §7 interop compositions live in their own `interop`
+    /// registry set rather than every sweep.
     pub const ALL: [Framework; 4] = [
         Framework::HadoopMr,
         Framework::HadoopMrR1,
@@ -164,6 +173,8 @@ impl Framework {
             Framework::HadoopMr => FrameworkParams::hadoop_mapreduce(),
             Framework::HadoopMrR1 => FrameworkParams::hadoop_mapreduce_r1(),
             Framework::HadoopStreams => FrameworkParams::hadoop_streams(),
+            Framework::CloudStoreMr => FrameworkParams::cloudstore_mr(),
+            Framework::HadoopOverSector => FrameworkParams::hadoop_over_sector(),
             // Churn drives raw transfers; the cost model goes unused, but
             // Sphere's (UDT transport) is the closest in spirit.
             Framework::SectorSphere | Framework::FlowChurn => FrameworkParams::sphere(),
@@ -176,6 +187,8 @@ impl Framework {
             Framework::HadoopMrR1 => "hadoop-mapreduce-r1",
             Framework::HadoopStreams => "hadoop-streams",
             Framework::SectorSphere => "sector-sphere",
+            Framework::CloudStoreMr => "cloudstore-mr",
+            Framework::HadoopOverSector => "hadoop-over-sector",
             Framework::FlowChurn => "flow-churn",
         }
     }

@@ -1,0 +1,57 @@
+//! Exchange models: how intermediate data crosses the cluster between a
+//! dataflow's two phases.
+//!
+//! The two 2009 archetypes:
+//!
+//! - **Shuffle pull** (Hadoop): map output spills to local disk; after
+//!   the map barrier, each reducer *pulls* its partition from every
+//!   producer node with at most `parallel_copies` concurrent fetches
+//!   (`mapred.reduce.parallel.copies`), then merges and reduces.
+//! - **Bucket push** (Sphere): each task *pushes* its hash-partitioned
+//!   output into bucket files on every node as it is produced, overlapped
+//!   with the scan — the exchange is mostly paid for by the time the scan
+//!   barrier clears.
+//!
+//! Which transport carries the bytes ([`crate::transport::Protocol`]) is
+//! a separate axis carried by the dataflow spec: Hadoop shuffles over
+//! TCP, Sphere pushes over UDT, and the interop compositions mix freely.
+
+/// The intermediate-data movement pattern of a dataflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeModel {
+    /// Barrier-then-pull all-to-all shuffle with bounded parallel fetch
+    /// streams per reducer (Hadoop).
+    ShufflePull { parallel_copies: usize },
+    /// Streamed per-task bucket push to every node, overlapped with the
+    /// scan phase (Sphere).
+    BucketPush,
+}
+
+impl ExchangeModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExchangeModel::ShufflePull { .. } => "shuffle-pull",
+            ExchangeModel::BucketPush => "bucket-push",
+        }
+    }
+
+    /// Does the exchange overlap phase 1 (push) or wait for the barrier
+    /// (pull)?
+    pub fn overlaps_scan(&self) -> bool {
+        matches!(self, ExchangeModel::BucketPush)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_overlap() {
+        let pull = ExchangeModel::ShufflePull { parallel_copies: 5 };
+        assert_eq!(pull.name(), "shuffle-pull");
+        assert!(!pull.overlaps_scan());
+        assert_eq!(ExchangeModel::BucketPush.name(), "bucket-push");
+        assert!(ExchangeModel::BucketPush.overlaps_scan());
+    }
+}

@@ -1,0 +1,41 @@
+//! The shared framework runtime: the distributed-dataflow skeleton that
+//! `hadoop::mapreduce` and `sector::sphere` are thin instantiations of.
+//!
+//! The paper's stated purpose is to "benchmark … and investigate
+//! interoperability" across Hadoop, Sector/Sphere, CloudStore (KFS) and
+//! Thrift (§1, §7). Both of our engines used to carry a private copy of
+//! the same machinery — per-node task slots, locality-tiered scheduling
+//! with segment stealing, replica-aware input reads, a partition exchange
+//! over a [`crate::transport::Protocol`], a phase barrier, and a
+//! replicated output write. This module owns that machinery once:
+//!
+//! - [`storage::StorageModel`] — how a framework's storage layer resolves
+//!   input replicas and places output replicas: HDFS (rack-aware 3-way
+//!   synchronous pipeline), Sector (writer-local, lazy background
+//!   replication), and CloudStore/KFS (chunk-lease grant from a
+//!   metaserver, rack-oblivious chunkserver placement).
+//! - [`schedule::SlotScheduler`] — per-node slots with locality-first
+//!   list scheduling and a pluggable [`schedule::StealPolicy`] (the
+//!   paper's "bandwidth load balancing").
+//! - [`exchange::ExchangeModel`] — how intermediate data moves: Hadoop's
+//!   barrier-then-pull all-to-all shuffle with bounded parallel copies,
+//!   or Sphere's streamed bucket push overlapped with the scan.
+//! - [`runtime::DataflowEngine`] — the two-phase engine that composes the
+//!   three layers on the discrete-event substrate and reports per-layer
+//!   byte/steal accounting ([`runtime::DataflowReport`]).
+//!
+//! Because the layers are orthogonal, the §7 interoperability studies are
+//! just new compositions: `Framework::CloudStoreMr` (MapReduce scheduling
+//! + TCP shuffle over KFS chunk storage) and `Framework::HadoopOverSector`
+//! (MapReduce scheduling over Sector placement with a UDT exchange) — see
+//! the `interop` scenario set in [`crate::coordinator::registry`].
+
+pub mod exchange;
+pub mod runtime;
+pub mod schedule;
+pub mod storage;
+
+pub use exchange::ExchangeModel;
+pub use runtime::{DataflowEngine, DataflowReport, DataflowSpec, TaskInput};
+pub use schedule::{SlotScheduler, StealPolicy};
+pub use storage::{pipeline_write, HdfsStorage, KfsStorage, SectorStorage, StorageModel};

@@ -1,0 +1,732 @@
+//! The shared two-phase dataflow engine.
+//!
+//! Phase 1 ("map"/"scan"): the [`super::SlotScheduler`] assigns input
+//! tasks to worker slots locality-first; each task streams its input from
+//! the [`super::StorageModel`]'s chosen source, burns per-record CPU, and
+//! emits intermediate data through the [`super::ExchangeModel`] — a local
+//! spill (shuffle pull) or an overlapped bucket push. Phase 2: after the
+//! barrier, reducers pull + merge + reduce (shuffle pull) or every node
+//! folds its buckets (bucket push), and any job output is written back
+//! through the storage model's replication pipeline.
+//!
+//! `hadoop::mapreduce::MapReduceEngine` and `sector::sphere::SphereEngine`
+//! are thin instantiations of this runtime; their timing semantics are
+//! preserved event-for-event (the table1/table2 shape checks and the
+//! MalStone oracle-equality tests are the guard). The §7 interop
+//! compositions (`CloudStoreMr`, `HadoopOverSector`) are new
+//! storage × schedule × exchange combinations of the same machinery.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::net::{Cluster, NodeId};
+use crate::sim::resources::CpuPool;
+use crate::sim::Engine;
+use crate::transport::{self, Protocol};
+
+use super::exchange::ExchangeModel;
+use super::schedule::{SlotScheduler, StealPolicy};
+use super::storage::{self, StorageModel};
+
+/// One unit of phase-1 input: location, bytes, records. (Hadoop calls
+/// this an `InputBlock`, Sector a `Segment`; structurally identical.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskInput {
+    pub node: NodeId,
+    pub bytes: u64,
+    pub records: u64,
+}
+
+/// A fully-resolved dataflow for the runtime: workload shape, per-record
+/// costs, and the three layer choices (storage is passed separately).
+#[derive(Debug, Clone)]
+pub struct DataflowSpec {
+    pub name: String,
+    /// Worker nodes participating in the job.
+    pub nodes: Vec<NodeId>,
+    pub tasks: Vec<TaskInput>,
+    pub slots_per_node: usize,
+    pub task_overhead: f64,
+    pub map_cpu_per_record: f64,
+    /// CPU per input record in the reduce/aggregate phase (variant
+    /// factors pre-applied by the caller).
+    pub reduce_cpu_per_record: f64,
+    /// Bytes per input record surviving into the exchange.
+    pub intermediate_bytes_per_record: f64,
+    /// Bytes per input record written back through storage as job output
+    /// (0 = aggregation-only dataflow, no output write).
+    pub output_bytes_per_record: f64,
+    /// Extra disk passes over fetched data before reducing (shuffle pull).
+    pub merge_passes: f64,
+    /// Reduce task count. Bucket-push dataflows aggregate one bucket per
+    /// node, so this must equal `nodes.len()` there.
+    pub num_reducers: usize,
+    pub protocol: Protocol,
+    pub exchange: ExchangeModel,
+    pub steal: StealPolicy,
+}
+
+/// Timing + per-layer accounting for one dataflow run.
+#[derive(Debug, Clone)]
+pub struct DataflowReport {
+    pub name: String,
+    pub makespan: f64,
+    /// Map/scan phase duration (start → barrier).
+    pub phase1: f64,
+    /// Shuffle+reduce / aggregate phase duration (barrier → done).
+    pub phase2: f64,
+    pub tasks: usize,
+    pub reducers: usize,
+    /// Phase-1 tasks run away from their home node (steals / remote maps).
+    pub remote_tasks: usize,
+    /// All bytes that moved through the exchange, including node-local
+    /// partitions (Hadoop's `shuffle_bytes` accounting).
+    pub exchange_bytes: f64,
+    /// The subset of exchange bytes that crossed the network (Sphere's
+    /// `exchange_bytes` accounting).
+    pub exchange_remote_bytes: f64,
+    /// Input bytes read through the storage layer.
+    pub storage_read_bytes: f64,
+    /// Output bytes written through the storage layer, replicas included.
+    pub storage_write_bytes: f64,
+    /// Logical job output bytes (single copy).
+    pub output_bytes: f64,
+    /// Where the output landed (primary replicas): feeds chained jobs.
+    pub output: Vec<TaskInput>,
+}
+
+struct RtState {
+    cluster: Cluster,
+    storage: Rc<RefCell<dyn StorageModel>>,
+    spec: DataflowSpec,
+    sched: SlotScheduler,
+    /// Per-node intermediate bytes/records: producer totals under shuffle
+    /// pull, destination bucket totals under bucket push.
+    inter_bytes: HashMap<NodeId, f64>,
+    inter_records: HashMap<NodeId, f64>,
+    tasks_done: usize,
+    tasks_total: usize,
+    phase1_end: f64,
+    reducers_done: usize,
+    start: f64,
+    output: Vec<TaskInput>,
+    exchange_bytes: f64,
+    exchange_remote_bytes: f64,
+    storage_read_bytes: f64,
+    storage_write_bytes: f64,
+    output_bytes: f64,
+    done_cb: Option<Box<dyn FnOnce(&mut Engine, DataflowReport)>>,
+}
+
+/// The shared dataflow timing engine.
+pub struct DataflowEngine;
+
+impl DataflowEngine {
+    /// Run a dataflow on the event engine; `done` receives the report.
+    pub fn run<F: FnOnce(&mut Engine, DataflowReport) + 'static>(
+        cluster: &Cluster,
+        storage: Rc<RefCell<dyn StorageModel>>,
+        eng: &mut Engine,
+        spec: DataflowSpec,
+        done: F,
+    ) {
+        assert!(!spec.nodes.is_empty() && !spec.tasks.is_empty());
+        assert!(spec.num_reducers > 0);
+        if spec.exchange == ExchangeModel::BucketPush {
+            assert_eq!(
+                spec.num_reducers,
+                spec.nodes.len(),
+                "bucket push aggregates one bucket per node"
+            );
+        }
+        let tasks_total = spec.tasks.len();
+        let sched = SlotScheduler::new(
+            spec.nodes.clone(),
+            spec.slots_per_node,
+            spec.tasks.clone(),
+            spec.steal,
+        );
+        let st = Rc::new(RefCell::new(RtState {
+            cluster: cluster.clone(),
+            storage,
+            sched,
+            inter_bytes: HashMap::new(),
+            inter_records: HashMap::new(),
+            tasks_done: 0,
+            tasks_total,
+            phase1_end: 0.0,
+            reducers_done: 0,
+            start: eng.now(),
+            output: Vec::new(),
+            exchange_bytes: 0.0,
+            exchange_remote_bytes: 0.0,
+            storage_read_bytes: 0.0,
+            storage_write_bytes: 0.0,
+            output_bytes: 0.0,
+            done_cb: Some(Box::new(done)),
+            spec,
+        }));
+        Self::fill_slots(&st, eng);
+    }
+
+    /// Drain the scheduler: assign tasks until no worker slot may take one.
+    fn fill_slots(st: &Rc<RefCell<RtState>>, eng: &mut Engine) {
+        loop {
+            let task = {
+                let mut s = st.borrow_mut();
+                let topo = s.cluster.topo.clone();
+                s.sched.next_assignment(&topo)
+            };
+            match task {
+                Some((node, t)) => Self::run_task(st, eng, node, t),
+                None => break,
+            }
+        }
+    }
+
+    /// One phase-1 task: (possibly remote) storage read → CPU → exchange
+    /// output stage → slot release.
+    fn run_task(st: &Rc<RefCell<RtState>>, eng: &mut Engine, node: NodeId, task: TaskInput) {
+        let (cluster, proto, overhead, source) = {
+            let mut s = st.borrow_mut();
+            s.storage_read_bytes += task.bytes as f64;
+            let source = s.storage.borrow().read_source(task.node, node);
+            (s.cluster.clone(), s.spec.protocol.clone(), s.spec.task_overhead, source)
+        };
+        let st2 = st.clone();
+        let net = cluster.net.clone();
+        let topo = cluster.topo.clone();
+        eng.schedule_in(overhead, move |eng| {
+            let st3 = st2.clone();
+            let after_read = move |eng: &mut Engine| {
+                let (pool, cpu) = {
+                    let s = st3.borrow();
+                    (s.cluster.pool(node).clone(), task.records as f64 * s.spec.map_cpu_per_record)
+                };
+                let st4 = st3.clone();
+                CpuPool::submit(&pool, eng, cpu, move |eng| {
+                    Self::task_output(&st4, eng, node, task);
+                });
+            };
+            if source == node {
+                transport::disk_read(&net, &topo, eng, node, task.bytes as f64, after_read);
+            } else {
+                // Remote input (non-local map / stolen segment): stream it
+                // from its source over the dataflow's protocol.
+                let net2 = net.clone();
+                let topo2 = topo.clone();
+                transport::disk_read(&net, &topo, eng, source, task.bytes as f64, move |eng| {
+                    transport::send(
+                        &net2,
+                        &topo2,
+                        eng,
+                        source,
+                        node,
+                        task.bytes as f64,
+                        &proto,
+                        after_read,
+                    );
+                });
+            }
+        });
+    }
+
+    /// Route a finished task's intermediate output through the exchange.
+    fn task_output(st: &Rc<RefCell<RtState>>, eng: &mut Engine, node: NodeId, task: TaskInput) {
+        let exchange = st.borrow().spec.exchange;
+        match exchange {
+            ExchangeModel::ShufflePull { .. } => {
+                // Local spill of the task's intermediate output; fetched
+                // by reducers after the barrier.
+                let (cluster, spill) = {
+                    let s = st.borrow();
+                    (
+                        s.cluster.clone(),
+                        task.records as f64 * s.spec.intermediate_bytes_per_record,
+                    )
+                };
+                let st2 = st.clone();
+                transport::disk_write(&cluster.net, &cluster.topo, eng, node, spill, move |eng| {
+                    Self::task_finished(&st2, eng, node, task, spill);
+                });
+            }
+            ExchangeModel::BucketPush => Self::bucket_push(st, eng, node, task),
+        }
+    }
+
+    /// Push the task's partitioned output into bucket files on every node,
+    /// overlapped (the task completes when its slowest push lands).
+    fn bucket_push(st: &Rc<RefCell<RtState>>, eng: &mut Engine, node: NodeId, task: TaskInput) {
+        let (cluster, proto, out_bytes, nodes) = {
+            let s = st.borrow();
+            let out = task.records as f64 * s.spec.intermediate_bytes_per_record;
+            (s.cluster.clone(), s.spec.protocol.clone(), out, s.spec.nodes.clone())
+        };
+        let n = nodes.len() as f64;
+        let share_bytes = out_bytes / n;
+        let share_records = task.records as f64 / n;
+        let legs = Rc::new(RefCell::new(nodes.len()));
+        let st2 = st.clone();
+        let arrive =
+            move |st: &Rc<RefCell<RtState>>, eng: &mut Engine, legs: &Rc<RefCell<usize>>| {
+                let mut l = legs.borrow_mut();
+                *l -= 1;
+                if *l == 0 {
+                    Self::push_task_finished(st, eng, node);
+                }
+            };
+        for &dst in &nodes {
+            {
+                let mut s = st.borrow_mut();
+                *s.inter_bytes.entry(dst).or_insert(0.0) += share_bytes;
+                *s.inter_records.entry(dst).or_insert(0.0) += share_records;
+                s.exchange_bytes += share_bytes;
+                if dst != node {
+                    s.exchange_remote_bytes += share_bytes;
+                }
+            }
+            let st3 = st2.clone();
+            let legs2 = legs.clone();
+            let done = move |eng: &mut Engine| arrive(&st3, eng, &legs2);
+            if dst == node {
+                transport::disk_write(&cluster.net, &cluster.topo, eng, node, share_bytes, done);
+            } else {
+                let net = cluster.net.clone();
+                let topo = cluster.topo.clone();
+                transport::send(
+                    &cluster.net,
+                    &cluster.topo,
+                    eng,
+                    node,
+                    dst,
+                    share_bytes,
+                    &proto,
+                    move |eng| {
+                        transport::disk_write(&net, &topo, eng, dst, share_bytes, done);
+                    },
+                );
+            }
+        }
+    }
+
+    /// Shuffle-pull task completion: account the spill under its producer.
+    fn task_finished(
+        st: &Rc<RefCell<RtState>>,
+        eng: &mut Engine,
+        node: NodeId,
+        task: TaskInput,
+        out_bytes: f64,
+    ) {
+        let all_done = {
+            let mut s = st.borrow_mut();
+            *s.inter_bytes.entry(node).or_insert(0.0) += out_bytes;
+            *s.inter_records.entry(node).or_insert(0.0) += task.records as f64;
+            s.tasks_done += 1;
+            s.sched.release(node);
+            if s.tasks_done == s.tasks_total {
+                s.phase1_end = eng.now();
+                true
+            } else {
+                false
+            }
+        };
+        Self::fill_slots(st, eng);
+        if all_done {
+            Self::start_shuffle(st, eng);
+        }
+    }
+
+    /// Bucket-push task completion (all pushes landed).
+    fn push_task_finished(st: &Rc<RefCell<RtState>>, eng: &mut Engine, node: NodeId) {
+        let all_done = {
+            let mut s = st.borrow_mut();
+            s.tasks_done += 1;
+            s.sched.release(node);
+            if s.tasks_done == s.tasks_total {
+                s.phase1_end = eng.now();
+                true
+            } else {
+                false
+            }
+        };
+        Self::fill_slots(st, eng);
+        if all_done {
+            Self::start_aggregate(st, eng);
+        }
+    }
+
+    /// Shuffle + reduce. Reducers are placed round-robin over the job's
+    /// nodes; each pulls its partition of every producer node's output
+    /// with at most `parallel_copies` concurrent streams.
+    fn start_shuffle(st: &Rc<RefCell<RtState>>, eng: &mut Engine) {
+        let (reducers, fetch_lists, k) = {
+            let s = st.borrow();
+            let r = s.spec.num_reducers;
+            let reducers: Vec<NodeId> =
+                (0..r).map(|i| s.spec.nodes[i % s.spec.nodes.len()]).collect();
+            // Each reducer fetches bytes/r from every producer node.
+            let mut lists: Vec<Vec<(NodeId, f64)>> = vec![Vec::new(); r];
+            for (&m, &bytes) in {
+                let mut v: Vec<_> = s.inter_bytes.iter().collect();
+                v.sort_by_key(|(n, _)| n.0);
+                v
+            } {
+                for list in lists.iter_mut() {
+                    list.push((m, bytes / r as f64));
+                }
+            }
+            let k = match s.spec.exchange {
+                ExchangeModel::ShufflePull { parallel_copies } => parallel_copies.max(1),
+                ExchangeModel::BucketPush => 1,
+            };
+            (reducers, lists, k)
+        };
+        for (rnode, fetches) in reducers.into_iter().zip(fetch_lists) {
+            let queue = Rc::new(RefCell::new(fetches));
+            let inflight = Rc::new(RefCell::new(0usize));
+            let fetched = Rc::new(RefCell::new(0.0f64));
+            Self::pump_fetches(st, eng, rnode, queue, inflight, fetched, k);
+        }
+    }
+
+    fn pump_fetches(
+        st: &Rc<RefCell<RtState>>,
+        eng: &mut Engine,
+        rnode: NodeId,
+        queue: Rc<RefCell<Vec<(NodeId, f64)>>>,
+        inflight: Rc<RefCell<usize>>,
+        fetched: Rc<RefCell<f64>>,
+        k: usize,
+    ) {
+        loop {
+            let next = {
+                let mut q = queue.borrow_mut();
+                if *inflight.borrow() >= k || q.is_empty() {
+                    None
+                } else {
+                    *inflight.borrow_mut() += 1;
+                    Some(q.pop().unwrap())
+                }
+            };
+            let Some((mnode, bytes)) = next else { break };
+            let (cluster, proto) = {
+                let s = st.borrow();
+                (s.cluster.clone(), s.spec.protocol.clone())
+            };
+            let st2 = st.clone();
+            let queue2 = queue.clone();
+            let inflight2 = inflight.clone();
+            let fetched2 = fetched.clone();
+            let deliver = move |eng: &mut Engine| {
+                *inflight2.borrow_mut() -= 1;
+                *fetched2.borrow_mut() += bytes;
+                {
+                    let mut s = st2.borrow_mut();
+                    s.exchange_bytes += bytes;
+                    if mnode != rnode {
+                        s.exchange_remote_bytes += bytes;
+                    }
+                }
+                let done = queue2.borrow().is_empty() && *inflight2.borrow() == 0;
+                if done {
+                    Self::merge_and_reduce(&st2, eng, rnode, *fetched2.borrow());
+                } else {
+                    Self::pump_fetches(&st2, eng, rnode, queue2, inflight2, fetched2, k);
+                }
+            };
+            if mnode == rnode {
+                // Local partition: already on disk; charge a disk read.
+                transport::disk_read(&cluster.net, &cluster.topo, eng, rnode, bytes, deliver);
+            } else {
+                let net = cluster.net.clone();
+                let topo = cluster.topo.clone();
+                transport::disk_read(&cluster.net, &cluster.topo, eng, mnode, bytes, move |eng| {
+                    transport::send(&net, &topo, eng, mnode, rnode, bytes, &proto, deliver);
+                });
+            }
+        }
+    }
+
+    /// Merge passes on disk, then reduce CPU, then the output write.
+    fn merge_and_reduce(st: &Rc<RefCell<RtState>>, eng: &mut Engine, rnode: NodeId, bytes: f64) {
+        let (cluster, merge_bytes, cpu, out_bytes, out_records) = {
+            let s = st.borrow();
+            let total_recs: f64 = s.inter_records.values().sum();
+            let recs = total_recs / s.spec.num_reducers as f64;
+            let merge = 2.0 * s.spec.merge_passes * bytes; // read+write per pass
+            let cpu = recs * s.spec.reduce_cpu_per_record;
+            let out_b = recs * s.spec.output_bytes_per_record;
+            (s.cluster.clone(), merge, cpu, out_b, recs)
+        };
+        let st2 = st.clone();
+        let finish = move |eng: &mut Engine| {
+            Self::write_output(&st2, eng, rnode, out_bytes, out_records);
+        };
+        let pool = cluster.pool(rnode).clone();
+        transport::disk_write(&cluster.net, &cluster.topo, eng, rnode, merge_bytes, move |eng| {
+            CpuPool::submit(&pool, eng, cpu, finish);
+        });
+    }
+
+    /// Stage 2 of a bucket-push dataflow: every node folds its bucket.
+    fn start_aggregate(st: &Rc<RefCell<RtState>>, eng: &mut Engine) {
+        let nodes = st.borrow().spec.nodes.clone();
+        for node in nodes {
+            let (cluster, bytes, records, cpu_per_rec, obpr) = {
+                let s = st.borrow();
+                (
+                    s.cluster.clone(),
+                    s.inter_bytes.get(&node).copied().unwrap_or(0.0),
+                    s.inter_records.get(&node).copied().unwrap_or(0.0),
+                    s.spec.reduce_cpu_per_record,
+                    s.spec.output_bytes_per_record,
+                )
+            };
+            let st2 = st.clone();
+            let pool = cluster.pool(node).clone();
+            transport::disk_read(&cluster.net, &cluster.topo, eng, node, bytes, move |eng| {
+                let st3 = st2.clone();
+                CpuPool::submit(&pool, eng, records * cpu_per_rec, move |eng| {
+                    Self::write_output(&st3, eng, node, records * obpr, records);
+                });
+            });
+        }
+    }
+
+    /// Write a reducer's output back through the storage layer (skipped
+    /// entirely for aggregation-only dataflows), then count it done.
+    fn write_output(
+        st: &Rc<RefCell<RtState>>,
+        eng: &mut Engine,
+        writer: NodeId,
+        out_bytes: f64,
+        out_records: f64,
+    ) {
+        if out_bytes <= 0.0 {
+            Self::reducer_finished(st, eng, writer, out_bytes, out_records);
+            return;
+        }
+        let (cluster, proto, replicas, setup) = {
+            let mut s = st.borrow_mut();
+            let replicas = s.storage.borrow_mut().place_output(writer);
+            let setup = s.storage.borrow().write_setup_latency(writer);
+            s.storage_write_bytes += out_bytes * replicas.len() as f64;
+            (s.cluster.clone(), s.spec.protocol.clone(), replicas, setup)
+        };
+        let st2 = st.clone();
+        let net = cluster.net.clone();
+        let topo = cluster.topo.clone();
+        let block_bytes = out_bytes.ceil();
+        let write = move |eng: &mut Engine| {
+            storage::pipeline_write(&net, &topo, eng, &replicas, block_bytes, &proto, move |eng| {
+                Self::reducer_finished(&st2, eng, writer, out_bytes, out_records);
+            });
+        };
+        if setup > 0.0 {
+            eng.schedule_in(setup, write);
+        } else {
+            write(eng);
+        }
+    }
+
+    fn reducer_finished(
+        st: &Rc<RefCell<RtState>>,
+        eng: &mut Engine,
+        writer: NodeId,
+        out_bytes: f64,
+        out_records: f64,
+    ) {
+        let finished = {
+            let mut s = st.borrow_mut();
+            s.output_bytes += out_bytes;
+            if out_bytes > 0.0 {
+                s.output.push(TaskInput {
+                    node: writer,
+                    bytes: out_bytes.ceil() as u64,
+                    records: out_records.ceil() as u64,
+                });
+            }
+            s.reducers_done += 1;
+            if s.reducers_done == s.spec.num_reducers {
+                let report = DataflowReport {
+                    name: s.spec.name.clone(),
+                    makespan: eng.now() - s.start,
+                    phase1: s.phase1_end - s.start,
+                    phase2: eng.now() - s.phase1_end,
+                    tasks: s.tasks_total,
+                    reducers: s.spec.num_reducers,
+                    remote_tasks: s.sched.stolen(),
+                    exchange_bytes: s.exchange_bytes,
+                    exchange_remote_bytes: s.exchange_remote_bytes,
+                    storage_read_bytes: s.storage_read_bytes,
+                    storage_write_bytes: s.storage_write_bytes,
+                    output_bytes: s.output_bytes,
+                    output: s.output.clone(),
+                };
+                Some((s.done_cb.take().unwrap(), report))
+            } else {
+                None
+            }
+        };
+        if let Some((cb, report)) = finished {
+            cb(eng, report);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::storage::{KfsStorage, SectorStorage};
+    use crate::net::Topology;
+
+    fn spec(nodes: Vec<NodeId>, tasks: Vec<TaskInput>, exchange: ExchangeModel) -> DataflowSpec {
+        let num_reducers = match exchange {
+            ExchangeModel::BucketPush => nodes.len(),
+            ExchangeModel::ShufflePull { .. } => 4,
+        };
+        DataflowSpec {
+            name: "rt-test".to_string(),
+            nodes,
+            tasks,
+            slots_per_node: 2,
+            task_overhead: 0.5,
+            map_cpu_per_record: 2e-6,
+            reduce_cpu_per_record: 1e-6,
+            intermediate_bytes_per_record: 30.0,
+            output_bytes_per_record: 1.0,
+            merge_passes: 0.5,
+            num_reducers,
+            protocol: Protocol::tcp(),
+            exchange,
+            steal: StealPolicy::Anywhere,
+        }
+    }
+
+    fn setup(per_site: usize, per_node_records: u64) -> (Cluster, Vec<NodeId>, Vec<TaskInput>) {
+        let cluster = Cluster::new(Topology::oct_2009());
+        let mut nodes = Vec::new();
+        for r in 0..4 {
+            for i in 0..per_site {
+                nodes.push(cluster.topo.racks[r].nodes[i]);
+            }
+        }
+        let tasks: Vec<TaskInput> = nodes
+            .iter()
+            .map(|&n| TaskInput { node: n, bytes: per_node_records * 100, records: per_node_records })
+            .collect();
+        (cluster, nodes, tasks)
+    }
+
+    fn run_dataflow(
+        cluster: &Cluster,
+        storage: Rc<RefCell<dyn StorageModel>>,
+        spec: DataflowSpec,
+    ) -> DataflowReport {
+        let mut eng = Engine::new();
+        let out = Rc::new(RefCell::new(None));
+        let o = out.clone();
+        DataflowEngine::run(cluster, storage, &mut eng, spec, move |_, r| {
+            *o.borrow_mut() = Some(r)
+        });
+        eng.run();
+        let r = out.borrow_mut().take().expect("dataflow did not finish");
+        r
+    }
+
+    #[test]
+    fn shuffle_pull_accounts_layers_and_output() {
+        let (cluster, nodes, tasks) = setup(2, 200_000);
+        let sp = spec(nodes.clone(), tasks, ExchangeModel::ShufflePull { parallel_copies: 4 });
+        let storage = Rc::new(RefCell::new(SectorStorage::new()));
+        let r = run_dataflow(&cluster, storage, sp);
+        assert!(r.makespan > 0.0 && r.phase1 > 0.0 && r.phase2 > 0.0);
+        assert_eq!(r.tasks, 8);
+        assert_eq!(r.reducers, 4);
+        assert_eq!(r.output.len(), 4);
+        // Every spilled byte is fetched: total exchange = intermediate.
+        let inter = 8.0 * 200_000.0 * 30.0;
+        assert!((r.exchange_bytes - inter).abs() / inter < 1e-9, "{}", r.exchange_bytes);
+        assert!(r.exchange_remote_bytes > 0.0 && r.exchange_remote_bytes < r.exchange_bytes);
+        assert_eq!(r.storage_read_bytes, 8.0 * 200_000.0 * 100.0);
+        // Single-replica storage: write bytes equal logical output bytes.
+        assert!((r.storage_write_bytes - r.output_bytes).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bucket_push_overlaps_and_skips_output_when_zero() {
+        let (cluster, nodes, tasks) = setup(2, 200_000);
+        let mut sp = spec(nodes.clone(), tasks, ExchangeModel::BucketPush);
+        sp.output_bytes_per_record = 0.0;
+        let storage = Rc::new(RefCell::new(SectorStorage::new()));
+        let r = run_dataflow(&cluster, storage, sp);
+        assert!(r.makespan > 0.0);
+        assert_eq!(r.reducers, nodes.len());
+        assert!(r.output.is_empty());
+        assert_eq!(r.output_bytes, 0.0);
+        assert_eq!(r.storage_write_bytes, 0.0);
+        // 8 nodes: 7/8 of each push crosses the network.
+        let inter = 8.0 * 200_000.0 * 30.0;
+        assert!((r.exchange_bytes - inter).abs() / inter < 1e-9);
+        assert!((r.exchange_remote_bytes - inter * 7.0 / 8.0).abs() / inter < 1e-9);
+    }
+
+    #[test]
+    fn replicated_storage_multiplies_write_bytes() {
+        let (cluster, nodes, tasks) = setup(2, 100_000);
+        let sp = spec(nodes.clone(), tasks, ExchangeModel::ShufflePull { parallel_copies: 4 });
+        let kfs = Rc::new(RefCell::new(KfsStorage::new(
+            cluster.topo.clone(),
+            nodes.clone(),
+            3,
+            17,
+        )));
+        let r = run_dataflow(&cluster, kfs, sp);
+        assert!((r.storage_write_bytes - 3.0 * r.output_bytes).abs() < 1e-6);
+        assert!(r.output_bytes > 0.0);
+    }
+
+    #[test]
+    fn write_setup_latency_slows_the_run() {
+        let (cluster, nodes, tasks) = setup(1, 50_000);
+        let sp = spec(nodes.clone(), tasks.clone(), ExchangeModel::ShufflePull { parallel_copies: 4 });
+        let sector = Rc::new(RefCell::new(SectorStorage::new()));
+        let base = run_dataflow(&cluster, sector, sp.clone());
+        // KFS with replication 1 places identically to Sector (writer
+        // local) but pays the chunk-lease grant before every write.
+        let (cluster2, _, _) = setup(1, 50_000);
+        let kfs = Rc::new(RefCell::new(KfsStorage::new(cluster2.topo.clone(), nodes, 1, 17)));
+        let leased = run_dataflow(&cluster2, kfs, sp);
+        assert!(
+            leased.makespan > base.makespan,
+            "lease latency lost: {} !> {}",
+            leased.makespan,
+            base.makespan
+        );
+    }
+
+    #[test]
+    fn straggler_is_absorbed_by_stealing() {
+        let (cluster, nodes, tasks) = setup(2, 400_000);
+        let mut sp = spec(nodes.clone(), tasks, ExchangeModel::BucketPush);
+        sp.output_bytes_per_record = 0.0;
+        let healthy = run_dataflow(
+            &cluster,
+            Rc::new(RefCell::new(SectorStorage::new())),
+            sp.clone(),
+        );
+        let (cluster2, nodes2, tasks2) = setup(2, 400_000);
+        cluster2.set_node_speed(nodes2[0], 0.25);
+        let mut sp2 = sp.clone();
+        sp2.tasks = tasks2;
+        let degraded =
+            run_dataflow(&cluster2, Rc::new(RefCell::new(SectorStorage::new())), sp2);
+        assert!(
+            degraded.makespan < healthy.makespan * 2.0,
+            "straggler not absorbed: {} vs {}",
+            degraded.makespan,
+            healthy.makespan
+        );
+    }
+}

@@ -1,0 +1,211 @@
+//! Slot-based locality scheduling with pluggable stealing — the task
+//! assignment loop both 2009 engines shared (Hadoop's JobTracker list
+//! scheduler, Sphere's SPE segment scheduler with "bandwidth load
+//! balancing").
+
+use std::collections::HashMap;
+
+use crate::net::{NodeId, Topology};
+
+use super::runtime::TaskInput;
+
+/// How far from a task's home node a worker may reach for it.
+///
+/// Distances follow [`Topology::distance`]: 0 = same node, 1 = same rack,
+/// 2 = same site, 3 = across the WAN. Both 2009 engines steal from
+/// anywhere — Hadoop runs remote-read maps, Sphere streams stolen
+/// segments over UDT — so [`StealPolicy::Anywhere`] reproduces them; the
+/// tighter tiers exist for ablations ("what does stealing buy?").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StealPolicy {
+    /// Steal from any node, paying the network distance (both engines).
+    Anywhere,
+    /// Steal only within the task's home site (no WAN reads).
+    SameSite,
+    /// Strict locality: only node-local tasks run. Callers must ensure
+    /// every task's home node is in the worker set or the job never
+    /// drains.
+    LocalOnly,
+}
+
+impl StealPolicy {
+    /// May a worker at `distance` from the task's home run it?
+    pub fn allows(&self, distance: u32) -> bool {
+        match self {
+            StealPolicy::Anywhere => true,
+            StealPolicy::SameSite => distance <= 2,
+            StealPolicy::LocalOnly => distance == 0,
+        }
+    }
+}
+
+/// Per-node slot accounting plus the locality-first assignment scan.
+///
+/// `next_assignment` reproduces the engines' shared loop exactly: walk
+/// the workers in order, and for the first one with a free slot pick the
+/// pending task minimizing topological distance (stopping early on a
+/// node-local hit), counting any non-local assignment as a steal.
+pub struct SlotScheduler {
+    nodes: Vec<NodeId>,
+    slots_free: HashMap<NodeId, usize>,
+    pending: Vec<TaskInput>,
+    running: usize,
+    stolen: usize,
+    policy: StealPolicy,
+}
+
+impl SlotScheduler {
+    pub fn new(
+        nodes: Vec<NodeId>,
+        slots_per_node: usize,
+        pending: Vec<TaskInput>,
+        policy: StealPolicy,
+    ) -> Self {
+        assert!(!nodes.is_empty());
+        assert!(slots_per_node >= 1);
+        let slots_free = nodes.iter().map(|&n| (n, slots_per_node)).collect();
+        SlotScheduler { nodes, slots_free, pending, running: 0, stolen: 0, policy }
+    }
+
+    /// Claim the next (worker, task) pair, or `None` when no worker with
+    /// a free slot may run any pending task.
+    pub fn next_assignment(&mut self, topo: &Topology) -> Option<(NodeId, TaskInput)> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        for &n in &self.nodes {
+            if self.slots_free[&n] == 0 {
+                continue;
+            }
+            // Best pending task for this worker.
+            let mut best: Option<(usize, u32)> = None;
+            for (i, t) in self.pending.iter().enumerate() {
+                let d = topo.distance(n, t.node);
+                if self.policy.allows(d) && best.map_or(true, |(_, bd)| d < bd) {
+                    best = Some((i, d));
+                }
+                if d == 0 {
+                    break;
+                }
+            }
+            if let Some((i, d)) = best {
+                let t = self.pending.swap_remove(i);
+                *self.slots_free.get_mut(&n).unwrap() -= 1;
+                self.running += 1;
+                if d > 0 {
+                    self.stolen += 1;
+                }
+                return Some((n, t));
+            }
+        }
+        None
+    }
+
+    /// Return a worker's slot after its task finishes.
+    pub fn release(&mut self, node: NodeId) {
+        *self.slots_free.get_mut(&node).unwrap() += 1;
+        self.running -= 1;
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running
+    }
+
+    /// Tasks assigned to a worker other than their home node so far.
+    pub fn stolen(&self) -> usize {
+        self.stolen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Topology;
+
+    fn task(node: NodeId) -> TaskInput {
+        TaskInput { node, bytes: 1, records: 1 }
+    }
+
+    #[test]
+    fn prefers_local_then_closest() {
+        let topo = Topology::oct_2009();
+        let local = topo.racks[0].nodes[0];
+        let rackmate = topo.racks[0].nodes[1];
+        let remote = topo.racks[3].nodes[0];
+        let mut s = SlotScheduler::new(
+            vec![local],
+            3,
+            vec![task(remote), task(rackmate), task(local)],
+            StealPolicy::Anywhere,
+        );
+        let (_, t1) = s.next_assignment(&topo).unwrap();
+        assert_eq!(t1.node, local);
+        let (_, t2) = s.next_assignment(&topo).unwrap();
+        assert_eq!(t2.node, rackmate);
+        let (_, t3) = s.next_assignment(&topo).unwrap();
+        assert_eq!(t3.node, remote);
+        assert_eq!(s.stolen(), 2);
+        assert!(s.next_assignment(&topo).is_none(), "no slots left");
+    }
+
+    #[test]
+    fn slots_bound_concurrency_and_release_reopens() {
+        let topo = Topology::oct_2009();
+        let n = topo.racks[0].nodes[0];
+        let mut s =
+            SlotScheduler::new(vec![n], 1, vec![task(n), task(n)], StealPolicy::Anywhere);
+        assert!(s.next_assignment(&topo).is_some());
+        assert_eq!(s.running(), 1);
+        assert!(s.next_assignment(&topo).is_none(), "slot occupied");
+        s.release(n);
+        assert!(s.next_assignment(&topo).is_some());
+        assert_eq!(s.pending_len(), 0);
+    }
+
+    #[test]
+    fn same_site_policy_refuses_wan_steals() {
+        let topo = Topology::oct_2009();
+        let worker = topo.racks[0].nodes[0];
+        let far = topo.racks[3].nodes[0];
+        let near = topo.racks[0].nodes[5];
+        let mut s = SlotScheduler::new(
+            vec![worker],
+            2,
+            vec![task(far), task(near)],
+            StealPolicy::SameSite,
+        );
+        let (_, t) = s.next_assignment(&topo).unwrap();
+        assert_eq!(t.node, near);
+        // The cross-WAN task is ineligible even with a free slot.
+        assert!(s.next_assignment(&topo).is_none());
+        assert_eq!(s.pending_len(), 1);
+    }
+
+    #[test]
+    fn local_only_policy_never_steals() {
+        let topo = Topology::oct_2009();
+        let worker = topo.racks[0].nodes[0];
+        let rackmate = topo.racks[0].nodes[1];
+        let mut s = SlotScheduler::new(
+            vec![worker],
+            2,
+            vec![task(rackmate), task(worker)],
+            StealPolicy::LocalOnly,
+        );
+        let (_, t) = s.next_assignment(&topo).unwrap();
+        assert_eq!(t.node, worker);
+        assert!(s.next_assignment(&topo).is_none());
+        assert_eq!(s.stolen(), 0);
+    }
+
+    #[test]
+    fn policy_distance_tiers() {
+        assert!(StealPolicy::Anywhere.allows(3));
+        assert!(StealPolicy::SameSite.allows(2) && !StealPolicy::SameSite.allows(3));
+        assert!(StealPolicy::LocalOnly.allows(0) && !StealPolicy::LocalOnly.allows(1));
+    }
+}

@@ -1,0 +1,269 @@
+//! Storage models: how a framework's distributed file system resolves
+//! input reads and places/pipelines output writes.
+//!
+//! The runtime only needs three answers from a storage layer: *where do I
+//! read this block from*, *where do this writer's output replicas go*,
+//! and *what control-plane latency precedes a write*. Everything else
+//! (the actual disk and network timing) is shared: every model's write
+//! goes through [`pipeline_write`], the replication pipeline that HDFS,
+//! KFS, and Sector's synchronous first copy all use — they differ only in
+//! the replica lists they produce.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::hadoop::hdfs::Namenode;
+use crate::net::{FlowNet, NodeId, Topology};
+use crate::sim::Engine;
+use crate::transport::{self, Protocol};
+use crate::util::Rng;
+
+/// What the dataflow runtime asks of a storage layer.
+pub trait StorageModel {
+    /// Node to stream a task's input from, given the block's primary
+    /// location and the worker about to read it.
+    fn read_source(&self, primary: NodeId, reader: NodeId) -> NodeId;
+
+    /// Replica targets for an output block written from `writer`; the
+    /// first entry is the primary (the pipeline head).
+    fn place_output(&mut self, writer: NodeId) -> Vec<NodeId>;
+
+    /// Control-plane latency charged before an output write from `writer`
+    /// starts (e.g. KFS's chunk-lease grant round-trip). Zero-latency
+    /// models add no event to the engine.
+    fn write_setup_latency(&self, _writer: NodeId) -> f64 {
+        0.0
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// HDFS (Hadoop 0.18): rack-aware synchronous replication through the
+/// namenode's placement policy; reads come from the closest replica.
+pub struct HdfsStorage {
+    nn: Rc<RefCell<Namenode>>,
+    replication: usize,
+}
+
+impl HdfsStorage {
+    pub fn new(nn: Rc<RefCell<Namenode>>, replication: usize) -> Self {
+        assert!(replication >= 1);
+        HdfsStorage { nn, replication }
+    }
+}
+
+impl StorageModel for HdfsStorage {
+    fn read_source(&self, primary: NodeId, reader: NodeId) -> NodeId {
+        self.nn.borrow().closest_source(primary, reader)
+    }
+
+    fn place_output(&mut self, writer: NodeId) -> Vec<NodeId> {
+        self.nn.borrow_mut().place_replicas_n(writer, self.replication)
+    }
+
+    fn name(&self) -> &'static str {
+        "hdfs"
+    }
+}
+
+/// Sector (1.20): files live as whole segments on their home slave;
+/// writes land on the writer and replicate lazily in the background, so
+/// jobs see single-copy write cost (the Table 2 mechanism).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SectorStorage;
+
+impl SectorStorage {
+    pub fn new() -> Self {
+        SectorStorage
+    }
+}
+
+impl StorageModel for SectorStorage {
+    fn read_source(&self, primary: NodeId, _reader: NodeId) -> NodeId {
+        primary
+    }
+
+    fn place_output(&mut self, writer: NodeId) -> Vec<NodeId> {
+        vec![writer]
+    }
+
+    fn name(&self) -> &'static str {
+        "sector"
+    }
+}
+
+/// CloudStore/KFS (the paper's third storage substrate, §7): a GFS-style
+/// chunk store whose writes are gated by a chunk-lease grant from the
+/// metaserver and whose 2009 placement was rack-*oblivious* — replicas go
+/// to random chunkservers, so on a wide-area deployment the replication
+/// pipeline tends to cross the WAN more often than HDFS 0.18's
+/// second-and-third-on-one-remote-rack policy.
+pub struct KfsStorage {
+    topo: Rc<Topology>,
+    /// Chunkserver membership (the deployment's nodes).
+    members: Vec<NodeId>,
+    replication: usize,
+    /// Where the metaserver runs (lease grants round-trip here).
+    metaserver: NodeId,
+    rng: Rng,
+}
+
+impl KfsStorage {
+    pub fn new(topo: Rc<Topology>, members: Vec<NodeId>, replication: usize, seed: u64) -> Self {
+        assert!(!members.is_empty());
+        assert!(replication >= 1);
+        let metaserver = members[0];
+        KfsStorage { topo, members, replication, metaserver, rng: Rng::new(seed) }
+    }
+}
+
+impl StorageModel for KfsStorage {
+    fn read_source(&self, primary: NodeId, _reader: NodeId) -> NodeId {
+        primary
+    }
+
+    /// Writer-local first chunk copy, then random distinct chunkservers.
+    fn place_output(&mut self, writer: NodeId) -> Vec<NodeId> {
+        let mut out = vec![writer];
+        let mut candidates: Vec<NodeId> =
+            self.members.iter().copied().filter(|&n| n != writer).collect();
+        while out.len() < self.replication && !candidates.is_empty() {
+            let i = self.rng.gen_range(candidates.len() as u64) as usize;
+            out.push(candidates.swap_remove(i));
+        }
+        out
+    }
+
+    /// One chunk-lease request/grant round-trip to the metaserver (KFS
+    /// leases are per-chunk; connectionless request + reply).
+    fn write_setup_latency(&self, writer: NodeId) -> f64 {
+        transport::control_message_latency(self.topo.rtt(writer, self.metaserver), true) * 2.0
+    }
+
+    fn name(&self) -> &'static str {
+        "kfs"
+    }
+}
+
+/// Timed pipelined write of one output block from `replicas[0]` through
+/// the replica chain: a disk write on every replica plus one network hop
+/// per pipeline edge, all concurrent (the pipeline streams packets), done
+/// when the slowest leg lands. This is the single replication pipeline
+/// every storage model shares; `hdfs::write_block` delegates here.
+#[allow(clippy::too_many_arguments)]
+pub fn pipeline_write<F: FnOnce(&mut Engine) + 'static>(
+    net: &Rc<RefCell<FlowNet>>,
+    topo: &Rc<Topology>,
+    eng: &mut Engine,
+    replicas: &[NodeId],
+    bytes: f64,
+    proto: &Protocol,
+    done: F,
+) {
+    assert!(!replicas.is_empty());
+    // Legs: one disk write per replica + one network hop per pipeline edge.
+    let legs = 2 * replicas.len() - 1;
+    let remaining = Rc::new(RefCell::new(legs));
+    // Completion joiner.
+    let done_cell = Rc::new(RefCell::new(Some(done)));
+    let arm = move |remaining: &Rc<RefCell<usize>>, done_cell: &Rc<RefCell<Option<F>>>| {
+        let remaining = remaining.clone();
+        let done_cell = done_cell.clone();
+        move |eng: &mut Engine| {
+            let mut r = remaining.borrow_mut();
+            *r -= 1;
+            if *r == 0 {
+                if let Some(d) = done_cell.borrow_mut().take() {
+                    d(eng);
+                }
+            }
+        }
+    };
+    // Disk write on every replica.
+    for &r in replicas {
+        transport::disk_write(net, topo, eng, r, bytes, arm(&remaining, &done_cell));
+    }
+    // Network hops along the pipeline chain.
+    for w in replicas.windows(2) {
+        transport::send(net, topo, eng, w[0], w[1], bytes, proto, arm(&remaining, &done_cell));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadoop::hdfs::HdfsConfig;
+
+    fn topo() -> Rc<Topology> {
+        Rc::new(Topology::oct_2009())
+    }
+
+    #[test]
+    fn hdfs_storage_places_through_the_namenode_policy() {
+        let t = topo();
+        let nn = Rc::new(RefCell::new(Namenode::new(t.clone(), HdfsConfig::default(), 5)));
+        let mut s = HdfsStorage::new(nn, 3);
+        let reps = s.place_output(NodeId(7));
+        assert_eq!(reps.len(), 3);
+        assert_eq!(reps[0], NodeId(7));
+        // 0.18 policy: second replica off-rack, third with the second.
+        assert!(!t.same_rack(reps[0], reps[1]));
+        assert!(t.same_rack(reps[1], reps[2]));
+        assert_eq!(s.write_setup_latency(NodeId(7)), 0.0);
+        assert_eq!(s.read_source(NodeId(3), NodeId(9)), NodeId(3));
+    }
+
+    #[test]
+    fn sector_storage_is_writer_local_single_copy() {
+        let mut s = SectorStorage::new();
+        assert_eq!(s.place_output(NodeId(11)), vec![NodeId(11)]);
+        assert_eq!(s.read_source(NodeId(2), NodeId(40)), NodeId(2));
+        assert_eq!(s.write_setup_latency(NodeId(11)), 0.0);
+    }
+
+    #[test]
+    fn kfs_storage_charges_a_lease_and_places_randomly() {
+        let t = topo();
+        let members = t.node_ids();
+        let mut s = KfsStorage::new(t.clone(), members, 3, 99);
+        for _ in 0..20 {
+            let reps = s.place_output(NodeId(0));
+            assert_eq!(reps.len(), 3);
+            assert_eq!(reps[0], NodeId(0));
+            let mut uniq = reps.clone();
+            uniq.sort();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 3, "duplicate chunkservers: {reps:?}");
+        }
+        // The lease pays at least one metaserver round-trip; a writer far
+        // from the metaserver pays more than the metaserver itself.
+        let near = s.write_setup_latency(NodeId(0));
+        let far = s.write_setup_latency(t.racks[3].nodes[0]);
+        assert!(near > 0.0);
+        assert!(far > near, "far {far} !> near {near}");
+    }
+
+    #[test]
+    fn kfs_single_replication_degenerates_to_local() {
+        let t = topo();
+        let mut s = KfsStorage::new(t.clone(), t.node_ids(), 1, 3);
+        assert_eq!(s.place_output(NodeId(5)), vec![NodeId(5)]);
+    }
+
+    #[test]
+    fn pipeline_write_completes_with_all_legs() {
+        let t = topo();
+        let net = FlowNet::new(&t);
+        let mut eng = Engine::new();
+        let done_at = Rc::new(RefCell::new(0.0));
+        let d = done_at.clone();
+        let replicas = [NodeId(0), t.racks[1].nodes[0], t.racks[1].nodes[1]];
+        pipeline_write(&net, &t, &mut eng, &replicas, 64e6, &Protocol::tcp(), move |e| {
+            *d.borrow_mut() = e.now();
+        });
+        eng.run();
+        // 3 disk legs + 2 network hops, gated by the WAN TCP hop.
+        assert_eq!(net.borrow().completions(), 5);
+        assert!(*done_at.borrow() > 1.0);
+    }
+}

@@ -206,7 +206,8 @@ fn pick<'a>(rng: &mut Rng, xs: &'a [NodeId]) -> Option<&'a NodeId> {
 /// Timed pipelined write of one block from `writer` to `replicas`:
 /// a local disk write plus chained network hops (writer→r2→r3 over
 /// `proto`), all concurrent (the pipeline streams packets), done when the
-/// slowest leg lands.
+/// slowest leg lands. Thin wrapper over the shared replication pipeline
+/// every storage model uses ([`crate::framework::pipeline_write`]).
 #[allow(clippy::too_many_arguments)]
 pub fn write_block<F: FnOnce(&mut Engine) + 'static>(
     net: &Rc<RefCell<FlowNet>>,
@@ -217,33 +218,7 @@ pub fn write_block<F: FnOnce(&mut Engine) + 'static>(
     proto: &Protocol,
     done: F,
 ) {
-    assert!(!replicas.is_empty());
-    // Legs: one disk write per replica + one network hop per pipeline edge.
-    let legs = 2 * replicas.len() - 1;
-    let remaining = Rc::new(RefCell::new(legs));
-    // Completion joiner.
-    let done_cell = Rc::new(RefCell::new(Some(done)));
-    let arm = move |remaining: &Rc<RefCell<usize>>, done_cell: &Rc<RefCell<Option<F>>>| {
-        let remaining = remaining.clone();
-        let done_cell = done_cell.clone();
-        move |eng: &mut Engine| {
-            let mut r = remaining.borrow_mut();
-            *r -= 1;
-            if *r == 0 {
-                if let Some(d) = done_cell.borrow_mut().take() {
-                    d(eng);
-                }
-            }
-        }
-    };
-    // Disk write on every replica.
-    for &r in replicas {
-        transport::disk_write(net, topo, eng, r, bytes as f64, arm(&remaining, &done_cell));
-    }
-    // Network hops along the pipeline chain.
-    for w in replicas.windows(2) {
-        transport::send(net, topo, eng, w[0], w[1], bytes as f64, proto, arm(&remaining, &done_cell));
-    }
+    crate::framework::pipeline_write(net, topo, eng, replicas, bytes as f64, proto, done)
 }
 
 /// Timed read of one block at `reader`: local disk read if a replica is

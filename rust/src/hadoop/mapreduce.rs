@@ -2,12 +2,15 @@
 //!
 //! Two faces, one dataflow:
 //!
-//! - [`MapReduceEngine::simulate`] runs a job's *timing* on the
-//!   discrete-event substrate at paper scale: locality-aware map
-//!   scheduling onto per-node task slots, input reads from the closest
-//!   HDFS replica, map CPU + local spill, an all-to-all shuffle over TCP
-//!   with bounded parallel copies, merge passes, reduce CPU, and
-//!   replication-pipelined output writes.
+//! - [`MapReduceEngine::simulate`] runs a job's *timing* as a thin
+//!   instantiation of the shared [`crate::framework`] runtime: HDFS
+//!   storage ([`crate::framework::HdfsStorage`]), locality-aware slot
+//!   scheduling, and a barrier-then-pull shuffle
+//!   ([`crate::framework::ExchangeModel::ShufflePull`]) over TCP with
+//!   bounded parallel copies, merge passes, reduce CPU, and
+//!   replication-pipelined output writes. [`MapReduceEngine::simulate_on`]
+//!   swaps the storage layer — the §7 interop scenarios run the same job
+//!   over CloudStore/KFS or Sector placement.
 //! - [`execute_malstone`] runs the *actual computation* with the same
 //!   dataflow decomposition (hash-partition by entity → reduce-side join
 //!   and mark → per-site aggregation) on real records in memory; its
@@ -20,18 +23,19 @@
 //! combining, so its shuffle is negligible.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::rc::Rc;
 
+use crate::framework::{
+    DataflowEngine, DataflowSpec, ExchangeModel, HdfsStorage, StealPolicy, StorageModel, TaskInput,
+};
 use crate::malstone::join::{bucketize, compromise_table, JoinedRecord};
 use crate::malstone::oracle::MalstoneResult;
 use crate::malstone::record::{Record, RECORD_BYTES};
 use crate::net::{Cluster, NodeId};
-use crate::sim::resources::CpuPool;
 use crate::sim::Engine;
-use crate::transport::{self, Protocol};
+use crate::transport::Protocol;
 
-use super::hdfs::{self, Namenode};
+use super::hdfs::Namenode;
 use super::params::FrameworkParams;
 
 /// One input block: location, bytes, records.
@@ -74,37 +78,29 @@ pub struct JobReport {
     pub shuffle_reduce_phase: f64,
     pub maps: usize,
     pub reduces: usize,
+    /// Maps that ran away from their input's home node (remote reads).
+    pub stolen_maps: usize,
+    /// All bytes reducers fetched, node-local partitions included.
     pub shuffle_bytes: f64,
+    /// The subset of `shuffle_bytes` that crossed the network.
+    pub shuffle_remote_bytes: f64,
     pub output_bytes: f64,
+    /// Input bytes read through the storage layer.
+    pub storage_read_bytes: f64,
+    /// Output bytes written through the storage layer, replicas included.
+    pub storage_write_bytes: f64,
     /// Where the output landed (primary replicas): feeds chained jobs.
     pub output: Vec<InputBlock>,
 }
 
-struct MrState {
-    cluster: Cluster,
-    nn: Rc<RefCell<Namenode>>,
-    spec: JobSpec,
-    pending_maps: Vec<InputBlock>,
-    running_maps: usize,
-    map_slots_free: HashMap<NodeId, usize>,
-    /// Map output bytes and records accumulated per tasktracker node.
-    map_out: HashMap<NodeId, (f64, f64)>,
-    maps_done: usize,
-    maps_total: usize,
-    map_phase_end: f64,
-    reducers_done: usize,
-    start: f64,
-    report_out: Vec<InputBlock>,
-    shuffle_bytes: f64,
-    output_bytes: f64,
-    done_cb: Option<Box<dyn FnOnce(&mut Engine, JobReport)>>,
-}
-
-/// The timing engine.
+/// The timing engine: MapReduce semantics instantiated on the shared
+/// [`crate::framework`] dataflow runtime.
 pub struct MapReduceEngine;
 
 impl MapReduceEngine {
-    /// Run a job on the event engine; `done` receives the report.
+    /// Run a job over HDFS on the event engine; `done` receives the
+    /// report. The job's `output_replication` configures the namenode's
+    /// placement for output writes.
     pub fn simulate<F: FnOnce(&mut Engine, JobReport) + 'static>(
         cluster: &Cluster,
         nn: &Rc<RefCell<Namenode>>,
@@ -112,300 +108,65 @@ impl MapReduceEngine {
         spec: JobSpec,
         done: F,
     ) {
+        let storage: Rc<RefCell<dyn StorageModel>> =
+            Rc::new(RefCell::new(HdfsStorage::new(nn.clone(), spec.output_replication)));
+        Self::simulate_on(cluster, storage, eng, spec, done);
+    }
+
+    /// Run a job with MapReduce scheduling + shuffle semantics over an
+    /// arbitrary storage layer — the §7 interoperability entry point
+    /// (MapReduce over CloudStore/KFS chunks, MapReduce over Sector
+    /// placement).
+    pub fn simulate_on<F: FnOnce(&mut Engine, JobReport) + 'static>(
+        cluster: &Cluster,
+        storage: Rc<RefCell<dyn StorageModel>>,
+        eng: &mut Engine,
+        spec: JobSpec,
+        done: F,
+    ) {
         assert!(!spec.nodes.is_empty() && !spec.input.is_empty());
         assert!(spec.num_reducers > 0);
-        let maps_total = spec.input.len();
-        let map_slots_free =
-            spec.nodes.iter().map(|&n| (n, spec.map_slots_per_node)).collect();
-        let st = Rc::new(RefCell::new(MrState {
-            cluster: cluster.clone(),
-            nn: nn.clone(),
-            pending_maps: spec.input.clone(),
-            running_maps: 0,
-            map_slots_free,
-            map_out: HashMap::new(),
-            maps_done: 0,
-            maps_total,
-            map_phase_end: 0.0,
-            reducers_done: 0,
-            start: eng.now(),
-            report_out: Vec::new(),
-            shuffle_bytes: 0.0,
-            output_bytes: 0.0,
-            done_cb: Some(Box::new(done)),
-            spec,
-        }));
-        Self::fill_map_slots(&st, eng);
-    }
-
-    /// Locality-aware list scheduling: for every node with a free slot,
-    /// prefer a pending block hosted on that node, then same-site, then
-    /// anything (remote read).
-    fn fill_map_slots(st: &Rc<RefCell<MrState>>, eng: &mut Engine) {
-        loop {
-            let task: Option<(NodeId, InputBlock)> = {
-                let mut s = st.borrow_mut();
-                if s.pending_maps.is_empty() {
-                    None
-                } else {
-                    let topo = s.cluster.topo.clone();
-                    let mut found = None;
-                    let nodes: Vec<NodeId> = s.spec.nodes.clone();
-                    'outer: for &n in &nodes {
-                        if s.map_slots_free[&n] == 0 {
-                            continue;
-                        }
-                        // Best pending block for this node.
-                        let mut best: Option<(usize, u32)> = None;
-                        for (i, b) in s.pending_maps.iter().enumerate() {
-                            let d = topo.distance(n, b.node);
-                            if best.map_or(true, |(_, bd)| d < bd) {
-                                best = Some((i, d));
-                            }
-                            if d == 0 {
-                                break;
-                            }
-                        }
-                        if let Some((i, _)) = best {
-                            let blk = s.pending_maps.swap_remove(i);
-                            *s.map_slots_free.get_mut(&n).unwrap() -= 1;
-                            s.running_maps += 1;
-                            found = Some((n, blk));
-                            break 'outer;
-                        }
-                    }
-                    found
-                }
+        let dataflow = DataflowSpec {
+            name: spec.name,
+            nodes: spec.nodes,
+            tasks: spec
+                .input
+                .iter()
+                .map(|b| TaskInput { node: b.node, bytes: b.bytes, records: b.records })
+                .collect(),
+            slots_per_node: spec.map_slots_per_node,
+            task_overhead: spec.task_overhead,
+            map_cpu_per_record: spec.map_cpu_per_record,
+            reduce_cpu_per_record: spec.reduce_cpu_per_record,
+            intermediate_bytes_per_record: spec.intermediate_bytes_per_record,
+            output_bytes_per_record: spec.output_bytes_per_record,
+            merge_passes: spec.merge_passes,
+            num_reducers: spec.num_reducers,
+            protocol: spec.protocol,
+            exchange: ExchangeModel::ShufflePull { parallel_copies: spec.parallel_copies },
+            steal: StealPolicy::Anywhere,
+        };
+        DataflowEngine::run(cluster, storage, eng, dataflow, move |eng, r| {
+            let report = JobReport {
+                name: r.name,
+                makespan: r.makespan,
+                map_phase: r.phase1,
+                shuffle_reduce_phase: r.phase2,
+                maps: r.tasks,
+                reduces: r.reducers,
+                stolen_maps: r.remote_tasks,
+                shuffle_bytes: r.exchange_bytes,
+                shuffle_remote_bytes: r.exchange_remote_bytes,
+                output_bytes: r.output_bytes,
+                storage_read_bytes: r.storage_read_bytes,
+                storage_write_bytes: r.storage_write_bytes,
+                output: r
+                    .output
+                    .iter()
+                    .map(|t| InputBlock { node: t.node, bytes: t.bytes, records: t.records })
+                    .collect(),
             };
-            match task {
-                Some((node, blk)) => Self::run_map(st, eng, node, blk),
-                None => break,
-            }
-        }
-    }
-
-    /// One map task: replica read → CPU → local spill → slot release.
-    fn run_map(st: &Rc<RefCell<MrState>>, eng: &mut Engine, node: NodeId, blk: InputBlock) {
-        let (cluster, nn, proto, overhead) = {
-            let s = st.borrow();
-            (s.cluster.clone(), s.nn.clone(), s.spec.protocol.clone(), s.spec.task_overhead)
-        };
-        // Resolve the closest replica through the namenode. Blocks arrive
-        // as InputBlock (node = primary); consult HDFS when present.
-        let source = nn.borrow().closest_source(blk.node, node);
-        let st2 = st.clone();
-        let topo = cluster.topo.clone();
-        let net = cluster.net.clone();
-        eng.schedule_in(overhead, move |eng| {
-            let st3 = st2.clone();
-            hdfs::read_block(&net, &topo, eng, source, node, blk.bytes, &proto, move |eng| {
-                // CPU stage.
-                let (pool, cpu, spill_bytes) = {
-                    let s = st3.borrow();
-                    let cpu = blk.records as f64 * s.spec.map_cpu_per_record;
-                    let spill =
-                        blk.records as f64 * s.spec.intermediate_bytes_per_record;
-                    (s.cluster.pool(node).clone(), cpu, spill)
-                };
-                let st4 = st3.clone();
-                CpuPool::submit(&pool, eng, cpu, move |eng| {
-                    // Local spill of map output.
-                    let (net, topo) = {
-                        let s = st4.borrow();
-                        (s.cluster.net.clone(), s.cluster.topo.clone())
-                    };
-                    let st5 = st4.clone();
-                    transport::disk_write(&net, &topo, eng, node, spill_bytes, move |eng| {
-                        Self::map_finished(&st5, eng, node, blk, spill_bytes);
-                    });
-                });
-            });
-        });
-    }
-
-    fn map_finished(
-        st: &Rc<RefCell<MrState>>,
-        eng: &mut Engine,
-        node: NodeId,
-        blk: InputBlock,
-        out_bytes: f64,
-    ) {
-        let all_done = {
-            let mut s = st.borrow_mut();
-            let e = s.map_out.entry(node).or_insert((0.0, 0.0));
-            e.0 += out_bytes;
-            e.1 += blk.records as f64;
-            s.maps_done += 1;
-            s.running_maps -= 1;
-            *s.map_slots_free.get_mut(&node).unwrap() += 1;
-            if s.maps_done == s.maps_total {
-                s.map_phase_end = eng.now();
-                true
-            } else {
-                false
-            }
-        };
-        Self::fill_map_slots(st, eng);
-        if all_done {
-            Self::start_shuffle(st, eng);
-        }
-    }
-
-    /// Shuffle + reduce. Reducers are placed round-robin over the job's
-    /// nodes; each fetches its partition of every mapper's output with at
-    /// most `parallel_copies` concurrent streams.
-    fn start_shuffle(st: &Rc<RefCell<MrState>>, eng: &mut Engine) {
-        let (reducers, fetch_lists) = {
-            let s = st.borrow();
-            let r = s.spec.num_reducers;
-            let reducers: Vec<NodeId> =
-                (0..r).map(|i| s.spec.nodes[i % s.spec.nodes.len()]).collect();
-            // Each reducer fetches bytes/r from every mapper node.
-            let mut lists: Vec<Vec<(NodeId, f64)>> = vec![Vec::new(); r];
-            for (&m, &(bytes, _records)) in {
-                let mut v: Vec<_> = s.map_out.iter().collect();
-                v.sort_by_key(|(n, _)| n.0);
-                v
-            } {
-                for (ri, list) in lists.iter_mut().enumerate() {
-                    let _ = ri;
-                    list.push((m, bytes / r as f64));
-                }
-            }
-            (reducers, lists)
-        };
-        for (ri, (rnode, fetches)) in reducers.into_iter().zip(fetch_lists).enumerate() {
-            Self::run_reducer(st, eng, ri, rnode, fetches);
-        }
-    }
-
-    fn run_reducer(
-        st: &Rc<RefCell<MrState>>,
-        eng: &mut Engine,
-        _ri: usize,
-        rnode: NodeId,
-        fetches: Vec<(NodeId, f64)>,
-    ) {
-        let queue = Rc::new(RefCell::new(fetches));
-        let inflight = Rc::new(RefCell::new(0usize));
-        let fetched = Rc::new(RefCell::new(0.0f64));
-        let k = st.borrow().spec.parallel_copies.max(1);
-        Self::pump_fetches(st, eng, rnode, queue, inflight, fetched, k);
-    }
-
-    fn pump_fetches(
-        st: &Rc<RefCell<MrState>>,
-        eng: &mut Engine,
-        rnode: NodeId,
-        queue: Rc<RefCell<Vec<(NodeId, f64)>>>,
-        inflight: Rc<RefCell<usize>>,
-        fetched: Rc<RefCell<f64>>,
-        k: usize,
-    ) {
-        loop {
-            let next = {
-                let mut q = queue.borrow_mut();
-                if *inflight.borrow() >= k || q.is_empty() {
-                    None
-                } else {
-                    *inflight.borrow_mut() += 1;
-                    Some(q.pop().unwrap())
-                }
-            };
-            let Some((mnode, bytes)) = next else { break };
-            let (cluster, proto) = {
-                let s = st.borrow();
-                (s.cluster.clone(), s.spec.protocol.clone())
-            };
-            let st2 = st.clone();
-            let queue2 = queue.clone();
-            let inflight2 = inflight.clone();
-            let fetched2 = fetched.clone();
-            let deliver = move |eng: &mut Engine| {
-                *inflight2.borrow_mut() -= 1;
-                *fetched2.borrow_mut() += bytes;
-                st2.borrow_mut().shuffle_bytes += bytes;
-                let done =
-                    queue2.borrow().is_empty() && *inflight2.borrow() == 0;
-                if done {
-                    Self::merge_and_reduce(&st2, eng, rnode, *fetched2.borrow());
-                } else {
-                    Self::pump_fetches(&st2, eng, rnode, queue2, inflight2, fetched2, k);
-                }
-            };
-            if mnode == rnode {
-                // Local partition: already on disk; charge a disk read.
-                transport::disk_read(&cluster.net, &cluster.topo, eng, rnode, bytes, deliver);
-            } else {
-                let net = cluster.net.clone();
-                let topo = cluster.topo.clone();
-                transport::disk_read(&cluster.net, &cluster.topo, eng, mnode, bytes, move |eng| {
-                    transport::send(&net, &topo, eng, mnode, rnode, bytes, &proto, deliver);
-                });
-            }
-        }
-    }
-
-    fn merge_and_reduce(st: &Rc<RefCell<MrState>>, eng: &mut Engine, rnode: NodeId, bytes: f64) {
-        let (cluster, merge_bytes, cpu, out_bytes, out_records, proto, repl) = {
-            let s = st.borrow();
-            let total_recs: f64 = s.map_out.values().map(|&(_, r)| r).sum();
-            let recs = total_recs / s.spec.num_reducers as f64;
-            let merge = 2.0 * s.spec.merge_passes * bytes; // read+write per pass
-            let cpu = recs * s.spec.reduce_cpu_per_record;
-            let out_b = recs * s.spec.output_bytes_per_record;
-            (
-                s.cluster.clone(),
-                merge,
-                cpu,
-                out_b,
-                recs,
-                s.spec.protocol.clone(),
-                s.spec.output_replication,
-            )
-        };
-        let st2 = st.clone();
-        let net = cluster.net.clone();
-        let topo = cluster.topo.clone();
-        let finish_output = move |eng: &mut Engine| {
-            // Replicated output write through HDFS.
-            let st3 = st2.clone();
-            let replicas = st2.borrow().nn.borrow_mut().place_replicas_n(rnode, repl);
-            let net2 = net.clone();
-            let topo2 = topo.clone();
-            hdfs::write_block(&net2, &topo2, eng, &replicas, out_bytes.ceil() as u64, &proto, move |eng| {
-                let mut s = st3.borrow_mut();
-                s.output_bytes += out_bytes;
-                s.report_out.push(InputBlock {
-                    node: rnode,
-                    bytes: out_bytes.ceil() as u64,
-                    records: out_records.ceil() as u64,
-                });
-                s.reducers_done += 1;
-                if s.reducers_done == s.spec.num_reducers {
-                    let report = JobReport {
-                        name: s.spec.name.clone(),
-                        makespan: eng.now() - s.start,
-                        map_phase: s.map_phase_end - s.start,
-                        shuffle_reduce_phase: eng.now() - s.map_phase_end,
-                        maps: s.maps_total,
-                        reduces: s.spec.num_reducers,
-                        shuffle_bytes: s.shuffle_bytes,
-                        output_bytes: s.output_bytes,
-                        output: s.report_out.clone(),
-                    };
-                    let cb = s.done_cb.take().unwrap();
-                    drop(s);
-                    cb(eng, report);
-                }
-            });
-        };
-        // Merge passes on disk, then reduce CPU, then output.
-        let pool = cluster.pool(rnode).clone();
-        let net3 = cluster.net.clone();
-        let topo3 = cluster.topo.clone();
-        transport::disk_write(&net3, &topo3, eng, rnode, merge_bytes, move |eng| {
-            CpuPool::submit(&pool, eng, cpu, finish_output);
+            done(eng, report);
         });
     }
 }

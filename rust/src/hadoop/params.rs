@@ -112,6 +112,27 @@ impl FrameworkParams {
         }
     }
 
+    /// §7 interop: Hadoop MapReduce running over CloudStore/KFS chunk
+    /// storage instead of HDFS. The compute-side costs are the Java
+    /// job's; the storage swap (chunk leases, rack-oblivious placement)
+    /// lives in [`crate::framework::KfsStorage`], not here.
+    pub fn cloudstore_mr() -> Self {
+        FrameworkParams { name: "cloudstore-mr", ..Self::hadoop_mapreduce() }
+    }
+
+    /// §7 interop: MapReduce scheduling and shuffle semantics over Sector
+    /// placement — the shuffle and remote reads ride UDT and job output
+    /// is a single writer-local copy (Sector replicates lazily), while
+    /// per-record CPU stays the Java job's.
+    pub fn hadoop_over_sector() -> Self {
+        FrameworkParams {
+            name: "hadoop-over-sector",
+            protocol: Protocol::udt(),
+            output_replication: 1,
+            ..Self::hadoop_mapreduce()
+        }
+    }
+
     /// Intermediate bytes per input record for a MalStone variant.
     pub fn intermediate_bytes_per_record(&self, variant_b: bool) -> f64 {
         let f = if variant_b { self.variant_b_emit_factor } else { 1.0 };
@@ -159,5 +180,20 @@ mod tests {
     fn protocols_match_paper() {
         assert_eq!(FrameworkParams::hadoop_mapreduce().protocol.name(), "tcp");
         assert_eq!(FrameworkParams::sphere().protocol.name(), "udt");
+    }
+
+    #[test]
+    fn interop_params_swap_only_the_intended_layer() {
+        let mr = FrameworkParams::hadoop_mapreduce();
+        let kfs = FrameworkParams::cloudstore_mr();
+        // Storage swap: identical compute + transport costs.
+        assert_eq!(kfs.map_cpu_per_record, mr.map_cpu_per_record);
+        assert_eq!(kfs.protocol.name(), "tcp");
+        assert_eq!(kfs.output_replication, 3);
+        let hos = FrameworkParams::hadoop_over_sector();
+        // Transport + replication swap: identical compute costs.
+        assert_eq!(hos.map_cpu_per_record, mr.map_cpu_per_record);
+        assert_eq!(hos.protocol.name(), "udt");
+        assert_eq!(hos.output_replication, 1);
     }
 }

@@ -10,9 +10,12 @@
 //! - **L3 (this crate)** — the testbed: discrete-event simulator ([`sim`]),
 //!   wide-area topology and max-min fair flow network ([`net`]), TCP/UDT
 //!   transport models ([`transport`]), the real GMP messaging protocol and
-//!   RPC layer over UDP ([`gmp`]), the Sector/Sphere and Hadoop substrates
-//!   ([`sector`], [`hadoop`]), the MalStone benchmark suite ([`malstone`]),
-//!   and the monitoring/visualization system ([`monitor`]).
+//!   RPC layer over UDP ([`gmp`]), the shared framework runtime
+//!   ([`framework`]: storage models × slot scheduling × exchange models —
+//!   the skeleton every engine and §7 interop composition instantiates),
+//!   the Sector/Sphere and Hadoop substrates ([`sector`], [`hadoop`]),
+//!   the MalStone benchmark suite ([`malstone`]), and the
+//!   monitoring/visualization system ([`monitor`]).
 //! - **Experiment surface** — every experiment (CLI subcommands, benches,
 //!   examples, integration tests) is a [`coordinator::Scenario`] built
 //!   with [`coordinator::Testbed::builder`] or drawn from the named
@@ -26,6 +29,7 @@
 //!   the `xla` dependency is unavailable).
 
 pub mod coordinator;
+pub mod framework;
 pub mod gmp;
 pub mod hadoop;
 pub mod malstone;

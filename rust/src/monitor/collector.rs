@@ -39,6 +39,10 @@ pub struct Monitor {
     /// Exact bytes drained from WAN link counters across all samples
     /// (the ring-buffer series only retains the trailing window).
     wan_bytes_drained: f64,
+    /// Exact bytes drained from every node's disk link — the storage
+    /// layer's observable (HDFS/KFS/Sector reads, spills, merges and
+    /// replica writes all land on disk links).
+    disk_bytes_drained: f64,
     /// When the previous sample was taken — rates divide by the *actual*
     /// elapsed time, so off-schedule samples (e.g. a final sample at run
     /// end) don't overstate or understate throughput.
@@ -67,6 +71,7 @@ impl Monitor {
             nic_out: (0..n).map(|_| Series::new(SERIES_CAP)).collect(),
             wan,
             wan_bytes_drained: 0.0,
+            disk_bytes_drained: 0.0,
             last_sample: 0.0,
             samples_taken: 0,
         }))
@@ -104,6 +109,7 @@ impl Monitor {
                 .map(|p| p.borrow_mut().take_utilization(now, dt))
                 .unwrap_or(0.0);
             let disk_bytes = netm.take_link_bytes(node.disk, now);
+            self.disk_bytes_drained += disk_bytes;
             let disk = (disk_bytes / dt / self.topo.link(node.disk).capacity).min(1.0);
             let inb = netm.take_link_bytes(node.nic_rx, now) / dt;
             let outb = netm.take_link_bytes(node.nic_tx, now) / dt;
@@ -218,6 +224,15 @@ impl Monitor {
         self.wan_bytes_drained
     }
 
+    /// Total bytes the sampler has drained from node disk links over the
+    /// whole run — the storage layer's counterpart to
+    /// [`Monitor::wan_bytes_observed`], a sampling-based cross-check of
+    /// the framework runtime's `storage_read_bytes`/`storage_write_bytes`
+    /// accounting.
+    pub fn disk_bytes_observed(&self) -> f64 {
+        self.disk_bytes_drained
+    }
+
     /// Export the latest frame as JSON (the web UI's data feed).
     pub fn frame_json(&self, now: f64) -> Json {
         let nodes: Vec<Json> = (0..self.topo.num_nodes())
@@ -329,6 +344,29 @@ mod tests {
         assert!(wan.iter().any(|(_, bps)| *bps > 10.0), "{wan:?}");
         // The observed-byte rollup sees (at least) the sampled transfer.
         assert!(m.wan_bytes_observed() > 100.0, "{}", m.wan_bytes_observed());
+    }
+
+    #[test]
+    fn disk_rollup_observes_storage_traffic() {
+        let topo = small_topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let ps = pools(&topo);
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, ps);
+        // A 200-byte storage read on node0's 50 B/s disk.
+        transport::disk_read(&net, &topo, &mut eng, topo.racks[0].nodes[0], 200.0, |_| {});
+        eng.run_until(6.0);
+        mon.borrow_mut().disable();
+        eng.run();
+        let m = mon.borrow();
+        assert!(
+            (m.disk_bytes_observed() - 200.0).abs() < 1e-6,
+            "disk bytes {}",
+            m.disk_bytes_observed()
+        );
+        // Disk traffic is not WAN traffic.
+        assert_eq!(m.wan_bytes_observed(), 0.0);
     }
 
     #[test]

@@ -10,24 +10,28 @@
 //! buckets it received — in the real path this is the AOT-compiled
 //! JAX/Pallas histogram kernel — and the master merges the tiny planes.
 //!
+//! [`SphereEngine::simulate`] is a thin instantiation of the shared
+//! [`crate::framework`] runtime: Sector storage (writer-local, lazy
+//! replication), stealing-enabled slot scheduling, and the overlapped
+//! [`crate::framework::ExchangeModel::BucketPush`] exchange over UDT.
 //! The differences that produce Table 2's 4.7% Sector penalty vs Hadoop's
-//! 31–34% are all mechanistic here: UDT rate caps (RTT-insensitive)
-//! instead of TCP's window/Mathis ceilings, single lazy replication
-//! instead of a 3-way synchronous pipeline, and segment stealing that
-//! soaks up stragglers.
+//! 31–34% are all mechanistic in those layer choices: UDT rate caps
+//! (RTT-insensitive) instead of TCP's window/Mathis ceilings, single lazy
+//! replication instead of a 3-way synchronous pipeline, and segment
+//! stealing that soaks up stragglers.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::rc::Rc;
 
+use crate::framework::{
+    DataflowEngine, DataflowSpec, ExchangeModel, SectorStorage, StealPolicy, TaskInput,
+};
 use crate::hadoop::params::FrameworkParams;
 use crate::malstone::join::{bucketize, compromise_table, JoinedRecord};
 use crate::malstone::oracle::MalstoneResult;
 use crate::malstone::record::Record;
 use crate::net::{Cluster, NodeId};
-use crate::sim::resources::CpuPool;
 use crate::sim::Engine;
-use crate::transport;
 
 use super::master::{SectorMaster, Segment};
 
@@ -40,31 +44,22 @@ pub struct SphereReport {
     pub aggregate_phase: f64,
     pub segments: usize,
     pub stolen_segments: usize,
+    /// Intermediate bytes that crossed the network during the push (the
+    /// paper's accounting; node-local shares excluded).
     pub exchange_bytes: f64,
+    /// All bytes through the exchange, node-local bucket shares included
+    /// (comparable to Hadoop's `shuffle_bytes`).
+    pub exchange_total_bytes: f64,
+    /// Segment bytes read through the storage layer.
+    pub storage_read_bytes: f64,
+    /// Output bytes written through the storage layer (zero: stage 2
+    /// keeps its histogram planes in memory; the master gather is
+    /// negligible).
+    pub storage_write_bytes: f64,
 }
 
-struct SphereState {
-    cluster: Cluster,
-    params: FrameworkParams,
-    variant_b: bool,
-    nodes: Vec<NodeId>,
-    pending: Vec<Segment>,
-    running: usize,
-    slots_free: HashMap<NodeId, usize>,
-    /// Intermediate bytes/records routed to each node's buckets.
-    bucket_bytes: HashMap<NodeId, f64>,
-    bucket_records: HashMap<NodeId, f64>,
-    stolen: usize,
-    segments_total: usize,
-    segments_done: usize,
-    exchange_bytes: f64,
-    scan_end: f64,
-    start: f64,
-    agg_done: usize,
-    done_cb: Option<Box<dyn FnOnce(&mut Engine, SphereReport)>>,
-}
-
-/// The Sphere timing engine.
+/// The Sphere timing engine: Sector/Sphere semantics instantiated on the
+/// shared [`crate::framework`] dataflow runtime.
 pub struct SphereEngine;
 
 impl SphereEngine {
@@ -89,213 +84,43 @@ impl SphereEngine {
             .to_vec();
         assert!(!segments.is_empty());
         let spe_slots = 2; // SPE threads per slave doing segment work
-        let st = Rc::new(RefCell::new(SphereState {
-            cluster: cluster.clone(),
-            params,
-            variant_b,
-            slots_free: healthy.iter().map(|&n| (n, spe_slots)).collect(),
+        let dataflow = DataflowSpec {
+            name: format!("sphere-malstone-{}", if variant_b { "b" } else { "a" }),
+            num_reducers: healthy.len(),
             nodes: healthy,
-            segments_total: segments.len(),
-            pending: segments,
-            running: 0,
-            bucket_bytes: HashMap::new(),
-            bucket_records: HashMap::new(),
-            stolen: 0,
-            segments_done: 0,
-            exchange_bytes: 0.0,
-            scan_end: 0.0,
-            start: eng.now(),
-            agg_done: 0,
-            done_cb: Some(Box::new(done)),
-        }));
-        Self::fill_slots(&st, eng);
-    }
-
-    /// Locality-first, stealing-allowed segment scheduling.
-    fn fill_slots(st: &Rc<RefCell<SphereState>>, eng: &mut Engine) {
-        loop {
-            let task = {
-                let mut s = st.borrow_mut();
-                if s.pending.is_empty() {
-                    None
-                } else {
-                    let topo = s.cluster.topo.clone();
-                    let nodes = s.nodes.clone();
-                    let mut found = None;
-                    'outer: for &n in &nodes {
-                        if s.slots_free[&n] == 0 {
-                            continue;
-                        }
-                        let mut best: Option<(usize, u32)> = None;
-                        for (i, seg) in s.pending.iter().enumerate() {
-                            let d = topo.distance(n, seg.node);
-                            if best.map_or(true, |(_, bd)| d < bd) {
-                                best = Some((i, d));
-                            }
-                            if d == 0 {
-                                break;
-                            }
-                        }
-                        if let Some((i, d)) = best {
-                            let seg = s.pending.swap_remove(i);
-                            *s.slots_free.get_mut(&n).unwrap() -= 1;
-                            s.running += 1;
-                            if d > 0 {
-                                s.stolen += 1;
-                            }
-                            found = Some((n, seg));
-                            break 'outer;
-                        }
-                    }
-                    found
-                }
-            };
-            match task {
-                Some((node, seg)) => Self::run_segment(st, eng, node, seg),
-                None => break,
-            }
-        }
-    }
-
-    /// One segment through stage 1: (possibly remote) read → UDF CPU →
-    /// bucket exchange over UDT, overlapped (flows start as CPU ends; the
-    /// segment completes when its slowest bucket push lands).
-    fn run_segment(st: &Rc<RefCell<SphereState>>, eng: &mut Engine, node: NodeId, seg: Segment) {
-        let (cluster, proto, overhead) = {
-            let s = st.borrow();
-            (s.cluster.clone(), s.params.protocol.clone(), s.params.task_overhead)
+            tasks: segments
+                .iter()
+                .map(|s| TaskInput { node: s.node, bytes: s.bytes, records: s.records })
+                .collect(),
+            slots_per_node: spe_slots,
+            task_overhead: params.task_overhead,
+            map_cpu_per_record: params.map_cpu_per_record,
+            reduce_cpu_per_record: params.reduce_cpu(variant_b),
+            intermediate_bytes_per_record: params.intermediate_bytes_per_record(variant_b),
+            // Stage 2 aggregates in memory; output planes are negligible
+            // and the master gather is charged as zero bytes.
+            output_bytes_per_record: 0.0,
+            merge_passes: 0.0,
+            protocol: params.protocol.clone(),
+            exchange: ExchangeModel::BucketPush,
+            steal: StealPolicy::Anywhere,
         };
-        let st2 = st.clone();
-        let net = cluster.net.clone();
-        let topo = cluster.topo.clone();
-        eng.schedule_in(overhead, move |eng| {
-            let st3 = st2.clone();
-            let after_read = move |eng: &mut Engine| {
-                let (pool, cpu) = {
-                    let s = st3.borrow();
-                    (s.cluster.pool(node).clone(), seg.records as f64 * s.params.map_cpu_per_record)
-                };
-                let st4 = st3.clone();
-                CpuPool::submit(&pool, eng, cpu, move |eng| {
-                    Self::exchange(&st4, eng, node, seg);
-                });
+        let storage = Rc::new(RefCell::new(SectorStorage::new()));
+        DataflowEngine::run(cluster, storage, eng, dataflow, move |eng, r| {
+            let report = SphereReport {
+                name: r.name,
+                makespan: r.makespan,
+                scan_phase: r.phase1,
+                aggregate_phase: r.phase2,
+                segments: r.tasks,
+                stolen_segments: r.remote_tasks,
+                exchange_bytes: r.exchange_remote_bytes,
+                exchange_total_bytes: r.exchange_bytes,
+                storage_read_bytes: r.storage_read_bytes,
+                storage_write_bytes: r.storage_write_bytes,
             };
-            if seg.node == node {
-                transport::disk_read(&net, &topo, eng, node, seg.bytes as f64, after_read);
-            } else {
-                // Stolen segment: stream it from its home slave over UDT.
-                let net2 = net.clone();
-                let topo2 = topo.clone();
-                transport::disk_read(&net, &topo, eng, seg.node, seg.bytes as f64, move |eng| {
-                    transport::send(&net2, &topo2, eng, seg.node, node, seg.bytes as f64, &proto, after_read);
-                });
-            }
+            done(eng, report);
         });
-    }
-
-    /// Push this segment's UDF output into bucket files on every node.
-    fn exchange(st: &Rc<RefCell<SphereState>>, eng: &mut Engine, node: NodeId, seg: Segment) {
-        let (cluster, proto, out_bytes, nodes) = {
-            let s = st.borrow();
-            let out = seg.records as f64 * s.params.intermediate_bytes_per_record(s.variant_b);
-            (s.cluster.clone(), s.params.protocol.clone(), out, s.nodes.clone())
-        };
-        let n = nodes.len() as f64;
-        let share_bytes = out_bytes / n;
-        let share_records = seg.records as f64 / n;
-        let legs = Rc::new(RefCell::new(nodes.len()));
-        let st2 = st.clone();
-        let arrive = move |st: &Rc<RefCell<SphereState>>, eng: &mut Engine, legs: &Rc<RefCell<usize>>| {
-            let mut l = legs.borrow_mut();
-            *l -= 1;
-            if *l == 0 {
-                Self::segment_finished(st, eng, node);
-            }
-        };
-        for &dst in &nodes {
-            {
-                let mut s = st.borrow_mut();
-                *s.bucket_bytes.entry(dst).or_insert(0.0) += share_bytes;
-                *s.bucket_records.entry(dst).or_insert(0.0) += share_records;
-                if dst != node {
-                    s.exchange_bytes += share_bytes;
-                }
-            }
-            let st3 = st2.clone();
-            let legs2 = legs.clone();
-            let done = move |eng: &mut Engine| arrive(&st3, eng, &legs2);
-            if dst == node {
-                transport::disk_write(&cluster.net, &cluster.topo, eng, node, share_bytes, done);
-            } else {
-                let net = cluster.net.clone();
-                let topo = cluster.topo.clone();
-                transport::send(&cluster.net, &cluster.topo, eng, node, dst, share_bytes, &proto, move |eng| {
-                    transport::disk_write(&net, &topo, eng, dst, share_bytes, done);
-                });
-            }
-        }
-    }
-
-    fn segment_finished(st: &Rc<RefCell<SphereState>>, eng: &mut Engine, node: NodeId) {
-        let scan_done = {
-            let mut s = st.borrow_mut();
-            s.segments_done += 1;
-            s.running -= 1;
-            *s.slots_free.get_mut(&node).unwrap() += 1;
-            if s.segments_done == s.segments_total {
-                s.scan_end = eng.now();
-                true
-            } else {
-                false
-            }
-        };
-        Self::fill_slots(st, eng);
-        if scan_done {
-            Self::start_aggregate(st, eng);
-        }
-    }
-
-    /// Stage 2: every node folds its buckets; the merged planes are tiny
-    /// (the master gather is negligible and charged as zero bytes).
-    fn start_aggregate(st: &Rc<RefCell<SphereState>>, eng: &mut Engine) {
-        let nodes = st.borrow().nodes.clone();
-        for node in nodes {
-            let (cluster, bytes, records, cpu_per_rec) = {
-                let s = st.borrow();
-                (
-                    s.cluster.clone(),
-                    s.bucket_bytes.get(&node).copied().unwrap_or(0.0),
-                    s.bucket_records.get(&node).copied().unwrap_or(0.0),
-                    s.params.reduce_cpu(s.variant_b),
-                )
-            };
-            let st2 = st.clone();
-            let pool = cluster.pool(node).clone();
-            transport::disk_read(&cluster.net, &cluster.topo, eng, node, bytes, move |eng| {
-                let st3 = st2.clone();
-                CpuPool::submit(&pool, eng, records * cpu_per_rec, move |eng| {
-                    let mut s = st3.borrow_mut();
-                    s.agg_done += 1;
-                    if s.agg_done == s.nodes.len() {
-                        let report = SphereReport {
-                            name: format!(
-                                "sphere-malstone-{}",
-                                if s.variant_b { "b" } else { "a" }
-                            ),
-                            makespan: eng.now() - s.start,
-                            scan_phase: s.scan_end - s.start,
-                            aggregate_phase: eng.now() - s.scan_end,
-                            segments: s.segments_total,
-                            stolen_segments: s.stolen,
-                            exchange_bytes: s.exchange_bytes,
-                        };
-                        let cb = s.done_cb.take().unwrap();
-                        drop(s);
-                        cb(eng, report);
-                    }
-                });
-            });
-        }
     }
 }
 

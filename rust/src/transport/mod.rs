@@ -281,6 +281,74 @@ mod tests {
     }
 
     #[test]
+    fn mathis_window_crossover_flips_at_the_wan_threshold() {
+        // With the default parameterization the two TCP ceilings both
+        // scale as 1/RTT, so which one binds is decided by the loss
+        // regime: clean-path loss (5e-7) keeps Mathis far above the
+        // receive window; shared-wave loss (5e-4) pulls it far below.
+        let m = TcpModel::default();
+        let p = Protocol::tcp();
+        let bn = 1e12; // never bottleneck-bound in this test
+        let rtt_lo = m.wan_rtt_threshold * 0.98;
+        let window_lo = m.max_wnd / rtt_lo;
+        let mathis_clean = 1.22 * m.mss / (rtt_lo * m.loss.sqrt());
+        assert!(window_lo < mathis_clean, "window must bind below the threshold");
+        let cap_lo = p.rate_cap(rtt_lo, bn);
+        assert!((cap_lo - window_lo).abs() / cap_lo < 1e-9, "cap {cap_lo} window {window_lo}");
+        let rtt_hi = m.wan_rtt_threshold * 1.02;
+        let mathis_wan = 1.22 * m.mss / (rtt_hi * m.wan_loss.sqrt());
+        assert!(mathis_wan < m.max_wnd / rtt_hi, "Mathis must bind above the threshold");
+        let cap_hi = p.rate_cap(rtt_hi, bn);
+        assert!((cap_hi - mathis_wan).abs() / cap_hi < 1e-9, "cap {cap_hi} mathis {mathis_wan}");
+    }
+
+    #[test]
+    fn wan_loss_kicks_in_above_rtt_threshold() {
+        let m = TcpModel::default();
+        let p = Protocol::tcp();
+        let below = p.rate_cap(m.wan_rtt_threshold * 0.99, 1e12);
+        let above = p.rate_cap(m.wan_rtt_threshold * 1.01, 1e12);
+        // ~2% more RTT but ~3.4× less throughput: the loss *regime*
+        // moved (window-bound → shared-wave Mathis), not the RTT term,
+        // which alone would account for a 2% drop.
+        assert!(below / above > 2.5, "below {below} above {above}");
+        assert!(below / above < 5.0, "discontinuity larger than the model predicts");
+        // Within one regime the cap is RTT-continuous (pure 1/RTT).
+        let a = p.rate_cap(0.040, 1e12);
+        let b = p.rate_cap(0.041, 1e12);
+        assert!((a / b - 0.041 / 0.040).abs() < 1e-9);
+    }
+
+    #[test]
+    fn udt_cap_is_rtt_insensitive_across_three_decades() {
+        let p = Protocol::udt();
+        let caps: Vec<f64> =
+            [1e-4, 1e-3, 1e-2, 1e-1].iter().map(|&rtt| p.rate_cap(rtt, NIC)).collect();
+        let (min, max) = caps.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), &c| {
+            (lo.min(c), hi.max(c))
+        });
+        // Worst-case droop is the LAN→WAN efficiency step, under 6%.
+        assert!((max - min) / max < 0.06, "caps {caps:?}");
+        // Contrast: TCP collapses by orders of magnitude over the range.
+        let tcp = Protocol::tcp();
+        assert!(tcp.rate_cap(1e-4, NIC) / tcp.rate_cap(1e-1, NIC) > 50.0);
+    }
+
+    #[test]
+    fn zero_byte_control_message_pays_setup_only() {
+        let rtt = 0.022;
+        let tcp = Protocol::tcp();
+        // No payload → no slow-start ramp: exactly the 1.5-RTT handshake.
+        assert!((tcp.transfer_overhead(0.0, rtt, NIC) - 1.5 * rtt).abs() < 1e-12);
+        let udt = Protocol::udt();
+        // UDT: one handshake RTT + the fixed DAIMD ramp allowance.
+        assert!((udt.transfer_overhead(0.0, rtt, NIC) - 3.0 * rtt).abs() < 1e-12);
+        // And the analytic transfer time adds no bandwidth term.
+        assert_eq!(tcp.transfer_time(0.0, rtt, NIC), tcp.transfer_overhead(0.0, rtt, NIC));
+        assert_eq!(udt.transfer_time(0.0, rtt, NIC), udt.transfer_overhead(0.0, rtt, NIC));
+    }
+
+    #[test]
     fn setup_overhead_orders_gmp_before_tcp() {
         let rtt = 0.022;
         assert!(control_message_latency(rtt, true) < control_message_latency(rtt, false));
