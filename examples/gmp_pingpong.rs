@@ -32,7 +32,9 @@ fn main() {
     let t0 = Instant::now();
     for _ in 0..iters {
         let t = Instant::now();
-        client.call(addr, "ping", b"ping-payload-32-bytes-of-control", Duration::from_secs(1)).unwrap();
+        client
+            .call(addr, "ping", b"ping-payload-32-bytes-of-control", Duration::from_secs(1))
+            .unwrap();
         lat_us.push(t.elapsed().as_secs_f64() * 1e6);
     }
     let wall = t0.elapsed().as_secs_f64();

@@ -34,7 +34,9 @@ fn main() {
     let seg_records: u64 = 671_088; // 64 MB segments
     let segs: Vec<Segment> = nodes
         .iter()
-        .flat_map(|&n| (0..3).map(move |_| Segment { node: n, bytes: seg_records * 100, records: seg_records }))
+        .flat_map(|&n| {
+            (0..3).map(move |_| Segment { node: n, bytes: seg_records * 100, records: seg_records })
+        })
         .collect();
     master.register_file("demo", segs);
 
@@ -59,7 +61,8 @@ fn main() {
     while done.borrow().is_none() && t < 600.0 {
         t += 10.0;
         eng.run_until(t);
-        println!("\n— simulated t = {t:.0}s — (testbed cpu {:.0}%)", mon.borrow().testbed_cpu() * 100.0);
+        let cpu = mon.borrow().testbed_cpu() * 100.0;
+        println!("\n— simulated t = {t:.0}s — (testbed cpu {cpu:.0}%)");
         print!("{}", render_heatmap(&mon.borrow(), Metric::Network, true));
     }
     mon.borrow_mut().disable();

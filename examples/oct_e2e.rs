@@ -69,7 +69,8 @@ fn main() {
 
     // Sphere dataflow, pure-Rust aggregator.
     let t3 = std::time::Instant::now();
-    let sphere_cpu = execute_malstone_with(&shards, 2 * nodes, s, w, SECONDS_PER_WEEK, cpu_aggregator);
+    let sphere_cpu =
+        execute_malstone_with(&shards, 2 * nodes, s, w, SECONDS_PER_WEEK, cpu_aggregator);
     let sphere_cpu_dt = t3.elapsed().as_secs_f64();
     assert_eq!(sphere_cpu, oracle, "sphere(cpu) diverged from oracle");
     println!("[4] sphere execute (rust aggregator): {:.2}s ✓ equals oracle", sphere_cpu_dt);
@@ -94,7 +95,10 @@ fn main() {
     } else {
         let rb = oracle.ratio_b();
         let nonzero = rb.iter().filter(|&&x| x > 0.0).count();
-        println!("[5] PJRT kernel path skipped; oracle MalStone-B series: {}×{} plane, {nonzero} nonzero cells", s, w);
+        println!(
+            "[5] PJRT kernel path skipped; oracle MalStone-B series: {}×{} plane, {nonzero} nonzero cells",
+            s, w
+        );
     }
 
     // Paper-scale simulated evaluation through the scenario registry.

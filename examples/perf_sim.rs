@@ -7,7 +7,12 @@ fn main() {
     let t0 = Instant::now();
     eng.run();
     let dt = t0.elapsed().as_secs_f64();
-    println!("engine: {} events in {:.2}s = {:.2}M events/s", eng.executed(), dt, eng.executed() as f64 / dt / 1e6);
+    println!(
+        "engine: {} events in {:.2}s = {:.2}M events/s",
+        eng.executed(),
+        dt,
+        eng.executed() as f64 / dt / 1e6
+    );
 }
 fn chain(eng: &mut Engine, t: f64, left: u32) {
     if left == 0 { return; }

@@ -22,7 +22,13 @@ fn main() {
             std::process::exit(1);
         }
     };
-    println!("PJRT platform: {}; batch {}, planes {}×{}", k.platform(), k.meta.batch, k.meta.num_sites, k.meta.num_weeks);
+    println!(
+        "PJRT platform: {}; batch {}, planes {}×{}",
+        k.platform(),
+        k.meta.batch,
+        k.meta.num_sites,
+        k.meta.num_weeks
+    );
 
     let n = 1_000_000usize;
     let mut rng = Rng::new(11);
@@ -58,7 +64,12 @@ fn main() {
     let rust_dt = t1.elapsed().as_secs_f64() / reps as f64;
 
     println!("=== {n} records/run, {reps} runs ===");
-    println!("pjrt pallas-hist: {:.1} ms  ({:.2}M rec/s, {} executions)", pjrt_dt * 1e3, n as f64 / pjrt_dt / 1e6, k.hist_calls.borrow());
+    println!(
+        "pjrt pallas-hist: {:.1} ms  ({:.2}M rec/s, {} executions)",
+        pjrt_dt * 1e3,
+        n as f64 / pjrt_dt / 1e6,
+        k.hist_calls.borrow()
+    );
     println!("rust scatter-add: {:.1} ms  ({:.2}M rec/s)", rust_dt * 1e3, n as f64 / rust_dt / 1e6);
     println!(
         "note: interpret=True Pallas on CPU-PJRT measures the *dataflow*, not TPU \

@@ -9,7 +9,8 @@
 use oct::coordinator::{find_set, format_checks, format_reports, ScenarioRunner};
 
 fn main() {
-    let scale: u64 = std::env::var("OCT_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
+    let scale: u64 =
+        std::env::var("OCT_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
     let set = find_set("table1").expect("table1 set registered").scaled_down(scale);
     let t0 = std::time::Instant::now();
     let reports = ScenarioRunner::new().run_all(&set.scenarios);
@@ -33,7 +34,9 @@ fn main() {
     };
     let factor_a = sim("hadoop-mapreduce", "A") / sim("sector-sphere", "A");
     let factor_b = sim("hadoop-mapreduce", "B") / sim("sector-sphere", "B");
-    println!("sector vs hadoop-MR speedup: A {factor_a:.1}× (paper 13.5×), B {factor_b:.1}× (paper 19.2×)");
+    println!(
+        "sector vs hadoop-MR speedup: A {factor_a:.1}× (paper 13.5×), B {factor_b:.1}× (paper 19.2×)"
+    );
     for r in &reports {
         if let Some(ratio) = r.paper_ratio() {
             println!("  {}: within {:.0}% of paper", r.scenario, (ratio - 1.0).abs() * 100.0);

@@ -9,7 +9,8 @@
 use oct::coordinator::{find_set, format_checks, format_reports, wide_area_penalty, ScenarioRunner};
 
 fn main() {
-    let scale: u64 = std::env::var("OCT_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
+    let scale: u64 =
+        std::env::var("OCT_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
     let set = find_set("table2").expect("table2 set registered").scaled_down(scale);
     let t0 = std::time::Instant::now();
     let reports = ScenarioRunner::new().run_all(&set.scenarios);

@@ -78,8 +78,11 @@ impl Config {
             if key.is_empty() {
                 return Err(format!("line {}: empty key", lineno + 1));
             }
-            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
-            values.insert(full, parse_value(val.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?);
+            let full =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let value =
+                parse_value(val.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            values.insert(full, value);
         }
         Ok(Config { values })
     }

@@ -12,7 +12,12 @@
 //! - [`runner`]: [`ScenarioRunner`] executes any scenario on the
 //!   simulated substrate and returns a structured, JSON-serializable
 //!   [`RunReport`] (simulated seconds, per-site flow stats, monitor
-//!   summary, paper reference).
+//!   summary, paper reference; ops-enabled runs add an
+//!   [`crate::ops::OpsReport`] with detection latency, telemetry
+//!   overhead, and the alert log). Scenarios may carry a
+//!   [`crate::ops::FaultPlan`] — node crashes, NIC degradations,
+//!   lightpath flaps — applied mid-run through the live substrate
+//!   hooks, with the [`crate::ops`] plane detecting and self-healing.
 //! - [`registry`]: named [`ScenarioSet`]s — `table1`/`table2` as
 //!   declarative cross-products plus sweeps (the §7 `interop`
 //!   compositions, scale ladder, local-vs-wide-area, site dropout) with

@@ -21,6 +21,9 @@ pub enum Op {
     ConnectSites { a: usize, b: usize, gbps: f64, rtt_ms: f64 },
     SetWanCapacity { a: usize, b: usize, gbps: f64 },
     DrainNode { node: usize },
+    /// Return a drained node to service (the inverse of `DrainNode`):
+    /// repaired hardware re-enters the pool.
+    UndrainNode { node: usize },
 }
 
 /// Builds and evolves testbed topologies.
@@ -39,7 +42,12 @@ impl Default for Provisioner {
 
 impl Provisioner {
     pub fn new() -> Self {
-        Provisioner { topo: Topology::new(), spec: NodeSpec::default(), log: Vec::new(), drained: Vec::new() }
+        Provisioner {
+            topo: Topology::new(),
+            spec: NodeSpec::default(),
+            log: Vec::new(),
+            drained: Vec::new(),
+        }
     }
 
     /// Start from the paper's Figure-2 testbed.
@@ -112,6 +120,7 @@ impl Provisioner {
             Op::ConnectSites { a, b, gbps, rtt_ms } => self.connect_sites(*a, *b, *gbps, *rtt_ms),
             Op::SetWanCapacity { a, b, gbps } => self.set_wan_capacity(*a, *b, *gbps),
             Op::DrainNode { node } => self.drain_node(*node),
+            Op::UndrainNode { node } => self.undrain_node(*node),
         }
     }
 
@@ -134,6 +143,14 @@ impl Provisioner {
         if !self.drained.contains(&NodeId(node)) {
             self.drained.push(NodeId(node));
         }
+    }
+
+    /// Return a node to service — the inverse of
+    /// [`Provisioner::drain_node`]. Idempotent (undraining a node that
+    /// was never drained only records the intent).
+    pub fn undrain_node(&mut self, node: usize) {
+        self.log.push(Op::UndrainNode { node });
+        self.drained.retain(|&n| n != NodeId(node));
     }
 
     pub fn drained(&self) -> &[NodeId] {
@@ -175,7 +192,8 @@ mod tests {
 
     #[test]
     fn from_config_builds_requested_shape() {
-        let cfg = Config::parse("[testbed]\nsites = 2\nnodes_per_rack = 4\nwan_gbps = 1.0\n").unwrap();
+        let cfg =
+            Config::parse("[testbed]\nsites = 2\nnodes_per_rack = 4\nwan_gbps = 1.0\n").unwrap();
         let p = Provisioner::from_config(&cfg);
         assert_eq!(p.topology().sites.len(), 2);
         assert_eq!(p.topology().num_nodes(), 8);
@@ -270,6 +288,40 @@ mod tests {
         // Drains and the log itself replay too.
         assert_eq!(r.drained(), p.drained());
         assert_eq!(r.log(), p.log());
+    }
+
+    #[test]
+    fn drain_undrain_round_trip_replays() {
+        let mut p = Provisioner::new();
+        p.add_site("x");
+        p.add_rack(0, 4);
+        p.drain_node(1);
+        p.drain_node(2);
+        p.undrain_node(1);
+        assert_eq!(p.drained(), &[NodeId(2)]);
+        // The round trip is fully recorded and replays to the same state.
+        let r = Provisioner::replay(p.log());
+        assert_eq!(r.drained(), p.drained());
+        assert_eq!(r.log(), p.log());
+        assert!(r.log().contains(&Op::UndrainNode { node: 1 }));
+        // Undrain of a never-drained node: intent logged, state unchanged.
+        let mut q = Provisioner::new();
+        q.add_site("y");
+        q.add_rack(0, 2);
+        q.undrain_node(0);
+        assert!(q.drained().is_empty());
+        let rq = Provisioner::replay(q.log());
+        assert!(rq.drained().is_empty());
+        assert_eq!(rq.log(), q.log());
+        // Drain → undrain → drain ends drained, under replay too.
+        let mut z = Provisioner::new();
+        z.add_site("z");
+        z.add_rack(0, 2);
+        z.drain_node(0);
+        z.undrain_node(0);
+        z.drain_node(0);
+        assert_eq!(z.drained(), &[NodeId(0)]);
+        assert_eq!(Provisioner::replay(z.log()).drained(), z.drained());
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //!
 //! List with `oct scenarios`; run with `oct scenarios <set> [scale]`.
 
+use crate::ops::{AlertKind, FaultPlan, OpsConfig, OpsReport};
+
 use super::runner::{flow_churn_concurrency, wide_area_penalty, RunReport, ShapeCheck};
 use super::scenario::{Framework, Placement, Scenario, Testbed, TopologySpec, Variant, WorkloadSpec};
 
@@ -56,6 +58,7 @@ pub fn scenario_sets() -> Vec<ScenarioSet> {
         local_vs_wan_set(),
         site_dropout_set(),
         flow_churn_set(),
+        ops_set(),
     ]
 }
 
@@ -104,7 +107,11 @@ fn table1_set() -> ScenarioSet {
 
 fn check_table1(r: &[RunReport]) -> Vec<ShapeCheck> {
     if r.len() != 6 {
-        return vec![ShapeCheck::new("table1 arity", false, format!("expected 6 reports, got {}", r.len()))];
+        return vec![ShapeCheck::new(
+            "table1 arity",
+            false,
+            format!("expected 6 reports, got {}", r.len()),
+        )];
     }
     let t = |i: usize| r[i].simulated_secs;
     let (mr_a, mr_b, st_a, st_b, sp_a, sp_b) = (t(0), t(1), t(2), t(3), t(4), t(5));
@@ -176,7 +183,11 @@ fn table2_set() -> ScenarioSet {
 
 fn check_table2(r: &[RunReport]) -> Vec<ShapeCheck> {
     if r.len() != 6 {
-        return vec![ShapeCheck::new("table2 arity", false, format!("expected 6 reports, got {}", r.len()))];
+        return vec![ShapeCheck::new(
+            "table2 arity",
+            false,
+            format!("expected 6 reports, got {}", r.len()),
+        )];
     }
     let r3 = wide_area_penalty(&r[0], &r[1]);
     let r1 = wide_area_penalty(&r[2], &r[3]);
@@ -200,7 +211,12 @@ fn check_table2(r: &[RunReport]) -> Vec<ShapeCheck> {
         ShapeCheck::new(
             "sector out-penalized by both hadoop rows",
             sec < r1 && sec < r3,
-            format!("sector {:+.1}% vs r1 {:+.1}% / r3 {:+.1}%", sec * 100.0, r1 * 100.0, r3 * 100.0),
+            format!(
+                "sector {:+.1}% vs r1 {:+.1}% / r3 {:+.1}%",
+                sec * 100.0,
+                r1 * 100.0,
+                r3 * 100.0
+            ),
         ),
         ShapeCheck::new(
             "1-replica hadoop faster than 3-replica",
@@ -264,7 +280,11 @@ fn interop_set() -> ScenarioSet {
 
 fn check_interop(r: &[RunReport]) -> Vec<ShapeCheck> {
     if r.len() != 4 {
-        return vec![ShapeCheck::new("interop arity", false, format!("expected 4 reports, got {}", r.len()))];
+        return vec![ShapeCheck::new(
+            "interop arity",
+            false,
+            format!("expected 4 reports, got {}", r.len()),
+        )];
     }
     let (mr, kfs, hos, sphere) =
         (r[0].simulated_secs, r[1].simulated_secs, r[2].simulated_secs, r[3].simulated_secs);
@@ -313,7 +333,10 @@ fn check_interop(r: &[RunReport]) -> Vec<ShapeCheck> {
         ShapeCheck::new(
             "every interop run crossed the WAN",
             r.iter().all(|rep| rep.wan_bytes > 0.0),
-            format!("{:.2e}/{:.2e}/{:.2e}/{:.2e}B", r[0].wan_bytes, r[1].wan_bytes, r[2].wan_bytes, r[3].wan_bytes),
+            format!(
+                "{:.2e}/{:.2e}/{:.2e}/{:.2e}B",
+                r[0].wan_bytes, r[1].wan_bytes, r[2].wan_bytes, r[3].wan_bytes
+            ),
         ),
     ]
 }
@@ -344,7 +367,11 @@ fn scale_ladder_set() -> ScenarioSet {
 
 fn check_scale_ladder(r: &[RunReport]) -> Vec<ShapeCheck> {
     if r.len() != 3 {
-        return vec![ShapeCheck::new("ladder arity", false, format!("expected 3 reports, got {}", r.len()))];
+        return vec![ShapeCheck::new(
+            "ladder arity",
+            false,
+            format!("expected 3 reports, got {}", r.len()),
+        )];
     }
     let (t1, t2, t3) = (r[0].simulated_secs, r[1].simulated_secs, r[2].simulated_secs);
     let ratio = t3 / t1;
@@ -391,7 +418,11 @@ fn local_vs_wan_set() -> ScenarioSet {
 
 fn check_local_vs_wan(r: &[RunReport]) -> Vec<ShapeCheck> {
     if r.len() != 2 {
-        return vec![ShapeCheck::new("pair arity", false, format!("expected 2 reports, got {}", r.len()))];
+        return vec![ShapeCheck::new(
+            "pair arity",
+            false,
+            format!("expected 2 reports, got {}", r.len()),
+        )];
     }
     let pen = wide_area_penalty(&r[0], &r[1]);
     vec![
@@ -438,13 +469,20 @@ fn site_dropout_set() -> ScenarioSet {
 
 fn check_site_dropout(r: &[RunReport]) -> Vec<ShapeCheck> {
     if r.len() != 2 {
-        return vec![ShapeCheck::new("dropout arity", false, format!("expected 2 reports, got {}", r.len()))];
+        return vec![ShapeCheck::new(
+            "dropout arity",
+            false,
+            format!("expected 2 reports, got {}", r.len()),
+        )];
     }
     let ratio = r[1].simulated_secs / r[0].simulated_secs;
     vec![ShapeCheck::new(
         "dropping a site slows the run (more work per node)",
         ratio > 1.05,
-        format!("{:.0}s on 21 nodes vs {:.0}s on 28 ({ratio:.2}×)", r[1].simulated_secs, r[0].simulated_secs),
+        format!(
+            "{:.0}s on 21 nodes vs {:.0}s on 28 ({ratio:.2}×)",
+            r[1].simulated_secs, r[0].simulated_secs
+        ),
     )]
 }
 
@@ -477,7 +515,11 @@ fn flow_churn_set() -> ScenarioSet {
 
 fn check_flow_churn(r: &[RunReport]) -> Vec<ShapeCheck> {
     if r.len() != 1 {
-        return vec![ShapeCheck::new("churn arity", false, format!("expected 1 report, got {}", r.len()))];
+        return vec![ShapeCheck::new(
+            "churn arity",
+            false,
+            format!("expected 1 report, got {}", r.len()),
+        )];
     }
     let r = &r[0];
     let metric = |k: &str| r.metric(k).unwrap_or(f64::NAN);
@@ -487,7 +529,11 @@ fn check_flow_churn(r: &[RunReport]) -> Vec<ShapeCheck> {
         ShapeCheck::new(
             "every transfer completed",
             metric("flows") == total as f64 && metric("net_completions") == total as f64,
-            format!("{:.0} of {total} transfers, {:.0} network completions", metric("flows"), metric("net_completions")),
+            format!(
+                "{:.0} of {total} transfers, {:.0} network completions",
+                metric("flows"),
+                metric("net_completions")
+            ),
         ),
         ShapeCheck::new(
             // `peak_active` is FlowNet's own exact high-water mark (not
@@ -512,6 +558,179 @@ fn check_flow_churn(r: &[RunReport]) -> Vec<ShapeCheck> {
             "simulated time advanced",
             r.simulated_secs > 0.0,
             format!("{:.1}s simulated", r.simulated_secs),
+        ),
+    ]
+}
+
+/// The operations-plane family: closed-loop failure handling under the
+/// in-band monitoring pipeline. Four scenarios, one axis each:
+///
+/// 1. **crash-rerun** — MalStone-A on Hadoop with a mid-map-phase node
+///    crash: silence → `Suspect` → `Dead` → drain + re-execute, and the
+///    job still completes.
+/// 2. **healthy** — the fault-free twin: the false-positive and
+///    telemetry-overhead baseline (and the "what did the crash cost?"
+///    reference time).
+/// 3. **lightpath-flap** — the shared wave drops to 5% mid-run; the
+///    aggregators' capacity probes catch it and remediation re-provisions
+///    the wave to nominal (dynamic lightpath provisioning, §2.1).
+/// 4. **nic-straggler** — one node's NIC degrades under a flow-churn
+///    load; the central detectors flag it as a straggler (paper §8's
+///    "one or two nodes with slightly inferior performance").
+fn ops_set() -> ScenarioSet {
+    let scenarios = vec![
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(5))
+            .framework(Framework::HadoopMr)
+            .workload(WorkloadSpec::malstone_a(10_000_000_000))
+            // Node 7 (site 1, not an aggregator) dies ~7% into the run —
+            // well inside job 1's map phase at every scale.
+            .faults(FaultPlan::new().node_crash(2000.0, 7))
+            .name("ops/crash-rerun/hadoop-mr")
+            .build(),
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(5))
+            .framework(Framework::HadoopMr)
+            .workload(WorkloadSpec::malstone_a(10_000_000_000))
+            .ops(OpsConfig::default())
+            .name("ops/healthy/hadoop-mr")
+            .build(),
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(5))
+            .framework(Framework::SectorSphere)
+            .workload(WorkloadSpec::malstone_a(10_000_000_000))
+            .faults(FaultPlan::new().lightpath_flap(300.0, 0.05))
+            .name("ops/lightpath-flap/sector-sphere")
+            .build(),
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(5))
+            .framework(Framework::FlowChurn)
+            // records = transfers for the churn driver.
+            .workload(WorkloadSpec::malstone_a(240_000))
+            .faults(FaultPlan::new().nic_degrade(500.0, 3, 0.15))
+            .name("ops/nic-straggler/flow-churn")
+            .build(),
+    ];
+    ScenarioSet {
+        name: "ops",
+        description: "operations plane: crash→detect→drain→re-execute, lightpath self-healing, straggler flagging",
+        scenarios,
+        check: Some(check_ops),
+    }
+}
+
+fn check_ops(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 4 {
+        return vec![ShapeCheck::new(
+            "ops arity",
+            false,
+            format!("expected 4 reports, got {}", r.len()),
+        )];
+    }
+    let (crash, healthy, flap, churn) = (&r[0], &r[1], &r[2], &r[3]);
+    fn ops(rep: &RunReport) -> &OpsReport {
+        rep.ops.as_ref().expect("ops scenario without ops report")
+    }
+    let has = |rep: &RunReport, kind: AlertKind| ops(rep).alerts.iter().any(|a| a.kind == kind);
+    let co = ops(crash);
+    let ho = ops(healthy);
+    let bound = 8.0 * co.heartbeat_interval;
+    vec![
+        ShapeCheck::new(
+            "malstone-A completes despite a mid-run node crash",
+            crash.simulated_secs > 0.0 && crash.metric("job2_makespan").is_some(),
+            format!("{:.0}s simulated, both chained jobs reported", crash.simulated_secs),
+        ),
+        ShapeCheck::new(
+            "exactly the crashed node is declared dead; the healthy twin sees none",
+            co.crashed_nodes == 1
+                && co.dead_declared == 1
+                && co.false_dead == 0
+                && ho.dead_declared == 0
+                && ho.false_dead == 0,
+            format!(
+                "crash run {}/{} dead (false {}), healthy run {} dead",
+                co.dead_declared, co.crashed_nodes, co.false_dead, ho.dead_declared
+            ),
+        ),
+        ShapeCheck::new(
+            "detection latency bounded by k·heartbeat",
+            co.detection_latency_max > 0.0 && co.detection_latency_max <= bound,
+            format!(
+                "{:.1}s ≤ {bound:.1}s (missed-beat thresholds + relay + sweep)",
+                co.detection_latency_max
+            ),
+        ),
+        ShapeCheck::new(
+            "the dead worker's lost tasks re-execute on survivors",
+            co.reexecuted_tasks >= 1
+                && crash.metric("reexecuted_tasks").unwrap_or(0.0) >= 1.0
+                && co.remediation_ops >= 1,
+            format!(
+                "{} task(s) re-executed, {} remediation op(s)",
+                co.reexecuted_tasks, co.remediation_ops
+            ),
+        ),
+        ShapeCheck::new(
+            "losing a node costs time: crash run slower than its healthy twin",
+            crash.simulated_secs > healthy.simulated_secs,
+            format!("{:.0}s vs {:.0}s", crash.simulated_secs, healthy.simulated_secs),
+        ),
+        ShapeCheck::new(
+            "telemetry is real WAN traffic but ≪ workload WAN bytes",
+            [crash, healthy].iter().all(|rep| {
+                let o = ops(rep);
+                o.telemetry_wan_bytes > 0.0 && o.telemetry_wan_bytes < 0.01 * rep.wan_bytes
+            }),
+            format!(
+                "crash {:.2e}B of {:.2e}B, healthy {:.2e}B of {:.2e}B",
+                co.telemetry_wan_bytes, crash.wan_bytes, ho.telemetry_wan_bytes, healthy.wan_bytes
+            ),
+        ),
+        ShapeCheck::new(
+            "lightpath flap detected and self-healed mid-run",
+            has(flap, AlertKind::WanDegraded)
+                && has(flap, AlertKind::WanRestored)
+                && ops(flap).remediation_ops >= 1
+                && flap.simulated_secs > 0.0,
+            format!(
+                "{} alert(s), {} remediation op(s), {:.0}s simulated",
+                ops(flap).alerts.len(),
+                ops(flap).remediation_ops,
+                flap.simulated_secs
+            ),
+        ),
+        ShapeCheck::new(
+            // PerSite(5) on the 2009 testbed: placed index 3 is node003.
+            "the degraded NIC is flagged as a straggler by name",
+            ops(churn)
+                .alerts
+                .iter()
+                .any(|a| a.kind == AlertKind::Straggler && a.subject == "node003"),
+            format!(
+                "straggler alerts: {:?}",
+                ops(churn)
+                    .alerts
+                    .iter()
+                    .filter(|a| a.kind == AlertKind::Straggler)
+                    .map(|a| a.subject.as_str())
+                    .collect::<Vec<_>>()
+            ),
+        ),
+        ShapeCheck::new(
+            "churn completes every transfer under the degraded NIC",
+            churn.metric("flows") == Some(churn.total_records as f64)
+                && ops(churn).dead_declared == 0,
+            format!(
+                "{:.0} of {} transfers, {} dead declared",
+                churn.metric("flows").unwrap_or(f64::NAN),
+                churn.total_records,
+                ops(churn).dead_declared
+            ),
         ),
     ]
 }
@@ -585,6 +804,16 @@ mod tests {
     }
 
     #[test]
+    fn ops_shape_holds() {
+        // 1/100 scale: the crash lands at t=20s, comfortably inside the
+        // ~76s map phase; the flap at t=3s inside the ~20s sphere run.
+        let (set, reports) = run_set("ops", 100);
+        assert_eq!(reports.len(), 4);
+        assert!(reports.iter().all(|r| r.ops.is_some()));
+        assert_checks_pass(&set, &reports);
+    }
+
+    #[test]
     fn registry_lists_expected_sets() {
         let names: Vec<&str> = scenario_sets().iter().map(|s| s.name).collect();
         for expect in [
@@ -595,6 +824,7 @@ mod tests {
             "local-vs-wan",
             "site-dropout",
             "flow-churn",
+            "ops",
         ] {
             assert!(names.contains(&expect), "missing set {expect}");
         }

@@ -9,9 +9,10 @@
 //! metrics, and the paper reference carried by the scenario.
 
 use std::cell::RefCell;
+use std::collections::HashSet;
 use std::rc::Rc;
 
-use crate::framework::{HdfsStorage, KfsStorage, SectorStorage, StorageModel};
+use crate::framework::{DataflowControl, HdfsStorage, KfsStorage, SectorStorage, StorageModel};
 use crate::hadoop::hdfs::{HdfsConfig, Namenode};
 use crate::hadoop::mapreduce::{malstone_jobs, uniform_shards, JobReport, MapReduceEngine};
 use crate::hadoop::FrameworkParams;
@@ -19,6 +20,7 @@ use crate::malstone::record::RECORD_BYTES;
 use crate::monitor::Monitor;
 use crate::net::topology::LinkKind;
 use crate::net::{Cluster, FlowNet, LinkId, NodeId, Topology};
+use crate::ops::{Fault, OpsConfig, OpsPlane, OpsReport};
 use crate::sector::master::{SectorMaster, Segment};
 use crate::sector::sphere::SphereReport;
 use crate::sector::SphereEngine;
@@ -44,6 +46,11 @@ pub struct MonitorSummary {
     pub samples: u64,
     /// Nodes whose NIC series saw any traffic.
     pub busy_nodes: usize,
+    /// Median per-node NIC rate across busy nodes, bytes/s (the hotspot
+    /// detector's baseline).
+    pub nic_rate_p50: f64,
+    /// 99th-percentile per-node NIC rate across busy nodes, bytes/s.
+    pub nic_rate_p99: f64,
 }
 
 /// The structured result of one scenario run.
@@ -67,6 +74,9 @@ pub struct RunReport {
     /// Engine-specific metrics (sorted by key).
     pub metrics: Vec<(String, f64)>,
     pub monitor: Option<MonitorSummary>,
+    /// Operations-plane results (detection latency, telemetry overhead,
+    /// alerts, remediation) for ops-enabled runs.
+    pub ops: Option<OpsReport>,
 }
 
 impl RunReport {
@@ -100,7 +110,13 @@ impl RunReport {
             Some(m) => obj(vec![
                 ("samples", Json::Num(m.samples as f64)),
                 ("busy_nodes", Json::Num(m.busy_nodes as f64)),
+                ("nic_rate_p50", Json::Num(m.nic_rate_p50)),
+                ("nic_rate_p99", Json::Num(m.nic_rate_p99)),
             ]),
+            None => Json::Null,
+        };
+        let ops = match &self.ops {
+            Some(o) => o.to_json(),
             None => Json::Null,
         };
         obj(vec![
@@ -117,6 +133,7 @@ impl RunReport {
             ("site_flows", Json::Arr(flows)),
             ("metrics", metrics),
             ("monitor", monitor),
+            ("ops", ops),
         ])
     }
 
@@ -159,7 +176,13 @@ impl RunReport {
             Some(m) => Some(MonitorSummary {
                 samples: num(m, "samples")? as u64,
                 busy_nodes: num(m, "busy_nodes")? as usize,
+                nic_rate_p50: num(m, "nic_rate_p50")?,
+                nic_rate_p99: num(m, "nic_rate_p99")?,
             }),
+        };
+        let ops = match j.get("ops") {
+            None | Some(Json::Null) => None,
+            Some(o) => Some(OpsReport::from_json(o)?),
         };
         let paper_secs = match j.get("paper_secs") {
             None | Some(Json::Null) => None,
@@ -179,6 +202,7 @@ impl RunReport {
             site_flows,
             metrics,
             monitor,
+            ops,
         })
     }
 }
@@ -235,7 +259,8 @@ pub fn format_reports(reports: &[RunReport]) -> String {
 pub fn format_checks(checks: &[ShapeCheck]) -> String {
     let mut s = String::new();
     for c in checks {
-        s.push_str(&format!("{} {} — {}\n", if c.pass { "PASS" } else { "FAIL" }, c.name, c.detail));
+        let verdict = if c.pass { "PASS" } else { "FAIL" };
+        s.push_str(&format!("{} {} — {}\n", verdict, c.name, c.detail));
     }
     s
 }
@@ -250,11 +275,12 @@ enum Outcome {
 #[derive(Debug, Clone, Default)]
 pub struct ScenarioRunner {
     monitor_interval: Option<f64>,
+    ops_override: Option<OpsConfig>,
 }
 
 impl ScenarioRunner {
     pub fn new() -> ScenarioRunner {
-        ScenarioRunner { monitor_interval: None }
+        ScenarioRunner::default()
     }
 
     /// Sample the monitoring system every `interval` simulated seconds
@@ -262,6 +288,13 @@ impl ScenarioRunner {
     pub fn with_monitor(mut self, interval: f64) -> ScenarioRunner {
         assert!(interval > 0.0);
         self.monitor_interval = Some(interval);
+        self
+    }
+
+    /// Install the operations plane on every run with this configuration,
+    /// overriding whatever the scenario carries.
+    pub fn with_ops(mut self, cfg: OpsConfig) -> ScenarioRunner {
+        self.ops_override = Some(cfg);
         self
     }
 
@@ -276,10 +309,29 @@ impl ScenarioRunner {
             Monitor::install(&m, &mut eng, &cluster.net, cluster.pools.clone());
             m
         });
+        // The live dataflow's failure surface, filled in as jobs start
+        // (chained jobs swap in their own control).
+        let control: Rc<RefCell<Option<DataflowControl>>> = Rc::new(RefCell::new(None));
+        // A fault plan implies the ops plane (something must detect and
+        // heal); an explicit config installs it even fault-free.
+        let ops_cfg = self
+            .ops_override
+            .clone()
+            .or_else(|| sc.ops.clone())
+            .or_else(|| (!sc.fault_plan.is_empty()).then(OpsConfig::default));
+        let ops = ops_cfg.map(|cfg| {
+            let plane = OpsPlane::install(&cluster, &nodes, cfg, &mut eng);
+            install_remediation(&plane, &cluster, &control);
+            plane
+        });
+        // Ground truth of crashed nodes (fault-plan side, independent of
+        // detection): chained jobs exclude them from their worker sets.
+        let failed: Rc<RefCell<HashSet<NodeId>>> = Rc::new(RefCell::new(HashSet::new()));
+        schedule_faults(sc, &cluster, &nodes, &mut eng, &ops, &control, &failed);
         let outcome: Rc<RefCell<Option<Outcome>>> = Rc::new(RefCell::new(None));
         match sc.framework {
             Framework::SectorSphere => {
-                start_sphere(&cluster, &nodes, &sc.workload, &mut eng, outcome.clone())
+                start_sphere(&cluster, &nodes, &sc.workload, &mut eng, outcome.clone(), &control)
             }
             Framework::FlowChurn => {
                 start_flow_churn(&cluster, &nodes, &sc.workload, &mut eng, outcome.clone())
@@ -287,26 +339,40 @@ impl ScenarioRunner {
             _ => {
                 let params = sc.framework.params();
                 let storage = build_storage(sc.framework, &cluster, &nodes, &params);
-                start_mapreduce(&cluster, &nodes, params, storage, &sc.workload, &mut eng, outcome.clone())
+                start_mapreduce(
+                    &cluster,
+                    &nodes,
+                    params,
+                    storage,
+                    &sc.workload,
+                    &mut eng,
+                    outcome.clone(),
+                    control.clone(),
+                    failed,
+                )
             }
         }
-        match &mon {
-            Some(m) => {
-                // The sampling loop reschedules itself forever, so advance
-                // in chunks until the workload lands, then let it drain.
-                let chunk = (self.monitor_interval.unwrap_or(1.0) * 64.0).max(60.0);
-                let mut t = eng.now();
-                // Even unscaled paper runs finish within ~1e5 simulated
-                // seconds; 1e8 is far past any legitimate scenario.
-                while outcome.borrow().is_none() {
-                    t += chunk;
-                    eng.run_until(t);
-                    assert!(t < 1e8, "scenario '{}' did not converge by t={t:.0}s", sc.name);
-                }
-                m.borrow_mut().disable();
-                eng.run();
+        if mon.is_some() || ops.is_some() {
+            // The sampling/ops loops reschedule themselves forever, so
+            // advance in chunks until the workload lands, then drain.
+            let chunk = (self.monitor_interval.unwrap_or(1.0) * 64.0).max(60.0);
+            let mut t = eng.now();
+            // Even unscaled paper runs finish within ~1e5 simulated
+            // seconds; 1e8 is far past any legitimate scenario.
+            while outcome.borrow().is_none() {
+                t += chunk;
+                eng.run_until(t);
+                assert!(t < 1e8, "scenario '{}' did not converge by t={t:.0}s", sc.name);
             }
-            None => eng.run(),
+            if let Some(m) = &mon {
+                m.borrow_mut().disable();
+            }
+            if let Some(o) = &ops {
+                o.borrow_mut().disable();
+            }
+            eng.run();
+        } else {
+            eng.run();
         }
         let out = outcome
             .borrow_mut()
@@ -344,6 +410,10 @@ impl ScenarioRunner {
                     "stolen_tasks".to_string(),
                     (job1.stolen_maps + job2.stolen_maps) as f64,
                 ));
+                metrics.push((
+                    "reexecuted_tasks".to_string(),
+                    (job1.reexecuted_tasks + job2.reexecuted_tasks) as f64,
+                ));
                 finished_at
             }
             Outcome::Sphere { finished_at, report } => {
@@ -360,6 +430,10 @@ impl ScenarioRunner {
                 metrics.push(("storage_read_bytes".to_string(), report.storage_read_bytes));
                 metrics.push(("storage_write_bytes".to_string(), report.storage_write_bytes));
                 metrics.push(("stolen_tasks".to_string(), report.stolen_segments as f64));
+                metrics.push((
+                    "reexecuted_tasks".to_string(),
+                    report.reexecuted_segments as f64,
+                ));
                 finished_at
             }
             Outcome::FlowChurn { finished_at, flows, peak_inflight, peak_active } => {
@@ -415,8 +489,15 @@ impl ScenarioRunner {
                 .iter()
                 .filter(|&&n| m.node_nic_rate(n, usize::MAX) > 0.0)
                 .count();
-            MonitorSummary { samples: m.samples_taken(), busy_nodes: busy }
+            let (nic_rate_p50, nic_rate_p99) = m.nic_rate_quantiles(usize::MAX);
+            MonitorSummary {
+                samples: m.samples_taken(),
+                busy_nodes: busy,
+                nic_rate_p50,
+                nic_rate_p99,
+            }
         });
+        let ops_report = ops.map(|o| o.borrow().report());
 
         RunReport {
             scenario: sc.name.clone(),
@@ -432,6 +513,7 @@ impl ScenarioRunner {
             site_flows,
             metrics,
             monitor,
+            ops: ops_report,
         }
     }
 
@@ -469,7 +551,110 @@ fn build_storage(
     }
 }
 
-/// Run the two chained MalStone MapReduce jobs over `storage`.
+/// Wire the ops plane's closed-loop remediation into the live substrate:
+/// a `Dead` verdict heals the running dataflow (drain + re-execute its
+/// lost tasks on survivors), and a degraded-wave verdict re-provisions
+/// the shared wave back to nominal capacity.
+fn install_remediation(
+    plane: &Rc<RefCell<OpsPlane>>,
+    cluster: &Cluster,
+    control: &Rc<RefCell<Option<DataflowControl>>>,
+) {
+    let ctrl = control.clone();
+    plane.borrow_mut().set_dead_hook(Box::new(move |eng, node| {
+        let c = ctrl.borrow().clone();
+        match c {
+            Some(c) => c.heal_node(eng, node),
+            None => 0,
+        }
+    }));
+    // Restore targets come from the plane's own install-time snapshot, so
+    // detection threshold and remediation target can never disagree.
+    let nominal = plane.borrow().wan_nominals().to_vec();
+    if !nominal.is_empty() {
+        let net = cluster.net.clone();
+        plane.borrow_mut().set_wan_restore_hook(Box::new(move |eng| {
+            for &(l, cap) in &nominal {
+                FlowNet::set_capacity(&net, eng, l, cap);
+            }
+        }));
+    }
+}
+
+/// Every WAN link with its current (nominal, pre-fault) capacity.
+fn wan_capacities(cluster: &Cluster) -> Vec<(LinkId, f64)> {
+    let netb = cluster.net.borrow();
+    cluster
+        .topo
+        .links
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.kind == LinkKind::Wan)
+        .map(|(i, _)| (LinkId(i), netb.capacity(LinkId(i))))
+        .collect()
+}
+
+/// Schedule the scenario's fault plan onto the engine: crashes darken the
+/// node's sensor and doom the dataflow's in-flight work; NIC and
+/// lightpath degradations retune fluid-network capacities mid-run.
+fn schedule_faults(
+    sc: &Scenario,
+    cluster: &Cluster,
+    nodes: &[NodeId],
+    eng: &mut Engine,
+    ops: &Option<Rc<RefCell<OpsPlane>>>,
+    control: &Rc<RefCell<Option<DataflowControl>>>,
+    failed: &Rc<RefCell<HashSet<NodeId>>>,
+) {
+    for ev in &sc.fault_plan.events {
+        match ev.fault {
+            Fault::NodeCrash { node } => {
+                assert!(node < nodes.len(), "crash target {node} outside the placement");
+                let n = nodes[node];
+                let plane = ops.as_ref().expect("a fault plan implies the ops plane").clone();
+                let ctrl = control.clone();
+                let failed = failed.clone();
+                eng.schedule_at(ev.at, move |eng| {
+                    failed.borrow_mut().insert(n);
+                    plane.borrow_mut().mark_crashed(n, eng.now());
+                    let c = ctrl.borrow().clone();
+                    if let Some(c) = c {
+                        c.crash_node(n);
+                    }
+                });
+            }
+            Fault::NicDegrade { node, factor } => {
+                assert!(node < nodes.len(), "degrade target {node} outside the placement");
+                let nd = cluster.topo.node(nodes[node]);
+                let (tx, rx) = (nd.nic_tx, nd.nic_rx);
+                let (ctx, crx) = {
+                    let netb = cluster.net.borrow();
+                    (netb.capacity(tx), netb.capacity(rx))
+                };
+                let net = cluster.net.clone();
+                eng.schedule_at(ev.at, move |eng| {
+                    FlowNet::set_capacity(&net, eng, tx, ctx * factor);
+                    FlowNet::set_capacity(&net, eng, rx, crx * factor);
+                });
+            }
+            Fault::LightpathFlap { factor } => {
+                let wan = wan_capacities(cluster);
+                assert!(!wan.is_empty(), "lightpath flap on a WAN-less topology");
+                let net = cluster.net.clone();
+                eng.schedule_at(ev.at, move |eng| {
+                    for &(l, cap) in &wan {
+                        FlowNet::set_capacity(&net, eng, l, cap * factor);
+                    }
+                });
+            }
+        }
+    }
+}
+
+/// Run the two chained MalStone MapReduce jobs over `storage`, publishing
+/// each job's [`DataflowControl`] so the ops plane can fail/heal workers
+/// mid-run.
+#[allow(clippy::too_many_arguments)]
 fn start_mapreduce(
     cluster: &Cluster,
     nodes: &[NodeId],
@@ -478,20 +663,37 @@ fn start_mapreduce(
     w: &WorkloadSpec,
     eng: &mut Engine,
     out: Rc<RefCell<Option<Outcome>>>,
+    control: Rc<RefCell<Option<DataflowControl>>>,
+    failed: Rc<RefCell<HashSet<NodeId>>>,
 ) {
     let shards = uniform_shards(nodes, w.total_records);
     let (job1, job2_of) =
         malstone_jobs(&params, nodes, &shards, w.variant.is_b(), 64 * 1024 * 1024);
     let cluster2 = cluster.clone();
     let storage2 = storage.clone();
-    MapReduceEngine::simulate_on(cluster, storage, eng, job1, move |eng, r1| {
-        let job2 = job2_of(&r1);
+    let control2 = control.clone();
+    let c1 = MapReduceEngine::simulate_on(cluster, storage, eng, job1, move |eng, r1| {
+        // The chained aggregate job is submitted against the testbed's
+        // live membership: a crashed node never re-registers. Its crash
+        // marks carry over so any job-1 output stranded on a dead box is
+        // re-read from a survivor (the storage-read redirect).
+        let mut job2 = job2_of(&r1);
+        let dead = failed.borrow().clone();
+        if !dead.is_empty() {
+            job2.nodes.retain(|n| !dead.contains(n));
+            assert!(!job2.nodes.is_empty(), "every worker crashed");
+        }
         let out2 = out.clone();
-        MapReduceEngine::simulate_on(&cluster2, storage2, eng, job2, move |eng, r2| {
+        let c2 = MapReduceEngine::simulate_on(&cluster2, storage2, eng, job2, move |eng, r2| {
             *out2.borrow_mut() =
                 Some(Outcome::Hadoop { finished_at: eng.now(), job1: r1, job2: r2 });
         });
+        for &n in &dead {
+            c2.crash_node(n);
+        }
+        *control2.borrow_mut() = Some(c2);
     });
+    *control.borrow_mut() = Some(c1);
 }
 
 /// How many transfers the flow-churn driver keeps in flight for a run of
@@ -609,10 +811,11 @@ fn start_sphere(
     w: &WorkloadSpec,
     eng: &mut Engine,
     out: Rc<RefCell<Option<Outcome>>>,
+    control: &Rc<RefCell<Option<DataflowControl>>>,
 ) {
     let mut master = SectorMaster::new(cluster.topo.clone());
     master.register_file("malstone", sector_segments(nodes, w.total_records));
-    SphereEngine::simulate(
+    let c = SphereEngine::simulate(
         cluster,
         &master,
         eng,
@@ -624,6 +827,7 @@ fn start_sphere(
             *out.borrow_mut() = Some(Outcome::Sphere { finished_at: eng.now(), report: r });
         },
     );
+    *control.borrow_mut() = Some(c);
 }
 
 /// Sector stores each node's shard as several 64 MB segments so SPE
@@ -760,11 +964,57 @@ mod tests {
 
     #[test]
     fn monitored_run_collects_samples() {
-        let rep =
-            ScenarioRunner::new().with_monitor(1.0).run(&smoke(Framework::SectorSphere, 20_000_000));
+        let runner = ScenarioRunner::new().with_monitor(1.0);
+        let rep = runner.run(&smoke(Framework::SectorSphere, 20_000_000));
         let m = rep.monitor.expect("monitor summary");
         assert!(m.samples > 0, "no samples over {:.1}s", rep.simulated_secs);
         assert!(m.busy_nodes > 0);
+        // The quantile rollup orders sanely over busy nodes.
+        assert!(m.nic_rate_p50 > 0.0, "p50 = {}", m.nic_rate_p50);
+        assert!(m.nic_rate_p99 >= m.nic_rate_p50);
+        let text = rep.to_json().to_string();
+        let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn node_crash_is_detected_healed_and_survived() {
+        use crate::ops::{AlertKind, FaultPlan};
+        let sc = Testbed::builder()
+            .framework(Framework::HadoopMr)
+            .workload(WorkloadSpec::malstone_a(50_000_000))
+            .faults(FaultPlan::new().node_crash(20.0, 7))
+            .name("ops-crash-smoke")
+            .build();
+        let rep = ScenarioRunner::new().run(&sc);
+        // MalStone completed despite the mid-run crash.
+        assert!(rep.simulated_secs > 20.0);
+        let ops = rep.ops.as_ref().expect("a fault plan implies an ops report");
+        assert_eq!(ops.crashed_nodes, 1);
+        assert_eq!(ops.dead_declared, 1);
+        assert_eq!(ops.false_dead, 0);
+        // Bounded detection: missed-heartbeat threshold + heartbeat phase
+        // + relay + check-tick granularity, in heartbeat units.
+        let bound = 8.0 * ops.heartbeat_interval;
+        assert!(
+            ops.detection_latency_max > 0.0 && ops.detection_latency_max <= bound,
+            "latency {} vs bound {bound}",
+            ops.detection_latency_max
+        );
+        // The dead worker's lost maps were re-executed on survivors.
+        assert!(ops.reexecuted_tasks >= 1, "nothing re-executed");
+        assert!(rep.metric("reexecuted_tasks").unwrap() >= 1.0);
+        assert!(ops.remediation_ops >= 1, "no drain emitted");
+        assert!(ops.alerts.iter().any(|a| a.kind == AlertKind::NodeDead));
+        // In-band telemetry consumed real (but small) WAN bandwidth.
+        assert!(ops.telemetry_wan_bytes > 0.0);
+        assert!(
+            ops.telemetry_wan_bytes < 0.01 * rep.wan_bytes,
+            "telemetry {} vs workload wan {}",
+            ops.telemetry_wan_bytes,
+            rep.wan_bytes
+        );
+        // The enriched report still round-trips through JSON.
         let text = rep.to_json().to_string();
         let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, rep);

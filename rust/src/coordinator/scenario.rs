@@ -12,6 +12,7 @@ use std::rc::Rc;
 
 use crate::hadoop::FrameworkParams;
 use crate::net::{NodeId, Topology};
+use crate::ops::{FaultPlan, OpsConfig};
 
 /// How to build the physical testbed for a run.
 #[derive(Clone)]
@@ -250,12 +251,22 @@ pub struct Scenario {
     /// Paper-measured reference time in seconds, when the scenario
     /// reproduces a published row (scaled along with the workload).
     pub paper_secs: Option<f64>,
+    /// Scheduled faults applied mid-run (empty = nothing breaks). A
+    /// non-empty plan implicitly enables the operations plane.
+    pub fault_plan: FaultPlan,
+    /// Operations-plane configuration. `Some` installs the in-band
+    /// sensor/aggregator/service pipeline even on fault-free runs
+    /// (overhead and false-positive baselines).
+    pub ops: Option<OpsConfig>,
 }
 
 impl Scenario {
     /// The same scenario with the workload (and paper reference) divided
     /// by `div` — timing is ~linear in scale, so shape is preserved. The
     /// name records the divisor (names often embed record counts).
+    /// Fault times scale with the workload so a fault keeps its relative
+    /// position in the run; ops cadences do not (detection-latency bounds
+    /// stay in absolute heartbeats at every scale).
     pub fn scaled_down(&self, div: u64) -> Scenario {
         assert!(div > 0);
         Scenario {
@@ -265,19 +276,27 @@ impl Scenario {
             framework: self.framework,
             workload: self.workload.scaled_down(div),
             paper_secs: self.paper_secs.map(|p| p / div as f64),
+            fault_plan: self.fault_plan.scaled_down(div),
+            ops: self.ops.clone(),
         }
     }
 
     /// One-line human description.
     pub fn describe(&self) -> String {
+        let faults = if self.fault_plan.is_empty() {
+            String::new()
+        } else {
+            format!(" + {} fault(s)", self.fault_plan.len())
+        };
         format!(
-            "{}: {} malstone-{} {} records on {} / {}",
+            "{}: {} malstone-{} {} records on {} / {}{}",
             self.name,
             self.framework.name(),
             self.workload.variant.letter(),
             self.workload.total_records,
             self.topology.label(),
             self.placement.label(),
+            faults,
         )
     }
 }
@@ -300,6 +319,8 @@ impl Testbed {
             framework: Framework::SectorSphere,
             workload: WorkloadSpec::malstone_a(2_000_000),
             paper_secs: None,
+            fault_plan: FaultPlan::new(),
+            ops: None,
         }
     }
 }
@@ -315,6 +336,8 @@ pub struct TestbedBuilder {
     framework: Framework,
     workload: WorkloadSpec,
     paper_secs: Option<f64>,
+    fault_plan: FaultPlan,
+    ops: Option<OpsConfig>,
 }
 
 impl TestbedBuilder {
@@ -348,6 +371,19 @@ impl TestbedBuilder {
         self
     }
 
+    /// Schedule faults for the run (implicitly enables the ops plane).
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = plan;
+        self
+    }
+
+    /// Install the operations plane with this configuration (fault-free
+    /// runs included — overhead / false-positive baselines).
+    pub fn ops(mut self, cfg: OpsConfig) -> Self {
+        self.ops = Some(cfg);
+        self
+    }
+
     pub fn build(self) -> Scenario {
         // `Local { site }` topologies default to the Table-2 local layout
         // (28 nodes on that site); everything else to Table 1's 5×4.
@@ -371,6 +407,8 @@ impl TestbedBuilder {
             framework: self.framework,
             workload: self.workload,
             paper_secs: self.paper_secs,
+            fault_plan: self.fault_plan,
+            ops: self.ops,
         }
     }
 }
@@ -424,6 +462,27 @@ mod tests {
         assert!(matches!(sc.placement, Placement::PerSite(5)));
         let local = Testbed::builder().topology(TopologySpec::Local { site: 1 }).build();
         assert!(matches!(local.placement, Placement::SingleSite { site: 1, nodes: 28 }));
+    }
+
+    #[test]
+    fn fault_plan_rides_the_builder_and_scales() {
+        let sc = Testbed::builder()
+            .framework(Framework::HadoopMr)
+            .faults(FaultPlan::new().node_crash(2000.0, 7))
+            .ops(OpsConfig::default())
+            .name("faulty")
+            .build();
+        assert_eq!(sc.fault_plan.len(), 1);
+        assert!(sc.ops.is_some());
+        assert!(sc.describe().contains("+ 1 fault(s)"), "{}", sc.describe());
+        let s = sc.scaled_down(100);
+        assert_eq!(s.fault_plan.events[0].at, 20.0);
+        // Ops cadences stay absolute across scaling.
+        assert_eq!(s.ops.unwrap().heartbeat_interval, sc.ops.unwrap().heartbeat_interval);
+        // Default scenarios carry no faults and no ops plane.
+        let plain = Testbed::builder().build();
+        assert!(plain.fault_plan.is_empty());
+        assert!(plain.ops.is_none());
     }
 
     #[test]

@@ -36,6 +36,6 @@ pub mod schedule;
 pub mod storage;
 
 pub use exchange::ExchangeModel;
-pub use runtime::{DataflowEngine, DataflowReport, DataflowSpec, TaskInput};
+pub use runtime::{DataflowControl, DataflowEngine, DataflowReport, DataflowSpec, TaskInput};
 pub use schedule::{SlotScheduler, StealPolicy};
 pub use storage::{pipeline_write, HdfsStorage, KfsStorage, SectorStorage, StorageModel};

@@ -17,7 +17,7 @@
 //! storage × schedule × exchange combinations of the same machinery.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
 use crate::net::{Cluster, NodeId};
@@ -92,6 +92,11 @@ pub struct DataflowReport {
     pub storage_write_bytes: f64,
     /// Logical job output bytes (single copy).
     pub output_bytes: f64,
+    /// Phase-1 tasks re-queued onto survivors after a node failure
+    /// ([`DataflowControl::heal_node`]): lost in-flight work plus, under a
+    /// shuffle-pull exchange, completed tasks whose spill died with the
+    /// node.
+    pub reexecuted: usize,
     /// Where the output landed (primary replicas): feeds chained jobs.
     pub output: Vec<TaskInput>,
 }
@@ -116,7 +121,96 @@ struct RtState {
     storage_read_bytes: f64,
     storage_write_bytes: f64,
     output_bytes: f64,
+    /// Nodes marked crashed ([`DataflowControl::crash_node`]): their
+    /// phase-1 completions are ignored until healed.
+    crashed: HashSet<NodeId>,
+    /// Monotone id per phase-1 assignment; a completion whose id is gone
+    /// from `live` is stale (the assignment was re-queued elsewhere).
+    next_assign: u64,
+    /// In-flight phase-1 assignments: id → (worker, task).
+    live: HashMap<u64, (NodeId, TaskInput)>,
+    /// Completed phase-1 tasks by worker, remembered so a later failure
+    /// of that worker can re-execute them (shuffle pull: the spill lived
+    /// on its disk).
+    completed_p1: HashMap<NodeId, Vec<TaskInput>>,
+    reexecuted: usize,
     done_cb: Option<Box<dyn FnOnce(&mut Engine, DataflowReport)>>,
+}
+
+/// Handle onto a running dataflow — the operations plane's failure and
+/// recovery entry points. Cloneable (an `Rc` inside); outlives the run
+/// harmlessly (post-completion calls are no-ops).
+#[derive(Clone)]
+pub struct DataflowControl {
+    st: Rc<RefCell<RtState>>,
+}
+
+impl DataflowControl {
+    /// Mark a worker crashed *right now*: its in-flight phase-1 work stops
+    /// making progress (completions are silently dropped), its sensor has
+    /// presumably gone dark, and nothing recovers until
+    /// [`DataflowControl::heal_node`] re-queues the lost work. Phase-2
+    /// (reduce/aggregate) events are not interrupted — a crash after the
+    /// barrier models "outputs already safely off the node".
+    pub fn crash_node(&self, node: NodeId) {
+        self.st.borrow_mut().crashed.insert(node);
+    }
+
+    /// The recovery half (what a JobTracker does when it finally declares
+    /// a TaskTracker lost): remove `node` from the worker set and re-queue
+    /// its lost phase-1 work onto the survivors — in-flight assignments,
+    /// plus (under a shuffle-pull exchange) completed tasks whose map
+    /// spill lived on the node, exactly as Hadoop re-executes completed
+    /// maps of a lost tracker. Returns the number of re-queued tasks.
+    /// A no-op once phase 1 is complete or if `node` is not a worker.
+    pub fn heal_node(&self, eng: &mut Engine, node: NodeId) -> usize {
+        let mut requeued = 0;
+        {
+            let mut s = self.st.borrow_mut();
+            s.crashed.insert(node);
+            if s.tasks_done == s.tasks_total || !s.spec.nodes.contains(&node) {
+                return 0;
+            }
+            s.spec.nodes.retain(|&n| n != node);
+            assert!(!s.spec.nodes.is_empty(), "every worker failed");
+            if s.spec.exchange == ExchangeModel::BucketPush {
+                // One bucket per surviving node; the dead node's bucket
+                // (dropped below) died with its disk.
+                s.spec.num_reducers = s.spec.nodes.len();
+            }
+            s.sched.remove_node(node);
+            let lost: Vec<u64> = s
+                .live
+                .iter()
+                .filter(|(_, (n, _))| *n == node)
+                .map(|(&id, _)| id)
+                .collect();
+            for id in lost {
+                let (_, t) = s.live.remove(&id).unwrap();
+                s.sched.requeue(t, true);
+                requeued += 1;
+            }
+            if matches!(s.spec.exchange, ExchangeModel::ShufflePull { .. }) {
+                if let Some(done) = s.completed_p1.remove(&node) {
+                    for t in done {
+                        s.tasks_done -= 1;
+                        s.sched.requeue(t, false);
+                        requeued += 1;
+                    }
+                }
+            }
+            // Every entry under the node's key — spills it produced
+            // (shuffle pull) or the bucket it hosted (bucket push) — is
+            // gone with its disk.
+            s.inter_bytes.remove(&node);
+            s.inter_records.remove(&node);
+            s.reexecuted += requeued;
+        }
+        if requeued > 0 {
+            DataflowEngine::fill_slots(&self.st, eng);
+        }
+        requeued
+    }
 }
 
 /// The shared dataflow timing engine.
@@ -124,13 +218,16 @@ pub struct DataflowEngine;
 
 impl DataflowEngine {
     /// Run a dataflow on the event engine; `done` receives the report.
+    /// The returned [`DataflowControl`] lets an operations plane inject
+    /// node failures and trigger recovery mid-run; callers without one
+    /// simply drop it.
     pub fn run<F: FnOnce(&mut Engine, DataflowReport) + 'static>(
         cluster: &Cluster,
         storage: Rc<RefCell<dyn StorageModel>>,
         eng: &mut Engine,
         spec: DataflowSpec,
         done: F,
-    ) {
+    ) -> DataflowControl {
         assert!(!spec.nodes.is_empty() && !spec.tasks.is_empty());
         assert!(spec.num_reducers > 0);
         if spec.exchange == ExchangeModel::BucketPush {
@@ -164,10 +261,23 @@ impl DataflowEngine {
             storage_read_bytes: 0.0,
             storage_write_bytes: 0.0,
             output_bytes: 0.0,
+            crashed: HashSet::new(),
+            next_assign: 0,
+            live: HashMap::new(),
+            completed_p1: HashMap::new(),
+            reexecuted: 0,
             done_cb: Some(Box::new(done)),
             spec,
         }));
         Self::fill_slots(&st, eng);
+        DataflowControl { st }
+    }
+
+    /// True when this assignment must stop progressing: its worker crashed
+    /// or the assignment was re-queued elsewhere by a heal.
+    fn doomed(st: &Rc<RefCell<RtState>>, aid: u64, node: NodeId) -> bool {
+        let s = st.borrow();
+        !s.live.contains_key(&aid) || s.crashed.contains(&node)
     }
 
     /// Drain the scheduler: assign tasks until no worker slot may take one.
@@ -186,27 +296,44 @@ impl DataflowEngine {
     }
 
     /// One phase-1 task: (possibly remote) storage read → CPU → exchange
-    /// output stage → slot release.
+    /// output stage → slot release. Each boundary re-checks that the
+    /// assignment is still live — a crashed worker's pipeline stops
+    /// producing effects at its next step.
     fn run_task(st: &Rc<RefCell<RtState>>, eng: &mut Engine, node: NodeId, task: TaskInput) {
-        let (cluster, proto, overhead, source) = {
+        let (cluster, proto, overhead, source, aid) = {
             let mut s = st.borrow_mut();
             s.storage_read_bytes += task.bytes as f64;
-            let source = s.storage.borrow().read_source(task.node, node);
-            (s.cluster.clone(), s.spec.protocol.clone(), s.spec.task_overhead, source)
+            let mut source = s.storage.borrow().read_source(task.node, node);
+            // A crashed replica host cannot serve reads; a re-executed
+            // task streams from a surviving replica instead, modeled as
+            // worker-local (the data is not resurrected from the dead box).
+            if s.crashed.contains(&source) {
+                source = node;
+            }
+            let aid = s.next_assign;
+            s.next_assign += 1;
+            s.live.insert(aid, (node, task));
+            (s.cluster.clone(), s.spec.protocol.clone(), s.spec.task_overhead, source, aid)
         };
         let st2 = st.clone();
         let net = cluster.net.clone();
         let topo = cluster.topo.clone();
         eng.schedule_in(overhead, move |eng| {
+            if Self::doomed(&st2, aid, node) {
+                return;
+            }
             let st3 = st2.clone();
             let after_read = move |eng: &mut Engine| {
+                if Self::doomed(&st3, aid, node) {
+                    return;
+                }
                 let (pool, cpu) = {
                     let s = st3.borrow();
                     (s.cluster.pool(node).clone(), task.records as f64 * s.spec.map_cpu_per_record)
                 };
                 let st4 = st3.clone();
                 CpuPool::submit(&pool, eng, cpu, move |eng| {
-                    Self::task_output(&st4, eng, node, task);
+                    Self::task_output(&st4, eng, node, task, aid);
                 });
             };
             if source == node {
@@ -233,7 +360,16 @@ impl DataflowEngine {
     }
 
     /// Route a finished task's intermediate output through the exchange.
-    fn task_output(st: &Rc<RefCell<RtState>>, eng: &mut Engine, node: NodeId, task: TaskInput) {
+    fn task_output(
+        st: &Rc<RefCell<RtState>>,
+        eng: &mut Engine,
+        node: NodeId,
+        task: TaskInput,
+        aid: u64,
+    ) {
+        if Self::doomed(st, aid, node) {
+            return;
+        }
         let exchange = st.borrow().spec.exchange;
         match exchange {
             ExchangeModel::ShufflePull { .. } => {
@@ -248,16 +384,22 @@ impl DataflowEngine {
                 };
                 let st2 = st.clone();
                 transport::disk_write(&cluster.net, &cluster.topo, eng, node, spill, move |eng| {
-                    Self::task_finished(&st2, eng, node, task, spill);
+                    Self::task_finished(&st2, eng, node, task, spill, aid);
                 });
             }
-            ExchangeModel::BucketPush => Self::bucket_push(st, eng, node, task),
+            ExchangeModel::BucketPush => Self::bucket_push(st, eng, node, task, aid),
         }
     }
 
     /// Push the task's partitioned output into bucket files on every node,
     /// overlapped (the task completes when its slowest push lands).
-    fn bucket_push(st: &Rc<RefCell<RtState>>, eng: &mut Engine, node: NodeId, task: TaskInput) {
+    fn bucket_push(
+        st: &Rc<RefCell<RtState>>,
+        eng: &mut Engine,
+        node: NodeId,
+        task: TaskInput,
+        aid: u64,
+    ) {
         let (cluster, proto, out_bytes, nodes) = {
             let s = st.borrow();
             let out = task.records as f64 * s.spec.intermediate_bytes_per_record;
@@ -273,7 +415,7 @@ impl DataflowEngine {
                 let mut l = legs.borrow_mut();
                 *l -= 1;
                 if *l == 0 {
-                    Self::push_task_finished(st, eng, node);
+                    Self::push_task_finished(st, eng, node, aid);
                 }
             };
         for &dst in &nodes {
@@ -317,9 +459,15 @@ impl DataflowEngine {
         node: NodeId,
         task: TaskInput,
         out_bytes: f64,
+        aid: u64,
     ) {
+        if Self::doomed(st, aid, node) {
+            return;
+        }
         let all_done = {
             let mut s = st.borrow_mut();
+            s.live.remove(&aid);
+            s.completed_p1.entry(node).or_default().push(task);
             *s.inter_bytes.entry(node).or_insert(0.0) += out_bytes;
             *s.inter_records.entry(node).or_insert(0.0) += task.records as f64;
             s.tasks_done += 1;
@@ -338,9 +486,13 @@ impl DataflowEngine {
     }
 
     /// Bucket-push task completion (all pushes landed).
-    fn push_task_finished(st: &Rc<RefCell<RtState>>, eng: &mut Engine, node: NodeId) {
+    fn push_task_finished(st: &Rc<RefCell<RtState>>, eng: &mut Engine, node: NodeId, aid: u64) {
+        if Self::doomed(st, aid, node) {
+            return;
+        }
         let all_done = {
             let mut s = st.borrow_mut();
+            s.live.remove(&aid);
             s.tasks_done += 1;
             s.sched.release(node);
             if s.tasks_done == s.tasks_total {
@@ -562,6 +714,7 @@ impl DataflowEngine {
                     storage_read_bytes: s.storage_read_bytes,
                     storage_write_bytes: s.storage_write_bytes,
                     output_bytes: s.output_bytes,
+                    reexecuted: s.reexecuted,
                     output: s.output.clone(),
                 };
                 Some((s.done_cb.take().unwrap(), report))
@@ -614,7 +767,11 @@ mod tests {
         }
         let tasks: Vec<TaskInput> = nodes
             .iter()
-            .map(|&n| TaskInput { node: n, bytes: per_node_records * 100, records: per_node_records })
+            .map(|&n| TaskInput {
+                node: n,
+                bytes: per_node_records * 100,
+                records: per_node_records,
+            })
             .collect();
         (cluster, nodes, tasks)
     }
@@ -690,7 +847,8 @@ mod tests {
     #[test]
     fn write_setup_latency_slows_the_run() {
         let (cluster, nodes, tasks) = setup(1, 50_000);
-        let sp = spec(nodes.clone(), tasks.clone(), ExchangeModel::ShufflePull { parallel_copies: 4 });
+        let sp =
+            spec(nodes.clone(), tasks.clone(), ExchangeModel::ShufflePull { parallel_copies: 4 });
         let sector = Rc::new(RefCell::new(SectorStorage::new()));
         let base = run_dataflow(&cluster, sector, sp.clone());
         // KFS with replication 1 places identically to Sector (writer
@@ -704,6 +862,143 @@ mod tests {
             leased.makespan,
             base.makespan
         );
+    }
+
+    /// Run a dataflow returning (control, report cell, engine) so crash
+    /// tests can schedule failures around the run.
+    fn run_with_control(
+        cluster: &Cluster,
+        storage: Rc<RefCell<dyn StorageModel>>,
+        sp: DataflowSpec,
+    ) -> (Engine, DataflowControl, Rc<RefCell<Option<DataflowReport>>>) {
+        let mut eng = Engine::new();
+        let out = Rc::new(RefCell::new(None));
+        let o = out.clone();
+        let control = DataflowEngine::run(cluster, storage, &mut eng, sp, move |_, r| {
+            *o.borrow_mut() = Some(r)
+        });
+        (eng, control, out)
+    }
+
+    #[test]
+    fn crash_mid_task_heal_reexecutes_inflight_work() {
+        let (cluster, nodes, _) = setup(2, 400_000);
+        // Two tasks per node so the victim holds both its slots.
+        let tasks: Vec<TaskInput> = nodes
+            .iter()
+            .flat_map(|&n| {
+                (0..2).map(move |_| TaskInput { node: n, bytes: 400_000 * 100, records: 400_000 })
+            })
+            .collect();
+        let sp = spec(nodes.clone(), tasks, ExchangeModel::ShufflePull { parallel_copies: 4 });
+        let storage = Rc::new(RefCell::new(SectorStorage::new()));
+        let (mut eng, control, out) = run_with_control(&cluster, storage, sp);
+        let victim = nodes[0];
+        // Every task needs ≥ 1.9s (overhead + disk + cpu), so at t=1 both
+        // of the victim's assignments are in flight; detection "arrives"
+        // at t=8 and re-queues them.
+        let c = control.clone();
+        eng.schedule_at(1.0, move |_| c.crash_node(victim));
+        let healed = Rc::new(RefCell::new(0usize));
+        let (c, h) = (control.clone(), healed.clone());
+        eng.schedule_at(8.0, move |eng| *h.borrow_mut() = c.heal_node(eng, victim));
+        eng.run();
+        let r = out.borrow_mut().take().expect("dataflow did not survive the crash");
+        assert_eq!(*healed.borrow(), 2, "both in-flight assignments re-queued");
+        assert_eq!(r.reexecuted, 2);
+        assert_eq!(r.tasks, 16);
+        // Reducers avoid the dead node; no output lands there.
+        assert!(r.output.iter().all(|t| t.node != victim), "{:?}", r.output);
+        // Healing the same node again is a no-op, as is a post-run heal.
+        let mut eng2 = Engine::new();
+        assert_eq!(control.heal_node(&mut eng2, victim), 0);
+    }
+
+    #[test]
+    fn crash_after_completion_reruns_lost_spills() {
+        let (cluster, nodes, _) = setup(2, 400_000);
+        // The victim's tasks are short (finish ~0.7s); everyone else's
+        // take ≥ 2.9s (two 40 MB reads share one spindle).
+        let victim = nodes[0];
+        let tasks: Vec<TaskInput> = nodes
+            .iter()
+            .flat_map(|&n| {
+                let records = if n == victim { 50_000 } else { 400_000 };
+                (0..2).map(move |_| TaskInput { node: n, bytes: records * 100, records })
+            })
+            .collect();
+        let sp = spec(nodes.clone(), tasks, ExchangeModel::ShufflePull { parallel_copies: 4 });
+        let storage = Rc::new(RefCell::new(SectorStorage::new()));
+        let (mut eng, control, out) = run_with_control(&cluster, storage, sp);
+        // At t=1.5 the victim has completed both tasks (spills on its
+        // disk) and holds nothing in flight; the crash+heal must rerun
+        // the completed tasks because their spills died with the node.
+        let c = control.clone();
+        eng.schedule_at(1.5, move |_| c.crash_node(victim));
+        let healed = Rc::new(RefCell::new(0usize));
+        let (c, h) = (control, healed.clone());
+        eng.schedule_at(2.0, move |eng| *h.borrow_mut() = c.heal_node(eng, victim));
+        eng.run();
+        let r = out.borrow_mut().take().expect("dataflow did not survive the crash");
+        assert_eq!(*healed.borrow(), 2, "completed-then-lost tasks re-queued");
+        assert_eq!(r.reexecuted, 2);
+        assert_eq!(r.tasks, 16);
+    }
+
+    #[test]
+    fn crash_after_barrier_is_a_noop() {
+        let (cluster, nodes, tasks) = setup(2, 200_000);
+        let sp = spec(nodes.clone(), tasks, ExchangeModel::ShufflePull { parallel_copies: 4 });
+        let storage = Rc::new(RefCell::new(SectorStorage::new()));
+        let baseline = run_dataflow(&cluster, storage.clone(), sp.clone());
+        let (cluster2, _, _) = setup(2, 200_000);
+        let (mut eng, control, out) = run_with_control(
+            &cluster2,
+            Rc::new(RefCell::new(SectorStorage::new())),
+            sp,
+        );
+        let victim = nodes[0];
+        // Well past phase 1 (baseline's barrier): outputs are safe, so a
+        // crash changes nothing and heal re-queues nothing.
+        let at = baseline.phase1 + 0.5 * baseline.phase2;
+        let c = control.clone();
+        eng.schedule_at(at, move |_| c.crash_node(victim));
+        let healed = Rc::new(RefCell::new(usize::MAX));
+        let (c, h) = (control, healed.clone());
+        eng.schedule_at(at + 0.1, move |eng| *h.borrow_mut() = c.heal_node(eng, victim));
+        eng.run();
+        let r = out.borrow_mut().take().expect("dataflow did not finish");
+        assert_eq!(*healed.borrow(), 0);
+        assert_eq!(r.reexecuted, 0);
+        assert!((r.makespan - baseline.makespan).abs() < 1e-6, "timing drifted");
+    }
+
+    #[test]
+    fn bucket_push_crash_heal_completes() {
+        let (cluster, nodes, _) = setup(2, 400_000);
+        let tasks: Vec<TaskInput> = nodes
+            .iter()
+            .flat_map(|&n| {
+                (0..2).map(move |_| TaskInput { node: n, bytes: 400_000 * 100, records: 400_000 })
+            })
+            .collect();
+        let mut sp = spec(nodes.clone(), tasks, ExchangeModel::BucketPush);
+        sp.output_bytes_per_record = 0.0;
+        let storage = Rc::new(RefCell::new(SectorStorage::new()));
+        let (mut eng, control, out) = run_with_control(&cluster, storage, sp);
+        let victim = nodes[1];
+        let c = control.clone();
+        eng.schedule_at(1.0, move |_| c.crash_node(victim));
+        let c = control;
+        eng.schedule_at(8.0, move |eng| {
+            c.heal_node(eng, victim);
+        });
+        eng.run();
+        let r = out.borrow_mut().take().expect("bucket-push dataflow hung after crash");
+        assert!(r.reexecuted >= 1);
+        // One bucket per *survivor* — the dead node's bucket died with it.
+        assert_eq!(r.reducers, nodes.len() - 1);
+        assert_eq!(r.tasks, 16);
     }
 
     #[test]

@@ -107,6 +107,26 @@ impl SlotScheduler {
         self.running -= 1;
     }
 
+    /// Remove a failed worker: it gets no further assignments and its
+    /// slots are forgotten. Tasks it was running must be put back with
+    /// [`SlotScheduler::requeue`] — the scheduler has no record of *which*
+    /// tasks a worker holds (the runtime tracks assignments).
+    pub fn remove_node(&mut self, node: NodeId) {
+        self.nodes.retain(|&n| n != node);
+        self.slots_free.remove(&node);
+    }
+
+    /// Put a task back on the pending queue: a lost in-flight assignment
+    /// (`was_running = true`, releases its claim on the running count) or
+    /// a completed task whose output died with its node
+    /// (`was_running = false`).
+    pub fn requeue(&mut self, task: TaskInput, was_running: bool) {
+        self.pending.push(task);
+        if was_running {
+            self.running -= 1;
+        }
+    }
+
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
@@ -200,6 +220,40 @@ mod tests {
         assert_eq!(t.node, worker);
         assert!(s.next_assignment(&topo).is_none());
         assert_eq!(s.stolen(), 0);
+    }
+
+    #[test]
+    fn removed_node_gets_no_assignments_and_requeue_reschedules() {
+        let topo = Topology::oct_2009();
+        let dead = topo.racks[0].nodes[0];
+        let alive = topo.racks[0].nodes[1];
+        let mut s = SlotScheduler::new(
+            vec![dead, alive],
+            1,
+            vec![task(dead), task(dead)],
+            StealPolicy::Anywhere,
+        );
+        // Both workers take one task each (dead's is local, alive steals).
+        let (w1, t1) = s.next_assignment(&topo).unwrap();
+        assert_eq!(w1, dead);
+        let (w2, _) = s.next_assignment(&topo).unwrap();
+        assert_eq!(w2, alive);
+        assert_eq!(s.running(), 2);
+        // The dead worker fails mid-task: remove it and requeue its task.
+        s.remove_node(dead);
+        s.requeue(t1, true);
+        assert_eq!(s.running(), 1);
+        assert_eq!(s.pending_len(), 1);
+        // No free slot anywhere (alive is busy) → no assignment yet.
+        assert!(s.next_assignment(&topo).is_none());
+        s.release(alive);
+        let (w3, t3) = s.next_assignment(&topo).unwrap();
+        assert_eq!(w3, alive, "requeued task must land on a survivor");
+        assert_eq!(t3.node, dead);
+        // A completed-then-lost task requeues without touching running.
+        s.requeue(task(dead), false);
+        assert_eq!(s.running(), 1);
+        assert_eq!(s.pending_len(), 1);
     }
 
     #[test]

@@ -26,11 +26,16 @@ pub struct GmpConfig {
 
 impl Default for GmpConfig {
     fn default() -> Self {
-        GmpConfig { rto: Duration::from_millis(40), max_retries: 8, window: 64, dedup_capacity: 4096 }
+        GmpConfig {
+            rto: Duration::from_millis(40),
+            max_retries: 8,
+            window: 64,
+            dedup_capacity: 4096,
+        }
     }
 }
 
-/// Outgoing fault injection for tests: drop/duplicate probabilities are
+/// Outgoing fault injection for tests: drop/duplicate/reorder events are
 /// driven by a deterministic counter pattern (no RNG in the hot path).
 #[derive(Debug, Clone, Default)]
 pub struct FaultSpec {
@@ -38,6 +43,11 @@ pub struct FaultSpec {
     pub drop_every: u32,
     /// Duplicate every n-th outgoing packet (0 = never).
     pub dup_every: u32,
+    /// Hold back every n-th outgoing packet and release it after the
+    /// *next* send — pairwise reordering (0 = never). A held packet that
+    /// never sees a successor stays unsent, exactly like a datagram lost
+    /// in a reordering queue; the retransmit path must recover it.
+    pub reorder_every: u32,
 }
 
 struct PeerState {
@@ -98,6 +108,9 @@ pub struct GmpEndpoint {
     inbox: Mutex<Receiver<(SocketAddr, Vec<u8>)>>,
     fault: Mutex<FaultSpec>,
     fault_counter: AtomicU32,
+    /// A packet held back by reorder fault injection, released after the
+    /// next send.
+    held: Mutex<Option<(Vec<u8>, SocketAddr)>>,
     stop: Arc<AtomicBool>,
     rx_thread: Option<std::thread::JoinHandle<()>>,
 }
@@ -132,6 +145,7 @@ impl GmpEndpoint {
             inbox: Mutex::new(rx),
             fault: Mutex::new(FaultSpec::default()),
             fault_counter: AtomicU32::new(0),
+            held: Mutex::new(None),
             stop: stop.clone(),
             rx_thread: None,
         };
@@ -170,10 +184,22 @@ impl GmpEndpoint {
         let n = self.fault_counter.fetch_add(1, Ordering::Relaxed) + 1;
         let drop = f.drop_every != 0 && n % f.drop_every == 0;
         let dup = f.dup_every != 0 && n % f.dup_every == 0;
-        if !drop {
+        let reorder = f.reorder_every != 0 && n % f.reorder_every == 0;
+        if reorder && !drop {
+            // Hold this packet back; it goes out *after* the next send.
+            let prev = self.held.lock().unwrap().replace((buf.to_vec(), to));
+            // Two consecutive reorder triggers: release the older one so
+            // at most one packet is ever in the queue.
+            if let Some((b, t)) = prev {
+                let _ = self.socket.send_to(&b, t);
+            }
+        } else if !drop {
             let _ = self.socket.send_to(buf, to);
             if dup {
                 let _ = self.socket.send_to(buf, to);
+            }
+            if let Some((b, t)) = self.held.lock().unwrap().take() {
+                let _ = self.socket.send_to(&b, t);
             }
         }
         self.shared.stats.sent.fetch_add(1, Ordering::Relaxed);
@@ -203,7 +229,10 @@ impl GmpEndpoint {
                 acks = guard;
             }
         }
-        Err(std::io::Error::new(std::io::ErrorKind::TimedOut, format!("no ack from {to} for seq {}", pkt.seq)))
+        Err(std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            format!("no ack from {to} for seq {}", pkt.seq),
+        ))
     }
 
     /// Send a message reliably with exactly-once delivery. Small messages
@@ -258,7 +287,8 @@ impl GmpEndpoint {
                 if now >= deadline {
                     break;
                 }
-                let (_guard, timeout) = self.shared.ack_cv.wait_timeout(acks, deadline - now).unwrap();
+                let (_guard, timeout) =
+                    self.shared.ack_cv.wait_timeout(acks, deadline - now).unwrap();
                 if timeout.timed_out() {
                     break;
                 }
@@ -267,7 +297,10 @@ impl GmpEndpoint {
             if retries > self.cfg.max_retries * total.max(4) {
                 return Err(std::io::Error::new(
                     std::io::ErrorKind::TimedOut,
-                    format!("large message to {to} stalled with {} fragments unacked", unacked.len()),
+                    format!(
+                        "large message to {to} stalled with {} fragments unacked",
+                        unacked.len()
+                    ),
                 ));
             }
             self.shared.stats.retransmits.fetch_add(1, Ordering::Relaxed);
@@ -285,7 +318,12 @@ impl GmpEndpoint {
         while !stop.load(Ordering::Relaxed) {
             let (n, from) = match socket.recv_from(&mut buf) {
                 Ok(x) => x,
-                Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
                     continue
                 }
                 Err(_) => break,
@@ -333,7 +371,8 @@ impl GmpEndpoint {
                         shared.stats.dup_suppressed.fetch_add(1, Ordering::Relaxed);
                         continue;
                     }
-                    let entry = peer.partial.entry(msg_key).or_insert_with(|| (total, HashMap::new()));
+                    let entry =
+                        peer.partial.entry(msg_key).or_insert_with(|| (total, HashMap::new()));
                     entry.1.insert(pkt.arg, chunk);
                     if entry.1.len() as u32 == entry.0 {
                         // Complete: reassemble in index order.
@@ -407,6 +446,59 @@ mod tests {
         let (_, retx, _, dups) = a.stats();
         assert!(retx > 0, "fault injection never triggered a retransmit");
         let _ = dups;
+    }
+
+    #[test]
+    fn exactly_once_under_reordering() {
+        let (a, b) = pair(GmpConfig::default());
+        // Every 3rd packet is held back and released after its successor:
+        // persistent pairwise reordering on the wire.
+        a.set_fault(FaultSpec { reorder_every: 3, ..Default::default() });
+        let n = 40;
+        for i in 0..n {
+            a.send(b.local_addr(), format!("r-{i}").as_bytes()).unwrap();
+        }
+        let mut got = Vec::new();
+        while let Some((_, m)) = b.recv_timeout(Duration::from_millis(300)) {
+            got.push(String::from_utf8(m).unwrap());
+        }
+        got.sort();
+        let mut want: Vec<String> = (0..n).map(|i| format!("r-{i}")).collect();
+        want.sort();
+        assert_eq!(got, want, "reordering lost or duplicated a message");
+    }
+
+    #[test]
+    fn exactly_once_under_drop_dup_and_reorder_combined() {
+        let (a, b) = pair(GmpConfig::default());
+        a.set_fault(FaultSpec { drop_every: 5, dup_every: 3, reorder_every: 4 });
+        let n = 60;
+        for i in 0..n {
+            a.send(b.local_addr(), format!("m-{i}").as_bytes()).unwrap();
+        }
+        let mut got = Vec::new();
+        while let Some((_, m)) = b.recv_timeout(Duration::from_millis(300)) {
+            got.push(String::from_utf8(m).unwrap());
+        }
+        got.sort();
+        let mut want: Vec<String> = (0..n).map(|i| format!("m-{i}")).collect();
+        want.sort();
+        assert_eq!(got, want);
+        let (_, retx, _, _) = a.stats();
+        assert!(retx > 0, "drops never forced a retransmit");
+    }
+
+    #[test]
+    fn large_message_survives_reordering() {
+        let (a, b) = pair(GmpConfig { rto: Duration::from_millis(30), ..Default::default() });
+        a.set_fault(FaultSpec { reorder_every: 2, ..Default::default() });
+        // Multi-fragment message with every other fragment swapped on the
+        // wire: reassembly is by fragment index, so the payload must come
+        // back intact.
+        let msg: Vec<u8> = (0..60_000u32).map(|i| (i.wrapping_mul(31)) as u8).collect();
+        a.send(b.local_addr(), &msg).unwrap();
+        let (_, got) = b.recv_timeout(Duration::from_secs(5)).expect("delivery under reordering");
+        assert_eq!(got, msg);
     }
 
     #[test]

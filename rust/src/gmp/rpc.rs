@@ -114,7 +114,10 @@ pub struct RpcClient {
 
 impl RpcClient {
     pub fn new(ep: Arc<GmpEndpoint>) -> RpcClient {
-        let shared = Arc::new(ClientShared { responses: Mutex::new(HashMap::new()), cv: Condvar::new() });
+        let shared = Arc::new(ClientShared {
+            responses: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+        });
         let stop = Arc::new(AtomicBool::new(false));
         let (s2, st2, ep2) = (shared.clone(), stop.clone(), ep.clone());
         let pump = std::thread::spawn(move || {
@@ -136,7 +139,13 @@ impl RpcClient {
     /// Call `method` on the server at `to`; blocks until the response or
     /// `timeout`. A server-side error frame (unknown method) surfaces as
     /// `Err` — never as a success payload.
-    pub fn call(&self, to: SocketAddr, method: &str, body: &[u8], timeout: Duration) -> std::io::Result<Vec<u8>> {
+    pub fn call(
+        &self,
+        to: SocketAddr,
+        method: &str,
+        body: &[u8],
+        timeout: Duration,
+    ) -> std::io::Result<Vec<u8>> {
         let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let frame = encode_frame(TAG_REQ, req_id, method, body);
         self.ep.send(to, &frame)?;
@@ -194,7 +203,8 @@ mod tests {
     #[test]
     fn echo_roundtrip() {
         let (_srv, addr) = echo_server();
-        let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+        let client =
+            RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
         let out = client.call(addr, "echo", b"hello rpc", Duration::from_secs(2)).unwrap();
         assert_eq!(out, b"hello rpc");
     }
@@ -202,7 +212,8 @@ mod tests {
     #[test]
     fn compute_handler_and_many_calls() {
         let (_srv, addr) = echo_server();
-        let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+        let client =
+            RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
         for i in 0..30u8 {
             let out = client.call(addr, "sum", &[i, i, i], Duration::from_secs(2)).unwrap();
             assert_eq!(u64::from_le_bytes(out.try_into().unwrap()), 3 * i as u64);
@@ -212,7 +223,8 @@ mod tests {
     #[test]
     fn unknown_method_surfaces_as_err() {
         let (_srv, addr) = echo_server();
-        let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+        let client =
+            RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
         let err = client.call(addr, "nope", b"", Duration::from_secs(2)).unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::Other);
         assert!(err.to_string().contains("unknown method nope"), "{err}");
@@ -230,11 +242,35 @@ mod tests {
             Box::new(|_: &[u8]| b"ERR unknown method fake".to_vec()),
         );
         let _srv = RpcServer::start(ep, handlers);
-        let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+        let client =
+            RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
         let out = client.call(addr, "looks-bad", b"", Duration::from_secs(2)).unwrap();
         assert_eq!(out, b"ERR unknown method fake");
         let err = client.call(addr, "missing", b"", Duration::from_secs(2)).unwrap_err();
         assert!(err.to_string().contains("unknown method missing"), "{err}");
+    }
+
+    #[test]
+    fn error_tag_survives_faulty_transport() {
+        // The error-tag byte on unknown methods must reach the client as
+        // `Err` even when the transport drops, duplicates, and reorders
+        // datagrams underneath the RPC frames.
+        let ep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+        let addr = ep.local_addr();
+        ep.set_fault(FaultSpec { drop_every: 6, dup_every: 5, reorder_every: 4 });
+        let mut handlers: HashMap<String, Handler> = HashMap::new();
+        handlers.insert("ok".into(), Box::new(|_: &[u8]| b"fine".to_vec()));
+        let _srv = RpcServer::start(ep, handlers);
+        let cep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+        cep.set_fault(FaultSpec { drop_every: 7, dup_every: 0, reorder_every: 3 });
+        let client = RpcClient::new(cep);
+        for i in 0..10 {
+            let out = client.call(addr, "ok", &[i], Duration::from_secs(3)).unwrap();
+            assert_eq!(out, b"fine");
+            let err = client.call(addr, "missing", &[i], Duration::from_secs(3)).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::Other);
+            assert!(err.to_string().contains("unknown method missing"), "{err}");
+        }
     }
 
     #[test]
@@ -271,7 +307,8 @@ mod tests {
     #[test]
     fn large_rpc_payload() {
         let (_srv, addr) = echo_server();
-        let client = RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
+        let client =
+            RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap());
         let big: Vec<u8> = (0..50_000u32).map(|i| i as u8).collect();
         let out = client.call(addr, "echo", &big, Duration::from_secs(5)).unwrap();
         assert_eq!(out, big);

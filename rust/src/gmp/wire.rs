@@ -94,7 +94,8 @@ mod tests {
 
     #[test]
     fn roundtrip() {
-        let p = Packet { kind: Kind::Data, session: 7, seq: 42, arg: 0, payload: b"hello".to_vec() };
+        let p =
+            Packet { kind: Kind::Data, session: 7, seq: 42, arg: 0, payload: b"hello".to_vec() };
         assert_eq!(Packet::decode(&p.encode()).unwrap(), p);
     }
 
@@ -118,7 +119,9 @@ mod tests {
         let mut kind = Packet::ack(1, 2).encode();
         kind[3] = 77;
         assert!(Packet::decode(&kind).is_err());
-        let mut truncated = Packet { kind: Kind::Data, session: 1, seq: 1, arg: 0, payload: vec![1, 2, 3] }.encode();
+        let mut truncated =
+            Packet { kind: Kind::Data, session: 1, seq: 1, arg: 0, payload: vec![1, 2, 3] }
+                .encode();
         truncated.pop();
         assert!(Packet::decode(&truncated).is_err());
     }

@@ -78,7 +78,12 @@ impl Namenode {
     }
 
     /// An HDFS whose datanodes are exactly `members`.
-    pub fn with_members(topo: Rc<Topology>, cfg: HdfsConfig, seed: u64, members: Vec<NodeId>) -> Self {
+    pub fn with_members(
+        topo: Rc<Topology>,
+        cfg: HdfsConfig,
+        seed: u64,
+        members: Vec<NodeId>,
+    ) -> Self {
         assert!(!members.is_empty());
         let mut nn = Self::new(topo, cfg, seed);
         nn.members = members;
@@ -132,7 +137,11 @@ impl Namenode {
         for i in 0..nblocks {
             let id = BlockId(self.next_block);
             self.next_block += 1;
-            let sz = if i == nblocks - 1 { bytes - (nblocks - 1) * self.cfg.block_size } else { self.cfg.block_size };
+            let sz = if i == nblocks - 1 {
+                bytes - (nblocks - 1) * self.cfg.block_size
+            } else {
+                self.cfg.block_size
+            };
             let replicas = self.place_replicas(writer);
             for &r in &replicas {
                 *self.usage.entry(r).or_insert(0) += sz;
@@ -149,7 +158,11 @@ impl Namenode {
     /// Register a pre-distributed file: one block per (node, bytes) pair,
     /// single local replica (how MalGen-generated shards enter HDFS-land
     /// before a job; also used to model Sector-imported data).
-    pub fn register_local_shards(&mut self, name: &str, shards: &[(NodeId, u64)]) -> Vec<BlockMeta> {
+    pub fn register_local_shards(
+        &mut self,
+        name: &str,
+        shards: &[(NodeId, u64)],
+    ) -> Vec<BlockMeta> {
         assert!(!self.files.contains_key(name), "file exists: {name}");
         let mut metas = Vec::new();
         let mut ids = Vec::new();
@@ -364,7 +377,8 @@ mod tests {
         let mut eng = crate::sim::Engine::new();
         let t_local = Rc::new(RefCell::new(0.0));
         let d = t_local.clone();
-        read_block(&net, &topo, &mut eng, NodeId(0), NodeId(0), 65_000_000, &Protocol::tcp(), move |e| {
+        let tcp = Protocol::tcp();
+        read_block(&net, &topo, &mut eng, NodeId(0), NodeId(0), 65_000_000, &tcp, move |e| {
             *d.borrow_mut() = e.now();
         });
         eng.run();

@@ -26,7 +26,8 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::framework::{
-    DataflowEngine, DataflowSpec, ExchangeModel, HdfsStorage, StealPolicy, StorageModel, TaskInput,
+    DataflowControl, DataflowEngine, DataflowSpec, ExchangeModel, HdfsStorage, StealPolicy,
+    StorageModel, TaskInput,
 };
 use crate::malstone::join::{bucketize, compromise_table, JoinedRecord};
 use crate::malstone::oracle::MalstoneResult;
@@ -80,6 +81,9 @@ pub struct JobReport {
     pub reduces: usize,
     /// Maps that ran away from their input's home node (remote reads).
     pub stolen_maps: usize,
+    /// Maps re-executed on survivors after a TaskTracker was declared
+    /// lost mid-job (see [`DataflowControl::heal_node`]).
+    pub reexecuted_tasks: usize,
     /// All bytes reducers fetched, node-local partitions included.
     pub shuffle_bytes: f64,
     /// The subset of `shuffle_bytes` that crossed the network.
@@ -107,23 +111,25 @@ impl MapReduceEngine {
         eng: &mut Engine,
         spec: JobSpec,
         done: F,
-    ) {
+    ) -> DataflowControl {
         let storage: Rc<RefCell<dyn StorageModel>> =
             Rc::new(RefCell::new(HdfsStorage::new(nn.clone(), spec.output_replication)));
-        Self::simulate_on(cluster, storage, eng, spec, done);
+        Self::simulate_on(cluster, storage, eng, spec, done)
     }
 
     /// Run a job with MapReduce scheduling + shuffle semantics over an
     /// arbitrary storage layer — the §7 interoperability entry point
     /// (MapReduce over CloudStore/KFS chunks, MapReduce over Sector
-    /// placement).
+    /// placement). The returned [`DataflowControl`] is the JobTracker's
+    /// failure surface: the ops plane crashes/heals TaskTrackers through
+    /// it.
     pub fn simulate_on<F: FnOnce(&mut Engine, JobReport) + 'static>(
         cluster: &Cluster,
         storage: Rc<RefCell<dyn StorageModel>>,
         eng: &mut Engine,
         spec: JobSpec,
         done: F,
-    ) {
+    ) -> DataflowControl {
         assert!(!spec.nodes.is_empty() && !spec.input.is_empty());
         assert!(spec.num_reducers > 0);
         let dataflow = DataflowSpec {
@@ -155,6 +161,7 @@ impl MapReduceEngine {
                 maps: r.tasks,
                 reduces: r.reducers,
                 stolen_maps: r.remote_tasks,
+                reexecuted_tasks: r.reexecuted,
                 shuffle_bytes: r.exchange_bytes,
                 shuffle_remote_bytes: r.exchange_remote_bytes,
                 output_bytes: r.output_bytes,
@@ -167,7 +174,7 @@ impl MapReduceEngine {
                     .collect(),
             };
             done(eng, report);
-        });
+        })
     }
 }
 
@@ -318,7 +325,12 @@ mod tests {
         (cluster, nn)
     }
 
-    fn run_sim(params: &FrameworkParams, nodes_per_site: usize, records: u64, variant_b: bool) -> (f64, JobReport, JobReport) {
+    fn run_sim(
+        params: &FrameworkParams,
+        nodes_per_site: usize,
+        records: u64,
+        variant_b: bool,
+    ) -> (f64, JobReport, JobReport) {
         let (cluster, nn) = small_cluster();
         let topo = cluster.topo.clone();
         let mut nodes = Vec::new();

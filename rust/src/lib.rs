@@ -14,8 +14,11 @@
 //!   ([`framework`]: storage models × slot scheduling × exchange models —
 //!   the skeleton every engine and §7 interop composition instantiates),
 //!   the Sector/Sphere and Hadoop substrates ([`sector`], [`hadoop`]),
-//!   the MalStone benchmark suite ([`malstone`]), and the
-//!   monitoring/visualization system ([`monitor`]).
+//!   the MalStone benchmark suite ([`malstone`]), the
+//!   monitoring/visualization system ([`monitor`]), and the operations
+//!   plane ([`ops`]: in-band sensor → aggregator → central-service
+//!   telemetry as real flows, fault injection, health state machine,
+//!   and closed-loop self-healing).
 //! - **Experiment surface** — every experiment (CLI subcommands, benches,
 //!   examples, integration tests) is a [`coordinator::Scenario`] built
 //!   with [`coordinator::Testbed::builder`] or drawn from the named
@@ -35,6 +38,7 @@ pub mod hadoop;
 pub mod malstone;
 pub mod monitor;
 pub mod net;
+pub mod ops;
 pub mod proptest;
 pub mod runtime;
 pub mod sector;

@@ -8,6 +8,7 @@
 //! oct table2 [scale]                  # Table 2 set through the ScenarioRunner
 //! oct scenarios                       # list the registered scenario sets
 //! oct scenarios <set> [scale] [--json]  # run one set; --json emits RunReport lines
+//! oct alerts <set> [scale]            # run one set; print the ops alert log as JSON lines
 //! oct monitor [secs]                  # Figure 3: live ANSI heatmap of a run
 //! oct provision                       # §2.2: growth-plan provisioning demo
 //! oct kernel-check                    # load AOT artifacts, verify vs oracle
@@ -26,6 +27,7 @@ const USAGE: &str = "usage: oct <command>
   table2 [scale]                   Table 2 scenario set (default scale 1/100)
   scenarios                        list registered scenario sets
   scenarios <set> [scale] [--json] run one set through the ScenarioRunner
+  alerts <set> [scale]             run one set; print the ops alert log as JSON lines
   monitor [secs]                   Figure 3: live ANSI heatmap of a run
   provision                        §2.2 growth-plan provisioning demo
   kernel-check                     load AOT artifacts, verify geometry
@@ -52,6 +54,16 @@ fn main() {
                 }
             }
         }
+        "alerts" => match args.get(1) {
+            None => {
+                eprintln!("oct: alerts needs a scenario set; try `oct alerts ops`\n{USAGE}");
+                std::process::exit(2);
+            }
+            Some(name) => {
+                let scale = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
+                std::process::exit(run_alerts_cli(name, scale));
+            }
+        },
         "monitor" => {
             let secs: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30.0);
             oct_monitor_demo(secs);
@@ -63,19 +75,21 @@ fn main() {
             println!("after §2.2 expansion plan:\n{}", p.topology().describe());
             println!("provisioning log: {} ops", p.log().len());
         }
-        "kernel-check" => match oct::runtime::MalstoneKernels::load(&oct::runtime::default_artifact_dir()) {
-            Ok(k) => {
-                println!("PJRT platform: {}", k.platform());
-                println!(
-                    "artifacts ok: hist batch {} → planes {}×{}",
-                    k.meta.batch, k.meta.num_sites, k.meta.num_weeks
-                );
+        "kernel-check" => {
+            match oct::runtime::MalstoneKernels::load(&oct::runtime::default_artifact_dir()) {
+                Ok(k) => {
+                    println!("PJRT platform: {}", k.platform());
+                    println!(
+                        "artifacts ok: hist batch {} → planes {}×{}",
+                        k.meta.batch, k.meta.num_sites, k.meta.num_weeks
+                    );
+                }
+                Err(e) => {
+                    eprintln!("artifact load failed: {e}");
+                    std::process::exit(1);
+                }
             }
-            Err(e) => {
-                eprintln!("artifact load failed: {e}");
-                std::process::exit(1);
-            }
-        },
+        }
         "version" => println!("oct {}", oct::version()),
         "help" | "--help" | "-h" => println!("{USAGE}"),
         _ => {
@@ -143,6 +157,43 @@ fn run_set_cli(name: &str, scale: u64, json: bool) -> i32 {
     } else {
         0
     }
+}
+
+/// Run one registry set and print every scenario's ops alert log as JSON
+/// lines (`{"scenario": ..., "t": ..., "kind": ..., "subject": ...,
+/// "detail": ...}`), ready for `jq`. Scenarios without an ops plane emit
+/// nothing. Exit code 0 on success, 2 on an unknown set.
+fn run_alerts_cli(name: &str, scale: u64) -> i32 {
+    use oct::util::json::{obj, Json};
+    let Some(set) = find_set(name) else {
+        eprintln!("oct: unknown scenario set '{name}'; try `oct scenarios`");
+        return 2;
+    };
+    let set = set.scaled_down(scale);
+    let runner = ScenarioRunner::new();
+    for sc in &set.scenarios {
+        let rep = runner.run(sc);
+        let Some(ops) = rep.ops else { continue };
+        for a in &ops.alerts {
+            let mut line = a.to_json();
+            if let Json::Obj(m) = &mut line {
+                m.insert("scenario".to_string(), Json::Str(rep.scenario.clone()));
+            }
+            println!("{line}");
+        }
+        let summary = obj(vec![
+            ("scenario", Json::Str(rep.scenario.clone())),
+            ("kind", Json::Str("summary".to_string())),
+            ("alerts", Json::Num(ops.alerts.len() as f64)),
+            ("dead_declared", Json::Num(ops.dead_declared as f64)),
+            ("false_dead", Json::Num(ops.false_dead as f64)),
+            ("detection_latency_max", Json::Num(ops.detection_latency_max)),
+            ("reexecuted_tasks", Json::Num(ops.reexecuted_tasks as f64)),
+            ("telemetry_wan_bytes", Json::Num(ops.telemetry_wan_bytes)),
+        ]);
+        println!("{summary}");
+    }
+    0
 }
 
 /// A compressed Figure-3 demo: run a Sphere scan on the 2009 testbed and

@@ -90,7 +90,13 @@ mod tests {
     use super::*;
 
     fn sample() -> Record {
-        Record { event_id: 42, timestamp: 1_234_567, site_id: 77, compromise_flag: 1, entity_id: 987_654_321 }
+        Record {
+            event_id: 42,
+            timestamp: 1_234_567,
+            site_id: 77,
+            compromise_flag: 1,
+            entity_id: 987_654_321,
+        }
     }
 
     #[test]

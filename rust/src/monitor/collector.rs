@@ -95,7 +95,12 @@ impl Monitor {
     /// previous sample — which equals the configured interval on schedule,
     /// but stays correct for off-schedule samples too. A second sample at
     /// the same instant is a no-op (no time has passed to measure).
-    pub fn sample_all(&mut self, eng: &Engine, net: &Rc<RefCell<FlowNet>>, pools: &[Rc<RefCell<CpuPool>>]) {
+    pub fn sample_all(
+        &mut self,
+        eng: &Engine,
+        net: &Rc<RefCell<FlowNet>>,
+        pools: &[Rc<RefCell<CpuPool>>],
+    ) {
         let now = eng.now();
         let dt = now - self.last_sample;
         if dt <= 0.0 {
@@ -170,6 +175,22 @@ impl Monitor {
     /// Figure 3 colors by and the straggler detector consumes.
     pub fn node_nic_rate(&self, n: NodeId, window: usize) -> f64 {
         self.nic_in[n.0].recent_mean(window) + self.nic_out[n.0].recent_mean(window)
+    }
+
+    /// (p50, p99) of per-node NIC throughput across the nodes that saw
+    /// any traffic: each node is represented by its recent mean over
+    /// `window` samples, and the quantiles are taken across nodes. This
+    /// is the rollup `RunReport` monitor summaries carry and the shape
+    /// the ops-plane hotspot detector mirrors in-band.
+    pub fn nic_rate_quantiles(&self, window: usize) -> (f64, f64) {
+        let rates: Vec<f64> = (0..self.topo.num_nodes())
+            .map(|i| self.node_nic_rate(NodeId(i), window))
+            .filter(|&r| r > 0.0)
+            .collect();
+        (
+            crate::util::stats::percentile(&rates, 50.0),
+            crate::util::stats::percentile(&rates, 99.0),
+        )
     }
 
     pub fn node_cpu_series(&self, n: NodeId) -> &Series {
@@ -305,6 +326,29 @@ mod tests {
     }
 
     #[test]
+    fn nic_quantile_rollup_covers_active_nodes_only() {
+        let topo = small_topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let ps = pools(&topo);
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, ps);
+        // Node0 streams to node1 at 100 B/s; nodes 2 and 3 stay idle.
+        let path = topo.path(topo.racks[0].nodes[0], topo.racks[0].nodes[1]);
+        FlowNet::start(&net, &mut eng, path, 1000.0, f64::INFINITY, |_| {});
+        eng.run_until(10.0);
+        mon.borrow_mut().disable();
+        eng.run();
+        let m = mon.borrow();
+        let (p50, p99) = m.nic_rate_quantiles(10);
+        // Both active nodes carry ~100 B/s (one tx, one rx); idle nodes
+        // are excluded rather than dragging the median to zero.
+        assert!(p50 > 50.0, "p50={p50}");
+        assert!(p99 >= p50, "p99={p99} < p50={p50}");
+        assert!(p99 < 150.0, "p99={p99}");
+    }
+
+    #[test]
     fn cpu_utilization_sampled() {
         let topo = small_topo();
         let net = FlowNet::new(&topo);
@@ -335,7 +379,8 @@ mod tests {
         Monitor::install(&mon, &mut eng, &net, ps);
         let src = topo.racks[0].nodes[0];
         let dst = topo.racks[1].nodes[0];
-        transport::send(&net, &topo, &mut eng, src, dst, 500.0, &transport::Protocol::udt(), |_| {});
+        let udt = transport::Protocol::udt();
+        transport::send(&net, &topo, &mut eng, src, dst, 500.0, &udt, |_| {});
         eng.run_until(4.0);
         mon.borrow_mut().disable();
         eng.run();
@@ -442,6 +487,9 @@ mod tests {
         eng.run();
         let frame = mon.borrow().frame_json(eng.now());
         let parsed = crate::util::json::Json::parse(&frame.to_string()).unwrap();
-        assert_eq!(parsed.get("nodes").map(|n| matches!(n, Json::Arr(v) if v.len() == 4)), Some(true));
+        assert_eq!(
+            parsed.get("nodes").map(|n| matches!(n, Json::Arr(v) if v.len() == 4)),
+            Some(true)
+        );
     }
 }

@@ -59,6 +59,24 @@ impl Series {
     pub fn values(&self) -> Vec<f64> {
         self.iter().map(|(_, v)| v).collect()
     }
+
+    /// Linear-interpolated quantile of the retained values, `q` in
+    /// [0, 100]. 0.0 when the series is empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.values(), q)
+    }
+
+    /// Median of the retained window (the hotspot detector's robust
+    /// per-node rate estimate).
+    pub fn p50(&self) -> f64 {
+        self.quantile(50.0)
+    }
+
+    /// 99th percentile of the retained window (tail rollup for monitor
+    /// summaries).
+    pub fn p99(&self) -> f64 {
+        self.quantile(99.0)
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +102,26 @@ mod tests {
         assert_eq!(s.len(), 3);
         let items: Vec<_> = s.iter().collect();
         assert_eq!(items, vec![(2.0, 20.0), (3.0, 30.0), (4.0, 40.0)]);
+    }
+
+    #[test]
+    fn quantile_rollups() {
+        let mut s = Series::new(200);
+        for i in 1..=100 {
+            s.push(i as f64, i as f64);
+        }
+        assert_eq!(s.p50(), 50.5);
+        // Interpolated 99th over 1..=100: rank 98.01 → 99.01.
+        assert!((s.p99() - 99.01).abs() < 1e-9, "{}", s.p99());
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert_eq!(s.quantile(100.0), 100.0);
+        assert_eq!(Series::new(4).p50(), 0.0);
+        // Quantiles see only the retained window after wrap.
+        let mut w = Series::new(3);
+        for v in [100.0, 1.0, 2.0, 3.0] {
+            w.push(v, v);
+        }
+        assert_eq!(w.p50(), 2.0);
     }
 
     #[test]

@@ -188,6 +188,14 @@ impl FlowNet {
         self.link_rate[l.0]
     }
 
+    /// Current configured capacity of a link, bytes/s — the live value,
+    /// which [`FlowNet::set_capacity`] (provisioning, fault injection)
+    /// may have moved away from the topology's nominal. The ops plane's
+    /// aggregators read this as their link-probe observable.
+    pub fn capacity(&self, l: LinkId) -> f64 {
+        self.capacity[l.0]
+    }
+
     /// Cumulative bytes carried by a link since the last call (monitor
     /// sampling). `now` must be the current engine time.
     pub fn take_link_bytes(&mut self, l: LinkId, now: f64) -> f64 {
@@ -758,8 +766,9 @@ mod tests {
         let hit = Rc::new(RefCell::new(false));
         let h = hit.clone();
         let path = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
-        let id =
-            FlowNet::start(&net, &mut eng, path, 0.0, f64::INFINITY, move |_| *h.borrow_mut() = true);
+        let id = FlowNet::start(&net, &mut eng, path, 0.0, f64::INFINITY, move |_| {
+            *h.borrow_mut() = true
+        });
         assert!(id.is_completed());
         eng.run();
         assert!(*hit.borrow());

@@ -127,7 +127,12 @@ impl Topology {
     /// Join `sites` with a single shared duplex wave of `bps` per
     /// direction (east/west lambdas). Every ordered site pair maps onto
     /// one of the two directed backbone links.
-    pub fn connect_shared_wave(&mut self, sites: &[SiteId], bps: f64, rtts: &[(SiteId, SiteId, f64)]) {
+    pub fn connect_shared_wave(
+        &mut self,
+        sites: &[SiteId],
+        bps: f64,
+        rtts: &[(SiteId, SiteId, f64)],
+    ) {
         let east = self.add_link(LinkKind::Wan, bps, "wan.wave.east".to_string());
         let west = self.add_link(LinkKind::Wan, bps, "wan.wave.west".to_string());
         for (i, &a) in sites.iter().enumerate() {
@@ -291,11 +296,24 @@ impl Topology {
     pub fn describe(&self) -> String {
         use std::fmt::Write;
         let mut s = String::new();
-        let _ = writeln!(s, "Topology: {} sites, {} racks, {} nodes, {} links",
-            self.sites.len(), self.racks.len(), self.nodes.len(), self.links.len());
+        let _ = writeln!(
+            s,
+            "Topology: {} sites, {} racks, {} nodes, {} links",
+            self.sites.len(),
+            self.racks.len(),
+            self.nodes.len(),
+            self.links.len()
+        );
         for (i, site) in self.sites.iter().enumerate() {
             let nodes: usize = site.racks.iter().map(|r| self.racks[r.0].nodes.len()).sum();
-            let _ = writeln!(s, "  site {} {:<20} {} rack(s), {} nodes", i, site.name, site.racks.len(), nodes);
+            let _ = writeln!(
+                s,
+                "  site {} {:<20} {} rack(s), {} nodes",
+                i,
+                site.name,
+                site.racks.len(),
+                nodes
+            );
         }
         for ((a, b), lid) in {
             let mut v: Vec<_> = self.wan.iter().collect();

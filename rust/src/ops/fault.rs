@@ -1,0 +1,126 @@
+//! Scheduled fault injection: the `FaultPlan` axis of a
+//! [`crate::coordinator::Scenario`].
+//!
+//! A plan is plain data — *what breaks, when* — applied by the scenario
+//! runner through the substrate's live hooks: node crashes go through the
+//! ops plane (sensor goes dark) and the dataflow's
+//! [`crate::framework::DataflowControl`] (in-flight work is lost), NIC
+//! degradations and lightpath flaps through
+//! [`crate::net::FlowNet::set_capacity`]. Node indices refer to the
+//! scenario's *placement* (0 = first placed node), so plans stay valid
+//! across topologies and placements.
+
+/// One kind of injected failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// The node halts: heartbeats stop, in-flight phase-1 tasks are lost
+    /// (re-executed only after the ops plane declares the node dead).
+    NodeCrash { node: usize },
+    /// The node's NIC degrades to `factor` of nominal capacity in both
+    /// directions (a flaky transceiver — the paper's "slightly inferior
+    /// performance" straggler, network flavor).
+    NicDegrade { node: usize, factor: f64 },
+    /// The shared wide-area wave degrades to `factor` of nominal capacity
+    /// (a lightpath flap); remediation re-provisions it to nominal.
+    LightpathFlap { factor: f64 },
+}
+
+/// A fault scheduled at an absolute simulated time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub at: f64,
+    pub fault: Fault,
+}
+
+/// The scenario's fault schedule (empty by default).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Crash placed node `node` at simulated time `at`.
+    pub fn node_crash(mut self, at: f64, node: usize) -> FaultPlan {
+        assert!(at >= 0.0);
+        self.events.push(FaultEvent { at, fault: Fault::NodeCrash { node } });
+        self
+    }
+
+    /// Degrade placed node `node`'s NIC to `factor` of nominal at `at`.
+    pub fn nic_degrade(mut self, at: f64, node: usize, factor: f64) -> FaultPlan {
+        assert!(at >= 0.0);
+        assert!(factor > 0.0 && factor <= 1.0, "degrade factor must be in (0, 1]");
+        self.events.push(FaultEvent { at, fault: Fault::NicDegrade { node, factor } });
+        self
+    }
+
+    /// Degrade the shared wave to `factor` of nominal at `at`.
+    pub fn lightpath_flap(mut self, at: f64, factor: f64) -> FaultPlan {
+        assert!(at >= 0.0);
+        assert!(factor > 0.0 && factor <= 1.0, "flap factor must be in (0, 1]");
+        self.events.push(FaultEvent { at, fault: Fault::LightpathFlap { factor } });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Fault times divided by `div`, tracking
+    /// [`crate::coordinator::Scenario::scaled_down`]: run time is ~linear
+    /// in workload scale, so a fault keeps its *relative* position in the
+    /// run.
+    pub fn scaled_down(&self, div: u64) -> FaultPlan {
+        assert!(div > 0);
+        FaultPlan {
+            events: self
+                .events
+                .iter()
+                .map(|e| FaultEvent { at: e.at / div as f64, fault: e.fault.clone() })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_collects_events_in_order() {
+        let plan = FaultPlan::new()
+            .node_crash(100.0, 7)
+            .nic_degrade(50.0, 3, 0.25)
+            .lightpath_flap(10.0, 0.1);
+        assert_eq!(plan.len(), 3);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.events[0].fault, Fault::NodeCrash { node: 7 });
+        assert_eq!(plan.events[1].at, 50.0);
+        assert_eq!(plan.events[2].fault, Fault::LightpathFlap { factor: 0.1 });
+        assert!(FaultPlan::new().is_empty());
+    }
+
+    #[test]
+    fn scaling_divides_times_not_targets() {
+        let plan = FaultPlan::new().node_crash(2000.0, 7).lightpath_flap(300.0, 0.05);
+        let s = plan.scaled_down(100);
+        assert_eq!(s.events[0].at, 20.0);
+        assert_eq!(s.events[0].fault, Fault::NodeCrash { node: 7 });
+        assert_eq!(s.events[1].at, 3.0);
+        assert_eq!(plan.scaled_down(1), plan);
+    }
+
+    #[test]
+    #[should_panic(expected = "degrade factor")]
+    fn rejects_zero_factor() {
+        let _ = FaultPlan::new().nic_degrade(1.0, 0, 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! The operations plane: in-band distributed monitoring, fault injection,
+//! and self-healing (paper §4, §8; operating experience from
+//! arXiv:0808.1802 and arXiv:1601.00323).
+//!
+//! Where [`crate::monitor`] is the *omniscient* sampler (it reads every
+//! counter for free — right for rendering Figure 3), this module is the
+//! *distributed* pipeline the paper actually ran: per-node sensors ship
+//! GMP-framed heartbeat+sample messages as real simulated flows, per-site
+//! aggregators roll them up and relay across the WAN, and a central
+//! service runs a `Healthy → Suspect → Dead` health state machine,
+//! hotspot / straggler / WAN-degradation detectors, an alert log, and
+//! closed-loop remediation (drain dead nodes and re-execute their lost
+//! tasks, re-provision a flapped lightpath). Monitoring overhead,
+//! detection latency, and failure response thereby become measurable
+//! outputs of a run instead of assumptions.
+//!
+//! [`FaultPlan`] is the injection side: scheduled node crashes, NIC
+//! degradations, and lightpath flaps, carried by a
+//! [`crate::coordinator::Scenario`] and applied mid-run by the scenario
+//! runner. The `ops` scenario set in [`crate::coordinator::registry`]
+//! shape-checks the closed loop end to end — bounded detection latency,
+//! telemetry ≪ workload WAN bytes, and a MalStone job that completes
+//! despite a mid-run crash.
+
+pub mod fault;
+pub mod plane;
+
+pub use fault::{Fault, FaultEvent, FaultPlan};
+pub use plane::{Alert, AlertKind, Health, OpsConfig, OpsPlane, OpsReport};

@@ -1,0 +1,1015 @@
+//! The in-simulation operations plane (paper §4): distributed monitoring
+//! whose telemetry is *in-band*, a central health state machine, anomaly
+//! detectors, and closed-loop remediation.
+//!
+//! Three tiers, mirroring the paper's monitoring system:
+//!
+//! - **SensorAgent** (per placed node): every heartbeat interval it reads
+//!   its node-local counters (free — they are on the box) and ships a
+//!   GMP-framed heartbeat+sample message to its site's aggregator as a
+//!   *real simulated flow*, consuming NIC and rack-uplink bandwidth. A
+//!   crashed node's sensor goes dark — that silence *is* the failure
+//!   signal.
+//! - **Aggregator** (per site, first placed node): batches its site's
+//!   samples plus a link-capacity probe of the shared wave and relays one
+//!   summary message across the WAN to the central service each
+//!   aggregation interval.
+//! - **OpsService** (central, first placed node): tracks per-node
+//!   `Healthy → Suspect → Dead` on missed heartbeats, runs hotspot /
+//!   straggler / WAN-degradation detectors over the relayed samples,
+//!   appends to an alert log, and closes the loop: a `Dead` verdict emits
+//!   a [`Op::DrainNode`] and invokes the dataflow's heal hook
+//!   (re-executing lost tasks); a degraded wave emits
+//!   [`Op::SetWanCapacity`] and invokes the lightpath-restore hook.
+//!
+//! Because detection rides the same simulated network as the workload,
+//! monitoring overhead (telemetry bytes on the WAN), detection latency
+//! (heartbeat cadence × thresholds + relay delay), and failure response
+//! (re-execution cost) are all *measured*, not assumed — the
+//! [`OpsReport`] carried by every ops-enabled `RunReport` quantifies
+//! them.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use crate::coordinator::provision::Op;
+use crate::monitor::Series;
+use crate::net::topology::LinkKind;
+use crate::net::{Cluster, FlowNet, LinkId, NodeId, Topology};
+use crate::sim::Engine;
+use crate::util::json::{obj, Json};
+
+/// GMP fixed header prepended to every telemetry datagram (see
+/// [`crate::gmp::wire::HEADER_LEN`]).
+pub const GMP_HEADER_BYTES: f64 = crate::gmp::wire::HEADER_LEN as f64;
+/// Endpoint processing before a datagram hits the wire / after it lands.
+const GMP_PROC_SECS: f64 = 40e-6;
+/// Fixed part of a site summary (site id, counts, wave probe).
+const SITE_SUMMARY_BYTES: f64 = 48.0;
+/// Per-node entry relayed inside a site summary.
+const PER_NODE_ENTRY_BYTES: f64 = 24.0;
+/// Retained per-node rate reports at the central service.
+const RATE_SERIES_CAP: usize = 64;
+
+/// Operations-plane tunables. The defaults give second-scale detection:
+/// `Suspect` after 3 missed heartbeats, `Dead` after 5.
+#[derive(Debug, Clone)]
+pub struct OpsConfig {
+    /// Sensor heartbeat+sample cadence, simulated seconds.
+    pub heartbeat_interval: f64,
+    /// Aggregator relay cadence.
+    pub aggregate_interval: f64,
+    /// Central health-check sweep cadence.
+    pub check_interval: f64,
+    /// Heartbeats missed before `Healthy → Suspect`.
+    pub suspect_missed: f64,
+    /// Heartbeats missed before `Suspect → Dead` (drain + re-execute).
+    pub dead_missed: f64,
+    /// A node is a hotspot when its reported NIC rate exceeds this
+    /// multiple of the cluster median.
+    pub hotspot_factor: f64,
+    /// A node is a straggler when its reported NIC rate falls below this
+    /// fraction of the cluster median.
+    pub straggler_factor: f64,
+    /// The wave is degraded when its probed capacity falls below this
+    /// fraction of nominal.
+    pub wan_degraded_fraction: f64,
+    /// Sample payload bytes per heartbeat (on top of the GMP header).
+    pub sample_bytes: f64,
+    /// When false, detection still runs but remediation hooks do not fire
+    /// (observe-only mode).
+    pub self_heal: bool,
+}
+
+impl Default for OpsConfig {
+    fn default() -> Self {
+        OpsConfig {
+            heartbeat_interval: 1.0,
+            aggregate_interval: 1.0,
+            check_interval: 1.0,
+            suspect_missed: 3.0,
+            dead_missed: 5.0,
+            hotspot_factor: 4.0,
+            straggler_factor: 0.5,
+            wan_degraded_fraction: 0.75,
+            sample_bytes: 64.0,
+            self_heal: true,
+        }
+    }
+}
+
+/// Per-node health as seen by the central service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Suspect,
+    Dead,
+}
+
+/// What an alert is about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertKind {
+    NodeSuspect,
+    NodeDead,
+    NodeRecovered,
+    Hotspot,
+    Straggler,
+    WanDegraded,
+    WanRestored,
+    TasksReExecuted,
+}
+
+impl AlertKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlertKind::NodeSuspect => "node-suspect",
+            AlertKind::NodeDead => "node-dead",
+            AlertKind::NodeRecovered => "node-recovered",
+            AlertKind::Hotspot => "hotspot",
+            AlertKind::Straggler => "straggler",
+            AlertKind::WanDegraded => "wan-degraded",
+            AlertKind::WanRestored => "wan-restored",
+            AlertKind::TasksReExecuted => "tasks-reexecuted",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AlertKind> {
+        [
+            AlertKind::NodeSuspect,
+            AlertKind::NodeDead,
+            AlertKind::NodeRecovered,
+            AlertKind::Hotspot,
+            AlertKind::Straggler,
+            AlertKind::WanDegraded,
+            AlertKind::WanRestored,
+            AlertKind::TasksReExecuted,
+        ]
+        .into_iter()
+        .find(|k| k.name() == s)
+    }
+}
+
+/// One entry of the central service's alert log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Alert {
+    /// Simulated time the alert fired.
+    pub t: f64,
+    pub kind: AlertKind,
+    /// What it concerns (a node name, or `"wave"`).
+    pub subject: String,
+    pub detail: String,
+}
+
+impl Alert {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("t", Json::Num(self.t)),
+            ("kind", Json::Str(self.kind.name().to_string())),
+            ("subject", Json::Str(self.subject.clone())),
+            ("detail", Json::Str(self.detail.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Alert, String> {
+        let kind_s = j.get("kind").and_then(Json::as_str).ok_or("missing alert 'kind'")?;
+        Ok(Alert {
+            t: j.get("t").and_then(Json::as_f64).ok_or("missing alert 't'")?,
+            kind: AlertKind::parse(kind_s).ok_or_else(|| format!("unknown alert kind '{kind_s}'"))?,
+            subject: j
+                .get("subject")
+                .and_then(Json::as_str)
+                .ok_or("missing alert 'subject'")?
+                .to_string(),
+            detail: j
+                .get("detail")
+                .and_then(Json::as_str)
+                .ok_or("missing alert 'detail'")?
+                .to_string(),
+        })
+    }
+}
+
+/// The operations plane's contribution to a `RunReport`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpsReport {
+    pub heartbeat_interval: f64,
+    /// Telemetry messages shipped (heartbeats + site summaries).
+    pub telemetry_msgs: u64,
+    /// Total telemetry bytes, GMP framing included.
+    pub telemetry_bytes: f64,
+    /// The subset of telemetry bytes whose path crossed the WAN.
+    pub telemetry_wan_bytes: f64,
+    /// Nodes that actually crashed (ground truth from the fault plan).
+    pub crashed_nodes: usize,
+    /// Nodes the service declared `Dead`.
+    pub dead_declared: usize,
+    /// `Dead` verdicts on nodes that never crashed (false positives).
+    pub false_dead: usize,
+    /// Worst crash → `Dead`-verdict gap, seconds (0 when nothing died).
+    pub detection_latency_max: f64,
+    /// Tasks re-executed by the heal hook across the run.
+    pub reexecuted_tasks: usize,
+    /// Remediation intents emitted (drains, wave re-provisioning).
+    pub remediation_ops: usize,
+    pub alerts: Vec<Alert>,
+}
+
+impl OpsReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("heartbeat_interval", Json::Num(self.heartbeat_interval)),
+            ("telemetry_msgs", Json::Num(self.telemetry_msgs as f64)),
+            ("telemetry_bytes", Json::Num(self.telemetry_bytes)),
+            ("telemetry_wan_bytes", Json::Num(self.telemetry_wan_bytes)),
+            ("crashed_nodes", Json::Num(self.crashed_nodes as f64)),
+            ("dead_declared", Json::Num(self.dead_declared as f64)),
+            ("false_dead", Json::Num(self.false_dead as f64)),
+            ("detection_latency_max", Json::Num(self.detection_latency_max)),
+            ("reexecuted_tasks", Json::Num(self.reexecuted_tasks as f64)),
+            ("remediation_ops", Json::Num(self.remediation_ops as f64)),
+            ("alerts", Json::Arr(self.alerts.iter().map(Alert::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<OpsReport, String> {
+        fn num(j: &Json, k: &str) -> Result<f64, String> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing number '{k}'"))
+        }
+        let alerts = match j.get("alerts") {
+            Some(Json::Arr(xs)) => xs.iter().map(Alert::from_json).collect::<Result<_, _>>()?,
+            _ => return Err("missing array 'alerts'".to_string()),
+        };
+        Ok(OpsReport {
+            heartbeat_interval: num(j, "heartbeat_interval")?,
+            telemetry_msgs: num(j, "telemetry_msgs")? as u64,
+            telemetry_bytes: num(j, "telemetry_bytes")?,
+            telemetry_wan_bytes: num(j, "telemetry_wan_bytes")?,
+            crashed_nodes: num(j, "crashed_nodes")? as usize,
+            dead_declared: num(j, "dead_declared")? as usize,
+            false_dead: num(j, "false_dead")? as usize,
+            detection_latency_max: num(j, "detection_latency_max")?,
+            reexecuted_tasks: num(j, "reexecuted_tasks")? as usize,
+            remediation_ops: num(j, "remediation_ops")? as usize,
+            alerts,
+        })
+    }
+}
+
+/// A node's latest relayed observation.
+struct NodeReport {
+    node: NodeId,
+    sent_at: f64,
+    nic_rate: f64,
+}
+
+struct NodeHealth {
+    health: Health,
+    /// Send-timestamp of the newest heartbeat relayed to central.
+    last_heard: f64,
+    /// Reported NIC rate history (hotspot/straggler detection uses the
+    /// per-node [`Series::p50`] as its robust rate estimate).
+    rates: Series,
+}
+
+type DeadHook = Box<dyn FnMut(&mut Engine, NodeId) -> usize>;
+type WanRestoreHook = Box<dyn FnMut(&mut Engine)>;
+
+/// The running operations plane. Use through `Rc<RefCell<_>>` (like
+/// [`crate::monitor::Monitor`]); [`OpsPlane::install`] starts the sensor,
+/// aggregator, and health-check loops on the engine.
+pub struct OpsPlane {
+    cfg: OpsConfig,
+    topo: Rc<Topology>,
+    net: Rc<RefCell<FlowNet>>,
+    nodes: Vec<NodeId>,
+    aggregator_of_site: HashMap<usize, NodeId>,
+    central: NodeId,
+    enabled: bool,
+    /// Ground truth: crashed nodes and when (set by fault injection).
+    crashed: HashMap<NodeId, f64>,
+    telemetry_msgs: u64,
+    telemetry_bytes: f64,
+    telemetry_wan_bytes: f64,
+    /// Aggregator buffers: site → samples since the last relay.
+    agg_pending: HashMap<usize, Vec<NodeReport>>,
+    /// Central service state.
+    tracked: HashMap<NodeId, NodeHealth>,
+    alerts: Vec<Alert>,
+    ops_log: Vec<Op>,
+    dead_declared: usize,
+    false_dead: usize,
+    detection_latency_max: f64,
+    reexecuted_tasks: usize,
+    hot_flagged: HashSet<NodeId>,
+    slow_flagged: HashSet<NodeId>,
+    /// The shared wave's links with their nominal capacities.
+    wan_links: Vec<(LinkId, f64)>,
+    /// Latest probed aggregate wave capacity (starts at nominal).
+    wan_observed: f64,
+    wan_degraded: bool,
+    dead_hook: Option<DeadHook>,
+    wan_restore_hook: Option<WanRestoreHook>,
+}
+
+impl OpsPlane {
+    /// Build the plane over a deployment (`nodes` = the scenario's placed
+    /// nodes) and start its loops. Aggregators are each site's first
+    /// placed node; the central service runs on the first placed node
+    /// overall.
+    pub fn install(
+        cluster: &Cluster,
+        nodes: &[NodeId],
+        cfg: OpsConfig,
+        eng: &mut Engine,
+    ) -> Rc<RefCell<OpsPlane>> {
+        assert!(!nodes.is_empty(), "ops plane needs at least one node");
+        assert!(cfg.heartbeat_interval > 0.0 && cfg.aggregate_interval > 0.0);
+        assert!(cfg.check_interval > 0.0);
+        assert!(cfg.dead_missed > cfg.suspect_missed);
+        let topo = cluster.topo.clone();
+        let mut aggregator_of_site = HashMap::new();
+        for &n in nodes {
+            aggregator_of_site.entry(topo.node(n).site.0).or_insert(n);
+        }
+        let now = eng.now();
+        let tracked = nodes
+            .iter()
+            .map(|&n| {
+                (
+                    n,
+                    NodeHealth {
+                        health: Health::Healthy,
+                        last_heard: now,
+                        rates: Series::new(RATE_SERIES_CAP),
+                    },
+                )
+            })
+            .collect();
+        let netb = cluster.net.borrow();
+        let wan_links: Vec<(LinkId, f64)> = topo
+            .links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind == LinkKind::Wan)
+            .map(|(i, _)| (LinkId(i), netb.capacity(LinkId(i))))
+            .collect();
+        drop(netb);
+        let wan_nominal: f64 = wan_links.iter().map(|(_, c)| c).sum();
+        let plane = Rc::new(RefCell::new(OpsPlane {
+            central: nodes[0],
+            nodes: nodes.to_vec(),
+            aggregator_of_site,
+            topo,
+            net: cluster.net.clone(),
+            enabled: true,
+            crashed: HashMap::new(),
+            telemetry_msgs: 0,
+            telemetry_bytes: 0.0,
+            telemetry_wan_bytes: 0.0,
+            agg_pending: HashMap::new(),
+            tracked,
+            alerts: Vec::new(),
+            ops_log: Vec::new(),
+            dead_declared: 0,
+            false_dead: 0,
+            detection_latency_max: 0.0,
+            reexecuted_tasks: 0,
+            hot_flagged: HashSet::new(),
+            slow_flagged: HashSet::new(),
+            wan_links,
+            wan_observed: wan_nominal,
+            wan_degraded: false,
+            dead_hook: None,
+            wan_restore_hook: None,
+            cfg,
+        }));
+        {
+            let p = plane.borrow();
+            // Stagger sensors across the heartbeat interval so 100+ nodes
+            // don't synchronize into one event storm.
+            for (i, &n) in p.nodes.iter().enumerate() {
+                let offset =
+                    p.cfg.heartbeat_interval * (i as f64 + 1.0) / (p.nodes.len() as f64 + 1.0);
+                Self::sensor_tick(plane.clone(), eng, n, offset);
+            }
+            let sites: Vec<(usize, NodeId)> = {
+                let mut v: Vec<_> = p.aggregator_of_site.iter().map(|(&s, &a)| (s, a)).collect();
+                v.sort_unstable();
+                v
+            };
+            for (site, agg) in sites {
+                Self::aggregator_tick(plane.clone(), eng, site, agg, p.cfg.aggregate_interval);
+            }
+            Self::check_tick(plane.clone(), eng, p.cfg.check_interval);
+        }
+        plane
+    }
+
+    /// Wire the `Dead`-verdict remediation: called with the dead node,
+    /// returns how many tasks it re-queued (the dataflow's heal).
+    pub fn set_dead_hook(&mut self, hook: DeadHook) {
+        self.dead_hook = Some(hook);
+    }
+
+    /// Wire the degraded-wave remediation (re-provision to nominal).
+    pub fn set_wan_restore_hook(&mut self, hook: WanRestoreHook) {
+        self.wan_restore_hook = Some(hook);
+    }
+
+    /// Fault-injection ground truth: the node halted at `now`. Its sensor
+    /// stops at the next tick; detection must come from the silence.
+    pub fn mark_crashed(&mut self, node: NodeId, now: f64) {
+        self.crashed.entry(node).or_insert(now);
+    }
+
+    /// Stop all loops at their next tick (lets the event heap drain).
+    pub fn disable(&mut self) {
+        self.enabled = false;
+    }
+
+    pub fn alerts(&self) -> &[Alert] {
+        &self.alerts
+    }
+
+    /// Remediation intents emitted so far (replayable against a
+    /// [`crate::coordinator::Provisioner`] seeded with the same base).
+    pub fn ops_log(&self) -> &[Op] {
+        &self.ops_log
+    }
+
+    pub fn health_of(&self, node: NodeId) -> Option<Health> {
+        self.tracked.get(&node).map(|h| h.health)
+    }
+
+    /// The shared wave's links with their nominal capacities (snapshot at
+    /// install time) — the restore targets remediation drives back to.
+    pub fn wan_nominals(&self) -> &[(LinkId, f64)] {
+        &self.wan_links
+    }
+
+    /// Snapshot the run's operations metrics.
+    pub fn report(&self) -> OpsReport {
+        OpsReport {
+            heartbeat_interval: self.cfg.heartbeat_interval,
+            telemetry_msgs: self.telemetry_msgs,
+            telemetry_bytes: self.telemetry_bytes,
+            telemetry_wan_bytes: self.telemetry_wan_bytes,
+            crashed_nodes: self.crashed.len(),
+            dead_declared: self.dead_declared,
+            false_dead: self.false_dead,
+            detection_latency_max: self.detection_latency_max,
+            reexecuted_tasks: self.reexecuted_tasks,
+            remediation_ops: self.ops_log.len(),
+            alerts: self.alerts.clone(),
+        }
+    }
+
+    fn alert(&mut self, t: f64, kind: AlertKind, subject: impl Into<String>, detail: String) {
+        self.alerts.push(Alert { t, kind, subject: subject.into(), detail });
+    }
+
+    // ---- telemetry transport -----------------------------------------
+
+    /// Ship `bytes` of telemetry from `src` to `dst` as a real flow
+    /// (GMP-style: connectionless, one-way latency then line-rate
+    /// datagrams), then deliver. Loopback messages skip the network.
+    fn ship<F: FnOnce(&mut Engine) + 'static>(
+        plane: &Rc<RefCell<OpsPlane>>,
+        eng: &mut Engine,
+        src: NodeId,
+        dst: NodeId,
+        bytes: f64,
+        deliver: F,
+    ) {
+        let (net, path, owd) = {
+            let mut p = plane.borrow_mut();
+            p.telemetry_msgs += 1;
+            p.telemetry_bytes += bytes;
+            if src != dst && p.topo.node(src).site != p.topo.node(dst).site {
+                p.telemetry_wan_bytes += bytes;
+            }
+            if src == dst {
+                (None, Vec::new(), 0.0)
+            } else {
+                (Some(p.net.clone()), p.topo.path(src, dst), 0.5 * p.topo.rtt(src, dst))
+            }
+        };
+        match net {
+            None => {
+                eng.schedule_in(GMP_PROC_SECS, deliver);
+            }
+            Some(net) => {
+                eng.schedule_in(owd + GMP_PROC_SECS, move |eng| {
+                    FlowNet::start(&net, eng, path, bytes, f64::INFINITY, deliver);
+                });
+            }
+        }
+    }
+
+    // ---- sensor tier --------------------------------------------------
+
+    fn sensor_tick(plane: Rc<RefCell<OpsPlane>>, eng: &mut Engine, node: NodeId, delay: f64) {
+        eng.schedule_in(delay, move |eng| {
+            let (enabled, crashed, hb) = {
+                let p = plane.borrow();
+                (p.enabled, p.crashed.contains_key(&node), p.cfg.heartbeat_interval)
+            };
+            if !enabled || crashed {
+                return; // dark: a dead box sends nothing
+            }
+            Self::send_sample(&plane, eng, node);
+            Self::sensor_tick(plane, eng, node, hb);
+        });
+    }
+
+    fn send_sample(plane: &Rc<RefCell<OpsPlane>>, eng: &mut Engine, node: NodeId) {
+        let (agg, site, bytes, nic_rate) = {
+            let p = plane.borrow();
+            let site = p.topo.node(node).site.0;
+            let agg = p.aggregator_of_site[&site];
+            let nd = p.topo.node(node);
+            let n = p.net.borrow();
+            let nic = n.link_rate(nd.nic_tx) + n.link_rate(nd.nic_rx);
+            (agg, site, GMP_HEADER_BYTES + p.cfg.sample_bytes, nic)
+        };
+        let report = NodeReport { node, sent_at: eng.now(), nic_rate };
+        let plane2 = plane.clone();
+        Self::ship(plane, eng, node, agg, bytes, move |_eng| {
+            let mut p = plane2.borrow_mut();
+            // A crashed aggregator drops whatever lands on it.
+            if !p.crashed.contains_key(&agg) {
+                p.agg_pending.entry(site).or_default().push(report);
+            }
+        });
+    }
+
+    // ---- aggregator tier ----------------------------------------------
+
+    fn aggregator_tick(
+        plane: Rc<RefCell<OpsPlane>>,
+        eng: &mut Engine,
+        site: usize,
+        agg: NodeId,
+        interval: f64,
+    ) {
+        eng.schedule_in(interval, move |eng| {
+            let (enabled, crashed) = {
+                let p = plane.borrow();
+                (p.enabled, p.crashed.contains_key(&agg))
+            };
+            if !enabled || crashed {
+                return; // the site goes dark with its aggregator
+            }
+            Self::relay_site(&plane, eng, site, agg);
+            Self::aggregator_tick(plane, eng, site, agg, interval);
+        });
+    }
+
+    fn relay_site(plane: &Rc<RefCell<OpsPlane>>, eng: &mut Engine, site: usize, agg: NodeId) {
+        let (central, reports, wan_obs, bytes) = {
+            let mut p = plane.borrow_mut();
+            let reports = p.agg_pending.remove(&site).unwrap_or_default();
+            // Link-capacity probe of the shared wave (the aggregator's
+            // site edge terminates on it): what an iperf/SNMP probe of the
+            // lightpath would read right now.
+            let n = p.net.borrow();
+            let wan_obs: f64 = p.wan_links.iter().map(|(l, _)| n.capacity(*l)).sum();
+            drop(n);
+            let bytes = GMP_HEADER_BYTES
+                + SITE_SUMMARY_BYTES
+                + PER_NODE_ENTRY_BYTES * reports.len() as f64;
+            (p.central, reports, wan_obs, bytes)
+        };
+        let plane2 = plane.clone();
+        Self::ship(plane, eng, agg, central, bytes, move |eng| {
+            Self::central_ingest(&plane2, eng, reports, wan_obs);
+        });
+    }
+
+    // ---- central service ----------------------------------------------
+
+    fn central_ingest(
+        plane: &Rc<RefCell<OpsPlane>>,
+        eng: &mut Engine,
+        reports: Vec<NodeReport>,
+        wan_obs: f64,
+    ) {
+        let now = eng.now();
+        let mut p = plane.borrow_mut();
+        if p.crashed.contains_key(&p.central) {
+            return; // the summary landed on a dead box
+        }
+        for r in reports {
+            let Some(h) = p.tracked.get_mut(&r.node) else { continue };
+            if r.sent_at > h.last_heard {
+                h.last_heard = r.sent_at;
+            }
+            h.rates.push(r.sent_at, r.nic_rate);
+            // A heartbeat clears suspicion; Dead is sticky (drained).
+            let recovered = h.health == Health::Suspect;
+            if recovered {
+                h.health = Health::Healthy;
+            }
+            if recovered {
+                let name = p.topo.node(r.node).name.clone();
+                p.alert(now, AlertKind::NodeRecovered, name, "heartbeat resumed".to_string());
+            }
+        }
+        p.wan_observed = wan_obs;
+    }
+
+    fn check_tick(plane: Rc<RefCell<OpsPlane>>, eng: &mut Engine, interval: f64) {
+        eng.schedule_in(interval, move |eng| {
+            let halted = {
+                let p = plane.borrow();
+                // A crashed central halts with its host: the plane goes
+                // dark (no failover modeled) instead of a dead box still
+                // issuing verdicts and remediation.
+                !p.enabled || p.crashed.contains_key(&p.central)
+            };
+            if halted {
+                return;
+            }
+            Self::run_checks(&plane, eng);
+            Self::check_tick(plane, eng, interval);
+        });
+    }
+
+    /// One health sweep: the state machine, the detectors, and — outside
+    /// the plane borrow — the remediation hooks.
+    fn run_checks(plane: &Rc<RefCell<OpsPlane>>, eng: &mut Engine) {
+        let now = eng.now();
+        let mut newly_dead: Vec<NodeId> = Vec::new();
+        let mut restore_wan = false;
+        {
+            let mut p = plane.borrow_mut();
+            let hb = p.cfg.heartbeat_interval;
+            let suspect_after = p.cfg.suspect_missed * hb;
+            let dead_after = p.cfg.dead_missed * hb;
+            // Health state machine on heartbeat staleness.
+            let nodes = p.nodes.clone();
+            for n in nodes {
+                let silent = now - p.tracked[&n].last_heard;
+                let health = p.tracked[&n].health;
+                match health {
+                    Health::Healthy if silent > suspect_after => {
+                        p.tracked.get_mut(&n).unwrap().health = Health::Suspect;
+                        let name = p.topo.node(n).name.clone();
+                        p.alert(
+                            now,
+                            AlertKind::NodeSuspect,
+                            name,
+                            format!("no heartbeat for {silent:.1}s"),
+                        );
+                    }
+                    Health::Suspect if silent > dead_after => {
+                        p.tracked.get_mut(&n).unwrap().health = Health::Dead;
+                        p.dead_declared += 1;
+                        match p.crashed.get(&n).copied() {
+                            Some(t0) => {
+                                let latency = now - t0;
+                                if latency > p.detection_latency_max {
+                                    p.detection_latency_max = latency;
+                                }
+                            }
+                            None => p.false_dead += 1,
+                        }
+                        let name = p.topo.node(n).name.clone();
+                        p.alert(
+                            now,
+                            AlertKind::NodeDead,
+                            name,
+                            format!("no heartbeat for {silent:.1}s; draining"),
+                        );
+                        p.ops_log.push(Op::DrainNode { node: n.0 });
+                        newly_dead.push(n);
+                    }
+                    _ => {}
+                }
+            }
+            // Hotspot / straggler detectors over relayed rates. Each node
+            // is represented by the median of its reported history
+            // (Series::p50 — robust to single-sample spikes).
+            let rates: Vec<(NodeId, f64)> = p
+                .nodes
+                .iter()
+                .filter(|n| p.tracked[n].health != Health::Dead)
+                .map(|&n| (n, p.tracked[&n].rates.p50()))
+                .collect();
+            let active: Vec<f64> = rates.iter().map(|&(_, r)| r).filter(|&r| r > 0.0).collect();
+            if active.len() >= 3 {
+                let median = crate::util::stats::percentile(&active, 50.0);
+                if median > 0.0 {
+                    for &(n, r) in &rates {
+                        if r <= 0.0 {
+                            continue; // idle, not slow
+                        }
+                        if r > p.cfg.hotspot_factor * median && p.hot_flagged.insert(n) {
+                            let name = p.topo.node(n).name.clone();
+                            p.alert(
+                                now,
+                                AlertKind::Hotspot,
+                                name,
+                                format!("nic {r:.0} B/s vs median {median:.0} B/s"),
+                            );
+                        }
+                        if r < p.cfg.straggler_factor * median && p.slow_flagged.insert(n) {
+                            let name = p.topo.node(n).name.clone();
+                            p.alert(
+                                now,
+                                AlertKind::Straggler,
+                                name,
+                                format!("nic {r:.0} B/s vs median {median:.0} B/s"),
+                            );
+                        }
+                    }
+                }
+            }
+            // WAN degradation from the aggregators' wave probe.
+            let nominal: f64 = p.wan_links.iter().map(|&(_, c)| c).sum();
+            if !p.wan_degraded
+                && nominal > 0.0
+                && p.wan_observed < p.cfg.wan_degraded_fraction * nominal
+            {
+                p.wan_degraded = true;
+                let obs = p.wan_observed;
+                p.alert(
+                    now,
+                    AlertKind::WanDegraded,
+                    "wave",
+                    format!("probed {obs:.2e} B/s of nominal {nominal:.2e} B/s"),
+                );
+                // Replayable intent: re-provision the shared wave back to
+                // nominal (any site pair addresses the shared links).
+                let gbps = p.wan_links.iter().map(|&(_, c)| c).fold(0.0, f64::max) * 8.0 / 1e9;
+                p.ops_log.push(Op::SetWanCapacity { a: 0, b: 1, gbps });
+                restore_wan = p.cfg.self_heal;
+            }
+        }
+        // Remediation, with the plane borrow released: hooks reach into
+        // the dataflow and the fluid network.
+        for n in newly_dead {
+            let hook = plane.borrow_mut().dead_hook.take();
+            if let Some(mut h) = hook {
+                let requeued = h(eng, n);
+                let mut p = plane.borrow_mut();
+                p.reexecuted_tasks += requeued;
+                if requeued > 0 {
+                    let name = p.topo.node(n).name.clone();
+                    p.alert(
+                        now,
+                        AlertKind::TasksReExecuted,
+                        name,
+                        format!("{requeued} lost task(s) re-queued on survivors"),
+                    );
+                }
+                p.dead_hook = Some(h);
+            }
+        }
+        if restore_wan {
+            let hook = plane.borrow_mut().wan_restore_hook.take();
+            if let Some(mut h) = hook {
+                h(eng);
+                let mut p = plane.borrow_mut();
+                p.wan_degraded = false; // restored; a later flap re-arms
+                // The last relayed probe predates the restore; reset the
+                // observed capacity to nominal so the next sweep doesn't
+                // re-detect the already-healed flap from a stale reading.
+                p.wan_observed = p.wan_links.iter().map(|&(_, c)| c).sum();
+                p.alert(now, AlertKind::WanRestored, "wave", "re-provisioned to nominal".into());
+                p.wan_restore_hook = Some(h);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topology::NodeSpec;
+
+    fn two_site_cluster() -> Cluster {
+        let mut t = Topology::new();
+        let a = t.add_site("a");
+        let b = t.add_site("b");
+        let spec = NodeSpec::default();
+        t.add_rack(a, 2, &spec, 1.25e9);
+        t.add_rack(b, 2, &spec, 1.25e9);
+        t.connect_sites(a, b, 1.25e9, 0.04);
+        Cluster::new(t)
+    }
+
+    fn drive(plane: &Rc<RefCell<OpsPlane>>, eng: &mut Engine, until: f64) {
+        eng.run_until(until);
+        plane.borrow_mut().disable();
+        eng.run();
+    }
+
+    #[test]
+    fn healthy_cluster_stays_healthy_and_accounts_telemetry() {
+        let cluster = two_site_cluster();
+        let nodes = cluster.topo.node_ids();
+        let mut eng = Engine::new();
+        let plane = OpsPlane::install(&cluster, &nodes, OpsConfig::default(), &mut eng);
+        drive(&plane, &mut eng, 20.0);
+        let p = plane.borrow();
+        for &n in &nodes {
+            assert_eq!(p.health_of(n), Some(Health::Healthy), "{n:?}");
+        }
+        let r = p.report();
+        // ~20 beats × 4 nodes + ~20 relays × 2 sites.
+        assert!(r.telemetry_msgs > 80, "{}", r.telemetry_msgs);
+        assert!(r.telemetry_bytes > 0.0);
+        // Site b's aggregator relays across the WAN to central (site a).
+        assert!(r.telemetry_wan_bytes > 0.0);
+        assert!(r.telemetry_wan_bytes < r.telemetry_bytes);
+        assert_eq!(r.dead_declared, 0);
+        assert_eq!(r.false_dead, 0);
+        assert_eq!(r.detection_latency_max, 0.0);
+        assert!(r.alerts.is_empty(), "{:?}", r.alerts);
+        // The telemetry actually crossed the fluid network.
+        assert!(cluster.net.borrow().completions() > 40);
+    }
+
+    #[test]
+    fn crash_is_detected_within_bound_and_drained() {
+        let cluster = two_site_cluster();
+        let nodes = cluster.topo.node_ids();
+        let victim = nodes[3]; // site b, not an aggregator (node 2 is)
+        let mut eng = Engine::new();
+        let cfg = OpsConfig::default();
+        let plane = OpsPlane::install(&cluster, &nodes, cfg.clone(), &mut eng);
+        let healed: Rc<RefCell<Vec<NodeId>>> = Rc::new(RefCell::new(Vec::new()));
+        {
+            let h = healed.clone();
+            plane.borrow_mut().set_dead_hook(Box::new(move |_eng, n| {
+                h.borrow_mut().push(n);
+                3 // pretend three tasks were re-queued
+            }));
+        }
+        let p2 = plane.clone();
+        eng.schedule_at(5.0, move |eng| {
+            p2.borrow_mut().mark_crashed(victim, eng.now());
+        });
+        drive(&plane, &mut eng, 30.0);
+        let p = plane.borrow();
+        assert_eq!(p.health_of(victim), Some(Health::Dead));
+        let r = p.report();
+        assert_eq!(r.crashed_nodes, 1);
+        assert_eq!(r.dead_declared, 1);
+        assert_eq!(r.false_dead, 0, "healthy nodes mis-declared: {:?}", r.alerts);
+        // Bounded detection: dead threshold + heartbeat phase + relay +
+        // check-tick granularity.
+        let bound = (cfg.dead_missed + 3.0) * cfg.heartbeat_interval;
+        assert!(
+            r.detection_latency_max > 0.0 && r.detection_latency_max <= bound,
+            "latency {} vs bound {bound}",
+            r.detection_latency_max
+        );
+        assert_eq!(r.reexecuted_tasks, 3);
+        assert_eq!(*healed.borrow(), vec![victim]);
+        assert!(p.ops_log().contains(&Op::DrainNode { node: victim.0 }));
+        let kinds: Vec<AlertKind> = r.alerts.iter().map(|a| a.kind).collect();
+        assert!(kinds.contains(&AlertKind::NodeSuspect));
+        assert!(kinds.contains(&AlertKind::NodeDead));
+        assert!(kinds.contains(&AlertKind::TasksReExecuted));
+        // The alert names the right box.
+        let dead: Vec<&Alert> =
+            r.alerts.iter().filter(|a| a.kind == AlertKind::NodeDead).collect();
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].subject, cluster.topo.node(victim).name);
+    }
+
+    #[test]
+    fn wan_degradation_detected_and_self_healed() {
+        let cluster = two_site_cluster();
+        let nodes = cluster.topo.node_ids();
+        let mut eng = Engine::new();
+        let plane = OpsPlane::install(&cluster, &nodes, OpsConfig::default(), &mut eng);
+        let wan: Vec<(LinkId, f64)> = plane.borrow().wan_nominals().to_vec();
+        assert_eq!(wan.len(), 2, "two directed WAN links");
+        {
+            let net = cluster.net.clone();
+            let wl = wan.clone();
+            plane.borrow_mut().set_wan_restore_hook(Box::new(move |eng| {
+                for &(l, cap) in &wl {
+                    FlowNet::set_capacity(&net, eng, l, cap);
+                }
+            }));
+        }
+        // A lightpath flap at t=5: both directions drop to 5% of nominal.
+        let net = cluster.net.clone();
+        let wl = wan.clone();
+        eng.schedule_at(5.0, move |eng| {
+            for &(l, cap) in &wl {
+                FlowNet::set_capacity(&net, eng, l, cap * 0.05);
+            }
+        });
+        drive(&plane, &mut eng, 20.0);
+        let p = plane.borrow();
+        let kinds: Vec<AlertKind> = p.alerts().iter().map(|a| a.kind).collect();
+        assert!(kinds.contains(&AlertKind::WanDegraded), "{kinds:?}");
+        assert!(kinds.contains(&AlertKind::WanRestored), "{kinds:?}");
+        assert!(p
+            .ops_log()
+            .iter()
+            .any(|op| matches!(op, Op::SetWanCapacity { gbps, .. } if (*gbps - 10.0).abs() < 0.1)));
+        // The wave is back at nominal.
+        let netb = cluster.net.borrow();
+        for &(l, cap) in &wan {
+            assert!((netb.capacity(l) - cap).abs() < 1.0, "link {l:?} not restored");
+        }
+        // No node false positives along the way.
+        assert_eq!(p.report().false_dead, 0);
+    }
+
+    #[test]
+    fn crashed_central_goes_dark_without_false_verdicts() {
+        let cluster = two_site_cluster();
+        let nodes = cluster.topo.node_ids();
+        let central = nodes[0];
+        let mut eng = Engine::new();
+        let plane = OpsPlane::install(&cluster, &nodes, OpsConfig::default(), &mut eng);
+        let p2 = plane.clone();
+        eng.schedule_at(5.0, move |eng| {
+            p2.borrow_mut().mark_crashed(central, eng.now());
+        });
+        drive(&plane, &mut eng, 30.0);
+        let p = plane.borrow();
+        let r = p.report();
+        // The service halted with its host: no verdicts, no remediation —
+        // the plane goes dark rather than rogue.
+        assert_eq!(r.dead_declared, 0);
+        assert_eq!(r.false_dead, 0);
+        assert!(r.alerts.is_empty(), "{:?}", r.alerts);
+        assert!(p.ops_log().is_empty());
+    }
+
+    #[test]
+    fn detectors_flag_hotspot_and_straggler_once() {
+        let cluster = two_site_cluster();
+        let nodes = cluster.topo.node_ids();
+        let mut eng = Engine::new();
+        let plane = OpsPlane::install(&cluster, &nodes, OpsConfig::default(), &mut eng);
+        // Synthetic relayed samples: node0 blazing, node3 crawling, the
+        // middle two at the median.
+        for tick in 0..5 {
+            let t = tick as f64;
+            let reports = vec![
+                NodeReport { node: nodes[0], sent_at: t, nic_rate: 1000.0 },
+                NodeReport { node: nodes[1], sent_at: t, nic_rate: 100.0 },
+                NodeReport { node: nodes[2], sent_at: t, nic_rate: 110.0 },
+                NodeReport { node: nodes[3], sent_at: t, nic_rate: 10.0 },
+            ];
+            OpsPlane::central_ingest(&plane, &mut eng, reports, f64::INFINITY);
+        }
+        // Two sweeps: flagged exactly once each, not re-alerted.
+        OpsPlane::run_checks(&plane, &mut eng);
+        OpsPlane::run_checks(&plane, &mut eng);
+        let p = plane.borrow();
+        let hot: Vec<&Alert> =
+            p.alerts().iter().filter(|a| a.kind == AlertKind::Hotspot).collect();
+        let slow: Vec<&Alert> =
+            p.alerts().iter().filter(|a| a.kind == AlertKind::Straggler).collect();
+        assert_eq!(hot.len(), 1, "{:?}", p.alerts());
+        assert_eq!(slow.len(), 1, "{:?}", p.alerts());
+        assert_eq!(hot[0].subject, cluster.topo.node(nodes[0]).name);
+        assert_eq!(slow[0].subject, cluster.topo.node(nodes[3]).name);
+    }
+
+    #[test]
+    fn ops_report_json_roundtrips() {
+        let r = OpsReport {
+            heartbeat_interval: 1.0,
+            telemetry_msgs: 123,
+            telemetry_bytes: 4567.0,
+            telemetry_wan_bytes: 890.5,
+            crashed_nodes: 1,
+            dead_declared: 1,
+            false_dead: 0,
+            detection_latency_max: 5.25,
+            reexecuted_tasks: 3,
+            remediation_ops: 2,
+            alerts: vec![
+                Alert {
+                    t: 25.0,
+                    kind: AlertKind::NodeDead,
+                    subject: "node003".into(),
+                    detail: "no heartbeat for 5.2s; draining".into(),
+                },
+                Alert {
+                    t: 26.0,
+                    kind: AlertKind::TasksReExecuted,
+                    subject: "node003".into(),
+                    detail: "3 lost task(s) re-queued on survivors".into(),
+                },
+            ],
+        };
+        let text = r.to_json().to_string();
+        let back = OpsReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(AlertKind::parse("wan-degraded"), Some(AlertKind::WanDegraded));
+        assert_eq!(AlertKind::parse("nope"), None);
+    }
+}

@@ -106,7 +106,8 @@ mod pjrt_impl {
         /// Load and compile all artifacts from `dir`.
         pub fn load(dir: &Path) -> Result<Rc<MalstoneKernels>> {
             let meta = ArtifactMeta::load(dir)?;
-            let client = xla::PjRtClient::cpu().map_err(|e| err(format!("PJRT cpu client: {e:?}")))?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| err(format!("PJRT cpu client: {e:?}")))?;
             let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
                 let path = dir.join(format!("{name}.hlo.txt"));
                 let proto = xla::HloModuleProto::from_text_file(
@@ -131,7 +132,12 @@ mod pjrt_impl {
         }
 
         /// Histogram one padded batch (exactly `meta.batch` records).
-        fn hist_batch(&self, site: &[i32], week: &[i32], marked: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        fn hist_batch(
+            &self,
+            site: &[i32],
+            week: &[i32],
+            marked: &[f32],
+        ) -> Result<(Vec<f32>, Vec<f32>)> {
             assert_eq!(site.len(), self.meta.batch);
             let s = xla::Literal::vec1(site);
             let w = xla::Literal::vec1(week);
@@ -144,7 +150,8 @@ mod pjrt_impl {
                 .map_err(|e| err(format!("hist fetch: {e:?}")))?;
             *self.hist_calls.borrow_mut() += 1;
             // aot.py lowers with return_tuple=True: (comp, tot).
-            let (comp_l, tot_l) = result.to_tuple2().map_err(|e| err(format!("hist tuple: {e:?}")))?;
+            let (comp_l, tot_l) =
+                result.to_tuple2().map_err(|e| err(format!("hist tuple: {e:?}")))?;
             let comp = comp_l.to_vec::<f32>().map_err(|e| err(format!("comp vec: {e:?}")))?;
             let tot = tot_l.to_vec::<f32>().map_err(|e| err(format!("tot vec: {e:?}")))?;
             Ok((comp, tot))
@@ -169,7 +176,11 @@ mod pjrt_impl {
             Ok(out)
         }
 
-        fn ratio(&self, exe: &xla::PjRtLoadedExecutable, planes: &MalstoneResult) -> Result<Vec<f32>> {
+        fn ratio(
+            &self,
+            exe: &xla::PjRtLoadedExecutable,
+            planes: &MalstoneResult,
+        ) -> Result<Vec<f32>> {
             let comp: Vec<f32> = planes.comp.iter().map(|&x| x as f32).collect();
             let tot: Vec<f32> = planes.tot.iter().map(|&x| x as f32).collect();
             let dims = [self.meta.num_sites, self.meta.num_weeks];
@@ -200,11 +211,16 @@ mod pjrt_impl {
 
         /// A stage-2 aggregator closure for `sector::sphere::
         /// execute_malstone_with` — the three-layer hot path.
-        pub fn aggregator(self: &Rc<Self>) -> impl FnMut(&[JoinedRecord], u32, u32) -> MalstoneResult + use<> {
+        pub fn aggregator(
+            self: &Rc<Self>,
+        ) -> impl FnMut(&[JoinedRecord], u32, u32) -> MalstoneResult + use<> {
             let k = self.clone();
             move |joined, num_sites, num_weeks| {
-                assert_eq!((num_sites as usize, num_weeks as usize), (k.meta.num_sites, k.meta.num_weeks),
-                    "aggregator geometry mismatch");
+                assert_eq!(
+                    (num_sites as usize, num_weeks as usize),
+                    (k.meta.num_sites, k.meta.num_weeks),
+                    "aggregator geometry mismatch"
+                );
                 k.hist(joined).expect("PJRT hist execution failed")
             }
         }
@@ -263,7 +279,9 @@ mod stub_impl {
 
         /// Matches the PJRT signature; unreachable because `load` never
         /// constructs a stub.
-        pub fn aggregator(self: &Rc<Self>) -> impl FnMut(&[JoinedRecord], u32, u32) -> MalstoneResult + use<> {
+        pub fn aggregator(
+            self: &Rc<Self>,
+        ) -> impl FnMut(&[JoinedRecord], u32, u32) -> MalstoneResult + use<> {
             |_joined, _num_sites, _num_weeks| unreachable!("{}", DISABLED)
         }
     }
@@ -331,7 +349,11 @@ mod pjrt_tests {
         let mut rng = Rng::new(3);
         let joined: Vec<JoinedRecord> = (0..10_000)
             .map(|_| JoinedRecord {
-                site: if rng.chance(0.05) { -1 } else { rng.gen_range(k.meta.num_sites as u64) as i32 },
+                site: if rng.chance(0.05) {
+                    -1
+                } else {
+                    rng.gen_range(k.meta.num_sites as u64) as i32
+                },
                 week: rng.gen_range(k.meta.num_weeks as u64) as i32,
                 marked: f32::from(rng.chance(0.3)),
             })
@@ -348,7 +370,13 @@ mod pjrt_tests {
         let g = MalGen::new(MalGenConfig::small(17));
         let all = g.generate_all(2, 3_000);
         let table = compromise_table(&all);
-        let joined = bucketize(&all, &table, k.meta.num_sites as u32, k.meta.num_weeks as u32, SECONDS_PER_WEEK);
+        let joined = bucketize(
+            &all,
+            &table,
+            k.meta.num_sites as u32,
+            k.meta.num_weeks as u32,
+            SECONDS_PER_WEEK,
+        );
         let planes = k.hist(&joined).unwrap();
         let ra = k.ratio_a(&planes).unwrap();
         let rb = k.ratio_b(&planes).unwrap();

@@ -31,7 +31,12 @@ pub struct SectorMaster {
 
 impl SectorMaster {
     pub fn new(topo: Rc<Topology>) -> Self {
-        SectorMaster { topo, files: HashMap::new(), blacklist: HashSet::new(), usage: HashMap::new() }
+        SectorMaster {
+            topo,
+            files: HashMap::new(),
+            blacklist: HashSet::new(),
+            usage: HashMap::new(),
+        }
     }
 
     /// Register a file whose segments already live on their home slaves
@@ -58,7 +63,9 @@ impl SectorMaster {
             .node_ids()
             .into_iter()
             .filter(|n| !self.blacklist.contains(n))
-            .min_by_key(|&n| (self.topo.distance(client, n), self.usage.get(&n).copied().unwrap_or(0)))
+            .min_by_key(|&n| {
+                (self.topo.distance(client, n), self.usage.get(&n).copied().unwrap_or(0))
+            })
             .expect("all slaves blacklisted")
     }
 

@@ -24,7 +24,8 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::framework::{
-    DataflowEngine, DataflowSpec, ExchangeModel, SectorStorage, StealPolicy, TaskInput,
+    DataflowControl, DataflowEngine, DataflowSpec, ExchangeModel, SectorStorage, StealPolicy,
+    TaskInput,
 };
 use crate::hadoop::params::FrameworkParams;
 use crate::malstone::join::{bucketize, compromise_table, JoinedRecord};
@@ -44,6 +45,9 @@ pub struct SphereReport {
     pub aggregate_phase: f64,
     pub segments: usize,
     pub stolen_segments: usize,
+    /// Segments re-executed on survivors after a slave was declared lost
+    /// mid-run (see [`DataflowControl::heal_node`]).
+    pub reexecuted_segments: usize,
     /// Intermediate bytes that crossed the network during the push (the
     /// paper's accounting; node-local shares excluded).
     pub exchange_bytes: f64,
@@ -75,7 +79,7 @@ impl SphereEngine {
         params: FrameworkParams,
         variant_b: bool,
         done: F,
-    ) {
+    ) -> DataflowControl {
         let healthy = master.healthy(nodes);
         assert!(!healthy.is_empty(), "no healthy slaves");
         let segments: Vec<Segment> = master
@@ -114,13 +118,14 @@ impl SphereEngine {
                 aggregate_phase: r.phase2,
                 segments: r.tasks,
                 stolen_segments: r.remote_tasks,
+                reexecuted_segments: r.reexecuted,
                 exchange_bytes: r.exchange_remote_bytes,
                 exchange_total_bytes: r.exchange_bytes,
                 storage_read_bytes: r.storage_read_bytes,
                 storage_write_bytes: r.storage_write_bytes,
             };
             done(eng, report);
-        });
+        })
     }
 }
 
@@ -199,7 +204,12 @@ mod tests {
         (cluster, master, nodes)
     }
 
-    fn run(cluster: &Cluster, master: &SectorMaster, nodes: &[NodeId], variant_b: bool) -> SphereReport {
+    fn run(
+        cluster: &Cluster,
+        master: &SectorMaster,
+        nodes: &[NodeId],
+        variant_b: bool,
+    ) -> SphereReport {
         let mut eng = Engine::new();
         let out = Rc::new(RefCell::new(None));
         let o = out.clone();

@@ -22,7 +22,13 @@ impl Rng {
     /// Seed deterministically; any u64 (including 0) is a valid seed.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
-        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
     }
 
     /// Derive an independent child stream (e.g. one per simulated node).

@@ -165,6 +165,44 @@ fn run_report_json_roundtrips_through_runner() {
 }
 
 #[test]
+fn ops_plane_survives_crash_and_flap_end_to_end() {
+    use oct::ops::{AlertKind, FaultPlan};
+    // One run, two faults: a node crash mid-map-phase and a lightpath
+    // flap shortly after. The ops plane must detect both, drain + heal
+    // the dead worker, re-provision the wave, and the chained MalStone
+    // jobs must still complete — with everything in the JSON report.
+    let sc = Testbed::builder()
+        .topology(TopologySpec::Oct2009)
+        .framework(Framework::HadoopMr)
+        .workload(WorkloadSpec::malstone_a(50_000_000))
+        .faults(FaultPlan::new().node_crash(15.0, 7).lightpath_flap(25.0, 0.05))
+        .name("ops-e2e")
+        .build();
+    let rep = ScenarioRunner::new().run(&sc);
+    assert!(rep.simulated_secs > 25.0);
+    let ops = rep.ops.as_ref().expect("ops report");
+    assert_eq!(ops.crashed_nodes, 1);
+    assert_eq!(ops.dead_declared, 1);
+    assert_eq!(ops.false_dead, 0);
+    assert!(ops.detection_latency_max > 0.0);
+    assert!(ops.detection_latency_max <= 8.0 * ops.heartbeat_interval);
+    assert!(ops.reexecuted_tasks >= 1);
+    let kinds: Vec<AlertKind> = ops.alerts.iter().map(|a| a.kind).collect();
+    assert!(kinds.contains(&AlertKind::NodeDead), "{kinds:?}");
+    assert!(kinds.contains(&AlertKind::WanDegraded), "{kinds:?}");
+    assert!(kinds.contains(&AlertKind::WanRestored), "{kinds:?}");
+    // Two remediation intents: the drain and the wave re-provisioning.
+    assert!(ops.remediation_ops >= 2);
+    // Telemetry overhead is real WAN traffic, and small.
+    assert!(ops.telemetry_wan_bytes > 0.0);
+    assert!(ops.telemetry_wan_bytes < 0.01 * rep.wan_bytes);
+    // The enriched report round-trips.
+    let text = rep.to_json().to_string();
+    let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, rep);
+}
+
+#[test]
 fn gmp_rpc_full_stack_loopback() {
     use oct::gmp::rpc::Handler;
     use oct::gmp::{GmpConfig, GmpEndpoint, RpcClient, RpcServer};
