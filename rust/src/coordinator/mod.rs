@@ -5,23 +5,32 @@
 //!   experiment configs (`examples/*.toml` style).
 //! - [`provision`]: the paper's "flexible compute node and network
 //!   provisioning" service — grow the testbed (§2.2's expansion to ~250
-//!   nodes), retune links, drain nodes.
+//!   nodes), retune links, drain nodes, stamp node images, provision and
+//!   tear down lightpaths, and carve tenant slices, all as a replayable
+//!   [`Op`] log; [`SliceScheduler`] admits or queues slice requests
+//!   against the finite inventory.
 //! - [`scenario`]: describe an experiment as data — [`Testbed::builder`]
 //!   yields a [`Scenario`] from a topology spec, a placement, a
-//!   framework, and a MalStone workload.
+//!   framework, and a MalStone workload, plus a provisioning axis
+//!   ([`ImageSpec`], [`LightpathSpec`]) and a tenancy marker
+//!   ([`TenantSpec`]).
 //! - [`runner`]: [`ScenarioRunner`] executes any scenario on the
 //!   simulated substrate and returns a structured, JSON-serializable
 //!   [`RunReport`] (simulated seconds, per-site flow stats, monitor
 //!   summary, paper reference; ops-enabled runs add an
 //!   [`crate::ops::OpsReport`] with detection latency, telemetry
-//!   overhead, and the alert log). Scenarios may carry a
-//!   [`crate::ops::FaultPlan`] — node crashes, NIC degradations,
-//!   lightpath flaps — applied mid-run through the live substrate
-//!   hooks, with the [`crate::ops`] plane detecting and self-healing.
+//!   overhead, and the alert log; provisioned runs pay measured imaging
+//!   and lightpath-setup latency before the workload starts). Scenarios
+//!   may carry a [`crate::ops::FaultPlan`] — node crashes, NIC
+//!   degradations, lightpath flaps — applied mid-run through the live
+//!   substrate hooks, with the [`crate::ops`] plane detecting and
+//!   self-healing. [`ScenarioRunner::run_tenants`] runs a group of
+//!   tenant scenarios concurrently on one shared testbed, each on its
+//!   own slice.
 //! - [`registry`]: named [`ScenarioSet`]s — `table1`/`table2` as
 //!   declarative cross-products plus sweeps (the §7 `interop`
-//!   compositions, scale ladder, local-vs-wide-area, site dropout) with
-//!   shape checks.
+//!   compositions, scale ladder, local-vs-wide-area, site dropout,
+//!   multi-tenant `tenancy`) with shape checks.
 //! - [`experiment`]: paper-style table presentation over registry
 //!   reports ([`table1_rows`]/[`table2_rows`] + formatters).
 //!
@@ -50,12 +59,16 @@ pub mod scenario;
 
 pub use config::Config;
 pub use experiment::{format_table1, format_table2, table1_rows, table2_rows, Table1Row, Table2Row};
-pub use provision::{Op, Provisioner};
-pub use registry::{find_set, scenario_sets, ScenarioSet};
+pub use provision::{
+    Lightpath, Op, Provisioner, Slice, SliceRecord, SliceScheduler, DEFAULT_SPARE_WAVE_GBPS,
+    LIGHTPATH_FLOOR_BPS,
+};
+pub use registry::{find_set, scenario_sets, set_names, ScenarioSet};
 pub use runner::{
     all_pass, flow_churn_concurrency, format_checks, format_reports, wide_area_penalty,
     MonitorSummary, RunReport, ScenarioRunner, ShapeCheck, SiteFlow,
 };
 pub use scenario::{
-    Framework, Placement, Scenario, Testbed, TestbedBuilder, TopologySpec, Variant, WorkloadSpec,
+    Framework, ImageSpec, LightpathSpec, Placement, ProvisioningSpec, Scenario, TenantSpec,
+    Testbed, TestbedBuilder, TopologySpec, Variant, WorkloadSpec,
 };

@@ -1,17 +1,46 @@
 //! Node and network provisioning (paper §1, §2.1: networks as "first
 //! class controllable, adjustable resources", and §2.2's growth plan).
 //!
-//! The provisioner owns a mutable [`Topology`] between experiment runs:
-//! grow sites/racks (the 2009 expansion toward 250 nodes/1000 cores),
-//! retune WAN links (dynamic lightpath provisioning [13]), drain nodes,
-//! and stamp out per-experiment subsets. During a run, dynamic changes go
-//! through `FlowNet::set_capacity` / `CpuPool::set_speed` — the
-//! provisioner records the *intent* so a testbed config can be replayed.
+//! The abstract promises "novel node and network provisioning services";
+//! this module is that subsystem's intent layer. A [`Provisioner`] owns a
+//! mutable [`Topology`] and a replayable [`Op`] log covering the full
+//! provisioning vocabulary:
+//!
+//! - **growth** — add sites/racks (the 2009 expansion toward 250
+//!   nodes/1000 cores), connect and retune WAN links;
+//! - **node imaging** — stamp an image onto a node
+//!   ([`Provisioner::image_node`]); the *runtime* imaging latency (image
+//!   fetch + install as simulated time) is paid by the scenario runner,
+//!   while the provisioner records which image each node carries;
+//! - **dynamic lightpaths** — provision and tear down wide-area waves
+//!   ([`Provisioner::provision_lightpath`] /
+//!   [`Provisioner::teardown_lightpath`], the paper's [13]); a torn-down
+//!   wave keeps a routed-IP control floor of [`LIGHTPATH_FLOOR_BPS`]
+//!   because capacity links cannot vanish mid-simulation;
+//! - **tenant slices** — carve and release subsets of nodes plus an
+//!   optional dedicated wave ([`Provisioner::carve_slice`] /
+//!   [`Provisioner::release_slice`]), the unit of multi-tenant admission;
+//! - **service state** — drain and undrain nodes.
+//!
+//! During a run, dynamic changes go through `FlowNet::set_capacity` /
+//! `CpuPool::set_speed`; the provisioner records the *intent* so a
+//! testbed configuration can be replayed. [`SliceScheduler`] sits on top:
+//! it admits or queues slice requests against the finite inventory (free
+//! nodes per site, spare wave spectrum) that one shared testbed offers
+//! concurrent tenants.
+
+use std::collections::BTreeMap;
 
 use crate::net::topology::NodeSpec;
-use crate::net::{Cluster, NodeId, SiteId, Topology};
+use crate::net::{Cluster, LinkId, NodeId, SiteId, Topology};
 
 use super::config::Config;
+
+/// Live capacity a torn-down lightpath falls back to (bytes/s): the wave
+/// is gone but the routed IP control path remains, so the link never hits
+/// the fluid network's capacity-must-be-positive wall. Also the dark
+/// level a provisioned-but-not-yet-granted wave idles at.
+pub const LIGHTPATH_FLOOR_BPS: f64 = 1.25e6;
 
 /// A provisioning log entry (replayable intent).
 #[derive(Debug, Clone, PartialEq)]
@@ -24,6 +53,37 @@ pub enum Op {
     /// Return a drained node to service (the inverse of `DrainNode`):
     /// repaired hardware re-enters the pool.
     UndrainNode { node: usize },
+    /// Stamp `image` onto a node (Bare/previous image → `image`).
+    ImageNode { node: usize, image: String },
+    /// Light a new duplex wave of `gbps` per direction across the testbed.
+    ProvisionLightpath { label: String, gbps: f64 },
+    /// Darken a provisioned wave down to [`LIGHTPATH_FLOOR_BPS`].
+    TeardownLightpath { label: String },
+    /// Dedicate `nodes` (and optionally a `lightpath_gbps` wave grant) to
+    /// a tenant.
+    CarveSlice { tenant: String, nodes: Vec<usize>, lightpath_gbps: Option<f64> },
+    /// Return a tenant's slice to the shared pool.
+    ReleaseSlice { tenant: String },
+}
+
+/// A provisioned wave: its links exist in the topology forever; `lit`
+/// says whether it currently carries its granted capacity or the floor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lightpath {
+    pub label: String,
+    pub gbps: f64,
+    pub east: LinkId,
+    pub west: LinkId,
+    pub lit: bool,
+}
+
+/// A recorded tenant slice (provisioner-side state; the runtime
+/// counterpart handed to tenants is [`Slice`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceRecord {
+    pub tenant: String,
+    pub nodes: Vec<usize>,
+    pub lightpath_gbps: Option<f64>,
 }
 
 /// Builds and evolves testbed topologies.
@@ -32,6 +92,9 @@ pub struct Provisioner {
     spec: NodeSpec,
     log: Vec<Op>,
     drained: Vec<NodeId>,
+    images: BTreeMap<usize, String>,
+    lightpaths: Vec<Lightpath>,
+    slices: Vec<SliceRecord>,
 }
 
 impl Default for Provisioner {
@@ -47,17 +110,15 @@ impl Provisioner {
             spec: NodeSpec::default(),
             log: Vec::new(),
             drained: Vec::new(),
+            images: BTreeMap::new(),
+            lightpaths: Vec::new(),
+            slices: Vec::new(),
         }
     }
 
     /// Start from the paper's Figure-2 testbed.
     pub fn oct_2009() -> Self {
-        Provisioner {
-            topo: Topology::oct_2009(),
-            spec: NodeSpec::default(),
-            log: Vec::new(),
-            drained: Vec::new(),
-        }
+        Provisioner { topo: Topology::oct_2009(), ..Provisioner::new() }
     }
 
     /// Build from a `[testbed]` config section (sites, nodes_per_rack,
@@ -108,6 +169,119 @@ impl Provisioner {
         }
     }
 
+    /// Stamp `image` onto a node: the intent side of node imaging. The
+    /// scenario runner pays the imaging *latency* (image fetch over the
+    /// fabric plus install time, on the event engine); the provisioner
+    /// tracks which image every node ends up carrying.
+    ///
+    /// ```
+    /// use oct::coordinator::Provisioner;
+    /// let mut p = Provisioner::new();
+    /// p.add_site("east");
+    /// p.add_rack(0, 4);
+    /// assert_eq!(p.node_image(2), None); // bare metal
+    /// p.image_node(2, "hadoop-0.18.3");
+    /// assert_eq!(p.node_image(2), Some("hadoop-0.18.3"));
+    /// // The intent replays: a rebuilt provisioner carries the image too.
+    /// let r = Provisioner::replay(p.log());
+    /// assert_eq!(r.node_image(2), Some("hadoop-0.18.3"));
+    /// ```
+    pub fn image_node(&mut self, node: usize, image: &str) {
+        self.log.push(Op::ImageNode { node, image: image.to_string() });
+        self.images.insert(node, image.to_string());
+    }
+
+    /// The image a node currently carries (`None` = bare metal).
+    pub fn node_image(&self, node: usize) -> Option<&str> {
+        self.images.get(&node).map(String::as_str)
+    }
+
+    /// Node → image map (nodes absent are bare).
+    pub fn images(&self) -> &BTreeMap<usize, String> {
+        &self.images
+    }
+
+    /// Light a new duplex wave of `gbps` per direction across the fiber
+    /// plant and return its directed `(east, west)` links. The wave is
+    /// added to the topology at its granted capacity but routes nothing
+    /// by itself — a tenant view's `route_over_wave` (or a replayed
+    /// config) decides who rides it.
+    ///
+    /// ```
+    /// use oct::coordinator::Provisioner;
+    /// let mut p = Provisioner::oct_2009();
+    /// let links_before = p.topology().links.len();
+    /// let (east, west) = p.provision_lightpath("alice", 10.0);
+    /// assert_eq!(p.topology().links.len(), links_before + 2);
+    /// assert!((p.topology().link(east).capacity - 1.25e9).abs() < 1.0);
+    /// p.teardown_lightpath("alice");
+    /// assert!(p.topology().link(east).capacity < 2e6); // control floor
+    /// assert_eq!(p.topology().link(west).kind, p.topology().link(east).kind);
+    /// ```
+    pub fn provision_lightpath(&mut self, label: &str, gbps: f64) -> (LinkId, LinkId) {
+        assert!(gbps > 0.0, "lightpath grant must be positive");
+        self.log.push(Op::ProvisionLightpath { label: label.to_string(), gbps });
+        let (east, west) = self.topo.add_wave(gbps * 1e9 / 8.0, label);
+        self.lightpaths.push(Lightpath { label: label.to_string(), gbps, east, west, lit: true });
+        (east, west)
+    }
+
+    /// Darken a provisioned wave: both directions drop to
+    /// [`LIGHTPATH_FLOOR_BPS`] (the routed control path) and the wave is
+    /// marked unlit. Tears down the *most recently lit* wave with this
+    /// label; panics if none is lit.
+    pub fn teardown_lightpath(&mut self, label: &str) {
+        self.log.push(Op::TeardownLightpath { label: label.to_string() });
+        let lp = self
+            .lightpaths
+            .iter_mut()
+            .rev()
+            .find(|l| l.lit && l.label == label)
+            .unwrap_or_else(|| panic!("no lit lightpath '{label}' to tear down"));
+        lp.lit = false;
+        let (east, west) = (lp.east, lp.west);
+        self.topo.set_link_capacity(east, LIGHTPATH_FLOOR_BPS);
+        self.topo.set_link_capacity(west, LIGHTPATH_FLOOR_BPS);
+    }
+
+    /// Every wave ever provisioned, in order, with its lit/dark state.
+    pub fn lightpaths(&self) -> &[Lightpath] {
+        &self.lightpaths
+    }
+
+    /// Dedicate `nodes` to `tenant`, optionally alongside a wave grant.
+    /// The provisioner records intent only — admission control against
+    /// live inventory is [`SliceScheduler`]'s job. A tenant may hold at
+    /// most one slice at a time.
+    pub fn carve_slice(&mut self, tenant: &str, nodes: &[usize], lightpath_gbps: Option<f64>) {
+        assert!(
+            !self.slices.iter().any(|s| s.tenant == tenant),
+            "tenant '{tenant}' already holds a slice"
+        );
+        self.log.push(Op::CarveSlice {
+            tenant: tenant.to_string(),
+            nodes: nodes.to_vec(),
+            lightpath_gbps,
+        });
+        self.slices.push(SliceRecord {
+            tenant: tenant.to_string(),
+            nodes: nodes.to_vec(),
+            lightpath_gbps,
+        });
+    }
+
+    /// Return a tenant's slice to the pool. Idempotent (releasing a
+    /// tenant that holds nothing only records the intent).
+    pub fn release_slice(&mut self, tenant: &str) {
+        self.log.push(Op::ReleaseSlice { tenant: tenant.to_string() });
+        self.slices.retain(|s| s.tenant != tenant);
+    }
+
+    /// Currently-carved slices.
+    pub fn slices(&self) -> &[SliceRecord] {
+        &self.slices
+    }
+
     /// Apply one logged operation (the replay primitive). Every public
     /// mutator routes through the same methods, so applying an op both
     /// re-logs and re-executes it.
@@ -121,6 +295,15 @@ impl Provisioner {
             Op::SetWanCapacity { a, b, gbps } => self.set_wan_capacity(*a, *b, *gbps),
             Op::DrainNode { node } => self.drain_node(*node),
             Op::UndrainNode { node } => self.undrain_node(*node),
+            Op::ImageNode { node, image } => self.image_node(*node, image),
+            Op::ProvisionLightpath { label, gbps } => {
+                self.provision_lightpath(label, *gbps);
+            }
+            Op::TeardownLightpath { label } => self.teardown_lightpath(label),
+            Op::CarveSlice { tenant, nodes, lightpath_gbps } => {
+                self.carve_slice(tenant, nodes, *lightpath_gbps)
+            }
+            Op::ReleaseSlice { tenant } => self.release_slice(tenant),
         }
     }
 
@@ -186,9 +369,166 @@ impl Provisioner {
     }
 }
 
+/// A carved tenant slice: the runtime handle [`SliceScheduler::try_carve`]
+/// returns, naming the dedicated nodes and (when granted) the tenant's
+/// wave links and spectrum reservation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Slice {
+    pub tenant: String,
+    pub nodes: Vec<NodeId>,
+    /// The tenant's dedicated wave as `(east, west)` links, when one was
+    /// requested (`None` = the slice rides the shared testbed wave).
+    pub wave: Option<(LinkId, LinkId)>,
+    /// Spectrum reserved from the scheduler's spare pool, Gb/s.
+    pub lightpath_gbps: Option<f64>,
+}
+
+/// Spare optical spectrum of the default [`SliceScheduler`]: two
+/// additional 10 Gb/s lambdas on the national fiber plant beyond the
+/// always-lit shared CiscoWave.
+pub const DEFAULT_SPARE_WAVE_GBPS: f64 = 20.0;
+
+/// Admission control for tenant slices over one live testbed.
+///
+/// The inventory is finite — free nodes per site and spare wave spectrum
+/// ([`DEFAULT_SPARE_WAVE_GBPS`] by default) — so a request either carves
+/// immediately or must wait for a running tenant's release; callers queue
+/// and retry (the multi-tenant scenario runner retries FIFO on every
+/// completion). Every admission and release is logged as a replayable
+/// [`Op`].
+///
+/// ```
+/// use oct::coordinator::SliceScheduler;
+/// use oct::net::Topology;
+/// use std::rc::Rc;
+///
+/// let topo = Rc::new(Topology::oct_2009()); // 4 sites × 32 nodes
+/// let mut sched = SliceScheduler::new(topo, 20.0);
+/// let a = sched.try_carve("alice", 20, Some(10.0), None).expect("fits");
+/// assert_eq!(a.nodes.len(), 80);
+/// // 12 free nodes left per site: a 20-per-site request must queue...
+/// assert!(sched.try_carve("bob", 20, None, None).is_none());
+/// // ...until alice releases her slice.
+/// sched.release(&a);
+/// assert!(sched.try_carve("bob", 20, None, None).is_some());
+/// ```
+pub struct SliceScheduler {
+    topo: std::rc::Rc<Topology>,
+    /// Per-node availability (false = carved out or drained).
+    free: Vec<bool>,
+    spare_gbps: f64,
+    /// Tenants currently holding a slice (one slice per tenant, so the
+    /// by-name `ReleaseSlice` intent stays unambiguous under replay).
+    holders: Vec<String>,
+    log: Vec<Op>,
+}
+
+impl SliceScheduler {
+    /// A scheduler over `topo` with `spare_gbps` of unlit spectrum.
+    pub fn new(topo: std::rc::Rc<Topology>, spare_gbps: f64) -> SliceScheduler {
+        let free = vec![true; topo.num_nodes()];
+        SliceScheduler { topo, free, spare_gbps, holders: Vec::new(), log: Vec::new() }
+    }
+
+    /// Remove drained nodes from the carvable pool.
+    pub fn exclude(&mut self, nodes: &[NodeId]) {
+        for &n in nodes {
+            self.free[n.0] = false;
+        }
+    }
+
+    /// Try to admit a slice of `nodes_per_site` nodes from *every* site
+    /// plus an optional `lightpath_gbps` spectrum reservation. Returns
+    /// `None` — with the inventory untouched — when any site runs short
+    /// or the spare spectrum cannot cover the grant; the caller queues
+    /// and retries after a [`SliceScheduler::release`]. `wave` carries
+    /// the tenant's pre-provisioned wave links through to the slice.
+    /// A tenant holds at most one slice at a time (like
+    /// [`Provisioner::carve_slice`], so the by-name release intent stays
+    /// unambiguous under replay); re-carving a holder panics.
+    pub fn try_carve(
+        &mut self,
+        tenant: &str,
+        nodes_per_site: usize,
+        lightpath_gbps: Option<f64>,
+        wave: Option<(LinkId, LinkId)>,
+    ) -> Option<Slice> {
+        assert!(nodes_per_site > 0, "empty slice request");
+        assert!(
+            !self.holders.iter().any(|t| t == tenant),
+            "tenant '{tenant}' already holds a slice"
+        );
+        if let Some(g) = lightpath_gbps {
+            assert!(g > 0.0);
+            if g > self.spare_gbps + 1e-9 {
+                return None;
+            }
+        }
+        let mut nodes: Vec<NodeId> = Vec::with_capacity(nodes_per_site * self.topo.sites.len());
+        for site in &self.topo.sites {
+            let mut got = 0;
+            'racks: for rid in &site.racks {
+                for &n in &self.topo.racks[rid.0].nodes {
+                    if got == nodes_per_site {
+                        break 'racks;
+                    }
+                    if self.free[n.0] {
+                        nodes.push(n);
+                        got += 1;
+                    }
+                }
+            }
+            if got < nodes_per_site {
+                return None; // inventory untouched: nothing was committed
+            }
+        }
+        for &n in &nodes {
+            self.free[n.0] = false;
+        }
+        if let Some(g) = lightpath_gbps {
+            self.spare_gbps -= g;
+        }
+        self.holders.push(tenant.to_string());
+        self.log.push(Op::CarveSlice {
+            tenant: tenant.to_string(),
+            nodes: nodes.iter().map(|n| n.0).collect(),
+            lightpath_gbps,
+        });
+        Some(Slice { tenant: tenant.to_string(), nodes, wave, lightpath_gbps })
+    }
+
+    /// Return a slice's nodes and spectrum to the pool.
+    pub fn release(&mut self, slice: &Slice) {
+        for &n in &slice.nodes {
+            self.free[n.0] = true;
+        }
+        if let Some(g) = slice.lightpath_gbps {
+            self.spare_gbps += g;
+        }
+        self.holders.retain(|t| t != &slice.tenant);
+        self.log.push(Op::ReleaseSlice { tenant: slice.tenant.clone() });
+    }
+
+    /// Nodes currently carvable.
+    pub fn free_nodes(&self) -> usize {
+        self.free.iter().filter(|&&f| f).count()
+    }
+
+    /// Unreserved spectrum, Gb/s.
+    pub fn spare_gbps(&self) -> f64 {
+        self.spare_gbps
+    }
+
+    /// The admission log: carves and releases as replayable intents.
+    pub fn log(&self) -> &[Op] {
+        &self.log
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::rc::Rc;
 
     #[test]
     fn from_config_builds_requested_shape() {
@@ -335,5 +675,155 @@ mod tests {
         assert_eq!(replayed.topology().num_nodes(), recorded.topology().num_nodes());
         assert_eq!(replayed.topology().sites.len(), recorded.topology().sites.len());
         assert_eq!(replayed.log(), recorded.log());
+    }
+
+    #[test]
+    fn imaging_lightpath_and_slice_ops_replay_from_empty() {
+        // Exercise every new op kind and replay the log from scratch.
+        let mut p = Provisioner::new();
+        p.add_site("east");
+        p.add_site("west");
+        p.add_rack(0, 4);
+        p.add_rack(1, 4);
+        p.connect_sites(0, 1, 10.0, 40.0);
+        p.image_node(0, "hadoop-0.18.3");
+        p.image_node(1, "hadoop-0.18.3");
+        p.image_node(0, "sector-sphere-1.24"); // re-image: latest wins
+        let (east, west) = p.provision_lightpath("alice", 10.0);
+        p.provision_lightpath("bob", 2.5);
+        p.teardown_lightpath("bob");
+        p.carve_slice("alice", &[0, 1, 4, 5], Some(10.0));
+        p.carve_slice("carol", &[2, 6], None);
+        p.release_slice("carol");
+
+        let r = Provisioner::replay(p.log());
+        assert_eq!(r.log(), p.log());
+        assert_eq!(r.images(), p.images());
+        assert_eq!(r.node_image(0), Some("sector-sphere-1.24"));
+        assert_eq!(r.node_image(2), None);
+        assert_eq!(r.lightpaths(), p.lightpaths());
+        assert_eq!(r.slices(), p.slices());
+        // Alice's slice survived, carol's release removed hers.
+        assert_eq!(r.slices().len(), 1);
+        assert_eq!(r.slices()[0].tenant, "alice");
+        assert_eq!(r.slices()[0].lightpath_gbps, Some(10.0));
+        // Wave links landed at the same ids and capacities on both sides.
+        assert_eq!(r.topology().links.len(), p.topology().links.len());
+        assert!((r.topology().link(east).capacity - 1.25e9).abs() < 1.0);
+        assert!((r.topology().link(west).capacity - 1.25e9).abs() < 1.0);
+        // The torn-down wave sits at the control floor under replay too.
+        let bob = &r.lightpaths()[1];
+        assert!(!bob.lit);
+        assert_eq!(r.topology().link(bob.east).capacity, LIGHTPATH_FLOOR_BPS);
+        assert_eq!(r.topology().link(bob.west).capacity, LIGHTPATH_FLOOR_BPS);
+    }
+
+    #[test]
+    fn new_ops_replay_onto_a_seeded_base() {
+        // Record over the Figure-2 base, then apply the same log onto a
+        // fresh copy of the base: identical end state.
+        let mut recorded = Provisioner::oct_2009();
+        recorded.image_node(7, "malstone-bench");
+        recorded.provision_lightpath("tenant-a", 10.0);
+        recorded.carve_slice("tenant-a", &[0, 1, 32, 33], Some(10.0));
+        recorded.teardown_lightpath("tenant-a");
+        recorded.release_slice("tenant-a");
+        let mut replayed = Provisioner::oct_2009();
+        for op in recorded.log().to_vec() {
+            replayed.apply(&op);
+        }
+        assert_eq!(replayed.log(), recorded.log());
+        assert_eq!(replayed.images(), recorded.images());
+        assert_eq!(replayed.lightpaths(), recorded.lightpaths());
+        assert_eq!(replayed.slices(), recorded.slices());
+        assert_eq!(replayed.topology().links.len(), recorded.topology().links.len());
+    }
+
+    #[test]
+    fn interleaved_drain_undrain_carve_sequence_replays() {
+        // The satellite case: service state and slice state interleave.
+        let mut p = Provisioner::new();
+        p.add_site("s");
+        p.add_rack(0, 8);
+        p.drain_node(3);
+        p.carve_slice("t1", &[0, 1], None);
+        p.undrain_node(3);
+        p.image_node(3, "repaired-baseline");
+        p.carve_slice("t2", &[2, 3], Some(2.5));
+        p.drain_node(5);
+        p.release_slice("t1");
+        p.carve_slice("t3", &[0, 1, 4], None);
+        p.undrain_node(5);
+        let r = Provisioner::replay(p.log());
+        assert_eq!(r.log(), p.log());
+        assert_eq!(r.drained(), p.drained());
+        assert_eq!(r.slices(), p.slices());
+        assert_eq!(r.images(), p.images());
+        assert!(r.drained().is_empty());
+        let tenants: Vec<&str> = r.slices().iter().map(|s| s.tenant.as_str()).collect();
+        assert_eq!(tenants, vec!["t2", "t3"]);
+    }
+
+    #[test]
+    fn scheduler_admits_against_inventory_and_queues_the_rest() {
+        let topo = Rc::new(Topology::oct_2009());
+        let mut sched = SliceScheduler::new(topo.clone(), DEFAULT_SPARE_WAVE_GBPS);
+        assert_eq!(sched.free_nodes(), 128);
+        let a = sched.try_carve("alice", 5, Some(10.0), None).expect("alice fits");
+        assert_eq!(a.nodes.len(), 20);
+        let b = sched.try_carve("bob", 5, Some(10.0), None).expect("bob fits");
+        // Slices are disjoint and take first-free nodes per site.
+        assert!(a.nodes.iter().all(|n| !b.nodes.contains(n)));
+        assert_eq!(sched.free_nodes(), 128 - 40);
+        assert_eq!(sched.spare_gbps(), 0.0);
+        // Eve's nodes would fit but the spectrum pool is exhausted.
+        assert!(sched.try_carve("eve", 5, Some(10.0), None).is_none());
+        // The denial left the inventory untouched.
+        assert_eq!(sched.free_nodes(), 88);
+        // A waveless request still fits on nodes alone.
+        let c = sched.try_carve("carol", 20, None, None).expect("carol fits");
+        assert_eq!(c.nodes.len(), 80);
+        // Now nodes run short too (2 free per site < 5).
+        assert!(sched.try_carve("dave", 5, None, None).is_none());
+        // Releases return both nodes and spectrum; eve then admits.
+        sched.release(&a);
+        sched.release(&c);
+        let e = sched.try_carve("eve", 5, Some(10.0), None).expect("eve admitted after release");
+        assert_eq!(e.nodes.len(), 20);
+        assert!((sched.spare_gbps() - 0.0).abs() < 1e-9);
+        // The admission log is replayable intent.
+        let carves = sched.log().iter().filter(|op| matches!(op, Op::CarveSlice { .. })).count();
+        let releases =
+            sched.log().iter().filter(|op| matches!(op, Op::ReleaseSlice { .. })).count();
+        assert_eq!((carves, releases), (4, 2));
+        let mut p = Provisioner::oct_2009();
+        for op in sched.log().to_vec() {
+            p.apply(&op);
+        }
+        let tenants: Vec<&str> = p.slices().iter().map(|s| s.tenant.as_str()).collect();
+        assert_eq!(tenants, vec!["bob", "eve"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already holds a slice")]
+    fn scheduler_rejects_a_double_carve_by_the_same_tenant() {
+        let mut sched = SliceScheduler::new(Rc::new(Topology::oct_2009()), 0.0);
+        let _first = sched.try_carve("alice", 2, None, None).expect("fits");
+        // A second live slice for the same tenant would make the by-name
+        // ReleaseSlice intent ambiguous under replay.
+        let _ = sched.try_carve("alice", 2, None, None);
+    }
+
+    #[test]
+    fn scheduler_respects_exclusions() {
+        let mut t = Topology::new();
+        t.add_site("s");
+        t.add_rack(SiteId(0), 4, &NodeSpec::default(), 1.25e9);
+        let mut sched = SliceScheduler::new(Rc::new(t), 0.0);
+        sched.exclude(&[NodeId(0), NodeId(1)]);
+        assert_eq!(sched.free_nodes(), 2);
+        let s = sched.try_carve("t", 2, None, None).expect("two nodes remain");
+        assert_eq!(s.nodes, vec![NodeId(2), NodeId(3)]);
+        assert!(sched.try_carve("u", 1, None, None).is_none());
     }
 }

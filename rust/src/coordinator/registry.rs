@@ -59,7 +59,13 @@ pub fn scenario_sets() -> Vec<ScenarioSet> {
         site_dropout_set(),
         flow_churn_set(),
         ops_set(),
+        tenancy_set(),
     ]
+}
+
+/// Registered set names (CLI error messages and docs).
+pub fn set_names() -> Vec<&'static str> {
+    scenario_sets().iter().map(|s| s.name).collect()
 }
 
 /// Look up one set by name.
@@ -735,6 +741,162 @@ fn check_ops(r: &[RunReport]) -> Vec<ShapeCheck> {
     ]
 }
 
+/// The dynamic-provisioning / multi-tenancy family: the abstract's
+/// "flexible compute node and network provisioning capabilities" as a
+/// measured scenario axis. Eight scenarios in three movements:
+///
+/// 1. **solo baselines** — Sphere MalStone-A on a freshly-imaged slice
+///    behind a full 10 Gb/s lightpath grant, the same behind an
+///    under-provisioned 0.5 Gb/s grant (setup latency identical, only
+///    the spectrum differs), and a solo segment-transfer storm on the
+///    shared wave.
+/// 2. **dedicated waves** — tenants alice and bob run the Sphere
+///    workload *concurrently* on disjoint slices of one testbed, each
+///    behind its own wave: isolation means each stays within band of
+///    the solo run. Tenant eve asks for a third 10 Gb/s grant the spare
+///    spectrum cannot cover and queues until a release — admission
+///    control against finite inventory, measured as `queued_secs`.
+/// 3. **shared wave** — tenants carol and dave run the transfer storm
+///    concurrently over the *same* default wave: measurable
+///    interference against the solo storm.
+///
+/// Every run pays a measured provisioning phase (4 GB image fetched
+/// from site depots + install + lightpath signalling) reported as
+/// `imaging_secs` / `lightpath_setup_secs` / `provision_secs` metrics;
+/// shape checks compare `workload_secs` so provisioning and admission
+/// wait never pollute the throughput comparisons.
+fn tenancy_set() -> ScenarioSet {
+    let image = ("oct-malstone-2.4", 4.0);
+    let sphere = |name: &str| {
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(5))
+            .framework(Framework::SectorSphere)
+            .workload(WorkloadSpec::malstone_a(10_000_000_000))
+            .image(image.0, image.1)
+            .name(name)
+    };
+    let churn = |name: &str| {
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(10))
+            .framework(Framework::FlowChurn)
+            // records = transfers for the churn driver: enough in flight
+            // (total/4 per tenant) to keep 40 NICs saturated, so the
+            // shared wave — not the edge — is the binding resource and
+            // wave interference is measurable.
+            .workload(WorkloadSpec::malstone_a(240_000))
+            .image(image.0, image.1)
+            .name(name)
+    };
+    let scenarios = vec![
+        sphere("tenancy/solo/sphere-full").lightpath(10.0).build(),
+        sphere("tenancy/solo/sphere-thin").lightpath(0.5).build(),
+        churn("tenancy/solo/churn").build(),
+        sphere("tenancy/tenant/alice").lightpath(10.0).tenant("alice", 0).build(),
+        sphere("tenancy/tenant/bob").lightpath(10.0).tenant("bob", 0).build(),
+        sphere("tenancy/tenant/eve").lightpath(10.0).tenant("eve", 0).build(),
+        churn("tenancy/tenant/carol").tenant("carol", 1).build(),
+        churn("tenancy/tenant/dave").tenant("dave", 1).build(),
+    ];
+    ScenarioSet {
+        name: "tenancy",
+        description: "provisioning + slices: imaging/lightpath latency, queued admission, wave isolation vs interference",
+        scenarios,
+        check: Some(check_tenancy),
+    }
+}
+
+fn check_tenancy(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 8 {
+        return vec![ShapeCheck::new(
+            "tenancy arity",
+            false,
+            format!("expected 8 reports, got {}", r.len()),
+        )];
+    }
+    let m = |i: usize, k: &str| r[i].metric(k).unwrap_or(f64::NAN);
+    let wl = |i: usize| m(i, "workload_secs");
+    let overlap = |a: usize, b: usize| {
+        m(a, "started_secs") < r[b].simulated_secs && m(b, "started_secs") < r[a].simulated_secs
+    };
+    let iso_lo = 0.75;
+    let iso_hi = 1.3;
+    vec![
+        ShapeCheck::new(
+            "every run pays a measured imaging phase",
+            (0..8).all(|i| m(i, "imaging_secs") > 0.0 && m(i, "provision_secs") > 0.0),
+            format!(
+                "imaging {:.0}s..{:.0}s before any workload byte moves",
+                (0..8).map(|i| m(i, "imaging_secs")).fold(f64::INFINITY, f64::min),
+                (0..8).map(|i| m(i, "imaging_secs")).fold(0.0, f64::max)
+            ),
+        ),
+        ShapeCheck::new(
+            "lightpath grants pay their signalling latency",
+            [0usize, 1, 3, 4, 5].iter().all(|&i| m(i, "lightpath_setup_secs") > 0.0)
+                && m(2, "lightpath_setup_secs") == 0.0,
+            format!(
+                "setup {:.0}s on granted runs, 0 on the shared-wave storm",
+                m(0, "lightpath_setup_secs")
+            ),
+        ),
+        ShapeCheck::new(
+            "an under-provisioned wave costs time: 0.5 Gb/s > 1.2x the 10 Gb/s run",
+            wl(1) > 1.2 * wl(0),
+            format!("{:.0}s vs {:.0}s ({:.2}x)", wl(1), wl(0), wl(1) / wl(0)),
+        ),
+        ShapeCheck::new(
+            "concurrent tenant runs complete and overlap in time",
+            (3..8).all(|i| wl(i) > 0.0) && overlap(3, 4) && overlap(6, 7),
+            format!(
+                "alice {:.0}s/bob {:.0}s and carol {:.0}s/dave {:.0}s ran concurrently",
+                wl(3), wl(4), wl(6), wl(7)
+            ),
+        ),
+        ShapeCheck::new(
+            "disjoint waves isolate: each dedicated tenant within band of the solo run",
+            wl(3) > iso_lo * wl(0)
+                && wl(3) < iso_hi * wl(0)
+                && wl(4) > iso_lo * wl(0)
+                && wl(4) < iso_hi * wl(0),
+            format!(
+                "alice {:.2}x, bob {:.2}x of solo {:.0}s (band {iso_lo}-{iso_hi})",
+                wl(3) / wl(0),
+                wl(4) / wl(0),
+                wl(0)
+            ),
+        ),
+        ShapeCheck::new(
+            "spectrum is finite: eve queues until a wave frees, then completes",
+            m(5, "queued_secs") > 0.0
+                && m(3, "queued_secs") == 0.0
+                && m(4, "queued_secs") == 0.0
+                && wl(5) > 0.0,
+            format!(
+                "eve queued {:.0}s for a 10 Gb/s grant from a 20 Gb/s spare pool",
+                m(5, "queued_secs")
+            ),
+        ),
+        ShapeCheck::new(
+            "a shared wave interferes: each storm tenant > 1.15x the solo storm",
+            wl(6) > 1.15 * wl(2) && wl(7) > 1.15 * wl(2),
+            format!(
+                "carol {:.2}x, dave {:.2}x of solo {:.0}s",
+                wl(6) / wl(2), wl(7) / wl(2), wl(2)
+            ),
+        ),
+        ShapeCheck::new(
+            "the storms completed every transfer",
+            [2usize, 6, 7].iter().all(|&i| r[i].metric("flows") == Some(r[i].total_records as f64)),
+            format!(
+                "{:.0}/{:.0}/{:.0} transfers",
+                m(2, "flows"), m(6, "flows"), m(7, "flows")
+            ),
+        ),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -814,8 +976,22 @@ mod tests {
     }
 
     #[test]
+    fn tenancy_shape_holds() {
+        // 1/100 scale — exactly what `oct scenarios tenancy 100` runs.
+        let set = find_set("tenancy").unwrap().scaled_down(100);
+        let reports = ScenarioRunner::new().run_set(&set);
+        assert_eq!(reports.len(), 8);
+        // Reports come back in scenario order even though the tenant
+        // groups execute concurrently after the solos.
+        for (sc, rep) in set.scenarios.iter().zip(&reports) {
+            assert_eq!(sc.name, rep.scenario);
+        }
+        assert_checks_pass(&set, &reports);
+    }
+
+    #[test]
     fn registry_lists_expected_sets() {
-        let names: Vec<&str> = scenario_sets().iter().map(|s| s.name).collect();
+        let names: Vec<&str> = set_names();
         for expect in [
             "table1",
             "table2",
@@ -825,6 +1001,7 @@ mod tests {
             "site-dropout",
             "flow-churn",
             "ops",
+            "tenancy",
         ] {
             assert!(names.contains(&expect), "missing set {expect}");
         }

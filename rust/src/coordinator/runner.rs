@@ -9,7 +9,7 @@
 //! metrics, and the paper reference carried by the scenario.
 
 use std::cell::RefCell;
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet, VecDeque};
 use std::rc::Rc;
 
 use crate::framework::{DataflowControl, HdfsStorage, KfsStorage, SectorStorage, StorageModel};
@@ -19,17 +19,23 @@ use crate::hadoop::FrameworkParams;
 use crate::malstone::record::RECORD_BYTES;
 use crate::monitor::Monitor;
 use crate::net::topology::LinkKind;
-use crate::net::{Cluster, FlowNet, LinkId, NodeId, Topology};
+use crate::net::{Cluster, FlowNet, LinkId, NodeId, SiteId, Topology};
 use crate::ops::{Fault, OpsConfig, OpsPlane, OpsReport};
 use crate::sector::master::{SectorMaster, Segment};
 use crate::sector::sphere::SphereReport;
 use crate::sector::SphereEngine;
-use crate::sim::Engine;
+use crate::sim::{Countdown, Engine};
 use crate::transport::{self, Protocol};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 
-use super::scenario::{Framework, Scenario, WorkloadSpec};
+use super::provision::{Slice, SliceScheduler, DEFAULT_SPARE_WAVE_GBPS, LIGHTPATH_FLOOR_BPS};
+use super::registry::ScenarioSet;
+use super::scenario::{Framework, ImageSpec, LightpathSpec, Placement, Scenario, WorkloadSpec};
+
+/// Shared handle to the omniscient sampler installed by
+/// [`ScenarioRunner::with_monitor`].
+type MonitorHandle = Rc<RefCell<Monitor>>;
 
 /// Traffic through one site's rack uplinks over a run (bytes).
 #[derive(Debug, Clone, PartialEq)]
@@ -271,6 +277,50 @@ enum Outcome {
     FlowChurn { finished_at: f64, flows: u64, peak_inflight: u64, peak_active: u64 },
 }
 
+/// Simulated-time record of a run's admission and provisioning phases,
+/// filled in by engine events as each arm completes.
+#[derive(Debug, Clone, Default)]
+struct ProvisionTimes {
+    /// Engine time the run was admitted (slice carved; 0 for solo runs).
+    admitted_at: f64,
+    /// Admission wait (tenancy queueing; 0 when admitted immediately).
+    queued_secs: f64,
+    /// All placed nodes imaged, relative to admission (0 = no image).
+    imaging_secs: f64,
+    /// Lightpath signalling latency actually paid (0 = no grant).
+    lightpath_setup_secs: f64,
+    /// Engine time the workload proper started.
+    started_at: f64,
+}
+
+/// A scenario in flight on some engine: everything needed to assemble
+/// its [`RunReport`] once its outcome lands.
+struct ActiveRun {
+    sc: Scenario,
+    cluster: Cluster,
+    nodes: Vec<NodeId>,
+    outcome: Rc<RefCell<Option<Outcome>>>,
+    ops: Option<Rc<RefCell<OpsPlane>>>,
+    times: Rc<RefCell<ProvisionTimes>>,
+}
+
+/// How [`ScenarioRunner::launch`] should place and wire a run.
+struct LaunchCtx {
+    /// Admission wait already paid (tenancy queueing).
+    queued_secs: f64,
+    /// Pre-carved slice nodes (tenancy) instead of the placement.
+    nodes: Option<Vec<NodeId>>,
+    /// The links a lightpath grant applies to; defaults to every
+    /// WAN-kind link of the run's topology view.
+    wave_links: Option<Vec<LinkId>>,
+}
+
+impl LaunchCtx {
+    fn solo() -> LaunchCtx {
+        LaunchCtx { queued_secs: 0.0, nodes: None, wave_links: None }
+    }
+}
+
 /// Executes scenarios on the discrete-event substrate.
 #[derive(Debug, Clone, Default)]
 pub struct ScenarioRunner {
@@ -298,17 +348,38 @@ impl ScenarioRunner {
         self
     }
 
-    /// Run one scenario to completion and assemble its report.
+    /// Run one scenario to completion and assemble its report. Scenarios
+    /// with a non-empty provisioning axis pay imaging / lightpath setup
+    /// in simulated time before the workload starts, and report the
+    /// split as `imaging_secs` / `lightpath_setup_secs` /
+    /// `provision_secs` / `workload_secs` metrics.
     pub fn run(&self, sc: &Scenario) -> RunReport {
         let cluster = Cluster::new(sc.topology.build());
-        let nodes = sc.placement.select(&cluster.topo);
-        assert!(!nodes.is_empty(), "scenario '{}' selected no nodes", sc.name);
         let mut eng = Engine::new();
         let mon = self.monitor_interval.map(|iv| {
             let m = Monitor::new(cluster.topo.clone(), iv);
             Monitor::install(&m, &mut eng, &cluster.net, cluster.pools.clone());
             m
         });
+        let run = self.launch(&cluster, sc, &mut eng, LaunchCtx::solo());
+        self.drive(&mut eng, std::slice::from_ref(&run), &mon);
+        self.assemble(&run, mon)
+    }
+
+    /// Wire a scenario onto an engine: ops plane, faults, and either an
+    /// immediate workload start (no provisioning — byte-identical to the
+    /// pre-provisioning behavior) or a provisioning barrier that starts
+    /// the workload once all nodes are imaged *and* the lightpath grant
+    /// lands.
+    fn launch(
+        &self,
+        cluster: &Cluster,
+        sc: &Scenario,
+        eng: &mut Engine,
+        ctx: LaunchCtx,
+    ) -> ActiveRun {
+        let nodes = ctx.nodes.unwrap_or_else(|| sc.placement.select(&cluster.topo));
+        assert!(!nodes.is_empty(), "scenario '{}' selected no nodes", sc.name);
         // The live dataflow's failure surface, filled in as jobs start
         // (chained jobs swap in their own control).
         let control: Rc<RefCell<Option<DataflowControl>>> = Rc::new(RefCell::new(None));
@@ -320,60 +391,87 @@ impl ScenarioRunner {
             .or_else(|| sc.ops.clone())
             .or_else(|| (!sc.fault_plan.is_empty()).then(OpsConfig::default));
         let ops = ops_cfg.map(|cfg| {
-            let plane = OpsPlane::install(&cluster, &nodes, cfg, &mut eng);
-            install_remediation(&plane, &cluster, &control);
+            let plane = OpsPlane::install(cluster, &nodes, cfg, eng);
+            install_remediation(&plane, cluster, &control);
             plane
         });
         // Ground truth of crashed nodes (fault-plan side, independent of
         // detection): chained jobs exclude them from their worker sets.
         let failed: Rc<RefCell<HashSet<NodeId>>> = Rc::new(RefCell::new(HashSet::new()));
-        schedule_faults(sc, &cluster, &nodes, &mut eng, &ops, &control, &failed);
+        schedule_faults(sc, cluster, &nodes, eng, &ops, &control, &failed);
         let outcome: Rc<RefCell<Option<Outcome>>> = Rc::new(RefCell::new(None));
-        match sc.framework {
-            Framework::SectorSphere => {
-                start_sphere(&cluster, &nodes, &sc.workload, &mut eng, outcome.clone(), &control)
+        let times = Rc::new(RefCell::new(ProvisionTimes {
+            admitted_at: eng.now(),
+            queued_secs: ctx.queued_secs,
+            started_at: eng.now(),
+            ..Default::default()
+        }));
+        if sc.provisioning.is_empty() {
+            start_framework(cluster, &nodes, sc, eng, &outcome, &control, &failed);
+        } else {
+            // The ops plane snapshots WAN nominals at install and would
+            // "heal" an under-provisioned grant back to them; the two
+            // axes stay separate until the plane learns about grants.
+            assert!(
+                ops.is_none(),
+                "scenario '{}': provisioning and the ops plane are not composable yet",
+                sc.name
+            );
+            let (c2, n2, s2) = (cluster.clone(), nodes.clone(), sc.clone());
+            let (o2, ct2, f2, t2) =
+                (outcome.clone(), control.clone(), failed.clone(), times.clone());
+            let go = Countdown::new(2, move |eng| {
+                t2.borrow_mut().started_at = eng.now();
+                start_framework(&c2, &n2, &s2, eng, &o2, &ct2, &f2);
+            });
+            match &sc.provisioning.image {
+                Some(img) => start_imaging(cluster, &nodes, img, eng, go.clone(), times.clone()),
+                None => go.arrive(eng),
             }
-            Framework::FlowChurn => {
-                start_flow_churn(&cluster, &nodes, &sc.workload, &mut eng, outcome.clone())
-            }
-            _ => {
-                let params = sc.framework.params();
-                let storage = build_storage(sc.framework, &cluster, &nodes, &params);
-                start_mapreduce(
-                    &cluster,
-                    &nodes,
-                    params,
-                    storage,
-                    &sc.workload,
-                    &mut eng,
-                    outcome.clone(),
-                    control.clone(),
-                    failed,
-                )
+            match &sc.provisioning.lightpath {
+                Some(lp) => {
+                    let links = ctx.wave_links.unwrap_or_else(|| wan_kind_links(&cluster.topo));
+                    start_lightpath(cluster, &links, lp, eng, go.clone(), times.clone());
+                }
+                None => go.arrive(eng),
             }
         }
-        if mon.is_some() || ops.is_some() {
-            // The sampling/ops loops reschedule themselves forever, so
-            // advance in chunks until the workload lands, then drain.
+        ActiveRun { sc: sc.clone(), cluster: cluster.clone(), nodes, outcome, ops, times }
+    }
+
+    /// Pump the engine until every run's outcome lands; monitor/ops loops
+    /// reschedule themselves forever, so those runs advance in chunks and
+    /// are disabled before the final drain.
+    fn drive(&self, eng: &mut Engine, runs: &[ActiveRun], mon: &Option<MonitorHandle>) {
+        let pending = |runs: &[ActiveRun]| runs.iter().any(|r| r.outcome.borrow().is_none());
+        if mon.is_some() || runs.iter().any(|r| r.ops.is_some()) {
             let chunk = (self.monitor_interval.unwrap_or(1.0) * 64.0).max(60.0);
             let mut t = eng.now();
             // Even unscaled paper runs finish within ~1e5 simulated
             // seconds; 1e8 is far past any legitimate scenario.
-            while outcome.borrow().is_none() {
+            while pending(runs) {
                 t += chunk;
                 eng.run_until(t);
-                assert!(t < 1e8, "scenario '{}' did not converge by t={t:.0}s", sc.name);
+                assert!(t < 1e8, "{} did not converge by t={t:.0}s", stalled(runs));
             }
-            if let Some(m) = &mon {
+            if let Some(m) = mon {
                 m.borrow_mut().disable();
             }
-            if let Some(o) = &ops {
-                o.borrow_mut().disable();
+            for r in runs {
+                if let Some(o) = &r.ops {
+                    o.borrow_mut().disable();
+                }
             }
             eng.run();
         } else {
             eng.run();
         }
+    }
+
+    /// Fold a finished run (plus the shared network's counters) into its
+    /// report.
+    fn assemble(&self, run: &ActiveRun, mon: Option<MonitorHandle>) -> RunReport {
+        let ActiveRun { sc, cluster, nodes, outcome, ops, times } = run;
         let out = outcome
             .borrow_mut()
             .take()
@@ -447,6 +545,17 @@ impl ScenarioRunner {
                 finished_at
             }
         };
+        // Provisioned and tenant runs report their admission/provisioning
+        // split; plain runs keep their pre-provisioning metric set.
+        if !sc.provisioning.is_empty() || sc.tenancy.is_some() {
+            let t = times.borrow();
+            metrics.push(("queued_secs".to_string(), t.queued_secs));
+            metrics.push(("imaging_secs".to_string(), t.imaging_secs));
+            metrics.push(("lightpath_setup_secs".to_string(), t.lightpath_setup_secs));
+            metrics.push(("provision_secs".to_string(), t.started_at - t.admitted_at));
+            metrics.push(("started_secs".to_string(), t.started_at));
+            metrics.push(("workload_secs".to_string(), finished_at - t.started_at));
+        }
         metrics.sort_by(|a, b| a.0.cmp(&b.0));
 
         let netb = cluster.net.borrow();
@@ -497,7 +606,7 @@ impl ScenarioRunner {
                 nic_rate_p99,
             }
         });
-        let ops_report = ops.map(|o| o.borrow().report());
+        let ops_report = ops.as_ref().map(|o| o.borrow().report());
 
         RunReport {
             scenario: sc.name.clone(),
@@ -521,6 +630,328 @@ impl ScenarioRunner {
     pub fn run_all(&self, scenarios: &[Scenario]) -> Vec<RunReport> {
         scenarios.iter().map(|sc| self.run(sc)).collect()
     }
+
+    /// Run a group of tenant scenarios concurrently on **one** shared
+    /// testbed (one engine, one fluid network, one CPU-pool set).
+    ///
+    /// Each tenant asks a [`SliceScheduler`] for a [`Slice`]
+    /// (`PerSite(n)` nodes from every site plus an optional lightpath
+    /// grant); admission is FIFO, and a tenant that does not fit the
+    /// finite inventory queues until a running tenant completes and
+    /// releases. Tenant names must be unique within a group, and every
+    /// scenario must declare the same topology — the group shares one
+    /// testbed, built from the first scenario's spec. A granted tenant
+    /// gets a *dedicated wave*: pre-added
+    /// dark to the shared fiber plant, routed only by that tenant's
+    /// topology view, lit at admission after the signalling latency, and
+    /// darkened again at release; grantless tenants share the testbed's
+    /// default wave. Reports come back in input order with
+    /// `queued_secs` / `provision_secs` / `workload_secs` separating
+    /// waiting, provisioning, and running; network byte counters
+    /// (`wan_bytes`, site flows) are testbed-wide totals shared by every
+    /// tenant's report. Fault plans, the ops plane, and the monitor are
+    /// not composed with multi-tenancy yet.
+    pub fn run_tenants(&self, scenarios: &[Scenario]) -> Vec<RunReport> {
+        assert!(!scenarios.is_empty(), "empty tenant group");
+        assert!(
+            self.monitor_interval.is_none() && self.ops_override.is_none(),
+            "monitor/ops are not composed with multi-tenancy yet"
+        );
+        for sc in scenarios {
+            assert!(
+                sc.tenancy.is_some(),
+                "run_tenants takes tenant-marked scenarios ('{}')",
+                sc.name
+            );
+            assert!(
+                sc.fault_plan.is_empty() && sc.ops.is_none(),
+                "fault/ops axes are not composed with multi-tenancy yet ('{}')",
+                sc.name
+            );
+            // The group shares ONE testbed, built from the first
+            // scenario's spec — a tenant declaring a different topology
+            // would silently run on the wrong hardware.
+            assert!(
+                sc.topology.label() == scenarios[0].topology.label(),
+                "tenant scenario '{}' declares topology '{}' but the group runs on '{}'",
+                sc.name,
+                sc.topology.label(),
+                scenarios[0].topology.label()
+            );
+        }
+        let mut seen = HashSet::new();
+        for sc in scenarios {
+            let tenant = &sc.tenancy.as_ref().unwrap().tenant;
+            assert!(seen.insert(tenant.clone()), "duplicate tenant '{tenant}' in one group");
+        }
+        // One shared physical testbed from the first scenario's spec,
+        // with a dark wave pre-added per lightpath tenant: the fluid
+        // network's link set is fixed at construction, so the lambda
+        // exists from t=0 (at granted capacity in the topology, for the
+        // transport models' nominal-rate caps) and admission lights it.
+        let mut master = scenarios[0].topology.build();
+        let sites: Vec<SiteId> = (0..master.sites.len()).map(SiteId).collect();
+        let waves: Vec<Option<(LinkId, LinkId)>> = scenarios
+            .iter()
+            .map(|sc| {
+                sc.provisioning.lightpath.as_ref().map(|lp| {
+                    let tenant = &sc.tenancy.as_ref().unwrap().tenant;
+                    master.add_wave(lp.gbps * 1e9 / 8.0, tenant)
+                })
+            })
+            .collect();
+        let cluster = Cluster::new(master);
+        let mut sched = SliceScheduler::new(cluster.topo.clone(), DEFAULT_SPARE_WAVE_GBPS);
+        let mut eng = Engine::new();
+        // Dark waves idle at the control floor until their tenant lights
+        // them through its provisioning phase.
+        let dark: Vec<(LinkId, f64)> = waves
+            .iter()
+            .flatten()
+            .flat_map(|&(east, west)| [(east, LIGHTPATH_FLOOR_BPS), (west, LIGHTPATH_FLOOR_BPS)])
+            .collect();
+        FlowNet::set_capacities(&cluster.net, &mut eng, &dark);
+
+        struct Tenant {
+            run: Option<ActiveRun>,
+            slice: Option<Slice>,
+            released: bool,
+        }
+        let mut tenants: Vec<Tenant> = scenarios
+            .iter()
+            .map(|_| Tenant { run: None, slice: None, released: false })
+            .collect();
+        let mut queue: VecDeque<usize> = (0..scenarios.len()).collect();
+        loop {
+            // Completed tenants return their slice (and darken their
+            // wave — the runtime teardown) so queued tenants can admit.
+            for t in tenants.iter_mut() {
+                if t.released {
+                    continue;
+                }
+                let done = t.run.as_ref().is_some_and(|r| r.outcome.borrow().is_some());
+                if done {
+                    let slice = t.slice.as_ref().expect("launched tenant has a slice");
+                    if let Some((east, west)) = slice.wave {
+                        FlowNet::set_capacities(
+                            &cluster.net,
+                            &mut eng,
+                            &[(east, LIGHTPATH_FLOOR_BPS), (west, LIGHTPATH_FLOOR_BPS)],
+                        );
+                    }
+                    sched.release(slice);
+                    t.released = true;
+                }
+            }
+            // FIFO admission from the head while the inventory fits.
+            while let Some(&i) = queue.front() {
+                let sc = &scenarios[i];
+                let per_site = match sc.placement {
+                    Placement::PerSite(n) => n,
+                    _ => panic!("tenant scenario '{}' must use PerSite placement", sc.name),
+                };
+                let grant = sc.provisioning.lightpath.as_ref().map(|lp| lp.gbps);
+                let tenant = sc.tenancy.as_ref().unwrap().tenant.clone();
+                match sched.try_carve(&tenant, per_site, grant, waves[i]) {
+                    None => break, // the head waits for a release
+                    Some(slice) => {
+                        queue.pop_front();
+                        // The tenant's view of the shared testbed: same
+                        // nodes, racks, and substrate handles, but its
+                        // own wide-area routing. Grantless tenants ride
+                        // the default wave — their view IS the master,
+                        // so share the Rc instead of deep-cloning.
+                        let topo = match waves[i] {
+                            Some((east, west)) => {
+                                let mut view = (*cluster.topo).clone();
+                                view.route_over_wave(&sites, east, west);
+                                Rc::new(view)
+                            }
+                            None => cluster.topo.clone(),
+                        };
+                        let vcluster = Cluster {
+                            topo,
+                            net: cluster.net.clone(),
+                            pools: cluster.pools.clone(),
+                        };
+                        let ctx = LaunchCtx {
+                            queued_secs: eng.now(),
+                            nodes: Some(slice.nodes.clone()),
+                            wave_links: waves[i].map(|(east, west)| vec![east, west]),
+                        };
+                        let run = self.launch(&vcluster, sc, &mut eng, ctx);
+                        tenants[i].run = Some(run);
+                        tenants[i].slice = Some(slice);
+                    }
+                }
+            }
+            if tenants.iter().all(|t| t.released) {
+                break;
+            }
+            assert!(
+                eng.step(),
+                "tenancy group stalled: a queued slice request exceeds the total inventory"
+            );
+        }
+        eng.run(); // drain trailing events (teardown timers etc.)
+        tenants
+            .iter()
+            .map(|t| self.assemble(t.run.as_ref().expect("tenant never launched"), None))
+            .collect()
+    }
+
+    /// Run a whole [`ScenarioSet`]: solo scenarios sequentially (each on
+    /// a fresh testbed), then each tenancy group concurrently through
+    /// [`ScenarioRunner::run_tenants`]. Reports come back in the set's
+    /// scenario order regardless of execution order, so shape checks
+    /// index as usual.
+    pub fn run_set(&self, set: &ScenarioSet) -> Vec<RunReport> {
+        let mut out: Vec<Option<RunReport>> = Vec::new();
+        out.resize_with(set.scenarios.len(), || None);
+        let mut groups: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+        for (i, sc) in set.scenarios.iter().enumerate() {
+            match &sc.tenancy {
+                None => out[i] = Some(self.run(sc)),
+                Some(t) => groups.entry(t.group).or_default().push(i),
+            }
+        }
+        for idxs in groups.into_values() {
+            let group: Vec<Scenario> = idxs.iter().map(|&i| set.scenarios[i].clone()).collect();
+            for (i, rep) in idxs.iter().zip(self.run_tenants(&group)) {
+                out[*i] = Some(rep);
+            }
+        }
+        out.into_iter().map(|r| r.expect("every scenario ran")).collect()
+    }
+}
+
+/// Kick off the scenario's framework on the engine — the workload
+/// proper; any provisioning latency has already been paid by the caller.
+fn start_framework(
+    cluster: &Cluster,
+    nodes: &[NodeId],
+    sc: &Scenario,
+    eng: &mut Engine,
+    outcome: &Rc<RefCell<Option<Outcome>>>,
+    control: &Rc<RefCell<Option<DataflowControl>>>,
+    failed: &Rc<RefCell<HashSet<NodeId>>>,
+) {
+    match sc.framework {
+        Framework::SectorSphere => {
+            start_sphere(cluster, nodes, &sc.workload, eng, outcome.clone(), control)
+        }
+        Framework::FlowChurn => {
+            start_flow_churn(cluster, nodes, &sc.workload, eng, outcome.clone())
+        }
+        _ => {
+            let params = sc.framework.params();
+            let storage = build_storage(sc.framework, cluster, nodes, &params);
+            start_mapreduce(
+                cluster,
+                nodes,
+                params,
+                storage,
+                &sc.workload,
+                eng,
+                outcome.clone(),
+                control.clone(),
+                failed.clone(),
+            )
+        }
+    }
+}
+
+/// Per-node install+reboot time after the image lands on disk, on top of
+/// the disk-speed write of the image itself.
+const IMAGE_BOOT_SECS: f64 = 30.0;
+
+/// The site's image depot: the first node of the site's first rack. A
+/// depot serves every tenant's fetches (it is infrastructure, not tenant
+/// compute), so imaging contention across concurrent slices is real.
+fn image_depot(topo: &Topology, n: NodeId) -> NodeId {
+    let site = topo.node(n).site;
+    topo.racks[topo.sites[site.0].racks[0].0].nodes[0]
+}
+
+/// Image every placed node: fetch the image from the node's site depot
+/// as a real flow (depot NICs are the bottleneck when a whole slice
+/// images at once), then write it to disk and reboot. Arrives on `done`
+/// when the last node reports Ready, recording `imaging_secs`.
+fn start_imaging(
+    cluster: &Cluster,
+    nodes: &[NodeId],
+    img: &ImageSpec,
+    eng: &mut Engine,
+    done: Rc<Countdown>,
+    times: Rc<RefCell<ProvisionTimes>>,
+) {
+    let admitted = eng.now();
+    let all = Countdown::new(nodes.len(), move |eng| {
+        times.borrow_mut().imaging_secs = eng.now() - admitted;
+        done.arrive(eng);
+    });
+    for &n in nodes {
+        let depot = image_depot(&cluster.topo, n);
+        let install = img.bytes / cluster.topo.link(cluster.topo.node(n).disk).capacity
+            + IMAGE_BOOT_SECS;
+        let all2 = all.clone();
+        let finish = move |eng: &mut Engine| {
+            eng.schedule_in(install, move |eng| all2.arrive(eng));
+        };
+        if depot == n {
+            // The depot images itself from its local copy: install only.
+            eng.schedule_in(0.0, finish);
+        } else {
+            let path = cluster.topo.path(depot, n);
+            FlowNet::start(&cluster.net, eng, path, img.bytes, f64::INFINITY, finish);
+        }
+    }
+}
+
+/// Light a lightpath: the wave's links drop to the control floor at
+/// request time, and after the signalling latency the grant lands at
+/// `gbps` per direction — only then does the workload start. Grants
+/// below nominal model an under-provisioned path.
+fn start_lightpath(
+    cluster: &Cluster,
+    links: &[LinkId],
+    lp: &LightpathSpec,
+    eng: &mut Engine,
+    done: Rc<Countdown>,
+    times: Rc<RefCell<ProvisionTimes>>,
+) {
+    assert!(!links.is_empty(), "lightpath grant on a WAN-less topology");
+    let floor: Vec<(LinkId, f64)> = links.iter().map(|&l| (l, LIGHTPATH_FLOOR_BPS)).collect();
+    FlowNet::set_capacities(&cluster.net, eng, &floor);
+    let grant: Vec<(LinkId, f64)> = links.iter().map(|&l| (l, lp.gbps * 1e9 / 8.0)).collect();
+    let net = cluster.net.clone();
+    let setup = lp.setup_secs;
+    eng.schedule_in(setup, move |eng| {
+        FlowNet::set_capacities(&net, eng, &grant);
+        times.borrow_mut().lightpath_setup_secs = setup;
+        done.arrive(eng);
+    });
+}
+
+/// Names of the runs still awaiting an outcome (convergence diagnostics).
+fn stalled(runs: &[ActiveRun]) -> String {
+    let names: Vec<&str> = runs
+        .iter()
+        .filter(|r| r.outcome.borrow().is_none())
+        .map(|r| r.sc.name.as_str())
+        .collect();
+    format!("scenario(s) [{}]", names.join(", "))
+}
+
+/// Every WAN-kind link of a topology (the default target of a solo run's
+/// lightpath grant: the testbed's shared wave).
+fn wan_kind_links(topo: &Topology) -> Vec<LinkId> {
+    topo.links
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.kind == LinkKind::Wan)
+        .map(|(i, _)| LinkId(i))
+        .collect()
 }
 
 /// The storage layer a framework's jobs write through — where the §7
@@ -574,9 +1005,7 @@ fn install_remediation(
     if !nominal.is_empty() {
         let net = cluster.net.clone();
         plane.borrow_mut().set_wan_restore_hook(Box::new(move |eng| {
-            for &(l, cap) in &nominal {
-                FlowNet::set_capacity(&net, eng, l, cap);
-            }
+            FlowNet::set_capacities(&net, eng, &nominal);
         }));
     }
 }
@@ -975,6 +1404,95 @@ mod tests {
         let text = rep.to_json().to_string();
         let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn provisioning_pays_imaging_and_lightpath_before_work() {
+        let sc = Testbed::builder()
+            .framework(Framework::SectorSphere)
+            .workload(WorkloadSpec::malstone_a(2_000_000))
+            .image("sector-sphere-1.24", 2.0)
+            .lightpath(10.0)
+            .name("provisioned-smoke")
+            .build();
+        let rep = ScenarioRunner::new().run(&sc);
+        let m = |k: &str| rep.metric(k).unwrap_or_else(|| panic!("missing metric {k}"));
+        // Imaging moved real bytes and took real simulated time; the
+        // lightpath grant paid exactly its signalling latency.
+        assert!(m("imaging_secs") > IMAGE_BOOT_SECS, "imaging {}", m("imaging_secs"));
+        assert_eq!(m("lightpath_setup_secs"), LightpathSpec::DEFAULT_SETUP_SECS);
+        // The workload waited for the slower provisioning arm.
+        let slower = m("imaging_secs").max(m("lightpath_setup_secs"));
+        assert!(m("provision_secs") >= slower - 1e-9);
+        // Solo run: admitted at t=0, so started == provision, no queue.
+        assert_eq!(m("queued_secs"), 0.0);
+        assert!((m("started_secs") - m("provision_secs")).abs() < 1e-9);
+        assert!(m("workload_secs") > 0.0);
+        assert!((rep.simulated_secs - (m("started_secs") + m("workload_secs"))).abs() < 1e-6);
+        // An unprovisioned twin reports none of the provisioning metrics
+        // and finishes in the workload time alone.
+        let plain = ScenarioRunner::new().run(&smoke(Framework::SectorSphere, 2_000_000));
+        assert!(plain.metric("imaging_secs").is_none());
+        assert!(plain.simulated_secs < rep.simulated_secs);
+        // The enriched report round-trips through JSON.
+        let back = RunReport::from_json(&Json::parse(&rep.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn under_provisioned_lightpath_slows_the_run() {
+        let run = |gbps: f64| {
+            ScenarioRunner::new().run(
+                &Testbed::builder()
+                    .framework(Framework::SectorSphere)
+                    .workload(WorkloadSpec::malstone_a(20_000_000))
+                    .lightpath(gbps)
+                    .name("wave")
+                    .build(),
+            )
+        };
+        let full = run(10.0);
+        let thin = run(0.25);
+        let wl = |r: &RunReport| r.metric("workload_secs").unwrap();
+        // Same workload, same setup latency — only the grant differs,
+        // and the thin wave costs real time.
+        assert!(wl(&thin) > 1.1 * wl(&full), "thin {} vs full {}", wl(&thin), wl(&full));
+        assert_eq!(full.metric("lightpath_setup_secs"), thin.metric("lightpath_setup_secs"));
+    }
+
+    #[test]
+    fn tenants_share_one_testbed_and_queue_on_inventory() {
+        // Three 16-per-site tenants on 32-node sites: the third queues
+        // until an earlier slice releases.
+        let tenant = |name: &str| {
+            Testbed::builder()
+                .framework(Framework::SectorSphere)
+                .workload(WorkloadSpec::malstone_a(2_000_000))
+                .placement(Placement::PerSite(16))
+                .tenant(name, 0)
+                .name(&format!("tenant-{name}"))
+                .build()
+        };
+        let scs = vec![tenant("a"), tenant("b"), tenant("c")];
+        let reps = ScenarioRunner::new().run_tenants(&scs);
+        assert_eq!(reps.len(), 3);
+        let m = |r: &RunReport, k: &str| r.metric(k).unwrap_or_else(|| panic!("missing {k}"));
+        assert_eq!(m(&reps[0], "queued_secs"), 0.0);
+        assert_eq!(m(&reps[1], "queued_secs"), 0.0);
+        assert!(m(&reps[2], "queued_secs") > 0.0, "third tenant admitted immediately");
+        // The queued tenant started only after an earlier run finished.
+        let first_finish = reps[0].simulated_secs.min(reps[1].simulated_secs);
+        assert!(m(&reps[2], "started_secs") >= first_finish - 1e-9);
+        // All three completed, and the first two overlapped in time.
+        for r in &reps {
+            assert!(m(r, "workload_secs") > 0.0, "{}", r.scenario);
+        }
+        assert!(m(&reps[0], "started_secs") < reps[1].simulated_secs);
+        assert!(m(&reps[1], "started_secs") < reps[0].simulated_secs);
+        // Tenant reports survive the JSON round-trip.
+        let back =
+            RunReport::from_json(&Json::parse(&reps[2].to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, reps[2]);
     }
 
     #[test]

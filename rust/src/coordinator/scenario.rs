@@ -195,6 +195,86 @@ impl Framework {
     }
 }
 
+/// A node-imaging requirement: before the workload may start, every
+/// placed node must be brought from bare metal to `Ready(name)` — the
+/// image is fetched from the node's site depot as a real flow, installed
+/// at disk speed, and the node rebooted, all on the event engine. The
+/// measured latency lands in the run's `imaging_secs` metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageSpec {
+    /// Image name (what [`crate::coordinator::Provisioner::image_node`]
+    /// records).
+    pub name: String,
+    /// Image size in bytes (fetched over the fabric, written to disk).
+    pub bytes: f64,
+}
+
+impl ImageSpec {
+    /// An image of `gb` gigabytes.
+    ///
+    /// ```
+    /// use oct::coordinator::ImageSpec;
+    /// let img = ImageSpec::new("hadoop-0.18.3", 4.0);
+    /// assert_eq!(img.bytes, 4.0e9);
+    /// ```
+    pub fn new(name: &str, gb: f64) -> ImageSpec {
+        assert!(gb > 0.0, "image must have positive size");
+        ImageSpec { name: name.to_string(), bytes: gb * 1e9 }
+    }
+}
+
+/// A dynamic-lightpath grant: the run's wide-area wave starts dark (at
+/// the control-path floor), is provisioned to `gbps` per direction after
+/// `setup_secs` of signalling, and the workload waits for the grant. An
+/// under-provisioned grant (below the testbed's nominal 10 Gb/s) is a
+/// first-class scenario axis: the run completes, slower.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LightpathSpec {
+    /// Granted capacity per direction, Gb/s.
+    pub gbps: f64,
+    /// Signalling/setup latency before the wave lights, seconds.
+    pub setup_secs: f64,
+}
+
+impl LightpathSpec {
+    /// Lightpath setup on dynamic optical networks of the era (the
+    /// paper's [13]) took tens of seconds of control-plane signalling.
+    pub const DEFAULT_SETUP_SECS: f64 = 30.0;
+
+    /// A grant of `gbps` per direction with the default setup latency.
+    pub fn gbps(gbps: f64) -> LightpathSpec {
+        assert!(gbps > 0.0, "lightpath grant must be positive");
+        LightpathSpec { gbps, setup_secs: Self::DEFAULT_SETUP_SECS }
+    }
+}
+
+/// The provisioning axis of a scenario: what must be set up — and paid
+/// for in simulated time — before the workload starts. Empty by default
+/// (the testbed is assumed pre-imaged and pre-lit, as every pre-existing
+/// scenario was).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProvisioningSpec {
+    pub image: Option<ImageSpec>,
+    pub lightpath: Option<LightpathSpec>,
+}
+
+impl ProvisioningSpec {
+    /// True when the scenario requires no provisioning phase at all.
+    pub fn is_empty(&self) -> bool {
+        self.image.is_none() && self.lightpath.is_none()
+    }
+}
+
+/// Marks a scenario as one tenant of a concurrent multi-tenant group:
+/// scenarios sharing a `group` id are carved onto slices of *one* shared
+/// testbed and run concurrently by
+/// [`crate::coordinator::ScenarioRunner::run_tenants`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub tenant: String,
+    pub group: u32,
+}
+
 /// MalStone variant: A (point-in-time ratios) or B (cumulative windows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Variant {
@@ -258,6 +338,11 @@ pub struct Scenario {
     /// sensor/aggregator/service pipeline even on fault-free runs
     /// (overhead and false-positive baselines).
     pub ops: Option<OpsConfig>,
+    /// What must be provisioned (imaging, lightpath) before the workload
+    /// starts; the run pays the measured latency.
+    pub provisioning: ProvisioningSpec,
+    /// `Some` marks this scenario as one tenant of a concurrent group.
+    pub tenancy: Option<TenantSpec>,
 }
 
 impl Scenario {
@@ -266,7 +351,9 @@ impl Scenario {
     /// name records the divisor (names often embed record counts).
     /// Fault times scale with the workload so a fault keeps its relative
     /// position in the run; ops cadences do not (detection-latency bounds
-    /// stay in absolute heartbeats at every scale).
+    /// stay in absolute heartbeats at every scale). Provisioning does not
+    /// scale either: image sizes and lightpath signalling latency are
+    /// properties of the testbed, not the workload.
     pub fn scaled_down(&self, div: u64) -> Scenario {
         assert!(div > 0);
         Scenario {
@@ -278,6 +365,8 @@ impl Scenario {
             paper_secs: self.paper_secs.map(|p| p / div as f64),
             fault_plan: self.fault_plan.scaled_down(div),
             ops: self.ops.clone(),
+            provisioning: self.provisioning.clone(),
+            tenancy: self.tenancy.clone(),
         }
     }
 
@@ -288,8 +377,19 @@ impl Scenario {
         } else {
             format!(" + {} fault(s)", self.fault_plan.len())
         };
+        let mut provision = String::new();
+        if let Some(img) = &self.provisioning.image {
+            provision.push_str(&format!(" + image {}", img.name));
+        }
+        if let Some(lp) = &self.provisioning.lightpath {
+            provision.push_str(&format!(" + lightpath {} Gb/s", lp.gbps));
+        }
+        let tenant = match &self.tenancy {
+            Some(t) => format!(" [tenant {}]", t.tenant),
+            None => String::new(),
+        };
         format!(
-            "{}: {} malstone-{} {} records on {} / {}{}",
+            "{}: {} malstone-{} {} records on {} / {}{}{}{}",
             self.name,
             self.framework.name(),
             self.workload.variant.letter(),
@@ -297,6 +397,8 @@ impl Scenario {
             self.topology.label(),
             self.placement.label(),
             faults,
+            provision,
+            tenant,
         )
     }
 }
@@ -321,6 +423,8 @@ impl Testbed {
             paper_secs: None,
             fault_plan: FaultPlan::new(),
             ops: None,
+            provisioning: ProvisioningSpec::default(),
+            tenancy: None,
         }
     }
 }
@@ -338,6 +442,8 @@ pub struct TestbedBuilder {
     paper_secs: Option<f64>,
     fault_plan: FaultPlan,
     ops: Option<OpsConfig>,
+    provisioning: ProvisioningSpec,
+    tenancy: Option<TenantSpec>,
 }
 
 impl TestbedBuilder {
@@ -384,6 +490,35 @@ impl TestbedBuilder {
         self
     }
 
+    /// Require every placed node to be imaged with `name` (`gb`
+    /// gigabytes) before the workload starts; the run pays the measured
+    /// imaging latency.
+    pub fn image(mut self, name: &str, gb: f64) -> Self {
+        self.provisioning.image = Some(ImageSpec::new(name, gb));
+        self
+    }
+
+    /// Require a dynamic lightpath grant of `gbps` per direction (default
+    /// setup latency) before the workload starts. Grants below the
+    /// testbed's nominal wave model an under-provisioned path.
+    pub fn lightpath(mut self, gbps: f64) -> Self {
+        self.provisioning.lightpath = Some(LightpathSpec::gbps(gbps));
+        self
+    }
+
+    /// Set the full provisioning axis at once.
+    pub fn provisioning(mut self, p: ProvisioningSpec) -> Self {
+        self.provisioning = p;
+        self
+    }
+
+    /// Mark this scenario as tenant `name` of concurrent group `group`
+    /// (see [`crate::coordinator::ScenarioRunner::run_tenants`]).
+    pub fn tenant(mut self, name: &str, group: u32) -> Self {
+        self.tenancy = Some(TenantSpec { tenant: name.to_string(), group });
+        self
+    }
+
     pub fn build(self) -> Scenario {
         // `Local { site }` topologies default to the Table-2 local layout
         // (28 nodes on that site); everything else to Table 1's 5×4.
@@ -409,6 +544,8 @@ impl TestbedBuilder {
             paper_secs: self.paper_secs,
             fault_plan: self.fault_plan,
             ops: self.ops,
+            provisioning: self.provisioning,
+            tenancy: self.tenancy,
         }
     }
 }
@@ -483,6 +620,37 @@ mod tests {
         let plain = Testbed::builder().build();
         assert!(plain.fault_plan.is_empty());
         assert!(plain.ops.is_none());
+    }
+
+    #[test]
+    fn provisioning_axis_rides_the_builder() {
+        let sc = Testbed::builder()
+            .image("sector-sphere-1.24", 4.0)
+            .lightpath(2.5)
+            .tenant("alice", 0)
+            .name("provisioned")
+            .build();
+        assert!(!sc.provisioning.is_empty());
+        let img = sc.provisioning.image.as_ref().unwrap();
+        assert_eq!(img.name, "sector-sphere-1.24");
+        assert_eq!(img.bytes, 4.0e9);
+        let lp = sc.provisioning.lightpath.as_ref().unwrap();
+        assert_eq!(lp.gbps, 2.5);
+        assert_eq!(lp.setup_secs, LightpathSpec::DEFAULT_SETUP_SECS);
+        assert_eq!(sc.tenancy.as_ref().unwrap().tenant, "alice");
+        let d = sc.describe();
+        assert!(d.contains("image sector-sphere-1.24"), "{d}");
+        assert!(d.contains("lightpath 2.5 Gb/s"), "{d}");
+        assert!(d.contains("[tenant alice]"), "{d}");
+        // Scaling divides the workload but not the testbed's provisioning
+        // constants (image size, signalling latency).
+        let s = sc.scaled_down(100);
+        assert_eq!(s.provisioning, sc.provisioning);
+        assert_eq!(s.tenancy, sc.tenancy);
+        // Default scenarios carry no provisioning phase.
+        let plain = Testbed::builder().build();
+        assert!(plain.provisioning.is_empty());
+        assert!(plain.tenancy.is_none());
     }
 
     #[test]

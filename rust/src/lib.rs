@@ -25,6 +25,12 @@
 //!   [`coordinator::registry`] sets, executed by a single
 //!   [`coordinator::ScenarioRunner`] that returns a JSON-serializable
 //!   [`coordinator::RunReport`] with paper references and shape checks.
+//!   The dynamic-provisioning subsystem ([`coordinator::provision`])
+//!   adds node imaging, dynamic lightpaths, and tenant slices: runs pay
+//!   measured provisioning latency, and
+//!   [`coordinator::ScenarioRunner::run_tenants`] time-shares one
+//!   testbed between concurrent tenants under a
+//!   [`coordinator::SliceScheduler`]'s admission control.
 //! - **L2/L1 (python/, build-time only)** — the MalStone aggregation
 //!   dataflow (JAX) and the one-hot-matmul histogram kernel (Pallas),
 //!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT

@@ -11,17 +11,24 @@
 //! oct alerts <set> [scale]            # run one set; print the ops alert log as JSON lines
 //! oct monitor [secs]                  # Figure 3: live ANSI heatmap of a run
 //! oct provision                       # §2.2: growth-plan provisioning demo
+//! oct slices                          # tenant-slice admission demo (SliceScheduler)
 //! oct kernel-check                    # load AOT artifacts, verify vs oracle
+//! oct help [command]                  # usage, or one command's details (exit 0)
 //! oct version
 //! ```
 //!
-//! Unknown subcommands print usage to stderr and exit non-zero.
+//! `oct help`, `oct --help`, and `oct <command> --help` print usage and
+//! exit 0; unknown subcommands print usage to stderr and exit non-zero,
+//! and unknown scenario sets list the registered set names.
 
-use oct::coordinator::{find_set, format_checks, format_reports, scenario_sets, ScenarioRunner};
+use oct::coordinator::{
+    find_set, format_checks, format_reports, scenario_sets, set_names, ScenarioRunner,
+    SliceScheduler, DEFAULT_SPARE_WAVE_GBPS,
+};
 use oct::coordinator::Provisioner;
 use oct::net::Topology;
 
-const USAGE: &str = "usage: oct <command>
+const USAGE: &str = "usage: oct <command>  (oct help <command> for details)
   topology                         Figure 2: the 4-site testbed description
   table1 [scale]                   Table 1 scenario set (default scale 1/100)
   table2 [scale]                   Table 2 scenario set (default scale 1/100)
@@ -30,11 +37,87 @@ const USAGE: &str = "usage: oct <command>
   alerts <set> [scale]             run one set; print the ops alert log as JSON lines
   monitor [secs]                   Figure 3: live ANSI heatmap of a run
   provision                        §2.2 growth-plan provisioning demo
+  slices                           tenant-slice admission demo (carve/queue/release)
   kernel-check                     load AOT artifacts, verify geometry
+  help [command]                   this summary, or one command's usage
   version                          print the crate version";
+
+/// Per-subcommand usage details (`oct help <command>`).
+fn detailed_usage(cmd: &str) -> Option<&'static str> {
+    Some(match cmd {
+        "topology" => "usage: oct topology\n\
+             Print the Figure-2 testbed: 4 sites x 32 nodes, rack uplinks, and the\n\
+             shared 10 Gb/s CiscoWave with per-pair RTTs.",
+        "table1" => "usage: oct table1 [scale]\n\
+             Run the Table 1 set (MalStone-A/B x three frameworks, 10B records) at\n\
+             1/scale of the paper workload (default 100) and evaluate its shape\n\
+             checks. Exit 0 = all checks pass, 1 = a check failed.",
+        "table2" => "usage: oct table2 [scale]\n\
+             Run the Table 2 set (local vs distributed wide-area penalty,\n\
+             15B records) at 1/scale (default 100) with its shape checks.",
+        "scenarios" => "usage: oct scenarios [<set> [scale]] [--json]\n\
+             Without arguments: list the registered scenario sets.\n\
+             With a set name: run it at 1/scale (default 100) through the\n\
+             ScenarioRunner (tenancy groups run concurrently on one shared\n\
+             testbed), print a report table and the set's shape-check verdicts.\n\
+             --json emits one RunReport JSON line per scenario plus one line per\n\
+             check. Exit 0 = all checks pass, 1 = a check failed, 2 = unknown set.",
+        "alerts" => "usage: oct alerts <set> [scale]\n\
+             Run one set and print every ops-enabled scenario's alert log as JSON\n\
+             lines plus a per-scenario summary line (ready for jq).",
+        "monitor" => "usage: oct monitor [secs]\n\
+             Figure 3: run a Sphere scan over the full testbed and render the\n\
+             monitoring heatmap as ANSI frames for `secs` simulated seconds\n\
+             (default 30).",
+        "provision" => "usage: oct provision\n\
+             Apply the paper's §2.2 growth plan (MIT-LL and PSC racks, 10 Gb/s\n\
+             interconnects) to the 2009 testbed and print the before/after\n\
+             topology plus the replayable op log length.",
+        "slices" => "usage: oct slices\n\
+             Walk the tenant-slice admission demo: carve two 20-node slices with\n\
+             dedicated 10 Gb/s lightpath grants, show a third request queueing\n\
+             against exhausted spare spectrum, release a slice, and admit the\n\
+             queued tenant. Prints the inventory at each step and the replayable\n\
+             carve/release op log.",
+        "kernel-check" => "usage: oct kernel-check\n\
+             Load the AOT-compiled JAX/Pallas artifacts (pjrt feature) and verify\n\
+             their geometry against the build metadata.",
+        "version" => "usage: oct version\n\
+             Print the crate version.",
+        "help" => "usage: oct help [command]\n\
+             Print the command summary, or one command's detailed usage.",
+        _ => return None,
+    })
+}
+
+/// Print help for `topic` (general usage when `None`). Returns the
+/// process exit code: 0, or 2 for an unknown topic.
+fn print_help(topic: Option<&str>) -> i32 {
+    match topic {
+        None => {
+            println!("{USAGE}");
+            0
+        }
+        Some(t) => match detailed_usage(t) {
+            Some(d) => {
+                println!("{d}");
+                0
+            }
+            None => {
+                eprintln!("oct: no such command '{t}'\n{USAGE}");
+                2
+            }
+        },
+    }
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    // `oct --help` and `oct <command> --help` both land here, exit 0.
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        let topic = args.iter().find(|a| *a != "--help" && *a != "-h");
+        std::process::exit(print_help(topic.map(String::as_str)));
+    }
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "topology" => print!("{}", Topology::oct_2009().describe()),
@@ -75,6 +158,7 @@ fn main() {
             println!("after §2.2 expansion plan:\n{}", p.topology().describe());
             println!("provisioning log: {} ops", p.log().len());
         }
+        "slices" => oct_slices_demo(),
         "kernel-check" => {
             match oct::runtime::MalstoneKernels::load(&oct::runtime::default_artifact_dir()) {
                 Ok(k) => {
@@ -91,12 +175,54 @@ fn main() {
             }
         }
         "version" => println!("oct {}", oct::version()),
-        "help" | "--help" | "-h" => println!("{USAGE}"),
+        "help" => std::process::exit(print_help(args.get(1).map(String::as_str))),
         _ => {
             eprintln!("oct: unknown command '{cmd}'\n{USAGE}");
             std::process::exit(2);
         }
     }
+}
+
+/// The `oct slices` walkthrough: tenant-slice admission against finite
+/// inventory — carve, deny, release, admit — with the replayable op log.
+fn oct_slices_demo() {
+    let topo = std::rc::Rc::new(Topology::oct_2009());
+    let mut sched = SliceScheduler::new(topo, DEFAULT_SPARE_WAVE_GBPS);
+    println!(
+        "inventory: {} free nodes, {} Gb/s spare wave spectrum",
+        sched.free_nodes(),
+        sched.spare_gbps()
+    );
+    let alice = sched.try_carve("alice", 5, Some(10.0), None).expect("alice fits");
+    let bob = sched.try_carve("bob", 5, Some(10.0), None).expect("bob fits");
+    for s in [&alice, &bob] {
+        println!(
+            "carved '{}': {} nodes (5/site), {} Gb/s dedicated wave",
+            s.tenant,
+            s.nodes.len(),
+            s.lightpath_gbps.unwrap()
+        );
+    }
+    println!(
+        "inventory: {} free nodes, {} Gb/s spare spectrum",
+        sched.free_nodes(),
+        sched.spare_gbps()
+    );
+    match sched.try_carve("eve", 5, Some(10.0), None) {
+        Some(_) => println!("eve admitted (unexpected)"),
+        None => println!("eve's 10 Gb/s request QUEUES: spare spectrum exhausted"),
+    }
+    sched.release(&alice);
+    println!("alice released her slice");
+    match sched.try_carve("eve", 5, Some(10.0), None) {
+        Some(s) => println!("eve admitted after the release: {} nodes", s.nodes.len()),
+        None => println!("eve still queued (unexpected)"),
+    }
+    println!("admission log ({} replayable ops):", sched.log().len());
+    for op in sched.log() {
+        println!("  {op:?}");
+    }
+    println!("run the full multi-tenant experiment: oct scenarios tenancy 100");
 }
 
 /// List the registry: one line per set.
@@ -117,23 +243,24 @@ fn list_scenario_sets() {
 /// pass, 1 = a shape check failed, 2 = unknown set).
 fn run_set_cli(name: &str, scale: u64, json: bool) -> i32 {
     let Some(set) = find_set(name) else {
-        eprintln!("oct: unknown scenario set '{name}'; try `oct scenarios`");
+        eprintln!(
+            "oct: unknown scenario set '{name}'; registered sets: {}",
+            set_names().join(", ")
+        );
         return 2;
     };
     let set = set.scaled_down(scale);
     if !json {
         println!("{}: {} (scale 1/{scale}; shape-preserving)", set.name, set.description);
     }
-    let runner = ScenarioRunner::new();
-    let mut reports = Vec::new();
-    for sc in &set.scenarios {
-        let r = runner.run(sc);
-        if json {
+    // `run_set` executes tenancy groups concurrently on one shared
+    // testbed and returns reports in scenario order.
+    let reports = ScenarioRunner::new().run_set(&set);
+    if json {
+        for r in &reports {
             println!("{}", r.to_json());
         }
-        reports.push(r);
-    }
-    if !json {
+    } else {
         print!("{}", format_reports(&reports));
     }
     let checks = set.run_checks(&reports);
@@ -166,7 +293,10 @@ fn run_set_cli(name: &str, scale: u64, json: bool) -> i32 {
 fn run_alerts_cli(name: &str, scale: u64) -> i32 {
     use oct::util::json::{obj, Json};
     let Some(set) = find_set(name) else {
-        eprintln!("oct: unknown scenario set '{name}'; try `oct scenarios`");
+        eprintln!(
+            "oct: unknown scenario set '{name}'; registered sets: {}",
+            set_names().join(", ")
+        );
         return 2;
     };
     let set = set.scaled_down(scale);

@@ -28,7 +28,7 @@ impl Workload {
         Workload::new("table1-10B", 10_000_000_000, 20)
     }
 
-    /// Table 2: "15 billion [records] on 28 nodes".
+    /// Table 2: "15 billion \[records\] on 28 nodes".
     pub fn table2() -> Self {
         Workload::new("table2-15B", 15_000_000_000, 28)
     }

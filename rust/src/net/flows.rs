@@ -534,11 +534,24 @@ impl FlowNet {
     /// Change a link's capacity at runtime (network provisioning §2.1) and
     /// reallocate.
     pub fn set_capacity(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine, l: LinkId, capacity: f64) {
-        assert!(capacity > 0.0);
+        Self::set_capacities(net, eng, &[(l, capacity)]);
+    }
+
+    /// Retune several links in one shot — a lightpath grant or teardown
+    /// moves a whole directed wave pair (and a flap restore moves every
+    /// wave link) — paying a single `advance` + water-filling pass +
+    /// completion-timer re-arm for the batch instead of one per link.
+    pub fn set_capacities(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine, changes: &[(LinkId, f64)]) {
+        if changes.is_empty() {
+            return;
+        }
         {
             let mut n = net.borrow_mut();
             n.advance(eng.now());
-            n.capacity[l.0] = capacity;
+            for &(l, capacity) in changes {
+                assert!(capacity > 0.0);
+                n.capacity[l.0] = capacity;
+            }
             n.reallocate();
         }
         Self::reschedule(net, eng);
@@ -832,6 +845,33 @@ mod tests {
         });
         eng.run();
         assert!((*done_at.borrow() - 6.0).abs() < 1e-6, "{}", done_at.borrow());
+    }
+
+    #[test]
+    fn batched_capacity_change_reallocates_once() {
+        let t = two_site_topo();
+        let net = FlowNet::new(&t);
+        let mut eng = Engine::new();
+        let done_at = Rc::new(RefCell::new(0.0));
+        let d = done_at.clone();
+        let n0 = t.racks[0].nodes[0];
+        let n1 = t.racks[0].nodes[1];
+        let tx = t.node(n0).nic_tx;
+        let rx = t.node(n1).nic_rx;
+        FlowNet::start(&net, &mut eng, t.path(n0, n1), 1000.0, f64::INFINITY, move |e| {
+            *d.borrow_mut() = e.now();
+        });
+        // Same retune as `capacity_change_reallocates`, as one batch: at
+        // t=5 (500 B left) both NICs jump to 500 B/s → 1 more second.
+        let net2 = net.clone();
+        eng.schedule_at(5.0, move |e| {
+            FlowNet::set_capacities(&net2, e, &[(tx, 500.0), (rx, 500.0)]);
+        });
+        eng.run();
+        assert!((*done_at.borrow() - 6.0).abs() < 1e-6, "{}", done_at.borrow());
+        // An empty batch is a no-op (no timer churn, no borrow).
+        FlowNet::set_capacities(&net, &mut eng, &[]);
+        assert_eq!(net.borrow().active(), 0);
     }
 
     #[test]

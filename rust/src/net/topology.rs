@@ -133,17 +133,39 @@ impl Topology {
         bps: f64,
         rtts: &[(SiteId, SiteId, f64)],
     ) {
-        let east = self.add_link(LinkKind::Wan, bps, "wan.wave.east".to_string());
-        let west = self.add_link(LinkKind::Wan, bps, "wan.wave.west".to_string());
+        let (east, west) = self.add_wave(bps, "wave");
+        self.route_over_wave(sites, east, west);
+        for &(a, b, rtt) in rtts {
+            self.site_owd.insert((a, b), rtt / 2.0);
+            self.site_owd.insert((b, a), rtt / 2.0);
+        }
+    }
+
+    /// Add a duplex wave — a directed `east`/`west` link pair of `bps`
+    /// per direction — without routing any site pair over it. Dynamic
+    /// lightpath provisioning creates capacity this way: the lambda
+    /// exists in the fiber plant from construction (the fluid network's
+    /// link set is fixed), and a later [`Topology::route_over_wave`] on a
+    /// tenant's topology *view* directs that tenant's inter-site traffic
+    /// onto it. Returns `(east, west)`.
+    pub fn add_wave(&mut self, bps: f64, label: &str) -> (LinkId, LinkId) {
+        let east = self.add_link(LinkKind::Wan, bps, format!("wan.{label}.east"));
+        let west = self.add_link(LinkKind::Wan, bps, format!("wan.{label}.west"));
+        (east, west)
+    }
+
+    /// Route every ordered pair among `sites` over the directed wave pair
+    /// `(east, west)`: lower→higher site index rides east, the reverse
+    /// rides west. Replaces any previous routing for those pairs; RTTs
+    /// are a fiber-route property and are left untouched. Combined with
+    /// [`Topology::add_wave`] this lets each tenant slice of one shared
+    /// testbed see the same nodes and racks but its own wide-area wave.
+    pub fn route_over_wave(&mut self, sites: &[SiteId], east: LinkId, west: LinkId) {
         for (i, &a) in sites.iter().enumerate() {
             for &b in &sites[i + 1..] {
                 self.wan.insert((a, b), east);
                 self.wan.insert((b, a), west);
             }
-        }
-        for &(a, b, rtt) in rtts {
-            self.site_owd.insert((a, b), rtt / 2.0);
-            self.site_owd.insert((b, a), rtt / 2.0);
         }
     }
 
@@ -413,6 +435,33 @@ mod tests {
         let a = t.racks[0].nodes[0];
         let m = t.racks[4].nodes[0];
         assert_eq!(t.path(a, m).len(), 5);
+    }
+
+    #[test]
+    fn tenant_view_routes_over_its_own_wave() {
+        let mut master = Topology::oct_2009();
+        let shared = master.wan_link(SiteId(0), SiteId(3)).unwrap();
+        let (east, west) = master.add_wave(1.25e9, "tenant-a");
+        assert_eq!(master.link(east).kind, LinkKind::Wan);
+        assert!(master.link(west).label.contains("tenant-a"));
+        // Adding the wave routes nothing: the master still uses the
+        // shared CiscoWave for every pair.
+        assert_eq!(master.wan_link(SiteId(0), SiteId(3)), Some(shared));
+        // A tenant view of the same physical testbed re-routes onto the
+        // dedicated wave; the master is untouched.
+        let mut view = master.clone();
+        let sites: Vec<SiteId> = (0..view.sites.len()).map(SiteId).collect();
+        view.route_over_wave(&sites, east, west);
+        assert_eq!(view.wan_link(SiteId(0), SiteId(3)), Some(east));
+        assert_eq!(view.wan_link(SiteId(3), SiteId(0)), Some(west));
+        assert_eq!(master.wan_link(SiteId(0), SiteId(3)), Some(shared));
+        // Paths computed through the view cross the tenant wave; RTTs
+        // are unchanged (same fiber route).
+        let a = view.racks[0].nodes[0];
+        let b = view.racks[3].nodes[0];
+        let p = view.path(a, b);
+        assert!(p.contains(&east), "{p:?}");
+        assert_eq!(view.rtt(a, b), master.rtt(a, b));
     }
 
     #[test]

@@ -26,4 +26,4 @@ pub mod fault;
 pub mod plane;
 
 pub use fault::{Fault, FaultEvent, FaultPlan};
-pub use plane::{Alert, AlertKind, Health, OpsConfig, OpsPlane, OpsReport};
+pub use plane::{Alert, AlertKind, Health, OpsConfig, OpsPlane, OpsReport, RECOVERY_IMAGE};

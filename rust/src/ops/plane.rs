@@ -18,7 +18,8 @@
 //!   `Healthy → Suspect → Dead` on missed heartbeats, runs hotspot /
 //!   straggler / WAN-degradation detectors over the relayed samples,
 //!   appends to an alert log, and closes the loop: a `Dead` verdict emits
-//!   a [`Op::DrainNode`] and invokes the dataflow's heal hook
+//!   an [`Op::DrainNode`] plus an [`Op::ImageNode`] re-imaging intent
+//!   (see [`RECOVERY_IMAGE`]) and invokes the dataflow's heal hook
 //!   (re-executing lost tasks); a degraded wave emits
 //!   [`Op::SetWanCapacity`] and invokes the lightpath-restore hook.
 //!
@@ -51,6 +52,12 @@ const SITE_SUMMARY_BYTES: f64 = 48.0;
 const PER_NODE_ENTRY_BYTES: f64 = 24.0;
 /// Retained per-node rate reports at the central service.
 const RATE_SERIES_CAP: usize = 64;
+
+/// Image a dead node is queued to be rebuilt with: the remediation path
+/// emits an [`Op::ImageNode`] with this name right after the drain, so a
+/// replay of the ops log brings the box back as a freshly-imaged spare
+/// instead of whatever half-state it died in.
+pub const RECOVERY_IMAGE: &str = "oct-recovery-baseline";
 
 /// Operations-plane tunables. The defaults give second-scale detection:
 /// `Suspect` after 3 missed heartbeats, `Dead` after 5.
@@ -682,7 +689,14 @@ impl OpsPlane {
                             name,
                             format!("no heartbeat for {silent:.1}s; draining"),
                         );
+                        // Drain now, and queue a bare-metal re-image so
+                        // the box re-enters the pool clean — the
+                        // provisioning half of the remediation intent.
                         p.ops_log.push(Op::DrainNode { node: n.0 });
+                        p.ops_log.push(Op::ImageNode {
+                            node: n.0,
+                            image: RECOVERY_IMAGE.to_string(),
+                        });
                         newly_dead.push(n);
                     }
                     _ => {}
@@ -870,6 +884,18 @@ mod tests {
         assert_eq!(r.reexecuted_tasks, 3);
         assert_eq!(*healed.borrow(), vec![victim]);
         assert!(p.ops_log().contains(&Op::DrainNode { node: victim.0 }));
+        // The drain is followed by a queued re-image of the dead box.
+        assert!(p
+            .ops_log()
+            .contains(&Op::ImageNode { node: victim.0, image: RECOVERY_IMAGE.to_string() }));
+        // The remediation intents replay onto a provisioner: the box ends
+        // drained and stamped with the recovery image.
+        let mut prov = crate::coordinator::Provisioner::oct_2009();
+        for op in p.ops_log().to_vec() {
+            prov.apply(&op);
+        }
+        assert!(prov.drained().contains(&victim));
+        assert_eq!(prov.node_image(victim.0), Some(RECOVERY_IMAGE));
         let kinds: Vec<AlertKind> = r.alerts.iter().map(|a| a.kind).collect();
         assert!(kinds.contains(&AlertKind::NodeSuspect));
         assert!(kinds.contains(&AlertKind::NodeDead));

@@ -9,9 +9,11 @@
 //! outnumber live events the heap is compacted, so heap size stays O(live
 //! events), not O(total cancellations).
 
+use std::cell::{Cell, RefCell};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::collections::HashMap;
+use std::rc::Rc;
 
 /// Simulated time in seconds.
 pub type SimTime = f64;
@@ -180,6 +182,50 @@ impl Engine {
     }
 }
 
+/// A countdown latch for multi-party barriers on the engine: the last of
+/// `parties` calls to [`Countdown::arrive`] runs the action, once.
+///
+/// This is the provisioning hook the coordinator hangs workload start on —
+/// "all placed nodes imaged" and "lightpath granted" each arrive
+/// independently, and the workload launches the instant both are in — but
+/// it is generic: any fan-in of independently-completing simulated work
+/// can gate a continuation on one.
+pub struct Countdown {
+    remaining: Cell<usize>,
+    action: RefCell<Option<EventFn>>,
+}
+
+impl Countdown {
+    /// A latch that runs `action` after `parties` arrivals.
+    pub fn new<F: FnOnce(&mut Engine) + 'static>(parties: usize, action: F) -> Rc<Countdown> {
+        assert!(parties > 0, "countdown needs at least one party");
+        Rc::new(Countdown {
+            remaining: Cell::new(parties),
+            action: RefCell::new(Some(Box::new(action))),
+        })
+    }
+
+    /// One party is done. The final arrival runs the action immediately
+    /// (inside the current event). Arriving more times than the latch has
+    /// parties is a bug and panics.
+    pub fn arrive(self: &Rc<Self>, eng: &mut Engine) {
+        let r = self.remaining.get();
+        assert!(r > 0, "countdown over-arrived");
+        self.remaining.set(r - 1);
+        if r == 1 {
+            let action = self.action.borrow_mut().take();
+            if let Some(f) = action {
+                f(eng);
+            }
+        }
+    }
+
+    /// Parties still outstanding.
+    pub fn pending(&self) -> usize {
+        self.remaining.get()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,6 +355,39 @@ mod tests {
         e.schedule_at(5.0, |_| {});
         e.run();
         e.schedule_at(1.0, |_| {});
+    }
+
+    #[test]
+    fn countdown_fires_once_after_all_arrivals() {
+        let mut e = Engine::new();
+        let hits = Rc::new(RefCell::new(0));
+        let h = hits.clone();
+        let latch = Countdown::new(3, move |_| *h.borrow_mut() += 1);
+        assert_eq!(latch.pending(), 3);
+        latch.arrive(&mut e);
+        latch.arrive(&mut e);
+        assert_eq!(*hits.borrow(), 0, "fired early");
+        latch.arrive(&mut e);
+        assert_eq!(*hits.borrow(), 1);
+        assert_eq!(latch.pending(), 0);
+        // The action can schedule follow-up work on the engine.
+        let h2 = hits.clone();
+        let latch2 = Countdown::new(1, move |eng| {
+            let h3 = h2.clone();
+            eng.schedule_in(1.0, move |_| *h3.borrow_mut() += 10);
+        });
+        latch2.arrive(&mut e);
+        e.run();
+        assert_eq!(*hits.borrow(), 11);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-arrived")]
+    fn countdown_over_arrival_panics() {
+        let mut e = Engine::new();
+        let latch = Countdown::new(1, |_| {});
+        latch.arrive(&mut e);
+        latch.arrive(&mut e);
     }
 
     #[test]
