@@ -24,6 +24,7 @@ use std::time::Instant;
 
 use oct::net::{FlowNet, LinkId, NodeId, Topology};
 use oct::sim::Engine;
+use oct::util::json::{obj, Json};
 use oct::util::Rng;
 
 struct Job {
@@ -166,6 +167,33 @@ fn env_or(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
+/// Write the machine-readable baseline to `BENCH_flow_churn.json` at the
+/// repo root (next to the other BENCH artifacts), so perf work has a
+/// comparison point: simulated makespan, churn throughput, and the
+/// speedup over the embedded pre-rework core (null when the baseline leg
+/// is skipped).
+fn write_bench_json(total: usize, conc: usize, s: &Stats, speedup: Option<f64>) {
+    let doc = obj(vec![
+        ("bench", Json::Str("flow_churn".into())),
+        ("transfers", Json::Num(total as f64)),
+        ("concurrency", Json::Num(conc as f64)),
+        ("makespan_sim_secs", Json::Num(s.sim)),
+        ("wall_secs", Json::Num(s.wall)),
+        ("flows_per_sec", Json::Num(total as f64 / s.wall.max(1e-9))),
+        ("events", Json::Num(s.events as f64)),
+        ("speedup_vs_old_core", speedup.map_or(Json::Null, Json::Num)),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_flow_churn.json");
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
+}
+
 fn report(tag: &str, s: &Stats, total: usize) {
     println!(
         "{tag:<28} {:>8.2}s wall  {:>9.0} flows/s  {:>8} events  {:.1}s simulated",
@@ -196,6 +224,7 @@ fn main() {
     assert_eq!(s.completions as usize, total, "lost transfers");
 
     if skip_baseline {
+        write_bench_json(total, conc, &s, None);
         println!("baseline comparison skipped (OCT_CHURN_SKIP_BASELINE)");
         return;
     }
@@ -214,6 +243,7 @@ fn main() {
         s_old.sim,
     );
     let speedup = s_old.wall / s_new.wall.max(1e-9);
+    write_bench_json(total, conc, &s, Some(speedup));
     println!("speedup: {speedup:.1}× (same simulated makespan: {:.3}s)", s_new.sim);
     assert!(speedup >= 3.0, "rework regressed: only {speedup:.2}× over the HashMap core");
     println!("flow churn OK");

@@ -1,0 +1,88 @@
+//! `simlint` — the determinism lint pass for the simulation core.
+//!
+//! Scans every `.rs` file under the crate's `src/` (or an explicit root
+//! passed on the command line) for the SIM00x rules documented in
+//! [`oct::lint`]. Exit codes: 0 clean, 1 findings, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use oct::lint::{report_json, scan_tree, RULES};
+
+fn usage() {
+    println!("usage: simlint [--json] [ROOT]");
+    println!();
+    println!("Determinism lint for the oct simulation core. Scans ROOT (default:");
+    println!("the crate's src/ directory) for the rules below; waive a finding");
+    println!("with `// simlint: allow(SIMxxx) — <reason>` on the same line or a");
+    println!("comment-only line above. Unjustified waivers are SIM000 findings.");
+    println!();
+    for (id, desc) in RULES {
+        println!("  {id}  {desc}");
+    }
+}
+
+/// The scan root: an explicit CLI argument, else the crate sources. The
+/// compile-time manifest dir is correct for `cargo run`; the bare `src`
+/// fallbacks cover a relocated binary run from the repo or crate root.
+fn resolve_root(cli: Option<PathBuf>) -> Option<PathBuf> {
+    if let Some(p) = cli {
+        return p.is_dir().then_some(p);
+    }
+    let candidates =
+        [PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"), "rust/src".into(), "src".into()];
+    candidates.into_iter().find(|p| p.is_dir())
+}
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root_arg: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                usage();
+                return ExitCode::SUCCESS;
+            }
+            a if a.starts_with('-') => {
+                eprintln!("simlint: unknown flag `{a}`");
+                usage();
+                return ExitCode::from(2);
+            }
+            a if root_arg.is_none() => root_arg = Some(PathBuf::from(a)),
+            a => {
+                eprintln!("simlint: unexpected extra argument `{a}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let Some(root) = resolve_root(root_arg) else {
+        eprintln!("simlint: no source root found (pass one explicitly: simlint <dir>)");
+        return ExitCode::from(2);
+    };
+
+    let findings = match scan_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("simlint: scan of {} failed: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        println!("{}", report_json(&findings));
+    } else if findings.is_empty() {
+        println!("simlint: clean ({})", root.display());
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        println!("simlint: {} finding(s) in {}", findings.len(), root.display());
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

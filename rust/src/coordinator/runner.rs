@@ -9,7 +9,7 @@
 //! metrics, and the paper reference carried by the scenario.
 
 use std::cell::RefCell;
-use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::rc::Rc;
 
 use crate::framework::{DataflowControl, HdfsStorage, KfsStorage, SectorStorage, StorageModel};
@@ -397,7 +397,7 @@ impl ScenarioRunner {
         });
         // Ground truth of crashed nodes (fault-plan side, independent of
         // detection): chained jobs exclude them from their worker sets.
-        let failed: Rc<RefCell<HashSet<NodeId>>> = Rc::new(RefCell::new(HashSet::new()));
+        let failed: Rc<RefCell<BTreeSet<NodeId>>> = Rc::new(RefCell::new(BTreeSet::new()));
         schedule_faults(sc, cluster, &nodes, eng, &ops, &control, &failed);
         let outcome: Rc<RefCell<Option<Outcome>>> = Rc::new(RefCell::new(None));
         let times = Rc::new(RefCell::new(ProvisionTimes {
@@ -679,7 +679,7 @@ impl ScenarioRunner {
                 scenarios[0].topology.label()
             );
         }
-        let mut seen = HashSet::new();
+        let mut seen = BTreeSet::new();
         for sc in scenarios {
             let tenant = &sc.tenancy.as_ref().unwrap().tenant;
             assert!(seen.insert(tenant.clone()), "duplicate tenant '{tenant}' in one group");
@@ -834,7 +834,7 @@ fn start_framework(
     eng: &mut Engine,
     outcome: &Rc<RefCell<Option<Outcome>>>,
     control: &Rc<RefCell<Option<DataflowControl>>>,
-    failed: &Rc<RefCell<HashSet<NodeId>>>,
+    failed: &Rc<RefCell<BTreeSet<NodeId>>>,
 ) {
     match sc.framework {
         Framework::SectorSphere => {
@@ -1033,7 +1033,7 @@ fn schedule_faults(
     eng: &mut Engine,
     ops: &Option<Rc<RefCell<OpsPlane>>>,
     control: &Rc<RefCell<Option<DataflowControl>>>,
-    failed: &Rc<RefCell<HashSet<NodeId>>>,
+    failed: &Rc<RefCell<BTreeSet<NodeId>>>,
 ) {
     for ev in &sc.fault_plan.events {
         match ev.fault {
@@ -1093,7 +1093,7 @@ fn start_mapreduce(
     eng: &mut Engine,
     out: Rc<RefCell<Option<Outcome>>>,
     control: Rc<RefCell<Option<DataflowControl>>>,
-    failed: Rc<RefCell<HashSet<NodeId>>>,
+    failed: Rc<RefCell<BTreeSet<NodeId>>>,
 ) {
     let shards = uniform_shards(nodes, w.total_records);
     let (job1, job2_of) =

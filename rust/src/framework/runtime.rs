@@ -17,7 +17,7 @@
 //! storage × schedule × exchange combinations of the same machinery.
 
 use std::cell::RefCell;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::rc::Rc;
 
 use crate::net::{Cluster, NodeId};
@@ -108,8 +108,8 @@ struct RtState {
     sched: SlotScheduler,
     /// Per-node intermediate bytes/records: producer totals under shuffle
     /// pull, destination bucket totals under bucket push.
-    inter_bytes: HashMap<NodeId, f64>,
-    inter_records: HashMap<NodeId, f64>,
+    inter_bytes: BTreeMap<NodeId, f64>,
+    inter_records: BTreeMap<NodeId, f64>,
     tasks_done: usize,
     tasks_total: usize,
     phase1_end: f64,
@@ -123,16 +123,16 @@ struct RtState {
     output_bytes: f64,
     /// Nodes marked crashed ([`DataflowControl::crash_node`]): their
     /// phase-1 completions are ignored until healed.
-    crashed: HashSet<NodeId>,
+    crashed: BTreeSet<NodeId>,
     /// Monotone id per phase-1 assignment; a completion whose id is gone
     /// from `live` is stale (the assignment was re-queued elsewhere).
     next_assign: u64,
     /// In-flight phase-1 assignments: id → (worker, task).
-    live: HashMap<u64, (NodeId, TaskInput)>,
+    live: BTreeMap<u64, (NodeId, TaskInput)>,
     /// Completed phase-1 tasks by worker, remembered so a later failure
     /// of that worker can re-execute them (shuffle pull: the spill lived
     /// on its disk).
-    completed_p1: HashMap<NodeId, Vec<TaskInput>>,
+    completed_p1: BTreeMap<NodeId, Vec<TaskInput>>,
     reexecuted: usize,
     done_cb: Option<Box<dyn FnOnce(&mut Engine, DataflowReport)>>,
 }
@@ -248,8 +248,8 @@ impl DataflowEngine {
             cluster: cluster.clone(),
             storage,
             sched,
-            inter_bytes: HashMap::new(),
-            inter_records: HashMap::new(),
+            inter_bytes: BTreeMap::new(),
+            inter_records: BTreeMap::new(),
             tasks_done: 0,
             tasks_total,
             phase1_end: 0.0,
@@ -261,10 +261,10 @@ impl DataflowEngine {
             storage_read_bytes: 0.0,
             storage_write_bytes: 0.0,
             output_bytes: 0.0,
-            crashed: HashSet::new(),
+            crashed: BTreeSet::new(),
             next_assign: 0,
-            live: HashMap::new(),
-            completed_p1: HashMap::new(),
+            live: BTreeMap::new(),
+            completed_p1: BTreeMap::new(),
             reexecuted: 0,
             done_cb: Some(Box::new(done)),
             spec,
@@ -519,11 +519,7 @@ impl DataflowEngine {
                 (0..r).map(|i| s.spec.nodes[i % s.spec.nodes.len()]).collect();
             // Each reducer fetches bytes/r from every producer node.
             let mut lists: Vec<Vec<(NodeId, f64)>> = vec![Vec::new(); r];
-            for (&m, &bytes) in {
-                let mut v: Vec<_> = s.inter_bytes.iter().collect();
-                v.sort_by_key(|(n, _)| n.0);
-                v
-            } {
+            for (&m, &bytes) in &s.inter_bytes {
                 for list in lists.iter_mut() {
                     list.push((m, bytes / r as f64));
                 }

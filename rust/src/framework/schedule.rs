@@ -3,7 +3,7 @@
 //! scheduler, Sphere's SPE segment scheduler with "bandwidth load
 //! balancing").
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::net::{NodeId, Topology};
 
@@ -47,7 +47,7 @@ impl StealPolicy {
 /// node-local hit), counting any non-local assignment as a steal.
 pub struct SlotScheduler {
     nodes: Vec<NodeId>,
-    slots_free: HashMap<NodeId, usize>,
+    slots_free: BTreeMap<NodeId, usize>,
     pending: Vec<TaskInput>,
     running: usize,
     stolen: usize,

@@ -215,13 +215,13 @@ impl GmpEndpoint {
             }
             self.faulty_send(&buf, to);
             // Wait for the ack under the condvar.
-            let deadline = Instant::now() + self.cfg.rto;
+            let deadline = Instant::now() + self.cfg.rto; // simlint: allow(SIM002) — real UDP retransmit deadline, outside simulated time
             let mut acks = self.shared.acks.lock().unwrap();
             loop {
                 if acks.remove(&key) {
                     return Ok(());
                 }
-                let now = Instant::now();
+                let now = Instant::now(); // simlint: allow(SIM002) — real UDP retransmit deadline, outside simulated time
                 if now >= deadline {
                     break;
                 }
@@ -276,14 +276,14 @@ impl GmpEndpoint {
             // Collect acks until timeout. Frag acks use seq = msg_seq and
             // we track them per fragment via the composite ack key
             // (to, msg_seq ^ (idx.rotate_left(16))) — see rx_loop.
-            let deadline = Instant::now() + self.cfg.rto;
+            let deadline = Instant::now() + self.cfg.rto; // simlint: allow(SIM002) — real UDP retransmit deadline, outside simulated time
             loop {
                 let mut acks = self.shared.acks.lock().unwrap();
                 unacked.retain(|&idx| !acks.remove(&(to, frag_ack_key(msg_seq, idx))));
                 if unacked.is_empty() {
                     return Ok(());
                 }
-                let now = Instant::now();
+                let now = Instant::now(); // simlint: allow(SIM002) — real UDP retransmit deadline, outside simulated time
                 if now >= deadline {
                     break;
                 }

@@ -149,7 +149,7 @@ impl RpcClient {
         let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let frame = encode_frame(TAG_REQ, req_id, method, body);
         self.ep.send(to, &frame)?;
-        let deadline = Instant::now() + timeout;
+        let deadline = Instant::now() + timeout; // simlint: allow(SIM002) — real RPC deadline on a live socket, outside simulated time
         let mut resp = self.shared.responses.lock().unwrap();
         loop {
             if let Some((tag, body)) = resp.remove(&req_id) {
@@ -161,7 +161,7 @@ impl RpcClient {
                 }
                 return Ok(body);
             }
-            let now = Instant::now();
+            let now = Instant::now(); // simlint: allow(SIM002) — real RPC deadline on a live socket, outside simulated time
             if now >= deadline {
                 return Err(std::io::Error::new(
                     std::io::ErrorKind::TimedOut,

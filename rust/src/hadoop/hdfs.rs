@@ -8,7 +8,7 @@
 //! dominant term in Table 2's 3-replica wide-area penalty.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::net::{FlowNet, NodeId, Topology};
@@ -50,12 +50,12 @@ pub struct FileMeta {
 pub struct Namenode {
     pub cfg: HdfsConfig,
     topo: Rc<Topology>,
-    files: HashMap<String, FileMeta>,
-    blocks: HashMap<BlockId, BlockMeta>,
+    files: BTreeMap<String, FileMeta>,
+    blocks: BTreeMap<BlockId, BlockMeta>,
     next_block: u64,
     rng: Rng,
     /// Bytes stored per node (balancer pressure + test invariants).
-    usage: HashMap<NodeId, u64>,
+    usage: BTreeMap<NodeId, u64>,
     /// Datanode membership: placement only considers these nodes (an HDFS
     /// deployment spans the *cluster it is installed on*, not the whole
     /// testbed — Table 2's "local" setup is a single-site HDFS).
@@ -68,11 +68,11 @@ impl Namenode {
         Namenode {
             cfg,
             topo,
-            files: HashMap::new(),
-            blocks: HashMap::new(),
+            files: BTreeMap::new(),
+            blocks: BTreeMap::new(),
             next_block: 0,
             rng: Rng::new(seed),
-            usage: HashMap::new(),
+            usage: BTreeMap::new(),
             members,
         }
     }

@@ -41,6 +41,7 @@ pub mod coordinator;
 pub mod framework;
 pub mod gmp;
 pub mod hadoop;
+pub mod lint;
 pub mod malstone;
 pub mod monitor;
 pub mod net;

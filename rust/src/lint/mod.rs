@@ -1,0 +1,188 @@
+//! # simlint — determinism hygiene for the simulation core
+//!
+//! A dependency-free static-analysis pass over `rust/src/**` that enforces
+//! the properties every number in this repo rests on: runs replay
+//! bit-identically from a seed, and nothing outside the seeded
+//! [`crate::util::rng::Rng`] or the virtual clock can perturb them. The
+//! offline build has no crates.io access, so the scanner is hand-rolled:
+//! [`strip`] splits each line into code and comment channels, and
+//! [`rules`] matches token patterns against the code channel.
+//!
+//! ## Rules
+//!
+//! | Rule   | Scope                     | What it rejects |
+//! |--------|---------------------------|-----------------|
+//! | SIM001 | order-sensitive modules¹  | iteration over hash-ordered containers (`.iter()`, `.keys()`, `.values()`, `.drain()`, `for … in &map`, …) |
+//! | SIM002 | all of `src/`             | wall-clock reads (`Instant::now`, `SystemTime`) |
+//! | SIM003 | all of `src/`             | ambient randomness (`thread_rng`, `from_entropy`, `RandomState`, …) — draws go through the seeded `util::rng::Rng` |
+//! | SIM004 | all but `main.rs`/`bin/`  | `println!`/`eprintln!`/`print!`/`eprint!` outside binary entry points |
+//! | SIM005 | flow/water-filling paths² | exact `f64` `==`/`!=` against float literals |
+//! | SIM000 | everywhere                | a waiver comment with no justification (not waivable) |
+//!
+//! ¹ `sim/`, `net/`, `framework/`, `ops/`, `coordinator/`, `sector/`,
+//!   `hadoop/`, `transport/` — modules whose iteration order feeds event
+//!   scheduling, report assembly, or f64 summation.
+//! ² `net/flows.rs`, `net/mod.rs`, `transport/`.
+//!
+//! ## Waivers
+//!
+//! A finding is suppressed by a justified waiver on the same line, or on a
+//! comment-only line immediately above:
+//!
+//! ```text
+//! let now = Instant::now(); // simlint: allow(SIM002) — real socket deadline, outside simulated time
+//! ```
+//!
+//! The justification text after the rule id is mandatory: `allow(SIMxxx)`
+//! with nothing after it still suppresses the original finding but reports
+//! `SIM000`, so the tree cannot pass with unexplained escapes.
+//!
+//! ## Usage
+//!
+//! ```text
+//! cargo run --release --bin simlint            # human-readable, exit 1 on findings
+//! cargo run --release --bin simlint -- --json  # machine-readable report
+//! cargo run --release --bin simlint -- <dir>   # scan a different root
+//! ```
+
+pub mod rules;
+pub mod strip;
+
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+/// One rule violation (or SIM000 waiver problem) at a source location.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id, e.g. `"SIM001"`.
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Rule ids with one-line summaries (the `--json` report embeds them, and
+/// the binary's `--help` prints them).
+pub const RULES: &[(&str, &str)] = &[
+    ("SIM000", "waiver without a justification"),
+    ("SIM001", "iteration over a hash-ordered container in an order-sensitive module"),
+    ("SIM002", "wall-clock read (Instant::now / SystemTime) in simulation source"),
+    ("SIM003", "ambient randomness; all draws go through the seeded util::rng::Rng"),
+    ("SIM004", "print to stdout/stderr outside a binary entry point"),
+    ("SIM005", "exact f64 ==/!= comparison in a flow/water-filling path"),
+];
+
+/// Scan every `.rs` file under `root`, visiting directories and files in
+/// sorted order so the report is stable across platforms. Findings come
+/// back sorted by `(file, line, rule)`.
+pub fn scan_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        findings.extend(rules::scan_source(&rel, &src));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The machine-readable report for `simlint --json`: deterministic (the
+/// crate's [`Json`] objects are BTreeMap-backed) and self-describing.
+pub fn report_json(findings: &[Finding]) -> Json {
+    obj(vec![
+        ("tool", Json::Str("simlint".into())),
+        ("clean", Json::Bool(findings.is_empty())),
+        (
+            "rules",
+            Json::Obj(
+                RULES
+                    .iter()
+                    .map(|(id, desc)| (id.to_string(), Json::Str(desc.to_string())))
+                    .collect(),
+            ),
+        ),
+        (
+            "findings",
+            Json::Arr(
+                findings
+                    .iter()
+                    .map(|f| {
+                        obj(vec![
+                            ("file", Json::Str(f.file.clone())),
+                            ("line", Json::Num(f.line as f64)),
+                            ("rule", Json::Str(f.rule.to_string())),
+                            ("message", Json::Str(f.message.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The meta-test: the crate's own sources must lint clean. Any rule
+    /// violation introduced anywhere in `src/` fails this test before it
+    /// ever reaches CI's dedicated simlint step.
+    #[test]
+    fn tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let findings = scan_tree(&root).expect("scan failed");
+        assert!(
+            findings.is_empty(),
+            "simlint findings in tree:\n{}",
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let fs = vec![Finding {
+            file: "net/x.rs".into(),
+            line: 3,
+            rule: "SIM001",
+            message: "iteration over hash-ordered `m.iter()`".into(),
+        }];
+        let j = report_json(&fs);
+        assert_eq!(j.get("clean"), Some(&Json::Bool(false)));
+        let parsed = Json::parse(&j.to_string()).expect("round-trip");
+        assert_eq!(parsed, j);
+        let empty = report_json(&[]);
+        assert_eq!(empty.get("clean"), Some(&Json::Bool(true)));
+    }
+}

@@ -1,0 +1,618 @@
+//! The rule engine: tokenize stripped code lines and match the SIM00x
+//! patterns. See the module docs in [`super`] for the rule table and
+//! waiver syntax.
+//!
+//! Matching is token-based, not parser-based, so it is conservative by
+//! construction: a field named like a hash container in another struct can
+//! produce a false positive (waive it), and a hash container returned from
+//! a function and iterated at the call site can slip through. Both edges
+//! are acceptable — the rules exist to keep *this* tree clean, and the
+//! meta-test pins the current tree at zero findings.
+
+use std::collections::BTreeSet;
+
+use super::strip::strip;
+use super::Finding;
+
+/// Modules whose iteration order feeds event scheduling, report assembly,
+/// or f64 summation — SIM001 scope.
+const ORDER_SENSITIVE: &[&str] =
+    &["sim/", "net/", "framework/", "ops/", "coordinator/", "sector/", "hadoop/", "transport/"];
+
+/// The flow/water-filling paths — SIM005 scope.
+const FLOW_PATHS: &[&str] = &["net/flows.rs", "net/mod.rs", "transport/"];
+
+/// Container methods whose visit order is the hasher's — SIM001 triggers.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+/// Ambient-randomness markers — SIM003 triggers.
+const RANDOM_SOURCES: &[&str] =
+    &["thread_rng", "from_entropy", "getrandom", "OsRng", "StdRng", "SmallRng", "RandomState"];
+
+/// Print macros — SIM004 triggers outside entry points.
+const PRINT_MACROS: &[&str] = &["println!", "eprintln!", "print!", "eprint!"];
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Num { float: bool },
+    Punct(String),
+}
+
+fn is_p(t: &Tok, p: &str) -> bool {
+    matches!(t, Tok::Punct(x) if x == p)
+}
+
+fn ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn lex(s: &str) -> Vec<Tok> {
+    const TWO: &[&str] = &[
+        "==", "!=", "::", "..", "<=", ">=", "->", "=>", "&&", "||", "+=", "-=", "*=", "/=", "<<",
+        ">>",
+    ];
+    let b: Vec<char> = s.chars().collect();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let st = i;
+            while i < n && ident_char(b[i]) {
+                i += 1;
+            }
+            out.push(Tok::Ident(b[st..i].iter().collect()));
+            continue;
+        }
+        if c.is_ascii_digit() {
+            out.push(lex_number(&b, &mut i));
+            continue;
+        }
+        if i + 1 < n {
+            let two: String = [c, b[i + 1]].iter().collect();
+            if TWO.contains(&two.as_str()) {
+                out.push(Tok::Punct(two));
+                i += 2;
+                continue;
+            }
+        }
+        out.push(Tok::Punct(c.to_string()));
+        i += 1;
+    }
+    out
+}
+
+/// Lex one numeric literal starting at `b[*i]` (an ASCII digit); advances
+/// `*i` past it. `float` is true for literals with a fractional part, an
+/// exponent, or an `f32`/`f64` suffix — never for `0..n` ranges or method
+/// calls on integer literals.
+fn lex_number(b: &[char], i: &mut usize) -> Tok {
+    let n = b.len();
+    let mut float = false;
+    if b[*i] == '0' && *i + 1 < n && matches!(b[*i + 1], 'x' | 'b' | 'o') {
+        *i += 2;
+        while *i < n && (b[*i].is_ascii_alphanumeric() || b[*i] == '_') {
+            *i += 1;
+        }
+        return Tok::Num { float: false };
+    }
+    while *i < n && (b[*i].is_ascii_digit() || b[*i] == '_') {
+        *i += 1;
+    }
+    if *i + 1 < n && b[*i] == '.' && b[*i + 1].is_ascii_digit() {
+        float = true;
+        *i += 1;
+        while *i < n && (b[*i].is_ascii_digit() || b[*i] == '_') {
+            *i += 1;
+        }
+    }
+    if *i < n && (b[*i] == 'e' || b[*i] == 'E') {
+        let mut j = *i + 1;
+        if j < n && (b[j] == '+' || b[j] == '-') {
+            j += 1;
+        }
+        if j < n && b[j].is_ascii_digit() {
+            float = true;
+            *i = j;
+            while *i < n && b[*i].is_ascii_digit() {
+                *i += 1;
+            }
+        }
+    }
+    let st = *i;
+    while *i < n && (b[*i].is_ascii_alphanumeric() || b[*i] == '_') {
+        *i += 1;
+    }
+    if b[st..*i].starts_with(&['f']) {
+        float = true;
+    }
+    Tok::Num { float }
+}
+
+/// True when `word` occurs in `code` with non-identifier boundaries.
+fn contains_word(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = !code[..at].chars().next_back().is_some_and(ident_char);
+        let after_ok = !code[at + word.len()..].chars().next().is_some_and(ident_char);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+/// True when print macro `mac` (including its `!`) occurs with a
+/// non-identifier character before it (`eprintln!` must not match the
+/// embedded `println!`).
+fn contains_macro(code: &str, mac: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(mac) {
+        let at = start + pos;
+        if !code[..at].chars().next_back().is_some_and(ident_char) {
+            return true;
+        }
+        start = at + mac.len();
+    }
+    false
+}
+
+/// Extract a waiver from a comment: `simlint: allow(SIMxxx) — reason`.
+/// Returns `(rule, reason)`; an empty reason is the SIM000 case.
+fn parse_waiver(comment: &str) -> Option<(String, String)> {
+    let i = comment.find("simlint:")?;
+    let rest = comment[i + "simlint:".len()..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let digits_ok = rule.len() == 6 && rule[3..].chars().all(|c| c.is_ascii_digit());
+    if !rule.starts_with("SIM") || !digits_ok {
+        return None;
+    }
+    let reason = rest[close + 1..]
+        .trim_start_matches(|c: char| c.is_whitespace() || matches!(c, '—' | '-' | '–' | ':'))
+        .trim()
+        .to_string();
+    Some((rule, reason))
+}
+
+/// Register identifiers declared with a hash-ordered container type on
+/// this line: `let [mut] name = HashMap::…`, `name: HashMap<…>` fields,
+/// parameters, and annotated bindings (possibly behind `&`, `Rc<RefCell<…>>`
+/// and similar wrappers — the nearest single colon to the left names the
+/// binding). `use` imports contribute nothing (`::` is a distinct token).
+fn collect_hash_names(toks: &[Tok], names: &mut BTreeSet<String>) {
+    for (h, tok) in toks.iter().enumerate() {
+        let Tok::Ident(t) = tok else { continue };
+        if t != "HashMap" && t != "HashSet" {
+            continue;
+        }
+        if matches!(toks.first(), Some(Tok::Ident(kw)) if kw == "let") {
+            let k = if matches!(toks.get(1), Some(Tok::Ident(m)) if m == "mut") { 2 } else { 1 };
+            if let Some(Tok::Ident(name)) = toks.get(k) {
+                names.insert(name.clone());
+                continue;
+            }
+        }
+        for k in (0..h).rev() {
+            if is_p(&toks[k], ":") {
+                if k >= 1 {
+                    if let Tok::Ident(name) = &toks[k - 1] {
+                        names.insert(name.clone());
+                    }
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// SIM001 violation messages in a logical line's tokens.
+fn sim001_matches(toks: &[Tok], hash_names: &BTreeSet<String>) -> Vec<String> {
+    let mut out = Vec::new();
+    // `name.iter()` and friends, including across joined chain lines.
+    for w in 1..toks.len() {
+        if !is_p(&toks[w], ".") || !toks.get(w + 2).is_some_and(|t| is_p(t, "(")) {
+            continue;
+        }
+        if let (Tok::Ident(recv), Some(Tok::Ident(meth))) = (&toks[w - 1], toks.get(w + 1)) {
+            if ITER_METHODS.contains(&meth.as_str()) && hash_names.contains(recv) {
+                out.push(format!("iteration over hash-ordered `{recv}.{meth}()`"));
+            }
+        }
+    }
+    // `for … in [&[mut]] path.to.name {`
+    let mut saw_for = false;
+    for (w, tok) in toks.iter().enumerate() {
+        match tok {
+            Tok::Ident(t) if t == "for" => saw_for = true,
+            Tok::Ident(t) if t == "in" && saw_for => {
+                saw_for = false;
+                if let Some(name) = for_loop_target(toks, w + 1) {
+                    if hash_names.contains(&name) {
+                        out.push(format!("for-loop over hash-ordered `{name}`"));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// After a `for … in`, parse `[&][mut] ident(.ident|.N)*` followed by `{`
+/// and return the final path segment (the iterated container's name).
+fn for_loop_target(toks: &[Tok], mut j: usize) -> Option<String> {
+    if toks.get(j).is_some_and(|t| is_p(t, "&")) {
+        j += 1;
+    }
+    if matches!(toks.get(j), Some(Tok::Ident(m)) if m == "mut") {
+        j += 1;
+    }
+    let Some(Tok::Ident(first)) = toks.get(j) else { return None };
+    let mut last = Some(first.clone());
+    j += 1;
+    while toks.get(j).is_some_and(|t| is_p(t, ".")) {
+        match toks.get(j + 1) {
+            Some(Tok::Ident(seg)) => last = Some(seg.clone()),
+            Some(Tok::Num { .. }) => last = None, // tuple field: not a name
+            _ => return None,
+        }
+        j += 2;
+    }
+    if toks.get(j).is_some_and(|t| is_p(t, "{")) {
+        last
+    } else {
+        None
+    }
+}
+
+/// SIM005 violation messages in a logical line's tokens: `==`/`!=` with a
+/// float literal on either side.
+fn sim005_matches(toks: &[Tok]) -> Vec<String> {
+    let mut out = Vec::new();
+    for (w, tok) in toks.iter().enumerate() {
+        let Tok::Punct(p) = tok else { continue };
+        if p != "==" && p != "!=" {
+            continue;
+        }
+        let lhs = w >= 1 && matches!(&toks[w - 1], Tok::Num { float: true });
+        let rhs = match toks.get(w + 1) {
+            Some(Tok::Num { float }) => *float,
+            Some(t) if is_p(t, "-") => {
+                matches!(toks.get(w + 2), Some(Tok::Num { float: true }))
+            }
+            _ => false,
+        };
+        if lhs || rhs {
+            out.push(format!("exact f64 `{p}` against a float literal in a flow path"));
+        }
+    }
+    out
+}
+
+fn push_unique(out: &mut Vec<Finding>, f: Finding) {
+    if !out.contains(&f) {
+        out.push(f);
+    }
+}
+
+/// Scan one file's source. `rel` is the path relative to the scanned root
+/// with `/` separators; it selects which rule scopes apply.
+pub fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
+    let stripped = strip(src);
+    let order_sensitive = ORDER_SENSITIVE.iter().any(|p| rel.starts_with(*p));
+    let flow_path = FLOW_PATHS.iter().any(|p| rel == *p || rel.starts_with(*p));
+    let entry = rel == "main.rs" || rel.starts_with("bin/");
+
+    let line_toks: Vec<Vec<Tok>> = stripped.code.iter().map(|l| lex(l)).collect();
+    let mut hash_names: BTreeSet<String> = BTreeSet::new();
+    for toks in &line_toks {
+        collect_hash_names(toks, &mut hash_names);
+    }
+
+    let waivers: Vec<Option<(String, String)>> =
+        stripped.comments.iter().map(|c| parse_waiver(c)).collect();
+
+    // A finding spanning lines [start..=end] (0-based) is waived by a
+    // matching waiver on any of its lines, or on a comment-only line
+    // immediately above.
+    let waived = |rule: &str, start: usize, end: usize| -> bool {
+        let lo = start.saturating_sub(1);
+        (lo..=end).any(|i| match waivers.get(i) {
+            Some(Some((r, _))) => r == rule && (i >= start || stripped.code[i].trim().is_empty()),
+            _ => false,
+        })
+    };
+
+    let mut out: Vec<Finding> = Vec::new();
+    let finding = |line: usize, rule: &'static str, message: String| Finding {
+        file: rel.to_string(),
+        line: line + 1,
+        rule,
+        message,
+    };
+
+    // SIM000: every waiver missing its justification, used or not. Not
+    // itself waivable — the tree cannot pass with unexplained escapes.
+    for (idx, w) in waivers.iter().enumerate() {
+        if let Some((rule, reason)) = w {
+            if reason.is_empty() {
+                let msg = format!("waiver for {rule} has no justification");
+                push_unique(&mut out, finding(idx, "SIM000", msg));
+            }
+        }
+    }
+
+    // Per-physical-line rules: SIM002 / SIM003 / SIM004.
+    for (idx, code) in stripped.code.iter().enumerate() {
+        let wall_clock = code.contains("Instant::now") || contains_word(code, "SystemTime");
+        if wall_clock && !waived("SIM002", idx, idx) {
+            let msg = "wall-clock read in simulation source".to_string();
+            push_unique(&mut out, finding(idx, "SIM002", msg));
+        }
+        if let Some(tok) = RANDOM_SOURCES.iter().find(|t| contains_word(code, t)) {
+            if !waived("SIM003", idx, idx) {
+                let msg = format!("ambient randomness `{tok}` (use seeded util::rng::Rng)");
+                push_unique(&mut out, finding(idx, "SIM003", msg));
+            }
+        }
+        if !entry {
+            if let Some(mac) = PRINT_MACROS.iter().find(|m| contains_macro(code, m)) {
+                if !waived("SIM004", idx, idx) {
+                    let msg = format!("`{mac}` outside a binary entry point");
+                    push_unique(&mut out, finding(idx, "SIM004", msg));
+                }
+            }
+        }
+    }
+
+    // Logical-line rules: SIM001 / SIM005. Method chains continued onto
+    // following lines (leading `.`) are joined, so `map\n.iter()` cannot
+    // hide from the receiver match.
+    let mut i = 0usize;
+    while i < stripped.code.len() {
+        let mut end = i;
+        while end + 1 < stripped.code.len() && stripped.code[end + 1].trim_start().starts_with('.')
+        {
+            end += 1;
+        }
+        let sim001_applies = order_sensitive && !hash_names.is_empty();
+        if sim001_applies || flow_path {
+            let mut toks: Vec<Tok> = Vec::new();
+            for t in line_toks.iter().take(end + 1).skip(i) {
+                toks.extend(t.iter().cloned());
+            }
+            if sim001_applies && !waived("SIM001", i, end) {
+                for msg in sim001_matches(&toks, &hash_names) {
+                    push_unique(&mut out, finding(i, "SIM001", msg));
+                }
+            }
+            if flow_path && !waived("SIM005", i, end) {
+                for msg in sim005_matches(&toks) {
+                    push_unique(&mut out, finding(i, "SIM005", msg));
+                }
+            }
+        }
+        i = end + 1;
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(fs: &[Finding]) -> Vec<&'static str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn sim001_flags_hash_map_method_iteration() {
+        let src = concat!(
+            "use std::collections::HashMap;\n",
+            "struct S { m: HashMap<u32, u32> }\n",
+            "fn f(s: &S) -> usize { s.m.iter().count() }\n",
+        );
+        let fs = scan_source("net/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["SIM001"]);
+        assert_eq!(fs[0].line, 3);
+        assert!(fs[0].message.contains("m.iter()"));
+    }
+
+    #[test]
+    fn sim001_flags_let_binding_and_keys() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let mut seen = HashMap::new();\n",
+            "    seen.insert(1, 2);\n",
+            "    let n = seen.keys().count();\n",
+            "    let _ = n;\n",
+            "}\n",
+        );
+        let fs = scan_source("coordinator/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["SIM001"]);
+        assert_eq!(fs[0].line, 4);
+    }
+
+    #[test]
+    fn sim001_flags_for_loop_over_ref() {
+        let src = concat!(
+            "struct S { tracked: HashMap<u32, f64> }\n",
+            "fn f(s: &S) {\n",
+            "    for (k, v) in &s.tracked {\n",
+            "        let _ = (k, v);\n",
+            "    }\n",
+            "}\n",
+        );
+        let fs = scan_source("ops/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["SIM001"]);
+        assert_eq!(fs[0].line, 3);
+    }
+
+    #[test]
+    fn sim001_flags_multiline_chain() {
+        let src = concat!(
+            "struct S { live: HashMap<u64, u32> }\n",
+            "fn f(s: &S) -> usize {\n",
+            "    s.live\n",
+            "        .iter()\n",
+            "        .count()\n",
+            "}\n",
+        );
+        let fs = scan_source("framework/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["SIM001"]);
+        assert_eq!(fs[0].line, 3, "finding anchors at the chain head");
+    }
+
+    #[test]
+    fn sim001_ignores_btreemap_and_out_of_scope_modules() {
+        let btree = concat!(
+            "use std::collections::BTreeMap;\n",
+            "struct S { m: BTreeMap<u32, u32> }\n",
+            "fn f(s: &S) -> usize { s.m.iter().count() }\n",
+        );
+        assert!(scan_source("net/x.rs", btree).is_empty());
+        let hash = concat!(
+            "struct S { m: HashMap<u32, u32> }\n",
+            "fn f(s: &S) -> usize { s.m.iter().count() }\n",
+        );
+        assert!(scan_source("util/x.rs", hash).is_empty(), "util/ is not order-sensitive");
+    }
+
+    #[test]
+    fn sim001_keyed_access_is_fine() {
+        let src = concat!(
+            "struct S { m: HashMap<u32, u32> }\n",
+            "fn f(s: &S) -> Option<&u32> { s.m.get(&1) }\n",
+        );
+        assert!(scan_source("sim/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waiver_on_same_line_suppresses() {
+        let src = concat!(
+            "struct S { m: HashMap<u32, u32> }\n",
+            "fn f(s: &S) -> usize { s.m.iter().count() } ",
+            "// simlint: allow(SIM001) — aggregated into an order-free sum\n",
+        );
+        assert!(scan_source("net/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waiver_on_line_above_suppresses() {
+        let src = concat!(
+            "struct S { m: HashMap<u32, u32> }\n",
+            "fn f(s: &S) -> usize {\n",
+            "    // simlint: allow(SIM001) — count is order-insensitive\n",
+            "    s.m.iter().count()\n",
+            "}\n",
+        );
+        assert!(scan_source("net/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unjustified_waiver_reports_sim000() {
+        let src = concat!(
+            "struct S { m: HashMap<u32, u32> }\n",
+            "fn f(s: &S) -> usize { s.m.iter().count() } // simlint: allow(SIM001)\n",
+        );
+        let fs = scan_source("net/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["SIM000"], "finding suppressed, escape reported");
+    }
+
+    #[test]
+    fn sim002_flags_wall_clock_but_not_strings_or_imports() {
+        let fs = scan_source("util/x.rs", "fn f() { let t = Instant::now(); let _ = t; }\n");
+        assert_eq!(rules_of(&fs), vec!["SIM002"]);
+        assert!(scan_source("util/x.rs", "use std::time::Instant;\n").is_empty());
+        assert!(scan_source("util/x.rs", "let s = \"Instant::now\";\n").is_empty());
+    }
+
+    #[test]
+    fn sim002_waiver_with_reason_passes() {
+        let src = concat!(
+            "fn f() { let t = Instant::now(); let _ = t; } ",
+            "// simlint: allow(SIM002) — real socket deadline\n",
+        );
+        assert!(scan_source("gmp/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn sim003_flags_ambient_randomness() {
+        let fs = scan_source("util/x.rs", "fn f() { let r = thread_rng(); let _ = r; }\n");
+        assert_eq!(rules_of(&fs), vec!["SIM003"]);
+        assert!(
+            scan_source("util/x.rs", "fn f() { let r = my_thread_rng_like(); let _ = r; }\n")
+                .is_empty(),
+            "identifier boundaries respected"
+        );
+    }
+
+    #[test]
+    fn sim004_flags_prints_outside_entry_points() {
+        let src = "fn f() { println!(); }\n";
+        assert_eq!(rules_of(&scan_source("util/x.rs", src)), vec!["SIM004"]);
+        assert!(scan_source("main.rs", src).is_empty());
+        assert!(scan_source("bin/simlint.rs", src).is_empty());
+        let eprint = "fn f() { eprintln!(); }\n";
+        let fs = scan_source("ops/x.rs", eprint);
+        assert_eq!(rules_of(&fs), vec!["SIM004"]);
+        assert!(fs[0].message.contains("eprintln!"), "must not report the embedded println!");
+    }
+
+    #[test]
+    fn sim005_flags_float_literal_compares_in_flow_paths_only() {
+        let src = "fn f(x: f64) -> bool { x == 0.5 }\n";
+        assert_eq!(rules_of(&scan_source("net/flows.rs", src)), vec!["SIM005"]);
+        assert!(scan_source("net/topology.rs", src).is_empty(), "outside the flow path scope");
+        assert_eq!(rules_of(&scan_source("transport/tcp.rs", src)), vec!["SIM005"]);
+    }
+
+    #[test]
+    fn sim005_ignores_integers_tuples_and_ordered_compares() {
+        assert!(scan_source("net/flows.rs", "fn f(x: u32) -> bool { x == 5 }\n").is_empty());
+        assert!(scan_source("net/flows.rs", "fn f(a: (f64, u32), b: u32) -> bool { a.1 == b }\n")
+            .is_empty());
+        assert!(scan_source("net/flows.rs", "fn f(x: f64) -> bool { x <= 0.0 }\n").is_empty());
+    }
+
+    #[test]
+    fn sim005_catches_negative_and_exponent_literals() {
+        let fs = scan_source("net/flows.rs", "fn f(x: f64) -> bool { x != -1.5 }\n");
+        assert_eq!(rules_of(&fs), vec!["SIM005"]);
+        let fs = scan_source("net/flows.rs", "fn f(x: f64) -> bool { x == 1e-9 }\n");
+        assert_eq!(rules_of(&fs), vec!["SIM005"]);
+    }
+
+    #[test]
+    fn waiver_parser_variants() {
+        let (r, why) = parse_waiver("// simlint: allow(SIM001) — provably order-free").unwrap();
+        assert_eq!(r, "SIM001");
+        assert_eq!(why, "provably order-free");
+        let (_, why) = parse_waiver("// simlint: allow(SIM002)").unwrap();
+        assert!(why.is_empty());
+        assert!(parse_waiver("// simlint: allow(BOGUS1)").is_none());
+        assert!(parse_waiver("// plain comment").is_none());
+    }
+}

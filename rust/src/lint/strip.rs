@@ -1,0 +1,177 @@
+//! Comment/string stripping for the lint scanner.
+//!
+//! `simlint` has no parser — it works on source text — so before any rule
+//! runs, each line is split into its *code* part (string and char literal
+//! contents blanked, comments removed) and its *comment* part (where
+//! waivers live). A small state machine carries block-comment and string
+//! state across lines, so multi-line strings (including raw strings) never
+//! leak their contents into the code channel. Raw strings are handled
+//! crudely (terminated at the first `"`), which is sufficient for this
+//! crate's sources; the meta-test in [`super`] guards against drift.
+
+/// One file split line-by-line into code and comment channels.
+pub struct Stripped {
+    /// Per-line code with literals blanked and comments removed.
+    pub code: Vec<String>,
+    /// Per-line comment text (line comments only; block comment bodies
+    /// are discarded — waivers must use `//` comments).
+    pub comments: Vec<String>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    Block,
+    Str,
+    RawStr,
+}
+
+/// Strip a whole source file.
+pub fn strip(src: &str) -> Stripped {
+    let mut code = Vec::new();
+    let mut comments = Vec::new();
+    let mut state = State::Code;
+    for line in src.lines() {
+        let (c, m, next) = strip_line(line, state);
+        code.push(c);
+        comments.push(m);
+        state = next;
+    }
+    Stripped { code, comments }
+}
+
+/// Strip one line, threading the lexer state across line boundaries.
+fn strip_line(line: &str, start: State) -> (String, String, State) {
+    let b: Vec<char> = line.chars().collect();
+    let n = b.len();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0usize;
+    let mut state = start;
+    while i < n {
+        let c = b[i];
+        let nxt = if i + 1 < n { b[i + 1] } else { '\0' };
+        match state {
+            State::Code => {
+                if c == '/' && nxt == '/' {
+                    comment.extend(&b[i..]);
+                    break;
+                }
+                if c == '/' && nxt == '*' {
+                    state = State::Block;
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    // `r"…"` / `r#"…"#`: no escapes; ends at the next quote.
+                    let raw = i > 0 && (b[i - 1] == 'r' || b[i - 1] == '#');
+                    state = if raw { State::RawStr } else { State::Str };
+                    code.push('"');
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' {
+                    // Char literal ('x', '\n') vs lifetime ('a).
+                    if nxt == '\\' && i + 3 < n && b[i + 3] == '\'' {
+                        code.push(' ');
+                        i += 4;
+                        continue;
+                    }
+                    if i + 2 < n && b[i + 2] == '\'' {
+                        code.push(' ');
+                        i += 3;
+                        continue;
+                    }
+                    code.push(c);
+                    i += 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            State::Block => {
+                if c == '*' && nxt == '/' {
+                    state = State::Code;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Code;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr => {
+                if c == '"' {
+                    state = State::Code;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    (code, comment, state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comment_split() {
+        let s = strip("let x = 1; // trailing note");
+        assert_eq!(s.code[0], "let x = 1; ");
+        assert_eq!(s.comments[0], "// trailing note");
+    }
+
+    #[test]
+    fn string_contents_blanked() {
+        let s = strip("let s = \"Instant::now inside a string\";");
+        assert_eq!(s.code[0], "let s = \"\";");
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let s = strip("let s = \"a\\\"b // not a comment\"; let y = 2;");
+        assert!(s.code[0].contains("let y = 2;"));
+        assert!(s.comments[0].is_empty());
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let s = strip("a /* start\nstill hidden dot iter\nend */ b");
+        assert_eq!(s.code[0], "a ");
+        assert_eq!(s.code[1], "");
+        assert_eq!(s.code[2], " b");
+    }
+
+    #[test]
+    fn multiline_string_spans_lines() {
+        let s = strip("let s = \"first\nsecond hidden line\nthird\"; tail();");
+        assert_eq!(s.code[1], "");
+        assert!(s.code[2].contains("tail();"));
+    }
+
+    #[test]
+    fn char_literal_and_lifetime() {
+        let s = strip("let c = '\"'; fn f<'a>(x: &'a str) {}");
+        // The quote inside the char literal must not open a string.
+        assert!(s.code[0].contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn comment_slashes_inside_string_ignored() {
+        let s = strip("let url = \"http://example.com\"; let z = 3;");
+        assert!(s.code[0].contains("let z = 3;"));
+        assert!(s.comments[0].is_empty());
+    }
+}

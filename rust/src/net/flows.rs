@@ -67,6 +67,9 @@ struct FlowState {
     remaining: f64,
     rate: f64,
     cap: f64,
+    /// Bytes at birth, kept for the debug-build conservation audit:
+    /// a completing flow must have delivered (almost) all of them.
+    birth_bytes: f64,
     /// Monotone birth order: completion callbacks fire in this order, so
     /// slab slot reuse cannot perturb deterministic replays.
     birth: u64,
@@ -472,6 +475,62 @@ impl FlowNet {
                 self.link_rate[l] += f.rate;
             }
         }
+        #[cfg(debug_assertions)]
+        self.audit();
+    }
+
+    /// Structural self-audit of the slab, index lists, and allocation,
+    /// compiled only under `debug_assertions` and run after every
+    /// `reallocate`. O(active × path + links) — debug/test workloads
+    /// tolerate it; release builds pay nothing.
+    #[cfg(debug_assertions)]
+    fn audit(&self) {
+        assert_eq!(self.by_cap.len(), self.active.len(), "cap order length mismatch");
+        for w in self.by_cap.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            // Strict lexicographic (cap, slot) order; keys are unique.
+            assert!(
+                (self.flow(a).cap, a) < (self.flow(b).cap, b),
+                "by_cap order violated at slots {a},{b}"
+            );
+        }
+        for (l, lf) in self.link_flows.iter().enumerate() {
+            let sum: f64 = lf.iter().map(|&s| self.flow(s).rate).sum();
+            let eps = self.capacity[l] * 1e-6 + 1e-6;
+            assert!(
+                sum <= self.capacity[l] + eps,
+                "link {l} oversubscribed: {sum} > {}",
+                self.capacity[l]
+            );
+            assert!(
+                (sum - self.link_rate[l]).abs() <= eps,
+                "link {l} rate ledger drift: recomputed {sum}, ledger {}",
+                self.link_rate[l]
+            );
+            for (p, &s) in lf.iter().enumerate() {
+                let f = self.flow(s);
+                let cross = f
+                    .path
+                    .iter()
+                    .zip(&f.link_pos)
+                    .any(|(&pl, &lp)| pl == LinkId(l) && lp as usize == p);
+                assert!(cross, "link {l} entry {p} (slot {s}) lacks a back-reference");
+            }
+        }
+        for (p, &s) in self.active.iter().enumerate() {
+            let f = self.flow(s); // panics if the slot lost its state
+            assert_eq!(f.active_pos as usize, p, "active index out of sync at {p}");
+            assert!(f.remaining >= 0.0, "negative residual bytes on slot {s}");
+            assert!(f.rate >= 0.0 && f.rate.is_finite(), "bad rate on slot {s}");
+            assert_eq!(f.path.len(), f.link_pos.len(), "path/link_pos length mismatch");
+            for (&LinkId(l), &lp) in f.path.iter().zip(&f.link_pos) {
+                assert_eq!(
+                    self.link_flows[l].get(lp as usize),
+                    Some(&s),
+                    "slot {s} missing from link {l} index list"
+                );
+            }
+        }
     }
 
     fn next_completion(&self) -> Option<f64> {
@@ -504,7 +563,7 @@ impl FlowNet {
         done: F,
     ) -> FlowId {
         assert!(bytes >= 0.0 && cap_bps > 0.0);
-        if bytes == 0.0 {
+        if bytes <= 0.0 {
             eng.schedule_in(0.0, done);
             return FlowId::COMPLETED;
         }
@@ -519,6 +578,7 @@ impl FlowNet {
                 remaining: bytes,
                 rate: 0.0,
                 cap: cap_bps,
+                birth_bytes: bytes,
                 birth,
                 active_pos: 0,    // assigned by insert
                 link_pos: Vec::new(),
@@ -620,6 +680,15 @@ impl FlowNet {
             let mut cbs = Vec::with_capacity(finished.len());
             for s in finished {
                 let mut f = n.release(s);
+                // Byte conservation: a completing flow has delivered its
+                // birth bytes up to fp dust (the forced-progress path above
+                // can carry slightly more residue than the epsilon test).
+                debug_assert!(
+                    f.remaining <= 1e-3 + f.birth_bytes * 1e-6,
+                    "completion leaks bytes: {} of {} undelivered",
+                    f.remaining,
+                    f.birth_bytes
+                );
                 n.completions += 1;
                 if let Some(cb) = f.done.take() {
                     cbs.push(cb);

@@ -6,7 +6,7 @@
 //! disk and 1GE NIC, racks uplinked at 10 Gb/s into a dedicated lightpath
 //! mesh. All capacities are **bytes/second**; times are seconds.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Index newtypes — cheap, `Copy`, and keep call sites honest.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -86,9 +86,9 @@ pub struct Topology {
     pub nodes: Vec<Node>,
     pub links: Vec<Link>,
     /// Directed WAN link per ordered site pair.
-    wan: HashMap<(SiteId, SiteId), LinkId>,
+    wan: BTreeMap<(SiteId, SiteId), LinkId>,
     /// One-way latency between sites, seconds (symmetric).
-    site_owd: HashMap<(SiteId, SiteId), f64>,
+    site_owd: BTreeMap<(SiteId, SiteId), f64>,
 }
 
 impl Topology {
@@ -337,11 +337,7 @@ impl Topology {
                 nodes
             );
         }
-        for ((a, b), lid) in {
-            let mut v: Vec<_> = self.wan.iter().collect();
-            v.sort_by_key(|((a, b), _)| (a.0, b.0));
-            v
-        } {
+        for ((a, b), lid) in &self.wan {
             if a.0 < b.0 {
                 let rtt = 2.0 * self.site_owd[&(*a, *b)];
                 let _ = writeln!(

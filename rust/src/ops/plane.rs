@@ -31,7 +31,7 @@
 //! them.
 
 use std::cell::RefCell;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::rc::Rc;
 
 use crate::coordinator::provision::Op;
@@ -290,26 +290,26 @@ pub struct OpsPlane {
     topo: Rc<Topology>,
     net: Rc<RefCell<FlowNet>>,
     nodes: Vec<NodeId>,
-    aggregator_of_site: HashMap<usize, NodeId>,
+    aggregator_of_site: BTreeMap<usize, NodeId>,
     central: NodeId,
     enabled: bool,
     /// Ground truth: crashed nodes and when (set by fault injection).
-    crashed: HashMap<NodeId, f64>,
+    crashed: BTreeMap<NodeId, f64>,
     telemetry_msgs: u64,
     telemetry_bytes: f64,
     telemetry_wan_bytes: f64,
     /// Aggregator buffers: site → samples since the last relay.
-    agg_pending: HashMap<usize, Vec<NodeReport>>,
+    agg_pending: BTreeMap<usize, Vec<NodeReport>>,
     /// Central service state.
-    tracked: HashMap<NodeId, NodeHealth>,
+    tracked: BTreeMap<NodeId, NodeHealth>,
     alerts: Vec<Alert>,
     ops_log: Vec<Op>,
     dead_declared: usize,
     false_dead: usize,
     detection_latency_max: f64,
     reexecuted_tasks: usize,
-    hot_flagged: HashSet<NodeId>,
-    slow_flagged: HashSet<NodeId>,
+    hot_flagged: BTreeSet<NodeId>,
+    slow_flagged: BTreeSet<NodeId>,
     /// The shared wave's links with their nominal capacities.
     wan_links: Vec<(LinkId, f64)>,
     /// Latest probed aggregate wave capacity (starts at nominal).
@@ -335,7 +335,7 @@ impl OpsPlane {
         assert!(cfg.check_interval > 0.0);
         assert!(cfg.dead_missed > cfg.suspect_missed);
         let topo = cluster.topo.clone();
-        let mut aggregator_of_site = HashMap::new();
+        let mut aggregator_of_site = BTreeMap::new();
         for &n in nodes {
             aggregator_of_site.entry(topo.node(n).site.0).or_insert(n);
         }
@@ -370,11 +370,11 @@ impl OpsPlane {
             topo,
             net: cluster.net.clone(),
             enabled: true,
-            crashed: HashMap::new(),
+            crashed: BTreeMap::new(),
             telemetry_msgs: 0,
             telemetry_bytes: 0.0,
             telemetry_wan_bytes: 0.0,
-            agg_pending: HashMap::new(),
+            agg_pending: BTreeMap::new(),
             tracked,
             alerts: Vec::new(),
             ops_log: Vec::new(),
@@ -382,8 +382,8 @@ impl OpsPlane {
             false_dead: 0,
             detection_latency_max: 0.0,
             reexecuted_tasks: 0,
-            hot_flagged: HashSet::new(),
-            slow_flagged: HashSet::new(),
+            hot_flagged: BTreeSet::new(),
+            slow_flagged: BTreeSet::new(),
             wan_links,
             wan_observed: wan_nominal,
             wan_degraded: false,

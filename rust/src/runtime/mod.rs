@@ -337,7 +337,7 @@ mod pjrt_tests {
     fn kernels() -> Option<Rc<MalstoneKernels>> {
         let dir = default_artifact_dir();
         if !dir.join("meta.json").exists() {
-            eprintln!("skipping PJRT test: artifacts not built (run `make artifacts`)");
+            eprintln!("skipping PJRT test: artifacts not built (run `make artifacts`)"); // simlint: allow(SIM004) — test-skip notice in a feature-gated test, not simulation output
             return None;
         }
         Some(MalstoneKernels::load(&dir).expect("artifact load"))

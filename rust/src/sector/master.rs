@@ -7,7 +7,7 @@
 //! master also tracks the slave blacklist driven by the monitoring system
 //! (paper §3: "Sector can remove underperforming resources").
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::rc::Rc;
 
 use crate::net::{NodeId, Topology};
@@ -23,19 +23,19 @@ pub struct Segment {
 /// The Sector master.
 pub struct SectorMaster {
     topo: Rc<Topology>,
-    files: HashMap<String, Vec<Segment>>,
-    blacklist: HashSet<NodeId>,
+    files: BTreeMap<String, Vec<Segment>>,
+    blacklist: BTreeSet<NodeId>,
     /// Bytes stored per slave.
-    usage: HashMap<NodeId, u64>,
+    usage: BTreeMap<NodeId, u64>,
 }
 
 impl SectorMaster {
     pub fn new(topo: Rc<Topology>) -> Self {
         SectorMaster {
             topo,
-            files: HashMap::new(),
-            blacklist: HashSet::new(),
-            usage: HashMap::new(),
+            files: BTreeMap::new(),
+            blacklist: BTreeSet::new(),
+            usage: BTreeMap::new(),
         }
     }
 

@@ -94,6 +94,9 @@ impl Engine {
         self.seq += 1;
         self.events.insert(seq, Box::new(f));
         self.heap.push(Scheduled { time: t.max(self.now), seq });
+        // Invariant: every live callback has a heap marker (markers without
+        // callbacks are stale-but-harmless; the reverse would lose events).
+        debug_assert!(self.heap.len() >= self.events.len());
         TimerId(seq)
     }
 
@@ -110,6 +113,11 @@ impl Engine {
     pub fn cancel(&mut self, id: TimerId) {
         if self.events.remove(&id.0).is_some() {
             self.maybe_compact();
+            // Invariant: after a cancellation-triggered compaction pass the
+            // heap is O(live) — at most 2× the live events plus the small
+            // compaction floor. (Between cancels, while stepping, stale
+            // markers may transiently exceed this share.)
+            debug_assert!(self.heap.len() <= (2 * self.events.len()).max(64));
         }
     }
 
@@ -130,7 +138,13 @@ impl Engine {
             let Some(f) = self.events.remove(&ev.seq) else {
                 continue; // stale marker of a cancelled event: purge
             };
-            debug_assert!(ev.time >= self.now - 1e-9);
+            // Invariant: event times never run backwards (monotone clock).
+            debug_assert!(
+                ev.time >= self.now - 1e-9,
+                "event time {} precedes clock {}",
+                ev.time,
+                self.now
+            );
             self.now = ev.time.max(self.now);
             self.executed += 1;
             f(self);

@@ -1,0 +1,87 @@
+//! The double-run determinism harness.
+//!
+//! Every registry set is executed twice at a reduced scale and the two
+//! report vectors must serialize to byte-identical JSON. This catches the
+//! failure mode simlint's static rules cannot: each `HashMap` instance
+//! draws its own `RandomState`, so any hash-ordered iteration that leaks
+//! into scheduling, f64 summation, or report assembly diverges *between
+//! two runs inside one process* — no cross-process or cross-platform
+//! comparison needed.
+//!
+//! One test per set keeps failures attributable; together they cover
+//! every framework, the ops plane, provisioning, and the tenant
+//! scheduler. CI's debug-profile job runs these with the FlowNet audit
+//! and engine asserts live.
+
+use oct::coordinator::{find_set, RunReport, ScenarioRunner};
+
+/// Run the named set once at `1/div` scale and serialize all its reports.
+fn run_serialized(name: &str, div: u64) -> String {
+    let set = find_set(name).unwrap_or_else(|| panic!("unknown set {name}")).scaled_down(div);
+    let reports: Vec<RunReport> = ScenarioRunner::new().run_set(&set);
+    assert!(!reports.is_empty(), "{name}: no reports");
+    reports.iter().map(|r| r.to_json().to_string()).collect::<Vec<_>>().join("\n")
+}
+
+/// The core assertion: two identically-configured runs must match byte
+/// for byte.
+fn assert_replays(name: &str, div: u64) {
+    let a = run_serialized(name, div);
+    let b = run_serialized(name, div);
+    if a != b {
+        // Point at the first diverging line to keep the failure readable.
+        for (i, (la, lb)) in a.lines().zip(b.lines()).enumerate() {
+            assert_eq!(la, lb, "{name}: report {i} diverges between runs");
+        }
+        panic!("{name}: runs differ in report count");
+    }
+}
+
+// Divisors match the registry's own shape tests: small enough for CI,
+// large enough that every phase (map, shuffle, reduce, replication,
+// telemetry, provisioning) still executes.
+
+#[test]
+fn table1_replays_identically() {
+    assert_replays("table1", 200);
+}
+
+#[test]
+fn table2_replays_identically() {
+    assert_replays("table2", 200);
+}
+
+#[test]
+fn interop_replays_identically() {
+    assert_replays("interop", 200);
+}
+
+#[test]
+fn scale_ladder_replays_identically() {
+    assert_replays("scale-ladder", 200);
+}
+
+#[test]
+fn local_vs_wan_replays_identically() {
+    assert_replays("local-vs-wan", 500);
+}
+
+#[test]
+fn site_dropout_replays_identically() {
+    assert_replays("site-dropout", 500);
+}
+
+#[test]
+fn flow_churn_replays_identically() {
+    assert_replays("flow-churn", 100);
+}
+
+#[test]
+fn ops_replays_identically() {
+    assert_replays("ops", 100);
+}
+
+#[test]
+fn tenancy_replays_identically() {
+    assert_replays("tenancy", 100);
+}
