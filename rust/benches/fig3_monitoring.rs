@@ -24,6 +24,7 @@ fn main() {
 
     // Ingest: full-testbed samples per wall second.
     let samples = 2000;
+    // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
     let t0 = Instant::now();
     for i in 0..samples {
         eng.run_until(1.0 + i as f64);
@@ -43,6 +44,7 @@ fn main() {
     // Render: Figure 3 frames per second (ANSI + plain).
     for (ansi, label) in [(true, "ansi"), (false, "plain")] {
         let frames = 2000;
+        // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
         let t1 = Instant::now();
         let mut bytes = 0usize;
         for _ in 0..frames {
@@ -57,6 +59,7 @@ fn main() {
     }
 
     // JSON export cost (the web feed).
+    // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
     let t2 = Instant::now();
     let frames = 1000;
     let mut total = 0usize;

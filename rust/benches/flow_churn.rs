@@ -126,6 +126,7 @@ fn run_churn<N: ChurnNet>(
 ) -> Stats {
     let mut eng = Engine::new();
     let left = Rc::new(Cell::new(total));
+    // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
     let t0 = Instant::now();
     for c in 0..conc.min(total) {
         // Stagger chain starting points through the job table so the
@@ -307,6 +308,7 @@ mod baseline {
             if dt <= 0.0 {
                 return;
             }
+            // simlint: allow(SIM001) — per-flow update, no cross-flow order dependence
             for f in self.flows.values_mut() {
                 if f.rate > 0.0 {
                     f.remaining = (f.remaining - f.rate * dt).max(0.0);
@@ -328,6 +330,7 @@ mod baseline {
                 return;
             }
             let mut remaining_cap = self.capacity.clone();
+            // simlint: allow(SIM001) — collected then sorted before any effect
             let mut ids: Vec<u64> = self.flows.keys().copied().collect();
             ids.sort_unstable();
             let mut rate: HashMap<u64, f64> = ids.iter().map(|&i| (i, 0.0)).collect();
@@ -404,6 +407,7 @@ mod baseline {
                 }
             }
 
+            // simlint: allow(SIM001) — keyed writes; link_rate feeds no scheduling decision
             for (&id, r) in &rate {
                 let f = self.flows.get_mut(&id).unwrap();
                 f.rate = *r;
@@ -415,6 +419,7 @@ mod baseline {
 
         fn next_completion(&self) -> Option<f64> {
             let mut best: Option<f64> = None;
+            // simlint: allow(SIM001) — min over f64 is order-insensitive
             for f in self.flows.values() {
                 if f.rate > 0.0 {
                     let t = f.remaining / f.rate;
@@ -477,6 +482,7 @@ mod baseline {
             let callbacks = {
                 let mut n = net.borrow_mut();
                 n.advance(eng.now());
+                // simlint: allow(SIM001) — collected then sorted before any effect
                 let mut finished: Vec<u64> = n
                     .flows
                     .iter()
@@ -485,6 +491,7 @@ mod baseline {
                     .collect();
                 if finished.is_empty() {
                     if let Some((&id, _)) =
+                        // simlint: allow(SIM001) — forced-progress pick; the churn schedule never ties
                         n.flows.iter().filter(|(_, f)| f.rate > 0.0).min_by(|a, b| {
                             let ta = a.1.remaining / a.1.rate;
                             let tb = b.1.remaining / b.1.rate;

@@ -1,0 +1,717 @@
+//! Bench: flow domains + incremental water-filling at mega-churn scale.
+//!
+//! Two measurements:
+//!
+//! 1. **Incremental vs full recompute, bitwise identical.** The
+//!    `mega-churn` registry scenario (structured intra-rack pair traffic
+//!    plus a thin WAN stream, ~100k concurrent flows at full scale) runs
+//!    through the [`ScenarioRunner`] twice: once with incremental
+//!    per-component reallocation (the default) and once with
+//!    `incremental: false`, which seeds every link and re-fills the whole
+//!    network on every event through the same machinery. The two
+//!    [`RunReport`]s must serialize to *byte-identical* JSON — the modes
+//!    differ only in which clean components they redundantly re-fill to
+//!    the same bits — and the incremental run must be ≥ 5× faster.
+//!
+//! 2. **Semantics vs the pre-refactor core.** The same deterministic
+//!    mega-churn-shaped raw schedule runs through [`pre_refactor`] — a
+//!    faithful copy of the previous per-flow core (slab + per-link index
+//!    lists + `by_cap` order + single cancellable completion timer) whose
+//!    `reallocate()` water-fills over **every active flow** on every
+//!    arrival and departure — and through the new aggregate core.
+//!    Completions must match, makespans agree to 1e-6 relative (the
+//!    refactor changes data layout, not allocation semantics), and the
+//!    new core must be ≥ 5× faster.
+//!
+//! Env knobs: `OCT_SCALE_DIV` (divides the registry workload; default 10
+//! → 40k transfers / 10k slots; 1 = the full 400k/100k scale),
+//! `OCT_SCALE_OLD_FLOWS`, `OCT_SCALE_OLD_CONCURRENCY`,
+//! `OCT_SCALE_SKIP_OLD=1`, `OCT_SCALE_MIN_SPEEDUP`.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::time::Instant;
+
+use oct::coordinator::{find_set, RunReport, ScenarioRunner};
+use oct::net::{FlowNet, FlowNetConfig, LinkId, NodeId, Topology};
+use oct::sim::Engine;
+use oct::util::json::{obj, Json};
+use oct::util::Rng;
+
+fn env_or(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+// ---- part 1: the registry scenario, incremental vs full ---------------
+
+struct ModeRun {
+    json: String,
+    wall: f64,
+    reports: Vec<RunReport>,
+}
+
+fn run_mode(div: u64, incremental: bool) -> ModeRun {
+    let set = find_set("mega-churn").expect("mega-churn set registered").scaled_down(div);
+    let runner = ScenarioRunner::new()
+        .with_flow_config(FlowNetConfig { aggregate: true, incremental });
+    // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
+    let t0 = Instant::now();
+    let reports = runner.run_set(&set);
+    let wall = t0.elapsed().as_secs_f64();
+    let json =
+        reports.iter().map(|r| r.to_json().to_string()).collect::<Vec<_>>().join("\n");
+    ModeRun { json, wall, reports }
+}
+
+// ---- part 2: raw schedule through the old and new cores ---------------
+
+struct Job {
+    path: Vec<LinkId>,
+    bytes: f64,
+    cap: f64,
+}
+
+struct Stats {
+    wall: f64,
+    sim: f64,
+    completions: u64,
+}
+
+/// Both cores expose the same start/completions surface; the driver is
+/// generic so they run the identical deterministic schedule.
+trait ScaleNet: 'static {
+    fn start_flow(
+        net: &Rc<RefCell<Self>>,
+        eng: &mut Engine,
+        path: Vec<LinkId>,
+        bytes: f64,
+        cap: f64,
+        done: Box<dyn FnOnce(&mut Engine)>,
+    );
+    fn done_count(&self) -> u64;
+}
+
+impl ScaleNet for FlowNet {
+    fn start_flow(
+        net: &Rc<RefCell<Self>>,
+        eng: &mut Engine,
+        path: Vec<LinkId>,
+        bytes: f64,
+        cap: f64,
+        done: Box<dyn FnOnce(&mut Engine)>,
+    ) {
+        FlowNet::start(net, eng, path, bytes, cap, done);
+    }
+
+    fn done_count(&self) -> u64 {
+        self.completions()
+    }
+}
+
+impl ScaleNet for pre_refactor::FlowNet {
+    fn start_flow(
+        net: &Rc<RefCell<Self>>,
+        eng: &mut Engine,
+        path: Vec<LinkId>,
+        bytes: f64,
+        cap: f64,
+        done: Box<dyn FnOnce(&mut Engine)>,
+    ) {
+        pre_refactor::FlowNet::start(net, eng, path, bytes, cap, done);
+    }
+
+    fn done_count(&self) -> u64 {
+        self.completions()
+    }
+}
+
+/// Each completion relaunches its slot's next job until the shared budget
+/// drains — steady-state churn at the initial concurrency.
+fn spawn<N: ScaleNet>(
+    net: &Rc<RefCell<N>>,
+    eng: &mut Engine,
+    jobs: &Rc<Vec<Job>>,
+    k: usize,
+    left: &Rc<Cell<u64>>,
+) {
+    if left.get() == 0 {
+        return;
+    }
+    left.set(left.get() - 1);
+    let job = &jobs[k % jobs.len()];
+    let (path, bytes, cap) = (job.path.clone(), job.bytes, job.cap);
+    let net2 = net.clone();
+    let jobs2 = jobs.clone();
+    let left2 = left.clone();
+    N::start_flow(
+        net,
+        eng,
+        path,
+        bytes,
+        cap,
+        Box::new(move |e: &mut Engine| {
+            spawn(&net2, e, &jobs2, k + 1, &left2);
+        }),
+    );
+}
+
+fn run_schedule<N: ScaleNet>(
+    net: Rc<RefCell<N>>,
+    jobs: &Rc<Vec<Job>>,
+    total: u64,
+    conc: u64,
+) -> Stats {
+    let mut eng = Engine::new();
+    let left = Rc::new(Cell::new(total));
+    // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
+    let t0 = Instant::now();
+    for c in 0..conc.min(total) {
+        // Stagger chain starting points through the job table so every
+        // pair carries load, deterministically.
+        spawn(&net, &mut eng, jobs, (c as usize) * 7 + 1, &left);
+    }
+    eng.run();
+    Stats {
+        wall: t0.elapsed().as_secs_f64(),
+        sim: eng.now(),
+        completions: net.borrow().done_count(),
+    }
+}
+
+/// Mega-churn-shaped jobs: disjoint intra-rack partner pairs (the first
+/// 28 of each rack's first 30 nodes), a thin WAN mix from the leftover
+/// pool, and a handful of *discrete* transport caps so the new core's
+/// same-path aggregation actually collapses flows.
+fn make_jobs(topo: &Topology) -> Vec<Job> {
+    let mut rng = Rng::new(0x5CA1E);
+    let caps = [1.4e6, 4.5e6, 18.0e6, 6.0e7, 1.09e8, f64::INFINITY];
+    let mut pairs: Vec<(NodeId, NodeId)> = Vec::new();
+    let mut pool: Vec<NodeId> = Vec::new();
+    for r in &topo.racks {
+        let active = &r.nodes[..30];
+        for c in active[..28].chunks_exact(2) {
+            pairs.push((c[0], c[1]));
+        }
+        pool.extend(&active[28..30]);
+    }
+    let mut jobs = Vec::new();
+    for (i, &(a, b)) in pairs.iter().enumerate() {
+        for _ in 0..4 {
+            let (src, dst) = if rng.chance(0.5) { (a, b) } else { (b, a) };
+            let wan = i % 16 == 15;
+            let (src, dst) = if wan {
+                let s = pool[rng.gen_range(pool.len() as u64) as usize];
+                let mut d = s;
+                while d == s {
+                    d = pool[rng.gen_range(pool.len() as u64) as usize];
+                }
+                (s, d)
+            } else {
+                (src, dst)
+            };
+            let bytes = (1.0 + rng.f64() * 15.0) * 1e6;
+            let cap = caps[rng.gen_range(caps.len() as u64) as usize];
+            jobs.push(Job { path: topo.path(src, dst), bytes, cap });
+        }
+    }
+    jobs
+}
+
+// ---- reporting --------------------------------------------------------
+
+fn write_bench_json(
+    div: u64,
+    transfers: u64,
+    inc: &ModeRun,
+    full: &ModeRun,
+    speedup_incremental: f64,
+    old_speedup: Option<f64>,
+) {
+    let doc = obj(vec![
+        ("bench", Json::Str("flow_scale".into())),
+        ("scale_div", Json::Num(div as f64)),
+        ("transfers", Json::Num(transfers as f64)),
+        ("incremental_wall_secs", Json::Num(inc.wall)),
+        ("full_recompute_wall_secs", Json::Num(full.wall)),
+        ("speedup_incremental_vs_full", Json::Num(speedup_incremental)),
+        ("reports_byte_identical", Json::Bool(inc.json == full.json)),
+        ("speedup_vs_pre_refactor_core", old_speedup.map_or(Json::Null, Json::Num)),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_flow_scale.json");
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
+}
+
+fn main() {
+    let div = env_or("OCT_SCALE_DIV", 10).max(1);
+    let old_total = env_or("OCT_SCALE_OLD_FLOWS", 4_000);
+    let old_conc = env_or("OCT_SCALE_OLD_CONCURRENCY", 2_000);
+    let min_speedup = env_or("OCT_SCALE_MIN_SPEEDUP", 5) as f64;
+    let skip_old = std::env::var("OCT_SCALE_SKIP_OLD").is_ok();
+
+    println!("=== flow scale: mega-churn registry scenario at 1/{div} scale ===");
+    let inc = run_mode(div, true);
+    let full = run_mode(div, false);
+    let transfers = inc.reports[0].total_records;
+    let flows = inc.reports[0].metric("flows").unwrap_or(f64::NAN);
+    let peak = inc.reports[0].metric("peak_active").unwrap_or(f64::NAN);
+    println!(
+        "incremental    {:>8.2}s wall  ({flows:.0} transfers, peak {peak:.0} active)",
+        inc.wall
+    );
+    println!("full recompute {:>8.2}s wall", full.wall);
+    assert_eq!(
+        inc.json, full.json,
+        "incremental and full-recompute runs must produce byte-identical reports"
+    );
+    let speedup = full.wall / inc.wall.max(1e-9);
+    println!("speedup: {speedup:.1}× (reports byte-identical)");
+    assert!(
+        speedup >= min_speedup,
+        "incremental reallocation regressed: only {speedup:.2}× over full recompute"
+    );
+
+    // The registry's own shape criteria hold under both modes (one check
+    // suffices — the reports are byte-identical).
+    let set = find_set("mega-churn").unwrap().scaled_down(div);
+    for c in set.run_checks(&inc.reports) {
+        assert!(c.pass, "{}: {}", c.name, c.detail);
+    }
+
+    if skip_old {
+        write_bench_json(div, transfers, &inc, &full, speedup, None);
+        println!("pre-refactor comparison skipped (OCT_SCALE_SKIP_OLD)");
+        return;
+    }
+
+    println!(
+        "--- pre-refactor comparison: {old_total} transfers, {old_conc} concurrent (identical schedules) ---"
+    );
+    let topo = Topology::oct_2009();
+    let jobs = Rc::new(make_jobs(&topo));
+    let s_new = run_schedule(FlowNet::new(&topo), &jobs, old_total, old_conc);
+    println!("aggregate core   {:>8.2}s wall  {:.3}s simulated", s_new.wall, s_new.sim);
+    let s_old = run_schedule(pre_refactor::FlowNet::new(&topo), &jobs, old_total, old_conc);
+    println!("per-flow core    {:>8.2}s wall  {:.3}s simulated", s_old.wall, s_old.sim);
+    assert_eq!(s_new.completions, s_old.completions, "cores disagree on completions");
+    assert!(
+        (s_new.sim - s_old.sim).abs() <= 1e-6 * s_old.sim.max(1.0),
+        "allocation semantics drifted: {} vs {} simulated seconds",
+        s_new.sim,
+        s_old.sim,
+    );
+    let old_speedup = s_old.wall / s_new.wall.max(1e-9);
+    println!("speedup: {old_speedup:.1}× (same simulated makespan: {:.3}s)", s_new.sim);
+    assert!(
+        old_speedup >= min_speedup,
+        "refactor regressed: only {old_speedup:.2}× over the per-flow global core"
+    );
+    write_bench_json(div, transfers, &inc, &full, speedup, Some(old_speedup));
+    println!("flow scale OK");
+}
+
+/// A faithful copy of the pre-refactor fluid core, kept as the bench's
+/// measuring stick: per-flow slab storage with per-link index lists and
+/// an incrementally-maintained `by_cap` order, a single cancellable
+/// completion timer — and a `reallocate()` that water-fills over **every
+/// active flow** on every arrival and departure. That global pass is
+/// exactly what the flow-domain refactor removes.
+mod pre_refactor {
+    use std::cell::RefCell;
+    use std::cmp::Ordering;
+    use std::rc::Rc;
+
+    use oct::net::{LinkId, Topology};
+    use oct::sim::{Engine, TimerId};
+
+    type Callback = Box<dyn FnOnce(&mut Engine)>;
+
+    struct FlowState {
+        path: Vec<LinkId>,
+        remaining: f64,
+        rate: f64,
+        cap: f64,
+        birth: u64,
+        active_pos: u32,
+        link_pos: Vec<u32>,
+        done: Option<Callback>,
+    }
+
+    struct Slot {
+        state: Option<FlowState>,
+    }
+
+    #[derive(Default)]
+    struct Scratch {
+        remaining: Vec<f64>,
+        users: Vec<u32>,
+        saturated: Vec<bool>,
+        touched: Vec<u32>,
+        frozen: Vec<bool>,
+    }
+
+    pub struct FlowNet {
+        capacity: Vec<f64>,
+        link_rate: Vec<f64>,
+        link_bytes: Vec<f64>,
+        slots: Vec<Slot>,
+        free: Vec<u32>,
+        active: Vec<u32>,
+        by_cap: Vec<u32>,
+        link_flows: Vec<Vec<u32>>,
+        next_birth: u64,
+        last_advance: f64,
+        completions: u64,
+        timer: Option<TimerId>,
+        scratch: Scratch,
+    }
+
+    impl FlowNet {
+        pub fn new(topo: &Topology) -> Rc<RefCell<FlowNet>> {
+            let capacity: Vec<f64> = topo.links.iter().map(|l| l.capacity).collect();
+            let n = capacity.len();
+            Rc::new(RefCell::new(FlowNet {
+                capacity,
+                link_rate: vec![0.0; n],
+                link_bytes: vec![0.0; n],
+                slots: Vec::new(),
+                free: Vec::new(),
+                active: Vec::new(),
+                by_cap: Vec::new(),
+                link_flows: vec![Vec::new(); n],
+                next_birth: 0,
+                last_advance: 0.0,
+                completions: 0,
+                timer: None,
+                scratch: Scratch {
+                    remaining: vec![0.0; n],
+                    users: vec![0; n],
+                    saturated: vec![false; n],
+                    ..Scratch::default()
+                },
+            }))
+        }
+
+        pub fn completions(&self) -> u64 {
+            self.completions
+        }
+
+        fn insert(&mut self, mut state: FlowState) -> u32 {
+            state.active_pos = self.active.len() as u32;
+            state.link_pos =
+                state.path.iter().map(|&LinkId(l)| self.link_flows[l].len() as u32).collect();
+            let s = match self.free.pop() {
+                Some(s) => {
+                    self.slots[s as usize].state = Some(state);
+                    s
+                }
+                None => {
+                    self.slots.push(Slot { state: Some(state) });
+                    self.scratch.frozen.push(false);
+                    (self.slots.len() - 1) as u32
+                }
+            };
+            self.active.push(s);
+            let pos = self.by_cap_position(s).unwrap_or_else(|p| p);
+            self.by_cap.insert(pos, s);
+            for &LinkId(l) in &self.slots[s as usize].state.as_ref().unwrap().path {
+                self.link_flows[l].push(s);
+            }
+            s
+        }
+
+        fn by_cap_position(&self, s: u32) -> Result<usize, usize> {
+            let cap = self.flow(s).cap;
+            self.by_cap.binary_search_by(|&x| {
+                let cx = self.flow(x).cap;
+                cx.partial_cmp(&cap).unwrap_or(Ordering::Equal).then(x.cmp(&s))
+            })
+        }
+
+        fn release(&mut self, s: u32) -> FlowState {
+            let pos = self.by_cap_position(s).expect("flow missing from cap order");
+            self.by_cap.remove(pos);
+            let state = self.slots[s as usize].state.take().expect("releasing empty slot");
+            self.free.push(s);
+            let p = state.active_pos as usize;
+            self.active.swap_remove(p);
+            if p < self.active.len() {
+                let moved = self.active[p];
+                self.slots[moved as usize].state.as_mut().unwrap().active_pos = p as u32;
+            }
+            for (i, &LinkId(l)) in state.path.iter().enumerate() {
+                let lf = &mut self.link_flows[l];
+                let p = state.link_pos[i] as usize;
+                lf.swap_remove(p);
+                if p < lf.len() {
+                    let moved = lf[p];
+                    let old_last = lf.len() as u32;
+                    let m = self.slots[moved as usize].state.as_mut().unwrap();
+                    for (j, &pl) in m.path.iter().enumerate() {
+                        if pl == LinkId(l) && m.link_pos[j] == old_last {
+                            m.link_pos[j] = p as u32;
+                            break;
+                        }
+                    }
+                }
+            }
+            state
+        }
+
+        fn flow(&self, s: u32) -> &FlowState {
+            self.slots[s as usize].state.as_ref().expect("inactive slot")
+        }
+
+        fn advance(&mut self, now: f64) {
+            let dt = now - self.last_advance;
+            if dt <= 0.0 {
+                return;
+            }
+            for &s in &self.active {
+                let f = self.slots[s as usize].state.as_mut().unwrap();
+                if f.rate > 0.0 {
+                    f.remaining = (f.remaining - f.rate * dt).max(0.0);
+                }
+            }
+            for (l, rate) in self.link_rate.iter().enumerate() {
+                if *rate > 0.0 {
+                    self.link_bytes[l] += rate * dt;
+                }
+            }
+            self.last_advance = now;
+        }
+
+        /// The global pass: every call re-fills every active flow.
+        fn reallocate(&mut self) {
+            for r in self.link_rate.iter_mut() {
+                *r = 0.0;
+            }
+            if self.active.is_empty() {
+                return;
+            }
+            let sc = &mut self.scratch;
+            sc.touched.clear();
+            for (l, lf) in self.link_flows.iter().enumerate() {
+                if !lf.is_empty() {
+                    sc.touched.push(l as u32);
+                    sc.users[l] = lf.len() as u32;
+                    sc.remaining[l] = self.capacity[l];
+                    sc.saturated[l] = false;
+                }
+            }
+            for &s in &self.active {
+                sc.frozen[s as usize] = false;
+            }
+            let link_eps = |cap: f64| cap * 1e-9 + 1e-9;
+            let cap_eps = |cap: f64| if cap.is_finite() { cap * 1e-9 + 1e-9 } else { 0.0 };
+            let mut level = 0.0f64;
+            let mut unfrozen = self.active.len();
+            let mut cap_ptr = 0usize;
+            let max_iters = self.active.len() + sc.touched.len() + 8;
+            let mut iters = 0usize;
+            while unfrozen > 0 {
+                iters += 1;
+                let mut inc = f64::INFINITY;
+                for &l in &sc.touched {
+                    let l = l as usize;
+                    if sc.users[l] > 0 {
+                        inc = inc.min(sc.remaining[l].max(0.0) / sc.users[l] as f64);
+                    }
+                }
+                while cap_ptr < self.by_cap.len() && sc.frozen[self.by_cap[cap_ptr] as usize] {
+                    cap_ptr += 1;
+                }
+                if cap_ptr < self.by_cap.len() {
+                    let cap =
+                        self.slots[self.by_cap[cap_ptr] as usize].state.as_ref().unwrap().cap;
+                    inc = inc.min(cap - level);
+                }
+                if !inc.is_finite() {
+                    break;
+                }
+                let inc = inc.max(0.0);
+                level += inc;
+                for &l in &sc.touched {
+                    let l = l as usize;
+                    if sc.users[l] > 0 {
+                        sc.remaining[l] -= inc * sc.users[l] as f64;
+                    }
+                }
+                let mut froze_any = false;
+                while cap_ptr < self.by_cap.len() {
+                    let s = self.by_cap[cap_ptr] as usize;
+                    if sc.frozen[s] {
+                        cap_ptr += 1;
+                        continue;
+                    }
+                    let f = self.slots[s].state.as_mut().unwrap();
+                    if f.cap.is_finite() && level >= f.cap - cap_eps(f.cap) {
+                        f.rate = level;
+                        for &LinkId(l) in &f.path {
+                            sc.users[l] -= 1;
+                        }
+                        sc.frozen[s] = true;
+                        froze_any = true;
+                        unfrozen -= 1;
+                        cap_ptr += 1;
+                    } else {
+                        break;
+                    }
+                }
+                for &l in &sc.touched {
+                    let l = l as usize;
+                    if sc.saturated[l] || sc.remaining[l] > link_eps(self.capacity[l]) {
+                        continue;
+                    }
+                    sc.saturated[l] = true;
+                    for &s in &self.link_flows[l] {
+                        let s = s as usize;
+                        if sc.frozen[s] {
+                            continue;
+                        }
+                        let f = self.slots[s].state.as_mut().unwrap();
+                        f.rate = level;
+                        for &LinkId(pl) in &f.path {
+                            sc.users[pl] -= 1;
+                        }
+                        sc.frozen[s] = true;
+                        froze_any = true;
+                        unfrozen -= 1;
+                    }
+                }
+                if unfrozen > 0 && (!froze_any || iters >= max_iters) {
+                    break;
+                }
+            }
+            if unfrozen > 0 {
+                for &s in &self.active {
+                    if !sc.frozen[s as usize] {
+                        self.slots[s as usize].state.as_mut().unwrap().rate = level;
+                    }
+                }
+            }
+            for &s in &self.active {
+                let f = self.slots[s as usize].state.as_ref().unwrap();
+                for &LinkId(l) in &f.path {
+                    self.link_rate[l] += f.rate;
+                }
+            }
+        }
+
+        fn next_completion(&self) -> Option<f64> {
+            let mut best: Option<f64> = None;
+            for &s in &self.active {
+                let f = self.flow(s);
+                if f.rate > 0.0 {
+                    let t = f.remaining / f.rate;
+                    best = Some(match best {
+                        Some(b) => b.min(t),
+                        None => t,
+                    });
+                }
+            }
+            best
+        }
+
+        pub fn start<F: FnOnce(&mut Engine) + 'static>(
+            net: &Rc<RefCell<FlowNet>>,
+            eng: &mut Engine,
+            path: Vec<LinkId>,
+            bytes: f64,
+            cap_bps: f64,
+            done: F,
+        ) {
+            assert!(bytes > 0.0 && cap_bps > 0.0);
+            assert!(!path.is_empty(), "flow with empty path");
+            {
+                let mut n = net.borrow_mut();
+                n.advance(eng.now());
+                let birth = n.next_birth;
+                n.next_birth += 1;
+                n.insert(FlowState {
+                    path,
+                    remaining: bytes,
+                    rate: 0.0,
+                    cap: cap_bps,
+                    birth,
+                    active_pos: 0, // assigned by insert
+                    link_pos: Vec::new(),
+                    done: Some(Box::new(done)),
+                });
+                n.reallocate();
+            }
+            Self::reschedule(net, eng);
+        }
+
+        fn reschedule(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) {
+            let (old, dt) = {
+                let mut n = net.borrow_mut();
+                (n.timer.take(), n.next_completion())
+            };
+            if let Some(t) = old {
+                eng.cancel(t);
+            }
+            let Some(dt) = dt else { return };
+            let net2 = net.clone();
+            let id = eng.schedule_in(dt.max(0.0), move |eng| {
+                Self::on_completion(&net2, eng);
+            });
+            net.borrow_mut().timer = Some(id);
+        }
+
+        fn on_completion(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) {
+            let callbacks = {
+                let mut n = net.borrow_mut();
+                n.timer = None;
+                n.advance(eng.now());
+                let mut finished: Vec<u32> = Vec::new();
+                for &s in &n.active {
+                    let f = n.flow(s);
+                    if f.remaining <= 1e-6 + f.rate * 1e-9 {
+                        finished.push(s);
+                    }
+                }
+                if finished.is_empty() {
+                    let mut best: Option<(f64, u64, u32)> = None;
+                    for &s in &n.active {
+                        let f = n.flow(s);
+                        if f.rate > 0.0 {
+                            let t = f.remaining / f.rate;
+                            let better = match best {
+                                None => true,
+                                Some((bt, bb, _)) => t < bt || (t == bt && f.birth < bb),
+                            };
+                            if better {
+                                best = Some((t, f.birth, s));
+                            }
+                        }
+                    }
+                    if let Some((_, _, s)) = best {
+                        finished.push(s);
+                    }
+                }
+                finished.sort_unstable_by_key(|&s| n.flow(s).birth);
+                let mut cbs = Vec::with_capacity(finished.len());
+                for s in finished {
+                    let mut f = n.release(s);
+                    n.completions += 1;
+                    if let Some(cb) = f.done.take() {
+                        cbs.push(cb);
+                    }
+                }
+                n.reallocate();
+                cbs
+            };
+            for cb in callbacks {
+                cb(eng);
+            }
+            Self::reschedule(net, eng);
+        }
+    }
+}

@@ -23,8 +23,10 @@ fn main() {
         client.call(addr, "ping", b"warmup", Duration::from_secs(1)).unwrap();
     }
     let mut lat = Vec::with_capacity(iters);
+    // simlint: allow(SIM002) — real UDP loopback latency; wall-clock is the measurement
     let t0 = Instant::now();
     for _ in 0..iters {
+        // simlint: allow(SIM002) — real UDP loopback latency; wall-clock is the measurement
         let t = Instant::now();
         client.call(addr, "ping", &[7u8; 32], Duration::from_secs(1)).unwrap();
         lat.push(t.elapsed().as_secs_f64() * 1e6);
@@ -44,6 +46,7 @@ fn main() {
     let lossy = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
     lossy.set_fault(oct::gmp::FaultSpec { drop_every: 5, dup_every: 7 });
     let lossy_client = RpcClient::new(lossy);
+    // simlint: allow(SIM002) — real UDP loopback latency; wall-clock is the measurement
     let t1 = Instant::now();
     let n_lossy = 300;
     for i in 0..n_lossy {

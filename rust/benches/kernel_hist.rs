@@ -48,6 +48,7 @@ fn main() {
 
     // PJRT throughput.
     let reps = 3;
+    // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
     let t0 = Instant::now();
     for _ in 0..reps {
         let _ = k.hist(&joined).unwrap();
@@ -55,6 +56,7 @@ fn main() {
     let pjrt_dt = t0.elapsed().as_secs_f64() / reps as f64;
 
     // Pure-Rust baseline.
+    // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
     let t1 = Instant::now();
     for _ in 0..reps {
         let mut r = MalstoneResult::zero(k.meta.num_sites, k.meta.num_weeks);

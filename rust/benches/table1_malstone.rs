@@ -12,6 +12,7 @@ fn main() {
     let scale: u64 =
         std::env::var("OCT_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
     let set = find_set("table1").expect("table1 set registered").scaled_down(scale);
+    // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
     let t0 = std::time::Instant::now();
     let reports = ScenarioRunner::new().run_all(&set.scenarios);
     let wall = t0.elapsed().as_secs_f64();

@@ -1,37 +1,46 @@
 //! `simlint` — the determinism lint pass for the simulation core.
 //!
-//! Scans every `.rs` file under the crate's `src/` (or an explicit root
-//! passed on the command line) for the SIM00x rules documented in
-//! [`oct::lint`]. Exit codes: 0 clean, 1 findings, 2 usage or I/O error.
+//! Scans every `.rs` file under the crate's `src/`, `benches/`, and
+//! `tests/` (or an explicit root passed on the command line) for the
+//! SIM00x rules documented in [`oct::lint`]. Exit codes: 0 clean, 1
+//! findings, 2 usage or I/O error.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use oct::lint::{report_json, scan_tree, RULES};
+use oct::lint::{report_json, scan_crate, scan_tree, Finding, RULES};
 
 fn usage() {
     println!("usage: simlint [--json] [ROOT]");
     println!();
-    println!("Determinism lint for the oct simulation core. Scans ROOT (default:");
-    println!("the crate's src/ directory) for the rules below; waive a finding");
-    println!("with `// simlint: allow(SIMxxx) — <reason>` on the same line or a");
-    println!("comment-only line above. Unjustified waivers are SIM000 findings.");
+    println!("Determinism lint for the oct simulation core. Scans the crate's");
+    println!("src/, benches/, and tests/ roots (or just ROOT when given) for the");
+    println!("rules below; waive a finding with `// simlint: allow(SIMxxx) —");
+    println!("<reason>` on the same line or a comment-only line above.");
+    println!("Unjustified waivers are SIM000 findings.");
     println!();
     for (id, desc) in RULES {
         println!("  {id}  {desc}");
     }
 }
 
-/// The scan root: an explicit CLI argument, else the crate sources. The
-/// compile-time manifest dir is correct for `cargo run`; the bare `src`
-/// fallbacks cover a relocated binary run from the repo or crate root.
-fn resolve_root(cli: Option<PathBuf>) -> Option<PathBuf> {
+/// Run the scan: an explicit CLI root scans that single tree; otherwise
+/// the whole crate (src/benches/tests) is scanned. The compile-time
+/// manifest dir is correct for `cargo run`; the bare fallbacks cover a
+/// relocated binary run from the repo or crate root.
+fn run_scan(cli: Option<PathBuf>) -> Option<(PathBuf, std::io::Result<Vec<Finding>>)> {
     if let Some(p) = cli {
-        return p.is_dir().then_some(p);
+        if !p.is_dir() {
+            return None;
+        }
+        let f = scan_tree(&p);
+        return Some((p, f));
     }
-    let candidates =
-        [PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"), "rust/src".into(), "src".into()];
-    candidates.into_iter().find(|p| p.is_dir())
+    let candidates: [PathBuf; 3] =
+        [PathBuf::from(env!("CARGO_MANIFEST_DIR")), "rust".into(), ".".into()];
+    let root = candidates.into_iter().find(|p| p.join("src").is_dir())?;
+    let f = scan_crate(&root);
+    Some((root, f))
 }
 
 fn main() -> ExitCode {
@@ -57,12 +66,12 @@ fn main() -> ExitCode {
         }
     }
 
-    let Some(root) = resolve_root(root_arg) else {
+    let Some((root, scan)) = run_scan(root_arg) else {
         eprintln!("simlint: no source root found (pass one explicitly: simlint <dir>)");
         return ExitCode::from(2);
     };
 
-    let findings = match scan_tree(&root) {
+    let findings = match scan {
         Ok(f) => f,
         Err(e) => {
             eprintln!("simlint: scan of {} failed: {e}", root.display());

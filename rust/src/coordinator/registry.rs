@@ -11,7 +11,9 @@
 
 use crate::ops::{AlertKind, FaultPlan, OpsConfig, OpsReport};
 
-use super::runner::{flow_churn_concurrency, wide_area_penalty, RunReport, ShapeCheck};
+use super::runner::{
+    flow_churn_concurrency, mega_churn_concurrency, wide_area_penalty, RunReport, ShapeCheck,
+};
 use super::scenario::{Framework, Placement, Scenario, Testbed, TopologySpec, Variant, WorkloadSpec};
 
 /// A named group of scenarios with an optional shape check.
@@ -58,6 +60,7 @@ pub fn scenario_sets() -> Vec<ScenarioSet> {
         local_vs_wan_set(),
         site_dropout_set(),
         flow_churn_set(),
+        mega_churn_set(),
         ops_set(),
         tenancy_set(),
     ]
@@ -568,6 +571,82 @@ fn check_flow_churn(r: &[RunReport]) -> Vec<ShapeCheck> {
     ]
 }
 
+/// Flow-domain scaling stress: 400k *structured* transfers over the
+/// 120-node testbed with [`mega_churn_concurrency`] of them — ~100k —
+/// in flight at once. Unlike `flow-churn`'s all-pairs storm, every
+/// concurrency slot is pinned to a disjoint intra-rack partner pair
+/// (plus a thin cross-site stream on the shared wave), so each arrival
+/// or departure touches a two-link flow component no matter how many
+/// flows are in the air. Not a paper table: the substrate scenario
+/// behind the incremental water-filling + same-path aggregation
+/// refactor, and the workload the `flow_scale` bench replays against
+/// the pre-refactor global reallocator.
+fn mega_churn_set() -> ScenarioSet {
+    let scenarios = vec![
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(30))
+            .framework(Framework::MegaChurn)
+            // records = transfers for the churn driver.
+            .workload(WorkloadSpec::malstone_a(400_000))
+            .name("mega-churn/oct120/400k-transfers")
+            .build(),
+    ];
+    ScenarioSet {
+        name: "mega-churn",
+        description: "flow domains at scale: 400k structured transfers, ~100k concurrent, on 120 nodes",
+        scenarios,
+        check: Some(check_mega_churn),
+    }
+}
+
+fn check_mega_churn(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 1 {
+        return vec![ShapeCheck::new(
+            "mega-churn arity",
+            false,
+            format!("expected 1 report, got {}", r.len()),
+        )];
+    }
+    let r = &r[0];
+    let metric = |k: &str| r.metric(k).unwrap_or(f64::NAN);
+    let total = r.total_records;
+    let target = mega_churn_concurrency(total) as f64;
+    vec![
+        ShapeCheck::new(
+            "every transfer completed",
+            metric("flows") == total as f64 && metric("net_completions") == total as f64,
+            format!(
+                "{:.0} of {total} transfers, {:.0} network completions",
+                metric("flows"),
+                metric("net_completions")
+            ),
+        ),
+        ShapeCheck::new(
+            // `peak_active` counts flows (aggregate members), tracked by
+            // the net itself; transport setup staggers entry, so half the
+            // slot target is the conservative concurrency floor.
+            "network-level concurrency reached the target band",
+            metric("peak_active") >= (target / 2.0).max(1.0),
+            format!(
+                "peak {:.0} flows active in-net (target {target:.0} slots, observed peak {:.0})",
+                metric("peak_active"),
+                metric("peak_inflight"),
+            ),
+        ),
+        ShapeCheck::new(
+            "the WAN slots crossed the wave",
+            r.wan_bytes > 0.0,
+            format!("{:.2e} WAN bytes", r.wan_bytes),
+        ),
+        ShapeCheck::new(
+            "simulated time advanced",
+            r.simulated_secs > 0.0,
+            format!("{:.1}s simulated", r.simulated_secs),
+        ),
+    ]
+}
+
 /// The operations-plane family: closed-loop failure handling under the
 /// in-band monitoring pipeline. Four scenarios, one axis each:
 ///
@@ -966,6 +1045,15 @@ mod tests {
     }
 
     #[test]
+    fn mega_churn_shape_holds() {
+        // 1/500 scale: 800 transfers, 200 slots in flight, on all 120
+        // nodes — the structured pair/WAN mix at a debug-friendly size.
+        let (set, reports) = run_set("mega-churn", 500);
+        assert_eq!(reports[0].nodes, 120);
+        assert_checks_pass(&set, &reports);
+    }
+
+    #[test]
     fn ops_shape_holds() {
         // 1/100 scale: the crash lands at t=20s, comfortably inside the
         // ~76s map phase; the flap at t=3s inside the ~20s sphere run.
@@ -1000,6 +1088,7 @@ mod tests {
             "local-vs-wan",
             "site-dropout",
             "flow-churn",
+            "mega-churn",
             "ops",
             "tenancy",
         ] {

@@ -19,7 +19,7 @@ use crate::hadoop::FrameworkParams;
 use crate::malstone::record::RECORD_BYTES;
 use crate::monitor::Monitor;
 use crate::net::topology::LinkKind;
-use crate::net::{Cluster, FlowNet, LinkId, NodeId, SiteId, Topology};
+use crate::net::{Cluster, FlowNet, FlowNetConfig, LinkId, NodeId, SiteId, Topology};
 use crate::ops::{Fault, OpsConfig, OpsPlane, OpsReport};
 use crate::sector::master::{SectorMaster, Segment};
 use crate::sector::sphere::SphereReport;
@@ -326,6 +326,7 @@ impl LaunchCtx {
 pub struct ScenarioRunner {
     monitor_interval: Option<f64>,
     ops_override: Option<OpsConfig>,
+    flow_cfg: FlowNetConfig,
 }
 
 impl ScenarioRunner {
@@ -348,13 +349,21 @@ impl ScenarioRunner {
         self
     }
 
+    /// Run every scenario's fluid network under `cfg`. The `flow_scale`
+    /// bench uses this to run the same scenario with incremental
+    /// reallocation on and off and compare the reports byte for byte.
+    pub fn with_flow_config(mut self, cfg: FlowNetConfig) -> ScenarioRunner {
+        self.flow_cfg = cfg;
+        self
+    }
+
     /// Run one scenario to completion and assemble its report. Scenarios
     /// with a non-empty provisioning axis pay imaging / lightpath setup
     /// in simulated time before the workload starts, and report the
     /// split as `imaging_secs` / `lightpath_setup_secs` /
     /// `provision_secs` / `workload_secs` metrics.
     pub fn run(&self, sc: &Scenario) -> RunReport {
-        let cluster = Cluster::new(sc.topology.build());
+        let cluster = Cluster::with_config(sc.topology.build(), self.flow_cfg);
         let mut eng = Engine::new();
         let mon = self.monitor_interval.map(|iv| {
             let m = Monitor::new(cluster.topo.clone(), iv);
@@ -700,7 +709,7 @@ impl ScenarioRunner {
                 })
             })
             .collect();
-        let cluster = Cluster::new(master);
+        let cluster = Cluster::with_config(master, self.flow_cfg);
         let mut sched = SliceScheduler::new(cluster.topo.clone(), DEFAULT_SPARE_WAVE_GBPS);
         let mut eng = Engine::new();
         // Dark waves idle at the control floor until their tenant lights
@@ -843,6 +852,9 @@ fn start_framework(
         Framework::FlowChurn => {
             start_flow_churn(cluster, nodes, &sc.workload, eng, outcome.clone())
         }
+        Framework::MegaChurn => {
+            start_mega_churn(cluster, nodes, &sc.workload, eng, outcome.clone())
+        }
         _ => {
             let params = sc.framework.params();
             let storage = build_storage(sc.framework, cluster, nodes, &params);
@@ -902,8 +914,8 @@ fn start_imaging(
             // The depot images itself from its local copy: install only.
             eng.schedule_in(0.0, finish);
         } else {
-            let path = cluster.topo.path(depot, n);
-            FlowNet::start(&cluster.net, eng, path, img.bytes, f64::INFINITY, finish);
+            let route = cluster.topo.route(depot, n);
+            FlowNet::start_route(&cluster.net, eng, route, img.bytes, f64::INFINITY, finish);
         }
     }
 }
@@ -1228,6 +1240,145 @@ fn launch_churn_flow(
                 peak_inflight: s.peak_inflight,
                 // Exact network-level concurrency, tracked by the net
                 // itself (no completion-batch sampling skew).
+                peak_active: env2.net.borrow().peak_active() as u64,
+            });
+        }
+    });
+}
+
+/// How many transfers the mega-churn driver keeps in flight for a run of
+/// `total` transfers: a quarter of the run, floored at 1 and capped at
+/// 150 000 (~100k concurrent at the registry set's full scale). Shared
+/// with the registry's shape check.
+pub fn mega_churn_concurrency(total: u64) -> u64 {
+    (total / 4).clamp(1, 150_000)
+}
+
+/// Of every 16 mega-churn slots, one rides the shared wide-area wave;
+/// the rest stay on their intra-rack partner pair.
+const MEGA_WAN_SLOT_STRIDE: u64 = 16;
+
+/// The flow-domain stress driver behind [`Framework::MegaChurn`]: keep a
+/// very large number of transfers in flight, but *structured* — each
+/// concurrency slot is pinned to a disjoint intra-rack partner pair
+/// (pair traffic touches only the two NICs involved, since the ToR is
+/// non-blocking), with every sixteenth slot drawing a cross-site pair
+/// from a small per-rack WAN pool instead. Arrivals and departures on a
+/// pair therefore dirty a two-link flow component no matter how many
+/// other pairs are storming — the workload incremental water-filling
+/// and same-path aggregation exist for. A per-flow global reallocator
+/// pays O(all flows) on every one of those events; that asymmetry is
+/// what the `flow_scale` bench measures.
+fn start_mega_churn(
+    cluster: &Cluster,
+    nodes: &[NodeId],
+    w: &WorkloadSpec,
+    eng: &mut Engine,
+    out: Rc<RefCell<Option<Outcome>>>,
+) {
+    assert!(nodes.len() >= 2, "mega churn needs at least two nodes");
+    let total = w.total_records.max(1);
+    let target = mega_churn_concurrency(total);
+    // Group the placement by rack, reserve the last two placed nodes of
+    // each full rack group for the WAN pool, and pair off the rest.
+    let mut by_rack: BTreeMap<usize, Vec<NodeId>> = BTreeMap::new();
+    for &n in nodes {
+        by_rack.entry(cluster.topo.node(n).rack.0).or_default().push(n);
+    }
+    let mut pairs: Vec<(NodeId, NodeId)> = Vec::new();
+    let mut wan_pool: Vec<NodeId> = Vec::new();
+    for group in by_rack.values() {
+        let (paired, pooled) =
+            if group.len() >= 4 { group.split_at(group.len() - 2) } else { (&group[..], &[][..]) };
+        let mut chunks = paired.chunks_exact(2);
+        for c in &mut chunks {
+            pairs.push((c[0], c[1]));
+        }
+        wan_pool.extend(chunks.remainder());
+        wan_pool.extend(pooled);
+    }
+    let st = Rc::new(RefCell::new(ChurnState {
+        rng: Rng::new(0x0C7_3E6A),
+        launched: 0,
+        done: 0,
+        peak_inflight: 0,
+    }));
+    let env = Rc::new(MegaEnv {
+        net: cluster.net.clone(),
+        topo: cluster.topo.clone(),
+        pairs,
+        wan_pool,
+    });
+    for slot in 0..target.min(total) {
+        launch_mega_flow(&env, total, slot, eng, &st, &out);
+    }
+}
+
+/// Shared immutable context of one mega-churn run.
+struct MegaEnv {
+    net: Rc<RefCell<FlowNet>>,
+    topo: Rc<Topology>,
+    /// Disjoint intra-rack partner pairs; slot `i` drives pair `i % len`.
+    pairs: Vec<(NodeId, NodeId)>,
+    /// Cross-rack endpoints for the WAN slots.
+    wan_pool: Vec<NodeId>,
+}
+
+fn launch_mega_flow(
+    env: &Rc<MegaEnv>,
+    total: u64,
+    slot: u64,
+    eng: &mut Engine,
+    st: &Rc<RefCell<ChurnState>>,
+    out: &Rc<RefCell<Option<Outcome>>>,
+) {
+    let (src, dst, bytes, proto) = {
+        let mut s = st.borrow_mut();
+        s.launched += 1;
+        let inflight = s.launched - s.done;
+        if inflight > s.peak_inflight {
+            s.peak_inflight = inflight;
+        }
+        let wan_slot = env.wan_pool.len() >= 2
+            && (env.pairs.is_empty() || slot % MEGA_WAN_SLOT_STRIDE == MEGA_WAN_SLOT_STRIDE - 1);
+        let (src, dst) = if wan_slot {
+            let src = env.wan_pool[s.rng.gen_range(env.wan_pool.len() as u64) as usize];
+            let mut dst = src;
+            while dst == src {
+                dst = env.wan_pool[s.rng.gen_range(env.wan_pool.len() as u64) as usize];
+            }
+            (src, dst)
+        } else {
+            let (a, b) = env.pairs[(slot % env.pairs.len() as u64) as usize];
+            if s.rng.chance(0.5) {
+                (a, b)
+            } else {
+                (b, a)
+            }
+        };
+        // Smaller than flow-churn's segments (1–16 MB) so slots turn
+        // over quickly: the point is arrival/departure rate, not bytes.
+        let bytes = (1.0 + s.rng.f64() * 15.0) * 1e6;
+        let proto = if s.rng.chance(0.5) { Protocol::udt() } else { Protocol::tcp() };
+        (src, dst, bytes, proto)
+    };
+    let env2 = env.clone();
+    let st2 = st.clone();
+    let out2 = out.clone();
+    transport::send(&env.net, &env.topo, eng, src, dst, bytes, &proto, move |eng| {
+        let (done, launched) = {
+            let mut s = st2.borrow_mut();
+            s.done += 1;
+            (s.done, s.launched)
+        };
+        if launched < total {
+            launch_mega_flow(&env2, total, slot, eng, &st2, &out2);
+        } else if done == total {
+            let s = st2.borrow();
+            *out2.borrow_mut() = Some(Outcome::FlowChurn {
+                finished_at: eng.now(),
+                flows: s.done,
+                peak_inflight: s.peak_inflight,
                 peak_active: env2.net.borrow().peak_active() as u64,
             });
         }

@@ -152,15 +152,25 @@ pub enum Framework {
     /// network's arrival/departure churn path. The workload's record
     /// count is reinterpreted as the number of transfers.
     FlowChurn,
+    /// The flow-domain stress driver: like [`Framework::FlowChurn`] the
+    /// workload's record count is a transfer count, but the traffic is
+    /// *structured* — disjoint intra-rack partner pairs carrying many
+    /// concurrent same-path streams each, plus a thin cross-site stream
+    /// over the shared wave — so hundreds of thousands of flows stay in
+    /// flight while each arrival/departure touches only its own pair's
+    /// links. This is the shape incremental water-filling and same-path
+    /// aggregation exist for; the `flow_scale` bench runs it against the
+    /// pre-refactor global core.
+    MegaChurn,
 }
 
 impl Framework {
     /// The paper's headline data-processing frameworks — the enumeration
-    /// cross-product sets sweep over. [`Framework::FlowChurn`] is
-    /// deliberately absent (it reinterprets the workload's record count
-    /// as a transfer count, so including it in a MalStone sweep would be
-    /// nonsense); the §7 interop compositions live in their own `interop`
-    /// registry set rather than every sweep.
+    /// cross-product sets sweep over. [`Framework::FlowChurn`] and
+    /// [`Framework::MegaChurn`] are deliberately absent (they reinterpret
+    /// the workload's record count as a transfer count, so including them
+    /// in a MalStone sweep would be nonsense); the §7 interop compositions
+    /// live in their own `interop` registry set rather than every sweep.
     pub const ALL: [Framework; 4] = [
         Framework::HadoopMr,
         Framework::HadoopMrR1,
@@ -178,7 +188,9 @@ impl Framework {
             Framework::HadoopOverSector => FrameworkParams::hadoop_over_sector(),
             // Churn drives raw transfers; the cost model goes unused, but
             // Sphere's (UDT transport) is the closest in spirit.
-            Framework::SectorSphere | Framework::FlowChurn => FrameworkParams::sphere(),
+            Framework::SectorSphere | Framework::FlowChurn | Framework::MegaChurn => {
+                FrameworkParams::sphere()
+            }
         }
     }
 
@@ -191,6 +203,7 @@ impl Framework {
             Framework::CloudStoreMr => "cloudstore-mr",
             Framework::HadoopOverSector => "hadoop-over-sector",
             Framework::FlowChurn => "flow-churn",
+            Framework::MegaChurn => "mega-churn",
         }
     }
 }

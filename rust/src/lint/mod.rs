@@ -1,28 +1,35 @@
 //! # simlint — determinism hygiene for the simulation core
 //!
-//! A dependency-free static-analysis pass over `rust/src/**` that enforces
-//! the properties every number in this repo rests on: runs replay
-//! bit-identically from a seed, and nothing outside the seeded
-//! [`crate::util::rng::Rng`] or the virtual clock can perturb them. The
-//! offline build has no crates.io access, so the scanner is hand-rolled:
-//! [`strip`] splits each line into code and comment channels, and
-//! [`rules`] matches token patterns against the code channel.
+//! A dependency-free static-analysis pass over `rust/src/**`,
+//! `rust/benches/**`, and `rust/tests/**` that enforces the properties
+//! every number in this repo rests on: runs replay bit-identically from a
+//! seed, and nothing outside the seeded [`crate::util::rng::Rng`] or the
+//! virtual clock can perturb them. The offline build has no crates.io
+//! access, so the scanner is hand-rolled: [`strip`] splits each line into
+//! code and comment channels, and [`rules`] matches token patterns
+//! against the code channel.
 //!
 //! ## Rules
 //!
-//! | Rule   | Scope                     | What it rejects |
-//! |--------|---------------------------|-----------------|
-//! | SIM001 | order-sensitive modules¹  | iteration over hash-ordered containers (`.iter()`, `.keys()`, `.values()`, `.drain()`, `for … in &map`, …) |
-//! | SIM002 | all of `src/`             | wall-clock reads (`Instant::now`, `SystemTime`) |
-//! | SIM003 | all of `src/`             | ambient randomness (`thread_rng`, `from_entropy`, `RandomState`, …) — draws go through the seeded `util::rng::Rng` |
-//! | SIM004 | all but `main.rs`/`bin/`  | `println!`/`eprintln!`/`print!`/`eprint!` outside binary entry points |
-//! | SIM005 | flow/water-filling paths² | exact `f64` `==`/`!=` against float literals |
-//! | SIM000 | everywhere                | a waiver comment with no justification (not waivable) |
+//! | Rule   | Scope                         | What it rejects |
+//! |--------|-------------------------------|-----------------|
+//! | SIM001 | order-sensitive modules¹      | iteration over hash-ordered containers (`.iter()`, `.keys()`, `.values()`, `.drain()`, `for … in &map`, …) |
+//! | SIM002 | everything scanned            | wall-clock reads (`Instant::now`, `SystemTime`) |
+//! | SIM003 | everything scanned            | ambient randomness (`thread_rng`, `from_entropy`, `RandomState`, …) — draws go through the seeded `util::rng::Rng` |
+//! | SIM004 | all but entry points²         | `println!`/`eprintln!`/`print!`/`eprint!` outside binary entry points |
+//! | SIM005 | flow/water-filling paths³     | exact `f64` `==`/`!=` against float literals |
+//! | SIM000 | everywhere                    | a waiver comment with no justification (not waivable) |
 //!
 //! ¹ `sim/`, `net/`, `framework/`, `ops/`, `coordinator/`, `sector/`,
 //!   `hadoop/`, `transport/` — modules whose iteration order feeds event
-//!   scheduling, report assembly, or f64 summation.
-//! ² `net/flows.rs`, `net/mod.rs`, `transport/`.
+//!   scheduling, report assembly, or f64 summation — plus `benches/` and
+//!   `tests/`, whose embedded baseline cores and assertions feed the same
+//!   guarantees. Wall-clock reads in benches (the speedup measurements
+//!   themselves) carry per-line waivers: the clock may time a run, never
+//!   steer one.
+//! ² `main.rs`, `bin/`, and `benches/` — benches are plain `fn main`
+//!   programs whose printed report is their product.
+//! ³ `net/flows.rs`, `net/mod.rs`, `transport/`.
 //!
 //! ## Waivers
 //!
@@ -86,20 +93,44 @@ pub const RULES: &[(&str, &str)] = &[
 /// sorted order so the report is stable across platforms. Findings come
 /// back sorted by `(file, line, rule)`.
 pub fn scan_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    scan_tree_prefixed(root, "")
+}
+
+/// [`scan_tree`] with every relative path prefixed by `prefix/` — the
+/// scope rules key off the prefix (`benches/…`, `tests/…`).
+fn scan_tree_prefixed(root: &Path, prefix: &str) -> std::io::Result<Vec<Finding>> {
     let mut files = Vec::new();
     collect_rs_files(root, &mut files)?;
     files.sort();
     let mut findings = Vec::new();
     for path in &files {
         let src = std::fs::read_to_string(path)?;
-        let rel = path
+        let mut rel = path
             .strip_prefix(root)
             .unwrap_or(path)
             .components()
             .map(|c| c.as_os_str().to_string_lossy())
             .collect::<Vec<_>>()
             .join("/");
+        if !prefix.is_empty() {
+            rel = format!("{prefix}/{rel}");
+        }
         findings.extend(rules::scan_source(&rel, &src));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(findings)
+}
+
+/// Scan a whole crate: `src/` (unprefixed, so module scopes like `net/`
+/// resolve as before) plus `benches/` and `tests/` under their own
+/// prefixes. Missing roots are skipped — a crate without benches is fine.
+pub fn scan_crate(crate_root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut findings = scan_tree(&crate_root.join("src"))?;
+    for extra in ["benches", "tests"] {
+        let dir = crate_root.join(extra);
+        if dir.is_dir() {
+            findings.extend(scan_tree_prefixed(&dir, extra)?);
+        }
     }
     findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
     Ok(findings)
@@ -156,18 +187,51 @@ pub fn report_json(findings: &[Finding]) -> Json {
 mod tests {
     use super::*;
 
-    /// The meta-test: the crate's own sources must lint clean. Any rule
-    /// violation introduced anywhere in `src/` fails this test before it
-    /// ever reaches CI's dedicated simlint step.
+    /// The meta-test: the crate's own sources, benches, and integration
+    /// tests must lint clean. Any rule violation introduced anywhere in
+    /// the crate fails this test before it ever reaches CI's dedicated
+    /// simlint step.
     #[test]
     fn tree_is_clean() {
-        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
-        let findings = scan_tree(&root).expect("scan failed");
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = scan_crate(root).expect("scan failed");
         assert!(
             findings.is_empty(),
             "simlint findings in tree:\n{}",
             findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
         );
+    }
+
+    /// Fixture coverage for the crate-level scan: the `benches/` and
+    /// `tests/` roots are scanned under their prefixes (so their scope
+    /// rules apply) and a crate without those roots scans clean.
+    #[test]
+    fn scan_crate_prefixes_extra_roots() {
+        let fixture = std::env::temp_dir()
+            .join(format!("simlint-fixture-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&fixture);
+        for d in ["src", "benches", "tests"] {
+            std::fs::create_dir_all(fixture.join(d)).expect("fixture dirs");
+        }
+        // src: clean. benches: a print (allowed — entry point) and a
+        // wall-clock read (flagged). tests: a print (flagged).
+        std::fs::write(fixture.join("src/lib.rs"), "pub fn ok() {}\n").unwrap();
+        std::fs::write(
+            fixture.join("benches/b.rs"),
+            "fn main() { println!(); let t = Instant::now(); let _ = t; }\n",
+        )
+        .unwrap();
+        std::fs::write(fixture.join("tests/t.rs"), "fn f() { println!(); }\n").unwrap();
+        let findings = scan_crate(&fixture).expect("fixture scan");
+        let got: Vec<(&str, &str)> =
+            findings.iter().map(|f| (f.file.as_str(), f.rule)).collect();
+        assert_eq!(got, vec![("benches/b.rs", "SIM002"), ("tests/t.rs", "SIM004")]);
+
+        // A crate with only src/ scans without error.
+        std::fs::remove_dir_all(fixture.join("benches")).unwrap();
+        std::fs::remove_dir_all(fixture.join("tests")).unwrap();
+        assert!(scan_crate(&fixture).expect("src-only scan").is_empty());
+        let _ = std::fs::remove_dir_all(&fixture);
     }
 
     #[test]

@@ -15,9 +15,21 @@ use super::strip::strip;
 use super::Finding;
 
 /// Modules whose iteration order feeds event scheduling, report assembly,
-/// or f64 summation — SIM001 scope.
-const ORDER_SENSITIVE: &[&str] =
-    &["sim/", "net/", "framework/", "ops/", "coordinator/", "sector/", "hadoop/", "transport/"];
+/// or f64 summation — SIM001 scope. `benches/` and `tests/` qualify
+/// because their embedded baseline cores and assertions feed the same
+/// determinism guarantees the crate sources do.
+const ORDER_SENSITIVE: &[&str] = &[
+    "sim/",
+    "net/",
+    "framework/",
+    "ops/",
+    "coordinator/",
+    "sector/",
+    "hadoop/",
+    "transport/",
+    "benches/",
+    "tests/",
+];
 
 /// The flow/water-filling paths — SIM005 scope.
 const FLOW_PATHS: &[&str] = &["net/flows.rs", "net/mod.rs", "transport/"];
@@ -322,7 +334,9 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
     let stripped = strip(src);
     let order_sensitive = ORDER_SENSITIVE.iter().any(|p| rel.starts_with(*p));
     let flow_path = FLOW_PATHS.iter().any(|p| rel == *p || rel.starts_with(*p));
-    let entry = rel == "main.rs" || rel.starts_with("bin/");
+    // Benches are plain `fn main` programs (harness = false): printing a
+    // report is their job, exactly like `main.rs` and `bin/`.
+    let entry = rel == "main.rs" || rel.starts_with("bin/") || rel.starts_with("benches/");
 
     let line_toks: Vec<Vec<Tok>> = stripped.code.iter().map(|l| lex(l)).collect();
     let mut hash_names: BTreeSet<String> = BTreeSet::new();
@@ -579,6 +593,37 @@ mod tests {
         let fs = scan_source("ops/x.rs", eprint);
         assert_eq!(rules_of(&fs), vec!["SIM004"]);
         assert!(fs[0].message.contains("eprintln!"), "must not report the embedded println!");
+    }
+
+    #[test]
+    fn benches_are_entry_points_but_still_order_sensitive() {
+        // Printing is a bench's job…
+        assert!(scan_source("benches/flow_scale.rs", "fn main() { println!(); }\n").is_empty());
+        // …but hash-ordered iteration in an embedded baseline core is not.
+        let src = concat!(
+            "struct S { flows: HashMap<u64, f64> }\n",
+            "fn f(s: &S) -> usize { s.flows.iter().count() }\n",
+        );
+        assert_eq!(rules_of(&scan_source("benches/flow_churn.rs", src)), vec!["SIM001"]);
+        // Wall-clock reads still need a justified waiver, bench or not.
+        let clock = "fn main() { let t = Instant::now(); let _ = t; }\n";
+        assert_eq!(rules_of(&scan_source("benches/x.rs", clock)), vec!["SIM002"]);
+    }
+
+    #[test]
+    fn tests_are_order_sensitive_and_not_entry_points() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let mut seen = HashMap::new();\n",
+            "    seen.insert(1, 2);\n",
+            "    for k in &seen {\n",
+            "        let _ = k;\n",
+            "    }\n",
+            "}\n",
+        );
+        assert_eq!(rules_of(&scan_source("tests/determinism.rs", src)), vec!["SIM001"]);
+        let print = "fn f() { eprintln!(\"skipping\"); }\n";
+        assert_eq!(rules_of(&scan_source("tests/integration.rs", print)), vec!["SIM004"]);
     }
 
     #[test]

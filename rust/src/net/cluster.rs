@@ -6,7 +6,7 @@ use std::rc::Rc;
 
 use crate::sim::resources::CpuPool;
 
-use super::flows::FlowNet;
+use super::flows::{FlowNet, FlowNetConfig};
 use super::topology::{NodeId, Topology};
 
 /// Shared simulation substrate handles.
@@ -19,8 +19,16 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(topo: Topology) -> Cluster {
+        Cluster::with_config(topo, FlowNetConfig::default())
+    }
+
+    /// A cluster whose fluid network runs under a non-default
+    /// [`FlowNetConfig`] — the flow-scale bench uses this to run the same
+    /// scenario with incremental reallocation on and off and compare the
+    /// reports byte for byte.
+    pub fn with_config(topo: Topology, cfg: FlowNetConfig) -> Cluster {
         let topo = Rc::new(topo);
-        let net = FlowNet::new(&topo);
+        let net = FlowNet::new_with(&topo, cfg);
         let pools = topo.nodes.iter().map(|n| CpuPool::new(n.cpu_slots)).collect();
         Cluster { topo, net, pools }
     }

@@ -1,4 +1,6 @@
-//! Fluid flow network with max-min fair sharing and per-flow rate caps.
+//! Fluid flow network with max-min fair sharing, per-flow rate caps,
+//! same-path flow aggregation, and incremental water-filling over
+//! site-sharded flow domains.
 //!
 //! Every bulk transfer in the simulated testbed — HDFS pipeline writes,
 //! MapReduce shuffle fetches, Sphere segment reads and bucket writes, and
@@ -10,27 +12,55 @@
 //! [`crate::transport`]). The cap is what makes the wide-area penalty of
 //! Table 2 emerge from mechanism rather than from a hard-coded constant.
 //!
-//! Built for churn at 10k+ active flows: flows live in a slab (`Vec` plus
-//! free list) addressed by dense slot indices, every link keeps an index
-//! list of the active flows crossing it, and `reallocate()` water-fills
-//! over persistent scratch arrays — zero allocation per call in steady
-//! state. Completions are scheduled on the event engine as a *single
-//! cancellable timer*: any change to the flow set cancels and reschedules
-//! it, so the event heap holds at most one completion event per network
-//! instead of one stale event per reallocation.
+//! Three mechanisms carry this to ~1M concurrent flows:
+//!
+//! 1. **Same-path aggregation.** Flows sharing an identical `(path, cap)`
+//!    collapse into one *aggregate* with `weight` members. Max-min fairness
+//!    gives identical rates to identical flows, so an aggregate is a single
+//!    water-filling participant of weight `w`; members differ only in their
+//!    completion *targets* on the aggregate's cumulative served-bytes axis
+//!    (a min-heap of targets). A storm of same-route transfers costs
+//!    O(distinct paths), not O(flows).
+//!
+//! 2. **Incremental reallocation.** An arrival, departure, or capacity
+//!    retune only perturbs rates inside the connected component (links ↔
+//!    aggregates sharing them) reachable from the touched links. The
+//!    recompute seeds a worklist with those links, discovers affected
+//!    components, and water-fills each component in a canonical order.
+//!    Untouched components keep their stored rates — which are *bitwise*
+//!    what a full recompute would produce, because a component's fill
+//!    depends only on its member set, weights, caps, and capacities (see
+//!    `fill_component`). A debug-build audit re-runs the full recompute
+//!    after every event and asserts bitwise equality.
+//!
+//! 3. **Flow domains.** Links are partitioned by [`Domain`]: one per site
+//!    plus the WAN. Each domain owns a completion-timer lane — a lazy
+//!    min-heap of aggregate deadlines behind one cancellable engine event
+//!    (see [`TimerBank`]) — so completion scheduling is sharded by site
+//!    instead of funneling through one global timer.
+//!
+//! Determinism: incremental and full (`FlowNetConfig::incremental =
+//! false`) modes run identical code everywhere except which components get
+//! re-filled, and a re-fill of a clean component reproduces its rates
+//! bitwise. Stored deadlines are only recomputed when an aggregate's rate
+//! changes bitwise or its membership changes, so the two modes schedule
+//! byte-identical event sequences — the `flow_scale` bench asserts equal
+//! `RunReport` JSON while timing the speedup.
 
 use std::cell::RefCell;
-use std::cmp::Ordering;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BinaryHeap};
 use std::rc::Rc;
 
-use crate::sim::{Engine, TimerId};
+use crate::sim::{Engine, TimerBank};
 
-use super::topology::{LinkId, Topology};
+use super::topology::{Domain, LinkId, Route, Topology};
 
-/// Identifies a flow. Real ids are `(slot, generation)` pairs, so a stale
-/// id can never alias a different flow after its slab slot is reused; the
-/// reserved [`FlowId::COMPLETED`] value denotes a transfer that finished
-/// before it ever occupied a slot (zero-byte flows).
+/// Identifies a flow. Real ids are `(slot, generation)` pairs naming the
+/// *aggregate* a flow joined, so a stale id can never alias a different
+/// aggregate after its slab slot is reused; the reserved
+/// [`FlowId::COMPLETED`] value denotes a transfer that finished before it
+/// ever occupied a slot (zero-byte flows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FlowId(u64);
 
@@ -60,113 +90,235 @@ impl FlowId {
     }
 }
 
+/// Tuning knobs for the flow core. The defaults are what production
+/// callers want; the non-default corners exist so benches and property
+/// tests can pin either optimization off and compare results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlowNetConfig {
+    /// Collapse flows sharing an identical `(path, cap)` into weighted
+    /// aggregates. Off: every flow is its own aggregate of weight 1.
+    pub aggregate: bool,
+    /// Reallocate only the connected components touched by an event.
+    /// Off: every event re-fills every component (same code path, seeded
+    /// with every link) — the oracle the incremental mode must match.
+    pub incremental: bool,
+}
+
+impl Default for FlowNetConfig {
+    fn default() -> FlowNetConfig {
+        FlowNetConfig { aggregate: true, incremental: true }
+    }
+}
+
 type Callback = Box<dyn FnOnce(&mut Engine)>;
 
-struct FlowState {
-    path: Vec<LinkId>,
-    remaining: f64,
-    rate: f64,
-    cap: f64,
-    /// Bytes at birth, kept for the debug-build conservation audit:
-    /// a completing flow must have delivered (almost) all of them.
-    birth_bytes: f64,
-    /// Monotone birth order: completion callbacks fire in this order, so
-    /// slab slot reuse cannot perturb deterministic replays.
+/// One member of an aggregate: completes when the aggregate's cumulative
+/// per-member served bytes (`base`) reach `target`. Ordered by
+/// `(target, birth)` — targets are non-negative finite, so IEEE bit order
+/// is numeric order and doubles as a total order for the member heap.
+struct Member {
+    target_bits: u64,
     birth: u64,
-    /// This flow's position in `FlowNet::active`, and in each path link's
-    /// `link_flows` list (parallel to `path`) — departures are O(path)
-    /// swap_removes instead of O(active flows) scans.
+    /// Bytes at birth, kept for the debug-build conservation audit.
+    bytes: f64,
+    done: Option<Callback>,
+}
+
+impl PartialEq for Member {
+    fn eq(&self, other: &Member) -> bool {
+        (self.target_bits, self.birth) == (other.target_bits, other.birth)
+    }
+}
+impl Eq for Member {}
+impl PartialOrd for Member {
+    fn partial_cmp(&self, other: &Member) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Member {
+    fn cmp(&self, other: &Member) -> Ordering {
+        (self.target_bits, self.birth).cmp(&(other.target_bits, other.birth))
+    }
+}
+
+/// A same-path aggregate: one water-filling participant of weight
+/// `weight`, serving every member at `member_rate` simultaneously.
+struct AggState {
+    path: Vec<LinkId>,
+    cap: f64,
+    /// Cached `cap.to_bits()`: half of the aggregation key, and the
+    /// canonical cap-freeze sort key inside `fill_component`.
+    cap_bits: u64,
+    /// Third key component: 0 when aggregating, the founding member's
+    /// birth otherwise (making every aggregate unique).
+    key_salt: u64,
+    /// Member count; the aggregate contributes `weight × member_rate`
+    /// to every path link.
+    weight: u32,
+    member_rate: f64,
+    /// Cumulative bytes served *per member* since the aggregate was
+    /// created. A member joining with `B` bytes completes at
+    /// `base == base_at_join + B` — its heap target.
+    base: f64,
+    /// Founding member's birth: deadline-heap tiebreak and a stable
+    /// identity across the aggregate's whole lifetime.
+    birth: u64,
+    /// Completion-timer lane (site index, or `num_sites` for WAN paths).
+    lane: u32,
+    /// Absolute completion time of the head member; recomputed *only*
+    /// when `member_rate` changes bitwise or membership changes, so both
+    /// reallocation modes preserve deadline bits identically.
+    deadline: f64,
+    /// Sequence number of the aggregate's valid lane-heap entry (global
+    /// counter: slot reuse can never revalidate a stale entry).
+    seq: u64,
+    /// In the current event's deadline-refresh list (dedupe flag).
+    needs_refresh: bool,
+    members: BinaryHeap<Reverse<Member>>,
+    /// Position in `FlowNet::active` and in each path link's `link_aggs`
+    /// list (parallel to `path`) — departures are O(path) swap_removes.
     active_pos: u32,
     link_pos: Vec<u32>,
-    done: Option<Callback>,
 }
 
 /// One slab slot; `gen` survives reuse and stamps issued [`FlowId`]s.
 struct Slot {
     gen: u32,
-    state: Option<FlowState>,
+    state: Option<AggState>,
 }
 
-/// Persistent water-filling scratch. Per-link arrays are sized to the
-/// topology at construction; `frozen` grows with the slab. Nothing here
-/// is meaningful between `reallocate` calls — each call rewrites the
-/// entries it reads.
+/// Lane-heap entry: `(deadline_bits, aggregate birth, slot, seq)` under
+/// `Reverse` — a lazy-deletion min-heap keyed by deadline with a
+/// deterministic total tiebreak.
+type LaneEntry = (u64, u64, u32, u64);
+
+/// Persistent recompute scratch. Per-link arrays are sized to the
+/// topology at construction; per-slot arrays grow with the slab. Nothing
+/// here is meaningful between `recompute` calls except `seeds` (the
+/// caller stages dirty links there) and `refresh` (drained by
+/// `flush_refresh`).
 #[derive(Default)]
 struct Scratch {
-    /// Remaining capacity per link (valid for this call's touched links).
+    /// Remaining capacity per link (valid for this fill's component).
     remaining: Vec<f64>,
-    /// Unfrozen flows crossing each link (valid for touched links).
+    /// Unfrozen *weight* crossing each link (valid for the component).
     users: Vec<u32>,
-    /// Whether a touched link has saturated this call.
+    /// Whether a component link has saturated this fill.
     saturated: Vec<bool>,
-    /// Links with at least one active flow this call.
-    touched: Vec<u32>,
-    /// Per-slot frozen flag (valid for this call's active slots).
+    /// Per-slot frozen flag (valid for the component's aggregates).
     frozen: Vec<bool>,
+    /// BFS visit stamps (per link / per slot) — `stamp` bumps per call,
+    /// so clearing is O(1).
+    link_mark: Vec<u64>,
+    agg_mark: Vec<u64>,
+    stamp: u64,
+    /// Dirty links staged by the caller before `recompute`.
+    seeds: Vec<u32>,
+    /// BFS worklist, and the current component's links / aggregates.
+    queue: Vec<u32>,
+    comp_links: Vec<u32>,
+    comp_aggs: Vec<u32>,
+    /// Aggregates whose deadline must be recomputed this event (rate bits
+    /// changed, or membership changed).
+    refresh: Vec<u32>,
 }
 
 /// The fluid network. Use through an `Rc<RefCell<_>>` handle.
 pub struct FlowNet {
+    cfg: FlowNetConfig,
     capacity: Vec<f64>,
     /// Current aggregate rate per link (for utilization sampling).
     link_rate: Vec<f64>,
     /// Cumulative bytes carried per link (monitor counters).
     link_bytes: Vec<f64>,
-    /// Flow slab: slot indices are dense and recycled through `free`.
+    /// Each link's flow domain (copied from the topology) and the site
+    /// count, for deriving an aggregate's timer lane from its path.
+    link_domain: Vec<Domain>,
+    num_sites: usize,
+    /// Aggregate slab: slot indices are dense and recycled through `free`.
     slots: Vec<Slot>,
     free: Vec<u32>,
-    /// Slots of currently-active flows (unordered).
+    /// Slots of currently-active aggregates (unordered).
     active: Vec<u32>,
-    /// Active slots sorted by ascending `(cap, slot)`. Caps are immutable
-    /// per flow, so this is maintained incrementally (binary-search
-    /// insert/remove) instead of re-sorted inside `reallocate`.
-    by_cap: Vec<u32>,
-    /// Per-link index lists: active slots crossing each link.
-    link_flows: Vec<Vec<u32>>,
+    /// Per-link index lists: active aggregate slots crossing each link.
+    link_aggs: Vec<Vec<u32>>,
+    /// Aggregation index: `(cap_bits, key_salt, path)` → slot.
+    index: BTreeMap<(u64, u64, Vec<LinkId>), u32>,
+    /// Per-domain lazy deadline heaps, one completion-timer lane each.
+    lane_heaps: Vec<BinaryHeap<Reverse<LaneEntry>>>,
+    timers: TimerBank,
+    /// Monotone source for `AggState::seq`.
+    deadline_seq: u64,
+    /// Live member (flow) count across all aggregates.
+    active_members: usize,
     next_birth: u64,
     last_advance: f64,
     completions: u64,
-    /// High-water mark of `active.len()` (concurrency metrics).
+    /// High-water mark of `active_members` (concurrency metrics).
     peak_active: usize,
-    /// The single pending completion event, if any.
-    timer: Option<TimerId>,
     scratch: Scratch,
 }
 
 impl FlowNet {
     pub fn new(topo: &Topology) -> Rc<RefCell<FlowNet>> {
+        FlowNet::new_with(topo, FlowNetConfig::default())
+    }
+
+    /// A network with explicit [`FlowNetConfig`] knobs (benches and
+    /// property tests pin aggregation or incrementality off).
+    pub fn new_with(topo: &Topology, cfg: FlowNetConfig) -> Rc<RefCell<FlowNet>> {
         let capacity: Vec<f64> = topo.links.iter().map(|l| l.capacity).collect();
+        let link_domain: Vec<Domain> = topo.links.iter().map(|l| l.domain).collect();
         let n = capacity.len();
+        let lanes = topo.num_domains();
         Rc::new(RefCell::new(FlowNet {
+            cfg,
             capacity,
             link_rate: vec![0.0; n],
             link_bytes: vec![0.0; n],
+            link_domain,
+            num_sites: lanes - 1,
             slots: Vec::new(),
             free: Vec::new(),
             active: Vec::new(),
-            by_cap: Vec::new(),
-            link_flows: vec![Vec::new(); n],
+            link_aggs: vec![Vec::new(); n],
+            index: BTreeMap::new(),
+            lane_heaps: (0..lanes).map(|_| BinaryHeap::new()).collect(),
+            timers: TimerBank::new(lanes),
+            deadline_seq: 0,
+            active_members: 0,
             next_birth: 0,
             last_advance: 0.0,
             completions: 0,
             peak_active: 0,
-            timer: None,
             scratch: Scratch {
                 remaining: vec![0.0; n],
                 users: vec![0; n],
                 saturated: vec![false; n],
+                link_mark: vec![0; n],
                 ..Scratch::default()
             },
         }))
     }
 
-    /// Total completed flows (sanity/metrics).
+    /// The configuration this network runs under.
+    pub fn config(&self) -> FlowNetConfig {
+        self.cfg
+    }
+
+    /// Total completed flows (sanity/metrics). Counts members, not
+    /// aggregates.
     pub fn completions(&self) -> u64 {
         self.completions
     }
 
-    /// Number of currently active flows.
+    /// Number of currently active flows (aggregate members).
     pub fn active(&self) -> usize {
+        self.active_members
+    }
+
+    /// Number of currently active aggregates (water-filling participants).
+    pub fn aggregates(&self) -> usize {
         self.active.len()
     }
 
@@ -211,15 +363,16 @@ impl FlowNet {
         self.link_bytes[l.0]
     }
 
-    /// Current rate of a flow (0 if finished; stale ids of completed flows
-    /// stay 0 even after their slab slot is reused).
+    /// Current per-member rate of the aggregate a flow id names (0 once
+    /// the aggregate is gone; stale ids stay 0 even after their slab slot
+    /// is reused).
     pub fn flow_rate(&self, id: FlowId) -> f64 {
         if id.is_completed() {
             return 0.0;
         }
         match self.slots.get(id.slot() as usize) {
             Some(slot) if slot.gen == id.gen() => {
-                slot.state.as_ref().map(|f| f.rate).unwrap_or(0.0)
+                slot.state.as_ref().map(|a| a.member_rate).unwrap_or(0.0)
             }
             _ => 0.0,
         }
@@ -227,55 +380,41 @@ impl FlowNet {
 
     // ---- slab plumbing -----------------------------------------------
 
-    fn insert(&mut self, mut state: FlowState) -> FlowId {
-        // Record where this flow will sit in the index lists (links are
-        // distinct along a path, so each list's length is its position).
+    fn agg(&self, s: u32) -> &AggState {
+        self.slots[s as usize].state.as_ref().expect("inactive slot")
+    }
+
+    fn insert_agg(&mut self, mut state: AggState) -> u32 {
+        // Record where this aggregate will sit in the index lists (links
+        // are distinct along a path, so each list's length is its slot).
         state.active_pos = self.active.len() as u32;
         state.link_pos =
-            state.path.iter().map(|&LinkId(l)| self.link_flows[l].len() as u32).collect();
+            state.path.iter().map(|&LinkId(l)| self.link_aggs[l].len() as u32).collect();
         let s = match self.free.pop() {
             Some(s) => {
                 self.slots[s as usize].state = Some(state);
                 s
             }
             None => {
-                assert!(self.slots.len() < u32::MAX as usize, "flow slab full");
+                assert!(self.slots.len() < u32::MAX as usize, "aggregate slab full");
                 self.slots.push(Slot { gen: 0, state: Some(state) });
-                self.scratch.frozen.push(false);
                 (self.slots.len() - 1) as u32
             }
         };
         self.active.push(s);
-        self.peak_active = self.peak_active.max(self.active.len());
-        let pos = self.by_cap_position(s).unwrap_or_else(|p| p);
-        self.by_cap.insert(pos, s);
-        let slot = &self.slots[s as usize];
-        for &LinkId(l) in &slot.state.as_ref().unwrap().path {
-            self.link_flows[l].push(s);
+        for &LinkId(l) in &self.slots[s as usize].state.as_ref().unwrap().path {
+            self.link_aggs[l].push(s);
         }
-        FlowId::new(s, slot.gen)
+        s
     }
 
-    /// Binary-search `by_cap` for slot `s` (whose state must be present).
-    /// `Ok` is the slot's position, `Err` its insertion point — the
-    /// `(cap, slot)` key is unique, so a present slot is always `Ok`.
-    fn by_cap_position(&self, s: u32) -> Result<usize, usize> {
-        let cap = self.flow(s).cap;
-        self.by_cap.binary_search_by(|&x| {
-            let cx = self.flow(x).cap;
-            cx.partial_cmp(&cap).unwrap_or(Ordering::Equal).then(x.cmp(&s))
-        })
-    }
-
-    /// Remove a departing flow from the slab and every index list in
+    /// Remove an empty aggregate from the slab and every index in
     /// O(path length): stored positions make each removal a `swap_remove`,
-    /// with the displaced flow's position fixed up in place.
-    fn release(&mut self, s: u32) -> FlowState {
-        // Drop from the cap order while the slot still answers for its cap.
-        let pos = self.by_cap_position(s).expect("flow missing from cap order");
-        self.by_cap.remove(pos);
+    /// with the displaced aggregate's position fixed up in place. The
+    /// generation bump invalidates outstanding flow ids; the vanished
+    /// state invalidates outstanding lane-heap entries.
+    fn release_agg(&mut self, s: u32) {
         let state = self.slots[s as usize].state.take().expect("releasing empty slot");
-        // Bump the generation so stale ids stop resolving to this slot.
         self.slots[s as usize].gen = self.slots[s as usize].gen.wrapping_add(1);
         self.free.push(s);
         let p = state.active_pos as usize;
@@ -287,13 +426,13 @@ impl FlowNet {
                 p as u32;
         }
         for (i, &LinkId(l)) in state.path.iter().enumerate() {
-            let lf = &mut self.link_flows[l];
+            let la = &mut self.link_aggs[l];
             let p = state.link_pos[i] as usize;
-            debug_assert_eq!(lf[p], s, "link index out of sync");
-            lf.swap_remove(p);
-            if p < lf.len() {
-                let moved = lf[p];
-                let old_last = lf.len() as u32; // index the moved entry vacated
+            debug_assert_eq!(la[p], s, "link index out of sync");
+            la.swap_remove(p);
+            if p < la.len() {
+                let moved = la[p];
+                let old_last = la.len() as u32; // index the moved entry vacated
                 debug_assert_ne!(moved, s, "path repeats a link");
                 let m = self.slots[moved as usize].state.as_mut().expect("moved slot inactive");
                 for (j, &pl) in m.path.iter().enumerate() {
@@ -304,25 +443,42 @@ impl FlowNet {
                 }
             }
         }
-        state
+        let removed = self.index.remove(&(state.cap_bits, state.key_salt, state.path));
+        debug_assert_eq!(removed, Some(s), "aggregation index out of sync");
     }
 
-    fn flow(&self, s: u32) -> &FlowState {
-        self.slots[s as usize].state.as_ref().expect("inactive slot")
+    /// The completion-timer lane for a path: the one site every link
+    /// belongs to, or the WAN lane if the path crosses domains.
+    fn derive_lane(&self, path: &[LinkId]) -> u32 {
+        let mut site: Option<u32> = None;
+        for &LinkId(l) in path {
+            match self.link_domain[l] {
+                Domain::Wan => return self.num_sites as u32,
+                Domain::Site(s) => {
+                    if site.is_some() && site != Some(s) {
+                        return self.num_sites as u32;
+                    }
+                    site = Some(s);
+                }
+            }
+        }
+        site.unwrap_or(0)
     }
 
     // ---- internal fluid mechanics ------------------------------------
 
-    /// Progress all flows to `now`, accruing per-link byte counters.
+    /// Progress all aggregates to `now`, accruing per-member served bytes
+    /// and per-link byte counters. Identical in both reallocation modes:
+    /// it reads only stored rates, which the modes keep bitwise equal.
     fn advance(&mut self, now: f64) {
         let dt = now - self.last_advance;
         if dt <= 0.0 {
             return;
         }
         for &s in &self.active {
-            let f = self.slots[s as usize].state.as_mut().expect("inactive slot in active list");
-            if f.rate > 0.0 {
-                f.remaining = (f.remaining - f.rate * dt).max(0.0);
+            let a = self.slots[s as usize].state.as_mut().expect("inactive slot in active list");
+            if a.member_rate > 0.0 {
+                a.base += a.member_rate * dt;
             }
         }
         for (l, rate) in self.link_rate.iter().enumerate() {
@@ -333,39 +489,109 @@ impl FlowNet {
         self.last_advance = now;
     }
 
-    /// Max-min fair allocation via progressive water-filling, honoring
-    /// per-flow caps. Dense-array rework of the classic loop: all unfrozen
-    /// flows ride one shared water level, links saturate in rounds and
-    /// freeze exactly the flows in their index lists, and cap freezes walk
-    /// the incrementally-maintained `by_cap` order. Every buffer is
-    /// persistent scratch — zero allocation per call in steady state.
-    /// Cost: O(active + links) setup plus O(rounds × (touched links +
-    /// freezes)); rounds ≤ #distinct freeze levels (saturated links +
-    /// distinct binding caps).
-    fn reallocate(&mut self) {
-        for r in self.link_rate.iter_mut() {
-            *r = 0.0;
-        }
-        if self.active.is_empty() {
-            return;
-        }
+    /// Reallocate rates. Incremental mode starts from the dirty links the
+    /// caller staged in `scratch.seeds`; full mode seeds every link. Both
+    /// then run the same machinery: discover each affected connected
+    /// component (links ↔ aggregates sharing them) and water-fill it in
+    /// isolation. A component untouched by this event re-fills to the
+    /// exact bits it already stores — which is why incremental mode can
+    /// skip it without changing any downstream arithmetic.
+    fn recompute(&mut self) {
+        self.recompute_impl(!self.cfg.incremental);
+    }
 
-        let sc = &mut self.scratch;
-        // Every active flow starts unfrozen, so each link's initial user
-        // count is just its index-list length.
-        sc.touched.clear();
-        for (l, lf) in self.link_flows.iter().enumerate() {
-            if !lf.is_empty() {
-                sc.touched.push(l as u32);
-                sc.users[l] = lf.len() as u32;
-                sc.remaining[l] = self.capacity[l];
-                sc.saturated[l] = false;
+    fn recompute_impl(&mut self, full: bool) {
+        let mut sc = std::mem::take(&mut self.scratch);
+        if full {
+            sc.seeds.clear();
+            sc.seeds.extend(0..self.link_aggs.len() as u32);
+        }
+        sc.stamp += 1;
+        let stamp = sc.stamp;
+        if sc.agg_mark.len() < self.slots.len() {
+            sc.agg_mark.resize(self.slots.len(), 0);
+        }
+        if sc.frozen.len() < self.slots.len() {
+            sc.frozen.resize(self.slots.len(), false);
+        }
+        let mut si = 0;
+        while si < sc.seeds.len() {
+            let seed = sc.seeds[si];
+            si += 1;
+            if sc.link_mark[seed as usize] == stamp {
+                continue;
+            }
+            sc.link_mark[seed as usize] = stamp;
+            sc.comp_links.clear();
+            sc.comp_aggs.clear();
+            sc.queue.clear();
+            sc.queue.push(seed);
+            while let Some(l) = sc.queue.pop() {
+                sc.comp_links.push(l);
+                for &s in &self.link_aggs[l as usize] {
+                    if sc.agg_mark[s as usize] == stamp {
+                        continue;
+                    }
+                    sc.agg_mark[s as usize] = stamp;
+                    sc.comp_aggs.push(s);
+                    for &LinkId(pl) in &self.agg(s).path {
+                        if sc.link_mark[pl] != stamp {
+                            sc.link_mark[pl] = stamp;
+                            sc.queue.push(pl as u32);
+                        }
+                    }
+                }
+            }
+            self.fill_component(&mut sc);
+        }
+        sc.seeds.clear();
+        self.scratch = sc;
+    }
+
+    /// Mark an aggregate frozen at `level`, retiring its weight from its
+    /// path links. Flags it for a deadline refresh iff the rate actually
+    /// moved (bitwise) — the discipline that keeps both reallocation
+    /// modes' deadline bits identical.
+    fn freeze_agg(&mut self, sc: &mut Scratch, s: u32, level: f64) {
+        let a = self.slots[s as usize].state.as_mut().expect("freezing empty slot");
+        if a.member_rate.to_bits() != level.to_bits() && !a.needs_refresh {
+            a.needs_refresh = true;
+            sc.refresh.push(s);
+        }
+        a.member_rate = level;
+        let w = a.weight;
+        for &LinkId(l) in &a.path {
+            sc.users[l] -= w;
+        }
+        sc.frozen[s as usize] = true;
+    }
+
+    /// Water-fill one connected component (`sc.comp_links` /
+    /// `sc.comp_aggs`) in a canonical order. The result depends *only* on
+    /// the component's membership, weights, caps, and link capacities —
+    /// not on discovery order, seed order, or anything outside the
+    /// component: links enter `inc` through an order-free `min`, per-link
+    /// updates commute within a round, cap freezes walk a `(cap_bits,
+    /// slot)` sort, and link freezes commute (saturation reads only
+    /// `remaining`, which freezes never touch). That invariance is what
+    /// makes re-filling a clean component reproduce its stored bits.
+    fn fill_component(&mut self, sc: &mut Scratch) {
+        sc.comp_links.sort_unstable();
+        sc.comp_aggs.sort_unstable_by_key(|&s| (self.agg(s).cap_bits, s));
+        for &l in &sc.comp_links {
+            let l = l as usize;
+            sc.remaining[l] = self.capacity[l];
+            sc.users[l] = 0;
+            sc.saturated[l] = false;
+        }
+        for &s in &sc.comp_aggs {
+            sc.frozen[s as usize] = false;
+            let a = self.agg(s);
+            debug_assert!(a.weight > 0, "zero-weight aggregate in fill");
+            for &LinkId(l) in &a.path {
+                sc.users[l] += a.weight;
             }
         }
-        for &s in &self.active {
-            sc.frozen[s as usize] = false;
-        }
-        debug_assert_eq!(self.by_cap.len(), self.active.len(), "cap order out of sync");
 
         // Relative epsilons: with capacities ~1e8 B/s, one ulp of water-
         // filling residue (~1e-8) must count as "saturated", or the loop
@@ -373,36 +599,38 @@ impl FlowNet {
         let link_eps = |cap: f64| cap * 1e-9 + 1e-9;
         let cap_eps = |cap: f64| if cap.is_finite() { cap * 1e-9 + 1e-9 } else { 0.0 };
 
-        // The shared rate of every still-unfrozen flow (all receive the
-        // same uniform increments, so one scalar tracks them all).
+        // The shared per-member rate of every still-unfrozen aggregate
+        // (uniform increments, so one scalar tracks them all).
         let mut level = 0.0f64;
-        let mut unfrozen = self.active.len();
+        let mut unfrozen = sc.comp_aggs.len();
         let mut cap_ptr = 0usize;
-        let max_iters = self.active.len() + sc.touched.len() + 8;
+        let max_iters = sc.comp_aggs.len() + sc.comp_links.len() + 8;
         let mut iters = 0usize;
         while unfrozen > 0 {
             iters += 1;
-            // Smallest feasible uniform increment across unfrozen flows.
+            // Smallest feasible uniform increment across the component.
             let mut inc = f64::INFINITY;
-            for &l in &sc.touched {
+            for &l in &sc.comp_links {
                 let l = l as usize;
                 if sc.users[l] > 0 {
                     inc = inc.min(sc.remaining[l].max(0.0) / sc.users[l] as f64);
                 }
             }
-            while cap_ptr < self.by_cap.len() && sc.frozen[self.by_cap[cap_ptr] as usize] {
+            while cap_ptr < sc.comp_aggs.len() && sc.frozen[sc.comp_aggs[cap_ptr] as usize] {
                 cap_ptr += 1;
             }
-            if cap_ptr < self.by_cap.len() {
-                let cap = self.slots[self.by_cap[cap_ptr] as usize].state.as_ref().unwrap().cap;
-                inc = inc.min(cap - level);
+            if cap_ptr < sc.comp_aggs.len() {
+                let cap = self.agg(sc.comp_aggs[cap_ptr]).cap;
+                if cap.is_finite() {
+                    inc = inc.min(cap - level);
+                }
             }
             if !inc.is_finite() {
                 break; // all paths uncapacitated? cannot happen with real links
             }
             let inc = inc.max(0.0);
             level += inc;
-            for &l in &sc.touched {
+            for &l in &sc.comp_links {
                 let l = l as usize;
                 if sc.users[l] > 0 {
                     sc.remaining[l] -= inc * sc.users[l] as f64;
@@ -410,19 +638,15 @@ impl FlowNet {
             }
             let mut froze_any = false;
             // (a) Cap freezes: the sorted prefix whose cap the level reached.
-            while cap_ptr < self.by_cap.len() {
-                let s = self.by_cap[cap_ptr] as usize;
-                if sc.frozen[s] {
+            while cap_ptr < sc.comp_aggs.len() {
+                let s = sc.comp_aggs[cap_ptr];
+                if sc.frozen[s as usize] {
                     cap_ptr += 1;
                     continue;
                 }
-                let f = self.slots[s].state.as_mut().unwrap();
-                if f.cap.is_finite() && level >= f.cap - cap_eps(f.cap) {
-                    f.rate = level;
-                    for &LinkId(l) in &f.path {
-                        sc.users[l] -= 1;
-                    }
-                    sc.frozen[s] = true;
+                let cap = self.agg(s).cap;
+                if cap.is_finite() && level >= cap - cap_eps(cap) {
+                    self.freeze_agg(sc, s, level);
                     froze_any = true;
                     unfrozen -= 1;
                     cap_ptr += 1;
@@ -431,24 +655,19 @@ impl FlowNet {
                 }
             }
             // (b) Link freezes: newly saturated links freeze every unfrozen
-            // flow in their index lists.
-            for &l in &sc.touched {
-                let l = l as usize;
+            // aggregate in their index lists.
+            for li in 0..sc.comp_links.len() {
+                let l = sc.comp_links[li] as usize;
                 if sc.saturated[l] || sc.remaining[l] > link_eps(self.capacity[l]) {
                     continue;
                 }
                 sc.saturated[l] = true;
-                for &s in &self.link_flows[l] {
-                    let s = s as usize;
-                    if sc.frozen[s] {
+                for ai in 0..self.link_aggs[l].len() {
+                    let s = self.link_aggs[l][ai];
+                    if sc.frozen[s as usize] {
                         continue;
                     }
-                    let f = self.slots[s].state.as_mut().unwrap();
-                    f.rate = level;
-                    for &LinkId(pl) in &f.path {
-                        sc.users[pl] -= 1;
-                    }
-                    sc.frozen[s] = true;
+                    self.freeze_agg(sc, s, level);
                     froze_any = true;
                     unfrozen -= 1;
                 }
@@ -462,40 +681,464 @@ impl FlowNet {
             }
         }
         if unfrozen > 0 {
-            for &s in &self.active {
+            for i in 0..sc.comp_aggs.len() {
+                let s = sc.comp_aggs[i];
                 if !sc.frozen[s as usize] {
-                    self.slots[s as usize].state.as_mut().unwrap().rate = level;
+                    let a = self.slots[s as usize].state.as_mut().unwrap();
+                    if a.member_rate.to_bits() != level.to_bits() && !a.needs_refresh {
+                        a.needs_refresh = true;
+                        sc.refresh.push(s);
+                    }
+                    a.member_rate = level;
                 }
             }
         }
 
-        for &s in &self.active {
-            let f = self.slots[s as usize].state.as_ref().unwrap();
-            for &LinkId(l) in &f.path {
-                self.link_rate[l] += f.rate;
+        // Re-derive the component's link-rate ledger. Index-list order is
+        // a function of the insert/release history, which both
+        // reallocation modes share — so a clean link's recomputed sum is
+        // bitwise the value it already stores.
+        for &l in &sc.comp_links {
+            let l = l as usize;
+            let mut sum = 0.0;
+            for &s in &self.link_aggs[l] {
+                let a = self.agg(s);
+                sum += a.weight as f64 * a.member_rate;
             }
+            self.link_rate[l] = sum;
         }
-        #[cfg(debug_assertions)]
-        self.audit();
     }
 
-    /// Structural self-audit of the slab, index lists, and allocation,
-    /// compiled only under `debug_assertions` and run after every
-    /// `reallocate`. O(active × path + links) — debug/test workloads
-    /// tolerate it; release builds pay nothing.
+    // ---- deadlines & timer lanes -------------------------------------
+
+    /// Recompute the deadline of every aggregate flagged this event and
+    /// push fresh lane-heap entries. Called after `recompute` at every
+    /// mutation point; the flag set (rate bits changed ∪ membership
+    /// changed) is identical in both reallocation modes, so deadlines are
+    /// recomputed at identical `(now, base)` pairs and stay bitwise equal.
+    fn flush_refresh(&mut self) {
+        let now = self.last_advance;
+        let mut list = std::mem::take(&mut self.scratch.refresh);
+        for &s in &list {
+            let Some(a) = self.slots[s as usize].state.as_mut() else {
+                continue; // released later in the same event
+            };
+            if !a.needs_refresh {
+                continue; // slot reused within the event; not this flag
+            }
+            a.needs_refresh = false;
+            self.deadline_seq += 1;
+            a.seq = self.deadline_seq;
+            a.deadline = match a.members.peek() {
+                Some(Reverse(m)) if a.member_rate > 0.0 => {
+                    now + (f64::from_bits(m.target_bits) - a.base).max(0.0) / a.member_rate
+                }
+                _ => f64::INFINITY,
+            };
+            if a.deadline.is_finite() {
+                let entry = (a.deadline.to_bits(), a.birth, s, a.seq);
+                let lane = a.lane as usize;
+                self.lane_heaps[lane].push(Reverse(entry));
+            }
+        }
+        list.clear();
+        self.scratch.refresh = list;
+    }
+
+    /// The lane's earliest valid deadline, popping stale entries (seq
+    /// mismatch or released aggregate) as they surface.
+    fn lane_min(&mut self, lane: usize) -> Option<f64> {
+        loop {
+            let Reverse((dl, _, s, seq)) = *self.lane_heaps[lane].peek()?;
+            let valid =
+                self.slots[s as usize].state.as_ref().map_or(false, |a| a.seq == seq);
+            if valid {
+                return Some(f64::from_bits(dl));
+            }
+            self.lane_heaps[lane].pop();
+        }
+    }
+
+    /// Re-arm every lane at its current earliest deadline. [`TimerBank`]
+    /// makes a same-deadline re-arm a no-op, so this is cheap and — more
+    /// importantly — leaves event sequence numbers untouched for lanes an
+    /// event didn't move.
+    fn rearm_all(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) {
+        let mut n = net.borrow_mut();
+        for lane in 0..n.lane_heaps.len() {
+            match n.lane_min(lane) {
+                Some(at) => {
+                    let net2 = net.clone();
+                    n.timers.arm(eng, lane, at, move |e| Self::on_timer(&net2, e, lane));
+                }
+                None => n.timers.disarm(eng, lane),
+            }
+        }
+    }
+
+    // ---- public operations (handle-based: callbacks need the net) -----
+
+    /// Start a transfer of `bytes` along `path` with transport cap
+    /// `cap_bps` (bytes/s; `f64::INFINITY` for uncapped). `done` fires on
+    /// the engine when the last byte arrives. Zero-byte flows complete
+    /// immediately and return [`FlowId::COMPLETED`]. The flow's domain
+    /// (timer lane) is derived from the path's links; callers that
+    /// already hold a [`Route`] should use [`FlowNet::start_route`].
+    pub fn start<F: FnOnce(&mut Engine) + 'static>(
+        net: &Rc<RefCell<FlowNet>>,
+        eng: &mut Engine,
+        path: Vec<LinkId>,
+        bytes: f64,
+        cap_bps: f64,
+        done: F,
+    ) -> FlowId {
+        Self::start_inner(net, eng, path, bytes, cap_bps, Box::new(done), None)
+    }
+
+    /// [`FlowNet::start`] for callers holding a domain-annotated
+    /// [`Route`] (from [`Topology::route`] and friends) — skips the
+    /// per-link domain derivation.
+    pub fn start_route<F: FnOnce(&mut Engine) + 'static>(
+        net: &Rc<RefCell<FlowNet>>,
+        eng: &mut Engine,
+        route: Route,
+        bytes: f64,
+        cap_bps: f64,
+        done: F,
+    ) -> FlowId {
+        let lane = {
+            let n = net.borrow();
+            let lane = route.domain.lane(n.num_sites) as u32;
+            debug_assert_eq!(lane, n.derive_lane(&route.path), "route domain mismatch");
+            lane
+        };
+        Self::start_inner(net, eng, route.path, bytes, cap_bps, Box::new(done), Some(lane))
+    }
+
+    fn start_inner(
+        net: &Rc<RefCell<FlowNet>>,
+        eng: &mut Engine,
+        path: Vec<LinkId>,
+        bytes: f64,
+        cap_bps: f64,
+        done: Callback,
+        lane: Option<u32>,
+    ) -> FlowId {
+        assert!(bytes >= 0.0 && cap_bps > 0.0);
+        if bytes <= 0.0 {
+            eng.schedule_in(0.0, done);
+            return FlowId::COMPLETED;
+        }
+        assert!(!path.is_empty(), "flow with empty path");
+        let id = {
+            let mut n = net.borrow_mut();
+            n.advance(eng.now());
+            let id = n.admit(path, bytes, cap_bps, done, lane);
+            n.recompute();
+            n.flush_refresh();
+            #[cfg(debug_assertions)]
+            n.audit();
+            id
+        };
+        Self::rearm_all(net, eng);
+        id
+    }
+
+    /// Join an existing aggregate or found a new one; stages the touched
+    /// path as recompute seeds and flags the aggregate for a deadline
+    /// refresh (membership changed).
+    fn admit(
+        &mut self,
+        path: Vec<LinkId>,
+        bytes: f64,
+        cap: f64,
+        done: Callback,
+        lane: Option<u32>,
+    ) -> FlowId {
+        let birth = self.next_birth;
+        self.next_birth += 1;
+        let cap_bits = cap.to_bits();
+        let salt = if self.cfg.aggregate { 0 } else { birth };
+        self.active_members += 1;
+        self.peak_active = self.peak_active.max(self.active_members);
+        let key = (cap_bits, salt, path);
+        if let Some(&s) = self.index.get(&key) {
+            let a = self.slots[s as usize].state.as_mut().expect("indexed slot inactive");
+            let target = a.base + bytes;
+            a.members.push(Reverse(Member {
+                target_bits: target.to_bits(),
+                birth,
+                bytes,
+                done: Some(done),
+            }));
+            a.weight += 1;
+            if !a.needs_refresh {
+                a.needs_refresh = true;
+                self.scratch.refresh.push(s);
+            }
+            self.scratch.seeds.clear();
+            for &LinkId(l) in &key.2 {
+                self.scratch.seeds.push(l as u32);
+            }
+            FlowId::new(s, self.slots[s as usize].gen)
+        } else {
+            let (_, _, path) = key;
+            let lane = lane.unwrap_or_else(|| self.derive_lane(&path));
+            let mut members = BinaryHeap::new();
+            members.push(Reverse(Member {
+                target_bits: bytes.to_bits(),
+                birth,
+                bytes,
+                done: Some(done),
+            }));
+            let state = AggState {
+                path: path.clone(),
+                cap,
+                cap_bits,
+                key_salt: salt,
+                weight: 1,
+                member_rate: 0.0,
+                base: 0.0,
+                birth,
+                lane,
+                deadline: f64::INFINITY,
+                seq: 0,
+                needs_refresh: true,
+                members,
+                active_pos: 0, // assigned by insert_agg
+                link_pos: Vec::new(),
+            };
+            let s = self.insert_agg(state);
+            self.index.insert((cap_bits, salt, path), s);
+            self.scratch.refresh.push(s);
+            self.scratch.seeds.clear();
+            for &LinkId(l) in &self.slots[s as usize].state.as_ref().unwrap().path {
+                self.scratch.seeds.push(l as u32);
+            }
+            FlowId::new(s, self.slots[s as usize].gen)
+        }
+    }
+
+    /// Change a link's capacity at runtime (network provisioning §2.1) and
+    /// reallocate.
+    pub fn set_capacity(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine, l: LinkId, capacity: f64) {
+        Self::set_capacities(net, eng, &[(l, capacity)]);
+    }
+
+    /// Retune several links in one shot — a lightpath grant or teardown
+    /// moves a whole directed wave pair (and a flap restore moves every
+    /// wave link) — paying a single `advance` + reallocation + timer
+    /// re-arm for the batch instead of one per link. The changed links
+    /// are exactly the recompute seeds, so only their components re-fill.
+    pub fn set_capacities(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine, changes: &[(LinkId, f64)]) {
+        if changes.is_empty() {
+            return;
+        }
+        {
+            let mut n = net.borrow_mut();
+            n.advance(eng.now());
+            n.scratch.seeds.clear();
+            for &(LinkId(l), capacity) in changes {
+                assert!(capacity > 0.0);
+                n.capacity[l] = capacity;
+                n.scratch.seeds.push(l as u32);
+            }
+            n.recompute();
+            n.flush_refresh();
+            #[cfg(debug_assertions)]
+            n.audit();
+        }
+        Self::rearm_all(net, eng);
+    }
+
+    /// Pop every member of aggregate `s` whose target the served-bytes
+    /// axis has reached, within an epsilon relative to the member rate
+    /// (1 ns of transfer) — pure absolute epsilons leave residues whose
+    /// completion dt falls below the clock's ulp and the event loop stops
+    /// advancing time. Returns whether membership changed.
+    fn drain_completed(&mut self, s: u32, out: &mut Vec<(u64, Callback)>) -> bool {
+        let a = self.slots[s as usize].state.as_mut().expect("draining empty slot");
+        let mut any = false;
+        loop {
+            let due = match a.members.peek() {
+                Some(Reverse(m)) => {
+                    f64::from_bits(m.target_bits) - a.base <= 1e-6 + a.member_rate * 1e-9
+                }
+                None => false,
+            };
+            if !due {
+                break;
+            }
+            let Reverse(mut m) = a.members.pop().expect("peeked member vanished");
+            // Byte conservation: a completing member has been served its
+            // birth bytes up to fp dust (the forced-progress path can
+            // carry slightly more residue than the epsilon test).
+            debug_assert!(
+                f64::from_bits(m.target_bits) - a.base <= 1e-3 + m.bytes * 1e-6,
+                "completion leaks bytes: {} of {} undelivered",
+                f64::from_bits(m.target_bits) - a.base,
+                m.bytes
+            );
+            a.weight -= 1;
+            any = true;
+            self.completions += 1;
+            self.active_members -= 1;
+            if let Some(cb) = m.done.take() {
+                out.push((m.birth, cb));
+            }
+        }
+        if any && !a.needs_refresh {
+            a.needs_refresh = true;
+            self.scratch.refresh.push(s);
+        }
+        any
+    }
+
+    /// Forced progress: the lane timer fired for this aggregate but fp
+    /// dust kept its head member outside the epsilon — complete it anyway
+    /// (mirrors the old global core's nearest-flow forcing).
+    fn force_head(&mut self, s: u32, out: &mut Vec<(u64, Callback)>) {
+        let a = self.slots[s as usize].state.as_mut().expect("forcing empty slot");
+        let Reverse(mut m) = a.members.pop().expect("forcing memberless aggregate");
+        debug_assert!(
+            f64::from_bits(m.target_bits) - a.base <= 1e-3 + m.bytes * 1e-6,
+            "forced completion leaks bytes: {} of {} undelivered",
+            f64::from_bits(m.target_bits) - a.base,
+            m.bytes
+        );
+        a.weight -= 1;
+        self.completions += 1;
+        self.active_members -= 1;
+        if let Some(cb) = m.done.take() {
+            out.push((m.birth, cb));
+        }
+        if !a.needs_refresh {
+            a.needs_refresh = true;
+            self.scratch.refresh.push(s);
+        }
+    }
+
+    /// A domain lane's completion timer fired: drain due aggregates,
+    /// release empties, reallocate from the touched paths, refresh moved
+    /// deadlines, re-arm, and only then run completion callbacks (birth
+    /// order) outside the borrow.
+    fn on_timer(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine, lane: usize) {
+        let mut finished: Vec<(u64, Callback)> = Vec::new();
+        {
+            let mut n = net.borrow_mut();
+            let n = &mut *n; // plain &mut: field-disjoint borrows below
+            n.timers.fired(lane);
+            let now = eng.now();
+            n.advance(now);
+            // Pop every valid entry that is due. Each live aggregate has
+            // at most one valid entry (every push bumps `seq`), so this
+            // visits each due aggregate once, in deterministic
+            // (deadline, birth, slot) order.
+            let mut touched: Vec<u32> = Vec::new();
+            let mut first_due: Option<u32> = None;
+            loop {
+                let Some(&Reverse((dl, _, s, seq))) = n.lane_heaps[lane].peek() else {
+                    break;
+                };
+                let valid =
+                    n.slots[s as usize].state.as_ref().map_or(false, |a| a.seq == seq);
+                if !valid {
+                    n.lane_heaps[lane].pop();
+                    continue;
+                }
+                if f64::from_bits(dl) > now {
+                    break;
+                }
+                n.lane_heaps[lane].pop();
+                if first_due.is_none() {
+                    first_due = Some(s);
+                }
+                if n.drain_completed(s, &mut finished) {
+                    touched.push(s);
+                }
+                // A due aggregate whose head stayed put (fp dust) had its
+                // entry consumed; `drain_completed` / the refresh flag
+                // re-issues one at a recomputed deadline.
+                else {
+                    let a = n.slots[s as usize].state.as_mut().expect("due slot inactive");
+                    if !a.needs_refresh {
+                        a.needs_refresh = true;
+                        n.scratch.refresh.push(s);
+                    }
+                }
+            }
+            if finished.is_empty() {
+                if let Some(s) = first_due {
+                    n.force_head(s, &mut finished);
+                    touched.push(s);
+                }
+            }
+            // Deterministic callback order: member birth (insertion)
+            // order, immune to slab slot recycling.
+            finished.sort_unstable_by_key(|&(b, _)| b);
+            // Seeds: the paths of every aggregate whose weight changed —
+            // collected before releases tear the paths down.
+            n.scratch.seeds.clear();
+            for &s in &touched {
+                let a = n.slots[s as usize].state.as_ref().expect("touched slot inactive");
+                for &LinkId(l) in &a.path {
+                    n.scratch.seeds.push(l as u32);
+                }
+            }
+            for &s in &touched {
+                if n.agg(s).weight == 0 {
+                    n.release_agg(s);
+                }
+            }
+            n.recompute();
+            n.flush_refresh();
+            #[cfg(debug_assertions)]
+            n.audit();
+        }
+        Self::rearm_all(net, eng);
+        // Run callbacks without holding the borrow; they may start flows.
+        for (_, cb) in finished {
+            cb(eng);
+        }
+    }
+
+    /// Self-audit, compiled only under `debug_assertions` and run after
+    /// every mutation point: structural invariants of the slab, index
+    /// lists, and aggregation index, feasibility of the allocation, and —
+    /// the incremental-mode proof obligation — a full from-scratch
+    /// recompute over every component, asserting it reproduces the stored
+    /// rates *bitwise*. Release builds pay nothing.
     #[cfg(debug_assertions)]
-    fn audit(&self) {
-        assert_eq!(self.by_cap.len(), self.active.len(), "cap order length mismatch");
-        for w in self.by_cap.windows(2) {
-            let (a, b) = (w[0], w[1]);
-            // Strict lexicographic (cap, slot) order; keys are unique.
-            assert!(
-                (self.flow(a).cap, a) < (self.flow(b).cap, b),
-                "by_cap order violated at slots {a},{b}"
+    fn audit(&mut self) {
+        assert!(self.scratch.refresh.is_empty(), "unflushed deadline refreshes");
+        let mut members = 0usize;
+        for (p, &s) in self.active.iter().enumerate() {
+            let a = self.agg(s); // panics if the slot lost its state
+            assert_eq!(a.active_pos as usize, p, "active index out of sync at {p}");
+            assert!(a.weight > 0, "empty aggregate survived completion");
+            assert_eq!(a.weight as usize, a.members.len(), "weight/member mismatch");
+            members += a.weight as usize;
+            assert!(a.member_rate >= 0.0 && a.member_rate.is_finite(), "bad rate on slot {s}");
+            assert!(a.member_rate <= a.cap + a.cap * 1e-6 + 1e-6, "rate above cap on slot {s}");
+            assert!(a.base >= 0.0, "negative served bytes on slot {s}");
+            assert_eq!(a.path.len(), a.link_pos.len(), "path/link_pos length mismatch");
+            for (&LinkId(l), &lp) in a.path.iter().zip(&a.link_pos) {
+                assert_eq!(
+                    self.link_aggs[l].get(lp as usize),
+                    Some(&s),
+                    "slot {s} missing from link {l} index list"
+                );
+            }
+            assert_eq!(
+                self.index.get(&(a.cap_bits, a.key_salt, a.path.clone())),
+                Some(&s),
+                "slot {s} missing from aggregation index"
             );
         }
-        for (l, lf) in self.link_flows.iter().enumerate() {
-            let sum: f64 = lf.iter().map(|&s| self.flow(s).rate).sum();
+        assert_eq!(members, self.active_members, "member count out of sync");
+        assert_eq!(self.index.len(), self.active.len(), "index/active length mismatch");
+        for (l, la) in self.link_aggs.iter().enumerate() {
+            let sum: f64 = la.iter().map(|&s| self.agg(s).weight as f64 * self.agg(s).member_rate).sum();
             let eps = self.capacity[l] * 1e-6 + 1e-6;
             assert!(
                 sum <= self.capacity[l] + eps,
@@ -507,201 +1150,44 @@ impl FlowNet {
                 "link {l} rate ledger drift: recomputed {sum}, ledger {}",
                 self.link_rate[l]
             );
-            for (p, &s) in lf.iter().enumerate() {
-                let f = self.flow(s);
-                let cross = f
+            for (p, &s) in la.iter().enumerate() {
+                let a = self.agg(s);
+                let cross = a
                     .path
                     .iter()
-                    .zip(&f.link_pos)
+                    .zip(&a.link_pos)
                     .any(|(&pl, &lp)| pl == LinkId(l) && lp as usize == p);
                 assert!(cross, "link {l} entry {p} (slot {s}) lacks a back-reference");
             }
         }
-        for (p, &s) in self.active.iter().enumerate() {
-            let f = self.flow(s); // panics if the slot lost its state
-            assert_eq!(f.active_pos as usize, p, "active index out of sync at {p}");
-            assert!(f.remaining >= 0.0, "negative residual bytes on slot {s}");
-            assert!(f.rate >= 0.0 && f.rate.is_finite(), "bad rate on slot {s}");
-            assert_eq!(f.path.len(), f.link_pos.len(), "path/link_pos length mismatch");
-            for (&LinkId(l), &lp) in f.path.iter().zip(&f.link_pos) {
-                assert_eq!(
-                    self.link_flows[l].get(lp as usize),
-                    Some(&s),
-                    "slot {s} missing from link {l} index list"
-                );
-            }
+        // Incremental == full, bitwise: re-running the water-filling from
+        // scratch over *every* component must reproduce the stored rates
+        // exactly — if incremental maintenance left any component stale,
+        // either a rate snapshot differs or the re-fill flags a deadline
+        // refresh. (A clean re-fill flags nothing, so this probe is
+        // side-effect-free.)
+        let rates: Vec<(u32, u64)> =
+            self.active.iter().map(|&s| (s, self.agg(s).member_rate.to_bits())).collect();
+        let link_rates: Vec<u64> = self.link_rate.iter().map(|r| r.to_bits()).collect();
+        self.recompute_impl(true);
+        assert!(
+            self.scratch.refresh.is_empty(),
+            "full recompute moved rates the incremental pass left stale"
+        );
+        for &(s, bits) in &rates {
+            assert_eq!(
+                self.agg(s).member_rate.to_bits(),
+                bits,
+                "slot {s}: incremental rate diverges from full recompute"
+            );
         }
-    }
-
-    fn next_completion(&self) -> Option<f64> {
-        let mut best: Option<f64> = None;
-        for &s in &self.active {
-            let f = self.flow(s);
-            if f.rate > 0.0 {
-                let t = f.remaining / f.rate;
-                best = Some(match best {
-                    Some(b) => b.min(t),
-                    None => t,
-                });
-            }
+        for (l, &bits) in link_rates.iter().enumerate() {
+            assert_eq!(
+                self.link_rate[l].to_bits(),
+                bits,
+                "link {l}: incremental ledger diverges from full recompute"
+            );
         }
-        best
-    }
-
-    // ---- public operations (handle-based: callbacks need the net) -----
-
-    /// Start a transfer of `bytes` along `path` with transport cap
-    /// `cap_bps` (bytes/s; `f64::INFINITY` for uncapped). `done` fires on
-    /// the engine when the last byte arrives. Zero-byte flows complete
-    /// immediately and return [`FlowId::COMPLETED`].
-    pub fn start<F: FnOnce(&mut Engine) + 'static>(
-        net: &Rc<RefCell<FlowNet>>,
-        eng: &mut Engine,
-        path: Vec<LinkId>,
-        bytes: f64,
-        cap_bps: f64,
-        done: F,
-    ) -> FlowId {
-        assert!(bytes >= 0.0 && cap_bps > 0.0);
-        if bytes <= 0.0 {
-            eng.schedule_in(0.0, done);
-            return FlowId::COMPLETED;
-        }
-        assert!(!path.is_empty(), "flow with empty path");
-        let id = {
-            let mut n = net.borrow_mut();
-            n.advance(eng.now());
-            let birth = n.next_birth;
-            n.next_birth += 1;
-            let id = n.insert(FlowState {
-                path,
-                remaining: bytes,
-                rate: 0.0,
-                cap: cap_bps,
-                birth_bytes: bytes,
-                birth,
-                active_pos: 0,    // assigned by insert
-                link_pos: Vec::new(),
-                done: Some(Box::new(done)),
-            });
-            n.reallocate();
-            id
-        };
-        Self::reschedule(net, eng);
-        id
-    }
-
-    /// Change a link's capacity at runtime (network provisioning §2.1) and
-    /// reallocate.
-    pub fn set_capacity(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine, l: LinkId, capacity: f64) {
-        Self::set_capacities(net, eng, &[(l, capacity)]);
-    }
-
-    /// Retune several links in one shot — a lightpath grant or teardown
-    /// moves a whole directed wave pair (and a flap restore moves every
-    /// wave link) — paying a single `advance` + water-filling pass +
-    /// completion-timer re-arm for the batch instead of one per link.
-    pub fn set_capacities(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine, changes: &[(LinkId, f64)]) {
-        if changes.is_empty() {
-            return;
-        }
-        {
-            let mut n = net.borrow_mut();
-            n.advance(eng.now());
-            for &(l, capacity) in changes {
-                assert!(capacity > 0.0);
-                n.capacity[l.0] = capacity;
-            }
-            n.reallocate();
-        }
-        Self::reschedule(net, eng);
-    }
-
-    /// (Re)arm the single completion timer: cancel the outstanding one and
-    /// schedule at the new earliest completion. The engine frees the old
-    /// callback immediately, so the heap carries at most one completion
-    /// event (plus transient markers) per network regardless of churn.
-    fn reschedule(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) {
-        let (old, dt) = {
-            let mut n = net.borrow_mut();
-            (n.timer.take(), n.next_completion())
-        };
-        if let Some(t) = old {
-            eng.cancel(t);
-        }
-        let Some(dt) = dt else { return };
-        let net2 = net.clone();
-        let id = eng.schedule_in(dt.max(0.0), move |eng| {
-            Self::on_completion(&net2, eng);
-        });
-        net.borrow_mut().timer = Some(id);
-    }
-
-    fn on_completion(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) {
-        let callbacks = {
-            let mut n = net.borrow_mut();
-            n.timer = None; // this event *is* the timer; it just fired
-            n.advance(eng.now());
-            // A flow is done when within an epsilon that is relative to
-            // its rate (1 ns of transfer) — pure absolute epsilons leave
-            // residues whose completion dt falls below the clock's ulp
-            // and the event loop stops advancing time.
-            let mut finished: Vec<u32> = Vec::new();
-            for &s in &n.active {
-                let f = n.flow(s);
-                if f.remaining <= 1e-6 + f.rate * 1e-9 {
-                    finished.push(s);
-                }
-            }
-            if finished.is_empty() {
-                // This event fired because a completion was due; force
-                // progress by completing the nearest flow (fp dust).
-                let mut best: Option<(f64, u64, u32)> = None;
-                for &s in &n.active {
-                    let f = n.flow(s);
-                    if f.rate > 0.0 {
-                        let t = f.remaining / f.rate;
-                        let better = match best {
-                            None => true,
-                            Some((bt, bb, _)) => t < bt || (t == bt && f.birth < bb),
-                        };
-                        if better {
-                            best = Some((t, f.birth, s));
-                        }
-                    }
-                }
-                if let Some((_, _, s)) = best {
-                    finished.push(s);
-                }
-            }
-            // Deterministic callback order: flow birth (insertion) order,
-            // immune to slab slot recycling.
-            finished.sort_unstable_by_key(|&s| n.flow(s).birth);
-            let mut cbs = Vec::with_capacity(finished.len());
-            for s in finished {
-                let mut f = n.release(s);
-                // Byte conservation: a completing flow has delivered its
-                // birth bytes up to fp dust (the forced-progress path above
-                // can carry slightly more residue than the epsilon test).
-                debug_assert!(
-                    f.remaining <= 1e-3 + f.birth_bytes * 1e-6,
-                    "completion leaks bytes: {} of {} undelivered",
-                    f.remaining,
-                    f.birth_bytes
-                );
-                n.completions += 1;
-                if let Some(cb) = f.done.take() {
-                    cbs.push(cb);
-                }
-            }
-            n.reallocate();
-            cbs
-        };
-        // Run callbacks without holding the borrow; they may start flows.
-        for cb in callbacks {
-            cb(eng);
-        }
-        Self::reschedule(net, eng);
     }
 }
 
@@ -767,7 +1253,8 @@ mod tests {
         let done = Rc::new(RefCell::new(Vec::new()));
         // Flow 1: 250 B, flow 2: 750 B, same NIC. Phase 1: both at 50 B/s
         // until t=5 (flow1 done). Phase 2: flow2 at 100 B/s for its
-        // remaining 500 B → done at t=10.
+        // remaining 500 B → done at t=10. (Same path and cap, so the two
+        // flows ride one aggregate with member targets 250 and 750.)
         for bytes in [250.0, 750.0] {
             let done = done.clone();
             let path = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
@@ -775,6 +1262,7 @@ mod tests {
                 done.borrow_mut().push(e.now());
             });
         }
+        assert_eq!(net.borrow().aggregates(), 1);
         eng.run();
         let d = done.borrow();
         assert!((d[0] - 5.0).abs() < 1e-6, "{d:?}");
@@ -808,12 +1296,14 @@ mod tests {
         let done = Rc::new(RefCell::new(Vec::new()));
         let path = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
         // Capped flow takes 20 B/s; uncapped flow gets the remaining 80.
+        // Distinct caps keep them in distinct aggregates.
         for (bytes, cap) in [(200.0, 20.0), (800.0, f64::INFINITY)] {
             let done = done.clone();
             FlowNet::start(&net, &mut eng, path.clone(), bytes, cap, move |e| {
                 done.borrow_mut().push(e.now());
             });
         }
+        assert_eq!(net.borrow().aggregates(), 2);
         eng.run();
         let d = done.borrow();
         assert!((d[0] - 10.0).abs() < 1e-6 && (d[1] - 10.0).abs() < 1e-6, "{d:?}");
@@ -880,7 +1370,7 @@ mod tests {
         let mut eng = Engine::new();
         let path = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
         let a = FlowNet::start(&net, &mut eng, path.clone(), 100.0, f64::INFINITY, |_| {});
-        eng.run(); // flow a completes; its slab slot is recycled
+        eng.run(); // flow a completes; its aggregate's slab slot is recycled
         assert_eq!(net.borrow().active(), 0);
         let b = FlowNet::start(&net, &mut eng, path, 1000.0, f64::INFINITY, |_| {});
         // b reuses a's slot under a new generation: a's id must read 0
@@ -961,6 +1451,98 @@ mod tests {
     }
 
     #[test]
+    fn same_path_flows_collapse_into_one_aggregate() {
+        let t = two_site_topo();
+        let net = FlowNet::new(&t);
+        let mut eng = Engine::new();
+        let done = Rc::new(RefCell::new(Vec::new()));
+        // Eight flows over one path: one aggregate of weight 8 on a
+        // 100 B/s NIC. The NIC stays saturated until the last byte, so
+        // the k-th completion lands where the cumulative byte count says:
+        // first member (100 B at 100/8 B/s) at t=8, last at 3600/100=36.
+        let path = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
+        for k in 0..8 {
+            let done = done.clone();
+            FlowNet::start(&net, &mut eng, path.clone(), 100.0 * (k + 1) as f64, f64::INFINITY, move |e| {
+                done.borrow_mut().push(e.now());
+            });
+        }
+        {
+            let n = net.borrow();
+            assert_eq!(n.aggregates(), 1);
+            assert_eq!(n.active(), 8);
+            assert_eq!(n.peak_active(), 8);
+        }
+        eng.run();
+        let d = done.borrow();
+        assert_eq!(d.len(), 8);
+        assert!((d[0] - 8.0).abs() < 1e-6, "{d:?}");
+        assert!((d[7] - 36.0).abs() < 1e-6, "{d:?}");
+        assert!(d.windows(2).all(|w| w[0] <= w[1]), "{d:?}");
+        assert_eq!(net.borrow().completions(), 8);
+        assert_eq!(net.borrow().aggregates(), 0);
+    }
+
+    #[test]
+    fn aggregation_off_keeps_one_aggregate_per_flow() {
+        let t = two_site_topo();
+        let cfg = FlowNetConfig { aggregate: false, incremental: true };
+        let net = FlowNet::new_with(&t, cfg);
+        let mut eng = Engine::new();
+        let path = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
+        for _ in 0..4 {
+            FlowNet::start(&net, &mut eng, path.clone(), 500.0, f64::INFINITY, |_| {});
+        }
+        assert_eq!(net.borrow().aggregates(), 4);
+        assert_eq!(net.borrow().active(), 4);
+        eng.run();
+        assert_eq!(net.borrow().completions(), 4);
+    }
+
+    #[test]
+    fn completion_timers_shard_by_domain() {
+        let t = two_site_topo();
+        let net = FlowNet::new(&t);
+        let mut eng = Engine::new();
+        // One site-a flow, one site-b flow, one cross-site flow: three
+        // lanes armed, each holding exactly its own aggregate's deadline.
+        let a = FlowNet::start(
+            &net,
+            &mut eng,
+            t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]),
+            100.0,
+            f64::INFINITY,
+            |_| {},
+        );
+        let b = FlowNet::start(
+            &net,
+            &mut eng,
+            t.path(t.racks[1].nodes[0], t.racks[1].nodes[1]),
+            100.0,
+            f64::INFINITY,
+            |_| {},
+        );
+        let w = FlowNet::start(
+            &net,
+            &mut eng,
+            t.path(t.racks[0].nodes[2], t.racks[1].nodes[2]),
+            100.0,
+            f64::INFINITY,
+            |_| {},
+        );
+        {
+            let n = net.borrow();
+            assert_eq!(n.agg(a.slot()).lane, 0);
+            assert_eq!(n.agg(b.slot()).lane, 1);
+            assert_eq!(n.agg(w.slot()).lane, 2);
+            assert_eq!(n.timers.armed(), 3);
+        }
+        eng.run();
+        assert_eq!(net.borrow().completions(), 3);
+        assert_eq!(net.borrow().timers.armed(), 0);
+    }
+
+    #[test]
     fn allocation_invariants_property() {
         crate::proptest::check("maxmin: feasible, capped, nonzero", 40, |rng| {
             let t = two_site_topo();
@@ -984,14 +1566,14 @@ mod tests {
                 }
             }
             for &s in &n.active {
-                let f = n.flow(s);
+                let a = n.agg(s);
                 // (2) cap respected
-                if f.rate > f.cap + 1e-6 {
-                    return Err(format!("flow over cap: {} > {}", f.rate, f.cap));
+                if a.member_rate > a.cap + 1e-6 {
+                    return Err(format!("aggregate over cap: {} > {}", a.member_rate, a.cap));
                 }
                 // (3) no starvation
-                if f.rate <= 0.0 {
-                    return Err("starved flow".into());
+                if a.member_rate <= 0.0 {
+                    return Err("starved aggregate".into());
                 }
             }
             Ok(())
@@ -1022,6 +1604,189 @@ mod tests {
         });
     }
 
+    /// Textbook from-scratch progressive water-filling over weighted
+    /// `(path, weight, cap)` participants — the oracle the incremental
+    /// core is checked against.
+    fn oracle_rates(caps: &[f64], aggs: &[(Vec<usize>, u32, f64)]) -> Vec<f64> {
+        let mut rem: Vec<f64> = caps.to_vec();
+        let mut users = vec![0u64; caps.len()];
+        for (path, w, _) in aggs {
+            for &l in path {
+                users[l] += *w as u64;
+            }
+        }
+        let mut rate = vec![0.0f64; aggs.len()];
+        let mut frozen = vec![false; aggs.len()];
+        let mut level = 0.0f64;
+        let mut left = aggs.len();
+        for _ in 0..(2 * aggs.len() + caps.len() + 8) {
+            if left == 0 {
+                break;
+            }
+            let mut inc = f64::INFINITY;
+            for l in 0..caps.len() {
+                if users[l] > 0 {
+                    inc = inc.min(rem[l].max(0.0) / users[l] as f64);
+                }
+            }
+            for (i, (_, _, cap)) in aggs.iter().enumerate() {
+                if !frozen[i] && cap.is_finite() {
+                    inc = inc.min(cap - level);
+                }
+            }
+            if !inc.is_finite() {
+                break;
+            }
+            level += inc.max(0.0);
+            for l in 0..caps.len() {
+                if users[l] > 0 {
+                    rem[l] -= inc.max(0.0) * users[l] as f64;
+                }
+            }
+            let mut froze = false;
+            for (i, (path, w, cap)) in aggs.iter().enumerate() {
+                if frozen[i] {
+                    continue;
+                }
+                let capped = cap.is_finite() && level >= cap - (cap * 1e-9 + 1e-9);
+                let saturated = path.iter().any(|&l| rem[l] <= caps[l] * 1e-9 + 1e-9);
+                if capped || saturated {
+                    frozen[i] = true;
+                    rate[i] = level;
+                    froze = true;
+                    left -= 1;
+                    for &l in path {
+                        users[l] -= *w as u64;
+                    }
+                }
+            }
+            if !froze {
+                break;
+            }
+        }
+        for (i, r) in rate.iter_mut().enumerate() {
+            if !frozen[i] {
+                *r = level;
+            }
+        }
+        rate
+    }
+
+    /// Drive one random event against a set of nets kept in lockstep.
+    fn random_event(
+        rng: &mut crate::util::Rng,
+        t: &Topology,
+        nets: &[&Rc<RefCell<FlowNet>>],
+        engs: &mut [Engine],
+        now: &mut f64,
+    ) {
+        match rng.gen_range(4) {
+            0 | 1 => {
+                let src = t.racks[rng.gen_range(2) as usize].nodes[rng.gen_range(4) as usize];
+                let mut dst = src;
+                while dst == src {
+                    dst = t.racks[rng.gen_range(2) as usize].nodes[rng.gen_range(4) as usize];
+                }
+                let bytes = 10.0 + rng.f64() * 5000.0;
+                let cap = if rng.chance(0.3) { 5.0 + rng.f64() * 150.0 } else { f64::INFINITY };
+                for (net, eng) in nets.iter().zip(engs.iter_mut()) {
+                    FlowNet::start(net, eng, t.path(src, dst), bytes, cap, |_| {});
+                }
+            }
+            2 => {
+                let node = t.racks[rng.gen_range(2) as usize].nodes[rng.gen_range(4) as usize];
+                let l = if rng.chance(0.5) { t.node(node).nic_tx } else { t.node(node).nic_rx };
+                let cap = 20.0 + rng.f64() * 480.0;
+                for (net, eng) in nets.iter().zip(engs.iter_mut()) {
+                    FlowNet::set_capacity(net, eng, l, cap);
+                }
+            }
+            _ => {
+                *now += 0.1 + rng.f64() * 4.0;
+                for eng in engs.iter_mut() {
+                    eng.run_until(*now);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_rates_match_oracle_after_every_event() {
+        // Satellite: after every start/finish/retune on a randomized
+        // sequence, the incrementally maintained rates equal a
+        // from-scratch global water-filling pass within epsilon.
+        crate::proptest::check("incremental vs from-scratch oracle", 25, |rng| {
+            let t = two_site_topo();
+            let net = FlowNet::new(&t);
+            let mut engs = [Engine::new()];
+            let mut now = 0.0;
+            for _ in 0..40 {
+                random_event(rng, &t, &[&net], &mut engs, &mut now);
+                let n = net.borrow();
+                let aggs: Vec<(Vec<usize>, u32, f64)> = n
+                    .active
+                    .iter()
+                    .map(|&s| {
+                        let a = n.agg(s);
+                        (a.path.iter().map(|l| l.0).collect(), a.weight, a.cap)
+                    })
+                    .collect();
+                let want = oracle_rates(&n.capacity, &aggs);
+                for (i, &s) in n.active.iter().enumerate() {
+                    let got = n.agg(s).member_rate;
+                    if (got - want[i]).abs() > 1e-6 * want[i].abs().max(1.0) {
+                        return Err(format!(
+                            "slot {s}: incremental {got} vs oracle {}",
+                            want[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incremental_and_full_modes_stay_bitwise_identical() {
+        // The claim the flow_scale bench's report-equality assertion
+        // rests on: both reallocation modes hold bitwise-equal state
+        // after every event — rates, served bytes, deadlines, ledgers.
+        crate::proptest::check("incremental == full, bitwise", 15, |rng| {
+            let t = two_site_topo();
+            let inc = FlowNet::new_with(&t, FlowNetConfig { aggregate: true, incremental: true });
+            let full = FlowNet::new_with(&t, FlowNetConfig { aggregate: true, incremental: false });
+            let mut engs = [Engine::new(), Engine::new()];
+            let mut now = 0.0;
+            for step in 0..40 {
+                random_event(rng, &t, &[&inc, &full], &mut engs, &mut now);
+                let a = inc.borrow();
+                let b = full.borrow();
+                if a.completions != b.completions || a.active_members != b.active_members {
+                    return Err(format!("step {step}: population diverged"));
+                }
+                if a.active != b.active {
+                    return Err(format!("step {step}: active sets diverged"));
+                }
+                for &s in &a.active {
+                    let (x, y) = (a.agg(s), b.agg(s));
+                    if x.member_rate.to_bits() != y.member_rate.to_bits()
+                        || x.base.to_bits() != y.base.to_bits()
+                        || x.deadline.to_bits() != y.deadline.to_bits()
+                        || x.weight != y.weight
+                    {
+                        return Err(format!("step {step}: aggregate {s} diverged"));
+                    }
+                }
+                for l in 0..a.link_rate.len() {
+                    if a.link_rate[l].to_bits() != b.link_rate[l].to_bits() {
+                        return Err(format!("step {step}: link {l} ledger diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     /// Each completion spawns a successor until `left` drains — arrival/
     /// departure churn with slab slot recycling on every hop.
     fn spawn_chain(
@@ -1047,10 +1812,9 @@ mod tests {
 
     #[test]
     fn engine_heap_stays_small_under_flow_churn() {
-        // The single cancellable completion timer keeps the event heap
-        // O(active flows): one live completion event regardless of how
-        // many reallocations churn produces (the old generation-counter
-        // scheme left one stale event behind per reallocation).
+        // Sharded completion timers keep the event heap O(armed lanes):
+        // one live completion event per domain regardless of how many
+        // reallocations churn produces.
         crate::proptest::check("flow churn keeps heap O(active)", 10, |rng| {
             let t = two_site_topo();
             let net = FlowNet::new(&t);

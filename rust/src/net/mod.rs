@@ -13,5 +13,5 @@ pub mod flows;
 pub mod topology;
 
 pub use cluster::Cluster;
-pub use flows::{FlowId, FlowNet};
-pub use topology::{LinkId, NodeId, RackId, SiteId, Topology};
+pub use flows::{FlowId, FlowNet, FlowNetConfig};
+pub use topology::{Domain, LinkId, NodeId, RackId, Route, SiteId, Topology};

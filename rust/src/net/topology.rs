@@ -29,12 +29,52 @@ pub enum LinkKind {
     Disk,
 }
 
+/// The flow-domain partition of the testbed: every link belongs to
+/// exactly one domain — its site for intra-site plumbing (NICs, rack
+/// uplinks, disks), or the shared wide-area domain for wave links. The
+/// fluid network shards its completion timers and capacity batches along
+/// this boundary: per-site traffic never wakes another site's lane, and
+/// only WAN-crossing flows ride the shared lane. (Rate *coupling* still
+/// follows the link-sharing graph, which may span domains — domains
+/// shard event plumbing, the water-filling components guarantee
+/// correctness.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Domain {
+    /// All links physically inside one site.
+    Site(u32),
+    /// The wide-area waves shared between sites.
+    Wan,
+}
+
+impl Domain {
+    /// Dense lane index for per-domain arrays: sites first, WAN last.
+    pub fn lane(self, num_sites: usize) -> usize {
+        match self {
+            Domain::Site(s) => s as usize,
+            Domain::Wan => num_sites,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Link {
     pub kind: LinkKind,
     /// Capacity in bytes/second.
     pub capacity: f64,
     pub label: String,
+    /// Which flow domain this link belongs to (fixed at construction).
+    pub domain: Domain,
+}
+
+/// A domain-aware path: the link sequence plus the flow domain the
+/// resulting flow's completion timer lives in — its site when the path
+/// stays inside one site, [`Domain::Wan`] when it crosses a wave.
+/// Produced by [`Topology::route`] / [`Topology::disk_route`], or derived
+/// from a raw link path with [`Topology::route_over`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Route {
+    pub path: Vec<LinkId>,
+    pub domain: Domain,
 }
 
 #[derive(Debug, Clone)]
@@ -149,8 +189,8 @@ impl Topology {
     /// tenant's topology *view* directs that tenant's inter-site traffic
     /// onto it. Returns `(east, west)`.
     pub fn add_wave(&mut self, bps: f64, label: &str) -> (LinkId, LinkId) {
-        let east = self.add_link(LinkKind::Wan, bps, format!("wan.{label}.east"));
-        let west = self.add_link(LinkKind::Wan, bps, format!("wan.{label}.west"));
+        let east = self.add_link(LinkKind::Wan, bps, format!("wan.{label}.east"), Domain::Wan);
+        let west = self.add_link(LinkKind::Wan, bps, format!("wan.{label}.west"), Domain::Wan);
         (east, west)
     }
 
@@ -175,18 +215,20 @@ impl Topology {
         id
     }
 
-    fn add_link(&mut self, kind: LinkKind, capacity: f64, label: String) -> LinkId {
+    fn add_link(&mut self, kind: LinkKind, capacity: f64, label: String, domain: Domain) -> LinkId {
         assert!(capacity > 0.0, "link capacity must be positive: {label}");
         let id = LinkId(self.links.len());
-        self.links.push(Link { kind, capacity, label });
+        self.links.push(Link { kind, capacity, label, domain });
         id
     }
 
     /// Add a rack of `n` identical nodes with a 2×`uplink_bps` switch uplink.
     pub fn add_rack(&mut self, site: SiteId, n: usize, spec: &NodeSpec, uplink_bps: f64) -> RackId {
         let rid = RackId(self.racks.len());
-        let up = self.add_link(LinkKind::RackUp, uplink_bps, format!("rack{}.up", rid.0));
-        let down = self.add_link(LinkKind::RackDown, uplink_bps, format!("rack{}.down", rid.0));
+        let dom = Domain::Site(site.0 as u32);
+        let up = self.add_link(LinkKind::RackUp, uplink_bps, format!("rack{}.up", rid.0), dom);
+        let down =
+            self.add_link(LinkKind::RackDown, uplink_bps, format!("rack{}.down", rid.0), dom);
         self.racks.push(Rack { site, nodes: Vec::new(), uplink_tx: up, uplink_rx: down });
         self.sites[site.0].racks.push(rid);
         for _ in 0..n {
@@ -198,9 +240,11 @@ impl Topology {
     pub fn add_node(&mut self, rack: RackId, spec: &NodeSpec) -> NodeId {
         let nid = NodeId(self.nodes.len());
         let site = self.racks[rack.0].site;
-        let tx = self.add_link(LinkKind::NicTx, spec.nic_bps, format!("node{}.tx", nid.0));
-        let rx = self.add_link(LinkKind::NicRx, spec.nic_bps, format!("node{}.rx", nid.0));
-        let disk = self.add_link(LinkKind::Disk, spec.disk_bps, format!("node{}.disk", nid.0));
+        let dom = Domain::Site(site.0 as u32);
+        let tx = self.add_link(LinkKind::NicTx, spec.nic_bps, format!("node{}.tx", nid.0), dom);
+        let rx = self.add_link(LinkKind::NicRx, spec.nic_bps, format!("node{}.rx", nid.0), dom);
+        let disk =
+            self.add_link(LinkKind::Disk, spec.disk_bps, format!("node{}.disk", nid.0), dom);
         self.nodes.push(Node {
             rack,
             site,
@@ -222,6 +266,7 @@ impl Topology {
                 LinkKind::Wan,
                 bps,
                 format!("wan.{}->{}", self.sites[x.0].name, self.sites[y.0].name),
+                Domain::Wan,
             );
             self.wan.insert((x, y), lid);
         }
@@ -279,6 +324,49 @@ impl Topology {
         }
         p.push(nb.nic_rx);
         p
+    }
+
+    /// The flow domain of one link.
+    pub fn link_domain(&self, l: LinkId) -> Domain {
+        self.links[l.0].domain
+    }
+
+    /// Number of flow-domain lanes: one per site plus the WAN lane.
+    pub fn num_domains(&self) -> usize {
+        self.sites.len() + 1
+    }
+
+    /// Domain-aware path from `a` to `b`: [`Topology::path`] plus the
+    /// domain the flow's completion timer lives in (the shared site, or
+    /// [`Domain::Wan`] for inter-site traffic).
+    pub fn route(&self, a: NodeId, b: NodeId) -> Route {
+        let domain = if self.same_site(a, b) {
+            Domain::Site(self.nodes[a.0].site.0 as u32)
+        } else {
+            Domain::Wan
+        };
+        Route { path: self.path(a, b), domain }
+    }
+
+    /// The single-link route over a node's disk spindle (disk I/O is a
+    /// flow too); always lives in the node's site domain.
+    pub fn disk_route(&self, n: NodeId) -> Route {
+        let nd = &self.nodes[n.0];
+        Route { path: vec![nd.disk], domain: Domain::Site(nd.site.0 as u32) }
+    }
+
+    /// Wrap a raw link path into a [`Route`], deriving the domain from
+    /// the links: any WAN-domain link puts the flow on the shared lane,
+    /// otherwise it lives on its (single) site's lane.
+    pub fn route_over(&self, path: Vec<LinkId>) -> Route {
+        let mut domain = self.link_domain(path[0]);
+        for &l in &path[1..] {
+            if self.link_domain(l) != domain {
+                domain = Domain::Wan;
+                break;
+            }
+        }
+        Route { path, domain }
     }
 
     /// Round-trip time between two nodes, seconds.
@@ -458,6 +546,46 @@ mod tests {
         let p = view.path(a, b);
         assert!(p.contains(&east), "{p:?}");
         assert_eq!(view.rtt(a, b), master.rtt(a, b));
+    }
+
+    #[test]
+    fn links_partition_into_domains() {
+        let t = Topology::oct_2009();
+        for (i, link) in t.links.iter().enumerate() {
+            match link.kind {
+                LinkKind::Wan => assert_eq!(link.domain, Domain::Wan, "{}", link.label),
+                _ => {
+                    let Domain::Site(s) = link.domain else {
+                        panic!("{} not in a site domain", link.label);
+                    };
+                    assert!((s as usize) < t.sites.len(), "link {i} in bogus site {s}");
+                }
+            }
+        }
+        // Lane indexing: sites first, WAN last.
+        assert_eq!(Domain::Site(2).lane(4), 2);
+        assert_eq!(Domain::Wan.lane(4), 4);
+        assert_eq!(t.num_domains(), 5);
+    }
+
+    #[test]
+    fn routes_carry_their_domain() {
+        let t = Topology::oct_2009();
+        let a = t.racks[0].nodes[0];
+        let b = t.racks[0].nodes[1];
+        let c = t.racks[1].nodes[0];
+        let local = t.route(a, b);
+        assert_eq!(local.domain, Domain::Site(0));
+        assert_eq!(local.path, t.path(a, b));
+        let wide = t.route(a, c);
+        assert_eq!(wide.domain, Domain::Wan);
+        assert_eq!(wide.path, t.path(a, c));
+        // Disk routes live on the node's site lane.
+        assert_eq!(t.disk_route(c).domain, Domain::Site(1));
+        assert_eq!(t.disk_route(c).path, vec![t.node(c).disk]);
+        // Deriving from a raw path agrees with the node-pair route.
+        assert_eq!(t.route_over(t.path(a, b)), local);
+        assert_eq!(t.route_over(t.path(a, c)), wide);
     }
 
     #[test]

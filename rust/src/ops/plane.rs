@@ -489,7 +489,7 @@ impl OpsPlane {
         bytes: f64,
         deliver: F,
     ) {
-        let (net, path, owd) = {
+        let shipped = {
             let mut p = plane.borrow_mut();
             p.telemetry_msgs += 1;
             p.telemetry_bytes += bytes;
@@ -497,18 +497,18 @@ impl OpsPlane {
                 p.telemetry_wan_bytes += bytes;
             }
             if src == dst {
-                (None, Vec::new(), 0.0)
+                None
             } else {
-                (Some(p.net.clone()), p.topo.path(src, dst), 0.5 * p.topo.rtt(src, dst))
+                Some((p.net.clone(), p.topo.route(src, dst), 0.5 * p.topo.rtt(src, dst)))
             }
         };
-        match net {
+        match shipped {
             None => {
                 eng.schedule_in(GMP_PROC_SECS, deliver);
             }
-            Some(net) => {
+            Some((net, route, owd)) => {
                 eng.schedule_in(owd + GMP_PROC_SECS, move |eng| {
-                    FlowNet::start(&net, eng, path, bytes, f64::INFINITY, deliver);
+                    FlowNet::start_route(&net, eng, route, bytes, f64::INFINITY, deliver);
                 });
             }
         }

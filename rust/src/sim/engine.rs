@@ -240,6 +240,79 @@ impl Countdown {
     }
 }
 
+/// A bank of per-lane cancellable timers — the sharded generalization of
+/// the "single completion timer" pattern: each lane (one per flow domain
+/// in [`crate::net::FlowNet`]) carries at most one live engine event, so
+/// the heap stays O(armed lanes) no matter how much churn re-arms them.
+///
+/// Re-arming a lane at its *current* deadline (bitwise-equal `f64`) is a
+/// no-op: the existing event already fires then, and skipping the
+/// cancel+reschedule keeps event sequence numbers — and therefore
+/// deterministic tie-breaking — independent of how often a caller
+/// recomputes an unchanged deadline.
+///
+/// Contract: the scheduled callback must call [`TimerBank::fired`] for
+/// its lane before doing anything else, so the bank knows the stored id
+/// is spent.
+pub struct TimerBank {
+    lanes: Vec<Option<(SimTime, TimerId)>>,
+}
+
+impl TimerBank {
+    /// A bank of `lanes` initially-disarmed timers.
+    pub fn new(lanes: usize) -> TimerBank {
+        TimerBank { lanes: vec![None; lanes] }
+    }
+
+    /// Number of lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The lane's current deadline, if armed.
+    pub fn deadline(&self, lane: usize) -> Option<SimTime> {
+        self.lanes[lane].map(|(t, _)| t)
+    }
+
+    /// Arm `lane` to run `f` at absolute time `at`, replacing any earlier
+    /// arm. If the lane is already armed at exactly `at`, the existing
+    /// event is kept and `f` is dropped.
+    pub fn arm<F: FnOnce(&mut Engine) + 'static>(
+        &mut self,
+        eng: &mut Engine,
+        lane: usize,
+        at: SimTime,
+        f: F,
+    ) {
+        if let Some((t, _)) = self.lanes[lane] {
+            if t == at {
+                return; // same deadline: the live event stands
+            }
+        }
+        self.disarm(eng, lane);
+        let id = eng.schedule_at(at.max(eng.now()), f);
+        self.lanes[lane] = Some((at, id));
+    }
+
+    /// Cancel the lane's pending timer, if any.
+    pub fn disarm(&mut self, eng: &mut Engine, lane: usize) {
+        if let Some((_, id)) = self.lanes[lane].take() {
+            eng.cancel(id);
+        }
+    }
+
+    /// The lane's timer fired: forget the spent id (callbacks call this
+    /// first). Returns the deadline it was armed at.
+    pub fn fired(&mut self, lane: usize) -> Option<SimTime> {
+        self.lanes[lane].take().map(|(t, _)| t)
+    }
+
+    /// Number of currently armed lanes.
+    pub fn armed(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -402,6 +475,64 @@ mod tests {
         let latch = Countdown::new(1, |_| {});
         latch.arrive(&mut e);
         latch.arrive(&mut e);
+    }
+
+    #[test]
+    fn timer_bank_one_event_per_lane() {
+        let mut e = Engine::new();
+        let mut bank = TimerBank::new(3);
+        let hits = Rc::new(RefCell::new(Vec::new()));
+        // Re-arm lane 0 a hundred times: only the last deadline survives,
+        // and the heap never accumulates stale events beyond O(live).
+        for i in 0..100 {
+            let h = hits.clone();
+            bank.arm(&mut e, 0, 100.0 - i as f64, move |eng| h.borrow_mut().push(eng.now()));
+        }
+        assert_eq!(bank.deadline(0), Some(1.0));
+        assert_eq!(e.pending(), 1);
+        let h = hits.clone();
+        bank.arm(&mut e, 2, 5.0, move |eng| h.borrow_mut().push(eng.now()));
+        assert_eq!(bank.armed(), 2);
+        assert_eq!(bank.lanes(), 3);
+        e.run();
+        assert_eq!(*hits.borrow(), vec![1.0, 5.0]);
+    }
+
+    #[test]
+    fn timer_bank_same_deadline_rearm_is_noop() {
+        let mut e = Engine::new();
+        let mut bank = TimerBank::new(1);
+        let hits = Rc::new(RefCell::new(0));
+        let h = hits.clone();
+        bank.arm(&mut e, 0, 2.0, move |_| *h.borrow_mut() += 1);
+        let seq_before = e.pending();
+        // Same bitwise deadline: the original event must stand (the new
+        // closure is dropped, no cancel/reschedule churn).
+        let h = hits.clone();
+        bank.arm(&mut e, 0, 2.0, move |_| *h.borrow_mut() += 100);
+        assert_eq!(e.pending(), seq_before);
+        e.run();
+        assert_eq!(*hits.borrow(), 1);
+    }
+
+    #[test]
+    fn timer_bank_disarm_and_fired() {
+        let mut e = Engine::new();
+        let mut bank = TimerBank::new(2);
+        let hits = Rc::new(RefCell::new(0));
+        let h = hits.clone();
+        bank.arm(&mut e, 0, 1.0, move |_| *h.borrow_mut() += 1);
+        bank.disarm(&mut e, 0);
+        assert_eq!(bank.deadline(0), None);
+        assert_eq!(e.pending(), 0);
+        let h = hits.clone();
+        bank.arm(&mut e, 1, 3.0, move |_| *h.borrow_mut() += 10);
+        // `fired` hands back the armed deadline and clears the lane (the
+        // callback contract); the event itself still runs.
+        assert_eq!(bank.fired(1), Some(3.0));
+        assert_eq!(bank.armed(), 0);
+        e.run();
+        assert_eq!(*hits.borrow(), 10);
     }
 
     #[test]

@@ -10,4 +10,4 @@
 mod engine;
 pub mod resources;
 
-pub use engine::{Countdown, Engine, TimerId};
+pub use engine::{Countdown, Engine, TimerBank, TimerId};

@@ -178,14 +178,15 @@ pub fn send<F: FnOnce(&mut Engine) + 'static>(
         eng.schedule_in(0.0, done);
         return;
     }
-    let path = topo.path(src, dst);
+    let route = topo.route(src, dst);
     let rtt = topo.rtt(src, dst);
-    let bottleneck = path.iter().map(|l| topo.link(*l).capacity).fold(f64::INFINITY, f64::min);
+    let bottleneck =
+        route.path.iter().map(|l| topo.link(*l).capacity).fold(f64::INFINITY, f64::min);
     let cap = proto.rate_cap(rtt, bottleneck);
     let overhead = proto.transfer_overhead(bytes, rtt, bottleneck);
     let net = net.clone();
     eng.schedule_in(overhead, move |eng| {
-        FlowNet::start(&net, eng, path, bytes, cap, done);
+        FlowNet::start_route(&net, eng, route, bytes, cap, done);
     });
 }
 
@@ -198,7 +199,7 @@ pub fn disk_read<F: FnOnce(&mut Engine) + 'static>(
     bytes: f64,
     done: F,
 ) {
-    FlowNet::start(net, eng, vec![topo.node(node).disk], bytes, f64::INFINITY, done);
+    FlowNet::start_route(net, eng, topo.disk_route(node), bytes, f64::INFINITY, done);
 }
 
 /// Sequential disk write (same shared disk link; SATA is half-duplex-ish

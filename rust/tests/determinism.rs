@@ -77,6 +77,14 @@ fn flow_churn_replays_identically() {
 }
 
 #[test]
+fn mega_churn_replays_identically() {
+    // Aggressive divisor: the debug-build FlowNet audit cross-checks a
+    // full recompute against the incremental state on every event, so
+    // the structured storm runs at 800 transfers / 200 slots here.
+    assert_replays("mega-churn", 500);
+}
+
+#[test]
 fn ops_replays_identically() {
     assert_replays("ops", 100);
 }
