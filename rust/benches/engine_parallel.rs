@@ -1,0 +1,121 @@
+//! Bench: the sharded parallel engine vs sequential execution on the
+//! mega-churn registry scenario.
+//!
+//! Two assertions, in order of importance:
+//!
+//! 1. **Byte-identical reports.** The same scaled-down `mega-churn` set
+//!    runs through the [`ScenarioRunner`] with `--threads 1` and
+//!    `--threads N` (default 4). Both take the *same* sharded driver
+//!    (the gate is on scenario shape, not thread count), so the
+//!    conservative lookahead protocol — not luck — must make the two
+//!    [`RunReport`] JSON serializations identical byte for byte.
+//!    This always gates.
+//! 2. **Wall-clock speedup.** The N-thread run must beat the 1-thread
+//!    run by at least `OCT_PAR_MIN_SPEEDUP` (default 2.0; CI sets a
+//!    lower floor on small shared runners — the byte-identity check is
+//!    the blocking part there). Set it to 0 to skip the gate entirely.
+//!
+//! Writes the machine-readable result to `BENCH_engine_parallel.json`
+//! at the repo root, next to the other BENCH artifacts.
+//!
+//! Env knobs: `OCT_PAR_DIV` (divides the registry workload; default 2 →
+//! 200k transfers / 50k slots), `OCT_PAR_THREADS` (default 4),
+//! `OCT_PAR_MIN_SPEEDUP` (default 2.0; 0 disables the speedup gate).
+
+use std::time::Instant;
+
+use oct::coordinator::{find_set, RunReport, ScenarioRunner};
+use oct::util::json::{obj, Json};
+
+fn env_or(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_or_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+struct Leg {
+    json: String,
+    wall: f64,
+    reports: Vec<RunReport>,
+}
+
+/// One full pass over the set at a fixed thread count. The report JSON
+/// deliberately excludes wall-clock stats, so `json` is comparable
+/// across legs; the leg's own wall time is measured around the run.
+fn run_leg(div: u64, threads: usize) -> Leg {
+    let set = find_set("mega-churn").expect("mega-churn set registered").scaled_down(div);
+    let runner = ScenarioRunner::new().with_threads(threads);
+    // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
+    let t0 = Instant::now();
+    let reports = runner.run_set(&set);
+    let wall = t0.elapsed().as_secs_f64();
+    let json =
+        reports.iter().map(|r| r.to_json().to_string()).collect::<Vec<_>>().join("\n");
+    Leg { json, wall, reports }
+}
+
+fn write_bench_json(div: u64, threads: u64, seq: &Leg, par: &Leg, speedup: f64) {
+    let events_per_sec =
+        par.reports[0].wall.map_or(Json::Null, |w| Json::Num(w.events_per_sec));
+    let doc = obj(vec![
+        ("bench", Json::Str("engine_parallel".into())),
+        ("scale_div", Json::Num(div as f64)),
+        ("transfers", Json::Num(seq.reports[0].total_records as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("sequential_wall_secs", Json::Num(seq.wall)),
+        ("parallel_wall_secs", Json::Num(par.wall)),
+        ("speedup_parallel_vs_sequential", Json::Num(speedup)),
+        ("events_per_sec_parallel", events_per_sec),
+        ("reports_byte_identical", Json::Bool(seq.json == par.json)),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_engine_parallel.json");
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
+}
+
+fn main() {
+    let div = env_or("OCT_PAR_DIV", 2).max(1);
+    let threads = env_or("OCT_PAR_THREADS", 4).max(2);
+    let min_speedup = env_or_f64("OCT_PAR_MIN_SPEEDUP", 2.0);
+
+    println!("=== engine parallel: mega-churn registry scenario at 1/{div} scale ===");
+    let seq = run_leg(div, 1);
+    println!("sequential (1 thread)    {:>8.2}s wall", seq.wall);
+    let par = run_leg(div, threads as usize);
+    println!("parallel  ({threads} threads)    {:>8.2}s wall", par.wall);
+
+    // The hard requirement first: any thread count, same bytes.
+    assert_eq!(
+        seq.json, par.json,
+        "sequential and {threads}-thread runs must produce byte-identical reports"
+    );
+    println!("reports byte-identical across thread counts");
+
+    // The registry's own shape criteria hold (one leg suffices — the
+    // reports are byte-identical).
+    let set = find_set("mega-churn").unwrap().scaled_down(div);
+    for c in set.run_checks(&seq.reports) {
+        assert!(c.pass, "{}: {}", c.name, c.detail);
+    }
+
+    let speedup = seq.wall / par.wall.max(1e-9);
+    write_bench_json(div, threads, &seq, &par, speedup);
+    println!("speedup: {speedup:.2}× at {threads} threads");
+    if min_speedup > 0.0 {
+        assert!(
+            speedup >= min_speedup,
+            "parallel engine too slow: {speedup:.2}× < {min_speedup:.1}× at {threads} threads"
+        );
+    } else {
+        println!("speedup gate disabled (OCT_PAR_MIN_SPEEDUP=0)");
+    }
+    println!("engine parallel OK");
+}

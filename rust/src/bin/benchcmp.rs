@@ -1,0 +1,155 @@
+//! `benchcmp` — gate bench results against committed baselines.
+//!
+//! ```text
+//! benchcmp <baseline.json> <current.json> [--tolerance PCT]
+//! ```
+//!
+//! Both files are `BENCH_*.json` documents written by the bench binaries
+//! (`flow_churn`, `flow_scale`, `engine_parallel`). The comparison:
+//!
+//! - The `bench` names must match, or the tool errors (exit 2).
+//! - Scale guard: if any workload-shape field present in both documents
+//!   (`scale_div`, `transfers`, `concurrency`, `threads`) differs, the
+//!   runs are not comparable — a note is printed and nothing gates
+//!   (exit 0). CI runs benches at reduced scale; regression gating only
+//!   engages against a baseline recorded at the same scale.
+//! - Wall-clock metrics (`*_wall_secs`) may grow by at most the
+//!   tolerance (default 20%); throughput and speedup metrics
+//!   (`*_per_sec*`, `speedup_*`) may shrink by at most the tolerance.
+//! - A `null` on either side skips that metric: baseline `null` means
+//!   "not yet recorded on a reference machine", current `null` means the
+//!   bench skipped that leg. Gating starts once a maintainer commits a
+//!   measured baseline.
+//! - `reports_byte_identical` is absolute: `true` in the baseline and
+//!   anything else now is a failure regardless of tolerance.
+//!
+//! Exit codes: 0 = within tolerance (or nothing comparable), 1 = a
+//! regression beyond tolerance, 2 = usage / IO / parse error.
+
+use oct::util::json::Json;
+
+/// Fields that define the workload shape: if they differ, wall-clock
+/// numbers are not comparable.
+const SCALE_FIELDS: &[&str] = &["scale_div", "transfers", "concurrency", "threads"];
+
+fn load(path: &str) -> Result<Json, String> {
+    let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    Json::parse(&src).map_err(|e| format!("{path}: {e}"))
+}
+
+/// The numeric fields of `doc` (nulls and non-numbers excluded).
+fn numeric_fields(doc: &Json) -> Vec<(String, f64)> {
+    match doc {
+        Json::Obj(m) => m
+            .iter()
+            .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// `Some(true)` when smaller is better for this metric, `Some(false)`
+/// when larger is, `None` when the field does not gate (counts, shape).
+fn lower_is_better(key: &str) -> Option<bool> {
+    if key.ends_with("wall_secs") {
+        return Some(true);
+    }
+    if key.contains("per_sec") || key.starts_with("speedup") {
+        return Some(false);
+    }
+    None
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut tolerance = 0.20f64;
+    let mut files: Vec<&String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--tolerance" {
+            tolerance = args
+                .get(i + 1)
+                .and_then(|s| s.parse::<f64>().ok())
+                .map(|p| p / 100.0)
+                .unwrap_or_else(|| {
+                    eprintln!("benchcmp: --tolerance needs a percentage");
+                    std::process::exit(2);
+                });
+            i += 2;
+        } else {
+            files.push(&args[i]);
+            i += 1;
+        }
+    }
+    if files.len() != 2 {
+        eprintln!("usage: benchcmp <baseline.json> <current.json> [--tolerance PCT]");
+        std::process::exit(2);
+    }
+    let (baseline_path, current_path) = (files[0].as_str(), files[1].as_str());
+    let (baseline, current) = match (load(baseline_path), load(current_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (b, c) => {
+            for e in [b.err(), c.err()].into_iter().flatten() {
+                eprintln!("benchcmp: {e}");
+            }
+            std::process::exit(2);
+        }
+    };
+    let name = baseline.get("bench").and_then(Json::as_str).unwrap_or("?").to_string();
+    if current.get("bench").and_then(Json::as_str) != Some(name.as_str()) {
+        eprintln!("benchcmp: bench names differ: {baseline_path} vs {current_path}");
+        std::process::exit(2);
+    }
+
+    for f in SCALE_FIELDS {
+        let (b, c) = (baseline.get(f).and_then(Json::as_f64), current.get(f).and_then(Json::as_f64));
+        if let (Some(b), Some(c)) = (b, c) {
+            if b != c {
+                println!(
+                    "{name}: {f} differs (baseline {b}, current {c}) — runs not comparable, nothing gated"
+                );
+                std::process::exit(0);
+            }
+        }
+    }
+
+    let base_fields = numeric_fields(&baseline);
+    let mut failed = false;
+    let mut gated = 0usize;
+    for (key, b) in &base_fields {
+        let Some(lower) = lower_is_better(key) else { continue };
+        let Some(c) = current.get(key).and_then(Json::as_f64) else {
+            println!("{name}: {key} missing/null in current run — skipped");
+            continue;
+        };
+        gated += 1;
+        let (worse, limit) = if lower {
+            (c > b * (1.0 + tolerance), b * (1.0 + tolerance))
+        } else {
+            (c < b * (1.0 - tolerance), b * (1.0 - tolerance))
+        };
+        if worse {
+            eprintln!(
+                "{name}: REGRESSION {key}: baseline {b:.4}, current {c:.4} (limit {limit:.4})"
+            );
+            failed = true;
+        } else {
+            println!("{name}: {key} ok: baseline {b:.4}, current {c:.4}");
+        }
+    }
+
+    if baseline.get("reports_byte_identical") == Some(&Json::Bool(true))
+        && current.get("reports_byte_identical") != Some(&Json::Bool(true))
+    {
+        eprintln!("{name}: REGRESSION reports_byte_identical: baseline true, current not");
+        failed = true;
+    }
+
+    if gated == 0 {
+        println!("{name}: no recorded baseline metrics yet — nothing gated");
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("{name}: within {:.0}% tolerance", tolerance * 100.0);
+}

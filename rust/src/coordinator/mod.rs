@@ -65,8 +65,8 @@ pub use provision::{
 };
 pub use registry::{find_set, scenario_sets, set_names, ScenarioSet};
 pub use runner::{
-    all_pass, flow_churn_concurrency, format_checks, format_reports, wide_area_penalty,
-    MonitorSummary, RunReport, ScenarioRunner, ShapeCheck, SiteFlow,
+    all_pass, flow_churn_concurrency, format_checks, format_reports, mega_churn_concurrency,
+    wide_area_penalty, MonitorSummary, RunReport, ScenarioRunner, ShapeCheck, SiteFlow, WallStats,
 };
 pub use scenario::{
     Framework, ImageSpec, LightpathSpec, Placement, ProvisioningSpec, Scenario, TenantSpec,

@@ -24,6 +24,7 @@ use crate::ops::{Fault, OpsConfig, OpsPlane, OpsReport};
 use crate::sector::master::{SectorMaster, Segment};
 use crate::sector::sphere::SphereReport;
 use crate::sector::SphereEngine;
+use crate::sim::par::{run_sharded, Outbox, ShardApp};
 use crate::sim::{Countdown, Engine};
 use crate::transport::{self, Protocol};
 use crate::util::json::{obj, Json};
@@ -59,8 +60,21 @@ pub struct MonitorSummary {
     pub nic_rate_p99: f64,
 }
 
+/// Host-side cost of producing a report — measurement *about* a run,
+/// never an input to one. Wall time varies with the machine and the
+/// thread count, so it is excluded from [`RunReport`] equality and from
+/// its JSON serialization: reports stay byte-comparable across thread
+/// counts (the determinism harness depends on that).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WallStats {
+    /// Real seconds the run took on the host.
+    pub wall_secs: f64,
+    /// Engine events executed per real second (all shards summed).
+    pub events_per_sec: f64,
+}
+
 /// The structured result of one scenario run.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct RunReport {
     pub scenario: String,
     pub framework: String,
@@ -83,6 +97,30 @@ pub struct RunReport {
     /// Operations-plane results (detection latency, telemetry overhead,
     /// alerts, remediation) for ops-enabled runs.
     pub ops: Option<OpsReport>,
+    /// Host-side timing; see [`WallStats`] for why it is outside the
+    /// report's equality and serialization.
+    pub wall: Option<WallStats>,
+}
+
+/// Everything except `wall`: two runs of the same scenario are the same
+/// run no matter how long the host took or how many threads it used.
+impl PartialEq for RunReport {
+    fn eq(&self, other: &RunReport) -> bool {
+        self.scenario == other.scenario
+            && self.framework == other.framework
+            && self.variant == other.variant
+            && self.topology == other.topology
+            && self.placement == other.placement
+            && self.nodes == other.nodes
+            && self.total_records == other.total_records
+            && self.simulated_secs == other.simulated_secs
+            && self.paper_secs == other.paper_secs
+            && self.wan_bytes == other.wan_bytes
+            && self.site_flows == other.site_flows
+            && self.metrics == other.metrics
+            && self.monitor == other.monitor
+            && self.ops == other.ops
+    }
 }
 
 impl RunReport {
@@ -209,6 +247,7 @@ impl RunReport {
             metrics,
             monitor,
             ops,
+            wall: None,
         })
     }
 }
@@ -243,19 +282,25 @@ pub fn format_reports(reports: &[RunReport]) -> String {
     use crate::util::units::{fmt_bytes, fmt_paper_time};
     let mut s = String::new();
     s.push_str(&format!(
-        "{:<40} {:>10} {:>10} {:>9} {:>10}\n",
-        "scenario", "simulated", "paper", "sim/paper", "wan"
+        "{:<40} {:>10} {:>10} {:>9} {:>10} {:>9} {:>10}\n",
+        "scenario", "simulated", "paper", "sim/paper", "wan", "wall", "events/s"
     ));
     for r in reports {
         let paper = r.paper_secs.map(fmt_paper_time).unwrap_or_else(|| "-".to_string());
         let ratio = r.paper_ratio().map(|x| format!("{x:.2}")).unwrap_or_else(|| "-".to_string());
+        let wall =
+            r.wall.map(|w| format!("{:.2}s", w.wall_secs)).unwrap_or_else(|| "-".to_string());
+        let eps =
+            r.wall.map(|w| format!("{:.2e}", w.events_per_sec)).unwrap_or_else(|| "-".to_string());
         s.push_str(&format!(
-            "{:<40} {:>10} {:>10} {:>9} {:>10}\n",
+            "{:<40} {:>10} {:>10} {:>9} {:>10} {:>9} {:>10}\n",
             r.scenario,
             fmt_paper_time(r.simulated_secs),
             paper,
             ratio,
             fmt_bytes(r.wan_bytes as u64),
+            wall,
+            eps,
         ));
     }
     s
@@ -327,6 +372,7 @@ pub struct ScenarioRunner {
     monitor_interval: Option<f64>,
     ops_override: Option<OpsConfig>,
     flow_cfg: FlowNetConfig,
+    threads: Option<usize>,
 }
 
 impl ScenarioRunner {
@@ -357,12 +403,54 @@ impl ScenarioRunner {
         self
     }
 
+    /// Use `n` worker threads for shardable runs (currently
+    /// [`Framework::MegaChurn`] without monitor/ops/fault/provisioning/
+    /// tenancy axes); overrides the `OCT_THREADS` environment variable.
+    /// Thread count never changes a report's bytes — only its
+    /// [`WallStats`].
+    pub fn with_threads(mut self, n: usize) -> ScenarioRunner {
+        assert!(n >= 1, "at least one worker thread");
+        self.threads = Some(n);
+        self
+    }
+
+    /// Worker threads for shardable runs: the builder override, else the
+    /// `OCT_THREADS` environment variable, else 1.
+    fn threads(&self) -> usize {
+        self.threads
+            .or_else(|| std::env::var("OCT_THREADS").ok().and_then(|v| v.parse().ok()))
+            .unwrap_or(1)
+            .max(1)
+    }
+
     /// Run one scenario to completion and assemble its report. Scenarios
     /// with a non-empty provisioning axis pay imaging / lightpath setup
     /// in simulated time before the workload starts, and report the
     /// split as `imaging_secs` / `lightpath_setup_secs` /
     /// `provision_secs` / `workload_secs` metrics.
+    ///
+    /// Shardable scenarios (see [`ScenarioRunner::with_threads`]) run on
+    /// the parallel engine — `threads = 1` and `threads = N` take the
+    /// same path and produce byte-identical reports; everything else
+    /// runs sequentially. Either way the report carries [`WallStats`].
     pub fn run(&self, sc: &Scenario) -> RunReport {
+        // simlint: allow(SIM002) — wall-clock timing *about* the run (throughput reporting); it never feeds back into simulated time.
+        let t0 = std::time::Instant::now();
+        let (mut rep, executed) = if self.mega_shardable(sc) {
+            self.run_mega_sharded(sc)
+        } else {
+            self.run_sequential(sc)
+        };
+        let wall_secs = t0.elapsed().as_secs_f64();
+        rep.wall = Some(WallStats {
+            wall_secs,
+            events_per_sec: if wall_secs > 0.0 { executed as f64 / wall_secs } else { 0.0 },
+        });
+        rep
+    }
+
+    /// The single-engine path: one event heap drives the whole testbed.
+    fn run_sequential(&self, sc: &Scenario) -> (RunReport, u64) {
         let cluster = Cluster::with_config(sc.topology.build(), self.flow_cfg);
         let mut eng = Engine::new();
         let mon = self.monitor_interval.map(|iv| {
@@ -372,7 +460,142 @@ impl ScenarioRunner {
         });
         let run = self.launch(&cluster, sc, &mut eng, LaunchCtx::solo());
         self.drive(&mut eng, std::slice::from_ref(&run), &mon);
-        self.assemble(&run, mon)
+        let executed = eng.executed();
+        (self.assemble(&run, mon), executed)
+    }
+
+    /// True when a scenario can take the sharded engine path: a plain
+    /// mega-churn run. The monitor, the ops plane, fault plans,
+    /// provisioning, and tenancy all move telemetry or control across
+    /// flow domains outside the shard channels (see
+    /// [`crate::ops::plane`] and [`crate::framework::runtime`]), so any
+    /// of those axes keeps the sequential engine. The gate is on the
+    /// scenario's *shape*, never on the thread count — a `threads = 1`
+    /// run of a shardable scenario uses the sharded engine inline, so
+    /// cross-thread-count comparisons compare the same driver.
+    fn mega_shardable(&self, sc: &Scenario) -> bool {
+        sc.framework == Framework::MegaChurn
+            && self.monitor_interval.is_none()
+            && self.ops_override.is_none()
+            && sc.ops.is_none()
+            && sc.fault_plan.is_empty()
+            && sc.provisioning.is_empty()
+            && sc.tenancy.is_none()
+    }
+
+    /// The sharded mega-churn driver: one shard per site plus a WAN
+    /// shard, run on the conservative parallel engine
+    /// ([`crate::sim::par`]). Each site shard owns its intra-rack pair
+    /// slots end to end; WAN slots stay *homed* at a site shard (which
+    /// owns their RNG stream and transfer budget) but their flows run on
+    /// the WAN shard, commanded over the shard channels — the
+    /// cross-domain traffic the lookahead synchronization bounds.
+    ///
+    /// Every shard derives the full slot plan deterministically from an
+    /// identical clone of the built plant, so the factories share no
+    /// state; link claims
+    /// partition the plant (pair NICs per site shard; uplinks, waves,
+    /// and pool NICs on the WAN shard), which
+    /// [`FlowNet::claim_links`] turns into both a scope cut for full
+    /// recomputes and a debug-build disjointness audit.
+    fn run_mega_sharded(&self, sc: &Scenario) -> (RunReport, u64) {
+        // Build the topology and placement once, here: `Scenario` itself
+        // can carry `Rc` builder closures and must not cross threads, so
+        // each factory captures only plain `Send` data — an identical
+        // clone of the deterministically built plant.
+        let topo = sc.topology.build();
+        let nodes = sc.placement.select(&topo);
+        let total = sc.workload.total_records.max(1);
+        let num_sites = topo.sites.len();
+        // Lookahead: the modeled control-plane dispatch latency plus the
+        // tightest WAN one-way delay — no cross-domain command or
+        // completion report can land sooner.
+        let lookahead = MEGA_CMD_SECS + topo.min_wan_owd().unwrap_or(0.0);
+        let flow_cfg = self.flow_cfg;
+        let factories: Vec<_> = (0..=num_sites)
+            .map(|idx| {
+                let topo = topo.clone();
+                let nodes = nodes.clone();
+                move || MegaShard::build(topo, nodes, total, idx, flow_cfg)
+            })
+            .collect();
+        let outs = run_sharded(lookahead, factories, self.threads());
+
+        let mut flows = 0u64;
+        let mut net_completions = 0u64;
+        let mut peak_inflight = 0u64;
+        let mut peak_active = 0u64;
+        let mut executed = 0u64;
+        let mut finished_at = 0.0f64;
+        let mut link_bytes: BTreeMap<usize, f64> = BTreeMap::new();
+        for o in &outs {
+            flows += o.done;
+            net_completions += o.net_completions;
+            peak_inflight += o.peak_inflight;
+            peak_active += o.peak_active;
+            executed += o.executed;
+            finished_at = finished_at.max(o.finished_at);
+            // Claims are disjoint, so each link lands from exactly one
+            // shard: the merge is a relabeling, not a float reduction.
+            for &(l, b) in &o.link_bytes {
+                *link_bytes.entry(l as usize).or_insert(0.0) += b;
+            }
+        }
+        let bytes_of = |l: LinkId| link_bytes.get(&l.0).copied().unwrap_or(0.0);
+
+        let mut metrics: Vec<(String, f64)> = vec![
+            ("flows".to_string(), flows as f64),
+            ("peak_inflight".to_string(), peak_inflight as f64),
+            ("peak_active".to_string(), peak_active as f64),
+            ("net_completions".to_string(), net_completions as f64),
+        ];
+        metrics.sort_by(|a, b| a.0.cmp(&b.0));
+
+        let site_flows: Vec<SiteFlow> = topo
+            .sites
+            .iter()
+            .enumerate()
+            .map(|(i, site)| {
+                let mut tx = 0.0;
+                let mut rx = 0.0;
+                for rid in &site.racks {
+                    tx += bytes_of(topo.racks[rid.0].uplink_tx);
+                    rx += bytes_of(topo.racks[rid.0].uplink_rx);
+                }
+                SiteFlow {
+                    site: site.name.clone(),
+                    nodes_used: nodes.iter().filter(|&&n| topo.node(n).site.0 == i).count(),
+                    uplink_tx_bytes: tx,
+                    uplink_rx_bytes: rx,
+                }
+            })
+            .collect();
+        let wan_bytes: f64 = topo
+            .links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind == LinkKind::Wan)
+            .map(|(i, _)| bytes_of(LinkId(i)))
+            .sum();
+
+        let rep = RunReport {
+            scenario: sc.name.clone(),
+            framework: sc.framework.name().to_string(),
+            variant: sc.workload.variant.letter().to_string(),
+            topology: sc.topology.label(),
+            placement: sc.placement.label(),
+            nodes: nodes.len(),
+            total_records: sc.workload.total_records,
+            simulated_secs: finished_at,
+            paper_secs: sc.paper_secs,
+            wan_bytes,
+            site_flows,
+            metrics,
+            monitor: None,
+            ops: None,
+            wall: None,
+        };
+        (rep, executed)
     }
 
     /// Wire a scenario onto an engine: ops plane, faults, and either an
@@ -632,6 +855,7 @@ impl ScenarioRunner {
             metrics,
             monitor,
             ops: ops_report,
+            wall: None,
         }
     }
 
@@ -661,6 +885,8 @@ impl ScenarioRunner {
     /// tenant's report. Fault plans, the ops plane, and the monitor are
     /// not composed with multi-tenancy yet.
     pub fn run_tenants(&self, scenarios: &[Scenario]) -> Vec<RunReport> {
+        // simlint: allow(SIM002) — wall-clock timing *about* the shared-testbed run; it never feeds back into simulated time.
+        let t0 = std::time::Instant::now();
         assert!(!scenarios.is_empty(), "empty tenant group");
         assert!(
             self.monitor_interval.is_none() && self.ops_override.is_none(),
@@ -803,9 +1029,20 @@ impl ScenarioRunner {
             );
         }
         eng.run(); // drain trailing events (teardown timers etc.)
+        // One engine ran the whole group, so every tenant's report
+        // carries the same (group-wide) wall stats.
+        let wall_secs = t0.elapsed().as_secs_f64();
+        let wall = Some(WallStats {
+            wall_secs,
+            events_per_sec: if wall_secs > 0.0 { eng.executed() as f64 / wall_secs } else { 0.0 },
+        });
         tenants
             .iter()
-            .map(|t| self.assemble(t.run.as_ref().expect("tenant never launched"), None))
+            .map(|t| {
+                let mut rep = self.assemble(t.run.as_ref().expect("tenant never launched"), None);
+                rep.wall = wall;
+                rep
+            })
             .collect()
     }
 
@@ -1279,24 +1516,7 @@ fn start_mega_churn(
     assert!(nodes.len() >= 2, "mega churn needs at least two nodes");
     let total = w.total_records.max(1);
     let target = mega_churn_concurrency(total);
-    // Group the placement by rack, reserve the last two placed nodes of
-    // each full rack group for the WAN pool, and pair off the rest.
-    let mut by_rack: BTreeMap<usize, Vec<NodeId>> = BTreeMap::new();
-    for &n in nodes {
-        by_rack.entry(cluster.topo.node(n).rack.0).or_default().push(n);
-    }
-    let mut pairs: Vec<(NodeId, NodeId)> = Vec::new();
-    let mut wan_pool: Vec<NodeId> = Vec::new();
-    for group in by_rack.values() {
-        let (paired, pooled) =
-            if group.len() >= 4 { group.split_at(group.len() - 2) } else { (&group[..], &[][..]) };
-        let mut chunks = paired.chunks_exact(2);
-        for c in &mut chunks {
-            pairs.push((c[0], c[1]));
-        }
-        wan_pool.extend(chunks.remainder());
-        wan_pool.extend(pooled);
-    }
+    let (pairs, wan_pool) = mega_pairs(&cluster.topo, nodes);
     let st = Rc::new(RefCell::new(ChurnState {
         rng: Rng::new(0x0C7_3E6A),
         launched: 0,
@@ -1312,6 +1532,31 @@ fn start_mega_churn(
     for slot in 0..target.min(total) {
         launch_mega_flow(&env, total, slot, eng, &st, &out);
     }
+}
+
+/// The mega-churn traffic structure, shared by the sequential and
+/// sharded drivers: group the placement by rack, reserve the last two
+/// placed nodes of each full rack group for the WAN pool, and pair off
+/// the rest. Pair and pool node sets are disjoint by construction — the
+/// property the sharded driver's link-claim partition rests on.
+fn mega_pairs(topo: &Topology, nodes: &[NodeId]) -> (Vec<(NodeId, NodeId)>, Vec<NodeId>) {
+    let mut by_rack: BTreeMap<usize, Vec<NodeId>> = BTreeMap::new();
+    for &n in nodes {
+        by_rack.entry(topo.node(n).rack.0).or_default().push(n);
+    }
+    let mut pairs: Vec<(NodeId, NodeId)> = Vec::new();
+    let mut wan_pool: Vec<NodeId> = Vec::new();
+    for group in by_rack.values() {
+        let (paired, pooled) =
+            if group.len() >= 4 { group.split_at(group.len() - 2) } else { (&group[..], &[][..]) };
+        let mut chunks = paired.chunks_exact(2);
+        for c in &mut chunks {
+            pairs.push((c[0], c[1]));
+        }
+        wan_pool.extend(chunks.remainder());
+        wan_pool.extend(pooled);
+    }
+    (pairs, wan_pool)
 }
 
 /// Shared immutable context of one mega-churn run.
@@ -1383,6 +1628,300 @@ fn launch_mega_flow(
             });
         }
     });
+}
+
+/// Modeled dispatch latency of a cross-domain mega-churn control message
+/// (a coordinator command to start a WAN transfer, or the completion
+/// report coming back). Together with
+/// [`Topology::min_wan_owd`](crate::net::Topology::min_wan_owd) it is
+/// the sharded engine's lookahead: no shard can affect another sooner.
+const MEGA_CMD_SECS: f64 = 0.05;
+
+/// Cross-shard control traffic of the sharded mega-churn driver.
+enum MegaMsg {
+    /// Home shard → WAN shard: run one WAN transfer for `slot`.
+    Start { slot: u64, src: NodeId, dst: NodeId, bytes: f64, udt: bool },
+    /// WAN shard → home shard: `slot`'s transfer completed.
+    Done { slot: u64 },
+}
+
+/// One shard's final accounting, merged in shard-index order by
+/// [`ScenarioRunner::run`]'s sharded path.
+struct MegaOut {
+    done: u64,
+    peak_inflight: u64,
+    peak_active: u64,
+    net_completions: u64,
+    finished_at: f64,
+    executed: u64,
+    /// Final byte counters of this shard's claimed links.
+    link_bytes: Vec<(u32, f64)>,
+}
+
+/// One concurrency slot owned by a shard: its private RNG stream and the
+/// transfers it still owes.
+struct MegaSlot {
+    rng: Rng,
+    remaining: u64,
+    /// `Some` pins the slot to an intra-rack pair on this shard's own
+    /// network; `None` marks a WAN slot whose transfers run remotely.
+    pair: Option<(NodeId, NodeId)>,
+}
+
+struct MegaState {
+    slots: BTreeMap<u64, MegaSlot>,
+    launched: u64,
+    done: u64,
+    peak_inflight: u64,
+    /// WAN transfers commanded but not yet reported done.
+    outstanding: u64,
+}
+
+/// Shared immutable context of one mega-churn shard (the sharded
+/// counterpart of [`MegaEnv`]); engine events capture it by `Rc`.
+struct MegaEnvS {
+    wan_shard: usize,
+    topo: Rc<Topology>,
+    net: Rc<RefCell<FlowNet>>,
+    wan_pool: Vec<NodeId>,
+    st: RefCell<MegaState>,
+}
+
+/// One shard of the sharded mega-churn driver: site shards drive their
+/// pair slots locally; the WAN shard executes commanded cross-site
+/// transfers and reports completions back.
+struct MegaShard {
+    env: Rc<MegaEnvS>,
+    is_wan: bool,
+    claimed: Vec<LinkId>,
+}
+
+impl MegaShard {
+    /// Derive shard `idx`'s complete view of the run from an identical
+    /// clone of the plant: every shard computes the same pair/pool
+    /// split, slot budgets, and RNG streams from the same inputs, so no
+    /// state crosses threads except [`MegaMsg`]s.
+    fn build(
+        topo: Topology,
+        nodes: Vec<NodeId>,
+        total: u64,
+        idx: usize,
+        flow_cfg: FlowNetConfig,
+    ) -> MegaShard {
+        let topo = Rc::new(topo);
+        assert!(nodes.len() >= 2, "mega churn needs at least two nodes");
+        let (pairs, wan_pool) = mega_pairs(&topo, &nodes);
+        let num_sites = topo.sites.len();
+        let wan_shard = num_sites;
+        let is_wan = idx == wan_shard;
+        let slots = mega_churn_concurrency(total).min(total);
+
+        // Link claims partition the plant: a pair flow touches only its
+        // two NICs (the ToR is non-blocking), a WAN flow touches pool
+        // NICs, uplinks, and waves — never a pair NIC. The pair/pool
+        // node sets are disjoint, so the claims are too (the claimed
+        // nets' debug-build admission audit re-checks every path).
+        let mut claimed: Vec<LinkId> = Vec::new();
+        if is_wan {
+            for (i, l) in topo.links.iter().enumerate() {
+                if l.kind == LinkKind::Wan {
+                    claimed.push(LinkId(i));
+                }
+            }
+            for r in &topo.racks {
+                claimed.push(r.uplink_tx);
+                claimed.push(r.uplink_rx);
+            }
+            for &n in &wan_pool {
+                claimed.push(topo.node(n).nic_tx);
+                claimed.push(topo.node(n).nic_rx);
+            }
+        } else {
+            for &(a, b) in &pairs {
+                if topo.node(a).site.0 == idx {
+                    claimed.push(topo.node(a).nic_tx);
+                    claimed.push(topo.node(a).nic_rx);
+                    claimed.push(topo.node(b).nic_tx);
+                    claimed.push(topo.node(b).nic_rx);
+                }
+            }
+        }
+        claimed.sort_unstable_by_key(|l| l.0);
+        claimed.dedup_by_key(|l| l.0);
+        let net = FlowNet::new_with(&topo, flow_cfg);
+        net.borrow_mut().claim_links(&claimed);
+
+        let mut slot_map: BTreeMap<u64, MegaSlot> = BTreeMap::new();
+        for slot in 0..slots {
+            let wan_slot = wan_pool.len() >= 2
+                && (pairs.is_empty() || slot % MEGA_WAN_SLOT_STRIDE == MEGA_WAN_SLOT_STRIDE - 1);
+            let pair = (!wan_slot).then(|| pairs[(slot % pairs.len() as u64) as usize]);
+            // WAN slots spread their homes round-robin over the site
+            // shards; a pair slot lives where its pair does.
+            let home = match pair {
+                Some((a, _)) => topo.node(a).site.0,
+                None => (slot % num_sites as u64) as usize,
+            };
+            if home != idx {
+                continue;
+            }
+            slot_map.insert(
+                slot,
+                MegaSlot {
+                    // A pure function of the slot index: forking a fresh
+                    // master gives every slot the same stream under any
+                    // shard layout and any thread count.
+                    rng: Rng::new(0x0C7_3E6A).fork(slot),
+                    remaining: total / slots + u64::from(slot < total % slots),
+                    pair,
+                },
+            );
+        }
+        MegaShard {
+            env: Rc::new(MegaEnvS {
+                wan_shard,
+                topo,
+                net,
+                wan_pool,
+                st: RefCell::new(MegaState {
+                    slots: slot_map,
+                    launched: 0,
+                    done: 0,
+                    peak_inflight: 0,
+                    outstanding: 0,
+                }),
+            }),
+            is_wan,
+            claimed,
+        }
+    }
+}
+
+/// Start one transfer for `slot` on its home shard: a pair slot runs on
+/// this shard's own claimed links; a WAN slot commands the WAN shard
+/// over the channel. The draw order matches [`launch_mega_flow`], from
+/// the slot's private stream.
+fn launch_mega_slot(env: &Rc<MegaEnvS>, out: &Outbox<MegaMsg>, eng: &mut Engine, slot: u64) {
+    enum Go {
+        Local { src: NodeId, dst: NodeId, bytes: f64, udt: bool },
+        Wan { src: NodeId, dst: NodeId, bytes: f64, udt: bool },
+    }
+    let go = {
+        let mut st = env.st.borrow_mut();
+        let st = &mut *st;
+        st.launched += 1;
+        let inflight = st.launched - st.done;
+        if inflight > st.peak_inflight {
+            st.peak_inflight = inflight;
+        }
+        let slot_st = st.slots.get_mut(&slot).expect("launching an unowned slot");
+        debug_assert!(slot_st.remaining > 0, "launching an exhausted slot");
+        match slot_st.pair {
+            Some((a, b)) => {
+                let (src, dst) = if slot_st.rng.chance(0.5) { (a, b) } else { (b, a) };
+                let bytes = (1.0 + slot_st.rng.f64() * 15.0) * 1e6;
+                let udt = slot_st.rng.chance(0.5);
+                Go::Local { src, dst, bytes, udt }
+            }
+            None => {
+                let pool = &env.wan_pool;
+                let src = pool[slot_st.rng.gen_range(pool.len() as u64) as usize];
+                let mut dst = src;
+                while dst == src {
+                    dst = pool[slot_st.rng.gen_range(pool.len() as u64) as usize];
+                }
+                let bytes = (1.0 + slot_st.rng.f64() * 15.0) * 1e6;
+                let udt = slot_st.rng.chance(0.5);
+                st.outstanding += 1;
+                Go::Wan { src, dst, bytes, udt }
+            }
+        }
+    };
+    match go {
+        Go::Local { src, dst, bytes, udt } => {
+            let proto = if udt { Protocol::udt() } else { Protocol::tcp() };
+            let (env2, out2) = (env.clone(), out.clone());
+            transport::send(&env.net, &env.topo, eng, src, dst, bytes, &proto, move |eng| {
+                finish_mega_slot(&env2, &out2, eng, slot);
+            });
+        }
+        Go::Wan { src, dst, bytes, udt } => {
+            out.send(eng, env.wan_shard, MegaMsg::Start { slot, src, dst, bytes, udt });
+        }
+    }
+}
+
+/// One of `slot`'s transfers completed (locally, or via a WAN shard
+/// report): count it and relaunch while the slot still owes transfers.
+fn finish_mega_slot(env: &Rc<MegaEnvS>, out: &Outbox<MegaMsg>, eng: &mut Engine, slot: u64) {
+    let relaunch = {
+        let mut st = env.st.borrow_mut();
+        st.done += 1;
+        let slot_st = st.slots.get_mut(&slot).expect("finishing an unowned slot");
+        slot_st.remaining -= 1;
+        slot_st.remaining > 0
+    };
+    if relaunch {
+        launch_mega_slot(env, out, eng, slot);
+    }
+}
+
+impl ShardApp for MegaShard {
+    type Msg = MegaMsg;
+    type Out = MegaOut;
+
+    fn init(&mut self, eng: &mut Engine, out: &Outbox<MegaMsg>) {
+        let slots: Vec<u64> = self.env.st.borrow().slots.keys().copied().collect();
+        for slot in slots {
+            launch_mega_slot(&self.env, out, eng, slot);
+        }
+    }
+
+    fn on_msg(&mut self, eng: &mut Engine, from: usize, msg: MegaMsg, out: &Outbox<MegaMsg>) {
+        match msg {
+            MegaMsg::Start { slot, src, dst, bytes, udt } => {
+                debug_assert!(self.is_wan, "transfer command sent to a site shard");
+                let proto = if udt { Protocol::udt() } else { Protocol::tcp() };
+                let out2 = out.clone();
+                let env = &self.env;
+                transport::send(&env.net, &env.topo, eng, src, dst, bytes, &proto, move |eng| {
+                    out2.send(eng, from, MegaMsg::Done { slot });
+                });
+            }
+            MegaMsg::Done { slot } => {
+                debug_assert!(!self.is_wan, "completion report sent to the WAN shard");
+                self.env.st.borrow_mut().outstanding -= 1;
+                finish_mega_slot(&self.env, out, eng, slot);
+            }
+        }
+    }
+
+    fn quiescent(&self) -> bool {
+        // A site shard knows its traffic completely: once every owned
+        // slot's budget is spent and no WAN command is outstanding,
+        // nothing can ever arrive for it. The WAN shard cannot know
+        // whether more commands are coming, so it never self-declares;
+        // it finishes once every site shard has (the EIT = ∞ rule).
+        if self.is_wan {
+            return false;
+        }
+        let st = self.env.st.borrow();
+        st.outstanding == 0 && st.slots.values().all(|s| s.remaining == 0)
+    }
+
+    fn finish(&mut self, eng: &mut Engine) -> MegaOut {
+        let st = self.env.st.borrow();
+        let netb = self.env.net.borrow();
+        MegaOut {
+            done: st.done,
+            peak_inflight: st.peak_inflight,
+            peak_active: netb.peak_active() as u64,
+            net_completions: netb.completions(),
+            finished_at: eng.now(),
+            executed: eng.executed(),
+            link_bytes: self.claimed.iter().map(|&l| (l.0 as u32, netb.link_bytes(l))).collect(),
+        }
+    }
 }
 
 fn start_sphere(
@@ -1540,6 +2079,69 @@ mod tests {
         let text = rep.to_json().to_string();
         let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn mega_churn_sharded_is_thread_count_invariant() {
+        let sc = Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(30))
+            .framework(Framework::MegaChurn)
+            .workload(WorkloadSpec::malstone_a(800))
+            .name("mega-sharded-smoke")
+            .build();
+        let one = ScenarioRunner::new().with_threads(1).run(&sc);
+        for threads in [2, 4, 8] {
+            let n = ScenarioRunner::new().with_threads(threads).run(&sc);
+            assert_eq!(
+                n.to_json().to_string(),
+                one.to_json().to_string(),
+                "threads={threads} diverged"
+            );
+        }
+        let m = |k: &str| one.metric(k).unwrap_or_else(|| panic!("missing metric {k}"));
+        assert_eq!(m("flows"), 800.0);
+        assert_eq!(m("net_completions"), 800.0);
+        // Every slot is in flight at t = 0, before any completion, so the
+        // summed per-shard peaks equal the slot target exactly.
+        assert_eq!(m("peak_inflight"), mega_churn_concurrency(800) as f64);
+        assert!(m("peak_active") >= 100.0, "peak_active = {}", m("peak_active"));
+        assert!(one.wan_bytes > 0.0, "WAN slots crossed the wave");
+        assert!(one.simulated_secs > 0.0);
+        assert_eq!(one.site_flows.len(), 4);
+    }
+
+    #[test]
+    fn wall_stats_ride_along_but_stay_out_of_identity() {
+        let rep = ScenarioRunner::new().run(&smoke(Framework::SectorSphere, 2_000_000));
+        let w = rep.wall.expect("every run carries wall stats");
+        assert!(w.wall_secs > 0.0);
+        assert!(w.events_per_sec > 0.0);
+        // Serialization drops them (reports must stay byte-comparable
+        // across machines and thread counts), and equality ignores them.
+        let back = RunReport::from_json(&Json::parse(&rep.to_json().to_string()).unwrap()).unwrap();
+        assert!(back.wall.is_none());
+        assert_eq!(back, rep);
+        assert!(!rep.to_json().to_string().contains("wall"));
+    }
+
+    #[test]
+    fn composed_axes_keep_the_sequential_mega_driver() {
+        // A composed axis (here the monitor) forces the sequential
+        // driver; the plain twin takes the sharded engine. Both must
+        // land every transfer.
+        let sc = Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(30))
+            .framework(Framework::MegaChurn)
+            .workload(WorkloadSpec::malstone_a(400))
+            .name("mega-axes")
+            .build();
+        let sharded = ScenarioRunner::new().run(&sc);
+        let sequential = ScenarioRunner::new().with_monitor(5.0).run(&sc);
+        assert_eq!(sharded.metric("flows"), Some(400.0));
+        assert_eq!(sequential.metric("flows"), Some(400.0));
+        assert!(sequential.monitor.is_some(), "monitored run kept its summary");
     }
 
     #[test]

@@ -15,6 +15,13 @@
 //! MalStone oracle-equality tests are the guard). The §7 interop
 //! compositions (`CloudStoreMr`, `HadoopOverSector`) are new
 //! storage × schedule × exchange combinations of the same machinery.
+//!
+//! The dataflow's barrier and shuffle couple every node to every other
+//! through shared scheduler state (not messages with a latency floor),
+//! so these frameworks run on the sequential engine; only workloads
+//! whose cross-domain traffic is channel-shaped (mega-churn) take the
+//! sharded path — see [`crate::sim::par`] and
+//! [`crate::coordinator::ScenarioRunner`].
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};

@@ -18,6 +18,7 @@
 //! | SIM003 | everything scanned            | ambient randomness (`thread_rng`, `from_entropy`, `RandomState`, …) — draws go through the seeded `util::rng::Rng` |
 //! | SIM004 | all but entry points²         | `println!`/`eprintln!`/`print!`/`eprint!` outside binary entry points |
 //! | SIM005 | flow/water-filling paths³     | exact `f64` `==`/`!=` against float literals |
+//! | SIM006 | all but `sim/par.rs`, `gmp/`⁴ | thread spawns and parallelism crates (`thread::spawn`, `thread::Builder`, `rayon`, `crossbeam`, `JoinHandle`, `yield_now`) |
 //! | SIM000 | everywhere                    | a waiver comment with no justification (not waivable) |
 //!
 //! ¹ `sim/`, `net/`, `framework/`, `ops/`, `coordinator/`, `sector/`,
@@ -30,6 +31,11 @@
 //! ² `main.rs`, `bin/`, and `benches/` — benches are plain `fn main`
 //!   programs whose printed report is their product.
 //! ³ `net/flows.rs`, `net/mod.rs`, `transport/`.
+//! ⁴ Ambient parallelism is a determinism hazard: any thread that touches
+//!   simulated state races the event order. [`crate::sim::par`] is the one
+//!   sanctioned harness (its lookahead protocol *is* the determinism
+//!   argument), and `gmp/` pumps real UDP sockets on I/O threads that
+//!   never see simulated state.
 //!
 //! ## Waivers
 //!
@@ -87,6 +93,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("SIM003", "ambient randomness; all draws go through the seeded util::rng::Rng"),
     ("SIM004", "print to stdout/stderr outside a binary entry point"),
     ("SIM005", "exact f64 ==/!= comparison in a flow/water-filling path"),
+    ("SIM006", "thread spawn or parallelism crate outside sim/par.rs"),
 ];
 
 /// Scan every `.rs` file under `root`, visiting directories and files in

@@ -55,6 +55,19 @@ const RANDOM_SOURCES: &[&str] =
 /// Print macros — SIM004 triggers outside entry points.
 const PRINT_MACROS: &[&str] = &["println!", "eprintln!", "print!", "eprint!"];
 
+/// Paths exempt from SIM006: `sim/par.rs` is the one module allowed to
+/// spawn threads (the conservative parallel harness — determinism is its
+/// whole contract), and `gmp/` drives *real* UDP sockets whose RX pumps
+/// are real-world I/O threads that never touch simulated state.
+const PAR_EXEMPT: &[&str] = &["sim/par.rs", "gmp/"];
+
+/// Thread-spawn and ambient-parallelism markers — SIM006 triggers. Whole
+/// identifiers (`rayon`, `crossbeam`, `JoinHandle`, `yield_now`) match on
+/// word boundaries; the `thread::` forms match the path spelling, so a
+/// simulation-side function named `spawn` does not trip the rule.
+const PAR_PATHS: &[&str] = &["thread::spawn", "thread::Builder"];
+const PAR_WORDS: &[&str] = &["rayon", "crossbeam", "JoinHandle", "yield_now"];
+
 #[derive(Debug, Clone, PartialEq)]
 enum Tok {
     Ident(String),
@@ -337,6 +350,7 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
     // Benches are plain `fn main` programs (harness = false): printing a
     // report is their job, exactly like `main.rs` and `bin/`.
     let entry = rel == "main.rs" || rel.starts_with("bin/") || rel.starts_with("benches/");
+    let par_exempt = PAR_EXEMPT.iter().any(|p| rel == *p || rel.starts_with(*p));
 
     let line_toks: Vec<Vec<Tok>> = stripped.code.iter().map(|l| lex(l)).collect();
     let mut hash_names: BTreeSet<String> = BTreeSet::new();
@@ -395,6 +409,18 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
                 if !waived("SIM004", idx, idx) {
                     let msg = format!("`{mac}` outside a binary entry point");
                     push_unique(&mut out, finding(idx, "SIM004", msg));
+                }
+            }
+        }
+        if !par_exempt {
+            let tok = PAR_PATHS
+                .iter()
+                .find(|t| code.contains(*t))
+                .or_else(|| PAR_WORDS.iter().find(|t| contains_word(code, t)));
+            if let Some(tok) = tok {
+                if !waived("SIM006", idx, idx) {
+                    let msg = format!("`{tok}` outside sim/par.rs (ambient parallelism)");
+                    push_unique(&mut out, finding(idx, "SIM006", msg));
                 }
             }
         }
@@ -648,6 +674,42 @@ mod tests {
         assert_eq!(rules_of(&fs), vec!["SIM005"]);
         let fs = scan_source("net/flows.rs", "fn f(x: f64) -> bool { x == 1e-9 }\n");
         assert_eq!(rules_of(&fs), vec!["SIM005"]);
+    }
+
+    #[test]
+    fn sim006_flags_thread_use_outside_sim_par() {
+        let src = "fn f() { let h = std::thread::spawn(|| {}); h.join().unwrap(); }\n";
+        assert_eq!(rules_of(&scan_source("coordinator/x.rs", src)), vec!["SIM006"]);
+        assert!(scan_source("sim/par.rs", src).is_empty(), "the parallel harness is exempt");
+        assert!(scan_source("gmp/endpoint.rs", src).is_empty(), "real-socket pumps are exempt");
+    }
+
+    #[test]
+    fn sim006_flags_parallelism_crates_and_sync_markers() {
+        let fs = scan_source("net/x.rs", "use rayon::prelude::*;\n");
+        assert_eq!(rules_of(&fs), vec!["SIM006"]);
+        let fs = scan_source("sim/engine.rs", "fn f() { std::thread::yield_now(); }\n");
+        assert_eq!(rules_of(&fs), vec!["SIM006"]);
+        assert!(
+            scan_source("net/x.rs", "fn crossbeam_like() {}\n").is_empty(),
+            "identifier boundaries respected"
+        );
+        assert!(
+            scan_source("benches/x.rs", "fn f(spawn: u32) -> u32 { spawn }\n").is_empty(),
+            "a simulation-side `spawn` name is fine"
+        );
+    }
+
+    #[test]
+    fn sim006_waiver_with_reason_passes() {
+        let src = concat!(
+            "fn f() {\n",
+            "    // simlint: allow(SIM006) — measurement thread outside the simulation\n",
+            "    let h = std::thread::spawn(|| {});\n",
+            "    h.join().unwrap();\n",
+            "}\n",
+        );
+        assert!(scan_source("util/x.rs", src).is_empty());
     }
 
     #[test]

@@ -35,6 +35,8 @@ const USAGE: &str = "usage: oct <command>  (oct help <command> for details)
   scenarios                        list registered scenario sets
   scenarios <set> [scale] [--json] run one set through the ScenarioRunner
   alerts <set> [scale]             run one set; print the ops alert log as JSON lines
+  --threads N                      worker threads for shardable scenarios (any
+                                   scenario-running command; byte-identical output)
   monitor [secs]                   Figure 3: live ANSI heatmap of a run
   provision                        §2.2 growth-plan provisioning demo
   slices                           tenant-slice admission demo (carve/queue/release)
@@ -55,13 +57,16 @@ fn detailed_usage(cmd: &str) -> Option<&'static str> {
         "table2" => "usage: oct table2 [scale]\n\
              Run the Table 2 set (local vs distributed wide-area penalty,\n\
              15B records) at 1/scale (default 100) with its shape checks.",
-        "scenarios" => "usage: oct scenarios [<set> [scale]] [--json]\n\
+        "scenarios" => "usage: oct scenarios [<set> [scale]] [--json] [--threads N]\n\
              Without arguments: list the registered scenario sets.\n\
              With a set name: run it at 1/scale (default 100) through the\n\
              ScenarioRunner (tenancy groups run concurrently on one shared\n\
              testbed), print a report table and the set's shape-check verdicts.\n\
              --json emits one RunReport JSON line per scenario plus one line per\n\
-             check. Exit 0 = all checks pass, 1 = a check failed, 2 = unknown set.",
+             check. Exit 0 = all checks pass, 1 = a check failed, 2 = unknown set.\n\
+             --threads N (or OCT_THREADS=N) runs shardable scenarios on the\n\
+             parallel engine with N worker threads; reports are byte-identical\n\
+             to --threads 1. Accepted by every scenario-running command.",
         "alerts" => "usage: oct alerts <set> [scale]\n\
              Run one set and print every ops-enabled scenario's alert log as JSON\n\
              lines plus a per-scenario summary line (ready for jq).",
@@ -112,7 +117,25 @@ fn print_help(topic: Option<&str>) -> i32 {
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // `--threads N` is accepted anywhere on the line; the parallel engine
+    // produces byte-identical reports at any thread count, so the flag
+    // composes with every scenario-running command.
+    let threads: Option<usize> = match args.iter().position(|a| a == "--threads") {
+        Some(i) => {
+            let n: usize = args
+                .get(i + 1)
+                .and_then(|s| s.parse().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or_else(|| {
+                    eprintln!("oct: --threads needs a positive integer\n{USAGE}");
+                    std::process::exit(2);
+                });
+            args.drain(i..=i + 1);
+            Some(n)
+        }
+        None => None,
+    };
     // `oct --help` and `oct <command> --help` both land here, exit 0.
     if args.iter().any(|a| a == "--help" || a == "-h") {
         let topic = args.iter().find(|a| *a != "--help" && *a != "-h");
@@ -123,7 +146,7 @@ fn main() {
         "topology" => print!("{}", Topology::oct_2009().describe()),
         "table1" | "table2" => {
             let scale = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
-            std::process::exit(run_set_cli(cmd, scale, false));
+            std::process::exit(run_set_cli(cmd, scale, false, threads));
         }
         "scenarios" => {
             let json = args.iter().any(|a| a.as_str() == "--json");
@@ -133,7 +156,7 @@ fn main() {
                 None => list_scenario_sets(),
                 Some(name) => {
                     let scale = rest.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
-                    std::process::exit(run_set_cli(name, scale, json));
+                    std::process::exit(run_set_cli(name, scale, json, threads));
                 }
             }
         }
@@ -144,7 +167,7 @@ fn main() {
             }
             Some(name) => {
                 let scale = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
-                std::process::exit(run_alerts_cli(name, scale));
+                std::process::exit(run_alerts_cli(name, scale, threads));
             }
         },
         "monitor" => {
@@ -241,7 +264,7 @@ fn list_scenario_sets() {
 
 /// Run one registry set; returns the process exit code (0 = all checks
 /// pass, 1 = a shape check failed, 2 = unknown set).
-fn run_set_cli(name: &str, scale: u64, json: bool) -> i32 {
+fn run_set_cli(name: &str, scale: u64, json: bool, threads: Option<usize>) -> i32 {
     let Some(set) = find_set(name) else {
         eprintln!(
             "oct: unknown scenario set '{name}'; registered sets: {}",
@@ -253,9 +276,13 @@ fn run_set_cli(name: &str, scale: u64, json: bool) -> i32 {
     if !json {
         println!("{}: {} (scale 1/{scale}; shape-preserving)", set.name, set.description);
     }
+    let mut runner = ScenarioRunner::new();
+    if let Some(n) = threads {
+        runner = runner.with_threads(n);
+    }
     // `run_set` executes tenancy groups concurrently on one shared
     // testbed and returns reports in scenario order.
-    let reports = ScenarioRunner::new().run_set(&set);
+    let reports = runner.run_set(&set);
     if json {
         for r in &reports {
             println!("{}", r.to_json());
@@ -290,7 +317,7 @@ fn run_set_cli(name: &str, scale: u64, json: bool) -> i32 {
 /// lines (`{"scenario": ..., "t": ..., "kind": ..., "subject": ...,
 /// "detail": ...}`), ready for `jq`. Scenarios without an ops plane emit
 /// nothing. Exit code 0 on success, 2 on an unknown set.
-fn run_alerts_cli(name: &str, scale: u64) -> i32 {
+fn run_alerts_cli(name: &str, scale: u64, threads: Option<usize>) -> i32 {
     use oct::util::json::{obj, Json};
     let Some(set) = find_set(name) else {
         eprintln!(
@@ -300,7 +327,10 @@ fn run_alerts_cli(name: &str, scale: u64) -> i32 {
         return 2;
     };
     let set = set.scaled_down(scale);
-    let runner = ScenarioRunner::new();
+    let mut runner = ScenarioRunner::new();
+    if let Some(n) = threads {
+        runner = runner.with_threads(n);
+    }
     for sc in &set.scenarios {
         let rep = runner.run(sc);
         let Some(ops) = rep.ops else { continue };

@@ -235,6 +235,11 @@ pub struct FlowNet {
     /// count, for deriving an aggregate's timer lane from its path.
     link_domain: Vec<Domain>,
     num_sites: usize,
+    /// When set (sorted, deduplicated): the only links this network is
+    /// allowed to carry flows on — the per-shard link partition of the
+    /// parallel engine. Bounds the per-advance byte sweep and the
+    /// full-recompute seed set to O(claimed) instead of O(all links).
+    claimed: Option<Vec<u32>>,
     /// Aggregate slab: slot indices are dense and recycled through `free`.
     slots: Vec<Slot>,
     free: Vec<u32>,
@@ -278,6 +283,7 @@ impl FlowNet {
             link_bytes: vec![0.0; n],
             link_domain,
             num_sites: lanes - 1,
+            claimed: None,
             slots: Vec::new(),
             free: Vec::new(),
             active: Vec::new(),
@@ -304,6 +310,26 @@ impl FlowNet {
     /// The configuration this network runs under.
     pub fn config(&self) -> FlowNetConfig {
         self.cfg
+    }
+
+    /// Restrict this network to a claimed subset of the topology's links
+    /// — the per-shard partition used by the parallel engine
+    /// ([`crate::sim::par`]): every shard instantiates the full link
+    /// table (so `LinkId`s stay globally meaningful) but only routes
+    /// flows over its own domain's links. Claiming shrinks the
+    /// full-recompute seed set and the per-advance byte-accrual sweep to
+    /// O(claimed links); all stored numbers are bitwise unchanged,
+    /// because an unclaimed link never has users and so always carries
+    /// rate 0. Admitting a flow that crosses an unclaimed link is a
+    /// shard-partition bug (debug-asserted).
+    pub fn claim_links(&mut self, links: &[LinkId]) {
+        let mut v: Vec<u32> = links.iter().map(|l| l.0 as u32).collect();
+        v.sort_unstable();
+        v.dedup();
+        if let Some(&hi) = v.last() {
+            assert!((hi as usize) < self.capacity.len(), "claimed link {hi} out of range");
+        }
+        self.claimed = Some(v);
     }
 
     /// Total completed flows (sanity/metrics). Counts members, not
@@ -481,9 +507,20 @@ impl FlowNet {
                 a.base += a.member_rate * dt;
             }
         }
-        for (l, rate) in self.link_rate.iter().enumerate() {
-            if *rate > 0.0 {
-                self.link_bytes[l] += rate * dt;
+        // Claimed nets sweep only their own links: unclaimed links can
+        // never carry rate here, so skipping them changes no bytes.
+        if let Some(claimed) = &self.claimed {
+            for &l in claimed {
+                let rate = self.link_rate[l as usize];
+                if rate > 0.0 {
+                    self.link_bytes[l as usize] += rate * dt;
+                }
+            }
+        } else {
+            for (l, rate) in self.link_rate.iter().enumerate() {
+                if *rate > 0.0 {
+                    self.link_bytes[l] += rate * dt;
+                }
             }
         }
         self.last_advance = now;
@@ -504,7 +541,13 @@ impl FlowNet {
         let mut sc = std::mem::take(&mut self.scratch);
         if full {
             sc.seeds.clear();
-            sc.seeds.extend(0..self.link_aggs.len() as u32);
+            // Claimed nets only ever host aggregates over claimed links
+            // (admit debug-asserts it), so seeding the claim reaches
+            // every component a whole-table seeding would.
+            match &self.claimed {
+                Some(c) => sc.seeds.extend_from_slice(c),
+                None => sc.seeds.extend(0..self.link_aggs.len() as u32),
+            }
         }
         sc.stamp += 1;
         let stamp = sc.stamp;
@@ -855,6 +898,15 @@ impl FlowNet {
         done: Callback,
         lane: Option<u32>,
     ) -> FlowId {
+        #[cfg(debug_assertions)]
+        if let Some(claimed) = &self.claimed {
+            for &LinkId(l) in &path {
+                assert!(
+                    claimed.binary_search(&(l as u32)).is_ok(),
+                    "flow admitted over unclaimed link {l}"
+                );
+            }
+        }
         let birth = self.next_birth;
         self.next_birth += 1;
         let cap_bits = cap.to_bits();
@@ -1307,6 +1359,55 @@ mod tests {
         eng.run();
         let d = done.borrow();
         assert!((d[0] - 10.0).abs() < 1e-6 && (d[1] - 10.0).abs() < 1e-6, "{d:?}");
+    }
+
+    /// Drive the same intra-rack flow mix on an unrestricted net and on
+    /// one that claimed only the involved links: completions, completion
+    /// times and per-link byte counters must agree bitwise.
+    fn run_site_flows(claim: bool) -> (u64, Vec<f64>, Vec<u64>) {
+        let t = two_site_topo();
+        let net = FlowNet::new(&t);
+        let mut eng = Engine::new();
+        let mut links = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
+        links.extend(t.path(t.racks[0].nodes[1], t.racks[0].nodes[0]));
+        links.extend(t.path(t.racks[0].nodes[0], t.racks[0].nodes[2]));
+        if claim {
+            net.borrow_mut().claim_links(&links);
+        }
+        let done = Rc::new(RefCell::new(Vec::new()));
+        for (src, dst, bytes) in [(0, 1, 400.0), (1, 0, 250.0), (0, 2, 700.0)] {
+            let done = done.clone();
+            let path = t.path(t.racks[0].nodes[src], t.racks[0].nodes[dst]);
+            FlowNet::start(&net, &mut eng, path, bytes, f64::INFINITY, move |e| {
+                done.borrow_mut().push(e.now());
+            });
+        }
+        eng.run();
+        let n = net.borrow();
+        let bytes: Vec<u64> = links.iter().map(|&l| n.link_bytes(l).to_bits()).collect();
+        (n.completions(), done.borrow().clone(), bytes)
+    }
+
+    #[test]
+    fn claimed_net_is_bitwise_identical_on_its_links() {
+        let unclaimed = run_site_flows(false);
+        let claimed = run_site_flows(true);
+        assert_eq!(unclaimed, claimed);
+        assert_eq!(claimed.0, 3);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "unclaimed link")]
+    fn admitting_over_unclaimed_link_is_a_bug() {
+        let t = two_site_topo();
+        let net = FlowNet::new(&t);
+        let mut eng = Engine::new();
+        let claim = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
+        net.borrow_mut().claim_links(&claim);
+        // Cross-site: traverses uplinks and the WAN link, none claimed.
+        let path = t.path(t.racks[0].nodes[0], t.racks[1].nodes[0]);
+        FlowNet::start(&net, &mut eng, path, 100.0, f64::INFINITY, |_| {});
     }
 
     #[test]

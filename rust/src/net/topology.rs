@@ -336,6 +336,16 @@ impl Topology {
         self.sites.len() + 1
     }
 
+    /// Minimum one-way delay between any two sites, seconds — the
+    /// physical floor under every cross-site interaction, and therefore
+    /// the lookahead available to the conservative parallel engine
+    /// ([`crate::sim::par`]): no event in one site's domain can influence
+    /// another site's domain sooner than this. `None` for a single-site
+    /// topology (no WAN coupling at all).
+    pub fn min_wan_owd(&self) -> Option<f64> {
+        self.site_owd.values().copied().fold(None, |m, d| Some(m.map_or(d, |m: f64| m.min(d))))
+    }
+
     /// Domain-aware path from `a` to `b`: [`Topology::path`] plus the
     /// domain the flow's completion timer lives in (the shared site, or
     /// [`Domain::Wan`] for inter-site traffic).
@@ -467,6 +477,19 @@ mod tests {
         let ucsd0 = t.racks[3].nodes[0];
         assert!(t.rtt(sl0, uic0) < 0.002);
         assert!(t.rtt(jhu0, ucsd0) > 0.07);
+    }
+
+    #[test]
+    fn min_wan_owd_is_the_chicago_pair() {
+        // StarLight–UIC at 1 ms RTT is the closest pair: 0.5 ms one-way.
+        // This is the parallel engine's lookahead floor, so pin it.
+        let t = Topology::oct_2009();
+        assert_eq!(t.min_wan_owd(), Some(0.0005));
+        // A single-site topology has no WAN coupling at all.
+        let mut solo = Topology::new();
+        let s = solo.add_site("only");
+        solo.add_rack(s, 4, &NodeSpec::default(), 1.25e9);
+        assert_eq!(solo.min_wan_owd(), None);
     }
 
     #[test]

@@ -29,6 +29,13 @@
 //! (re-execution cost) are all *measured*, not assumed — the
 //! [`OpsReport`] carried by every ops-enabled `RunReport` quantifies
 //! them.
+//!
+//! The ops plane's telemetry and remediation hops cut across every flow
+//! domain (node → site aggregator → central service) through shared
+//! closure state rather than the sharded engine's latency-bounded
+//! channels, so ops-enabled scenarios always run on the sequential
+//! engine — [`crate::coordinator::ScenarioRunner`]'s shardable gate
+//! excludes them by shape.
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};

@@ -107,6 +107,41 @@ impl Engine {
         self.schedule_at(now + dt, f)
     }
 
+    /// Schedule a cross-shard message delivery at absolute time `at`.
+    ///
+    /// Message events carry an *encoded* sequence key instead of drawing
+    /// from the local counter: bit 63 tags the event as a message, bits
+    /// 48..63 carry the input-channel index, and the low 48 bits carry the
+    /// channel's own delivery counter. Two consequences, both load-bearing
+    /// for the parallel engine's bit-identity guarantee
+    /// (see [`crate::sim::par`]):
+    ///
+    /// 1. At equal timestamps every *local* event (seq < 2⁶³) sorts before
+    ///    every message, and messages order among themselves by
+    ///    `(channel, msg_seq)` — a (time, domain, seq) order that does not
+    ///    depend on *when* the receiving shard drained its channels.
+    /// 2. Scheduling a message does not consume a local sequence number,
+    ///    so the local event order is byte-identical whether deliveries
+    ///    are interleaved (threads > 1) or batched (threads = 1).
+    pub fn schedule_msg<F: FnOnce(&mut Engine) + 'static>(
+        &mut self,
+        at: SimTime,
+        channel: u16,
+        msg_seq: u64,
+        f: F,
+    ) -> TimerId {
+        assert!(at >= self.now - 1e-9, "message into the past: at={at} now={}", self.now);
+        assert!(at.is_finite(), "non-finite message time");
+        assert!(channel < 1 << 15, "channel index overflows the tag bits");
+        assert!(msg_seq < 1 << 48, "per-channel message sequence overflow");
+        let seq = (1u64 << 63) | ((channel as u64) << 48) | msg_seq;
+        let prev = self.events.insert(seq, Box::new(f));
+        assert!(prev.is_none(), "duplicate message key (channel {channel}, seq {msg_seq})");
+        self.heap.push(Scheduled { time: at.max(self.now), seq });
+        debug_assert!(self.heap.len() >= self.events.len());
+        TimerId(seq)
+    }
+
     /// Cancel a scheduled event. Idempotent; cancelling an already-executed
     /// (or never-issued) id is a no-op. The callback is dropped immediately;
     /// the heap marker is purged when it pops or at the next compaction.
@@ -182,6 +217,36 @@ impl Engine {
         if self.now < t {
             self.now = t;
         }
+    }
+
+    /// Run every live event scheduled *strictly before* `t`. Unlike
+    /// [`Engine::run_until`] the boundary is exclusive and the clock is
+    /// never bumped to `t` — it rests at the last executed event. This is
+    /// the conservative-PDES pump primitive: a shard may only execute
+    /// events below its input horizon (events *at* the horizon could still
+    /// be preempted by an incoming message at that exact time), and its
+    /// clock must keep reporting real progress, not the horizon.
+    pub fn run_before(&mut self, t: SimTime) {
+        while let Some(nt) = self.next_time() {
+            if nt < t {
+                self.step();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Time of the earliest live event, if any. Purges stale (cancelled)
+    /// markers from the top of the heap so the answer reflects an event
+    /// that will actually execute.
+    pub fn next_time(&mut self) -> Option<SimTime> {
+        while let Some(ev) = self.heap.peek() {
+            if self.events.contains_key(&ev.seq) {
+                return Some(ev.time);
+            }
+            self.heap.pop();
+        }
+        None
     }
 
     /// Number of pending (non-cancelled) events. Exact and O(1).
@@ -533,6 +598,208 @@ mod tests {
         assert_eq!(bank.armed(), 0);
         e.run();
         assert_eq!(*hits.borrow(), 10);
+    }
+
+    #[test]
+    fn messages_sort_after_local_events_at_equal_time() {
+        let mut e = Engine::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        // Deliver the message first, then schedule local events at the
+        // same timestamp: the locals must still run first (bit 63 tags
+        // messages into a later tie-break class regardless of insertion
+        // order).
+        let l = log.clone();
+        e.schedule_msg(5.0, 0, 0, move |_| l.borrow_mut().push("msg"));
+        for tag in ["a", "b"] {
+            let l = log.clone();
+            e.schedule_at(5.0, move |_| l.borrow_mut().push(tag));
+        }
+        e.run();
+        assert_eq!(*log.borrow(), vec!["a", "b", "msg"]);
+    }
+
+    #[test]
+    fn messages_order_by_channel_then_sequence() {
+        let mut e = Engine::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        // Insert deliberately out of (channel, seq) order; execution must
+        // sort by the encoded key, not insertion order.
+        for (ch, seq) in [(1u16, 0u64), (0, 1), (1, 1), (0, 0)] {
+            let l = log.clone();
+            e.schedule_msg(2.0, ch, seq, move |_| l.borrow_mut().push((ch, seq)));
+        }
+        e.run();
+        assert_eq!(*log.borrow(), vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+        assert_eq!(e.executed(), 4);
+    }
+
+    #[test]
+    fn messages_do_not_consume_local_sequence_numbers() {
+        // Two runs that differ only in whether a message was interleaved
+        // between local schedules must execute the locals in the same
+        // relative order — the message lane must not shift local seqs.
+        let order = |with_msg: bool| {
+            let mut e = Engine::new();
+            let log = Rc::new(RefCell::new(Vec::new()));
+            let l = log.clone();
+            e.schedule_at(1.0, move |_| l.borrow_mut().push('a'));
+            if with_msg {
+                e.schedule_msg(1.0, 3, 7, |_| {});
+            }
+            let l = log.clone();
+            e.schedule_at(1.0, move |_| l.borrow_mut().push('b'));
+            e.run();
+            log.borrow().clone()
+        };
+        assert_eq!(order(false), vec!['a', 'b']);
+        assert_eq!(order(true), vec!['a', 'b']);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate message key")]
+    fn duplicate_message_key_panics() {
+        let mut e = Engine::new();
+        e.schedule_msg(1.0, 2, 9, |_| {});
+        e.schedule_msg(1.5, 2, 9, |_| {});
+    }
+
+    #[test]
+    fn run_before_is_strict_and_keeps_the_clock_honest() {
+        let mut e = Engine::new();
+        let hits = Rc::new(RefCell::new(Vec::new()));
+        for t in [1.0, 2.0, 3.0] {
+            let h = hits.clone();
+            e.schedule_at(t, move |_| h.borrow_mut().push(t));
+        }
+        // Strict boundary: the t=2 event is NOT executed by run_before(2),
+        // and the clock rests at the last executed event (1.0), not at the
+        // horizon — a shard's published progress must be real.
+        e.run_before(2.0);
+        assert_eq!(*hits.borrow(), vec![1.0]);
+        assert_eq!(e.now(), 1.0);
+        assert_eq!(e.next_time(), Some(2.0));
+        e.run_before(f64::INFINITY);
+        assert_eq!(*hits.borrow(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(e.next_time(), None);
+    }
+
+    #[test]
+    fn next_time_skips_cancelled_heads() {
+        let mut e = Engine::new();
+        let early = e.schedule_at(1.0, |_| {});
+        e.schedule_at(4.0, |_| {});
+        e.cancel(early);
+        assert_eq!(e.next_time(), Some(4.0));
+        // run_before must not be fooled by a stale earlier marker either.
+        let hits = Rc::new(RefCell::new(0));
+        let h = hits.clone();
+        e.schedule_at(2.0, move |_| *h.borrow_mut() += 1);
+        e.run_before(3.0);
+        assert_eq!(*hits.borrow(), 1);
+        assert_eq!(e.pending(), 1);
+    }
+
+    #[test]
+    fn timer_bank_lanes_are_isolated() {
+        let mut e = Engine::new();
+        let mut bank = TimerBank::new(4);
+        let hits = Rc::new(RefCell::new(Vec::new()));
+        for lane in 0..4 {
+            let h = hits.clone();
+            bank.arm(&mut e, lane, 10.0 + lane as f64, move |_| h.borrow_mut().push(lane));
+        }
+        // Disarming and re-arming lane 1 must leave the other lanes'
+        // deadlines and events untouched.
+        bank.disarm(&mut e, 1);
+        let h = hits.clone();
+        bank.arm(&mut e, 1, 20.0, move |_| h.borrow_mut().push(100));
+        assert_eq!(bank.deadline(0), Some(10.0));
+        assert_eq!(bank.deadline(1), Some(20.0));
+        assert_eq!(bank.deadline(2), Some(12.0));
+        assert_eq!(bank.deadline(3), Some(13.0));
+        e.run();
+        assert_eq!(*hits.borrow(), vec![0, 2, 3, 100]);
+    }
+
+    #[test]
+    fn timer_bank_cancel_then_rearm_same_lane() {
+        // The per-flow completion-timer pattern: a flow's deadline moves
+        // when bandwidth shifts — cancel, then re-arm the same lane at the
+        // new time. Only the final arm may fire.
+        let mut e = Engine::new();
+        let mut bank = TimerBank::new(1);
+        let hits = Rc::new(RefCell::new(Vec::new()));
+        let h = hits.clone();
+        bank.arm(&mut e, 0, 5.0, move |_| h.borrow_mut().push(5.0));
+        bank.disarm(&mut e, 0);
+        let h = hits.clone();
+        bank.arm(&mut e, 0, 3.0, move |_| h.borrow_mut().push(3.0));
+        // Re-arm without an explicit disarm: arm() replaces the pending
+        // event itself when the deadline differs.
+        let h = hits.clone();
+        bank.arm(&mut e, 0, 7.0, move |eng| {
+            h.borrow_mut().push(eng.now());
+        });
+        assert_eq!(e.pending(), 1);
+        e.run();
+        assert_eq!(*hits.borrow(), vec![7.0]);
+    }
+
+    #[test]
+    fn timer_bank_stale_cancel_after_fire_is_noop() {
+        let mut e = Engine::new();
+        let bank = Rc::new(RefCell::new(TimerBank::new(2)));
+        let hits = Rc::new(RefCell::new(0));
+        let (b2, h2) = (bank.clone(), hits.clone());
+        bank.borrow_mut().arm(&mut e, 0, 1.0, move |_| {
+            b2.borrow_mut().fired(0);
+            *h2.borrow_mut() += 1;
+        });
+        let h2 = hits.clone();
+        bank.borrow_mut().arm(&mut e, 1, 2.0, |_| {});
+        e.schedule_at(3.0, move |_| *h2.borrow_mut() += 10);
+        e.run_until(1.5);
+        // Lane 0 already fired; disarming it now must not cancel anything
+        // (in particular not a recycled seq belonging to another event).
+        let mut b = bank.borrow_mut();
+        b.disarm(&mut e, 0);
+        b.disarm(&mut e, 0); // doubly stale
+        assert_eq!(b.deadline(0), None);
+        drop(b);
+        e.run();
+        assert_eq!(*hits.borrow(), 11);
+        assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
+    fn timer_bank_heap_bounded_under_churn_property() {
+        crate::proptest::check("timer bank heap O(lanes) under re-arm churn", 20, |rng| {
+            let mut e = Engine::new();
+            let lanes = 8;
+            let mut bank = TimerBank::new(lanes);
+            for _ in 0..2000 {
+                let lane = rng.gen_range(lanes as u64) as usize;
+                if rng.chance(0.15) {
+                    bank.disarm(&mut e, lane);
+                } else {
+                    let at = e.now() + 1.0 + rng.f64() * 50.0;
+                    bank.arm(&mut e, lane, at, |_| {});
+                }
+                if rng.chance(0.1) {
+                    e.step();
+                }
+                // The whole point of the bank: however hard churn re-arms
+                // the lanes, live events stay <= lanes and the heap stays
+                // O(lanes), never O(total re-arms).
+                if e.pending() > lanes {
+                    return Err(format!("{} live events for {lanes} lanes", e.pending()));
+                }
+                if e.heap_len() > 2 * lanes + 66 {
+                    return Err(format!("heap {} for {lanes} lanes", e.heap_len()));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -4,10 +4,18 @@
 //! Hadoop MapReduce, Hadoop Streaming, Sphere — as processes inside a
 //! deterministic discrete-event simulator. The engine is a classic
 //! time-ordered event heap with closure events; substrate state is shared
-//! through `Rc<RefCell<...>>` handles (single-threaded by design: replays
-//! are bit-identical for a given seed).
+//! through `Rc<RefCell<...>>` handles, so a single shard is strictly
+//! single-threaded and replays are bit-identical for a given seed.
+//!
+//! [`par`] scales that out without giving the determinism up: shards
+//! (one engine per flow domain) run under a conservative lookahead
+//! protocol whose message ordering is encoded into the event keys
+//! ([`Engine::schedule_msg`]), so any thread count reproduces the exact
+//! sequential execution, byte for byte. It is the only module in the
+//! crate permitted to spawn threads (simlint SIM006).
 
 mod engine;
+pub mod par;
 pub mod resources;
 
-pub use engine::{Countdown, Engine, TimerBank, TimerId};
+pub use engine::{Countdown, Engine, SimTime, TimerBank, TimerId};

@@ -1,0 +1,502 @@
+//! Conservative (lookahead) parallel execution of sharded simulations —
+//! the only module in the crate allowed to touch `std::thread` (enforced
+//! by simlint rule SIM006; ambient parallelism anywhere else is a
+//! determinism hazard).
+//!
+//! # Model
+//!
+//! A simulation is split into `n` *shards*, each owning a private
+//! [`Engine`] plus whatever domain state the application wires in through
+//! [`ShardApp`]. Shards interact only via *messages* on latency-bounded
+//! channels: a message sent at simulated time `t` is delivered at exactly
+//! `t + L`, where the lookahead `L` is uniform across channels and
+//! strictly positive. The Open Cloud Testbed's architecture provides that
+//! bound for free — sites couple only through dedicated wide-area
+//! lightpaths whose one-way delay is bounded below by
+//! [`Topology::min_wan_owd`](crate::net::Topology::min_wan_owd) — which
+//! is exactly what a conservative PDES needs to let shards run ahead of
+//! each other safely.
+//!
+//! # Synchronization protocol
+//!
+//! Every shard publishes an *earliest output time* (EOT): a promise never
+//! again to send a message delivered before that time. A shard's
+//! *earliest input time* (EIT) is the minimum EOT over its peers; events
+//! strictly below the EIT cannot be preempted by any future message, so
+//! they are safe to execute. Each pump round therefore:
+//!
+//! 1. reads every peer's EOT (`Acquire`) — *before* draining, so a
+//!    message counted on by an observed EOT is never missed;
+//! 2. drains its input queues in fixed channel order, turning each
+//!    message into an engine event keyed by [`Engine::schedule_msg`];
+//! 3. executes local events strictly below the EIT
+//!    ([`Engine::run_before`]);
+//! 4. flushes its outbox into the peer queues, then re-publishes
+//!    `min(next local event, EIT) + L` (`Release`, monotone).
+//!
+//! Queue pushes happen-before the EOT store, so observing an EOT implies
+//! observing every message below it; monotone publication keeps that
+//! promise transitive across shards. `L > 0` forces the EOT lattice to
+//! strictly rise until it clears the global minimum event time, so the
+//! scheme cannot deadlock.
+//!
+//! # Determinism
+//!
+//! Thread count is **not allowed** to change results: `threads = 1` runs
+//! the very same pump code round-robin on the calling thread, and any
+//! `threads = N` run is bit-identical to it. This holds by construction,
+//! not by testing-and-hoping:
+//!
+//! * deliveries execute in [`Engine::schedule_msg`]'s encoded
+//!   `(time, channel, per-channel seq)` order, so *when* a receiver
+//!   happens to drain its queues cannot reorder execution;
+//! * message scheduling does not consume local sequence numbers, so the
+//!   local tie-break order is independent of delivery interleaving;
+//! * the conservative horizon guarantees no event runs until every
+//!   message that could precede it has arrived.
+//!
+//! The cross-thread-count determinism tests in `tests/determinism.rs`
+//! and the `engine_parallel` bench check the resulting byte-identity of
+//! whole `RunReport`s end to end.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::engine::{Engine, SimTime};
+
+/// A shard's outbound mailbox. Cloneable so application closures running
+/// inside engine events can capture it; the pump flushes it into the
+/// cross-shard queues at the end of every round.
+pub struct Outbox<M> {
+    buf: Rc<RefCell<Vec<(usize, SimTime, M)>>>,
+}
+
+impl<M> Clone for Outbox<M> {
+    fn clone(&self) -> Self {
+        Outbox { buf: self.buf.clone() }
+    }
+}
+
+impl<M> Outbox<M> {
+    fn new() -> Self {
+        Outbox { buf: Rc::new(RefCell::new(Vec::new())) }
+    }
+
+    /// Queue `msg` for shard `to`, stamped with the current simulated
+    /// time; it will be delivered at `eng.now() + L`.
+    pub fn send(&self, eng: &Engine, to: usize, msg: M) {
+        self.buf.borrow_mut().push((to, eng.now(), msg));
+    }
+}
+
+/// The application half of a shard: domain state plus the three hooks the
+/// pump drives. Created on the worker thread by a `Send` factory, so the
+/// state itself is free to use `Rc`/`RefCell` exactly like sequential
+/// simulation code — it never crosses a thread boundary.
+pub trait ShardApp {
+    /// Cross-shard message payload.
+    type Msg: Send + 'static;
+    /// Per-shard result, collected in shard-index order by
+    /// [`run_sharded`].
+    type Out: Send + 'static;
+
+    /// Seed initial local events (and optionally initial messages).
+    fn init(&mut self, eng: &mut Engine, out: &Outbox<Self::Msg>);
+
+    /// A message from shard `from` arriving at its delivery time
+    /// (`eng.now()` is the delivery time when this runs).
+    fn on_msg(&mut self, eng: &mut Engine, from: usize, msg: Self::Msg, out: &Outbox<Self::Msg>);
+
+    /// True once this shard is *certain* no further message will ever
+    /// arrive for it. The pump finishes a shard when its engine is
+    /// drained and either this holds or every peer has already finished.
+    /// Reporting `true` while a peer still owes this shard a message is
+    /// an application bug; [`run_sharded`] panics if any queue ends
+    /// non-empty.
+    fn quiescent(&self) -> bool;
+
+    /// Produce the shard's result. Called exactly once, after the engine
+    /// has fully drained.
+    fn finish(&mut self, eng: &mut Engine) -> Self::Out;
+}
+
+/// Cross-shard state: one EOT slot per shard and one FIFO queue per
+/// ordered shard pair (`from * n + to`), delivery-time-stamped.
+struct Shared<M> {
+    eot: Vec<AtomicU64>,
+    queues: Vec<Mutex<VecDeque<(SimTime, M)>>>,
+}
+
+/// One shard's event pump: engine + app + channel cursors. Deliberately
+/// `!Send` (the app state is `Rc`-based); in threaded mode each pump is
+/// built and driven on a single worker thread, in inline mode all pumps
+/// share the calling thread.
+struct Pump<A: ShardApp> {
+    idx: usize,
+    n: usize,
+    latency: SimTime,
+    eng: Engine,
+    app: Rc<RefCell<A>>,
+    outbox: Outbox<A::Msg>,
+    /// Per-input-channel delivery counters: the low 48 bits of the
+    /// message event keys. FIFO queues + deterministic sender order make
+    /// these identical across thread counts.
+    in_seq: Vec<u64>,
+    /// Last EOT this shard published (publication is monotone).
+    published: SimTime,
+    shared: Arc<Shared<A::Msg>>,
+    finished: bool,
+    out: Option<A::Out>,
+}
+
+impl<A: ShardApp> Pump<A> {
+    fn new(idx: usize, n: usize, latency: SimTime, shared: Arc<Shared<A::Msg>>, mut app: A) -> Self {
+        let mut eng = Engine::new();
+        let outbox = Outbox::new();
+        app.init(&mut eng, &outbox);
+        Pump {
+            idx,
+            n,
+            latency,
+            eng,
+            app: Rc::new(RefCell::new(app)),
+            outbox,
+            in_seq: vec![0; n],
+            published: 0.0,
+            shared,
+            finished: false,
+            out: None,
+        }
+    }
+
+    /// One conservative round. Returns true if anything moved — an event
+    /// executed, a message arrived, the published horizon rose, or the
+    /// shard finished — so callers can detect a global stall.
+    fn round(&mut self) -> bool {
+        debug_assert!(!self.finished);
+        let mut progress = false;
+
+        // 1. Read peer horizons BEFORE draining: a message promised by an
+        // EOT observed here is guaranteed to already sit in the queue.
+        let mut eit = f64::INFINITY;
+        for (j, slot) in self.shared.eot.iter().enumerate() {
+            if j != self.idx {
+                eit = eit.min(f64::from_bits(slot.load(Ordering::Acquire)));
+            }
+        }
+
+        // 2. Drain input channels in fixed order; every message becomes
+        // an engine event keyed by (time, channel, per-channel seq).
+        let mut batch: Vec<(SimTime, A::Msg)> = Vec::new();
+        for from in 0..self.n {
+            if from == self.idx {
+                continue;
+            }
+            {
+                let mut q = self.shared.queues[from * self.n + self.idx].lock().unwrap();
+                batch.extend(q.drain(..));
+            }
+            for (at, msg) in batch.drain(..) {
+                let seq = self.in_seq[from];
+                self.in_seq[from] += 1;
+                let app = self.app.clone();
+                let out = self.outbox.clone();
+                self.eng.schedule_msg(at, from as u16, seq, move |eng| {
+                    app.borrow_mut().on_msg(eng, from, msg, &out);
+                });
+                progress = true;
+            }
+        }
+
+        // 3. Execute the safe region. EIT == ∞ means every peer has
+        // finished: nothing can arrive anymore, drain unconditionally.
+        let before = self.eng.executed();
+        if eit == f64::INFINITY {
+            self.eng.run();
+        } else {
+            self.eng.run_before(eit);
+        }
+        progress |= self.eng.executed() > before;
+
+        // 4. Flush the outbox, THEN publish: queue pushes must
+        // happen-before the Release store so a reader observing the new
+        // horizon observes every message below it.
+        for (to, sent_at, msg) in self.outbox.buf.borrow_mut().drain(..) {
+            debug_assert!(to != self.idx, "shard messaging itself");
+            let deliver_at = sent_at + self.latency;
+            debug_assert!(
+                deliver_at >= self.published,
+                "send at {sent_at} breaks the published horizon {}",
+                self.published
+            );
+            self.shared.queues[self.idx * self.n + to].lock().unwrap().push_back((deliver_at, msg));
+        }
+
+        if self.eng.pending() == 0 && (eit == f64::INFINITY || self.app.borrow().quiescent()) {
+            let result = self.app.borrow_mut().finish(&mut self.eng);
+            self.out = Some(result);
+            self.finished = true;
+            self.shared.eot[self.idx].store(f64::INFINITY.to_bits(), Ordering::Release);
+            return true;
+        }
+
+        let next = self.eng.next_time().unwrap_or(f64::INFINITY);
+        let bound = (next.min(eit) + self.latency).max(self.published);
+        progress |= bound > self.published;
+        self.published = bound;
+        self.shared.eot[self.idx].store(bound.to_bits(), Ordering::Release);
+        progress
+    }
+}
+
+/// Drive `pumps` round-robin until all finish. `stall_is_fatal` is set in
+/// inline mode, where a full zero-progress pass over every live pump is
+/// provably a bug (with L > 0 the horizon lattice must rise); worker
+/// threads instead yield, since a thread's local stall just means it is
+/// waiting on a peer thread.
+fn drive<A: ShardApp>(pumps: &mut [Pump<A>], stall_is_fatal: bool) {
+    loop {
+        let mut progress = false;
+        let mut all_done = true;
+        for p in pumps.iter_mut() {
+            if p.finished {
+                continue;
+            }
+            progress |= p.round();
+            all_done &= p.finished;
+        }
+        if all_done {
+            return;
+        }
+        if !progress {
+            if stall_is_fatal {
+                panic!("parallel engine stalled: no shard can make progress");
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Run `factories.len()` shards to completion and return their results in
+/// shard-index order.
+///
+/// `latency` is the lookahead `L` (strictly positive — it is the whole
+/// basis of the conservative synchronization). `threads` is clamped to
+/// `1..=shards`; `threads == 1` runs every pump inline on the calling
+/// thread with **bit-identical** results to any multi-threaded run (see
+/// the module docs for why that is structural, not incidental).
+pub fn run_sharded<A, F>(latency: SimTime, factories: Vec<F>, threads: usize) -> Vec<A::Out>
+where
+    A: ShardApp + 'static,
+    F: FnOnce() -> A + Send + 'static,
+{
+    assert!(
+        latency.is_finite() && latency > 0.0,
+        "conservative sync needs strictly positive finite lookahead, got {latency}"
+    );
+    let n = factories.len();
+    assert!(n > 0, "no shards");
+    assert!(n <= 1 << 15, "shard count overflows the message channel tag");
+    let shared = Arc::new(Shared {
+        eot: (0..n).map(|_| AtomicU64::new(0.0f64.to_bits())).collect(),
+        queues: (0..n * n).map(|_| Mutex::new(VecDeque::new())).collect(),
+    });
+    let threads = threads.clamp(1, n);
+
+    let mut outs: Vec<Option<A::Out>> = (0..n).map(|_| None).collect();
+    if threads == 1 {
+        let mut pumps: Vec<Pump<A>> = factories
+            .into_iter()
+            .enumerate()
+            .map(|(i, f)| Pump::new(i, n, latency, shared.clone(), f()))
+            .collect();
+        drive(&mut pumps, true);
+        for p in pumps {
+            outs[p.idx] = p.out;
+        }
+    } else {
+        // Deal shards round-robin onto workers; each worker builds its
+        // pumps locally (the app state is !Send by design) and returns
+        // (shard index, result) pairs.
+        let mut per_worker: Vec<Vec<(usize, F)>> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, f) in factories.into_iter().enumerate() {
+            per_worker[i % threads].push((i, f));
+        }
+        let handles: Vec<_> = per_worker
+            .into_iter()
+            .map(|mine| {
+                let shared = shared.clone();
+                std::thread::spawn(move || {
+                    let mut pumps: Vec<Pump<A>> = mine
+                        .into_iter()
+                        .map(|(i, f)| Pump::new(i, n, latency, shared.clone(), f()))
+                        .collect();
+                    drive(&mut pumps, false);
+                    pumps.into_iter().map(|p| (p.idx, p.out)).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, out) in h.join().expect("shard worker panicked") {
+                outs[i] = out;
+            }
+        }
+    }
+
+    for (k, q) in shared.queues.iter().enumerate() {
+        assert!(
+            q.lock().unwrap().is_empty(),
+            "message from shard {} to finished shard {} was never delivered \
+             (quiescent() lied)",
+            k / n,
+            k % n
+        );
+    }
+    outs.into_iter().map(|o| o.expect("shard finished without a result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two shards volley a counter back and forth `limit` times; each
+    /// logs every delivery time. Exercises both termination paths: the
+    /// shard holding the final message finishes via `quiescent`, the
+    /// other via the all-peers-finished (EIT == ∞) rule.
+    struct PingPong {
+        idx: usize,
+        limit: u64,
+        log: Vec<(SimTime, u64)>,
+        done: bool,
+    }
+
+    impl ShardApp for PingPong {
+        type Msg = u64;
+        type Out = Vec<(SimTime, u64)>;
+
+        fn init(&mut self, eng: &mut Engine, out: &Outbox<u64>) {
+            if self.idx == 0 {
+                out.send(eng, 1, 1);
+            }
+        }
+
+        fn on_msg(&mut self, eng: &mut Engine, from: usize, msg: u64, out: &Outbox<u64>) {
+            self.log.push((eng.now(), msg));
+            if msg < self.limit {
+                out.send(eng, from, msg + 1);
+            } else {
+                self.done = true;
+            }
+        }
+
+        fn quiescent(&self) -> bool {
+            self.done
+        }
+
+        fn finish(&mut self, _eng: &mut Engine) -> Vec<(SimTime, u64)> {
+            std::mem::take(&mut self.log)
+        }
+    }
+
+    fn ping_pong(threads: usize) -> Vec<Vec<(SimTime, u64)>> {
+        let mk = |idx: usize| move || PingPong { idx, limit: 20, log: Vec::new(), done: false };
+        run_sharded(0.25, vec![mk(0), mk(1)], threads)
+    }
+
+    #[test]
+    fn ping_pong_terminates_and_is_thread_count_invariant() {
+        let seq = ping_pong(1);
+        // Shard 1 sees the odd counters at L, 3L, ...; shard 0 the evens.
+        assert_eq!(seq[1][0], (0.25, 1));
+        assert_eq!(seq[0][0], (0.5, 2));
+        assert_eq!(seq[0].len() + seq[1].len(), 20);
+        assert_eq!(seq[1].last(), Some(&(0.25 * 19.0, 19)));
+        for threads in [2, 4] {
+            assert_eq!(ping_pong(threads), seq, "threads={threads} diverged");
+        }
+    }
+
+    /// Fan-in at one timestamp: shards 1..=3 each send their id to shard
+    /// 0 from a local event at t = 1, so all three deliveries land at
+    /// exactly 1 + L. Shard 0 also has its own local event at that very
+    /// time. Expected order: the local event first (messages sort after
+    /// locals at equal times), then the messages in channel order — on
+    /// every thread count.
+    struct FanIn {
+        idx: usize,
+        log: Rc<RefCell<Vec<i64>>>,
+        received: usize,
+    }
+
+    impl ShardApp for FanIn {
+        type Msg = usize;
+        type Out = Vec<i64>;
+
+        fn init(&mut self, eng: &mut Engine, out: &Outbox<usize>) {
+            if self.idx == 0 {
+                let log = self.log.clone();
+                eng.schedule_at(1.0 + 0.125, move |_| log.borrow_mut().push(-1));
+            } else {
+                let idx = self.idx;
+                let out = out.clone();
+                eng.schedule_at(1.0, move |eng| out.send(eng, 0, idx));
+            }
+        }
+
+        fn on_msg(&mut self, _eng: &mut Engine, from: usize, msg: usize, _out: &Outbox<usize>) {
+            assert_eq!(from, msg);
+            self.log.borrow_mut().push(from as i64);
+            self.received += 1;
+        }
+
+        fn quiescent(&self) -> bool {
+            self.idx != 0 || self.received == 3
+        }
+
+        fn finish(&mut self, _eng: &mut Engine) -> Vec<i64> {
+            self.log.borrow().clone()
+        }
+    }
+
+    #[test]
+    fn equal_time_fanin_orders_local_then_channel() {
+        for threads in [1, 2, 4] {
+            let outs = run_sharded(
+                0.125,
+                (0..4)
+                    .map(|idx| {
+                        move || FanIn { idx, log: Rc::new(RefCell::new(Vec::new())), received: 0 }
+                    })
+                    .collect::<Vec<_>>(),
+                threads,
+            );
+            assert_eq!(outs[0], vec![-1, 1, 2, 3], "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn quiescent_shard_with_no_traffic_finishes() {
+        struct Idle;
+        impl ShardApp for Idle {
+            type Msg = ();
+            type Out = u8;
+            fn init(&mut self, _eng: &mut Engine, _out: &Outbox<()>) {}
+            fn on_msg(&mut self, _e: &mut Engine, _f: usize, _m: (), _o: &Outbox<()>) {
+                unreachable!("no one sends to an Idle shard");
+            }
+            fn quiescent(&self) -> bool {
+                true
+            }
+            fn finish(&mut self, _eng: &mut Engine) -> u8 {
+                7
+            }
+        }
+        for threads in [1, 3] {
+            let outs = run_sharded(1.0, (0..3).map(|_| || Idle).collect::<Vec<_>>(), threads);
+            assert_eq!(outs, vec![7, 7, 7]);
+        }
+    }
+}

@@ -12,10 +12,17 @@
 //! every framework, the ops plane, provisioning, and the tenant
 //! scheduler. CI's debug-profile job runs these with the FlowNet audit
 //! and engine asserts live.
+//!
+//! The cross-thread-count tests at the bottom extend the contract to the
+//! sharded parallel engine: `--threads N` must reproduce the `--threads
+//! 1` bytes exactly. CI additionally runs the whole harness under
+//! `OCT_THREADS=1` and `OCT_THREADS=4` and diffs the two JSON streams.
 
 use oct::coordinator::{find_set, RunReport, ScenarioRunner};
 
 /// Run the named set once at `1/div` scale and serialize all its reports.
+/// The runner resolves its worker count from `OCT_THREADS` (default 1),
+/// so CI exercises this whole harness at several thread counts.
 fn run_serialized(name: &str, div: u64) -> String {
     let set = find_set(name).unwrap_or_else(|| panic!("unknown set {name}")).scaled_down(div);
     let reports: Vec<RunReport> = ScenarioRunner::new().run_set(&set);
@@ -23,18 +30,31 @@ fn run_serialized(name: &str, div: u64) -> String {
     reports.iter().map(|r| r.to_json().to_string()).collect::<Vec<_>>().join("\n")
 }
 
+/// [`run_serialized`] at an explicit worker count, overriding the env.
+fn run_serialized_threads(name: &str, div: u64, threads: usize) -> String {
+    let set = find_set(name).unwrap_or_else(|| panic!("unknown set {name}")).scaled_down(div);
+    let reports: Vec<RunReport> = ScenarioRunner::new().with_threads(threads).run_set(&set);
+    assert!(!reports.is_empty(), "{name}: no reports");
+    reports.iter().map(|r| r.to_json().to_string()).collect::<Vec<_>>().join("\n")
+}
+
+/// Compare two serialized report stacks line by line so a failure points
+/// at the first diverging report instead of dumping both documents.
+fn assert_same(name: &str, what: &str, a: &str, b: &str) {
+    if a != b {
+        for (i, (la, lb)) in a.lines().zip(b.lines()).enumerate() {
+            assert_eq!(la, lb, "{name}: report {i} diverges ({what})");
+        }
+        panic!("{name}: runs differ in report count ({what})");
+    }
+}
+
 /// The core assertion: two identically-configured runs must match byte
 /// for byte.
 fn assert_replays(name: &str, div: u64) {
     let a = run_serialized(name, div);
     let b = run_serialized(name, div);
-    if a != b {
-        // Point at the first diverging line to keep the failure readable.
-        for (i, (la, lb)) in a.lines().zip(b.lines()).enumerate() {
-            assert_eq!(la, lb, "{name}: report {i} diverges between runs");
-        }
-        panic!("{name}: runs differ in report count");
-    }
+    assert_same(name, "between runs", &a, &b);
 }
 
 // Divisors match the registry's own shape tests: small enough for CI,
@@ -92,4 +112,30 @@ fn ops_replays_identically() {
 #[test]
 fn tenancy_replays_identically() {
     assert_replays("tenancy", 100);
+}
+
+// ---- cross-thread-count determinism -----------------------------------
+//
+// The parallel engine's contract is stronger than replayability: the
+// *same bytes* at any worker count. Shardable scenarios (mega-churn)
+// take the sharded driver at every thread setting including 1, so these
+// comparisons pit identical drivers against different interleavings;
+// non-shardable sets must ignore the thread setting entirely.
+
+#[test]
+fn mega_churn_is_thread_count_invariant() {
+    let base = run_serialized_threads("mega-churn", 500, 1);
+    for threads in [2, 4, 8] {
+        let t = run_serialized_threads("mega-churn", 500, threads);
+        assert_same("mega-churn", &format!("1 vs {threads} threads"), &base, &t);
+    }
+}
+
+#[test]
+fn registry_sets_are_thread_count_invariant_at_4() {
+    for (name, div) in [("table1", 200), ("flow-churn", 100), ("ops", 100), ("tenancy", 100)] {
+        let a = run_serialized_threads(name, div, 1);
+        let b = run_serialized_threads(name, div, 4);
+        assert_same(name, "1 vs 4 threads", &a, &b);
+    }
 }
