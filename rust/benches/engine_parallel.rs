@@ -59,6 +59,15 @@ fn run_leg(div: u64, threads: usize) -> Leg {
 fn write_bench_json(div: u64, threads: u64, seq: &Leg, par: &Leg, speedup: f64) {
     let events_per_sec =
         par.reports[0].wall.map_or(Json::Null, |w| Json::Num(w.events_per_sec));
+    // The self-profiler's hot-path counters ride along so benchcmp can
+    // attribute a wall-time regression (e.g. a recompute-scope blowup
+    // shows up as refill/dirty growth at flat event counts). Counters
+    // are engine-deterministic; the sched ratios depend on the host.
+    let prof = &par.reports[0].profile;
+    let (stalled_rounds, lookahead_util) = match &prof.sched {
+        Some(s) => (Json::Num(s.stalled_rounds as f64), Json::Num(s.lookahead_utilization())),
+        None => (Json::Null, Json::Null),
+    };
     let doc = obj(vec![
         ("bench", Json::Str("engine_parallel".into())),
         ("scale_div", Json::Num(div as f64)),
@@ -69,6 +78,14 @@ fn write_bench_json(div: u64, threads: u64, seq: &Leg, par: &Leg, speedup: f64) 
         ("speedup_parallel_vs_sequential", Json::Num(speedup)),
         ("events_per_sec_parallel", events_per_sec),
         ("reports_byte_identical", Json::Bool(seq.json == par.json)),
+        ("profile_events", Json::Num(prof.events as f64)),
+        ("profile_timers_armed", Json::Num(prof.timers_armed as f64)),
+        ("profile_timers_cancelled", Json::Num(prof.timers_cancelled as f64)),
+        ("profile_channel_messages", Json::Num(prof.channel_messages as f64)),
+        ("profile_refill_components", Json::Num(prof.refill_components as f64)),
+        ("profile_dirty_links", Json::Num(prof.dirty_links as f64)),
+        ("profile_stalled_rounds", stalled_rounds),
+        ("profile_lookahead_utilization", lookahead_util),
     ]);
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

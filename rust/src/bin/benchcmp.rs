@@ -1,7 +1,7 @@
 //! `benchcmp` — gate bench results against committed baselines.
 //!
 //! ```text
-//! benchcmp <baseline.json> <current.json> [--tolerance PCT]
+//! benchcmp <baseline.json> <current.json> [--tolerance PCT] [--machine-tolerance PCT]
 //! ```
 //!
 //! Both files are `BENCH_*.json` documents written by the bench binaries
@@ -16,6 +16,15 @@
 //! - Wall-clock metrics (`*_wall_secs`) may grow by at most the
 //!   tolerance (default 20%); throughput and speedup metrics
 //!   (`*_per_sec*`, `speedup_*`) may shrink by at most the tolerance.
+//!   These are **machine-dependent**: `--machine-tolerance` (default:
+//!   the regular tolerance) loosens just them, so CI can run on slower
+//!   shared hardware without also loosening the deterministic gates.
+//! - Self-profiler counters (`profile_*`) are engine-deterministic at a
+//!   fixed scale, so they gate at the strict `--tolerance`: counter
+//!   growth (more re-fills, more dirty links, more stalls) is the
+//!   structural "why" behind a wall-time regression.
+//!   `profile_lookahead_utilization` gates downward (higher is better);
+//!   every other `profile_*` gates upward.
 //! - A `null` on either side skips that metric: baseline `null` means
 //!   "not yet recorded on a reference machine", current `null` means the
 //!   bench skipped that leg. Gating starts once a maintainer commits a
@@ -57,24 +66,43 @@ fn lower_is_better(key: &str) -> Option<bool> {
     if key.contains("per_sec") || key.starts_with("speedup") {
         return Some(false);
     }
+    if key == "profile_lookahead_utilization" {
+        return Some(false);
+    }
+    if key.starts_with("profile_") {
+        return Some(true);
+    }
     None
+}
+
+/// True for metrics whose value depends on the host (clock, throughput,
+/// speedup) rather than on the engine's deterministic execution — these
+/// gate against `--machine-tolerance`.
+fn is_machine_dependent(key: &str) -> bool {
+    key.ends_with("wall_secs") || key.contains("per_sec") || key.starts_with("speedup")
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut tolerance = 0.20f64;
+    let mut machine_tolerance: Option<f64> = None;
     let mut files: Vec<&String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
-        if args[i] == "--tolerance" {
-            tolerance = args
+        if args[i] == "--tolerance" || args[i] == "--machine-tolerance" {
+            let pct = args
                 .get(i + 1)
                 .and_then(|s| s.parse::<f64>().ok())
                 .map(|p| p / 100.0)
                 .unwrap_or_else(|| {
-                    eprintln!("benchcmp: --tolerance needs a percentage");
+                    eprintln!("benchcmp: {} needs a percentage", args[i]);
                     std::process::exit(2);
                 });
+            if args[i] == "--tolerance" {
+                tolerance = pct;
+            } else {
+                machine_tolerance = Some(pct);
+            }
             i += 2;
         } else {
             files.push(&args[i]);
@@ -82,9 +110,13 @@ fn main() {
         }
     }
     if files.len() != 2 {
-        eprintln!("usage: benchcmp <baseline.json> <current.json> [--tolerance PCT]");
+        eprintln!(
+            "usage: benchcmp <baseline.json> <current.json> \
+             [--tolerance PCT] [--machine-tolerance PCT]"
+        );
         std::process::exit(2);
     }
+    let machine_tolerance = machine_tolerance.unwrap_or(tolerance);
     let (baseline_path, current_path) = (files[0].as_str(), files[1].as_str());
     let (baseline, current) = match (load(baseline_path), load(current_path)) {
         (Ok(b), Ok(c)) => (b, c),
@@ -123,10 +155,11 @@ fn main() {
             continue;
         };
         gated += 1;
+        let tol = if is_machine_dependent(key) { machine_tolerance } else { tolerance };
         let (worse, limit) = if lower {
-            (c > b * (1.0 + tolerance), b * (1.0 + tolerance))
+            (c > b * (1.0 + tol), b * (1.0 + tol))
         } else {
-            (c < b * (1.0 - tolerance), b * (1.0 - tolerance))
+            (c < b * (1.0 - tol), b * (1.0 - tol))
         };
         if worse {
             eprintln!(
@@ -151,5 +184,9 @@ fn main() {
     if failed {
         std::process::exit(1);
     }
-    println!("{name}: within {:.0}% tolerance", tolerance * 100.0);
+    println!(
+        "{name}: within tolerance (counters {:.0}%, machine metrics {:.0}%)",
+        tolerance * 100.0,
+        machine_tolerance * 100.0
+    );
 }

@@ -26,6 +26,7 @@ use crate::sector::sphere::SphereReport;
 use crate::sector::SphereEngine;
 use crate::sim::par::{run_sharded, Outbox, ShardApp};
 use crate::sim::{Countdown, Engine};
+use crate::trace::{Arg, ProfileReport, Recorder, Stream, TraceSpec};
 use crate::transport::{self, Protocol};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -97,6 +98,10 @@ pub struct RunReport {
     /// Operations-plane results (detection latency, telemetry overhead,
     /// alerts, remediation) for ops-enabled runs.
     pub ops: Option<OpsReport>,
+    /// Engine hot-path counters: always on, deterministic, inside the
+    /// report's equality and serialization (its `sched` side-channel is
+    /// wall-derived and excluded by [`ProfileReport`] itself).
+    pub profile: ProfileReport,
     /// Host-side timing; see [`WallStats`] for why it is outside the
     /// report's equality and serialization.
     pub wall: Option<WallStats>,
@@ -120,6 +125,7 @@ impl PartialEq for RunReport {
             && self.metrics == other.metrics
             && self.monitor == other.monitor
             && self.ops == other.ops
+            && self.profile == other.profile
     }
 }
 
@@ -178,6 +184,7 @@ impl RunReport {
             ("metrics", metrics),
             ("monitor", monitor),
             ("ops", ops),
+            ("profile", self.profile.to_json()),
         ])
     }
 
@@ -228,6 +235,9 @@ impl RunReport {
             None | Some(Json::Null) => None,
             Some(o) => Some(OpsReport::from_json(o)?),
         };
+        // Pre-profile reports (older baselines) parse with zeroed
+        // counters rather than failing.
+        let profile = j.get("profile").map(ProfileReport::from_json).unwrap_or_default();
         let paper_secs = match j.get("paper_secs") {
             None | Some(Json::Null) => None,
             Some(v) => Some(v.as_f64().ok_or("bad 'paper_secs'")?),
@@ -247,6 +257,7 @@ impl RunReport {
             metrics,
             monitor,
             ops,
+            profile,
             wall: None,
         })
     }
@@ -373,6 +384,7 @@ pub struct ScenarioRunner {
     ops_override: Option<OpsConfig>,
     flow_cfg: FlowNetConfig,
     threads: Option<usize>,
+    trace_override: Option<TraceSpec>,
 }
 
 impl ScenarioRunner {
@@ -414,6 +426,21 @@ impl ScenarioRunner {
         self
     }
 
+    /// Trace every run with this spec, overriding whatever the scenario
+    /// carries. Harvest the merged stream through
+    /// [`ScenarioRunner::run_with_trace`] /
+    /// [`ScenarioRunner::run_set_with_trace`].
+    pub fn with_trace(mut self, spec: TraceSpec) -> ScenarioRunner {
+        self.trace_override = Some(spec);
+        self
+    }
+
+    /// The effective trace spec of a run: the runner override wins, else
+    /// the scenario's own axis, else tracing stays off.
+    fn trace_spec(&self, sc: &Scenario) -> Option<TraceSpec> {
+        self.trace_override.clone().or_else(|| sc.trace.clone())
+    }
+
     /// Worker threads for shardable runs: the builder override, else the
     /// `OCT_THREADS` environment variable, else 1.
     fn threads(&self) -> usize {
@@ -434,9 +461,21 @@ impl ScenarioRunner {
     /// same path and produce byte-identical reports; everything else
     /// runs sequentially. Either way the report carries [`WallStats`].
     pub fn run(&self, sc: &Scenario) -> RunReport {
+        self.run_traced(sc).0
+    }
+
+    /// Like [`ScenarioRunner::run`], also returning the merged
+    /// deterministic trace [`Stream`]. The stream is empty unless the
+    /// scenario (or [`ScenarioRunner::with_trace`]) carries a
+    /// [`TraceSpec`]; the report is byte-identical either way.
+    pub fn run_with_trace(&self, sc: &Scenario) -> (RunReport, Stream) {
+        self.run_traced(sc)
+    }
+
+    fn run_traced(&self, sc: &Scenario) -> (RunReport, Stream) {
         // simlint: allow(SIM002) — wall-clock timing *about* the run (throughput reporting); it never feeds back into simulated time.
         let t0 = std::time::Instant::now();
-        let (mut rep, executed) = if self.mega_shardable(sc) {
+        let (mut rep, executed, stream) = if self.mega_shardable(sc) {
             self.run_mega_sharded(sc)
         } else {
             self.run_sequential(sc)
@@ -446,13 +485,16 @@ impl ScenarioRunner {
             wall_secs,
             events_per_sec: if wall_secs > 0.0 { executed as f64 / wall_secs } else { 0.0 },
         });
-        rep
+        (rep, stream)
     }
 
     /// The single-engine path: one event heap drives the whole testbed.
-    fn run_sequential(&self, sc: &Scenario) -> (RunReport, u64) {
+    fn run_sequential(&self, sc: &Scenario) -> (RunReport, u64, Stream) {
         let cluster = Cluster::with_config(sc.topology.build(), self.flow_cfg);
         let mut eng = Engine::new();
+        if let Some(spec) = self.trace_spec(sc) {
+            eng.set_recorder(Recorder::new(&spec));
+        }
         let mon = self.monitor_interval.map(|iv| {
             let m = Monitor::new(cluster.topo.clone(), iv);
             Monitor::install(&m, &mut eng, &cluster.net, cluster.pools.clone());
@@ -461,7 +503,17 @@ impl ScenarioRunner {
         let run = self.launch(&cluster, sc, &mut eng, LaunchCtx::solo());
         self.drive(&mut eng, std::slice::from_ref(&run), &mon);
         let executed = eng.executed();
-        (self.assemble(&run, mon), executed)
+        let mut profile = eng.profile();
+        let (refills, dirty) = cluster.net.borrow().profile_counters();
+        profile.refill_components += refills;
+        profile.dirty_links += dirty;
+        let mut stream = Stream::new(cluster.topo.sites.len());
+        if let Some(rec) = eng.take_recorder() {
+            stream.absorb(rec);
+        }
+        let mut rep = self.assemble(&run, mon);
+        rep.profile = profile;
+        (rep, executed, stream)
     }
 
     /// True when a scenario can take the sharded engine path: a plain
@@ -498,7 +550,7 @@ impl ScenarioRunner {
     /// and pool NICs on the WAN shard), which
     /// [`FlowNet::claim_links`] turns into both a scope cut for full
     /// recomputes and a debug-build disjointness audit.
-    fn run_mega_sharded(&self, sc: &Scenario) -> (RunReport, u64) {
+    fn run_mega_sharded(&self, sc: &Scenario) -> (RunReport, u64, Stream) {
         // Build the topology and placement once, here: `Scenario` itself
         // can carry `Rc` builder closures and must not cross threads, so
         // each factory captures only plain `Send` data — an identical
@@ -512,11 +564,13 @@ impl ScenarioRunner {
         // completion report can land sooner.
         let lookahead = MEGA_CMD_SECS + topo.min_wan_owd().unwrap_or(0.0);
         let flow_cfg = self.flow_cfg;
+        let trace = self.trace_spec(sc);
         let factories: Vec<_> = (0..=num_sites)
             .map(|idx| {
                 let topo = topo.clone();
                 let nodes = nodes.clone();
-                move || MegaShard::build(topo, nodes, total, idx, flow_cfg)
+                let trace = trace.clone();
+                move || MegaShard::build(topo, nodes, total, idx, flow_cfg, trace)
             })
             .collect();
         let outs = run_sharded(lookahead, factories, self.threads());
@@ -528,17 +582,26 @@ impl ScenarioRunner {
         let mut executed = 0u64;
         let mut finished_at = 0.0f64;
         let mut link_bytes: BTreeMap<usize, f64> = BTreeMap::new();
-        for o in &outs {
+        let mut profile = ProfileReport::default();
+        // Recorders absorb in shard-index order — together with the
+        // canonical (time, domain) sort this fixes the exported order at
+        // any thread count.
+        let mut stream = Stream::new(num_sites);
+        for o in outs {
             flows += o.done;
             net_completions += o.net_completions;
             peak_inflight += o.peak_inflight;
             peak_active += o.peak_active;
             executed += o.executed;
             finished_at = finished_at.max(o.finished_at);
+            profile.add(&o.profile);
             // Claims are disjoint, so each link lands from exactly one
             // shard: the merge is a relabeling, not a float reduction.
             for &(l, b) in &o.link_bytes {
                 *link_bytes.entry(l as usize).or_insert(0.0) += b;
+            }
+            if let Some(rec) = o.recorder {
+                stream.absorb(rec);
             }
         }
         let bytes_of = |l: LinkId| link_bytes.get(&l.0).copied().unwrap_or(0.0);
@@ -593,9 +656,10 @@ impl ScenarioRunner {
             metrics,
             monitor: None,
             ops: None,
+            profile,
             wall: None,
         };
-        (rep, executed)
+        (rep, executed, stream)
     }
 
     /// Wire a scenario onto an engine: ops plane, faults, and either an
@@ -855,6 +919,7 @@ impl ScenarioRunner {
             metrics,
             monitor,
             ops: ops_report,
+            profile: ProfileReport::default(),
             wall: None,
         }
     }
@@ -885,6 +950,15 @@ impl ScenarioRunner {
     /// tenant's report. Fault plans, the ops plane, and the monitor are
     /// not composed with multi-tenancy yet.
     pub fn run_tenants(&self, scenarios: &[Scenario]) -> Vec<RunReport> {
+        self.run_tenants_traced(scenarios).0
+    }
+
+    /// The traced core of [`ScenarioRunner::run_tenants`]: one engine
+    /// (hence one recorder) serves the whole group, so the group shares
+    /// one merged stream — and, like wall stats, one group-wide
+    /// [`ProfileReport`] per report. Tracing turns on when the runner
+    /// override or *any* tenant scenario carries a [`TraceSpec`].
+    fn run_tenants_traced(&self, scenarios: &[Scenario]) -> (Vec<RunReport>, Stream) {
         // simlint: allow(SIM002) — wall-clock timing *about* the shared-testbed run; it never feeds back into simulated time.
         let t0 = std::time::Instant::now();
         assert!(!scenarios.is_empty(), "empty tenant group");
@@ -938,6 +1012,13 @@ impl ScenarioRunner {
         let cluster = Cluster::with_config(master, self.flow_cfg);
         let mut sched = SliceScheduler::new(cluster.topo.clone(), DEFAULT_SPARE_WAVE_GBPS);
         let mut eng = Engine::new();
+        let spec = self
+            .trace_override
+            .clone()
+            .or_else(|| scenarios.iter().find_map(|sc| sc.trace.clone()));
+        if let Some(spec) = spec {
+            eng.set_recorder(Recorder::new(&spec));
+        }
         // Dark waves idle at the control floor until their tenant lights
         // them through its provisioning phase.
         let dark: Vec<(LinkId, f64)> = waves
@@ -991,6 +1072,12 @@ impl ScenarioRunner {
                     None => break, // the head waits for a release
                     Some(slice) => {
                         queue.pop_front();
+                        let t = eng.now();
+                        if let Some(rec) = eng.recorder() {
+                            let dom = cluster.topo.num_domains() as u16;
+                            let a = [("tenant", Arg::S(tenant.clone()))];
+                            rec.instant(t, dom, 0, "tenant.admit", 0, &a);
+                        }
                         // The tenant's view of the shared testbed: same
                         // nodes, racks, and substrate handles, but its
                         // own wide-area routing. Grantless tenants ride
@@ -1030,20 +1117,31 @@ impl ScenarioRunner {
         }
         eng.run(); // drain trailing events (teardown timers etc.)
         // One engine ran the whole group, so every tenant's report
-        // carries the same (group-wide) wall stats.
+        // carries the same (group-wide) wall stats, profile counters,
+        // and trace stream.
         let wall_secs = t0.elapsed().as_secs_f64();
         let wall = Some(WallStats {
             wall_secs,
             events_per_sec: if wall_secs > 0.0 { eng.executed() as f64 / wall_secs } else { 0.0 },
         });
-        tenants
+        let mut profile = eng.profile();
+        let (refills, dirty) = cluster.net.borrow().profile_counters();
+        profile.refill_components += refills;
+        profile.dirty_links += dirty;
+        let mut stream = Stream::new(cluster.topo.sites.len());
+        if let Some(rec) = eng.take_recorder() {
+            stream.absorb(rec);
+        }
+        let reps = tenants
             .iter()
             .map(|t| {
                 let mut rep = self.assemble(t.run.as_ref().expect("tenant never launched"), None);
                 rep.wall = wall;
+                rep.profile = profile.clone();
                 rep
             })
-            .collect()
+            .collect();
+        (reps, stream)
     }
 
     /// Run a whole [`ScenarioSet`]: solo scenarios sequentially (each on
@@ -1052,22 +1150,40 @@ impl ScenarioRunner {
     /// scenario order regardless of execution order, so shape checks
     /// index as usual.
     pub fn run_set(&self, set: &ScenarioSet) -> Vec<RunReport> {
+        self.run_set_traced(set).0
+    }
+
+    /// Like [`ScenarioRunner::run_set`], also returning the set's merged
+    /// trace: per-scenario streams concatenated in set order (the
+    /// canonical export re-sorts by time within each run's events).
+    pub fn run_set_with_trace(&self, set: &ScenarioSet) -> (Vec<RunReport>, Stream) {
+        self.run_set_traced(set)
+    }
+
+    fn run_set_traced(&self, set: &ScenarioSet) -> (Vec<RunReport>, Stream) {
         let mut out: Vec<Option<RunReport>> = Vec::new();
         out.resize_with(set.scenarios.len(), || None);
+        let mut stream = Stream::new(0);
         let mut groups: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
         for (i, sc) in set.scenarios.iter().enumerate() {
             match &sc.tenancy {
-                None => out[i] = Some(self.run(sc)),
+                None => {
+                    let (rep, s) = self.run_traced(sc);
+                    out[i] = Some(rep);
+                    stream.append(s);
+                }
                 Some(t) => groups.entry(t.group).or_default().push(i),
             }
         }
         for idxs in groups.into_values() {
             let group: Vec<Scenario> = idxs.iter().map(|&i| set.scenarios[i].clone()).collect();
-            for (i, rep) in idxs.iter().zip(self.run_tenants(&group)) {
+            let (reps, s) = self.run_tenants_traced(&group);
+            stream.append(s);
+            for (i, rep) in idxs.iter().zip(reps) {
                 out[*i] = Some(rep);
             }
         }
-        out.into_iter().map(|r| r.expect("every scenario ran")).collect()
+        (out.into_iter().map(|r| r.expect("every scenario ran")).collect(), stream)
     }
 }
 
@@ -1135,8 +1251,21 @@ fn start_imaging(
     times: Rc<RefCell<ProvisionTimes>>,
 ) {
     let admitted = eng.now();
+    let dom = cluster.topo.num_domains() as u16; // control pseudo-domain
+    let mut span = 0;
+    if let Some(rec) = eng.recorder() {
+        span = rec.fresh_id();
+        let a = [("image", Arg::S(img.name.clone())), ("bytes", Arg::F(img.bytes))];
+        rec.begin(admitted, dom, 0, "provision.image", span, &a);
+    }
     let all = Countdown::new(nodes.len(), move |eng| {
-        times.borrow_mut().imaging_secs = eng.now() - admitted;
+        let t = eng.now();
+        times.borrow_mut().imaging_secs = t - admitted;
+        if span != 0 {
+            if let Some(rec) = eng.recorder() {
+                rec.end(t, dom, 0, "provision.image", span, &[]);
+            }
+        }
         done.arrive(eng);
     });
     for &n in nodes {
@@ -1170,6 +1299,14 @@ fn start_lightpath(
     times: Rc<RefCell<ProvisionTimes>>,
 ) {
     assert!(!links.is_empty(), "lightpath grant on a WAN-less topology");
+    let requested = eng.now();
+    let wan_dom = (cluster.topo.num_domains() - 1) as u16;
+    let mut span = 0;
+    if let Some(rec) = eng.recorder() {
+        span = rec.fresh_id();
+        let a = [("gbps", Arg::F(lp.gbps))];
+        rec.begin(requested, wan_dom, 0, "provision.lightpath", span, &a);
+    }
     let floor: Vec<(LinkId, f64)> = links.iter().map(|&l| (l, LIGHTPATH_FLOOR_BPS)).collect();
     FlowNet::set_capacities(&cluster.net, eng, &floor);
     let grant: Vec<(LinkId, f64)> = links.iter().map(|&l| (l, lp.gbps * 1e9 / 8.0)).collect();
@@ -1178,6 +1315,12 @@ fn start_lightpath(
     eng.schedule_in(setup, move |eng| {
         FlowNet::set_capacities(&net, eng, &grant);
         times.borrow_mut().lightpath_setup_secs = setup;
+        let t = eng.now();
+        if span != 0 {
+            if let Some(rec) = eng.recorder() {
+                rec.end(t, wan_dom, 0, "provision.lightpath", span, &[]);
+            }
+        }
         done.arrive(eng);
     });
 }
@@ -1289,10 +1432,15 @@ fn schedule_faults(
             Fault::NodeCrash { node } => {
                 assert!(node < nodes.len(), "crash target {node} outside the placement");
                 let n = nodes[node];
+                let dom = cluster.topo.node(n).site.0 as u16;
                 let plane = ops.as_ref().expect("a fault plan implies the ops plane").clone();
                 let ctrl = control.clone();
                 let failed = failed.clone();
                 eng.schedule_at(ev.at, move |eng| {
+                    let t = eng.now();
+                    if let Some(rec) = eng.recorder() {
+                        rec.instant(t, dom, n.0 as u32, "fault.crash", 0, &[]);
+                    }
                     failed.borrow_mut().insert(n);
                     plane.borrow_mut().mark_crashed(n, eng.now());
                     let c = ctrl.borrow().clone();
@@ -1304,6 +1452,8 @@ fn schedule_faults(
             Fault::NicDegrade { node, factor } => {
                 assert!(node < nodes.len(), "degrade target {node} outside the placement");
                 let nd = cluster.topo.node(nodes[node]);
+                let dom = nd.site.0 as u16;
+                let lane = nodes[node].0 as u32;
                 let (tx, rx) = (nd.nic_tx, nd.nic_rx);
                 let (ctx, crx) = {
                     let netb = cluster.net.borrow();
@@ -1311,6 +1461,11 @@ fn schedule_faults(
                 };
                 let net = cluster.net.clone();
                 eng.schedule_at(ev.at, move |eng| {
+                    let t = eng.now();
+                    if let Some(rec) = eng.recorder() {
+                        let a = [("factor", Arg::F(factor))];
+                        rec.instant(t, dom, lane, "fault.nic", 0, &a);
+                    }
                     FlowNet::set_capacity(&net, eng, tx, ctx * factor);
                     FlowNet::set_capacity(&net, eng, rx, crx * factor);
                 });
@@ -1318,8 +1473,14 @@ fn schedule_faults(
             Fault::LightpathFlap { factor } => {
                 let wan = wan_capacities(cluster);
                 assert!(!wan.is_empty(), "lightpath flap on a WAN-less topology");
+                let wan_dom = (cluster.topo.num_domains() - 1) as u16;
                 let net = cluster.net.clone();
                 eng.schedule_at(ev.at, move |eng| {
+                    let t = eng.now();
+                    if let Some(rec) = eng.recorder() {
+                        let a = [("factor", Arg::F(factor))];
+                        rec.instant(t, wan_dom, 0, "fault.wave", 0, &a);
+                    }
                     for &(l, cap) in &wan {
                         FlowNet::set_capacity(&net, eng, l, cap * factor);
                     }
@@ -1656,6 +1817,11 @@ struct MegaOut {
     executed: u64,
     /// Final byte counters of this shard's claimed links.
     link_bytes: Vec<(u32, f64)>,
+    /// This shard's engine + flow-core hot-path counters.
+    profile: ProfileReport,
+    /// This shard's trace ring (`Some` only on traced runs), harvested
+    /// off the engine at finish and merged in shard-index order.
+    recorder: Option<Recorder>,
 }
 
 /// One concurrency slot owned by a shard: its private RNG stream and the
@@ -1694,6 +1860,8 @@ struct MegaShard {
     env: Rc<MegaEnvS>,
     is_wan: bool,
     claimed: Vec<LinkId>,
+    /// `Some` installs a per-shard trace recorder at init.
+    trace: Option<TraceSpec>,
 }
 
 impl MegaShard {
@@ -1707,6 +1875,7 @@ impl MegaShard {
         total: u64,
         idx: usize,
         flow_cfg: FlowNetConfig,
+        trace: Option<TraceSpec>,
     ) -> MegaShard {
         let topo = Rc::new(topo);
         assert!(nodes.len() >= 2, "mega churn needs at least two nodes");
@@ -1793,6 +1962,7 @@ impl MegaShard {
             }),
             is_wan,
             claimed,
+            trace,
         }
     }
 }
@@ -1871,6 +2041,9 @@ impl ShardApp for MegaShard {
     type Out = MegaOut;
 
     fn init(&mut self, eng: &mut Engine, out: &Outbox<MegaMsg>) {
+        if let Some(spec) = &self.trace {
+            eng.set_recorder(Recorder::new(spec));
+        }
         let slots: Vec<u64> = self.env.st.borrow().slots.keys().copied().collect();
         for slot in slots {
             launch_mega_slot(&self.env, out, eng, slot);
@@ -1912,6 +2085,10 @@ impl ShardApp for MegaShard {
     fn finish(&mut self, eng: &mut Engine) -> MegaOut {
         let st = self.env.st.borrow();
         let netb = self.env.net.borrow();
+        let mut profile = eng.profile();
+        let (refills, dirty) = netb.profile_counters();
+        profile.refill_components += refills;
+        profile.dirty_links += dirty;
         MegaOut {
             done: st.done,
             peak_inflight: st.peak_inflight,
@@ -1920,6 +2097,8 @@ impl ShardApp for MegaShard {
             finished_at: eng.now(),
             executed: eng.executed(),
             link_bytes: self.claimed.iter().map(|&l| (l.0 as u32, netb.link_bytes(l))).collect(),
+            profile,
+            recorder: eng.take_recorder(),
         }
     }
 }
@@ -2246,6 +2425,55 @@ mod tests {
         let back =
             RunReport::from_json(&Json::parse(&reps[2].to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back, reps[2]);
+    }
+
+    #[test]
+    fn every_report_carries_profile_counters() {
+        let rep = ScenarioRunner::new().run(&smoke(Framework::SectorSphere, 2_000_000));
+        assert!(rep.profile.events > 0, "no events counted");
+        assert!(rep.profile.timers_armed > 0, "no timers counted");
+        assert!(rep.profile.refill_components > 0, "no water-filling counted");
+        assert!(rep.profile.dirty_links >= rep.profile.refill_components);
+        // Sequential run: no shard channel, no sched profile.
+        assert_eq!(rep.profile.channel_messages, 0);
+        assert!(rep.profile.sched.is_none());
+        // The counters survive the JSON round-trip and sit inside
+        // equality.
+        let back = RunReport::from_json(&Json::parse(&rep.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.profile, rep.profile);
+        // The sharded path sums per-shard counters and keeps the
+        // channel + sched lanes.
+        let mega = Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(30))
+            .framework(Framework::MegaChurn)
+            .workload(WorkloadSpec::malstone_a(400))
+            .name("mega-profile")
+            .build();
+        let mrep = ScenarioRunner::new().with_threads(2).run(&mega);
+        assert!(mrep.profile.events > 0);
+        assert!(mrep.profile.channel_messages > 0, "WAN slots crossed the channel");
+        let sched = mrep.profile.sched.as_ref().expect("sharded runs carry a sched profile");
+        assert!(sched.rounds > 0);
+        let u = sched.lookahead_utilization();
+        assert!((0.0..=1.0).contains(&u), "utilization {u}");
+    }
+
+    #[test]
+    fn tracing_changes_no_report_bytes() {
+        let sc = smoke(Framework::SectorSphere, 2_000_000);
+        let plain = ScenarioRunner::new().run(&sc);
+        let (traced, stream) =
+            ScenarioRunner::new().with_trace(TraceSpec::new()).run_with_trace(&sc);
+        assert!(!stream.is_empty(), "traced run recorded nothing");
+        assert_eq!(plain.to_json().to_string(), traced.to_json().to_string());
+        // The stream exports flow spans from the workload's transfers.
+        let js = stream.to_chrome_json();
+        assert!(js.contains("\"flow\""), "{}", &js[..js.len().min(600)]);
+        // An untraced runner hands back an empty stream, same report.
+        let (plain2, empty) = ScenarioRunner::new().run_with_trace(&sc);
+        assert!(empty.is_empty());
+        assert_eq!(plain2, plain);
     }
 
     #[test]

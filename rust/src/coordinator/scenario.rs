@@ -13,6 +13,7 @@ use std::rc::Rc;
 use crate::hadoop::FrameworkParams;
 use crate::net::{NodeId, Topology};
 use crate::ops::{FaultPlan, OpsConfig};
+use crate::trace::TraceSpec;
 
 /// How to build the physical testbed for a run.
 #[derive(Clone)]
@@ -356,6 +357,11 @@ pub struct Scenario {
     pub provisioning: ProvisioningSpec,
     /// `Some` marks this scenario as one tenant of a concurrent group.
     pub tenancy: Option<TenantSpec>,
+    /// `Some` records a deterministic sim-time trace of the run (span
+    /// and instant events, ring-bounded per shard) harvestable as a
+    /// Chrome Trace via the runner. Off by default: tracing must never
+    /// change a report byte.
+    pub trace: Option<TraceSpec>,
 }
 
 impl Scenario {
@@ -380,6 +386,7 @@ impl Scenario {
             ops: self.ops.clone(),
             provisioning: self.provisioning.clone(),
             tenancy: self.tenancy.clone(),
+            trace: self.trace.clone(),
         }
     }
 
@@ -438,6 +445,7 @@ impl Testbed {
             ops: None,
             provisioning: ProvisioningSpec::default(),
             tenancy: None,
+            trace: None,
         }
     }
 }
@@ -457,6 +465,7 @@ pub struct TestbedBuilder {
     ops: Option<OpsConfig>,
     provisioning: ProvisioningSpec,
     tenancy: Option<TenantSpec>,
+    trace: Option<TraceSpec>,
 }
 
 impl TestbedBuilder {
@@ -532,6 +541,13 @@ impl TestbedBuilder {
         self
     }
 
+    /// Record a deterministic sim-time trace of the run with this spec
+    /// (harvest it through the runner's `run_with_trace`).
+    pub fn trace(mut self, spec: TraceSpec) -> Self {
+        self.trace = Some(spec);
+        self
+    }
+
     pub fn build(self) -> Scenario {
         // `Local { site }` topologies default to the Table-2 local layout
         // (28 nodes on that site); everything else to Table 1's 5×4.
@@ -559,6 +575,7 @@ impl TestbedBuilder {
             ops: self.ops,
             provisioning: self.provisioning,
             tenancy: self.tenancy,
+            trace: self.trace,
         }
     }
 }
@@ -664,6 +681,17 @@ mod tests {
         let plain = Testbed::builder().build();
         assert!(plain.provisioning.is_empty());
         assert!(plain.tenancy.is_none());
+    }
+
+    #[test]
+    fn trace_axis_rides_the_builder_and_survives_scaling() {
+        let sc = Testbed::builder().trace(TraceSpec::with_cap(1024)).name("traced").build();
+        assert_eq!(sc.trace.as_ref().unwrap().cap, 1024);
+        // Scaling preserves the trace spec: ring capacity bounds memory,
+        // not workload size.
+        assert_eq!(sc.scaled_down(100).trace, sc.trace);
+        // Off by default — tracing must be opt-in.
+        assert!(Testbed::builder().build().trace.is_none());
     }
 
     #[test]

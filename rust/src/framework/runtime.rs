@@ -30,6 +30,7 @@ use std::rc::Rc;
 use crate::net::{Cluster, NodeId};
 use crate::sim::resources::CpuPool;
 use crate::sim::Engine;
+use crate::trace::Arg;
 use crate::transport::{self, Protocol};
 
 use super::exchange::ExchangeModel;
@@ -142,6 +143,11 @@ struct RtState {
     completed_p1: BTreeMap<NodeId, Vec<TaskInput>>,
     reexecuted: usize,
     done_cb: Option<Box<dyn FnOnce(&mut Engine, DataflowReport)>>,
+    /// Trace span ids (0 = this run is untraced): the `dataflow` span
+    /// and the currently-open phase span. Task span ids are
+    /// `trace_df << 32 | assignment id`.
+    trace_df: u64,
+    trace_phase: u64,
 }
 
 /// Handle onto a running dataflow — the operations plane's failure and
@@ -245,6 +251,22 @@ impl DataflowEngine {
             );
         }
         let tasks_total = spec.tasks.len();
+        // Dataflow + phase-1 spans live on the control domain (the job
+        // spans every site); ids come from the recorder's counter.
+        let mut trace_df = 0;
+        let mut trace_phase = 0;
+        {
+            let t = eng.now();
+            if let Some(rec) = eng.recorder() {
+                let dom = cluster.topo.num_domains() as u16;
+                trace_df = rec.fresh_id();
+                trace_phase = rec.fresh_id();
+                let name = [("name", Arg::S(spec.name.clone()))];
+                rec.begin(t, dom, 0, "dataflow", trace_df, &name);
+                let tasks = [("tasks", Arg::U(tasks_total as u64))];
+                rec.begin(t, dom, 0, "phase.map", trace_phase, &tasks);
+            }
+        }
         let sched = SlotScheduler::new(
             spec.nodes.clone(),
             spec.slots_per_node,
@@ -274,6 +296,8 @@ impl DataflowEngine {
             completed_p1: BTreeMap::new(),
             reexecuted: 0,
             done_cb: Some(Box::new(done)),
+            trace_df,
+            trace_phase,
             spec,
         }));
         Self::fill_slots(&st, eng);
@@ -290,13 +314,28 @@ impl DataflowEngine {
     /// Drain the scheduler: assign tasks until no worker slot may take one.
     fn fill_slots(st: &Rc<RefCell<RtState>>, eng: &mut Engine) {
         loop {
-            let task = {
+            let (task, stole) = {
                 let mut s = st.borrow_mut();
                 let topo = s.cluster.topo.clone();
-                s.sched.next_assignment(&topo)
+                let before = s.sched.stolen();
+                let task = s.sched.next_assignment(&topo);
+                (task, s.sched.stolen() > before)
             };
             match task {
-                Some((node, t)) => Self::run_task(st, eng, node, t),
+                Some((node, t)) => {
+                    if stole {
+                        let df = st.borrow().trace_df;
+                        if df != 0 {
+                            let tnow = eng.now();
+                            let dom = st.borrow().cluster.topo.node(node).site.0 as u16;
+                            if let Some(rec) = eng.recorder() {
+                                let home = [("home", Arg::U(t.node.0 as u64))];
+                                rec.instant(tnow, dom, node.0 as u32, "steal", 0, &home);
+                            }
+                        }
+                    }
+                    Self::run_task(st, eng, node, t)
+                }
                 None => break,
             }
         }
@@ -322,6 +361,15 @@ impl DataflowEngine {
             s.live.insert(aid, (node, task));
             (s.cluster.clone(), s.spec.protocol.clone(), s.spec.task_overhead, source, aid)
         };
+        let df = st.borrow().trace_df;
+        if df != 0 {
+            let t = eng.now();
+            let dom = cluster.topo.node(node).site.0 as u16;
+            if let Some(rec) = eng.recorder() {
+                let args = [("bytes", Arg::U(task.bytes)), ("records", Arg::U(task.records))];
+                rec.begin(t, dom, node.0 as u32, "task", df << 32 | aid, &args);
+            }
+        }
         let st2 = st.clone();
         let net = cluster.net.clone();
         let topo = cluster.topo.clone();
@@ -459,6 +507,39 @@ impl DataflowEngine {
         }
     }
 
+    /// Close a task span (no-op for untraced runs or doomed assignments).
+    fn trace_task_end(st: &Rc<RefCell<RtState>>, eng: &mut Engine, node: NodeId, aid: u64) {
+        let df = st.borrow().trace_df;
+        if df == 0 {
+            return;
+        }
+        let t = eng.now();
+        let dom = st.borrow().cluster.topo.node(node).site.0 as u16;
+        if let Some(rec) = eng.recorder() {
+            rec.end(t, dom, node.0 as u32, "task", df << 32 | aid, &[]);
+        }
+    }
+
+    /// Close `phase.map` and open `phase.reduce`, both at the barrier.
+    fn trace_barrier(st: &Rc<RefCell<RtState>>, eng: &mut Engine) {
+        let (df, phase, dom, reducers) = {
+            let s = st.borrow();
+            let dom = s.cluster.topo.num_domains() as u16;
+            (s.trace_df, s.trace_phase, dom, s.spec.num_reducers)
+        };
+        if df == 0 {
+            return;
+        }
+        let t = eng.now();
+        if let Some(rec) = eng.recorder() {
+            rec.end(t, dom, 0, "phase.map", phase, &[]);
+            let pid = rec.fresh_id();
+            let args = [("reducers", Arg::U(reducers as u64))];
+            rec.begin(t, dom, 0, "phase.reduce", pid, &args);
+            st.borrow_mut().trace_phase = pid;
+        }
+    }
+
     /// Shuffle-pull task completion: account the spill under its producer.
     fn task_finished(
         st: &Rc<RefCell<RtState>>,
@@ -471,6 +552,7 @@ impl DataflowEngine {
         if Self::doomed(st, aid, node) {
             return;
         }
+        Self::trace_task_end(st, eng, node, aid);
         let all_done = {
             let mut s = st.borrow_mut();
             s.live.remove(&aid);
@@ -488,6 +570,7 @@ impl DataflowEngine {
         };
         Self::fill_slots(st, eng);
         if all_done {
+            Self::trace_barrier(st, eng);
             Self::start_shuffle(st, eng);
         }
     }
@@ -497,6 +580,7 @@ impl DataflowEngine {
         if Self::doomed(st, aid, node) {
             return;
         }
+        Self::trace_task_end(st, eng, node, aid);
         let all_done = {
             let mut s = st.borrow_mut();
             s.live.remove(&aid);
@@ -511,6 +595,7 @@ impl DataflowEngine {
         };
         Self::fill_slots(st, eng);
         if all_done {
+            Self::trace_barrier(st, eng);
             Self::start_aggregate(st, eng);
         }
     }
@@ -726,6 +811,17 @@ impl DataflowEngine {
             }
         };
         if let Some((cb, report)) = finished {
+            let (df, phase, dom) = {
+                let s = st.borrow();
+                (s.trace_df, s.trace_phase, s.cluster.topo.num_domains() as u16)
+            };
+            if df != 0 {
+                let t = eng.now();
+                if let Some(rec) = eng.recorder() {
+                    rec.end(t, dom, 0, "phase.reduce", phase, &[]);
+                    rec.end(t, dom, 0, "dataflow", df, &[]);
+                }
+            }
             cb(eng, report);
         }
     }
@@ -830,6 +926,33 @@ mod tests {
         let inter = 8.0 * 200_000.0 * 30.0;
         assert!((r.exchange_bytes - inter).abs() / inter < 1e-9);
         assert!((r.exchange_remote_bytes - inter * 7.0 / 8.0).abs() / inter < 1e-9);
+    }
+
+    #[test]
+    fn traced_dataflow_emits_phase_and_task_spans() {
+        use crate::trace::{Recorder, Stream, TraceSpec};
+        let (cluster, nodes, tasks) = setup(2, 50_000);
+        let sp = spec(nodes, tasks, ExchangeModel::ShufflePull { parallel_copies: 4 });
+        let storage = Rc::new(RefCell::new(SectorStorage::new()));
+        let mut eng = Engine::new();
+        eng.set_recorder(Recorder::new(&TraceSpec::new()));
+        let out = Rc::new(RefCell::new(None));
+        let o = out.clone();
+        DataflowEngine::run(&cluster, storage, &mut eng, sp, move |_, r| {
+            *o.borrow_mut() = Some(r)
+        });
+        eng.run();
+        assert!(out.borrow().is_some(), "dataflow did not finish");
+        let mut s = Stream::new(cluster.topo.sites.len());
+        s.absorb(eng.take_recorder().unwrap());
+        let js = s.to_chrome_json();
+        // One begin + one end each for the job and both phases; 8 tasks.
+        for (name, events) in
+            [("dataflow", 2), ("phase.map", 2), ("phase.reduce", 2), ("task", 16)]
+        {
+            let hits = js.matches(&format!("\"name\":\"{name}\"")).count();
+            assert_eq!(hits, events, "{name}: {hits} events");
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::endpoint::GmpEndpoint;
+use crate::trace::WallSpanLog;
 
 const TAG_REQ: u8 = 0;
 const TAG_RESP: u8 = 1;
@@ -58,6 +59,17 @@ pub struct RpcServer {
 impl RpcServer {
     /// Start serving `handlers` on `ep`'s inbox.
     pub fn start(ep: Arc<GmpEndpoint>, handlers: HashMap<String, Handler>) -> RpcServer {
+        Self::start_traced(ep, handlers, None)
+    }
+
+    /// Like [`RpcServer::start`], but each dispatched request records a
+    /// `rpc.serve:<method>` span (wall-clock, outside byte-identity) in
+    /// `spans`. `ok = false` marks unknown-method dispatches.
+    pub fn start_traced(
+        ep: Arc<GmpEndpoint>,
+        handlers: HashMap<String, Handler>,
+        spans: Option<WallSpanLog>,
+    ) -> RpcServer {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let ep2 = ep.clone();
@@ -71,10 +83,15 @@ impl RpcServer {
                 if tag != TAG_REQ {
                     continue;
                 }
+                // simlint: allow(SIM002) — wall-domain RPC dispatch timing on a live socket, outside simulated time
+                let started = Instant::now();
                 let (resp_tag, resp_body) = match handlers.get(&method) {
                     Some(h) => (TAG_RESP, h(&body)),
                     None => (TAG_ERR, format!("unknown method {method}").into_bytes()),
                 };
+                if let Some(log) = &spans {
+                    log.record(&format!("rpc.serve:{method}"), started, resp_tag == TAG_RESP);
+                }
                 let frame = encode_frame(resp_tag, req_id, &method, &resp_body);
                 let _ = ep2.send(from, &frame);
             }
@@ -110,6 +127,7 @@ pub struct RpcClient {
     shared: Arc<ClientShared>,
     stop: Arc<AtomicBool>,
     pump: Option<std::thread::JoinHandle<()>>,
+    spans: Option<WallSpanLog>,
 }
 
 impl RpcClient {
@@ -133,13 +151,39 @@ impl RpcClient {
                 }
             }
         });
-        RpcClient { ep, next_id: AtomicU32::new(1), shared, stop, pump: Some(pump) }
+        RpcClient { ep, next_id: AtomicU32::new(1), shared, stop, pump: Some(pump), spans: None }
+    }
+
+    /// Record a `rpc.call:<method>` wall-clock span for every [`call`]
+    /// (success or failure) into `log`. RPC runs on live sockets with no
+    /// simulated clock, so these spans stay outside the deterministic
+    /// trace merge by construction.
+    ///
+    /// [`call`]: RpcClient::call
+    pub fn with_span_log(mut self, log: WallSpanLog) -> RpcClient {
+        self.spans = Some(log);
+        self
     }
 
     /// Call `method` on the server at `to`; blocks until the response or
     /// `timeout`. A server-side error frame (unknown method) surfaces as
     /// `Err` — never as a success payload.
     pub fn call(
+        &self,
+        to: SocketAddr,
+        method: &str,
+        body: &[u8],
+        timeout: Duration,
+    ) -> std::io::Result<Vec<u8>> {
+        let started = Instant::now(); // simlint: allow(SIM002) — wall-domain RPC round-trip timing, outside simulated time
+        let out = self.call_inner(to, method, body, timeout);
+        if let Some(log) = &self.spans {
+            log.record(&format!("rpc.call:{method}"), started, out.is_ok());
+        }
+        out
+    }
+
+    fn call_inner(
         &self,
         to: SocketAddr,
         method: &str,
@@ -295,13 +339,41 @@ mod tests {
         handlers.insert("echo".into(), Box::new(|b: &[u8]| b.to_vec()));
         let _srv = RpcServer::start(ep, handlers);
         let cep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
-        cep.set_fault(FaultSpec { drop_every: 4, dup_every: 0 });
+        cep.set_fault(FaultSpec { drop_every: 4, dup_every: 0, reorder_every: 0 });
         let client = RpcClient::new(cep);
         for i in 0..20 {
             let msg = format!("m{i}");
             let out = client.call(addr, "echo", msg.as_bytes(), Duration::from_secs(3)).unwrap();
             assert_eq!(out, msg.as_bytes());
         }
+    }
+
+    #[test]
+    fn span_log_records_calls_and_dispatches() {
+        let ep = GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap();
+        let addr = ep.local_addr();
+        let mut handlers: HashMap<String, Handler> = HashMap::new();
+        handlers.insert("echo".into(), Box::new(|b: &[u8]| b.to_vec()));
+        let server_log = WallSpanLog::new();
+        let _srv = RpcServer::start_traced(ep, handlers, Some(server_log.clone()));
+        let client_log = WallSpanLog::new();
+        let client =
+            RpcClient::new(GmpEndpoint::bind("127.0.0.1:0", GmpConfig::default()).unwrap())
+                .with_span_log(client_log.clone());
+        client.call(addr, "echo", b"ping", Duration::from_secs(2)).unwrap();
+        client.call(addr, "nope", b"", Duration::from_secs(2)).unwrap_err();
+        let calls = client_log.snapshot();
+        assert_eq!(calls.len(), 2);
+        assert_eq!(calls[0].name, "rpc.call:echo");
+        assert!(calls[0].ok);
+        assert_eq!(calls[1].name, "rpc.call:nope");
+        assert!(!calls[1].ok);
+        // The server saw both dispatches; the unknown method is ok=false.
+        // (Faulty-transport retransmits can duplicate dispatches, so
+        // check membership rather than exact count.)
+        let serves = server_log.snapshot();
+        assert!(serves.iter().any(|s| s.name == "rpc.serve:echo" && s.ok));
+        assert!(serves.iter().any(|s| s.name == "rpc.serve:nope" && !s.ok));
     }
 
     #[test]

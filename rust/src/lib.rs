@@ -18,7 +18,9 @@
 //!   monitoring/visualization system ([`monitor`]), and the operations
 //!   plane ([`ops`]: in-band sensor → aggregator → central-service
 //!   telemetry as real flows, fault injection, health state machine,
-//!   and closed-loop self-healing).
+//!   and closed-loop self-healing). The simulator watches *itself*
+//!   through [`trace`]: deterministic sim-time spans with Chrome-trace
+//!   export plus always-on hot-path counters in every run report.
 //! - **Experiment surface** — every experiment (CLI subcommands, benches,
 //!   examples, integration tests) is a [`coordinator::Scenario`] built
 //!   with [`coordinator::Testbed::builder`] or drawn from the named
@@ -50,6 +52,7 @@ pub mod proptest;
 pub mod runtime;
 pub mod sector;
 pub mod sim;
+pub mod trace;
 pub mod transport;
 pub mod util;
 

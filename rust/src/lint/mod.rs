@@ -19,6 +19,7 @@
 //! | SIM004 | all but entry points²         | `println!`/`eprintln!`/`print!`/`eprint!` outside binary entry points |
 //! | SIM005 | flow/water-filling paths³     | exact `f64` `==`/`!=` against float literals |
 //! | SIM006 | all but `sim/par.rs`, `gmp/`⁴ | thread spawns and parallelism crates (`thread::spawn`, `thread::Builder`, `rayon`, `crossbeam`, `JoinHandle`, `yield_now`) |
+//! | SIM007 | order-sensitive modules¹      | ad-hoc trace sinks (`Vec<TraceEvent>`, `side_log`/`event_log`/`trace_log` accumulators) — spans go through `trace::Recorder`⁵ |
 //! | SIM000 | everywhere                    | a waiver comment with no justification (not waivable) |
 //!
 //! ¹ `sim/`, `net/`, `framework/`, `ops/`, `coordinator/`, `sector/`,
@@ -36,6 +37,12 @@
 //!   sanctioned harness (its lookahead protocol *is* the determinism
 //!   argument), and `gmp/` pumps real UDP sockets on I/O threads that
 //!   never see simulated state.
+//! ⁵ The recorder is ring-bounded and absorbed into the canonical
+//!   `(time, domain, shard-order)` merge; a raw event vector on the side
+//!   is unbounded and replays in whatever order the module mutated it.
+//!   `trace/` itself is out of scope — the ring is the sanctioned sink —
+//!   and the profiler's pump-boundary wall reads are covered by the
+//!   existing per-line SIM002 waivers, not by SIM007.
 //!
 //! ## Waivers
 //!
@@ -94,6 +101,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("SIM004", "print to stdout/stderr outside a binary entry point"),
     ("SIM005", "exact f64 ==/!= comparison in a flow/water-filling path"),
     ("SIM006", "thread spawn or parallelism crate outside sim/par.rs"),
+    ("SIM007", "ad-hoc trace event side-log outside trace::Recorder in an order-sensitive module"),
 ];
 
 /// Scan every `.rs` file under `root`, visiting directories and files in

@@ -68,6 +68,15 @@ const PAR_EXEMPT: &[&str] = &["sim/par.rs", "gmp/"];
 const PAR_PATHS: &[&str] = &["thread::spawn", "thread::Builder"];
 const PAR_WORDS: &[&str] = &["rayon", "crossbeam", "JoinHandle", "yield_now"];
 
+/// Ad-hoc trace-sink markers — SIM007 triggers in order-sensitive
+/// modules. Span/instant emission must go through `trace::Recorder`
+/// (ring-bounded, absorbed into the canonical merge); a raw
+/// `Vec<TraceEvent>` or a `*_log` vector accumulated on the side
+/// re-introduces exactly the unbounded, order-fragile logging the
+/// recorder replaces. `trace/` itself is out of scope — the recorder's
+/// own ring is the sanctioned sink.
+const TRACE_SINK_WORDS: &[&str] = &["TraceEvent", "side_log", "event_log", "trace_log"];
+
 #[derive(Debug, Clone, PartialEq)]
 enum Tok {
     Ident(String),
@@ -412,6 +421,15 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
                 }
             }
         }
+        if order_sensitive {
+            if let Some(tok) = TRACE_SINK_WORDS.iter().find(|t| contains_word(code, t)) {
+                if !waived("SIM007", idx, idx) {
+                    let msg =
+                        format!("ad-hoc trace sink `{tok}` (route spans through trace::Recorder)");
+                    push_unique(&mut out, finding(idx, "SIM007", msg));
+                }
+            }
+        }
         if !par_exempt {
             let tok = PAR_PATHS
                 .iter()
@@ -710,6 +728,36 @@ mod tests {
             "}\n",
         );
         assert!(scan_source("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn sim007_flags_adhoc_trace_sinks_in_order_sensitive_modules() {
+        let field = "struct S { event_log: Vec<u32> }\n";
+        assert_eq!(rules_of(&scan_source("sim/x.rs", field)), vec!["SIM007"]);
+        let vec_ty = "fn f() { let mut buf: Vec<TraceEvent> = Vec::new(); buf.clear(); }\n";
+        assert_eq!(rules_of(&scan_source("coordinator/x.rs", vec_ty)), vec!["SIM007"]);
+        assert_eq!(rules_of(&scan_source("tests/determinism.rs", vec_ty)), vec!["SIM007"]);
+        // trace/ is not order-sensitive: the recorder's ring IS the sink.
+        assert!(scan_source("trace/mod.rs", vec_ty).is_empty());
+        assert!(scan_source("util/x.rs", field).is_empty(), "util/ out of scope");
+        assert!(
+            scan_source("sim/x.rs", "fn f(my_event_logger: u32) { let _ = my_event_logger; }\n")
+                .is_empty(),
+            "identifier boundaries respected"
+        );
+    }
+
+    #[test]
+    fn sim007_waiver_with_reason_passes() {
+        let src = concat!(
+            "fn f() {\n",
+            "    // simlint: allow(SIM007) — bounded debug buffer, never merged into a report\n",
+            "    let mut event_log: Vec<u32> = Vec::new();\n",
+            "    event_log.clear(); ",
+            "// simlint: allow(SIM007) — bounded debug buffer, never merged into a report\n",
+            "}\n",
+        );
+        assert!(scan_source("ops/x.rs", src).is_empty());
     }
 
     #[test]

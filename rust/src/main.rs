@@ -9,6 +9,7 @@
 //! oct scenarios                       # list the registered scenario sets
 //! oct scenarios <set> [scale] [--json]  # run one set; --json emits RunReport lines
 //! oct alerts <set> [scale]            # run one set; print the ops alert log as JSON lines
+//! oct trace <set> [scale] [--out f]   # run one set traced; emit Chrome Trace Format JSON
 //! oct monitor [secs]                  # Figure 3: live ANSI heatmap of a run
 //! oct provision                       # §2.2: growth-plan provisioning demo
 //! oct slices                          # tenant-slice admission demo (SliceScheduler)
@@ -27,6 +28,7 @@ use oct::coordinator::{
 };
 use oct::coordinator::Provisioner;
 use oct::net::Topology;
+use oct::trace::TraceSpec;
 
 const USAGE: &str = "usage: oct <command>  (oct help <command> for details)
   topology                         Figure 2: the 4-site testbed description
@@ -35,8 +37,11 @@ const USAGE: &str = "usage: oct <command>  (oct help <command> for details)
   scenarios                        list registered scenario sets
   scenarios <set> [scale] [--json] run one set through the ScenarioRunner
   alerts <set> [scale]             run one set; print the ops alert log as JSON lines
+  trace <set> [scale] [--out FILE] run one set traced; emit Chrome Trace Format JSON
   --threads N                      worker threads for shardable scenarios (any
                                    scenario-running command; byte-identical output)
+  --trace FILE                     record sim-time spans during any scenario-running
+                                   command and write the Chrome trace to FILE
   monitor [secs]                   Figure 3: live ANSI heatmap of a run
   provision                        §2.2 growth-plan provisioning demo
   slices                           tenant-slice admission demo (carve/queue/release)
@@ -67,6 +72,14 @@ fn detailed_usage(cmd: &str) -> Option<&'static str> {
              --threads N (or OCT_THREADS=N) runs shardable scenarios on the\n\
              parallel engine with N worker threads; reports are byte-identical\n\
              to --threads 1. Accepted by every scenario-running command.",
+        "trace" => "usage: oct trace <set> [scale] [--out FILE] [--threads N]\n\
+             Run one registry set at 1/scale (default 100) with sim-time tracing\n\
+             enabled and emit the merged span stream as Chrome Trace Format JSON\n\
+             (one pid per site/WAN/control domain, one tid per lane) — load it at\n\
+             ui.perfetto.dev or chrome://tracing. Without --out the JSON goes to\n\
+             stdout and the summary line to stderr. The merged stream is\n\
+             byte-identical at any --threads / OCT_THREADS value. Exit 0 = ran,\n\
+             2 = unknown set.",
         "alerts" => "usage: oct alerts <set> [scale]\n\
              Run one set and print every ops-enabled scenario's alert log as JSON\n\
              lines plus a per-scenario summary line (ready for jq).",
@@ -136,6 +149,19 @@ fn main() {
         }
         None => None,
     };
+    // `--trace FILE` composes the same way: any scenario-running command
+    // records sim-time spans and writes the Chrome trace to FILE.
+    let trace_out: Option<String> = match args.iter().position(|a| a == "--trace") {
+        Some(i) => {
+            let Some(f) = args.get(i + 1).cloned().filter(|f| !f.starts_with('-')) else {
+                eprintln!("oct: --trace needs an output file\n{USAGE}");
+                std::process::exit(2);
+            };
+            args.drain(i..=i + 1);
+            Some(f)
+        }
+        None => None,
+    };
     // `oct --help` and `oct <command> --help` both land here, exit 0.
     if args.iter().any(|a| a == "--help" || a == "-h") {
         let topic = args.iter().find(|a| *a != "--help" && *a != "-h");
@@ -146,7 +172,7 @@ fn main() {
         "topology" => print!("{}", Topology::oct_2009().describe()),
         "table1" | "table2" => {
             let scale = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
-            std::process::exit(run_set_cli(cmd, scale, false, threads));
+            std::process::exit(run_set_cli(cmd, scale, false, threads, trace_out.as_deref()));
         }
         "scenarios" => {
             let json = args.iter().any(|a| a.as_str() == "--json");
@@ -156,10 +182,34 @@ fn main() {
                 None => list_scenario_sets(),
                 Some(name) => {
                     let scale = rest.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
-                    std::process::exit(run_set_cli(name, scale, json, threads));
+                    let trace = trace_out.as_deref();
+                    std::process::exit(run_set_cli(name, scale, json, threads, trace));
                 }
             }
         }
+        "trace" => match args.get(1) {
+            None => {
+                eprintln!("oct: trace needs a scenario set; try `oct trace mega-churn`\n{USAGE}");
+                std::process::exit(2);
+            }
+            Some(name) => {
+                let name = name.clone();
+                let out: Option<String> = match args.iter().position(|a| a == "--out") {
+                    Some(i) => {
+                        let Some(f) = args.get(i + 1).cloned().filter(|f| !f.starts_with('-'))
+                        else {
+                            eprintln!("oct: --out needs an output file\n{USAGE}");
+                            std::process::exit(2);
+                        };
+                        args.drain(i..=i + 1);
+                        Some(f)
+                    }
+                    None => trace_out.clone(),
+                };
+                let scale = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
+                std::process::exit(run_trace_cli(&name, scale, out.as_deref(), threads));
+            }
+        },
         "alerts" => match args.get(1) {
             None => {
                 eprintln!("oct: alerts needs a scenario set; try `oct alerts ops`\n{USAGE}");
@@ -262,9 +312,57 @@ fn list_scenario_sets() {
     }
 }
 
+/// Run one registry set traced and emit the merged span stream as Chrome
+/// Trace Format JSON (to `out`, or stdout when `None`). Exit code 0 on
+/// success, 1 on a write failure, 2 on an unknown set.
+fn run_trace_cli(name: &str, scale: u64, out: Option<&str>, threads: Option<usize>) -> i32 {
+    let Some(set) = find_set(name) else {
+        eprintln!(
+            "oct: unknown scenario set '{name}'; registered sets: {}",
+            set_names().join(", ")
+        );
+        return 2;
+    };
+    let set = set.scaled_down(scale);
+    let mut runner = ScenarioRunner::new().with_trace(TraceSpec::new());
+    if let Some(n) = threads {
+        runner = runner.with_threads(n);
+    }
+    let (reports, stream) = runner.run_set_with_trace(&set);
+    let js = stream.to_chrome_json();
+    eprintln!(
+        "{}: {} scenario(s), {} span event(s){} → {}",
+        set.name,
+        reports.len(),
+        stream.len(),
+        if stream.dropped > 0 {
+            format!(" ({} dropped at the ring cap)", stream.dropped)
+        } else {
+            String::new()
+        },
+        out.unwrap_or("stdout")
+    );
+    match out {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &js) {
+                eprintln!("oct: writing {path}: {e}");
+                return 1;
+            }
+        }
+        None => println!("{js}"),
+    }
+    0
+}
+
 /// Run one registry set; returns the process exit code (0 = all checks
 /// pass, 1 = a shape check failed, 2 = unknown set).
-fn run_set_cli(name: &str, scale: u64, json: bool, threads: Option<usize>) -> i32 {
+fn run_set_cli(
+    name: &str,
+    scale: u64,
+    json: bool,
+    threads: Option<usize>,
+    trace_out: Option<&str>,
+) -> i32 {
     let Some(set) = find_set(name) else {
         eprintln!(
             "oct: unknown scenario set '{name}'; registered sets: {}",
@@ -280,9 +378,20 @@ fn run_set_cli(name: &str, scale: u64, json: bool, threads: Option<usize>) -> i3
     if let Some(n) = threads {
         runner = runner.with_threads(n);
     }
+    if trace_out.is_some() {
+        runner = runner.with_trace(TraceSpec::new());
+    }
     // `run_set` executes tenancy groups concurrently on one shared
-    // testbed and returns reports in scenario order.
-    let reports = runner.run_set(&set);
+    // testbed and returns reports in scenario order. Tracing never
+    // changes a report byte, so the traced path reuses the same flow.
+    let (reports, stream) = runner.run_set_with_trace(&set);
+    if let Some(path) = trace_out {
+        if let Err(e) = std::fs::write(path, stream.to_chrome_json()) {
+            eprintln!("oct: writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("trace: {} span event(s) → {path}", stream.len());
+    }
     if json {
         for r in &reports {
             println!("{}", r.to_json());

@@ -349,6 +349,36 @@ mod tests {
     }
 
     #[test]
+    fn nic_rate_quantiles_with_window_beyond_retention() {
+        // A rollup window wider than the samples actually retained must
+        // clamp to the full window, not index past the ring or skew the
+        // mean with phantom zeros.
+        let topo = small_topo();
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let ps = pools(&topo);
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, ps);
+        let path = topo.path(topo.racks[0].nodes[0], topo.racks[0].nodes[1]);
+        FlowNet::start(&net, &mut eng, path, 1000.0, f64::INFINITY, |_| {});
+        eng.run_until(6.0);
+        mon.borrow_mut().disable();
+        eng.run();
+        let m = mon.borrow();
+        // Only a handful of samples exist; ask for vastly more.
+        let (p50, p99) = m.nic_rate_quantiles(1_000_000);
+        assert!(p50.is_finite() && p99.is_finite());
+        assert!(p50 > 50.0, "p50={p50}");
+        assert!(p99 >= p50, "p99={p99} < p50={p50}");
+        // The oversized window degrades to "all retained samples", so
+        // any window at least that large gives the same rollup.
+        assert_eq!((p50, p99), m.nic_rate_quantiles(usize::MAX));
+        // And an empty monitor rolls up to zeros, not a panic.
+        let idle = Monitor::new(small_topo(), 1.0);
+        assert_eq!(idle.borrow().nic_rate_quantiles(1_000_000), (0.0, 0.0));
+    }
+
+    #[test]
     fn cpu_utilization_sampled() {
         let topo = small_topo();
         let net = FlowNet::new(&topo);

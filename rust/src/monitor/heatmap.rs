@@ -156,4 +156,68 @@ mod tests {
         let s = render_heatmap(&mon.borrow(), Metric::Cpu, false);
         assert!(s.contains("cpu"));
     }
+
+    #[test]
+    fn zero_capacity_nic_reads_as_idle_not_nan() {
+        // A node provisioned with no NIC bandwidth must render idle
+        // (0.0), not divide 0/0 into NaN and poison the site mean.
+        let mut t = Topology::new();
+        let a = t.add_site("airgap");
+        let spec = NodeSpec { nic_bps: 0.0, disk_bps: 100.0, cpu_slots: 1 };
+        t.add_rack(a, 2, &spec, 1000.0);
+        let topo = Rc::new(t);
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let pools: Vec<Rc<RefCell<CpuPool>>> =
+            topo.nodes.iter().map(|n| CpuPool::new(n.cpu_slots)).collect();
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, pools);
+        eng.run_until(3.0);
+        mon.borrow_mut().disable();
+        eng.run_until(4.0);
+        let m = mon.borrow();
+        for n in topo.node_ids() {
+            let u = utilization(&m, Metric::Network, n);
+            assert_eq!(u, 0.0, "node {n:?} read {u}");
+        }
+        let s = render_heatmap(&m, Metric::Network, false);
+        let line = s.lines().find(|l| l.contains("airgap")).unwrap();
+        assert!(line.contains("mean   0.0%"), "{line}");
+        assert!(!s.contains("NaN"), "{s}");
+    }
+
+    #[test]
+    fn drained_node_returns_to_idle_after_traffic_stops() {
+        // Finite transfer: the node is busy while it drains, then its
+        // utilization falls back to 0.0 once the flow completes and the
+        // monitor keeps sampling (the "drained node" frame of Figure 3).
+        let mut t = Topology::new();
+        let a = t.add_site("alpha");
+        let spec = NodeSpec { nic_bps: 100.0, disk_bps: 100.0, cpu_slots: 2 };
+        t.add_rack(a, 2, &spec, 1000.0);
+        let topo = Rc::new(t);
+        let net = FlowNet::new(&topo);
+        let mut eng = Engine::new();
+        let pools: Vec<Rc<RefCell<CpuPool>>> =
+            topo.nodes.iter().map(|n| CpuPool::new(n.cpu_slots)).collect();
+        let mon = Monitor::new(topo.clone(), 1.0);
+        Monitor::install(&mon, &mut eng, &net, pools);
+        let src = topo.racks[0].nodes[0];
+        let path = topo.path(src, topo.racks[0].nodes[1]);
+        // 500 bytes at ~100 B/s: done by t≈5, sampling continues to 12.
+        FlowNet::start(&net, &mut eng, path, 500.0, f64::INFINITY, |_| {});
+        eng.run_until(3.0);
+        assert!(
+            utilization(&mon.borrow(), Metric::Network, src) > 0.0,
+            "node should be busy mid-transfer"
+        );
+        eng.run_until(12.0);
+        mon.borrow_mut().disable();
+        eng.run_until(13.0);
+        let m = mon.borrow();
+        assert_eq!(utilization(&m, Metric::Network, src), 0.0);
+        let s = render_heatmap(&m, Metric::Network, false);
+        let line = s.lines().find(|l| l.contains("alpha")).unwrap();
+        assert!(line.contains("mean   0.0%"), "{line}");
+    }
 }

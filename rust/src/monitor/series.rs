@@ -9,12 +9,23 @@ pub struct Series {
     buf: Vec<(f64, f64)>,
     head: usize,
     len: usize,
+    /// Reusable sort buffer for [`Series::quantile`]: grows to `cap`
+    /// once, then every rollup is allocation-free. Interior mutability
+    /// keeps the rollup API `&self` (the monitor holds series behind
+    /// shared borrows on the hot sampling path).
+    scratch: std::cell::RefCell<Vec<f64>>,
 }
 
 impl Series {
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0);
-        Series { cap, buf: vec![(0.0, 0.0); cap], head: 0, len: 0 }
+        Series {
+            cap,
+            buf: vec![(0.0, 0.0); cap],
+            head: 0,
+            len: 0,
+            scratch: std::cell::RefCell::new(Vec::new()),
+        }
     }
 
     pub fn push(&mut self, t: f64, v: f64) {
@@ -46,14 +57,20 @@ impl Series {
         (0..self.len).map(move |i| self.buf[(start + i) % self.cap])
     }
 
-    /// Mean of the most recent `n` values.
+    /// Mean of the most recent `n` values. Walks the ring directly —
+    /// no intermediate collection — since the hotspot detector calls
+    /// this per node per sampling tick.
     pub fn recent_mean(&self, n: usize) -> f64 {
         let take = n.min(self.len);
         if take == 0 {
             return 0.0;
         }
-        let vals: Vec<f64> = self.iter().map(|(_, v)| v).collect();
-        vals[vals.len() - take..].iter().sum::<f64>() / take as f64
+        let start = (self.head + self.cap - take) % self.cap;
+        let mut sum = 0.0;
+        for i in 0..take {
+            sum += self.buf[(start + i) % self.cap].1;
+        }
+        sum / take as f64
     }
 
     pub fn values(&self) -> Vec<f64> {
@@ -61,9 +78,17 @@ impl Series {
     }
 
     /// Linear-interpolated quantile of the retained values, `q` in
-    /// [0, 100]. 0.0 when the series is empty.
+    /// [0, 100]. 0.0 when the series is empty. Sorts into the reusable
+    /// scratch buffer, so steady-state rollups allocate nothing.
     pub fn quantile(&self, q: f64) -> f64 {
-        crate::util::stats::percentile(&self.values(), q)
+        if self.len == 0 {
+            return 0.0;
+        }
+        let mut v = self.scratch.borrow_mut();
+        v.clear();
+        v.extend(self.iter().map(|(_, x)| x));
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::stats::percentile_sorted(&v, q)
     }
 
     /// Median of the retained window (the hotspot detector's robust
@@ -76,6 +101,12 @@ impl Series {
     /// summaries).
     pub fn p99(&self) -> f64 {
         self.quantile(99.0)
+    }
+
+    /// 99.9th percentile — the extreme-tail rollup for wide windows
+    /// (only meaningful once the window retains ≳1000 samples).
+    pub fn p999(&self) -> f64 {
+        self.quantile(99.9)
     }
 }
 
@@ -133,5 +164,34 @@ mod tests {
         assert_eq!(s.recent_mean(2), 3.5);
         assert_eq!(s.recent_mean(100), 2.5);
         assert_eq!(Series::new(3).recent_mean(2), 0.0);
+    }
+
+    #[test]
+    fn recent_mean_walks_the_ring_after_wrap() {
+        // The ring-direct walk must skip overwritten samples exactly like
+        // the old collect-then-slice path did.
+        let mut s = Series::new(3);
+        for v in [100.0, 1.0, 2.0, 3.0] {
+            s.push(v, v);
+        }
+        assert_eq!(s.recent_mean(1), 3.0);
+        assert_eq!(s.recent_mean(2), 2.5);
+        assert_eq!(s.recent_mean(3), 2.0);
+        assert_eq!(s.recent_mean(10), 2.0);
+    }
+
+    #[test]
+    fn p999_tail_and_scratch_reuse() {
+        let mut s = Series::new(2000);
+        for i in 1..=1000 {
+            s.push(i as f64, i as f64);
+        }
+        // Interpolated 99.9th over 1..=1000: rank 998.001 → 999.001.
+        assert!((s.p999() - 999.001).abs() < 1e-9, "{}", s.p999());
+        // Repeated rollups reuse the scratch buffer and stay stable.
+        assert_eq!(s.p50(), 500.5);
+        assert_eq!(s.p50(), 500.5);
+        assert_eq!(s.quantile(100.0), 1000.0);
+        assert_eq!(Series::new(4).p999(), 0.0);
     }
 }

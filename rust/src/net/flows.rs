@@ -53,6 +53,7 @@ use std::collections::{BTreeMap, BinaryHeap};
 use std::rc::Rc;
 
 use crate::sim::{Engine, TimerBank};
+use crate::trace::Arg;
 
 use super::topology::{Domain, LinkId, Route, Topology};
 
@@ -261,6 +262,12 @@ pub struct FlowNet {
     completions: u64,
     /// High-water mark of `active_members` (concurrency metrics).
     peak_active: usize,
+    /// Self-profiler: connected components water-filled since
+    /// construction, and links visited by those fills. Deterministic (a
+    /// pure function of the event sequence and the incremental flag);
+    /// the debug audit's full-recompute probe excludes itself.
+    prof_refills: u64,
+    prof_dirty_links: u64,
     scratch: Scratch,
 }
 
@@ -297,6 +304,8 @@ impl FlowNet {
             last_advance: 0.0,
             completions: 0,
             peak_active: 0,
+            prof_refills: 0,
+            prof_dirty_links: 0,
             scratch: Scratch {
                 remaining: vec![0.0; n],
                 users: vec![0; n],
@@ -351,6 +360,13 @@ impl FlowNet {
     /// Most flows ever simultaneously active — exact (updated on every
     /// arrival), so concurrency metrics don't depend on when a consumer
     /// happens to sample.
+    /// Self-profiler counters: `(components re-filled, links visited by
+    /// those fills)` — the recompute scope this network actually paid
+    /// for. Folded into the run's `ProfileReport` by the runner.
+    pub fn profile_counters(&self) -> (u64, u64) {
+        (self.prof_refills, self.prof_dirty_links)
+    }
+
     pub fn peak_active(&self) -> usize {
         self.peak_active
     }
@@ -585,6 +601,8 @@ impl FlowNet {
                     }
                 }
             }
+            self.prof_refills += 1;
+            self.prof_dirty_links += sc.comp_links.len() as u64;
             self.fill_component(&mut sc);
         }
         sc.seeds.clear();
@@ -759,7 +777,7 @@ impl FlowNet {
     /// mutation point; the flag set (rate bits changed ∪ membership
     /// changed) is identical in both reallocation modes, so deadlines are
     /// recomputed at identical `(now, base)` pairs and stay bitwise equal.
-    fn flush_refresh(&mut self) {
+    fn flush_refresh(&mut self, eng: &mut Engine) {
         let now = self.last_advance;
         let mut list = std::mem::take(&mut self.scratch.refresh);
         for &s in &list {
@@ -782,6 +800,13 @@ impl FlowNet {
                 let entry = (a.deadline.to_bits(), a.birth, s, a.seq);
                 let lane = a.lane as usize;
                 self.lane_heaps[lane].push(Reverse(entry));
+            }
+            // Every refresh is a retune (rate bits moved or membership
+            // changed) — record the new shared rate.
+            if let Some(rec) = eng.recorder() {
+                let tl = a.path.first().map_or(0, |l| l.0 as u32);
+                let rate = [("rate", Arg::F(a.member_rate))];
+                rec.instant(now, a.lane as u16, tl, "flow.retune", a.birth, &rate);
             }
         }
         list.clear();
@@ -876,9 +901,21 @@ impl FlowNet {
         let id = {
             let mut n = net.borrow_mut();
             n.advance(eng.now());
+            let t = eng.now();
+            if eng.recorder().is_some() {
+                // Flow spans are keyed by the member's birth counter —
+                // stable across slot reuse and identical in both
+                // reallocation modes.
+                let birth = n.next_birth;
+                let dom = lane.unwrap_or_else(|| n.derive_lane(&path)) as u16;
+                let tl = path.first().map_or(0, |l| l.0 as u32);
+                if let Some(rec) = eng.recorder() {
+                    rec.begin(t, dom, tl, "flow", birth, &[("bytes", Arg::F(bytes))]);
+                }
+            }
             let id = n.admit(path, bytes, cap_bps, done, lane);
             n.recompute();
-            n.flush_refresh();
+            n.flush_refresh(eng);
             #[cfg(debug_assertions)]
             n.audit();
             id
@@ -995,8 +1032,16 @@ impl FlowNet {
                 n.capacity[l] = capacity;
                 n.scratch.seeds.push(l as u32);
             }
+            let t = eng.now();
+            if let Some(rec) = eng.recorder() {
+                for &(LinkId(l), capacity) in changes {
+                    let dom = n.link_domain[l].lane(n.num_sites) as u16;
+                    let cap = [("capacity", Arg::F(capacity))];
+                    rec.instant(t, dom, l as u32, "link.retune", 0, &cap);
+                }
+            }
             n.recompute();
-            n.flush_refresh();
+            n.flush_refresh(eng);
             #[cfg(debug_assertions)]
             n.audit();
         }
@@ -1008,8 +1053,9 @@ impl FlowNet {
     /// (1 ns of transfer) — pure absolute epsilons leave residues whose
     /// completion dt falls below the clock's ulp and the event loop stops
     /// advancing time. Returns whether membership changed.
-    fn drain_completed(&mut self, s: u32, out: &mut Vec<(u64, Callback)>) -> bool {
+    fn drain_completed(&mut self, s: u32, out: &mut Vec<(u64, u32, Callback)>) -> bool {
         let a = self.slots[s as usize].state.as_mut().expect("draining empty slot");
+        let tl = a.path.first().map_or(0, |l| l.0 as u32);
         let mut any = false;
         loop {
             let due = match a.members.peek() {
@@ -1036,7 +1082,7 @@ impl FlowNet {
             self.completions += 1;
             self.active_members -= 1;
             if let Some(cb) = m.done.take() {
-                out.push((m.birth, cb));
+                out.push((m.birth, tl, cb));
             }
         }
         if any && !a.needs_refresh {
@@ -1049,8 +1095,9 @@ impl FlowNet {
     /// Forced progress: the lane timer fired for this aggregate but fp
     /// dust kept its head member outside the epsilon — complete it anyway
     /// (mirrors the old global core's nearest-flow forcing).
-    fn force_head(&mut self, s: u32, out: &mut Vec<(u64, Callback)>) {
+    fn force_head(&mut self, s: u32, out: &mut Vec<(u64, u32, Callback)>) {
         let a = self.slots[s as usize].state.as_mut().expect("forcing empty slot");
+        let tl = a.path.first().map_or(0, |l| l.0 as u32);
         let Reverse(mut m) = a.members.pop().expect("forcing memberless aggregate");
         debug_assert!(
             f64::from_bits(m.target_bits) - a.base <= 1e-3 + m.bytes * 1e-6,
@@ -1062,7 +1109,7 @@ impl FlowNet {
         self.completions += 1;
         self.active_members -= 1;
         if let Some(cb) = m.done.take() {
-            out.push((m.birth, cb));
+            out.push((m.birth, tl, cb));
         }
         if !a.needs_refresh {
             a.needs_refresh = true;
@@ -1075,7 +1122,7 @@ impl FlowNet {
     /// deadlines, re-arm, and only then run completion callbacks (birth
     /// order) outside the borrow.
     fn on_timer(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine, lane: usize) {
-        let mut finished: Vec<(u64, Callback)> = Vec::new();
+        let mut finished: Vec<(u64, u32, Callback)> = Vec::new();
         {
             let mut n = net.borrow_mut();
             let n = &mut *n; // plain &mut: field-disjoint borrows below
@@ -1127,7 +1174,14 @@ impl FlowNet {
             }
             // Deterministic callback order: member birth (insertion)
             // order, immune to slab slot recycling.
-            finished.sort_unstable_by_key(|&(b, _)| b);
+            finished.sort_unstable_by_key(|&(b, _, _)| b);
+            // Close the flow spans here, inside the engine event, in the
+            // same birth order the callbacks will run in.
+            if let Some(rec) = eng.recorder() {
+                for (birth, tl, _) in finished.iter() {
+                    rec.end(now, lane as u16, *tl, "flow", *birth, &[]);
+                }
+            }
             // Seeds: the paths of every aggregate whose weight changed —
             // collected before releases tear the paths down.
             n.scratch.seeds.clear();
@@ -1143,13 +1197,13 @@ impl FlowNet {
                 }
             }
             n.recompute();
-            n.flush_refresh();
+            n.flush_refresh(eng);
             #[cfg(debug_assertions)]
             n.audit();
         }
         Self::rearm_all(net, eng);
         // Run callbacks without holding the borrow; they may start flows.
-        for (_, cb) in finished {
+        for (_, _, cb) in finished {
             cb(eng);
         }
     }
@@ -1221,7 +1275,12 @@ impl FlowNet {
         let rates: Vec<(u32, u64)> =
             self.active.iter().map(|&s| (s, self.agg(s).member_rate.to_bits())).collect();
         let link_rates: Vec<u64> = self.link_rate.iter().map(|r| r.to_bits()).collect();
+        // The probe below is a debug-only shadow recompute; keep it out
+        // of the self-profiler so counters match release builds.
+        let (pr, pd) = (self.prof_refills, self.prof_dirty_links);
         self.recompute_impl(true);
+        self.prof_refills = pr;
+        self.prof_dirty_links = pd;
         assert!(
             self.scratch.refresh.is_empty(),
             "full recompute moved rates the incremental pass left stale"
@@ -1276,6 +1335,29 @@ mod tests {
         eng.run();
         assert!((*done_at.borrow() - 10.0).abs() < 1e-6);
         assert_eq!(net.borrow().completions(), 1);
+    }
+
+    #[test]
+    fn traced_flow_emits_begin_retune_end() {
+        use crate::trace::{Recorder, Stream, TraceSpec};
+        let t = two_site_topo();
+        let net = FlowNet::new(&t);
+        let mut eng = Engine::new();
+        eng.set_recorder(Recorder::new(&TraceSpec::new()));
+        let path = t.path(t.racks[0].nodes[0], t.racks[0].nodes[1]);
+        FlowNet::start(&net, &mut eng, path, 1000.0, f64::INFINITY, |_| {});
+        eng.run();
+        let mut s = Stream::new(2);
+        s.absorb(eng.take_recorder().unwrap());
+        let js = s.to_chrome_json();
+        // One begin, at least one retune (rate 100 on admit), one end.
+        assert_eq!(js.matches("\"ph\":\"b\"").count(), 1, "{js}");
+        assert_eq!(js.matches("\"ph\":\"e\"").count(), 1, "{js}");
+        assert!(js.contains("flow.retune"), "{js}");
+        assert!(js.contains("\"rate\":100"), "{js}");
+        // Untraced runs pay only the recorder branch: counters intact.
+        let (refills, dirty) = net.borrow().profile_counters();
+        assert!(refills >= 2 && dirty >= refills, "refills={refills} dirty={dirty}");
     }
 
     #[test]

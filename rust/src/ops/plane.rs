@@ -46,6 +46,7 @@ use crate::monitor::Series;
 use crate::net::topology::LinkKind;
 use crate::net::{Cluster, FlowNet, LinkId, NodeId, Topology};
 use crate::sim::Engine;
+use crate::trace::Arg;
 use crate::util::json::{obj, Json};
 
 /// GMP fixed header prepended to every telemetry datagram (see
@@ -628,6 +629,10 @@ impl OpsPlane {
             if recovered {
                 let name = p.topo.node(r.node).name.clone();
                 p.alert(now, AlertKind::NodeRecovered, name, "heartbeat resumed".to_string());
+                if let Some(rec) = eng.recorder() {
+                    let dom = p.topo.node(r.node).site.0 as u16;
+                    rec.instant(now, dom, r.node.0 as u32, "alert.recovered", 0, &[]);
+                }
             }
         }
         p.wan_observed = wan_obs;
@@ -676,11 +681,16 @@ impl OpsPlane {
                             name,
                             format!("no heartbeat for {silent:.1}s"),
                         );
+                        if let Some(rec) = eng.recorder() {
+                            let dom = p.topo.node(n).site.0 as u16;
+                            rec.instant(now, dom, n.0 as u32, "alert.suspect", 0, &[]);
+                        }
                     }
                     Health::Suspect if silent > dead_after => {
                         p.tracked.get_mut(&n).unwrap().health = Health::Dead;
                         p.dead_declared += 1;
-                        match p.crashed.get(&n).copied() {
+                        let fault_t = p.crashed.get(&n).copied();
+                        match fault_t {
                             Some(t0) => {
                                 let latency = now - t0;
                                 if latency > p.detection_latency_max {
@@ -696,6 +706,23 @@ impl OpsPlane {
                             name,
                             format!("no heartbeat for {silent:.1}s; draining"),
                         );
+                        // The causal link back to the injection: alert.dead
+                        // carries the fault's injection time, so a trace
+                        // viewer can measure detection latency span-to-span.
+                        if let Some(rec) = eng.recorder() {
+                            let dom = p.topo.node(n).site.0 as u16;
+                            match fault_t {
+                                Some(t0) => rec.instant(
+                                    now,
+                                    dom,
+                                    n.0 as u32,
+                                    "alert.dead",
+                                    0,
+                                    &[("fault_t", Arg::F(t0))],
+                                ),
+                                None => rec.instant(now, dom, n.0 as u32, "alert.dead", 0, &[]),
+                            }
+                        }
                         // Drain now, and queue a bare-metal re-image so
                         // the box re-enters the pool clean — the
                         // provisioning half of the remediation intent.
@@ -734,6 +761,11 @@ impl OpsPlane {
                                 name,
                                 format!("nic {r:.0} B/s vs median {median:.0} B/s"),
                             );
+                            if let Some(rec) = eng.recorder() {
+                                let dom = p.topo.node(n).site.0 as u16;
+                                let a = [("rate", Arg::F(r))];
+                                rec.instant(now, dom, n.0 as u32, "alert.hotspot", 0, &a);
+                            }
                         }
                         if r < p.cfg.straggler_factor * median && p.slow_flagged.insert(n) {
                             let name = p.topo.node(n).name.clone();
@@ -743,6 +775,11 @@ impl OpsPlane {
                                 name,
                                 format!("nic {r:.0} B/s vs median {median:.0} B/s"),
                             );
+                            if let Some(rec) = eng.recorder() {
+                                let dom = p.topo.node(n).site.0 as u16;
+                                let a = [("rate", Arg::F(r))];
+                                rec.instant(now, dom, n.0 as u32, "alert.straggler", 0, &a);
+                            }
                         }
                     }
                 }
@@ -761,6 +798,11 @@ impl OpsPlane {
                     "wave",
                     format!("probed {obs:.2e} B/s of nominal {nominal:.2e} B/s"),
                 );
+                if let Some(rec) = eng.recorder() {
+                    let wan = (p.topo.num_domains() - 1) as u16;
+                    let a = [("observed", Arg::F(obs)), ("nominal", Arg::F(nominal))];
+                    rec.instant(now, wan, 0, "alert.wan_degraded", 0, &a);
+                }
                 // Replayable intent: re-provision the shared wave back to
                 // nominal (any site pair addresses the shared links).
                 let gbps = p.wan_links.iter().map(|&(_, c)| c).fold(0.0, f64::max) * 8.0 / 1e9;
@@ -784,6 +826,11 @@ impl OpsPlane {
                         name,
                         format!("{requeued} lost task(s) re-queued on survivors"),
                     );
+                    let dom = p.topo.node(n).site.0 as u16;
+                    if let Some(rec) = eng.recorder() {
+                        let a = [("requeued", Arg::U(requeued as u64))];
+                        rec.instant(now, dom, n.0 as u32, "alert.reexec", 0, &a);
+                    }
                 }
                 p.dead_hook = Some(h);
             }
@@ -799,6 +846,10 @@ impl OpsPlane {
                 // re-detect the already-healed flap from a stale reading.
                 p.wan_observed = p.wan_links.iter().map(|&(_, c)| c).sum();
                 p.alert(now, AlertKind::WanRestored, "wave", "re-provisioned to nominal".into());
+                if let Some(rec) = eng.recorder() {
+                    let wan = (p.topo.num_domains() - 1) as u16;
+                    rec.instant(now, wan, 0, "alert.wan_restored", 0, &[]);
+                }
                 p.wan_restore_hook = Some(h);
             }
         }
@@ -912,6 +963,32 @@ mod tests {
             r.alerts.iter().filter(|a| a.kind == AlertKind::NodeDead).collect();
         assert_eq!(dead.len(), 1);
         assert_eq!(dead[0].subject, cluster.topo.node(victim).name);
+    }
+
+    #[test]
+    fn traced_crash_emits_alert_instants_with_fault_link() {
+        use crate::trace::{Recorder, Stream, TraceSpec};
+        let cluster = two_site_cluster();
+        let nodes = cluster.topo.node_ids();
+        let victim = nodes[3];
+        let mut eng = Engine::new();
+        eng.set_recorder(Recorder::new(&TraceSpec::new()));
+        let plane = OpsPlane::install(&cluster, &nodes, OpsConfig::default(), &mut eng);
+        plane.borrow_mut().set_dead_hook(Box::new(|_eng, _n| 2));
+        let p2 = plane.clone();
+        eng.schedule_at(5.0, move |eng| {
+            p2.borrow_mut().mark_crashed(victim, eng.now());
+        });
+        drive(&plane, &mut eng, 30.0);
+        let mut s = Stream::new(2);
+        s.absorb(eng.take_recorder().unwrap());
+        let js = s.to_chrome_json();
+        assert!(js.contains("alert.suspect"), "{js}");
+        assert!(js.contains("alert.dead"), "{js}");
+        assert!(js.contains("alert.reexec"), "{js}");
+        // The dead verdict links back to the injection time of the fault
+        // that caused it.
+        assert!(js.contains("\"fault_t\":5"), "{js}");
     }
 
     #[test]

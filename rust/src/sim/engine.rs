@@ -15,6 +15,8 @@ use std::collections::BinaryHeap;
 use std::collections::HashMap;
 use std::rc::Rc;
 
+use crate::trace::{ProfileReport, Recorder, SchedProfile};
+
 /// Simulated time in seconds.
 pub type SimTime = f64;
 
@@ -63,6 +65,17 @@ pub struct Engine {
     /// Live (scheduled, not yet executed, not cancelled) callbacks by seq.
     events: HashMap<u64, EventFn>,
     executed: u64,
+    /// Self-profiler hot-path counters (always on; see [`crate::trace`]).
+    timers_armed: u64,
+    timers_cancelled: u64,
+    msgs_scheduled: u64,
+    /// Scheduler-lane profile, filled in by the [`crate::sim::par`] pump
+    /// (zero for sequential engines; wall-derived, outside identity).
+    sched: SchedProfile,
+    /// Deterministic trace recorder, installed per run when a scenario
+    /// asks for tracing. Boxed so the off-by-default case costs one
+    /// pointer.
+    recorder: Option<Box<Recorder>>,
 }
 
 impl Default for Engine {
@@ -73,7 +86,18 @@ impl Default for Engine {
 
 impl Engine {
     pub fn new() -> Self {
-        Engine { now: 0.0, seq: 0, heap: BinaryHeap::new(), events: HashMap::new(), executed: 0 }
+        Engine {
+            now: 0.0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            events: HashMap::new(),
+            executed: 0,
+            timers_armed: 0,
+            timers_cancelled: 0,
+            msgs_scheduled: 0,
+            sched: SchedProfile::default(),
+            recorder: None,
+        }
     }
 
     /// Current virtual time in seconds.
@@ -86,12 +110,54 @@ impl Engine {
         self.executed
     }
 
+    /// Install a deterministic trace recorder on this engine.
+    /// Instrumentation sites emit through [`Engine::recorder`]; a run
+    /// without one records nothing and pays one branch per site.
+    pub fn set_recorder(&mut self, rec: Recorder) {
+        self.recorder = Some(Box::new(rec));
+    }
+
+    /// The installed trace recorder, if any. Emission through this
+    /// accessor happens inside engine-event execution, which is what
+    /// makes every recorded stream deterministic.
+    pub fn recorder(&mut self) -> Option<&mut Recorder> {
+        self.recorder.as_deref_mut()
+    }
+
+    /// Remove and return the recorder (the harvest step at run end).
+    pub fn take_recorder(&mut self) -> Option<Recorder> {
+        self.recorder.take().map(|b| *b)
+    }
+
+    /// The scheduler-lane profile slot, written by the parallel pump
+    /// ([`crate::sim::par`]) at shard pump boundaries.
+    pub fn sched_mut(&mut self) -> &mut SchedProfile {
+        &mut self.sched
+    }
+
+    /// Snapshot this engine's self-profiler counters. The water-filling
+    /// scope counters live on [`crate::net::FlowNet`] and are folded in
+    /// by the runner; `sched` is `Some` only for engines driven by the
+    /// parallel pump.
+    pub fn profile(&self) -> ProfileReport {
+        ProfileReport {
+            events: self.executed,
+            timers_armed: self.timers_armed,
+            timers_cancelled: self.timers_cancelled,
+            channel_messages: self.msgs_scheduled,
+            refill_components: 0,
+            dirty_links: 0,
+            sched: if self.sched.rounds > 0 { Some(self.sched.clone()) } else { None },
+        }
+    }
+
     /// Schedule `f` at absolute time `t` (must be >= now).
     pub fn schedule_at<F: FnOnce(&mut Engine) + 'static>(&mut self, t: SimTime, f: F) -> TimerId {
         assert!(t >= self.now - 1e-9, "scheduling into the past: t={t} now={}", self.now);
         assert!(t.is_finite(), "non-finite event time");
         let seq = self.seq;
         self.seq += 1;
+        self.timers_armed += 1;
         self.events.insert(seq, Box::new(f));
         self.heap.push(Scheduled { time: t.max(self.now), seq });
         // Invariant: every live callback has a heap marker (markers without
@@ -135,6 +201,7 @@ impl Engine {
         assert!(channel < 1 << 15, "channel index overflows the tag bits");
         assert!(msg_seq < 1 << 48, "per-channel message sequence overflow");
         let seq = (1u64 << 63) | ((channel as u64) << 48) | msg_seq;
+        self.msgs_scheduled += 1;
         let prev = self.events.insert(seq, Box::new(f));
         assert!(prev.is_none(), "duplicate message key (channel {channel}, seq {msg_seq})");
         self.heap.push(Scheduled { time: at.max(self.now), seq });
@@ -147,6 +214,7 @@ impl Engine {
     /// the heap marker is purged when it pops or at the next compaction.
     pub fn cancel(&mut self, id: TimerId) {
         if self.events.remove(&id.0).is_some() {
+            self.timers_cancelled += 1;
             self.maybe_compact();
             // Invariant: after a cancellation-triggered compaction pass the
             // heap is O(live) — at most 2× the live events plus the small
@@ -435,6 +503,39 @@ mod tests {
         e.cancel(id);
         e.run();
         assert_eq!(*hits.borrow(), 0);
+    }
+
+    #[test]
+    fn profile_counters_track_hot_paths() {
+        let mut e = Engine::new();
+        let id = e.schedule_at(1.0, |_| {});
+        e.schedule_at(2.0, |_| {});
+        e.cancel(id);
+        e.schedule_msg(3.0, 0, 0, |_| {});
+        e.run();
+        let p = e.profile();
+        assert_eq!(p.timers_armed, 2);
+        assert_eq!(p.timers_cancelled, 1);
+        assert_eq!(p.channel_messages, 1);
+        assert_eq!(p.events, 2); // one local + one message; the cancelled one never runs
+        assert!(p.sched.is_none(), "sequential engines report no scheduler-lane profile");
+    }
+
+    #[test]
+    fn recorder_rides_the_engine_and_harvests_out() {
+        let mut e = Engine::new();
+        assert!(e.recorder().is_none());
+        e.set_recorder(crate::trace::Recorder::new(&crate::trace::TraceSpec::with_cap(8)));
+        e.schedule_at(1.0, |eng| {
+            let t = eng.now();
+            if let Some(rec) = eng.recorder() {
+                rec.instant(t, 0, 0, "tick", 0, &[]);
+            }
+        });
+        e.run();
+        let rec = e.take_recorder().expect("recorder installed");
+        assert_eq!(rec.len(), 1);
+        assert!(e.recorder().is_none(), "take_recorder removes it");
     }
 
     #[test]

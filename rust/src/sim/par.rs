@@ -58,6 +58,16 @@
 //! The cross-thread-count determinism tests in `tests/determinism.rs`
 //! and the `engine_parallel` bench check the resulting byte-identity of
 //! whole `RunReport`s end to end.
+//!
+//! # Self-observation
+//!
+//! When tracing is enabled the pump emits a `sync.msg` instant per
+//! cross-shard delivery — from *inside* the scheduled message event, so
+//! the emission order is the deterministic execution order, never the
+//! wall-clock drain order. The pump also feeds the engine's
+//! [`SchedProfile`](crate::trace::SchedProfile) at round boundaries
+//! (rounds, horizon stalls, host seconds per stage); those numbers
+//! depend on peer thread speed and stay outside byte-identity.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -178,6 +188,8 @@ impl<A: ShardApp> Pump<A> {
     fn round(&mut self) -> bool {
         debug_assert!(!self.finished);
         let mut progress = false;
+        // simlint: allow(SIM002) — pump-boundary wall sampling feeds SchedProfile, outside identity
+        let t0 = std::time::Instant::now();
 
         // 1. Read peer horizons BEFORE draining: a message promised by an
         // EOT observed here is guaranteed to already sit in the queue.
@@ -190,6 +202,7 @@ impl<A: ShardApp> Pump<A> {
 
         // 2. Drain input channels in fixed order; every message becomes
         // an engine event keyed by (time, channel, per-channel seq).
+        let mut drained_any = false;
         let mut batch: Vec<(SimTime, A::Msg)> = Vec::new();
         for from in 0..self.n {
             if from == self.idx {
@@ -204,12 +217,22 @@ impl<A: ShardApp> Pump<A> {
                 self.in_seq[from] += 1;
                 let app = self.app.clone();
                 let out = self.outbox.clone();
+                let to = self.idx;
                 self.eng.schedule_msg(at, from as u16, seq, move |eng| {
+                    // Emitted inside the message event: the recorder sees
+                    // the deterministic execution order, not drain order.
+                    let t = eng.now();
+                    if let Some(rec) = eng.recorder() {
+                        rec.instant(t, to as u16, from as u32, "sync.msg", 0, &[]);
+                    }
                     app.borrow_mut().on_msg(eng, from, msg, &out);
                 });
-                progress = true;
+                drained_any = true;
             }
         }
+        progress |= drained_any;
+        // simlint: allow(SIM002) — pump-boundary wall sampling feeds SchedProfile, outside identity
+        let t1 = std::time::Instant::now();
 
         // 3. Execute the safe region. EIT == ∞ means every peer has
         // finished: nothing can arrive anymore, drain unconditionally.
@@ -219,7 +242,10 @@ impl<A: ShardApp> Pump<A> {
         } else {
             self.eng.run_before(eit);
         }
-        progress |= self.eng.executed() > before;
+        let ran_any = self.eng.executed() > before;
+        progress |= ran_any;
+        // simlint: allow(SIM002) — pump-boundary wall sampling feeds SchedProfile, outside identity
+        let t2 = std::time::Instant::now();
 
         // 4. Flush the outbox, THEN publish: queue pushes must
         // happen-before the Release store so a reader observing the new
@@ -233,6 +259,22 @@ impl<A: ShardApp> Pump<A> {
                 self.published
             );
             self.shared.queues[self.idx * self.n + to].lock().unwrap().push_back((deliver_at, msg));
+        }
+
+        // Book the round into the scheduler-lane profile before the
+        // finish path below hands the engine to `ShardApp::finish` (which
+        // is where shard profiles get harvested).
+        // simlint: allow(SIM002) — pump-boundary wall sampling feeds SchedProfile, outside identity
+        let t3 = std::time::Instant::now();
+        {
+            let sched = self.eng.sched_mut();
+            sched.rounds += 1;
+            if !drained_any && !ran_any {
+                sched.stalled_rounds += 1;
+            }
+            sched.host_drain_secs += t1.duration_since(t0).as_secs_f64();
+            sched.host_run_secs += t2.duration_since(t1).as_secs_f64();
+            sched.host_publish_secs += t3.duration_since(t2).as_secs_f64();
         }
 
         if self.eng.pending() == 0 && (eit == f64::INFINITY || self.app.borrow().quiescent()) {
@@ -475,6 +517,60 @@ mod tests {
             );
             assert_eq!(outs[0], vec![-1, 1, 2, 3], "threads={threads}");
         }
+    }
+
+    /// A recorder installed in `init` sees one `sync.msg` instant per
+    /// delivery, the merged Chrome export is byte-identical across
+    /// thread counts, and the pump books scheduler-lane rounds.
+    #[test]
+    fn pump_emits_sync_msg_instants_and_books_sched_rounds() {
+        use crate::trace::{ProfileReport, Recorder, Stream, TraceSpec};
+        struct Traced {
+            idx: usize,
+            limit: u64,
+            done: bool,
+        }
+        impl ShardApp for Traced {
+            type Msg = u64;
+            type Out = (Recorder, ProfileReport);
+            fn init(&mut self, eng: &mut Engine, out: &Outbox<u64>) {
+                eng.set_recorder(Recorder::new(&TraceSpec::new()));
+                if self.idx == 0 {
+                    out.send(eng, 1, 1);
+                }
+            }
+            fn on_msg(&mut self, eng: &mut Engine, from: usize, msg: u64, out: &Outbox<u64>) {
+                if msg < self.limit {
+                    out.send(eng, from, msg + 1);
+                } else {
+                    self.done = true;
+                }
+            }
+            fn quiescent(&self) -> bool {
+                self.done
+            }
+            fn finish(&mut self, eng: &mut Engine) -> Self::Out {
+                (eng.take_recorder().expect("recorder installed in init"), eng.profile())
+            }
+        }
+        let run = |threads: usize| {
+            let mk = |idx: usize| move || Traced { idx, limit: 8, done: false };
+            let outs = run_sharded(0.5, vec![mk(0), mk(1)], threads);
+            let mut stream = Stream::new(2);
+            let mut profile = ProfileReport::default();
+            for (rec, p) in outs {
+                stream.absorb(rec);
+                profile.add(&p);
+            }
+            (stream.to_chrome_json(), profile)
+        };
+        let (js1, p1) = run(1);
+        assert_eq!(js1.matches("sync.msg").count(), 8, "one instant per delivery");
+        assert_eq!(p1.channel_messages, 8);
+        assert!(p1.sched.as_ref().expect("pump books sched profile").rounds > 0);
+        let (js2, p2) = run(2);
+        assert_eq!(js1, js2, "trace bytes diverge across thread counts");
+        assert_eq!(p1, p2, "deterministic profile counters diverge");
     }
 
     #[test]

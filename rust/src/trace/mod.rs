@@ -1,0 +1,714 @@
+//! # trace — deterministic tracing & self-profiling
+//!
+//! A zero-dependency structured-tracing subsystem for the simulator
+//! itself: which layer a mega-churn second is spent in, why a shard
+//! stalls at its lookahead horizon, whether incremental water-filling's
+//! recompute scope actually shrank. Three pieces:
+//!
+//! 1. **Sim-time spans/events.** A per-shard ring-buffered [`Recorder`]
+//!    (bounded, drop-oldest with a dropped-count, off by default) lives
+//!    on each [`crate::sim::Engine`] and records events keyed
+//!    `(sim_time, domain, seq)`. Emission happens **only from
+//!    engine-event execution context**, so each shard's stream is a pure
+//!    function of its deterministic event order — never of wall-clock
+//!    interleaving. Enabled per scenario via
+//!    `Scenario::trace(TraceSpec)` or the CLI `--trace` / `oct trace`.
+//!
+//! 2. **Canonical merge + Chrome export.** Shard streams are absorbed
+//!    into a [`Stream`] in shard-index order and stably sorted by
+//!    `(time, domain)`; because per-shard streams are identical at any
+//!    thread count (the conservative engine executes the same events in
+//!    the same order — see [`crate::sim::par`]) and the tie-break within
+//!    a `(time, domain)` cell is the per-shard append order, the merged
+//!    stream — and its [`Stream::to_chrome_json`] Chrome Trace Format
+//!    export — is **byte-identical across `OCT_THREADS=1/N`**. One pid
+//!    per site/WAN/control domain, one tid per node/shard lane; the file
+//!    loads directly in Perfetto (`ui.perfetto.dev`) or
+//!    `chrome://tracing`.
+//!
+//! 3. **Self-profiler.** Always-on cheap counters ([`ProfileReport`]:
+//!    events executed, timers armed/cancelled, cross-shard channel
+//!    messages, water-filling components re-filled + dirty links) ride
+//!    in every `RunReport` and stay *inside* JSON byte-identity — they
+//!    are deterministic by the same argument as the spans. The
+//!    scheduler-lane numbers that are **not** deterministic (horizon
+//!    stall rounds, wall time per pump stage — both depend on how fast
+//!    peer threads happen to run) live in [`SchedProfile`], excluded
+//!    from equality and serialization exactly like
+//!    `coordinator::runner::WallStats`.
+//!
+//! ## Span taxonomy
+//!
+//! | name | kind | domain / lane | emitted by |
+//! |------|------|---------------|------------|
+//! | `flow` | span | flow's domain / first path link | `net/flows.rs` start → complete |
+//! | `flow.retune` | instant | flow's domain / first path link | each deterministic retune (args: rate) |
+//! | `link.retune` | instant | link's domain / link | capacity changes (`set_capacities`) |
+//! | `dataflow`, `phase.map`, `phase.reduce` | span | control / 0 | `framework/runtime.rs` |
+//! | `task` | span | node's site / node | task assignment → completion |
+//! | `steal` | instant | node's site / thief node | cross-node slot steals |
+//! | `provision.image` | span | control / 0 | imaging admission → all nodes imaged (args: image, bytes) |
+//! | `provision.lightpath` | span | WAN / 0 | lightpath request → grant applied (args: gbps) |
+//! | `tenant.admit` | instant | control / 0 | slice admission in `run_tenants` (args: tenant) |
+//! | `fault.crash`, `fault.nic`, `fault.wave` | instant | subject's domain | fault injection |
+//! | `alert.*` | instant | subject's domain | ops-plane detection + remediation; `alert.dead` carries `fault_t`, the injection time of the causing fault span |
+//! | `sync.msg` | instant | receiving shard / sending shard | cross-shard delivery (`sim/par.rs`) |
+//!
+//! RPC request/response spans in [`crate::gmp`] run on real UDP sockets
+//! and wall-clock deadlines with no engine anywhere near them, so they
+//! *cannot* be part of the deterministic merge; they go to a thread-safe
+//! [`WallSpanLog`] instead, explicitly outside byte-identity.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::fmt::Write as _;
+
+use crate::util::json::{obj, Json};
+
+/// Tracing configuration carried by a scenario. Off by default — a
+/// `Scenario` traces only when it (or the runner override) carries one
+/// of these.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSpec {
+    /// Per-shard ring capacity in events. When full, the **oldest**
+    /// event drops and the stream's dropped-count rises; the tail of a
+    /// run is always retained.
+    pub cap: usize,
+}
+
+impl TraceSpec {
+    /// Default per-shard ring capacity.
+    pub const DEFAULT_CAP: usize = 1 << 16;
+
+    pub fn new() -> TraceSpec {
+        TraceSpec { cap: Self::DEFAULT_CAP }
+    }
+
+    /// A spec with an explicit ring capacity (events per shard).
+    pub fn with_cap(cap: usize) -> TraceSpec {
+        assert!(cap > 0, "trace ring capacity must be positive");
+        TraceSpec { cap }
+    }
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Chrome Trace Format phase of one event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ph {
+    /// Async span begin (`"b"`).
+    B,
+    /// Async span end (`"e"`).
+    E,
+    /// Thread-scoped instant (`"i"`).
+    I,
+}
+
+/// One typed argument value on an event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arg {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+/// One recorded event. `seq` is the recorder-local emission index — it
+/// orders same-`(t, domain)` events within a shard and is never
+/// exported.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub t: f64,
+    pub domain: u16,
+    pub lane: u32,
+    pub ph: Ph,
+    pub name: &'static str,
+    pub id: u64,
+    pub args: Vec<(&'static str, Arg)>,
+    seq: u64,
+}
+
+/// A per-shard bounded event recorder. Lives on the shard's
+/// [`crate::sim::Engine`]; instrumentation sites emit through
+/// [`crate::sim::Engine::recorder`], so every emission happens inside
+/// the engine's deterministic event order.
+#[derive(Debug)]
+pub struct Recorder {
+    cap: usize,
+    ring: VecDeque<TraceEvent>,
+    dropped: u64,
+    seq: u64,
+    ids: u64,
+}
+
+impl Recorder {
+    pub fn new(spec: &TraceSpec) -> Recorder {
+        Recorder { cap: spec.cap, ring: VecDeque::new(), dropped: 0, seq: 0, ids: 0 }
+    }
+
+    /// A fresh span id, unique within this recorder and deterministic
+    /// (a plain counter). Callers that have no natural stable id (e.g. a
+    /// dataflow run) draw one here at span begin and reuse it at end.
+    pub fn fresh_id(&mut self) -> u64 {
+        self.ids += 1;
+        self.ids
+    }
+
+    fn push(
+        &mut self,
+        t: f64,
+        domain: u16,
+        lane: u32,
+        ph: Ph,
+        name: &'static str,
+        id: u64,
+        args: &[(&'static str, Arg)],
+    ) {
+        debug_assert!(t.is_finite() && t >= 0.0, "trace event at invalid time {t}");
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.ring.push_back(TraceEvent { t, domain, lane, ph, name, id, args: args.to_vec(), seq });
+    }
+
+    /// Record an async span begin.
+    pub fn begin(
+        &mut self,
+        t: f64,
+        domain: u16,
+        lane: u32,
+        name: &'static str,
+        id: u64,
+        args: &[(&'static str, Arg)],
+    ) {
+        self.push(t, domain, lane, Ph::B, name, id, args);
+    }
+
+    /// Record an async span end (matches a [`Recorder::begin`] by
+    /// `(name, id)`).
+    pub fn end(
+        &mut self,
+        t: f64,
+        domain: u16,
+        lane: u32,
+        name: &'static str,
+        id: u64,
+        args: &[(&'static str, Arg)],
+    ) {
+        self.push(t, domain, lane, Ph::E, name, id, args);
+    }
+
+    /// Record a thread-scoped instant.
+    pub fn instant(
+        &mut self,
+        t: f64,
+        domain: u16,
+        lane: u32,
+        name: &'static str,
+        id: u64,
+        args: &[(&'static str, Arg)],
+    ) {
+        self.push(t, domain, lane, Ph::I, name, id, args);
+    }
+
+    /// Events currently retained in the ring.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Events dropped to the ring bound so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// The merged trace of a run (or a whole scenario set): shard streams
+/// absorbed in shard-index order, exported in the canonical
+/// `(time, domain)` order. Only this type crosses module boundaries —
+/// simlint rule SIM007 keeps raw event types confined to `trace/`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Stream {
+    events: Vec<TraceEvent>,
+    /// Total events dropped to ring bounds across absorbed recorders.
+    pub dropped: u64,
+    /// Site count of the topology the events were recorded against —
+    /// fixes the pid naming (`site0..siteN-1`, `wan`, `control`).
+    pub num_sites: usize,
+}
+
+impl Stream {
+    pub fn new(num_sites: usize) -> Stream {
+        Stream { events: Vec::new(), dropped: 0, num_sites }
+    }
+
+    /// The WAN pseudo-domain index for a testbed with `num_sites` sites.
+    pub fn wan_domain(num_sites: usize) -> u16 {
+        num_sites as u16
+    }
+
+    /// The control pseudo-domain (provisioning, tenancy, dataflow
+    /// phases — testbed-wide events with no single site).
+    pub fn control_domain(num_sites: usize) -> u16 {
+        num_sites as u16 + 1
+    }
+
+    /// Absorb one shard's recorder (its events are already in the
+    /// shard's deterministic emission order). Call in shard-index order.
+    pub fn absorb(&mut self, rec: Recorder) {
+        self.dropped += rec.dropped;
+        self.events.extend(rec.ring);
+    }
+
+    /// Append another merged stream (scenario-set concatenation).
+    pub fn append(&mut self, mut other: Stream) {
+        self.dropped += other.dropped;
+        self.num_sites = self.num_sites.max(other.num_sites);
+        self.events.append(&mut other.events);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events in canonical order. Sim times are non-negative, so the
+    /// IEEE bit pattern of `t` sorts numerically; the sort is stable, so
+    /// events equal on `(t, domain)` keep their per-shard emission
+    /// order. In sharded runs a domain is owned by exactly one shard,
+    /// which makes this a total deterministic order at any thread count.
+    fn canonical(&self) -> Vec<&TraceEvent> {
+        let mut evs: Vec<&TraceEvent> = self.events.iter().collect();
+        evs.sort_by_key(|e| (e.t.to_bits(), e.domain));
+        evs
+    }
+
+    fn domain_name(&self, d: u16) -> String {
+        if (d as usize) < self.num_sites {
+            format!("site{d}")
+        } else if d == Self::wan_domain(self.num_sites) {
+            "wan".to_string()
+        } else if d == Self::control_domain(self.num_sites) {
+            "control".to_string()
+        } else {
+            format!("domain{d}")
+        }
+    }
+
+    /// Export as Chrome Trace Format JSON (the object form, loadable in
+    /// Perfetto / `chrome://tracing`): one pid per domain, one tid per
+    /// lane, `ts` in microseconds of simulated time. Byte-identical
+    /// across thread counts for the same run — `tests/determinism.rs`
+    /// asserts exactly that.
+    pub fn to_chrome_json(&self) -> String {
+        let evs = self.canonical();
+        let mut pids: BTreeSet<u16> = BTreeSet::new();
+        let mut tids: BTreeSet<(u16, u32)> = BTreeSet::new();
+        for e in &evs {
+            pids.insert(e.domain);
+            tids.insert((e.domain, e.lane));
+        }
+        let mut out = String::with_capacity(evs.len() * 112 + 1024);
+        out.push_str("{\"traceEvents\":[");
+        let mut first = true;
+        for d in &pids {
+            sep(&mut out, &mut first);
+            let _ = write!(
+                out,
+                "{{\"ph\":\"M\",\"pid\":{},\"name\":\"process_name\",\"args\":{{\"name\":{}}}}}",
+                *d as u32 + 1,
+                esc(&self.domain_name(*d)),
+            );
+        }
+        for (d, l) in &tids {
+            sep(&mut out, &mut first);
+            let _ = write!(
+                out,
+                "{{\"ph\":\"M\",\"pid\":{},\"tid\":{},\"name\":\"thread_name\",\"args\":{{\"name\":\"lane{l}\"}}}}",
+                *d as u32 + 1,
+                l + 1,
+            );
+        }
+        for e in evs {
+            sep(&mut out, &mut first);
+            out.push_str("{\"ph\":\"");
+            out.push_str(match e.ph {
+                Ph::B => "b",
+                Ph::E => "e",
+                Ph::I => "i",
+            });
+            out.push('"');
+            match e.ph {
+                Ph::B | Ph::E => {
+                    let _ = write!(out, ",\"cat\":\"oct\",\"id\":\"0x{:x}\"", e.id);
+                }
+                Ph::I => out.push_str(",\"s\":\"t\""),
+            }
+            let _ = write!(
+                out,
+                ",\"name\":\"{}\",\"pid\":{},\"tid\":{},\"ts\":{}",
+                e.name,
+                e.domain as u32 + 1,
+                e.lane + 1,
+                e.t * 1e6,
+            );
+            out.push_str(",\"args\":{");
+            let mut afirst = true;
+            if e.ph == Ph::I && e.id != 0 {
+                let _ = write!(out, "\"id\":{}", e.id);
+                afirst = false;
+            }
+            for (k, v) in &e.args {
+                if !afirst {
+                    out.push(',');
+                }
+                afirst = false;
+                let _ = write!(out, "\"{k}\":");
+                match v {
+                    Arg::U(u) => {
+                        let _ = write!(out, "{u}");
+                    }
+                    Arg::F(f) => {
+                        debug_assert!(f.is_finite(), "non-finite trace arg {k}={f}");
+                        let _ = write!(out, "{f}");
+                    }
+                    Arg::S(s) => out.push_str(&esc(s)),
+                }
+            }
+            out.push_str("}}");
+        }
+        let _ = write!(
+            out,
+            "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"events\":\"{}\",\"dropped\":\"{}\"}}}}",
+            self.events.len(),
+            self.dropped,
+        );
+        out
+    }
+}
+
+fn sep(out: &mut String, first: &mut bool) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+}
+
+/// JSON-escape a string (quotes included). Event names are `&'static
+/// str` literals that never need escaping; this is for dynamic strings
+/// (tenant names, domain labels).
+fn esc(s: &str) -> String {
+    Json::Str(s.to_string()).to_string()
+}
+
+// ---------------------------------------------------------------------
+// Self-profiler
+// ---------------------------------------------------------------------
+
+/// Always-on engine hot-path counters, surfaced in every `RunReport`.
+/// Every field except [`ProfileReport::sched`] is a pure function of
+/// the deterministic event order, so the counters sit *inside* report
+/// byte-identity across thread counts; `sched` is wall-clock-derived
+/// and excluded from equality and serialization, exactly like
+/// `WallStats`.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileReport {
+    /// Events executed across all engines (shards summed).
+    pub events: u64,
+    /// Timers armed (`Engine::schedule_at` / `schedule_in`).
+    pub timers_armed: u64,
+    /// Timers cancelled before firing (`Engine::cancel` hits).
+    pub timers_cancelled: u64,
+    /// Cross-shard messages scheduled (`Engine::schedule_msg`).
+    pub channel_messages: u64,
+    /// Water-filling components re-filled (scope of each recompute).
+    pub refill_components: u64,
+    /// Dirty links visited by incremental water-filling.
+    pub dirty_links: u64,
+    /// Scheduler-lane profile (sharded runs only) — host-time derived,
+    /// outside identity.
+    pub sched: Option<SchedProfile>,
+}
+
+impl PartialEq for ProfileReport {
+    /// `sched` is wall-clock-derived and deliberately excluded — two
+    /// runs of the same scenario at different thread counts are equal.
+    fn eq(&self, other: &Self) -> bool {
+        self.events == other.events
+            && self.timers_armed == other.timers_armed
+            && self.timers_cancelled == other.timers_cancelled
+            && self.channel_messages == other.channel_messages
+            && self.refill_components == other.refill_components
+            && self.dirty_links == other.dirty_links
+    }
+}
+
+impl ProfileReport {
+    /// Fold another engine's (or shard's) counters into this one.
+    pub fn add(&mut self, other: &ProfileReport) {
+        self.events += other.events;
+        self.timers_armed += other.timers_armed;
+        self.timers_cancelled += other.timers_cancelled;
+        self.channel_messages += other.channel_messages;
+        self.refill_components += other.refill_components;
+        self.dirty_links += other.dirty_links;
+        if let Some(s) = &other.sched {
+            self.sched.get_or_insert_with(SchedProfile::default).add(s);
+        }
+    }
+
+    /// Deterministic counters only — `sched` never serializes.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("events", Json::Num(self.events as f64)),
+            ("timers_armed", Json::Num(self.timers_armed as f64)),
+            ("timers_cancelled", Json::Num(self.timers_cancelled as f64)),
+            ("channel_messages", Json::Num(self.channel_messages as f64)),
+            ("refill_components", Json::Num(self.refill_components as f64)),
+            ("dirty_links", Json::Num(self.dirty_links as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> ProfileReport {
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        ProfileReport {
+            events: num("events"),
+            timers_armed: num("timers_armed"),
+            timers_cancelled: num("timers_cancelled"),
+            channel_messages: num("channel_messages"),
+            refill_components: num("refill_components"),
+            dirty_links: num("dirty_links"),
+            sched: None,
+        }
+    }
+}
+
+/// Host-side scheduler-lane profile of a sharded run, sampled only at
+/// shard pump boundaries. Stall counts and stage times depend on how
+/// fast peer *threads* happen to run, so none of this is deterministic
+/// — it rides along for diagnosis and stays out of identity.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedProfile {
+    /// Pump rounds executed across all shards.
+    pub rounds: u64,
+    /// Rounds in which a shard executed no event and received no
+    /// message — it was blocked at its lookahead horizon (EIT).
+    pub stalled_rounds: u64,
+    /// Host seconds draining input channels into engine events.
+    pub host_drain_secs: f64,
+    /// Host seconds executing events below the safe horizon.
+    pub host_run_secs: f64,
+    /// Host seconds flushing outboxes and publishing EOT.
+    pub host_publish_secs: f64,
+}
+
+impl SchedProfile {
+    pub fn add(&mut self, other: &SchedProfile) {
+        self.rounds += other.rounds;
+        self.stalled_rounds += other.stalled_rounds;
+        self.host_drain_secs += other.host_drain_secs;
+        self.host_run_secs += other.host_run_secs;
+        self.host_publish_secs += other.host_publish_secs;
+    }
+
+    /// Fraction of pump rounds that made progress inside the lookahead
+    /// window (1.0 = shards never waited at the horizon).
+    pub fn lookahead_utilization(&self) -> f64 {
+        if self.rounds == 0 {
+            return 1.0;
+        }
+        1.0 - self.stalled_rounds as f64 / self.rounds as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wall-domain spans (gmp RPC)
+// ---------------------------------------------------------------------
+
+/// One wall-clock span from the real-UDP RPC layer. Offsets are
+/// microseconds since the log's creation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WallSpan {
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub ok: bool,
+}
+
+/// A thread-safe span log for layers that run on real wall time —
+/// [`crate::gmp`]'s UDP endpoint and RPC threads have no engine and no
+/// simulated clock, so their request/response spans **cannot** join the
+/// deterministic merge; they are collected here and documented as
+/// outside byte-identity.
+#[derive(Clone)]
+pub struct WallSpanLog {
+    inner: std::sync::Arc<std::sync::Mutex<Vec<WallSpan>>>,
+    t0: std::time::Instant,
+}
+
+impl WallSpanLog {
+    pub fn new() -> WallSpanLog {
+        WallSpanLog {
+            inner: std::sync::Arc::new(std::sync::Mutex::new(Vec::new())),
+            // simlint: allow(SIM002) — wall-domain RPC spans measure real UDP round-trips, outside simulated time
+            t0: std::time::Instant::now(),
+        }
+    }
+
+    /// Record a span that started at `started` (a caller-side
+    /// `Instant::now()` taken before the RPC) and just finished.
+    pub fn record(&self, name: &str, started: std::time::Instant, ok: bool) {
+        let start_us = started.duration_since(self.t0).as_micros() as u64;
+        // simlint: allow(SIM002) — wall-domain RPC spans measure real UDP round-trips, outside simulated time
+        let dur_us = started.elapsed().as_micros() as u64;
+        self.inner.lock().unwrap().push(WallSpan { name: name.to_string(), start_us, dur_us, ok });
+    }
+
+    /// Snapshot of all spans recorded so far, in completion order.
+    pub fn snapshot(&self) -> Vec<WallSpan> {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+impl Default for WallSpanLog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(cap: usize) -> Recorder {
+        Recorder::new(&TraceSpec::with_cap(cap))
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = rec(3);
+        for i in 0..5u64 {
+            r.instant(i as f64, 0, 0, "e", i, &[]);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let mut s = Stream::new(1);
+        s.absorb(r);
+        assert_eq!(s.dropped, 2);
+        // The tail survived: ids 2, 3, 4.
+        let ids: Vec<u64> = s.canonical().iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn canonical_order_is_time_then_domain_then_emission() {
+        // Two "shards": domain 1 and domain 0, absorbed in shard order.
+        let mut a = rec(16);
+        a.begin(1.0, 1, 0, "x", 1, &[]);
+        a.end(2.0, 1, 0, "x", 1, &[]);
+        let mut b = rec(16);
+        b.instant(1.0, 0, 0, "y", 1, &[]);
+        b.instant(1.0, 0, 0, "z", 2, &[]);
+        let mut s = Stream::new(2);
+        s.absorb(a);
+        s.absorb(b);
+        let names: Vec<&str> = s.canonical().iter().map(|e| e.name).collect();
+        // t=1: domain 0 first (y before z by emission order), then
+        // domain 1; t=2 last.
+        assert_eq!(names, vec!["y", "z", "x", "x"]);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_domain_pids() {
+        let mut r = rec(16);
+        r.begin(0.5, 0, 3, "flow", 7, &[("bytes", Arg::F(1e6)), ("src", Arg::U(3))]);
+        r.instant(0.75, 2, 0, "tenant.admit", 1, &[("tenant", Arg::S("a\"b".into()))]);
+        r.end(1.5, 0, 3, "flow", 7, &[]);
+        let mut s = Stream::new(1);
+        s.absorb(r);
+        let js = s.to_chrome_json();
+        let parsed = Json::parse(&js).expect("chrome trace must parse");
+        let evs = match parsed.get("traceEvents") {
+            Some(Json::Arr(v)) => v,
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        // 2 process_name + 2 thread_name metadata + 3 events.
+        assert_eq!(evs.len(), 7);
+        let meta: Vec<String> = evs
+            .iter()
+            .filter(|e| e.get("name") == Some(&Json::Str("process_name".into())))
+            .map(|e| match e.get("args").and_then(|a| a.get("name")) {
+                Some(Json::Str(s)) => s.clone(),
+                _ => panic!("unnamed process"),
+            })
+            .collect();
+        // Domain 0 is site0; domain 2 == control for a 1-site testbed.
+        assert_eq!(meta, vec!["site0".to_string(), "control".to_string()]);
+        // ts is in microseconds of sim time.
+        let flow = evs.iter().find(|e| e.get("ph") == Some(&Json::Str("b".into()))).unwrap();
+        assert_eq!(flow.get("ts"), Some(&Json::Num(500000.0)));
+    }
+
+    #[test]
+    fn export_is_independent_of_absorb_interleaving_given_fixed_shard_order() {
+        // The same two per-shard streams always merge to the same bytes.
+        let build = || {
+            let mut a = rec(8);
+            a.instant(1.0, 0, 0, "a1", 1, &[]);
+            a.instant(3.0, 0, 0, "a2", 2, &[]);
+            let mut b = rec(8);
+            b.instant(1.0, 1, 0, "b1", 1, &[]);
+            b.instant(2.0, 1, 0, "b2", 2, &[]);
+            let mut s = Stream::new(2);
+            s.absorb(a);
+            s.absorb(b);
+            s.to_chrome_json()
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn profile_report_identity_excludes_sched() {
+        let mut a = ProfileReport { events: 10, timers_armed: 4, ..Default::default() };
+        let b = ProfileReport {
+            events: 10,
+            timers_armed: 4,
+            sched: Some(SchedProfile { rounds: 99, stalled_rounds: 3, ..Default::default() }),
+            ..Default::default()
+        };
+        assert_eq!(a, b);
+        let j = b.to_json().to_string();
+        assert!(!j.contains("rounds"), "sched leaked into serialization: {j}");
+        let back = ProfileReport::from_json(&Json::parse(&j).unwrap());
+        assert_eq!(back, b);
+        // add() sums counters and merges sched.
+        a.add(&b);
+        assert_eq!(a.events, 20);
+        assert_eq!(a.sched.as_ref().unwrap().rounds, 99);
+        let util = b.sched.as_ref().unwrap().lookahead_utilization();
+        assert!((util - (1.0 - 3.0 / 99.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wall_span_log_records_outside_sim_time() {
+        let log = WallSpanLog::new();
+        // simlint: allow(SIM002) — exercising the wall-domain span API itself
+        let t = std::time::Instant::now();
+        log.record("echo", t, true);
+        let spans = log.snapshot();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "echo");
+        assert!(spans[0].ok);
+    }
+}

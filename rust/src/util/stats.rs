@@ -24,11 +24,18 @@ pub fn median(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated percentile, `p` in [0, 100]. 0.0 on empty input.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Linear-interpolated percentile over an **already-sorted** slice — the
+/// allocation-free core of [`percentile`], for callers that keep their
+/// own sorted scratch buffer. 0.0 on empty input.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;

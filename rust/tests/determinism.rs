@@ -19,6 +19,7 @@
 //! `OCT_THREADS=1` and `OCT_THREADS=4` and diffs the two JSON streams.
 
 use oct::coordinator::{find_set, RunReport, ScenarioRunner};
+use oct::trace::TraceSpec;
 
 /// Run the named set once at `1/div` scale and serialize all its reports.
 /// The runner resolves its worker count from `OCT_THREADS` (default 1),
@@ -128,6 +129,40 @@ fn mega_churn_is_thread_count_invariant() {
     for threads in [2, 4, 8] {
         let t = run_serialized_threads("mega-churn", 500, threads);
         assert_same("mega-churn", &format!("1 vs {threads} threads"), &base, &t);
+    }
+}
+
+#[test]
+fn mega_churn_trace_stream_is_thread_count_invariant() {
+    // The merged trace stream is a strictly stronger probe than report
+    // equality: it exposes the full per-event execution record (every
+    // flow start/retune/complete and every cross-shard sync message),
+    // not just the aggregates. The exported Chrome-trace bytes must be
+    // identical at any worker count.
+    let traced = |threads: usize| -> (String, String) {
+        let set = find_set("mega-churn").expect("mega-churn registered").scaled_down(500);
+        let runner = ScenarioRunner::new().with_threads(threads).with_trace(TraceSpec::new());
+        let (reports, stream) = runner.run_set_with_trace(&set);
+        assert!(!stream.is_empty(), "traced mega-churn recorded nothing");
+        let reports =
+            reports.iter().map(|r| r.to_json().to_string()).collect::<Vec<_>>().join("\n");
+        (reports, stream.to_chrome_json())
+    };
+    let (base_reports, base_trace) = traced(1);
+    // Tracing must not perturb the reports either.
+    let untraced = run_serialized_threads("mega-churn", 500, 1);
+    assert_same("mega-churn", "traced vs untraced reports", &base_reports, &untraced);
+    for threads in [2, 4] {
+        let (reports, trace) = traced(threads);
+        let what = format!("traced reports 1 vs {threads} threads");
+        assert_same("mega-churn", &what, &base_reports, &reports);
+        assert!(
+            trace == base_trace,
+            "mega-churn: trace stream diverges at {threads} threads \
+             (lens {} vs {})",
+            base_trace.len(),
+            trace.len()
+        );
     }
 }
 
