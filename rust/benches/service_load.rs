@@ -1,0 +1,146 @@
+//! Bench: the open-loop service workload through the sharded parallel
+//! engine vs sequential execution, over the whole `service` registry set
+//! (steady / diurnal / flash-crowd / WAN-degraded / replica ladder).
+//!
+//! Two assertions, in order of importance:
+//!
+//! 1. **Byte-identical reports.** The same scaled-down `service` set
+//!    runs through the [`ScenarioRunner`] with `--threads 1` and
+//!    `--threads N` (default 4). Both take the same sharded driver
+//!    (requests are homed at their user's site shard; cross-site
+//!    requests ride the WAN shard), so the conservative lookahead
+//!    protocol — not luck — must make the per-request latency samples,
+//!    quantiles, and SLO counters serialize identically byte for byte.
+//!    This always gates.
+//! 2. **Wall-clock speedup.** The N-thread run must beat the 1-thread
+//!    run by at least `OCT_SERVICE_MIN_SPEEDUP` (default 0 = disabled:
+//!    the service scenarios are lighter than the churn storms, so on
+//!    small shared runners only the byte-identity check blocks).
+//!
+//! Writes the machine-readable result to `BENCH_service_load.json` at
+//! the repo root, next to the other BENCH artifacts.
+//!
+//! Env knobs: `OCT_SERVICE_DIV` (divides the registry workload; default
+//! 100 → 20k requests per scenario), `OCT_SERVICE_THREADS` (default 4),
+//! `OCT_SERVICE_MIN_SPEEDUP` (default 0; 0 disables the speedup gate).
+
+use std::time::Instant;
+
+use oct::coordinator::{find_set, RunReport, ScenarioRunner};
+use oct::util::json::{obj, Json};
+
+fn env_or(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_or_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+struct Leg {
+    json: String,
+    wall: f64,
+    reports: Vec<RunReport>,
+}
+
+/// One full pass over the set at a fixed thread count. The report JSON
+/// deliberately excludes wall-clock stats, so `json` is comparable
+/// across legs; the leg's own wall time is measured around the run.
+fn run_leg(div: u64, threads: usize) -> Leg {
+    let set = find_set("service").expect("service set registered").scaled_down(div);
+    let runner = ScenarioRunner::new().with_threads(threads);
+    // simlint: allow(SIM002) — wall-clock times the bench, never steers the simulation
+    let t0 = Instant::now();
+    let reports = runner.run_set(&set);
+    let wall = t0.elapsed().as_secs_f64();
+    let json =
+        reports.iter().map(|r| r.to_json().to_string()).collect::<Vec<_>>().join("\n");
+    Leg { json, wall, reports }
+}
+
+fn write_bench_json(div: u64, threads: u64, seq: &Leg, par: &Leg, speedup: f64) {
+    let svc = |r: &RunReport| r.service.clone().expect("service report in service set");
+    let requests: u64 = par.reports.iter().map(|r| svc(r).requests).sum();
+    let slo_violations: u64 = par.reports.iter().map(|r| svc(r).slo_violations).sum();
+    let timeouts: u64 = par.reports.iter().map(|r| svc(r).timeouts).sum();
+    let events_per_sec =
+        par.reports[0].wall.map_or(Json::Null, |w| Json::Num(w.events_per_sec));
+    // The self-profiler's hot-path counters (from the steady scenario)
+    // ride along so benchcmp can attribute a wall-time regression;
+    // counters are engine-deterministic, the sched ratios host-bound.
+    let prof = &par.reports[0].profile;
+    let (stalled_rounds, lookahead_util) = match &prof.sched {
+        Some(s) => (Json::Num(s.stalled_rounds as f64), Json::Num(s.lookahead_utilization())),
+        None => (Json::Null, Json::Null),
+    };
+    let doc = obj(vec![
+        ("bench", Json::Str("service_load".into())),
+        ("scale_div", Json::Num(div as f64)),
+        ("transfers", Json::Num(requests as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("sequential_wall_secs", Json::Num(seq.wall)),
+        ("parallel_wall_secs", Json::Num(par.wall)),
+        ("speedup_parallel_vs_sequential", Json::Num(speedup)),
+        ("events_per_sec_parallel", events_per_sec),
+        ("reports_byte_identical", Json::Bool(seq.json == par.json)),
+        ("slo_violations", Json::Num(slo_violations as f64)),
+        ("timeouts", Json::Num(timeouts as f64)),
+        ("steady_p99_ms", Json::Num(svc(&par.reports[0]).p99_ms)),
+        ("profile_events", Json::Num(prof.events as f64)),
+        ("profile_timers_armed", Json::Num(prof.timers_armed as f64)),
+        ("profile_timers_cancelled", Json::Num(prof.timers_cancelled as f64)),
+        ("profile_channel_messages", Json::Num(prof.channel_messages as f64)),
+        ("profile_refill_components", Json::Num(prof.refill_components as f64)),
+        ("profile_dirty_links", Json::Num(prof.dirty_links as f64)),
+        ("profile_stalled_rounds", stalled_rounds),
+        ("profile_lookahead_utilization", lookahead_util),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_service_load.json");
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
+}
+
+fn main() {
+    let div = env_or("OCT_SERVICE_DIV", 100).max(1);
+    let threads = env_or("OCT_SERVICE_THREADS", 4).max(2);
+    let min_speedup = env_or_f64("OCT_SERVICE_MIN_SPEEDUP", 0.0);
+
+    println!("=== service load: service registry set at 1/{div} scale ===");
+    let seq = run_leg(div, 1);
+    println!("sequential (1 thread)    {:>8.2}s wall", seq.wall);
+    let par = run_leg(div, threads as usize);
+    println!("parallel  ({threads} threads)    {:>8.2}s wall", par.wall);
+
+    // The hard requirement first: any thread count, same bytes.
+    assert_eq!(
+        seq.json, par.json,
+        "sequential and {threads}-thread runs must produce byte-identical reports"
+    );
+    println!("reports byte-identical across thread counts");
+
+    // The registry's own SLO shape criteria hold (one leg suffices —
+    // the reports are byte-identical).
+    let set = find_set("service").unwrap().scaled_down(div);
+    for c in set.run_checks(&seq.reports) {
+        assert!(c.pass, "{}: {}", c.name, c.detail);
+    }
+
+    let speedup = seq.wall / par.wall.max(1e-9);
+    write_bench_json(div, threads, &seq, &par, speedup);
+    println!("speedup: {speedup:.2}× at {threads} threads");
+    if min_speedup > 0.0 {
+        assert!(
+            speedup >= min_speedup,
+            "parallel engine too slow: {speedup:.2}× < {min_speedup:.1}× at {threads} threads"
+        );
+    } else {
+        println!("speedup gate disabled (OCT_SERVICE_MIN_SPEEDUP=0)");
+    }
+    println!("service load OK");
+}

@@ -30,7 +30,8 @@
 //! - [`registry`]: named [`ScenarioSet`]s — `table1`/`table2` as
 //!   declarative cross-products plus sweeps (the §7 `interop`
 //!   compositions, scale ladder, local-vs-wide-area, site dropout,
-//!   multi-tenant `tenancy`) with shape checks.
+//!   multi-tenant `tenancy`, and the open-loop `service` request/response
+//!   family with SLO shape checks) with shape checks.
 //! - [`experiment`]: paper-style table presentation over registry
 //!   reports ([`table1_rows`]/[`table2_rows`] + formatters).
 //!

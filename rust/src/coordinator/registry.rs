@@ -10,6 +10,7 @@
 //! List with `oct scenarios`; run with `oct scenarios <set> [scale]`.
 
 use crate::ops::{AlertKind, FaultPlan, OpsConfig, OpsReport};
+use crate::service::{diurnal_phases, flash_crowd_phases, RoutePolicy, ServiceReport, ServiceSpec};
 
 use super::runner::{
     flow_churn_concurrency, mega_churn_concurrency, wide_area_penalty, RunReport, ShapeCheck,
@@ -63,6 +64,7 @@ pub fn scenario_sets() -> Vec<ScenarioSet> {
         mega_churn_set(),
         ops_set(),
         tenancy_set(),
+        service_set(),
     ]
 }
 
@@ -976,6 +978,139 @@ fn check_tenancy(r: &[RunReport]) -> Vec<ShapeCheck> {
     ]
 }
 
+/// The user-facing service family: an open-loop, trace-driven
+/// request/response workload against replicas of one service placed
+/// across the testbed's sites (records = requests). Seven scenarios in
+/// three movements:
+///
+/// 1. **arrival shapes** — `steady` (constant rate, nearest routing,
+///    replicas everywhere: every request stays on its home site),
+///    `diurnal` (one sinusoidal day compressed into the run, random
+///    routing so the wave carries a steady share), and `flash` (an 8×
+///    burst over the middle tenth of the run: the open-loop generator
+///    keeps offering load no matter how the service keeps up).
+/// 2. **wan-degraded** — two replicas behind a 50/50 weighted router
+///    while site 1's wave access degrades: remote requests touching the
+///    degraded site pay a fixed per-leg penalty, blowing through the SLO
+///    and (in the tail) the retry timeout.
+/// 3. **replica ladder** — the same demand against 1, 2, and 4 replica
+///    sites: fewer replicas mean more WAN hops and a fatter latency
+///    distribution.
+fn service_set() -> ScenarioSet {
+    let base = |name: &str, spec: ServiceSpec| {
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(30))
+            .framework(Framework::Service)
+            // records = requests for the service driver.
+            .workload(WorkloadSpec::malstone_a(2_000_000))
+            .service(spec)
+            .name(name)
+            .build()
+    };
+    let all = vec![0u32, 1, 2, 3];
+    let mut diurnal = ServiceSpec::new(all.clone(), RoutePolicy::Random);
+    diurnal.phases = diurnal_phases();
+    let mut flash = ServiceSpec::new(all.clone(), RoutePolicy::Nearest);
+    flash.phases = flash_crowd_phases();
+    let mut degraded = ServiceSpec::new(vec![0, 1], RoutePolicy::Weighted(vec![1.0, 1.0]));
+    degraded.degraded_wan_site = Some(1);
+    let scenarios = vec![
+        base("service/steady", ServiceSpec::new(all.clone(), RoutePolicy::Nearest)),
+        base("service/diurnal", diurnal),
+        base("service/flash", flash),
+        base("service/wan-degraded", degraded),
+        base("service/r1", ServiceSpec::new(vec![0], RoutePolicy::Nearest)),
+        base("service/r2", ServiceSpec::new(vec![0, 1], RoutePolicy::Nearest)),
+        base("service/r4", ServiceSpec::new(all, RoutePolicy::Nearest)),
+    ];
+    ScenarioSet {
+        name: "service",
+        description: "open-loop service traffic: steady/diurnal/flash arrivals, degraded WAN, replica ladder",
+        scenarios,
+        check: Some(check_service),
+    }
+}
+
+fn check_service(r: &[RunReport]) -> Vec<ShapeCheck> {
+    if r.len() != 7 {
+        return vec![ShapeCheck::new(
+            "service arity",
+            false,
+            format!("expected 7 reports, got {}", r.len()),
+        )];
+    }
+    fn svc(rep: &RunReport) -> &ServiceReport {
+        rep.service.as_ref().expect("service scenario without service report")
+    }
+    let (steady, flash, degraded) = (svc(&r[0]), svc(&r[2]), svc(&r[3]));
+    let (r1, r4) = (svc(&r[4]), svc(&r[6]));
+    let slo_frac = |s: &ServiceReport| s.slo_violations as f64 / s.requests as f64;
+    vec![
+        ShapeCheck::new(
+            "every request is accounted for (completed = requests + retries)",
+            r.iter().all(|rep| {
+                let s = svc(rep);
+                s.requests > 0
+                    && s.completed == s.requests + s.retries
+                    && s.sites.iter().map(|site| site.requests).sum::<u64>() == s.requests
+            }),
+            format!(
+                "{} requests across the set",
+                r.iter().map(|rep| svc(rep).requests).sum::<u64>()
+            ),
+        ),
+        ShapeCheck::new(
+            "latency quantiles are ordered: 0 < p50 <= p99 <= p999",
+            r.iter().all(|rep| {
+                let s = svc(rep);
+                s.p50_ms > 0.0 && s.p50_ms <= s.p99_ms && s.p99_ms <= s.p999_ms
+            }),
+            format!("steady p50/p99/p999 {:.1}/{:.1}/{:.1}ms",
+                steady.p50_ms, steady.p99_ms, steady.p999_ms),
+        ),
+        ShapeCheck::new(
+            "goodput flows and simulated time advances in every run",
+            r.iter().all(|rep| svc(rep).goodput_rps > 0.0 && rep.simulated_secs > 0.0),
+            format!("steady {:.0} req/s over {:.1}s", steady.goodput_rps, r[0].simulated_secs),
+        ),
+        ShapeCheck::new(
+            "retries fire exactly once per timeout",
+            r.iter().all(|rep| svc(rep).retries == svc(rep).timeouts),
+            format!(
+                "{} timeouts / {} retries across the set",
+                r.iter().map(|rep| svc(rep).timeouts).sum::<u64>(),
+                r.iter().map(|rep| svc(rep).retries).sum::<u64>()
+            ),
+        ),
+        ShapeCheck::new(
+            "the flash crowd concentrates offered load",
+            flash.offered_peak_x > 1.5 * steady.offered_peak_x,
+            format!("peak {:.1}x mean vs steady {:.1}x", flash.offered_peak_x,
+                steady.offered_peak_x),
+        ),
+        ShapeCheck::new(
+            "a degraded wave blows the SLO; the steady run barely misses it",
+            slo_frac(degraded) > 0.05 && slo_frac(steady) < 0.01,
+            format!(
+                "degraded {:.1}% vs steady {:.3}% past the SLO",
+                slo_frac(degraded) * 100.0,
+                slo_frac(steady) * 100.0
+            ),
+        ),
+        ShapeCheck::new(
+            "nearest routing with replicas everywhere never crosses the WAN; one replica does",
+            r[0].wan_bytes == 0.0 && r[4].wan_bytes > 0.0,
+            format!("steady {:.0}B vs r1 {:.2e}B on the wave", r[0].wan_bytes, r[4].wan_bytes),
+        ),
+        ShapeCheck::new(
+            "the replica ladder pays for distance: r1 median above r4's",
+            r1.p50_ms > r4.p50_ms,
+            format!("{:.1}ms on 1 replica vs {:.1}ms on 4", r1.p50_ms, r4.p50_ms),
+        ),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1078,6 +1213,17 @@ mod tests {
     }
 
     #[test]
+    fn service_shape_holds() {
+        // 1/200 scale: 10k requests per scenario across all seven
+        // service scenarios on the full 120-node testbed.
+        let (set, reports) = run_set("service", SCALE);
+        assert_eq!(reports.len(), 7);
+        assert_eq!(reports[0].nodes, 120);
+        assert!(reports.iter().all(|r| r.service.is_some()));
+        assert_checks_pass(&set, &reports);
+    }
+
+    #[test]
     fn registry_lists_expected_sets() {
         let names: Vec<&str> = set_names();
         for expect in [
@@ -1091,6 +1237,7 @@ mod tests {
             "mega-churn",
             "ops",
             "tenancy",
+            "service",
         ] {
             assert!(names.contains(&expect), "missing set {expect}");
         }

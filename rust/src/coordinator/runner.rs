@@ -24,6 +24,10 @@ use crate::ops::{Fault, OpsConfig, OpsPlane, OpsReport};
 use crate::sector::master::{SectorMaster, Segment};
 use crate::sector::sphere::SphereReport;
 use crate::sector::SphereEngine;
+use crate::service::{
+    service_plant, LoadGen, Request, RoutePolicy, ServiceReport, ServiceSpec, SiteAccum,
+    DEGRADED_WAN_PENALTY_SECS,
+};
 use crate::sim::par::{run_sharded, Outbox, ShardApp};
 use crate::sim::{Countdown, Engine};
 use crate::trace::{Arg, ProfileReport, Recorder, Stream, TraceSpec};
@@ -98,6 +102,9 @@ pub struct RunReport {
     /// Operations-plane results (detection latency, telemetry overhead,
     /// alerts, remediation) for ops-enabled runs.
     pub ops: Option<OpsReport>,
+    /// Service-traffic results (request counts, latency quantiles, SLO
+    /// accounting) for [`Framework::Service`] runs.
+    pub service: Option<ServiceReport>,
     /// Engine hot-path counters: always on, deterministic, inside the
     /// report's equality and serialization (its `sched` side-channel is
     /// wall-derived and excluded by [`ProfileReport`] itself).
@@ -125,6 +132,7 @@ impl PartialEq for RunReport {
             && self.metrics == other.metrics
             && self.monitor == other.monitor
             && self.ops == other.ops
+            && self.service == other.service
             && self.profile == other.profile
     }
 }
@@ -169,6 +177,10 @@ impl RunReport {
             Some(o) => o.to_json(),
             None => Json::Null,
         };
+        let service = match &self.service {
+            Some(s) => s.to_json(),
+            None => Json::Null,
+        };
         obj(vec![
             ("scenario", Json::Str(self.scenario.clone())),
             ("framework", Json::Str(self.framework.clone())),
@@ -185,6 +197,7 @@ impl RunReport {
             ("monitor", monitor),
             ("ops", ops),
             ("profile", self.profile.to_json()),
+            ("service", service),
         ])
     }
 
@@ -235,6 +248,10 @@ impl RunReport {
             None | Some(Json::Null) => None,
             Some(o) => Some(OpsReport::from_json(o)?),
         };
+        let service = match j.get("service") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(ServiceReport::from_json(s)?),
+        };
         // Pre-profile reports (older baselines) parse with zeroed
         // counters rather than failing.
         let profile = j.get("profile").map(ProfileReport::from_json).unwrap_or_default();
@@ -257,6 +274,7 @@ impl RunReport {
             metrics,
             monitor,
             ops,
+            service,
             profile,
             wall: None,
         })
@@ -331,6 +349,7 @@ enum Outcome {
     Hadoop { finished_at: f64, job1: JobReport, job2: JobReport },
     Sphere { finished_at: f64, report: SphereReport },
     FlowChurn { finished_at: f64, flows: u64, peak_inflight: u64, peak_active: u64 },
+    Service { finished_at: f64, report: ServiceReport },
 }
 
 /// Simulated-time record of a run's admission and provisioning phases,
@@ -477,6 +496,8 @@ impl ScenarioRunner {
         let t0 = std::time::Instant::now();
         let (mut rep, executed, stream) = if self.mega_shardable(sc) {
             self.run_mega_sharded(sc)
+        } else if self.service_shardable(sc) {
+            self.run_service_sharded(sc)
         } else {
             self.run_sequential(sc)
         };
@@ -527,6 +548,19 @@ impl ScenarioRunner {
     /// cross-thread-count comparisons compare the same driver.
     fn mega_shardable(&self, sc: &Scenario) -> bool {
         sc.framework == Framework::MegaChurn
+            && self.monitor_interval.is_none()
+            && self.ops_override.is_none()
+            && sc.ops.is_none()
+            && sc.fault_plan.is_empty()
+            && sc.provisioning.is_empty()
+            && sc.tenancy.is_none()
+    }
+
+    /// Same shape gate as [`ScenarioRunner::mega_shardable`], for
+    /// [`Framework::Service`] runs: any composed axis (monitor, ops,
+    /// faults, provisioning, tenancy) keeps the sequential engine.
+    fn service_shardable(&self, sc: &Scenario) -> bool {
+        sc.framework == Framework::Service
             && self.monitor_interval.is_none()
             && self.ops_override.is_none()
             && sc.ops.is_none()
@@ -656,6 +690,110 @@ impl ScenarioRunner {
             metrics,
             monitor: None,
             ops: None,
+            service: None,
+            profile,
+            wall: None,
+        };
+        (rep, executed, stream)
+    }
+
+    /// The sharded service-traffic driver: one shard per site plus a WAN
+    /// shard (the mega-churn partition). Each site shard owns its users'
+    /// full request plan — regenerated identically from the site's forked
+    /// RNG stream — and serves *local* requests end to end on its own
+    /// pair NICs. Cross-site requests are commanded over the shard
+    /// channels to the WAN shard, which carries their gateway request and
+    /// response flows over the rack uplinks and the wave and reports
+    /// completion back; both hops model GMP command framing and are
+    /// covered by the lookahead.
+    fn run_service_sharded(&self, sc: &Scenario) -> (RunReport, u64, Stream) {
+        let topo = sc.topology.build();
+        let nodes = sc.placement.select(&topo);
+        let total = sc.workload.total_records.max(1);
+        let num_sites = topo.sites.len();
+        let spec = sc.service.clone().unwrap_or_else(|| default_service_spec(&topo));
+        let lookahead = SERVICE_CMD_SECS + topo.min_wan_owd().unwrap_or(0.0);
+        let flow_cfg = self.flow_cfg;
+        let trace = self.trace_spec(sc);
+        let factories: Vec<_> = (0..=num_sites)
+            .map(|idx| {
+                let topo = topo.clone();
+                let nodes = nodes.clone();
+                let spec = spec.clone();
+                let trace = trace.clone();
+                move || ServiceShard::build(topo, nodes, spec, total, idx, flow_cfg, trace)
+            })
+            .collect();
+        let outs = run_sharded(lookahead, factories, self.threads());
+
+        let mut executed = 0u64;
+        let mut finished_at = 0.0f64;
+        let mut link_bytes: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut profile = ProfileReport::default();
+        let mut accums: Vec<SiteAccum> = Vec::new();
+        let mut stream = Stream::new(num_sites);
+        for o in outs {
+            executed += o.executed;
+            finished_at = finished_at.max(o.finished_at);
+            profile.add(&o.profile);
+            for &(l, b) in &o.link_bytes {
+                *link_bytes.entry(l as usize).or_insert(0.0) += b;
+            }
+            // Site shards land in site order; the WAN shard carries none.
+            accums.extend(o.accum);
+            if let Some(rec) = o.recorder {
+                stream.absorb(rec);
+            }
+        }
+        let report = ServiceReport::assemble(&accums, finished_at);
+        let bytes_of = |l: LinkId| link_bytes.get(&l.0).copied().unwrap_or(0.0);
+
+        let mut metrics = report.metrics();
+        metrics.sort_by(|a, b| a.0.cmp(&b.0));
+
+        let site_flows: Vec<SiteFlow> = topo
+            .sites
+            .iter()
+            .enumerate()
+            .map(|(i, site)| {
+                let mut tx = 0.0;
+                let mut rx = 0.0;
+                for rid in &site.racks {
+                    tx += bytes_of(topo.racks[rid.0].uplink_tx);
+                    rx += bytes_of(topo.racks[rid.0].uplink_rx);
+                }
+                SiteFlow {
+                    site: site.name.clone(),
+                    nodes_used: nodes.iter().filter(|&&n| topo.node(n).site.0 == i).count(),
+                    uplink_tx_bytes: tx,
+                    uplink_rx_bytes: rx,
+                }
+            })
+            .collect();
+        let wan_bytes: f64 = topo
+            .links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind == LinkKind::Wan)
+            .map(|(i, _)| bytes_of(LinkId(i)))
+            .sum();
+
+        let rep = RunReport {
+            scenario: sc.name.clone(),
+            framework: sc.framework.name().to_string(),
+            variant: sc.workload.variant.letter().to_string(),
+            topology: sc.topology.label(),
+            placement: sc.placement.label(),
+            nodes: nodes.len(),
+            total_records: sc.workload.total_records,
+            simulated_secs: finished_at,
+            paper_secs: sc.paper_secs,
+            wan_bytes,
+            site_flows,
+            metrics,
+            monitor: None,
+            ops: None,
+            service: Some(report),
             profile,
             wall: None,
         };
@@ -774,6 +912,7 @@ impl ScenarioRunner {
             .unwrap_or_else(|| panic!("scenario '{}' did not complete", sc.name));
 
         let mut metrics: Vec<(String, f64)> = Vec::new();
+        let mut service_report: Option<ServiceReport> = None;
         let finished_at = match out {
             Outcome::Hadoop { finished_at, job1, job2 } => {
                 metrics.push(("job1_makespan".to_string(), job1.makespan));
@@ -838,6 +977,11 @@ impl ScenarioRunner {
                     "net_completions".to_string(),
                     cluster.net.borrow().completions() as f64,
                 ));
+                finished_at
+            }
+            Outcome::Service { finished_at, report } => {
+                metrics.extend(report.metrics());
+                service_report = Some(report);
                 finished_at
             }
         };
@@ -919,6 +1063,7 @@ impl ScenarioRunner {
             metrics,
             monitor,
             ops: ops_report,
+            service: service_report,
             profile: ProfileReport::default(),
             wall: None,
         }
@@ -1208,6 +1353,7 @@ fn start_framework(
         Framework::MegaChurn => {
             start_mega_churn(cluster, nodes, &sc.workload, eng, outcome.clone())
         }
+        Framework::Service => start_service(cluster, nodes, sc, eng, outcome.clone()),
         _ => {
             let params = sc.framework.params();
             let storage = build_storage(sc.framework, cluster, nodes, &params);
@@ -2103,6 +2249,601 @@ impl ShardApp for MegaShard {
     }
 }
 
+/// Modeled dispatch latency of a service-plane control hop (the GMP
+/// command framing that hands a cross-site request to the WAN plane, or
+/// the completion report coming back). Together with
+/// [`Topology::min_wan_owd`](crate::net::Topology::min_wan_owd) it is
+/// the sharded service driver's lookahead; the sequential driver pays
+/// the same hop on its single engine so both model the same control
+/// path.
+const SERVICE_CMD_SECS: f64 = 0.005;
+
+/// The service axis used when a [`Framework::Service`] scenario carries
+/// no explicit [`ServiceSpec`]: every site hosts a replica, nearest
+/// routing, steady arrivals.
+fn default_service_spec(topo: &Topology) -> ServiceSpec {
+    ServiceSpec::new((0..topo.sites.len() as u32).collect(), RoutePolicy::Nearest)
+}
+
+/// Globally unique trace-span id of one request attempt: site and
+/// per-site request index packed, retries marked in the top bit.
+fn service_span_id(site: u32, id: u64, retried: bool) -> u64 {
+    (u64::from(retried) << 63) | ((site as u64) << 40) | id
+}
+
+/// Shared state of the sequential service driver: one engine, one fluid
+/// network, every site's plan and accumulator side by side.
+struct ServiceSeqEnv {
+    net: Rc<RefCell<FlowNet>>,
+    topo: Rc<Topology>,
+    spec: ServiceSpec,
+    pairs: Vec<Vec<(NodeId, NodeId)>>,
+    gateways: Vec<Vec<NodeId>>,
+    /// The cross-plane command-hop latency the sharded driver pays over
+    /// its channels, mirrored here so both drivers model the same
+    /// control path.
+    hop: f64,
+    plans: Vec<Vec<Request>>,
+    st: RefCell<ServiceSeqState>,
+    out: Rc<RefCell<Option<Outcome>>>,
+}
+
+struct ServiceSeqState {
+    cursors: Vec<usize>,
+    arrived: u64,
+    planned: u64,
+    /// Requests launched (originals + retries) but not yet completed.
+    open: u64,
+    accums: Vec<SiteAccum>,
+}
+
+/// The sequential service driver (composed axes — monitor, ops, faults,
+/// provisioning, tenancy — keep this path; see
+/// [`ScenarioRunner::run`]'s shape gate).
+fn start_service(
+    cluster: &Cluster,
+    nodes: &[NodeId],
+    sc: &Scenario,
+    eng: &mut Engine,
+    out: Rc<RefCell<Option<Outcome>>>,
+) {
+    let topo = cluster.topo.clone();
+    let spec = sc.service.clone().unwrap_or_else(|| default_service_spec(&topo));
+    let total = sc.workload.total_records.max(1);
+    let lg = LoadGen::new(spec.clone(), total, LoadGen::site_rtt_matrix(&topo));
+    let plant = service_plant(&topo, nodes);
+    let num_sites = topo.sites.len();
+    let duration = lg.duration();
+    let plans: Vec<Vec<Request>> = (0..num_sites as u32).map(|s| lg.gen_site(s)).collect();
+    let planned: u64 = plans.iter().map(|p| p.len() as u64).sum();
+    let hop = SERVICE_CMD_SECS + topo.min_wan_owd().unwrap_or(0.0);
+    let env = Rc::new(ServiceSeqEnv {
+        net: cluster.net.clone(),
+        topo,
+        spec,
+        pairs: plant.pairs_by_site,
+        gateways: plant.gateways_by_site,
+        hop,
+        plans,
+        st: RefCell::new(ServiceSeqState {
+            cursors: vec![0; num_sites],
+            arrived: 0,
+            planned,
+            open: 0,
+            accums: (0..num_sites as u32).map(|s| SiteAccum::new(s, duration)).collect(),
+        }),
+        out,
+    });
+    for site in 0..num_sites {
+        schedule_seq_arrival(&env, eng, site);
+    }
+}
+
+/// Chain `site`'s next planned arrival: each arrival event processes one
+/// request and schedules the next, keeping one pending arrival per site
+/// on the heap no matter how many requests the plan holds.
+fn schedule_seq_arrival(env: &Rc<ServiceSeqEnv>, eng: &mut Engine, site: usize) {
+    let cursor = env.st.borrow().cursors[site];
+    if cursor >= env.plans[site].len() {
+        return;
+    }
+    let t = env.plans[site][cursor].t;
+    let env2 = env.clone();
+    eng.schedule_at(t, move |eng| {
+        {
+            let mut st = env2.st.borrow_mut();
+            st.cursors[site] += 1;
+            st.arrived += 1;
+            st.accums[site].arrival(env2.plans[site][cursor].t);
+        }
+        launch_seq_request(&env2, eng, site, cursor, false);
+        schedule_seq_arrival(&env2, eng, site);
+    });
+}
+
+fn launch_seq_request(
+    env: &Rc<ServiceSeqEnv>,
+    eng: &mut Engine,
+    site: usize,
+    k: usize,
+    retried: bool,
+) {
+    let req = &env.plans[site][k];
+    let start = eng.now();
+    env.st.borrow_mut().open += 1;
+    let span = service_span_id(site as u32, req.id, retried);
+    if let Some(rec) = eng.recorder() {
+        let a = [("replica", Arg::U(req.replica as u64)), ("retry", Arg::U(u64::from(retried)))];
+        rec.begin(start, site as u16, req.replica, "service.request", span, &a);
+    }
+    if req.replica as usize == site {
+        let pairs = &env.pairs[site];
+        assert!(!pairs.is_empty(), "site {site} serves local requests but has no pairs");
+        let (src, dst) = pairs[((req.pair_u * pairs.len() as f64) as usize).min(pairs.len() - 1)];
+        let service = req.service;
+        let (reqb, resp) = (env.spec.request_bytes, env.spec.response_bytes);
+        let env2 = env.clone();
+        let udt = Protocol::udt();
+        transport::send(&env.net, &env.topo, eng, src, dst, reqb, &udt, move |eng| {
+            let env3 = env2.clone();
+            eng.schedule_in(service, move |eng| {
+                let env4 = env3.clone();
+                let udt = Protocol::udt();
+                transport::send(&env3.net, &env3.topo, eng, dst, src, resp, &udt, move |eng| {
+                    finish_seq_request(&env4, eng, site, k, retried, start);
+                });
+            });
+        });
+    } else {
+        // Mirror the sharded driver's command hop to the WAN plane.
+        let env2 = env.clone();
+        eng.schedule_in(env.hop, move |eng| {
+            seq_remote_request(&env2, eng, site, k, retried, start);
+        });
+    }
+}
+
+/// The "WAN plane" half of a sequential cross-site request: optional
+/// degraded-path penalty, gateway request flow, server service time,
+/// optional penalty again, gateway response flow, completion-report hop.
+fn seq_remote_request(
+    env: &Rc<ServiceSeqEnv>,
+    eng: &mut Engine,
+    site: usize,
+    k: usize,
+    retried: bool,
+    start: f64,
+) {
+    let req = &env.plans[site][k];
+    let (user, replica) = (site as u32, req.replica);
+    let gsrc = &env.gateways[site];
+    let gdst = &env.gateways[replica as usize];
+    assert!(
+        !gsrc.is_empty() && !gdst.is_empty(),
+        "cross-site requests need gateway nodes at both sites"
+    );
+    let gw_src = gsrc[(req.id % gsrc.len() as u64) as usize];
+    let gw_dst = gdst[(req.id % gdst.len() as u64) as usize];
+    let penalty = matches!(env.spec.degraded_wan_site, Some(d) if d == user || d == replica);
+    let delay = if penalty { DEGRADED_WAN_PENALTY_SECS } else { 0.0 };
+    let service = req.service;
+    let (reqb, resp) = (env.spec.request_bytes, env.spec.response_bytes);
+    let hop = env.hop;
+    let env2 = env.clone();
+    eng.schedule_in(delay, move |eng| {
+        let env3 = env2.clone();
+        let udt = Protocol::udt();
+        transport::send(&env2.net, &env2.topo, eng, gw_src, gw_dst, reqb, &udt, move |eng| {
+            let env4 = env3.clone();
+            eng.schedule_in(service + delay, move |eng| {
+                let env5 = env4.clone();
+                let udt = Protocol::udt();
+                transport::send(&env4.net, &env4.topo, eng, gw_dst, gw_src, resp, &udt, move |eng| {
+                    let env6 = env5.clone();
+                    eng.schedule_in(hop, move |eng| {
+                        finish_seq_request(&env6, eng, site, k, retried, start);
+                    });
+                });
+            });
+        });
+    });
+}
+
+fn finish_seq_request(
+    env: &Rc<ServiceSeqEnv>,
+    eng: &mut Engine,
+    site: usize,
+    k: usize,
+    retried: bool,
+    start: f64,
+) {
+    let now = eng.now();
+    let req = &env.plans[site][k];
+    let span = service_span_id(site as u32, req.id, retried);
+    if let Some(rec) = eng.recorder() {
+        rec.end(now, site as u16, req.replica, "service.request", span, &[]);
+    }
+    let (owe, finished) = {
+        let mut st = env.st.borrow_mut();
+        let owe = st.accums[site].complete(now, now - start, &env.spec, retried);
+        st.open -= 1;
+        (owe, !owe && st.open == 0 && st.arrived == st.planned)
+    };
+    if owe {
+        launch_seq_request(env, eng, site, k, true);
+    } else if finished {
+        let st = env.st.borrow();
+        let report = ServiceReport::assemble(&st.accums, now);
+        *env.out.borrow_mut() = Some(Outcome::Service { finished_at: now, report });
+    }
+}
+
+/// Cross-shard control traffic of the sharded service driver — the GMP
+/// command framing a cross-site request rides between its home site
+/// shard and the WAN shard.
+enum ServiceMsg {
+    /// Home shard → WAN shard: run one cross-site request's gateway
+    /// request / service / response chain. The WAN shard derives the
+    /// gateway endpoints and any degraded-path penalty from its own
+    /// identical plant and spec clones, so the message stays small.
+    Req { key: u64, user_site: u32, replica: u32, id: u64, service: f64 },
+    /// WAN shard → home shard: the chain completed.
+    Done { key: u64 },
+}
+
+/// One service shard's final accounting, merged in shard-index order.
+struct ServiceOut {
+    /// `Some` on site shards (they land in site order); the WAN shard
+    /// carries none.
+    accum: Option<SiteAccum>,
+    finished_at: f64,
+    executed: u64,
+    link_bytes: Vec<(u32, f64)>,
+    profile: ProfileReport,
+    recorder: Option<Recorder>,
+}
+
+/// A cross-site request commanded to the WAN shard and not yet reported
+/// done; the home shard keeps the measurement anchor.
+struct ServicePending {
+    start: f64,
+    idx: usize,
+    retried: bool,
+}
+
+struct ServiceShardState {
+    cursor: usize,
+    /// Requests launched (originals + retries) but not yet completed.
+    open: u64,
+    pending: BTreeMap<u64, ServicePending>,
+    accum: Option<SiteAccum>,
+}
+
+/// Shared immutable context of one service shard; engine events capture
+/// it by `Rc`.
+struct ServiceEnvS {
+    site: usize,
+    wan_shard: usize,
+    topo: Rc<Topology>,
+    net: Rc<RefCell<FlowNet>>,
+    spec: ServiceSpec,
+    /// This site's full request plan (empty on the WAN shard).
+    plan: Vec<Request>,
+    /// This site's intra-rack (user, replica) pairs.
+    pairs: Vec<(NodeId, NodeId)>,
+    /// Every site's gateway pool (the WAN shard routes with it).
+    gateways: Vec<Vec<NodeId>>,
+    st: RefCell<ServiceShardState>,
+}
+
+/// One shard of the sharded service driver: site shards regenerate and
+/// drive their own request plans; the WAN shard executes commanded
+/// cross-site gateway chains and reports completions back.
+struct ServiceShard {
+    env: Rc<ServiceEnvS>,
+    is_wan: bool,
+    claimed: Vec<LinkId>,
+    trace: Option<TraceSpec>,
+}
+
+impl ServiceShard {
+    /// Derive shard `idx`'s complete view of the run from identical
+    /// clones of the plant and spec: every shard computes the same
+    /// pair/gateway split and the same per-site plans (each a pure
+    /// function of the site's forked RNG stream), so no state crosses
+    /// threads except [`ServiceMsg`]s.
+    fn build(
+        topo: Topology,
+        nodes: Vec<NodeId>,
+        spec: ServiceSpec,
+        total: u64,
+        idx: usize,
+        flow_cfg: FlowNetConfig,
+        trace: Option<TraceSpec>,
+    ) -> ServiceShard {
+        let topo = Rc::new(topo);
+        let lg = LoadGen::new(spec.clone(), total, LoadGen::site_rtt_matrix(&topo));
+        let plant = service_plant(&topo, &nodes);
+        let num_sites = topo.sites.len();
+        let wan_shard = num_sites;
+        let is_wan = idx == wan_shard;
+
+        // Link claims partition the plant exactly like mega-churn: a
+        // local request touches only its pair's NICs (the ToR is
+        // non-blocking); a cross-site chain touches gateway NICs,
+        // uplinks, and waves — never a pair NIC.
+        let mut claimed: Vec<LinkId> = Vec::new();
+        if is_wan {
+            for (i, l) in topo.links.iter().enumerate() {
+                if l.kind == LinkKind::Wan {
+                    claimed.push(LinkId(i));
+                }
+            }
+            for r in &topo.racks {
+                claimed.push(r.uplink_tx);
+                claimed.push(r.uplink_rx);
+            }
+            for pool in &plant.gateways_by_site {
+                for &n in pool {
+                    claimed.push(topo.node(n).nic_tx);
+                    claimed.push(topo.node(n).nic_rx);
+                }
+            }
+        } else {
+            for &(a, b) in &plant.pairs_by_site[idx] {
+                claimed.push(topo.node(a).nic_tx);
+                claimed.push(topo.node(a).nic_rx);
+                claimed.push(topo.node(b).nic_tx);
+                claimed.push(topo.node(b).nic_rx);
+            }
+        }
+        claimed.sort_unstable_by_key(|l| l.0);
+        claimed.dedup_by_key(|l| l.0);
+        let net = FlowNet::new_with(&topo, flow_cfg);
+        net.borrow_mut().claim_links(&claimed);
+
+        let plan = if is_wan { Vec::new() } else { lg.gen_site(idx as u32) };
+        let accum = (!is_wan).then(|| SiteAccum::new(idx as u32, lg.duration()));
+        ServiceShard {
+            env: Rc::new(ServiceEnvS {
+                site: idx,
+                wan_shard,
+                topo,
+                net,
+                spec,
+                plan,
+                pairs: if is_wan { Vec::new() } else { plant.pairs_by_site[idx].clone() },
+                gateways: plant.gateways_by_site,
+                st: RefCell::new(ServiceShardState {
+                    cursor: 0,
+                    open: 0,
+                    pending: BTreeMap::new(),
+                    accum,
+                }),
+            }),
+            is_wan,
+            claimed,
+            trace,
+        }
+    }
+}
+
+/// Chain this shard's next planned arrival (one pending arrival event at
+/// a time, however large the plan).
+fn schedule_service_arrival(env: &Rc<ServiceEnvS>, out: &Outbox<ServiceMsg>, eng: &mut Engine) {
+    let cursor = env.st.borrow().cursor;
+    if cursor >= env.plan.len() {
+        return;
+    }
+    let t = env.plan[cursor].t;
+    let (env2, out2) = (env.clone(), out.clone());
+    eng.schedule_at(t, move |eng| {
+        {
+            let mut st = env2.st.borrow_mut();
+            st.cursor += 1;
+            st.accum.as_mut().expect("arrivals on the WAN shard").arrival(env2.plan[cursor].t);
+        }
+        launch_service_request(&env2, &out2, eng, cursor, false);
+        schedule_service_arrival(&env2, &out2, eng);
+    });
+}
+
+/// Start one request attempt at its home shard: local requests run their
+/// request/service/response chain on this shard's own pair NICs;
+/// cross-site requests are commanded to the WAN shard over the channel.
+fn launch_service_request(
+    env: &Rc<ServiceEnvS>,
+    out: &Outbox<ServiceMsg>,
+    eng: &mut Engine,
+    k: usize,
+    retried: bool,
+) {
+    let req = &env.plan[k];
+    let start = eng.now();
+    env.st.borrow_mut().open += 1;
+    let span = service_span_id(env.site as u32, req.id, retried);
+    if let Some(rec) = eng.recorder() {
+        let a = [("replica", Arg::U(req.replica as u64)), ("retry", Arg::U(u64::from(retried)))];
+        rec.begin(start, env.site as u16, req.replica, "service.request", span, &a);
+    }
+    if req.replica as usize == env.site {
+        assert!(!env.pairs.is_empty(), "site {} serves local requests but has no pairs", env.site);
+        let pi = ((req.pair_u * env.pairs.len() as f64) as usize).min(env.pairs.len() - 1);
+        let (src, dst) = env.pairs[pi];
+        let service = req.service;
+        let (reqb, resp) = (env.spec.request_bytes, env.spec.response_bytes);
+        let (env2, out2) = (env.clone(), out.clone());
+        let udt = Protocol::udt();
+        transport::send(&env.net, &env.topo, eng, src, dst, reqb, &udt, move |eng| {
+            let (env3, out3) = (env2.clone(), out2.clone());
+            eng.schedule_in(service, move |eng| {
+                let (env4, out4) = (env3.clone(), out3.clone());
+                let udt = Protocol::udt();
+                transport::send(&env3.net, &env3.topo, eng, dst, src, resp, &udt, move |eng| {
+                    finish_service_request(&env4, &out4, eng, k, retried, start);
+                });
+            });
+        });
+    } else {
+        let key = (u64::from(retried) << 63) | req.id;
+        env.st.borrow_mut().pending.insert(key, ServicePending { start, idx: k, retried });
+        out.send(
+            eng,
+            env.wan_shard,
+            ServiceMsg::Req {
+                key,
+                user_site: env.site as u32,
+                replica: req.replica,
+                id: req.id,
+                service: req.service,
+            },
+        );
+    }
+}
+
+/// One request attempt completed at its home shard (locally, or via a
+/// WAN-shard report): record the latency and relaunch once on a timeout.
+fn finish_service_request(
+    env: &Rc<ServiceEnvS>,
+    out: &Outbox<ServiceMsg>,
+    eng: &mut Engine,
+    k: usize,
+    retried: bool,
+    start: f64,
+) {
+    let now = eng.now();
+    let req = &env.plan[k];
+    let span = service_span_id(env.site as u32, req.id, retried);
+    if let Some(rec) = eng.recorder() {
+        rec.end(now, env.site as u16, req.replica, "service.request", span, &[]);
+    }
+    let owe = {
+        let mut st = env.st.borrow_mut();
+        st.open -= 1;
+        st.accum.as_mut().expect("completions on the WAN shard").complete(
+            now,
+            now - start,
+            &env.spec,
+            retried,
+        )
+    };
+    if owe {
+        launch_service_request(env, out, eng, k, true);
+    }
+}
+
+/// One commanded cross-site chain as the WAN shard executes it: the
+/// resolved gateway endpoints, the per-leg degraded-path delay, and the
+/// completion-report address.
+#[derive(Clone, Copy)]
+struct WanChain {
+    reply_to: usize,
+    key: u64,
+    gw_src: NodeId,
+    gw_dst: NodeId,
+    service: f64,
+    delay: f64,
+}
+
+/// Run one gateway request flow → server service time → gateway
+/// response flow chain on the WAN shard, then report `Done` back to the
+/// request's home shard.
+fn run_wan_chain(env: &Rc<ServiceEnvS>, out: &Outbox<ServiceMsg>, eng: &mut Engine, c: WanChain) {
+    let (reqb, resp) = (env.spec.request_bytes, env.spec.response_bytes);
+    let (env2, out2) = (env.clone(), out.clone());
+    let udt = Protocol::udt();
+    transport::send(&env.net, &env.topo, eng, c.gw_src, c.gw_dst, reqb, &udt, move |eng| {
+        let (env3, out3) = (env2.clone(), out2.clone());
+        eng.schedule_in(c.service + c.delay, move |eng| {
+            let out4 = out3.clone();
+            let udt = Protocol::udt();
+            let (net, topo) = (env3.net.clone(), env3.topo.clone());
+            transport::send(&net, &topo, eng, c.gw_dst, c.gw_src, resp, &udt, move |eng| {
+                out4.send(eng, c.reply_to, ServiceMsg::Done { key: c.key });
+            });
+        });
+    });
+}
+
+impl ShardApp for ServiceShard {
+    type Msg = ServiceMsg;
+    type Out = ServiceOut;
+
+    fn init(&mut self, eng: &mut Engine, out: &Outbox<ServiceMsg>) {
+        if let Some(spec) = &self.trace {
+            eng.set_recorder(Recorder::new(spec));
+        }
+        if !self.is_wan {
+            schedule_service_arrival(&self.env, out, eng);
+        }
+    }
+
+    fn on_msg(&mut self, eng: &mut Engine, from: usize, msg: ServiceMsg, out: &Outbox<ServiceMsg>) {
+        match msg {
+            ServiceMsg::Req { key, user_site, replica, id, service } => {
+                debug_assert!(self.is_wan, "request command sent to a site shard");
+                let env = &self.env;
+                let gsrc = &env.gateways[user_site as usize];
+                let gdst = &env.gateways[replica as usize];
+                assert!(
+                    !gsrc.is_empty() && !gdst.is_empty(),
+                    "cross-site requests need gateway nodes at both sites"
+                );
+                let gw_src = gsrc[(id % gsrc.len() as u64) as usize];
+                let gw_dst = gdst[(id % gdst.len() as u64) as usize];
+                let penalty =
+                    matches!(env.spec.degraded_wan_site, Some(d) if d == user_site || d == replica);
+                let delay = if penalty { DEGRADED_WAN_PENALTY_SECS } else { 0.0 };
+                let chain = WanChain { reply_to: from, key, gw_src, gw_dst, service, delay };
+                let (env2, out2) = (env.clone(), out.clone());
+                eng.schedule_in(delay, move |eng| {
+                    run_wan_chain(&env2, &out2, eng, chain);
+                });
+            }
+            ServiceMsg::Done { key } => {
+                debug_assert!(!self.is_wan, "completion report sent to the WAN shard");
+                let p = self
+                    .env
+                    .st
+                    .borrow_mut()
+                    .pending
+                    .remove(&key)
+                    .expect("completion report for an unknown request");
+                finish_service_request(&self.env, out, eng, p.idx, p.retried, p.start);
+            }
+        }
+    }
+
+    fn quiescent(&self) -> bool {
+        // A site shard knows its traffic completely: once every planned
+        // arrival has been processed and every attempt (local flows and
+        // commanded WAN chains alike) has completed, nothing can ever
+        // arrive for it. The WAN shard cannot know whether more commands
+        // are coming, so it never self-declares (the EIT = ∞ rule).
+        if self.is_wan {
+            return false;
+        }
+        let st = self.env.st.borrow();
+        st.cursor == self.env.plan.len() && st.open == 0
+    }
+
+    fn finish(&mut self, eng: &mut Engine) -> ServiceOut {
+        let netb = self.env.net.borrow();
+        let mut profile = eng.profile();
+        let (refills, dirty) = netb.profile_counters();
+        profile.refill_components += refills;
+        profile.dirty_links += dirty;
+        ServiceOut {
+            accum: self.env.st.borrow_mut().accum.take(),
+            finished_at: eng.now(),
+            executed: eng.executed(),
+            link_bytes: self.claimed.iter().map(|&l| (l.0 as u32, netb.link_bytes(l))).collect(),
+            profile,
+            recorder: eng.take_recorder(),
+        }
+    }
+}
+
 fn start_sphere(
     cluster: &Cluster,
     nodes: &[NodeId],
@@ -2321,6 +3062,89 @@ mod tests {
         assert_eq!(sharded.metric("flows"), Some(400.0));
         assert_eq!(sequential.metric("flows"), Some(400.0));
         assert!(sequential.monitor.is_some(), "monitored run kept its summary");
+    }
+
+    fn service_scenario(records: u64) -> Scenario {
+        Testbed::builder()
+            .topology(TopologySpec::Oct2009)
+            .placement(Placement::PerSite(8))
+            .framework(Framework::Service)
+            .workload(WorkloadSpec::malstone_a(records))
+            .name("service-smoke")
+            .build()
+    }
+
+    #[test]
+    fn service_run_reports_slo_quantiles() {
+        let rep = ScenarioRunner::new().run(&service_scenario(4_000));
+        let s = rep.service.as_ref().expect("service report");
+        assert_eq!(s.requests, 4_000);
+        assert_eq!(s.completed, s.requests + s.retries);
+        assert_eq!(s.timeouts, s.retries);
+        assert!(s.goodput_rps > 0.0);
+        assert!(s.p50_ms > 0.0 && s.p50_ms <= s.p99_ms && s.p99_ms <= s.p999_ms);
+        assert_eq!(s.sites.len(), 4);
+        // Nearest routing with replicas everywhere keeps traffic local.
+        assert_eq!(rep.wan_bytes, 0.0);
+        assert_eq!(rep.metric("requests"), Some(4_000.0));
+        assert_eq!(rep.metric("latency_p50_ms"), Some(s.p50_ms));
+        let text = rep.to_json().to_string();
+        let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn service_sharded_is_thread_count_invariant() {
+        let mut sc = service_scenario(4_000);
+        // Two replica sites + random routing: most requests command the
+        // WAN shard, exercising both channel directions.
+        sc.service = Some(ServiceSpec::new(vec![0, 1], RoutePolicy::Random));
+        let one = ScenarioRunner::new().with_threads(1).run(&sc);
+        for threads in [2, 4] {
+            let n = ScenarioRunner::new().with_threads(threads).run(&sc);
+            assert_eq!(
+                n.to_json().to_string(),
+                one.to_json().to_string(),
+                "threads={threads} diverged"
+            );
+        }
+        assert!(one.wan_bytes > 0.0, "random routing crossed the wave");
+        let s = one.service.as_ref().expect("service report");
+        assert_eq!(s.completed, s.requests + s.retries);
+        assert!(s.p50_ms > 0.0);
+    }
+
+    #[test]
+    fn composed_axes_keep_the_sequential_service_driver() {
+        // The monitor forces the sequential driver; the plain twin takes
+        // the sharded engine. Both must land every request.
+        let sc = service_scenario(2_000);
+        let sharded = ScenarioRunner::new().run(&sc);
+        let sequential = ScenarioRunner::new().with_monitor(1.0).run(&sc);
+        for rep in [&sharded, &sequential] {
+            let s = rep.service.as_ref().expect("service report");
+            assert_eq!(s.requests, 2_000);
+            assert_eq!(s.completed, s.requests + s.retries);
+        }
+        assert!(sequential.monitor.is_some(), "monitored run kept its summary");
+    }
+
+    #[test]
+    fn timeouts_trigger_exactly_one_retry() {
+        let mut sc = service_scenario(400);
+        let mut spec = ServiceSpec::new(vec![0, 1, 2, 3], RoutePolicy::Nearest);
+        // Impossible deadline: every original times out, every retry
+        // completes without re-arming.
+        spec.timeout_secs = 1e-9;
+        spec.slo_secs = 1e-9;
+        sc.service = Some(spec);
+        let rep = ScenarioRunner::new().run(&sc);
+        let s = rep.service.as_ref().expect("service report");
+        assert_eq!(s.requests, 400);
+        assert_eq!(s.timeouts, 400);
+        assert_eq!(s.retries, 400);
+        assert_eq!(s.completed, 800);
+        assert_eq!(s.slo_violations, 800);
     }
 
     #[test]

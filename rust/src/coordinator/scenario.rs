@@ -13,6 +13,7 @@ use std::rc::Rc;
 use crate::hadoop::FrameworkParams;
 use crate::net::{NodeId, Topology};
 use crate::ops::{FaultPlan, OpsConfig};
+use crate::service::ServiceSpec;
 use crate::trace::TraceSpec;
 
 /// How to build the physical testbed for a run.
@@ -163,6 +164,14 @@ pub enum Framework {
     /// aggregation exist for; the `flow_scale` bench runs it against the
     /// pre-refactor global core.
     MegaChurn,
+    /// Open-loop user-facing service traffic: a deterministic
+    /// [`crate::service::LoadGen`] drives request/response flows against
+    /// replicas of a service placed across sites, with per-request
+    /// latency rolled into SLO quantiles (see [`crate::service`]). The
+    /// workload's record count is reinterpreted as the total request
+    /// count; like the churn drivers it is absent from
+    /// [`Framework::ALL`].
+    Service,
 }
 
 impl Framework {
@@ -187,11 +196,13 @@ impl Framework {
             Framework::HadoopStreams => FrameworkParams::hadoop_streams(),
             Framework::CloudStoreMr => FrameworkParams::cloudstore_mr(),
             Framework::HadoopOverSector => FrameworkParams::hadoop_over_sector(),
-            // Churn drives raw transfers; the cost model goes unused, but
-            // Sphere's (UDT transport) is the closest in spirit.
-            Framework::SectorSphere | Framework::FlowChurn | Framework::MegaChurn => {
-                FrameworkParams::sphere()
-            }
+            // Churn and service traffic drive raw transfers; the cost
+            // model goes unused, but Sphere's (UDT transport) is the
+            // closest in spirit.
+            Framework::SectorSphere
+            | Framework::FlowChurn
+            | Framework::MegaChurn
+            | Framework::Service => FrameworkParams::sphere(),
         }
     }
 
@@ -205,6 +216,7 @@ impl Framework {
             Framework::HadoopOverSector => "hadoop-over-sector",
             Framework::FlowChurn => "flow-churn",
             Framework::MegaChurn => "mega-churn",
+            Framework::Service => "service",
         }
     }
 }
@@ -362,6 +374,11 @@ pub struct Scenario {
     /// Chrome Trace via the runner. Off by default: tracing must never
     /// change a report byte.
     pub trace: Option<TraceSpec>,
+    /// Service-traffic axis for [`Framework::Service`] scenarios: where
+    /// the replicas live, how requests route, and the arrival shape.
+    /// `None` with `Framework::Service` falls back to
+    /// [`crate::service::ServiceSpec::new`]'s defaults over all sites.
+    pub service: Option<ServiceSpec>,
 }
 
 impl Scenario {
@@ -387,6 +404,7 @@ impl Scenario {
             provisioning: self.provisioning.clone(),
             tenancy: self.tenancy.clone(),
             trace: self.trace.clone(),
+            service: self.service.clone(),
         }
     }
 
@@ -446,6 +464,7 @@ impl Testbed {
             provisioning: ProvisioningSpec::default(),
             tenancy: None,
             trace: None,
+            service: None,
         }
     }
 }
@@ -466,6 +485,7 @@ pub struct TestbedBuilder {
     provisioning: ProvisioningSpec,
     tenancy: Option<TenantSpec>,
     trace: Option<TraceSpec>,
+    service: Option<ServiceSpec>,
 }
 
 impl TestbedBuilder {
@@ -548,6 +568,14 @@ impl TestbedBuilder {
         self
     }
 
+    /// Set the service-traffic axis (pair with
+    /// [`TestbedBuilder::framework`]`(Framework::Service)`; the workload's
+    /// record count becomes the total request count).
+    pub fn service(mut self, spec: ServiceSpec) -> Self {
+        self.service = Some(spec);
+        self
+    }
+
     pub fn build(self) -> Scenario {
         // `Local { site }` topologies default to the Table-2 local layout
         // (28 nodes on that site); everything else to Table 1's 5×4.
@@ -576,6 +604,7 @@ impl TestbedBuilder {
             provisioning: self.provisioning,
             tenancy: self.tenancy,
             trace: self.trace,
+            service: self.service,
         }
     }
 }

@@ -14,7 +14,8 @@
 //!   ([`framework`]: storage models × slot scheduling × exchange models —
 //!   the skeleton every engine and §7 interop composition instantiates),
 //!   the Sector/Sphere and Hadoop substrates ([`sector`], [`hadoop`]),
-//!   the MalStone benchmark suite ([`malstone`]), the
+//!   the MalStone benchmark suite ([`malstone`]), open-loop user-facing
+//!   service traffic with SLO accounting ([`service`]), the
 //!   monitoring/visualization system ([`monitor`]), and the operations
 //!   plane ([`ops`]: in-band sensor → aggregator → central-service
 //!   telemetry as real flows, fault injection, health state machine,
@@ -51,6 +52,7 @@ pub mod ops;
 pub mod proptest;
 pub mod runtime;
 pub mod sector;
+pub mod service;
 pub mod sim;
 pub mod trace;
 pub mod transport;

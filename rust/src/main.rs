@@ -64,8 +64,8 @@ fn detailed_usage(cmd: &str) -> Option<&'static str> {
              15B records) at 1/scale (default 100) with its shape checks.",
         "scenarios" => "usage: oct scenarios [<set> [scale]] [--json] [--threads N]\n\
              Without arguments: list the registered scenario sets.\n\
-             With a set name: run it at 1/scale (default 100) through the\n\
-             ScenarioRunner (tenancy groups run concurrently on one shared\n\
+             With a set name: run it at 1/scale (default 100, must be >= 1)\n\
+             through the ScenarioRunner (tenancy groups run concurrently on one\n\
              testbed), print a report table and the set's shape-check verdicts.\n\
              --json emits one RunReport JSON line per scenario plus one line per\n\
              check. Exit 0 = all checks pass, 1 = a check failed, 2 = unknown set.\n\
@@ -106,6 +106,20 @@ fn detailed_usage(cmd: &str) -> Option<&'static str> {
              Print the command summary, or one command's detailed usage.",
         _ => return None,
     })
+}
+
+/// Parse an optional `[scale]` argument (default 100). Every workload is
+/// divided by scale, so 0 would run degenerate scenarios (and divide by
+/// zero): reject it loudly instead of unwrapping to the default.
+fn parse_scale(arg: Option<&String>) -> u64 {
+    match arg.map(|s| s.parse::<u64>()) {
+        Some(Ok(0)) => {
+            eprintln!("oct: scale must be >= 1 (workloads run at 1/scale; 0 is degenerate)");
+            std::process::exit(2);
+        }
+        Some(Ok(n)) => n,
+        _ => 100,
+    }
 }
 
 /// Print help for `topic` (general usage when `None`). Returns the
@@ -171,7 +185,7 @@ fn main() {
     match cmd {
         "topology" => print!("{}", Topology::oct_2009().describe()),
         "table1" | "table2" => {
-            let scale = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+            let scale = parse_scale(args.get(1));
             std::process::exit(run_set_cli(cmd, scale, false, threads, trace_out.as_deref()));
         }
         "scenarios" => {
@@ -181,7 +195,7 @@ fn main() {
             match rest.first() {
                 None => list_scenario_sets(),
                 Some(name) => {
-                    let scale = rest.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+                    let scale = parse_scale(rest.get(1).copied());
                     let trace = trace_out.as_deref();
                     std::process::exit(run_set_cli(name, scale, json, threads, trace));
                 }
@@ -206,7 +220,7 @@ fn main() {
                     }
                     None => trace_out.clone(),
                 };
-                let scale = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
+                let scale = parse_scale(args.get(2));
                 std::process::exit(run_trace_cli(&name, scale, out.as_deref(), threads));
             }
         },
@@ -216,7 +230,7 @@ fn main() {
                 std::process::exit(2);
             }
             Some(name) => {
-                let scale = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
+                let scale = parse_scale(args.get(2));
                 std::process::exit(run_alerts_cli(name, scale, threads));
             }
         },

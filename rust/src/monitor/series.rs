@@ -181,6 +181,43 @@ mod tests {
     }
 
     #[test]
+    fn quantiles_survive_degenerate_windows() {
+        // Empty window: every quantile is 0.0 — never NaN, never a panic.
+        let empty = Series::new(8);
+        for q in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            let v = empty.quantile(q);
+            assert_eq!(v, 0.0, "empty window quantile({q})");
+            assert!(!v.is_nan());
+        }
+        assert_eq!(empty.p999(), 0.0);
+        // Single sample: every quantile collapses to that sample.
+        let mut one = Series::new(8);
+        one.push(1.0, 42.0);
+        for q in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(one.quantile(q), 42.0, "single-sample quantile({q})");
+        }
+        // All-equal samples: interpolation between equal neighbors must
+        // not drift or produce NaN.
+        let mut flat = Series::new(16);
+        for i in 0..10 {
+            flat.push(i as f64, 7.0);
+        }
+        for q in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(flat.quantile(q), 7.0, "all-equal quantile({q})");
+        }
+        // p999 on a 10-sample window: the rank interpolates inside the
+        // top pair — finite, ordered after p99, bounded by the max.
+        let mut s = Series::new(16);
+        for i in 1..=10 {
+            s.push(i as f64, i as f64);
+        }
+        let (p99, p999) = (s.p99(), s.p999());
+        assert!(p999.is_finite() && !p999.is_nan());
+        assert!(p99 <= p999 && p999 <= 10.0, "{p99} / {p999}");
+        assert!((p999 - 9.991).abs() < 1e-9, "{p999}");
+    }
+
+    #[test]
     fn p999_tail_and_scratch_reuse() {
         let mut s = Series::new(2000);
         for i in 1..=1000 {

@@ -1,0 +1,921 @@
+//! Open-loop, trace-driven service traffic: deterministic load
+//! generation, request routing, and SLO accounting.
+//!
+//! Everything the batch workloads lack lives here. A [`LoadGen`] derives
+//! each site's arrival sequence from a per-site [`crate::util::rng::Rng`]
+//! stream forked off one fixed master seed, so the sequence is a pure
+//! function of the site index — the property the sharded driver's
+//! bit-identity rests on. Arrivals are *open-loop*: users issue requests
+//! on their own clock (constant, diurnal, or flash-crowd phases), never
+//! waiting for earlier responses, so an overloaded replica builds real
+//! queueing delay instead of throttling its own offered load.
+//!
+//! The simulation side (flows, shards, engines) stays in
+//! [`crate::coordinator::runner`]; this module owns the deterministic
+//! *plan* (who asks what, when, of which replica) and the *accounting*
+//! ([`SiteAccum`] per-request latency into allocation-free
+//! [`crate::monitor::Series`] windows, rolled up into a
+//! [`ServiceReport`] inside report byte-identity).
+
+use std::collections::BTreeMap;
+
+use crate::monitor::Series;
+use crate::net::{NodeId, Topology};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+
+/// Master seed of every service load stream; per-site streams are forked
+/// from a fresh copy so each is a pure function of the site index.
+pub const SERVICE_SEED: u64 = 0x0C7_5E44;
+
+/// Retained per-site latency window (samples). Quantiles are computed
+/// over this trailing window; at registry scales every request fits.
+pub const SERVICE_SERIES_CAP: usize = 1 << 16;
+
+/// Arrival-histogram resolution: the run's duration is split into this
+/// many equal bins to measure offered-load peakedness.
+pub const ARRIVAL_BINS: usize = 100;
+
+/// One-way extra delay (seconds) a degraded WAN path adds to each leg of
+/// a cross-site request touching the degraded site — the "replica behind
+/// a sick wave" axis of the registry's service set.
+pub const DEGRADED_WAN_PENALTY_SECS: f64 = 0.4;
+
+/// How a request picks its replica site.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RoutePolicy {
+    /// The user's own site when replicated there, else the replica with
+    /// the lowest site-to-site RTT (ties broken by lowest replica index).
+    Nearest,
+    /// Weighted draw over the replica sites; weights align with
+    /// [`ServiceSpec::replica_sites`] and need not be normalized.
+    Weighted(Vec<f64>),
+    /// Uniform draw over the replica sites.
+    Random,
+}
+
+impl RoutePolicy {
+    /// Resolve the replica site for a request from `user_site`. `u` is
+    /// the request's routing draw in `[0, 1)`; `site_rtt[a][b]` is the
+    /// site-to-site RTT matrix. Always called (and `u` always drawn)
+    /// regardless of policy, so the per-request draw count is fixed.
+    pub fn route(&self, user_site: u32, u: f64, replicas: &[u32], site_rtt: &[Vec<f64>]) -> u32 {
+        assert!(!replicas.is_empty(), "routing with no replicas");
+        match self {
+            RoutePolicy::Nearest => {
+                if replicas.contains(&user_site) {
+                    return user_site;
+                }
+                let mut best = replicas[0];
+                let mut best_rtt = site_rtt[user_site as usize][replicas[0] as usize];
+                for &r in &replicas[1..] {
+                    let rtt = site_rtt[user_site as usize][r as usize];
+                    if rtt < best_rtt {
+                        best = r;
+                        best_rtt = rtt;
+                    }
+                }
+                best
+            }
+            RoutePolicy::Weighted(w) => {
+                assert_eq!(w.len(), replicas.len(), "weights must align with replica_sites");
+                let total: f64 = w.iter().sum();
+                assert!(total > 0.0, "weights must sum positive");
+                let target = u * total;
+                let mut acc = 0.0;
+                for (&r, &wi) in replicas.iter().zip(w) {
+                    acc += wi;
+                    if target < acc {
+                        return r;
+                    }
+                }
+                replicas[replicas.len() - 1]
+            }
+            RoutePolicy::Random => {
+                let i = ((u * replicas.len() as f64) as usize).min(replicas.len() - 1);
+                replicas[i]
+            }
+        }
+    }
+}
+
+/// The intensity shape of one arrival phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PhaseShape {
+    /// Uniform rate across the phase.
+    Constant,
+    /// A day-curve: rate ∝ 1 − 0.8·cos(2πx) over the phase — a deep
+    /// night trough and an afternoon peak.
+    Diurnal,
+}
+
+/// One phase of the arrival process: a `frac` share of the run's
+/// duration at `rate_mult` × the base rate, shaped by `shape`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Phase {
+    /// Share of the run's duration this phase spans (fracs sum to 1).
+    pub frac: f64,
+    /// Rate multiplier relative to the base rate.
+    pub rate_mult: f64,
+    pub shape: PhaseShape,
+}
+
+impl Phase {
+    pub fn constant(frac: f64, rate_mult: f64) -> Phase {
+        Phase { frac, rate_mult, shape: PhaseShape::Constant }
+    }
+
+    pub fn diurnal(frac: f64, rate_mult: f64) -> Phase {
+        Phase { frac, rate_mult, shape: PhaseShape::Diurnal }
+    }
+}
+
+/// One full simulated day as a single diurnal phase.
+pub fn diurnal_phases() -> Vec<Phase> {
+    vec![Phase::diurnal(1.0, 1.0)]
+}
+
+/// A flash crowd: steady load, an 8× burst over the middle tenth of the
+/// run, steady again.
+pub fn flash_crowd_phases() -> Vec<Phase> {
+    vec![Phase::constant(0.45, 1.0), Phase::constant(0.1, 8.0), Phase::constant(0.45, 1.0)]
+}
+
+/// The service-traffic axis of a scenario: where the service's replicas
+/// live, how requests route to them, and the shape of the offered load.
+/// The workload's record count is reinterpreted as the total request
+/// count; the run's duration is `total_requests / rate_rps`, so scaling
+/// the workload down shrinks the run while preserving the offered rate
+/// (and therefore the contention) at every scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceSpec {
+    /// Sites hosting a replica of the service.
+    pub replica_sites: Vec<u32>,
+    pub policy: RoutePolicy,
+    /// Arrival phases (fracs sum to 1). Empty is invalid.
+    pub phases: Vec<Phase>,
+    /// Aggregate offered rate across all sites, requests/second.
+    pub rate_rps: f64,
+    /// Mean server service time, seconds (exponentially distributed).
+    pub service_time_secs: f64,
+    /// GMP-framed request size, bytes.
+    pub request_bytes: f64,
+    /// Response payload, bytes.
+    pub response_bytes: f64,
+    /// Latency objective: completions above it count as SLO violations.
+    pub slo_secs: f64,
+    /// Client timeout: a first completion above it counts as a timeout
+    /// and triggers exactly one retry (retried completions never re-arm).
+    pub timeout_secs: f64,
+    /// `Some(site)` adds [`DEGRADED_WAN_PENALTY_SECS`] to each WAN leg
+    /// of any cross-site request touching that site.
+    pub degraded_wan_site: Option<u32>,
+}
+
+impl ServiceSpec {
+    /// A steady-state spec with the default knobs: constant arrivals at
+    /// 2000 req/s, 20 ms mean service time, 2 kB requests, 100 kB
+    /// responses, a 250 ms SLO, and a 1 s client timeout.
+    pub fn new(replica_sites: Vec<u32>, policy: RoutePolicy) -> ServiceSpec {
+        ServiceSpec {
+            replica_sites,
+            policy,
+            phases: vec![Phase::constant(1.0, 1.0)],
+            rate_rps: 2000.0,
+            service_time_secs: 0.02,
+            request_bytes: 2e3,
+            response_bytes: 1e5,
+            slo_secs: 0.25,
+            timeout_secs: 1.0,
+            degraded_wan_site: None,
+        }
+    }
+
+    /// Validate against a testbed of `num_sites` sites (panics on a
+    /// malformed spec — specs are authored, not user input).
+    pub fn validate(&self, num_sites: usize) {
+        assert!(!self.replica_sites.is_empty(), "service needs at least one replica site");
+        for &r in &self.replica_sites {
+            assert!((r as usize) < num_sites, "replica site {r} outside the topology");
+        }
+        assert!(!self.phases.is_empty(), "service needs at least one arrival phase");
+        let frac_sum: f64 = self.phases.iter().map(|p| p.frac).sum();
+        assert!((frac_sum - 1.0).abs() < 1e-9, "phase fracs sum to {frac_sum}, not 1");
+        for p in &self.phases {
+            assert!(p.frac > 0.0 && p.rate_mult > 0.0, "degenerate phase {p:?}");
+        }
+        assert!(self.rate_rps > 0.0, "offered rate must be positive");
+        assert!(self.service_time_secs > 0.0, "service time must be positive");
+        assert!(self.slo_secs > 0.0 && self.timeout_secs > 0.0, "SLO/timeout must be positive");
+        if let RoutePolicy::Weighted(w) = &self.policy {
+            assert_eq!(w.len(), self.replica_sites.len(), "weights align with replica_sites");
+        }
+    }
+}
+
+/// One planned request: when it arrives, who issues it, which replica
+/// serves it, and its pre-drawn randomness. Everything downstream (pair
+/// choice, gateway choice, flow sizes) is a pure function of these
+/// fields, so the plan fully determines the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Arrival time, seconds from run start.
+    pub t: f64,
+    /// Dense per-site request index (0..site budget).
+    pub id: u64,
+    pub user_site: u32,
+    /// Replica site chosen by the route policy.
+    pub replica: u32,
+    /// Uniform draw in `[0, 1)` mapping to an intra-site user/replica
+    /// pair slot.
+    pub pair_u: f64,
+    /// Server service time, seconds (drawn from the site stream).
+    pub service: f64,
+}
+
+/// CDF of the diurnal rate curve `1 − 0.8·cos(2πx)` on `[0, 1]`.
+fn diurnal_cdf(y: f64) -> f64 {
+    y - 0.8 / (2.0 * std::f64::consts::PI) * (2.0 * std::f64::consts::PI * y).sin()
+}
+
+/// Inverse-CDF sample of the diurnal curve by bisection (48 halvings:
+/// deterministic and exact to ~4e-15, with no lookup-table state).
+fn diurnal_inverse(x: f64) -> f64 {
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    for _ in 0..48 {
+        let mid = 0.5 * (lo + hi);
+        if diurnal_cdf(mid) < x {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Split `total` across `weights` proportionally with the
+/// largest-remainder rule (ties to the lowest index) — deterministic,
+/// and the shares sum to `total` exactly.
+fn largest_remainder(total: u64, weights: &[f64]) -> Vec<u64> {
+    let wsum: f64 = weights.iter().sum();
+    assert!(wsum > 0.0, "weights must sum positive");
+    let ideal: Vec<f64> = weights.iter().map(|w| total as f64 * w / wsum).collect();
+    let mut shares: Vec<u64> = ideal.iter().map(|x| x.floor() as u64).collect();
+    let assigned: u64 = shares.iter().sum();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    // Stable sort by descending fractional remainder keeps index order
+    // among ties.
+    order.sort_by(|&a, &b| {
+        let (ra, rb) = (ideal[a] - ideal[a].floor(), ideal[b] - ideal[b].floor());
+        rb.partial_cmp(&ra).unwrap()
+    });
+    for &i in order.iter().take((total - assigned) as usize) {
+        shares[i] += 1;
+    }
+    shares
+}
+
+/// The deterministic open-loop load generator: plans every site's
+/// request sequence up front from that site's forked RNG stream.
+#[derive(Debug, Clone)]
+pub struct LoadGen {
+    spec: ServiceSpec,
+    total: u64,
+    num_sites: usize,
+    /// Site-to-site RTT matrix, seconds (what `Nearest` routing ranks).
+    site_rtt: Vec<Vec<f64>>,
+}
+
+impl LoadGen {
+    /// Plan `total` requests against `spec` on a testbed whose
+    /// site-to-site RTTs are `site_rtt` (square, `num_sites` × same).
+    pub fn new(spec: ServiceSpec, total: u64, site_rtt: Vec<Vec<f64>>) -> LoadGen {
+        let num_sites = site_rtt.len();
+        assert!(num_sites > 0, "load generation needs at least one site");
+        assert!(total > 0, "load generation needs at least one request");
+        for row in &site_rtt {
+            assert_eq!(row.len(), num_sites, "site_rtt must be square");
+        }
+        spec.validate(num_sites);
+        LoadGen { spec, total, num_sites, site_rtt }
+    }
+
+    /// Build the RTT matrix of a topology from each site's first node
+    /// (intra-site distances are uniform at the fidelity routing needs).
+    pub fn site_rtt_matrix(topo: &Topology) -> Vec<Vec<f64>> {
+        let firsts: Vec<NodeId> =
+            topo.sites.iter().map(|s| topo.racks[s.racks[0].0].nodes[0]).collect();
+        firsts.iter().map(|&a| firsts.iter().map(|&b| topo.rtt(a, b)).collect()).collect()
+    }
+
+    pub fn spec(&self) -> &ServiceSpec {
+        &self.spec
+    }
+
+    /// Run duration, seconds: `total / rate_rps` — scale-invariant rate.
+    pub fn duration(&self) -> f64 {
+        self.total as f64 / self.spec.rate_rps
+    }
+
+    /// Requests issued from `site` (the total split evenly, remainder to
+    /// the lowest site indices).
+    pub fn site_budget(&self, site: u32) -> u64 {
+        let n = self.num_sites as u64;
+        self.total / n + u64::from((site as u64) < self.total % n)
+    }
+
+    /// `[start, end)` of every phase, in run seconds.
+    pub fn phase_bounds(&self) -> Vec<(f64, f64)> {
+        let d = self.duration();
+        let mut t0 = 0.0;
+        self.spec
+            .phases
+            .iter()
+            .map(|p| {
+                let t1 = t0 + p.frac * d;
+                let span = (t0, t1);
+                t0 = t1;
+                span
+            })
+            .collect()
+    }
+
+    /// Per-phase request counts for a site issuing `site_total` requests:
+    /// largest-remainder over the phases' `frac × rate_mult` weights.
+    pub fn phase_budgets(&self, site_total: u64) -> Vec<u64> {
+        let weights: Vec<f64> = self.spec.phases.iter().map(|p| p.frac * p.rate_mult).collect();
+        largest_remainder(site_total, &weights)
+    }
+
+    /// Plan `site`'s full request sequence. Pure function of the site
+    /// index (a fresh master stream is forked per call), so any shard —
+    /// or a test — regenerates an identical plan. Arrivals are
+    /// stratified within each phase: request `k` of `m` lands in the
+    /// phase's `[k/m, (k+1)/m)` sub-interval (mapped through the phase
+    /// shape), so timestamps increase and phase boundaries are exact.
+    pub fn gen_site(&self, site: u32) -> Vec<Request> {
+        assert!((site as usize) < self.num_sites, "site {site} outside the topology");
+        let mut rng = Rng::new(SERVICE_SEED).fork(site as u64);
+        let budgets = self.phase_budgets(self.site_budget(site));
+        let bounds = self.phase_bounds();
+        let mut out = Vec::with_capacity(budgets.iter().sum::<u64>() as usize);
+        let mut id = 0u64;
+        for ((phase, &m), &(t0, t1)) in self.spec.phases.iter().zip(&budgets).zip(&bounds) {
+            for k in 0..m {
+                // Fixed draw order per request: arrival jitter, pair
+                // slot, route, service time.
+                let u = rng.f64();
+                let x = (k as f64 + u) / m as f64;
+                let x = match phase.shape {
+                    PhaseShape::Constant => x,
+                    PhaseShape::Diurnal => diurnal_inverse(x),
+                };
+                let t = t0 + x * (t1 - t0);
+                let pair_u = rng.f64();
+                let route_u = rng.f64();
+                let service = rng.exp(self.spec.service_time_secs);
+                let replica =
+                    self.spec.policy.route(site, route_u, &self.spec.replica_sites, &self.site_rtt);
+                out.push(Request { t, id, user_site: site, replica, pair_u, service });
+                id += 1;
+            }
+        }
+        out
+    }
+}
+
+/// The intra-site request plant derived from a placement: same-rack
+/// (user, replica) pairs serving local requests on their own NICs, plus
+/// a per-site gateway pool carrying cross-site request/response flows
+/// over the rack uplinks and the wave. Pair and gateway node sets are
+/// disjoint by construction — the property the sharded driver's
+/// link-claim partition rests on (mirrors the mega-churn split).
+#[derive(Debug, Clone)]
+pub struct ServicePlant {
+    pub pairs_by_site: Vec<Vec<(NodeId, NodeId)>>,
+    pub gateways_by_site: Vec<Vec<NodeId>>,
+}
+
+/// Group a placement into per-site pairs and gateway pools: within each
+/// rack's placed group, racks with ≥ 4 nodes reserve their last two for
+/// the site's gateway pool, the rest pair off, and odd remainders join
+/// the pool.
+pub fn service_plant(topo: &Topology, nodes: &[NodeId]) -> ServicePlant {
+    let num_sites = topo.sites.len();
+    let mut by_rack: BTreeMap<usize, Vec<NodeId>> = BTreeMap::new();
+    for &n in nodes {
+        by_rack.entry(topo.node(n).rack.0).or_default().push(n);
+    }
+    let mut pairs_by_site = vec![Vec::new(); num_sites];
+    let mut gateways_by_site = vec![Vec::new(); num_sites];
+    for group in by_rack.values() {
+        let site = topo.node(group[0]).site.0;
+        let (paired, pooled) =
+            if group.len() >= 4 { group.split_at(group.len() - 2) } else { (&group[..], &[][..]) };
+        let mut chunks = paired.chunks_exact(2);
+        for c in &mut chunks {
+            pairs_by_site[site].push((c[0], c[1]));
+        }
+        gateways_by_site[site].extend(chunks.remainder());
+        gateways_by_site[site].extend(pooled);
+    }
+    ServicePlant { pairs_by_site, gateways_by_site }
+}
+
+/// Per-site request accounting, shared verbatim by the sequential and
+/// sharded drivers: counters, the arrival histogram, and the trailing
+/// latency window feeding the quantile rollups.
+#[derive(Debug, Clone)]
+pub struct SiteAccum {
+    pub site: u32,
+    duration: f64,
+    /// Requests issued by this site's users (retries not re-counted).
+    pub requests: u64,
+    /// Completions recorded (originals + retries).
+    pub completed: u64,
+    /// First completions that exceeded the client timeout.
+    pub timeouts: u64,
+    /// Retries issued — equal to `timeouts` by construction (one retry
+    /// per timed-out request, retried completions never re-arm).
+    pub retries: u64,
+    /// Completions (originals and retries) above the SLO.
+    pub slo_violations: u64,
+    /// Trailing latency window, seconds.
+    pub latencies: Series,
+    /// Arrival histogram over the run's duration.
+    pub bins: Vec<u64>,
+}
+
+impl SiteAccum {
+    pub fn new(site: u32, duration: f64) -> SiteAccum {
+        assert!(duration > 0.0);
+        SiteAccum {
+            site,
+            duration,
+            requests: 0,
+            completed: 0,
+            timeouts: 0,
+            retries: 0,
+            slo_violations: 0,
+            latencies: Series::new(SERVICE_SERIES_CAP),
+            bins: vec![0; ARRIVAL_BINS],
+        }
+    }
+
+    /// Record a planned arrival at `t` (originals only, not retries).
+    pub fn arrival(&mut self, t: f64) {
+        self.requests += 1;
+        let bin = ((t / self.duration) * ARRIVAL_BINS as f64) as usize;
+        self.bins[bin.min(ARRIVAL_BINS - 1)] += 1;
+    }
+
+    /// Record a completion observed at `now` with end-to-end `latency`.
+    /// Returns `true` when the completion timed out and the caller owes
+    /// exactly one retry (never for already-retried requests).
+    pub fn complete(&mut self, now: f64, latency: f64, spec: &ServiceSpec, retried: bool) -> bool {
+        self.completed += 1;
+        self.latencies.push(now, latency);
+        if latency > spec.slo_secs {
+            self.slo_violations += 1;
+        }
+        if !retried && latency > spec.timeout_secs {
+            self.timeouts += 1;
+            self.retries += 1;
+            return true;
+        }
+        false
+    }
+}
+
+/// One site's rollup inside a [`ServiceReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteService {
+    pub site: u32,
+    pub requests: u64,
+    pub slo_violations: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+}
+
+/// The service-traffic section of a run report: global and per-site
+/// request counts, latency quantiles, and SLO accounting. Inside report
+/// equality and serialization — byte-identical across thread counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceReport {
+    pub requests: u64,
+    pub completed: u64,
+    pub timeouts: u64,
+    pub retries: u64,
+    pub slo_violations: u64,
+    /// Completions per simulated second over the whole run.
+    pub goodput_rps: f64,
+    /// Peak arrival-bin rate over the mean rate (≈1 for steady load,
+    /// ≫1 for a flash crowd) — offered-load peakedness.
+    pub offered_peak_x: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub sites: Vec<SiteService>,
+}
+
+impl ServiceReport {
+    /// Roll per-site accumulators (in site order) into the report.
+    /// Global quantiles run over the concatenation of the per-site
+    /// windows in site order, so any driver that fills the same accums
+    /// produces the same bytes.
+    pub fn assemble(accums: &[SiteAccum], finished_at: f64) -> ServiceReport {
+        let mut requests = 0;
+        let mut completed = 0;
+        let mut timeouts = 0;
+        let mut retries = 0;
+        let mut slo_violations = 0;
+        let mut all: Vec<f64> = Vec::new();
+        let mut bins = vec![0u64; ARRIVAL_BINS];
+        let sites: Vec<SiteService> = accums
+            .iter()
+            .map(|a| {
+                requests += a.requests;
+                completed += a.completed;
+                timeouts += a.timeouts;
+                retries += a.retries;
+                slo_violations += a.slo_violations;
+                all.extend(a.latencies.values());
+                for (b, &x) in bins.iter_mut().zip(&a.bins) {
+                    *b += x;
+                }
+                SiteService {
+                    site: a.site,
+                    requests: a.requests,
+                    slo_violations: a.slo_violations,
+                    p50_ms: a.latencies.p50() * 1e3,
+                    p99_ms: a.latencies.p99() * 1e3,
+                    p999_ms: a.latencies.p999() * 1e3,
+                }
+            })
+            .collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let peak = bins.iter().copied().max().unwrap_or(0);
+        ServiceReport {
+            requests,
+            completed,
+            timeouts,
+            retries,
+            slo_violations,
+            goodput_rps: if finished_at > 0.0 { completed as f64 / finished_at } else { 0.0 },
+            offered_peak_x: if requests > 0 {
+                peak as f64 * ARRIVAL_BINS as f64 / requests as f64
+            } else {
+                0.0
+            },
+            p50_ms: percentile_sorted(&all, 50.0) * 1e3,
+            p99_ms: percentile_sorted(&all, 99.0) * 1e3,
+            p999_ms: percentile_sorted(&all, 99.9) * 1e3,
+            sites,
+        }
+    }
+
+    /// The flat metric view merged into `RunReport::metrics` (keys are
+    /// sorted there with everything else).
+    pub fn metrics(&self) -> Vec<(String, f64)> {
+        vec![
+            ("requests".to_string(), self.requests as f64),
+            ("completed".to_string(), self.completed as f64),
+            ("timeouts".to_string(), self.timeouts as f64),
+            ("retries".to_string(), self.retries as f64),
+            ("slo_violations".to_string(), self.slo_violations as f64),
+            ("goodput_rps".to_string(), self.goodput_rps),
+            ("offered_peak_x".to_string(), self.offered_peak_x),
+            ("latency_p50_ms".to_string(), self.p50_ms),
+            ("latency_p99_ms".to_string(), self.p99_ms),
+            ("latency_p999_ms".to_string(), self.p999_ms),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let sites: Vec<Json> = self
+            .sites
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("site", Json::Num(s.site as f64)),
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("slo_violations", Json::Num(s.slo_violations as f64)),
+                    ("p50_ms", Json::Num(s.p50_ms)),
+                    ("p99_ms", Json::Num(s.p99_ms)),
+                    ("p999_ms", Json::Num(s.p999_ms)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("timeouts", Json::Num(self.timeouts as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("slo_violations", Json::Num(self.slo_violations as f64)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("offered_peak_x", Json::Num(self.offered_peak_x)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("p999_ms", Json::Num(self.p999_ms)),
+            ("sites", Json::Arr(sites)),
+        ])
+    }
+
+    /// Parse back from JSON (round-trips [`ServiceReport::to_json`]).
+    pub fn from_json(j: &Json) -> Result<ServiceReport, String> {
+        fn num(j: &Json, k: &str) -> Result<f64, String> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing number '{k}'"))
+        }
+        let sites = match j.get("sites") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .map(|x| {
+                    Ok(SiteService {
+                        site: num(x, "site")? as u32,
+                        requests: num(x, "requests")? as u64,
+                        slo_violations: num(x, "slo_violations")? as u64,
+                        p50_ms: num(x, "p50_ms")?,
+                        p99_ms: num(x, "p99_ms")?,
+                        p999_ms: num(x, "p999_ms")?,
+                    })
+                })
+                .collect::<Result<Vec<SiteService>, String>>()?,
+            _ => return Err("missing array 'sites'".to_string()),
+        };
+        Ok(ServiceReport {
+            requests: num(j, "requests")? as u64,
+            completed: num(j, "completed")? as u64,
+            timeouts: num(j, "timeouts")? as u64,
+            retries: num(j, "retries")? as u64,
+            slo_violations: num(j, "slo_violations")? as u64,
+            goodput_rps: num(j, "goodput_rps")?,
+            offered_peak_x: num(j, "offered_peak_x")?,
+            p50_ms: num(j, "p50_ms")?,
+            p99_ms: num(j, "p99_ms")?,
+            p999_ms: num(j, "p999_ms")?,
+            sites,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    fn rtt4() -> Vec<Vec<f64>> {
+        // Rough OCT shape: sites 1–2 close, 0–3 far apart.
+        vec![
+            vec![30e-6, 0.020, 0.021, 0.070],
+            vec![0.020, 30e-6, 0.002, 0.055],
+            vec![0.021, 0.002, 30e-6, 0.050],
+            vec![0.070, 0.055, 0.050, 30e-6],
+        ]
+    }
+
+    fn spec(policy: RoutePolicy) -> ServiceSpec {
+        ServiceSpec::new(vec![0, 1, 2, 3], policy)
+    }
+
+    #[test]
+    fn loadgen_is_reproducible() {
+        let lg = LoadGen::new(spec(RoutePolicy::Nearest), 10_000, rtt4());
+        for site in 0..4 {
+            assert_eq!(lg.gen_site(site), lg.gen_site(site), "site {site} diverged");
+        }
+        // Distinct sites draw distinct streams.
+        assert_ne!(lg.gen_site(0)[0].service, lg.gen_site(1)[0].service);
+    }
+
+    #[test]
+    fn site_budgets_sum_to_total() {
+        let lg = LoadGen::new(spec(RoutePolicy::Random), 10_003, rtt4());
+        let sum: u64 = (0..4).map(|s| lg.site_budget(s)).sum();
+        assert_eq!(sum, 10_003);
+        assert_eq!(lg.site_budget(0), 2501);
+        assert_eq!(lg.site_budget(3), 2500);
+        assert_eq!(lg.gen_site(0).len(), 2501);
+    }
+
+    #[test]
+    fn phase_boundaries_are_exact() {
+        let mut sp = spec(RoutePolicy::Nearest);
+        sp.phases = flash_crowd_phases();
+        let lg = LoadGen::new(sp, 8_000, rtt4());
+        let bounds = lg.phase_bounds();
+        assert_eq!(bounds.len(), 3);
+        assert!((bounds[2].1 - lg.duration()).abs() < 1e-9);
+        let budgets = lg.phase_budgets(lg.site_budget(1));
+        assert_eq!(budgets.iter().sum::<u64>(), lg.site_budget(1));
+        // The burst phase carries 0.8/1.7 of the weight in 0.1 of the time.
+        assert!(budgets[1] > budgets[0], "burst {} vs steady {}", budgets[1], budgets[0]);
+        let reqs = lg.gen_site(1);
+        let mut cursor = 0usize;
+        for (&m, &(t0, t1)) in budgets.iter().zip(&bounds) {
+            let phase = &reqs[cursor..cursor + m as usize];
+            assert!(phase.iter().all(|r| r.t >= t0 && r.t < t1), "phase [{t0},{t1}) leaked");
+            cursor += m as usize;
+        }
+        assert_eq!(cursor, reqs.len());
+        // Stratified arrivals are nondecreasing across the whole run.
+        assert!(reqs.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn diurnal_inverse_matches_its_cdf() {
+        for i in 0..=100 {
+            let x = i as f64 / 100.0;
+            let y = diurnal_inverse(x);
+            assert!((0.0..=1.0).contains(&y));
+            assert!((diurnal_cdf(y) - x).abs() < 1e-12, "x={x} y={y}");
+        }
+        // The curve troughs at x=0: inverting a small mass reaches far
+        // into the night (few arrivals near t=0).
+        assert!(diurnal_inverse(0.01) > 0.05);
+    }
+
+    #[test]
+    fn diurnal_phase_respects_bounds_and_order() {
+        let mut sp = spec(RoutePolicy::Random);
+        sp.phases = diurnal_phases();
+        let lg = LoadGen::new(sp, 4_000, rtt4());
+        let reqs = lg.gen_site(2);
+        let d = lg.duration();
+        assert!(reqs.iter().all(|r| r.t >= 0.0 && r.t < d));
+        assert!(reqs.windows(2).all(|w| w[0].t <= w[1].t));
+        // Day curve: the middle half of the day carries most arrivals.
+        let mid = reqs.iter().filter(|r| r.t > 0.25 * d && r.t < 0.75 * d).count();
+        assert!(mid * 2 > reqs.len(), "mid-day {} of {}", mid, reqs.len());
+    }
+
+    #[test]
+    fn route_policies_pick_sanely() {
+        let rtt = rtt4();
+        // Nearest: own site when replicated there …
+        assert_eq!(RoutePolicy::Nearest.route(2, 0.9, &[0, 1, 2, 3], &rtt), 2);
+        // … else the lowest-RTT replica (site 1 → site 2 at 2 ms).
+        assert_eq!(RoutePolicy::Nearest.route(1, 0.0, &[0, 2, 3], &rtt), 2);
+        // Tie-break: equal RTTs go to the lowest replica index.
+        let flat = vec![vec![1.0; 4]; 4];
+        assert_eq!(RoutePolicy::Nearest.route(0, 0.5, &[1, 3], &flat), 1);
+        // Weighted: the draw walks the cumulative weights in order.
+        let w = RoutePolicy::Weighted(vec![1.0, 3.0]);
+        assert_eq!(w.route(0, 0.1, &[1, 2], &rtt), 1);
+        assert_eq!(w.route(0, 0.9, &[1, 2], &rtt), 2);
+        // Random: uniform slots over the replica list.
+        assert_eq!(RoutePolicy::Random.route(0, 0.0, &[1, 3], &rtt), 1);
+        assert_eq!(RoutePolicy::Random.route(0, 0.99, &[1, 3], &rtt), 3);
+    }
+
+    #[test]
+    fn accum_counts_slo_timeouts_and_retries_once() {
+        let mut sp = spec(RoutePolicy::Nearest);
+        sp.slo_secs = 0.1;
+        sp.timeout_secs = 0.5;
+        let mut a = SiteAccum::new(0, 10.0);
+        a.arrival(0.0);
+        a.arrival(9.9999);
+        // Fast completion: inside SLO, no retry.
+        assert!(!a.complete(0.05, 0.05, &sp, false));
+        // Slow but under timeout: SLO violation only.
+        assert!(!a.complete(0.3, 0.3, &sp, false));
+        // Past the timeout: violation + timeout + one retry owed.
+        assert!(a.complete(1.0, 0.9, &sp, false));
+        // The retry's own completion never re-arms, however slow.
+        assert!(!a.complete(2.0, 0.9, &sp, true));
+        assert_eq!(a.requests, 2);
+        assert_eq!(a.completed, 4);
+        assert_eq!(a.slo_violations, 3);
+        assert_eq!(a.timeouts, 1);
+        assert_eq!(a.retries, 1);
+        assert_eq!(a.bins[0], 1);
+        assert_eq!(a.bins[ARRIVAL_BINS - 1], 1);
+    }
+
+    #[test]
+    fn report_assembles_and_roundtrips() {
+        let sp = spec(RoutePolicy::Nearest);
+        let mut a0 = SiteAccum::new(0, 10.0);
+        let mut a1 = SiteAccum::new(1, 10.0);
+        for i in 0..100 {
+            let t = i as f64 * 0.1;
+            a0.arrival(t);
+            a0.complete(t, 0.01 + i as f64 * 1e-4, &sp, false);
+            a1.arrival(t);
+            a1.complete(t, 0.02 + i as f64 * 1e-4, &sp, false);
+        }
+        let rep = ServiceReport::assemble(&[a0, a1], 10.0);
+        assert_eq!(rep.requests, 200);
+        assert_eq!(rep.completed, 200);
+        assert_eq!(rep.goodput_rps, 20.0);
+        assert!(rep.p50_ms <= rep.p99_ms && rep.p99_ms <= rep.p999_ms);
+        assert!(rep.sites[0].p50_ms < rep.sites[1].p50_ms);
+        // Steady arrivals: the peak bin sits near the mean rate.
+        assert!(rep.offered_peak_x < 1.5, "peak_x {}", rep.offered_peak_x);
+        let text = rep.to_json().to_string();
+        let back = ServiceReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_arrivals() {
+        let mut sp = spec(RoutePolicy::Nearest);
+        sp.phases = flash_crowd_phases();
+        let lg = LoadGen::new(sp.clone(), 8_000, rtt4());
+        let mut a = SiteAccum::new(0, lg.duration());
+        for r in lg.gen_site(0) {
+            a.arrival(r.t);
+        }
+        let rep = ServiceReport::assemble(&[a], lg.duration());
+        // The burst packs ~47% of requests into 10% of the bins.
+        assert!(rep.offered_peak_x > 3.0, "peak_x {}", rep.offered_peak_x);
+    }
+
+    #[test]
+    fn loadgen_reproducibility_property() {
+        // Random spec shapes: the plan must replay bit-identically and
+        // respect its phase boundaries (the boundary-exactness property
+        // the sharded driver leans on).
+        check("loadgen replays and respects phase bounds", 25, |rng| {
+            let total = 200 + rng.gen_range(2_000);
+            let nphase = 1 + rng.gen_range(4) as usize;
+            let mut fracs: Vec<f64> = (0..nphase).map(|_| 0.1 + rng.f64()).collect();
+            let fsum: f64 = fracs.iter().sum();
+            for f in &mut fracs {
+                *f /= fsum;
+            }
+            // Re-normalize exactly: largest phase absorbs the residual.
+            let resid = 1.0 - fracs.iter().sum::<f64>();
+            fracs[0] += resid;
+            let phases: Vec<Phase> = fracs
+                .iter()
+                .map(|&f| {
+                    if rng.chance(0.5) {
+                        Phase::constant(f, 0.5 + rng.f64() * 4.0)
+                    } else {
+                        Phase::diurnal(f, 0.5 + rng.f64() * 4.0)
+                    }
+                })
+                .collect();
+            let mut sp = ServiceSpec::new(vec![0, 2], RoutePolicy::Random);
+            sp.phases = phases;
+            sp.rate_rps = 100.0 + rng.f64() * 5000.0;
+            let lg = LoadGen::new(sp, total, rtt4());
+            let site = rng.gen_range(4) as u32;
+            let a = lg.gen_site(site);
+            let b = lg.gen_site(site);
+            if a != b {
+                return Err(format!("site {site} replayed differently"));
+            }
+            let budgets = lg.phase_budgets(lg.site_budget(site));
+            if budgets.iter().sum::<u64>() != lg.site_budget(site) {
+                return Err("phase budgets lost requests".to_string());
+            }
+            let bounds = lg.phase_bounds();
+            let mut cursor = 0usize;
+            for (&m, &(t0, t1)) in budgets.iter().zip(&bounds) {
+                for r in &a[cursor..cursor + m as usize] {
+                    if r.t < t0 || r.t >= t1 {
+                        return Err(format!("t={} outside [{t0},{t1})", r.t));
+                    }
+                    if r.replica != 0 && r.replica != 2 {
+                        return Err(format!("replica {} not in the set", r.replica));
+                    }
+                }
+                cursor += m as usize;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn largest_remainder_is_exact_and_stable() {
+        assert_eq!(largest_remainder(10, &[1.0, 1.0, 1.0]), vec![4, 3, 3]);
+        assert_eq!(largest_remainder(7, &[0.45, 0.8, 0.45]), vec![2, 3, 2]);
+        assert_eq!(largest_remainder(0, &[1.0, 2.0]), vec![0, 0]);
+    }
+
+    #[test]
+    fn plant_partitions_pairs_and_gateways_disjointly() {
+        let topo = Topology::oct_2009();
+        let nodes = crate::coordinator::Placement::PerSite(8).select(&topo);
+        let plant = service_plant(&topo, &nodes);
+        assert_eq!(plant.pairs_by_site.len(), 4);
+        let mut seen = std::collections::BTreeSet::new();
+        for site in 0..4 {
+            assert!(!plant.pairs_by_site[site].is_empty(), "site {site} has no pairs");
+            assert!(!plant.gateways_by_site[site].is_empty(), "site {site} has no gateways");
+            for &(a, b) in &plant.pairs_by_site[site] {
+                assert_eq!(topo.node(a).rack, topo.node(b).rack, "pairs stay intra-rack");
+                assert!(seen.insert(a) && seen.insert(b), "node reused");
+            }
+            for &g in &plant.gateways_by_site[site] {
+                assert_eq!(topo.node(g).site.0, site);
+                assert!(seen.insert(g), "gateway reused");
+            }
+        }
+        assert_eq!(seen.len(), nodes.len());
+    }
+}

@@ -47,6 +47,7 @@
 //! | `dataflow`, `phase.map`, `phase.reduce` | span | control / 0 | `framework/runtime.rs` |
 //! | `task` | span | node's site / node | task assignment → completion |
 //! | `steal` | instant | node's site / thief node | cross-node slot steals |
+//! | `service.request` | span | user's site / replica site | service driver: arrival → response delivered (args: replica, retry) |
 //! | `provision.image` | span | control / 0 | imaging admission → all nodes imaged (args: image, bytes) |
 //! | `provision.lightpath` | span | WAN / 0 | lightpath request → grant applied (args: gbps) |
 //! | `tenant.admit` | instant | control / 0 | slice admission in `run_tenants` (args: tenant) |

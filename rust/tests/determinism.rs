@@ -115,6 +115,14 @@ fn tenancy_replays_identically() {
     assert_replays("tenancy", 100);
 }
 
+#[test]
+fn service_replays_identically() {
+    // 4k requests per scenario across all seven service scenarios —
+    // small enough for the debug-build FlowNet audit, large enough that
+    // every arrival phase, the WAN path, and the retry path execute.
+    assert_replays("service", 500);
+}
+
 // ---- cross-thread-count determinism -----------------------------------
 //
 // The parallel engine's contract is stronger than replayability: the
@@ -160,6 +168,79 @@ fn mega_churn_trace_stream_is_thread_count_invariant() {
             trace == base_trace,
             "mega-churn: trace stream diverges at {threads} threads \
              (lens {} vs {})",
+            base_trace.len(),
+            trace.len()
+        );
+    }
+}
+
+#[test]
+fn loadgen_arrivals_replay_exactly_with_exact_phase_boundaries() {
+    // The service load generator is pure: the worker count (OCT_THREADS,
+    // which CI varies across this whole harness) must never leak into
+    // arrival plans. Same seed → identical timestamps, every timestamp
+    // inside its phase's half-open window, and per-phase request counts
+    // exactly equal to the spec's largest-remainder budgets.
+    use oct::net::Topology;
+    use oct::service::{flash_crowd_phases, LoadGen, RoutePolicy, ServiceSpec};
+    let rtt = LoadGen::site_rtt_matrix(&Topology::oct_2009());
+    let mut spec = ServiceSpec::new(vec![0, 1, 2, 3], RoutePolicy::Nearest);
+    spec.phases = flash_crowd_phases();
+    let make = || LoadGen::new(spec.clone(), 8_000, rtt.clone());
+    let (a, b) = (make(), make());
+    let bounds = a.phase_bounds();
+    for site in 0..4u32 {
+        let plan = a.gen_site(site);
+        assert_eq!(plan, b.gen_site(site), "site {site} plans diverge between generators");
+        assert_eq!(plan.len() as u64, a.site_budget(site));
+        assert!(plan.windows(2).all(|w| w[0].t <= w[1].t), "site {site} arrivals out of order");
+        let budgets = a.phase_budgets(a.site_budget(site));
+        for (phase, (&(t0, t1), &budget)) in bounds.iter().zip(&budgets).enumerate() {
+            let n = plan.iter().filter(|r| r.t >= t0 && r.t < t1).count() as u64;
+            assert_eq!(n, budget, "site {site} phase {phase} count off its exact budget");
+        }
+    }
+}
+
+#[test]
+fn service_is_thread_count_invariant() {
+    // Requests are homed at their user's site shard; cross-site requests
+    // ride the WAN shard. The per-request latency samples, quantiles,
+    // and SLO counters must still land on identical bytes at any worker
+    // count.
+    let base = run_serialized_threads("service", 500, 1);
+    for threads in [2, 4] {
+        let t = run_serialized_threads("service", 500, threads);
+        assert_same("service", &format!("1 vs {threads} threads"), &base, &t);
+    }
+}
+
+#[test]
+fn service_trace_stream_is_thread_count_invariant() {
+    // Same probe as the mega-churn trace test: the merged span stream
+    // exposes every `service.request` span (start site, replica, retry
+    // flag) in merged order, so the exported Chrome-trace bytes must be
+    // identical at any worker count — and tracing must not perturb the
+    // reports.
+    let traced = |threads: usize| -> (String, String) {
+        let set = find_set("service").expect("service registered").scaled_down(500);
+        let runner = ScenarioRunner::new().with_threads(threads).with_trace(TraceSpec::new());
+        let (reports, stream) = runner.run_set_with_trace(&set);
+        assert!(!stream.is_empty(), "traced service set recorded nothing");
+        let reports =
+            reports.iter().map(|r| r.to_json().to_string()).collect::<Vec<_>>().join("\n");
+        (reports, stream.to_chrome_json())
+    };
+    let (base_reports, base_trace) = traced(1);
+    let untraced = run_serialized_threads("service", 500, 1);
+    assert_same("service", "traced vs untraced reports", &base_reports, &untraced);
+    for threads in [2, 4] {
+        let (reports, trace) = traced(threads);
+        let what = format!("traced reports 1 vs {threads} threads");
+        assert_same("service", &what, &base_reports, &reports);
+        assert!(
+            trace == base_trace,
+            "service: trace stream diverges at {threads} threads (lens {} vs {})",
             base_trace.len(),
             trace.len()
         );

@@ -205,6 +205,54 @@ fn ops_plane_survives_crash_and_flap_end_to_end() {
 }
 
 #[test]
+fn service_scenario_reports_latency_quantiles_end_to_end() {
+    use oct::service::{RoutePolicy, ServiceSpec};
+    // A two-replica service under random routing: users on the
+    // replica-less sites must cross the WAN, and the report must carry
+    // per-site and global latency quantiles that survive a round-trip.
+    let sc = Testbed::builder()
+        .topology(TopologySpec::Oct2009)
+        .placement(oct::coordinator::Placement::PerSite(8))
+        .framework(Framework::Service)
+        .workload(WorkloadSpec::malstone_a(4_000))
+        .service(ServiceSpec::new(vec![0, 1], RoutePolicy::Random))
+        .name("itest/service")
+        .build();
+    let rep = ScenarioRunner::new().run(&sc);
+    let s = rep.service.as_ref().expect("service report");
+    assert_eq!(s.requests, 4_000);
+    assert_eq!(s.completed, s.requests + s.retries);
+    assert_eq!(s.sites.len(), 4);
+    assert_eq!(s.sites.iter().map(|site| site.requests).sum::<u64>(), s.requests);
+    assert!(s.p50_ms > 0.0 && s.p50_ms <= s.p99_ms && s.p99_ms <= s.p999_ms);
+    assert!(rep.wan_bytes > 0.0, "remote requests never touched the wave");
+    let back = RunReport::from_json(&Json::parse(&rep.to_json().to_string()).unwrap()).unwrap();
+    assert_eq!(back, rep);
+}
+
+#[test]
+fn cli_rejects_scale_zero_with_a_clear_error() {
+    use std::process::Command;
+    // `oct scenarios <set> 0` would divide every workload to nothing;
+    // the CLI must refuse with exit 2 and an error naming the scale
+    // argument instead of running degenerate scenarios.
+    for args in [
+        &["scenarios", "flow-churn", "0"][..],
+        &["table1", "0"][..],
+        &["trace", "mega-churn", "0"][..],
+        &["alerts", "ops", "0"][..],
+    ] {
+        let out = Command::new(env!("CARGO_BIN_EXE_oct"))
+            .args(args)
+            .output()
+            .expect("oct binary runs");
+        assert_eq!(out.status.code(), Some(2), "oct {args:?} should exit 2");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("scale"), "oct {args:?} stderr lacks 'scale': {err}");
+    }
+}
+
+#[test]
 fn gmp_rpc_full_stack_loopback() {
     use oct::gmp::rpc::Handler;
     use oct::gmp::{GmpConfig, GmpEndpoint, RpcClient, RpcServer};
